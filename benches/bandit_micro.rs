@@ -1,0 +1,72 @@
+//! L3 micro-benchmarks (controller hot path): bandit select/update, arm
+//! policies, signal parsing, and full simulated decode sessions. These are
+//! the coordinator-side costs that must stay ≪ one PJRT dispatch (~100 µs)
+//! — see EXPERIMENTS.md §Perf.
+//!
+//! Runs under `cargo bench --offline` ([[bench]] harness = false).
+
+use tapout::bandit::{make_bandit, Reward, SeqBandit};
+use tapout::harness::{run_method, sim_suite, Backend};
+use tapout::policies::pool::default_arms;
+use tapout::policies::StopPolicy;
+use tapout::signals::TokenSignals;
+use tapout::spec::MethodSpec;
+use tapout::util::bench::{bench, group};
+use tapout::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let sig = TokenSignals::from_logits(&[2.0, 1.0, 0.5, 0.0, -0.5, -1.0, -2.0, 0.3]);
+
+    group("bandit select+update (5 arms)");
+    for kind in ["ucb1", "ucb-tuned", "ts-gaussian", "ts-beta"] {
+        let mut b = make_bandit(kind, 5);
+        let mut r = Rng::new(2);
+        bench(&format!("{kind}"), 120, || {
+            let a = b.select(&mut r);
+            b.update(a, 0.7);
+        });
+    }
+
+    group("stop policies (per-token decision)");
+    for (name, mut p) in [
+        ("max-conf", Box::new(tapout::policies::MaxConfidence::new(0.8)) as Box<dyn StopPolicy>),
+        ("svip", Box::new(tapout::policies::Svip::new(0.6))),
+        ("ada-edl", Box::new(tapout::policies::AdaEdl::default())),
+        ("logit-margin", Box::new(tapout::policies::LogitMargin::new(0.2))),
+    ] {
+        bench(name, 80, || {
+            std::hint::black_box(p.should_stop(&sig, 3));
+        });
+    }
+
+    group("seq controller full round (select + 6 decisions + reward)");
+    let mut ctrl = SeqBandit::new("ucb1", default_arms(), Reward::Blend(0.5), 128);
+    bench("seq-ucb1 round", 120, || {
+        ctrl.session_start(&mut rng);
+        for i in 0..6 {
+            let _ = ctrl.should_stop(&sig, i);
+        }
+        ctrl.on_verify(4, 6);
+    });
+
+    group("signal parsing");
+    let flat: Vec<f32> = (0..8 * 16).map(|i| i as f32 * 0.1).collect();
+    bench("parse 16 rows", 60, || {
+        std::hint::black_box(TokenSignals::parse_rows(&flat, 16));
+    });
+    bench("from_logits V=96", 60, || {
+        let row: Vec<f32> = (0..96).map(|i| ((i * 37) % 13) as f32).collect();
+        std::hint::black_box(TokenSignals::from_logits(&row));
+    });
+
+    group("simulated end-to-end sessions (controller + session loop only)");
+    let items = sim_suite("specbench", 2, 64);
+    for m in ["static-6", "seq-ucb1", "token-ts"] {
+        let spec = MethodSpec::parse(m, "artifacts").unwrap();
+        let backend = Backend::Sim { quality: 0.9, rel_cost: 1.0 / 16.0 };
+        bench(&format!("26 prompts x 64 tok [{m}]"), 400, || {
+            std::hint::black_box(run_method(&backend, &items, &spec, 128, false).unwrap());
+        });
+    }
+}

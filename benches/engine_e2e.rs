@@ -1,0 +1,90 @@
+//! End-to-end benches — one per paper table/figure (DESIGN.md §5) plus the
+//! PJRT step-latency ladder that calibrates the analytic cost model.
+//!
+//! Simulator benches always run; PJRT benches run when `artifacts/` exists
+//! (skipped otherwise so `cargo bench` works pre-`make artifacts`).
+//! `TAPOUT_BENCH_FAST=1` shrinks everything for CI smoke.
+
+use std::path::Path;
+
+use tapout::harness::{run_method, run_probe, sim_suite, Backend};
+use tapout::models::{LanguageModel, Manifest, ModelAssets, PjrtModel};
+use tapout::runtime::Runtime;
+use tapout::spec::MethodSpec;
+use tapout::util::bench::{bench, fmt_ns, group};
+
+fn main() {
+    sim_tables();
+    pjrt_ladder();
+}
+
+/// One bench per paper artifact, on the simulator backend (the controller
+/// + session-loop cost of regenerating each table/figure).
+fn sim_tables() {
+    let backend = || Backend::Sim { quality: 0.9, rel_cost: 1.0 / 16.0 };
+    let items = sim_suite("specbench", 1, 48);
+    let m = |s: &str| MethodSpec::parse(s, "artifacts").unwrap();
+
+    group("per-paper-artifact regeneration (sim backend, scaled)");
+    bench("table2: ucb1 r_simple vs r_blend", 300, || {
+        for spec in [m("seq-ucb1:rsimple"), m("seq-ucb1")] {
+            std::hint::black_box(run_method(&backend(), &items, &spec, 128, false).unwrap());
+        }
+    });
+    bench("fig4: ucb1 vs ucb-tuned", 300, || {
+        for spec in [m("seq-ucb1"), m("seq-ucb-tuned")] {
+            std::hint::black_box(run_method(&backend(), &items, &spec, 128, false).unwrap());
+        }
+    });
+    bench("table3/5 row: one method, 13 cats", 300, || {
+        std::hint::black_box(run_method(&backend(), &items, &m("seq-ucb1"), 128, false).unwrap());
+    });
+    bench("fig2: static-16 probe w/ signals", 300, || {
+        std::hint::black_box(run_probe(&backend(), &items, &MethodSpec::Static(16), 16).unwrap());
+    });
+    bench("fig5/6: ucb1 with value tracking", 300, || {
+        std::hint::black_box(run_method(&backend(), &items, &m("seq-ucb1"), 128, true).unwrap());
+    });
+    bench("abl-arms: 13-arm pool", 300, || {
+        std::hint::black_box(run_method(&backend(), &items, &m("seq-ucb1:multi"), 128, false).unwrap());
+    });
+}
+
+/// PJRT dispatch + block-latency ladder: the real hot-path numbers that
+/// dominate serving latency (calibrates OVERHEAD_ROWS in the cost model).
+fn pjrt_ladder() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("\n[pjrt ladder skipped: run `make artifacts` first]");
+        return;
+    }
+    let manifest = Manifest::load(dir).unwrap();
+    let runtime = Runtime::cpu().unwrap();
+
+    group("PJRT block latency ladder (real models)");
+    for name in ["draft-base", "target-base"] {
+        let assets = ModelAssets::load(&runtime, &manifest, name).unwrap();
+        let mut model = PjrtModel::new(assets).unwrap();
+        let buckets: Vec<usize> = if name.starts_with("draft") {
+            vec![1, 4]
+        } else {
+            vec![1, 8, 32, 128]
+        };
+        for &k in &buckets {
+            // feed k tokens per call, resetting when the KV fills up
+            let toks: Vec<u32> = (0..k as u32).map(|i| 3 + (i % 29)).collect();
+            model.reset();
+            let r = bench(&format!("{name} block{k}"), 500, || {
+                if model.cur() + k >= model.max_seq() {
+                    model.reset();
+                }
+                let start = model.cur();
+                std::hint::black_box(model.block(&toks, start).unwrap());
+            });
+            println!(
+                "    -> {} per row ({k} rows/call)",
+                fmt_ns(r.mean_ns / k as f64)
+            );
+        }
+    }
+}

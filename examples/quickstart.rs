@@ -1,0 +1,64 @@
+//! Quickstart: load the pair-a artifacts, generate with vanilla Static-6
+//! speculative decoding and with TapOut (sequence-level UCB1), and compare.
+//!
+//!   cargo run --release --offline --example quickstart
+//!
+//! Requires `make artifacts` to have been run.
+
+use anyhow::Result;
+
+use tapout::models::{Manifest, ModelAssets, PjrtModel};
+use tapout::runtime::Runtime;
+use tapout::spec::{generate, GenConfig, MethodSpec, BOS};
+use tapout::util::Rng;
+
+fn main() -> Result<()> {
+    let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
+    let runtime = Runtime::cpu()?;
+    println!("PJRT platform: {}", runtime.platform());
+
+    // one model pair, two serving slots' worth of state
+    let (dspec, tspec) = manifest.pair("pair-a")?;
+    let (dn, tn) = (dspec.name.clone(), tspec.name.clone());
+    let mut draft = PjrtModel::new(ModelAssets::load(&runtime, &manifest, &dn)?)?;
+    let mut target = PjrtModel::new(ModelAssets::load(&runtime, &manifest, &tn)?)?;
+
+    let prompts = [
+        "def f1(a, b):\n    r = a + b",
+        "q: who works on physics in rome? a:",
+        "translate: red cat -> ",
+    ];
+
+    for method_name in ["static-6", "seq-ucb1"] {
+        let method = MethodSpec::parse(method_name, "artifacts").unwrap();
+        let mut ctrl = method.build(128)?;
+        let mut rng = Rng::new(1);
+        println!("\n=== {} ===", method.label());
+        let mut tokens = 0usize;
+        let mut ns = 0u64;
+        let (mut acc, mut dr) = (0usize, 0usize);
+        for p in prompts {
+            let mut prompt = vec![BOS];
+            prompt.extend(manifest.encode(p));
+            let cfg = GenConfig { max_new: 96, ..GenConfig::default() };
+            let r = generate(&mut draft, &mut target, &mut ctrl, &mut rng, &prompt, &cfg)?;
+            println!(
+                "  prompt {:?}\n  -> {:?}  (m {:.2}, accept {:.2})",
+                p,
+                manifest.decode(r.new_tokens()),
+                r.mean_accepted(),
+                r.acceptance_rate()
+            );
+            tokens += r.new_tokens().len();
+            ns += r.wall_ns;
+            acc += r.accepted();
+            dr += r.drafted();
+        }
+        println!(
+            "  total: {tokens} tokens, {:.1} tok/s, acceptance {:.2}",
+            tokens as f64 / (ns as f64 / 1e9),
+            acc as f64 / dr.max(1) as f64
+        );
+    }
+    Ok(())
+}

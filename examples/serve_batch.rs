@@ -1,0 +1,80 @@
+//! End-to-end serving driver (the DESIGN.md validation run): boots the full
+//! engine on the real pair-a artifacts, replays a Poisson arrival stream of
+//! TinyBench prompts through the scheduler + KV slot pool + TapOut
+//! controller, and reports latency/throughput percentiles.
+//!
+//!   cargo run --release --offline --example serve_batch -- \
+//!       [--requests N] [--rate R] [--method seq-ucb1] [--sched fcfs|sjf]
+//!
+//! The printed report is recorded in EXPERIMENTS.md §End-to-end.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use tapout::engine::{Engine, EngineConfig, Policy, Request};
+use tapout::harness::{load_suite, poisson_arrivals};
+use tapout::models::Manifest;
+use tapout::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse_from(std::env::args().skip(1));
+    let n = args.usize("requests", 24);
+    let rate = args.f64("rate", 1.2); // req/s
+    let method = args.str("method", "seq-ucb1");
+    let sched = args.str("sched", "fcfs");
+
+    let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
+    let items = load_suite(&manifest, "mtbench", n)?;
+
+    let cfg = EngineConfig {
+        pair: args.str("pair", "pair-a"),
+        method: method.clone(),
+        sched: Policy::parse(&sched),
+        slots: 2,
+        ..EngineConfig::default()
+    };
+    println!(
+        "booting engine: pair={} method={} sched={} ({} requests @ {:.1} req/s)",
+        cfg.pair, method, sched, items.len(), rate
+    );
+    let engine = Arc::new(Engine::start(cfg)?);
+
+    // warm-up request (compiles the hot buckets before timing starts)
+    let _ = engine.submit("warmup: 1 + 1 = ", 16).recv();
+
+    let arrivals = poisson_arrivals(7, items.len(), rate);
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    for (item, &at) in items.iter().zip(&arrivals) {
+        let wait = Duration::from_secs_f64(at).saturating_sub(t0.elapsed());
+        std::thread::sleep(wait);
+        let mut req = Request::new(0, item.text.clone(), item.max_new.min(96));
+        req.id = pending.len() as u64 + 1000;
+        req.category = item.category.clone();
+        req.prompt = item.prompt.clone();
+        pending.push((item.category.clone(), engine.submit_request(req)));
+    }
+
+    let mut got = 0;
+    for (cat, rx) in pending {
+        match rx.recv_timeout(Duration::from_secs(300)) {
+            Ok(resp) => {
+                got += 1;
+                println!(
+                    "  [{cat:<14}] {:>3} tok  queue {:>7.1} ms  decode {:>7.1} ms  m {:.2}",
+                    resp.result.new_tokens().len(),
+                    resp.queue_ns as f64 / 1e6,
+                    resp.result.wall_ns as f64 / 1e6,
+                    resp.result.mean_accepted(),
+                );
+            }
+            Err(e) => println!("  [{cat}] FAILED: {e}"),
+        }
+    }
+
+    println!("\n=== serving report ({got}/{} ok) ===", items.len());
+    println!("{}", engine.metrics.lock().unwrap().report());
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! SpecBench-analog sweep over a configurable method list — the
+//! "kick the tires" version of Table 5 with per-category breakdown.
+//!
+//!   cargo run --release --offline --example specbench_sweep -- \
+//!       [--pair pair-a] [--methods static-6,svip,seq-ucb1] [--per-cat 2]
+//!       [--backend pjrt|sim]
+
+use anyhow::Result;
+
+use tapout::harness::{load_suite, run_method, sim_suite, Backend};
+use tapout::models::Manifest;
+use tapout::runtime::Runtime;
+use tapout::spec::MethodSpec;
+use tapout::util::cli::Args;
+use tapout::util::table::{fmt, Table};
+
+fn main() -> Result<()> {
+    let args = Args::parse_from(std::env::args().skip(1));
+    let pair = args.str("pair", "pair-a");
+    let per_cat = args.usize("per-cat", 2);
+    let method_names = args.str("methods", "static-6,svip,max-conf,seq-ucb1,token-ucb1");
+    let use_sim = args.str("backend", "pjrt") == "sim";
+
+    let (backend, items) = if use_sim {
+        (Backend::Sim { quality: 0.9, rel_cost: 1.0 / 16.0 }, sim_suite("specbench", per_cat * 4, 96))
+    } else {
+        let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
+        let runtime = Runtime::cpu()?;
+        let items = load_suite(&manifest, "specbench", per_cat * 13)?;
+        (Backend::pjrt(&manifest, &runtime, &pair)?, items)
+    };
+
+    println!("sweep: pair={pair} over {} prompts", items.len());
+    let mut results = Vec::new();
+    for name in method_names.split(',') {
+        let m = MethodSpec::parse(name.trim(), "artifacts").map_err(|e| anyhow::anyhow!(e))?;
+        eprintln!("  running {} ...", m.label());
+        results.push(run_method(&backend, &items, &m, 128, false)?);
+    }
+
+    let base = &results[0];
+    let mut t = Table::new(&["Method", "m", "%", "s (wall)", "s (cost)"]);
+    for r in &results {
+        let tot = r.total();
+        t.row(vec![
+            r.method.clone(),
+            fmt(tot.mean_accepted(), 2),
+            fmt(tot.acceptance_rate(), 2),
+            fmt(r.speedup_vs(base), 2),
+            fmt(r.cost_speedup_vs(base), 2),
+        ]);
+    }
+    println!("\n{}", t.render());
+
+    // per-category winners
+    let mut cats: Vec<String> = base.per_category.keys().cloned().collect();
+    cats.sort();
+    let mut t2 = Table::new(&["Category", "best method", "s"]);
+    for c in &cats {
+        let (mut bi, mut bs) = (0, f64::MIN);
+        for (i, r) in results.iter().enumerate() {
+            let s = r.speedup_vs_cat(base, c);
+            if s > bs {
+                bs = s;
+                bi = i;
+            }
+        }
+        t2.row(vec![c.clone(), results[bi].method.clone(), fmt(bs, 2)]);
+    }
+    println!("{}", t2.render());
+    Ok(())
+}

@@ -1,0 +1,152 @@
+"""AOT pipeline: lower every (model × K-bucket) block to HLO *text* and
+write the artifact manifest the rust coordinator consumes.
+
+HLO text — NOT ``lowered.compiler_ir().serialize()`` — is the interchange
+format: the image's xla_extension 0.5.1 rejects jax>=0.5 protos with 64-bit
+instruction ids; the text parser reassigns ids (see /opt/xla-example/README).
+
+Outputs under artifacts/:
+  hlo/<model>_block<K>.hlo.txt   one executable per shape bucket
+  manifest.json                  dims, offsets, ladders, file map
+  prompts.json                   TinyBench prompt suites (corpus.py)
+  golden/pair-a.json             golden spec-decode traces (refspec.py)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+
+from jax._src.lib import xla_client as xc
+
+from . import corpus, model
+
+# Shape buckets. Drafts run K=1 steps + prefill; targets also verify.
+DRAFT_LADDER = [1, 4, 64, 128, 256, 384]
+TARGET_LADDER = [1, 4, 8, 16, 32, 64, 128, 256, 384]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def lower_block(cfg: model.ModelConfig, k: int) -> str:
+    fn = model.make_block(cfg, k)
+    # donate the world argument: the alias reaches the HLO text as
+    # input_output_alias={ {}: (1, {}, may-alias) }, letting XLA update the
+    # KV cache in place instead of copying the full world through every
+    # dynamic-update-slice (≈8x lower fixed cost per call — see
+    # EXPERIMENTS.md §Perf)
+    lowered = jax.jit(fn, donate_argnums=(1,)).lower(*model.example_args(cfg, k))
+    return to_hlo_text(lowered)
+
+
+def lower_extract(cfg: model.ModelConfig, k: int) -> str:
+    """Signal extractor: world -> first k signal rows, flat [k*SIG].
+
+    PJRT CPU (xla_extension 0.5.1) does not implement CopyRawToHost, so the
+    rust side cannot offset-read the out-region from the world buffer; it
+    instead dispatches this (trivial) slice executable and copies the small
+    result via to_literal_sync."""
+    import jax.numpy as jnp
+
+    def fn(world):
+        return jax.lax.dynamic_slice(world, (cfg.kv_elems,), (k * 8,))
+
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((cfg.world_elems,), jnp.float32)
+    )
+    return to_hlo_text(lowered)
+
+
+def ladder_for(name: str) -> list[int]:
+    return DRAFT_LADDER if name.startswith("draft") else TARGET_LADDER
+
+
+def build(out_dir: Path, models: list[str] | None = None, skip_golden: bool = False) -> None:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    hlo_dir = out_dir / "hlo"
+    hlo_dir.mkdir(exist_ok=True)
+
+    names = models or list(model.MODEL_ZOO)
+    manifest: dict = {
+        "vocab": corpus.VOCAB_SIZE,
+        "max_seq": model.MAX_SEQ,
+        "sig_width": 8,
+        "out_rows": model.OUT_ROWS,
+        "pad": corpus.PAD, "bos": corpus.BOS, "eos": corpus.EOS,
+        "alphabet": corpus.ALPHABET,
+        "models": {},
+        "pairs": {k: list(v) for k, v in model.PAIRS.items()},
+        "prompts": "prompts.json",
+        "specdecpp": "specdecpp.json",
+    }
+
+    for name in names:
+        cfg = model.MODEL_ZOO[name]
+        ladder = ladder_for(name)
+        files = {}
+        extract_files = {}
+        for k in ladder:
+            dst = hlo_dir / f"{name}_block{k}.hlo.txt"
+            if not dst.exists():
+                t0 = time.time()
+                dst.write_text(lower_block(cfg, k))
+                print(f"  lowered {dst.name} ({time.time() - t0:.1f}s, "
+                      f"{dst.stat().st_size // 1024} KiB)", flush=True)
+            files[str(k)] = f"hlo/{dst.name}"
+            ext = hlo_dir / f"{name}_extract{k}.hlo.txt"
+            if not ext.exists():
+                ext.write_text(lower_extract(cfg, k))
+            extract_files[str(k)] = f"hlo/{ext.name}"
+        manifest["models"][name] = {
+            "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads, "vocab": cfg.vocab, "max_seq": cfg.max_seq,
+            "param_count": model.param_count(cfg),
+            "kv_elems": cfg.kv_elems, "out_elems": cfg.out_elems,
+            "world_elems": cfg.world_elems,
+            "weights": f"weights/{name}.bin",
+            "ladder": ladder,
+            "hlo": files,
+            "extract": extract_files,
+        }
+
+    prompts = out_dir / "prompts.json"
+    if not prompts.exists():
+        prompts.write_text(corpus.suites_to_json(corpus.build_suites()))
+        print(f"  wrote {prompts}", flush=True)
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"  wrote manifest ({len(names)} models)", flush=True)
+
+    if not skip_golden:
+        from . import refspec
+        golden_dir = out_dir / "golden"
+        golden_dir.mkdir(exist_ok=True)
+        dst = golden_dir / "pair-a.json"
+        if not dst.exists():
+            dst.write_text(json.dumps(refspec.golden_traces("pair-a", out_dir), indent=1))
+            print(f"  wrote {dst}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=None, help="comma-separated subset")
+    ap.add_argument("--skip-golden", action="store_true")
+    args = ap.parse_args()
+    build(Path(args.out), args.models.split(",") if args.models else None,
+          args.skip_golden)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,297 @@
+"""TinyBench: a seeded synthetic workload generator standing in for
+SpecBench / MT-Bench / HumanEval / Alpaca (see DESIGN.md §3).
+
+13 category grammars mirror SpecBench's categories. Deterministic grammars
+(coding, math, extraction, translation, rag, summarization) induce
+low-entropy draft continuations; template natural language (writing,
+roleplay, humanities, ...) induces high-entropy ones — reproducing the
+entropy split the paper exploits (Fig. 2).
+
+Everything is char-level over a fixed 96-symbol alphabet.
+"""
+
+from __future__ import annotations
+
+import json
+import random
+from dataclasses import dataclass
+
+# --- vocabulary -------------------------------------------------------------
+# 0 = PAD, 1 = BOS, 2 = EOS, then printable chars.
+SPECIALS = ["<pad>", "<bos>", "<eos>"]
+ALPHABET = (
+    "abcdefghijklmnopqrstuvwxyz"
+    "ABCDEFGHIJKLMNOPQRSTUVWXYZ"
+    "0123456789"
+    " .,:;!?'\"()[]{}<>=+-*/%_#|\n\t&^~@$\\"
+)
+VOCAB_SIZE = len(SPECIALS) + len(ALPHABET)  # 96
+PAD, BOS, EOS = 0, 1, 2
+_STOI = {c: i + len(SPECIALS) for i, c in enumerate(ALPHABET)}
+_ITOS = {i + len(SPECIALS): c for i, c in enumerate(ALPHABET)}
+
+CATEGORIES = [
+    "coding",
+    "extraction",
+    "humanities",
+    "math",
+    "math_reasoning",
+    "qa",
+    "rag",
+    "reasoning",
+    "roleplay",
+    "stem",
+    "summarization",
+    "translation",
+    "writing",
+]
+
+CODING_CATEGORIES = {"coding"}  # for the Fig. 2 coding/non-coding split
+
+
+def encode(text: str) -> list[int]:
+    return [_STOI[c] for c in text if c in _STOI]
+
+
+def decode(ids) -> str:
+    return "".join(_ITOS.get(int(i), "") for i in ids if int(i) >= len(SPECIALS))
+
+
+# --- grammar helpers --------------------------------------------------------
+
+_NAMES = ["alice", "bob", "carol", "dave", "erin", "frank", "grace", "heidi"]
+_CITIES = ["rome", "oslo", "lima", "cairo", "kyoto", "quito", "perth", "turin"]
+_NOUNS = ["river", "engine", "garden", "signal", "market", "forest", "bridge", "circuit"]
+_ADJS = ["quiet", "bright", "ancient", "rapid", "subtle", "dense", "hollow", "vivid"]
+_VERBS = ["carries", "shapes", "reveals", "guards", "crosses", "ignites", "mirrors", "binds"]
+_TOPICS = ["history", "poetry", "physics", "music", "geometry", "biology", "logic", "ethics"]
+
+# translation dictionary (deterministic word mapping)
+_DICT = {
+    "red": "roz", "blue": "blu", "cat": "gato", "dog": "kano", "house": "casa",
+    "tree": "arbo", "small": "eta", "big": "granda", "runs": "kuras", "sees": "vidas",
+    "the": "la", "old": "mala", "new": "nova", "bird": "birdo", "water": "akvo",
+}
+
+
+# Zipfian-weighted choice: like natural text, most slots have a clearly
+# most-likely continuation (so a good draft model can track the target's
+# argmax) while still carrying real entropy. Uniform choices would make
+# argmax ties arbitrary and crush acceptance rates for every method.
+_ZIPF = [16.0, 8.0, 4.0, 2.0, 1.0, 0.5, 0.25, 0.125]
+
+
+def _wchoice(rng: random.Random, items) -> str:
+    return rng.choices(items, weights=_ZIPF[: len(items)], k=1)[0]
+
+
+def _sent(rng: random.Random) -> str:
+    return (
+        f"the {_wchoice(rng, _ADJS)} {_wchoice(rng, _NOUNS)} {_wchoice(rng, _VERBS)} "
+        f"the {_wchoice(rng, _ADJS)} {_wchoice(rng, _NOUNS)}"
+    )
+
+
+# --- category generators ----------------------------------------------------
+# Each returns full sample text; prompts are prefixes cut at generation time.
+
+
+def gen_coding(rng: random.Random) -> str:
+    fname = f"f{rng.randrange(10)}"
+    a, b = rng.randrange(2, 9), rng.randrange(2, 9)
+    op = _wchoice(rng, ["+", "*", "-"])
+    lines = [
+        f"def {fname}(a, b):",
+        f"    r = a {op} b",
+        f"    for i in range({a}):",
+        f"        r = r + i",
+        "    return r",
+        f"x = {fname}({a}, {b})",
+        f"print(x)",
+        "",
+        f"def g{rng.randrange(10)}(n):",
+        "    if n <= 1:",
+        "        return 1",
+        "    return n * g(n - 1)",
+        "",
+    ]
+    return "\n".join(lines)
+
+
+def gen_math(rng: random.Random) -> str:
+    parts = []
+    for _ in range(6):
+        a, b = rng.randrange(2, 30), rng.randrange(2, 30)
+        op = _wchoice(rng, ["+", "*", "-"])
+        v = a + b if op == "+" else a * b if op == "*" else a - b
+        parts.append(f"{a} {op} {b} = {v}")
+    return "; ".join(parts) + "."
+
+
+def gen_math_reasoning(rng: random.Random) -> str:
+    x = rng.randrange(2, 9)
+    y = x * rng.randrange(2, 5)
+    z = y + rng.randrange(1, 9)
+    return (
+        f"let x = {x}. then y = x * {y // x}, so y = {y}. "
+        f"then z = y + {z - y}, so z = {z}. the answer is {z}."
+    )
+
+
+def gen_extraction(rng: random.Random) -> str:
+    recs = []
+    for _ in range(3):
+        n = _wchoice(rng, _NAMES)
+        recs.append(f"name: {n}; age: {rng.randrange(20, 60)}; city: {_wchoice(rng, _CITIES)}")
+    n2 = recs[1].split("name: ")[1].split(";")[0]
+    age2 = recs[1].split("age: ")[1].split(";")[0]
+    return " | ".join(recs) + f" || query: age of {n2} -> answer: {age2}."
+
+
+def gen_translation(rng: random.Random) -> str:
+    words = rng.sample(list(_DICT.keys()), 4)
+    src = " ".join(words)
+    dst = " ".join(_DICT[w] for w in words)
+    words2 = rng.sample(list(_DICT.keys()), 4)
+    src2 = " ".join(words2)
+    dst2 = " ".join(_DICT[w] for w in words2)
+    return f"translate: {src} -> {dst} ; translate: {src2} -> {dst2} ."
+
+
+def gen_summarization(rng: random.Random) -> str:
+    s1, s2 = _sent(rng), _sent(rng)
+    key1 = s1.split()[2]
+    key2 = s2.split()[2]
+    return f"text: {s1}. {s2}. again: {s1}. tl;dr: {key1} and {key2}."
+
+
+def gen_rag(rng: random.Random) -> str:
+    n, c = _wchoice(rng, _NAMES), _wchoice(rng, _CITIES)
+    fact = f"{n} lives in {c} and studies {_wchoice(rng, _TOPICS)}"
+    return f"[doc] {fact}. {_sent(rng)}. [q] where does {n} live? [a] {n} lives in {c}."
+
+
+def gen_qa(rng: random.Random) -> str:
+    n, c, t = _wchoice(rng, _NAMES), _wchoice(rng, _CITIES), _wchoice(rng, _TOPICS)
+    return (
+        f"q: who works on {t} in {c}? a: {n} works on {t} in {c}. "
+        f"q: where is {n}? a: {n} is in {c}."
+    )
+
+
+def gen_reasoning(rng: random.Random) -> str:
+    a, b = _wchoice(rng, _NAMES), _wchoice(rng, _NAMES)
+    return (
+        f"if {a} is taller than {b}, and {b} is taller than carol, "
+        f"then {a} is taller than carol. this follows by transitivity."
+    )
+
+
+def _gen_prose(rng: random.Random, opener: str) -> str:
+    return f"{opener} {_sent(rng)}. {_sent(rng)}, while {_sent(rng)}. {_sent(rng)}."
+
+
+def gen_humanities(rng: random.Random) -> str:
+    return _gen_prose(rng, f"in the study of {_wchoice(rng, _TOPICS)},")
+
+
+def gen_stem(rng: random.Random) -> str:
+    return _gen_prose(rng, f"in {_wchoice(rng, ['physics', 'biology', 'geometry'])},")
+
+
+def gen_writing(rng: random.Random) -> str:
+    return _gen_prose(rng, "once upon a time,")
+
+
+def gen_roleplay(rng: random.Random) -> str:
+    n = _wchoice(rng, _NAMES)
+    return f'"{_sent(rng)}," said {n}. "{_sent(rng)}," came the reply.'
+
+
+GENERATORS = {
+    "coding": gen_coding,
+    "extraction": gen_extraction,
+    "humanities": gen_humanities,
+    "math": gen_math,
+    "math_reasoning": gen_math_reasoning,
+    "qa": gen_qa,
+    "rag": gen_rag,
+    "reasoning": gen_reasoning,
+    "roleplay": gen_roleplay,
+    "stem": gen_stem,
+    "summarization": gen_summarization,
+    "translation": gen_translation,
+    "writing": gen_writing,
+}
+
+assert set(GENERATORS) == set(CATEGORIES)
+
+
+# --- corpus / prompt suites --------------------------------------------------
+
+
+def sample(category: str, rng: random.Random) -> str:
+    return GENERATORS[category](rng)
+
+
+def token_stream(seed: int, n_chars: int, mix: dict[str, float] | None = None) -> list[int]:
+    """Concatenated EOS-separated training stream with a category mixture."""
+    rng = random.Random(seed)
+    cats = CATEGORIES
+    weights = [(mix or {}).get(c, 1.0) for c in cats]
+    out: list[int] = []
+    while len(out) < n_chars:
+        c = rng.choices(cats, weights=weights, k=1)[0]
+        out.extend(encode(sample(c, rng)))
+        out.append(EOS)
+    return out[:n_chars]
+
+
+@dataclass
+class Prompt:
+    category: str
+    text: str        # the prompt prefix
+    max_new: int     # generation budget (chars)
+
+
+def make_prompt(category: str, rng: random.Random, max_new: int = 160) -> Prompt:
+    """A prompt is a prefix of a fresh sample: the model continues in-domain."""
+    full = sample(category, rng)
+    # keep 35-60% of the sample as the prompt, at least 16 chars
+    cut = max(16, int(len(full) * rng.uniform(0.35, 0.6)))
+    return Prompt(category=category, text=full[:cut], max_new=max_new)
+
+
+def build_suites(seed: int = 7, per_cat: int = 8, max_new: int = 160) -> dict:
+    """Prompt suites analogous to the paper's datasets."""
+    rng = random.Random(seed)
+    specbench = [make_prompt(c, rng, max_new) for c in CATEGORIES for _ in range(per_cat)]
+    mt_cats = ["writing", "roleplay", "reasoning", "math", "qa", "extraction", "stem", "humanities"]
+    mtbench = [make_prompt(c, rng, max_new) for c in mt_cats for _ in range(per_cat)]
+    humaneval = [make_prompt("coding", rng, max_new) for _ in range(per_cat * 8)]
+    alpaca = [make_prompt(rng.choice(CATEGORIES), rng, max_new) for _ in range(per_cat * 40)]
+    return {
+        "specbench": specbench,
+        "mtbench": mtbench,
+        "humaneval": humaneval,
+        "alpaca": alpaca,
+    }
+
+
+def suites_to_json(suites: dict) -> str:
+    return json.dumps(
+        {
+            name: [
+                {"category": p.category, "text": p.text, "max_new": p.max_new}
+                for p in prompts
+            ]
+            for name, prompts in suites.items()
+        },
+        indent=1,
+    )
+
+
+if __name__ == "__main__":
+    rng = random.Random(0)
+    for c in CATEGORIES:
+        print(f"--- {c}\n{sample(c, rng)!r}")

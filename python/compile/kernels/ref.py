@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the fused stop-signal head (kernels/signals.py).
+
+This is the correctness reference: python/tests/test_kernel.py sweeps shapes
+and distributions (hypothesis) and asserts allclose against this module.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .signals import SIG_WIDTH  # noqa: F401  (re-exported for tests)
+
+
+def signal_head_ref(logits: jnp.ndarray) -> jnp.ndarray:
+    """logits [K, V] f32 -> signals [K, SIG_WIDTH] f32 (see signals.py)."""
+    m = jnp.max(logits, axis=-1)
+    idx = jnp.argmax(logits, axis=-1)
+    p = jax.nn.softmax(logits, axis=-1)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    top1 = jnp.max(p, axis=-1)
+    masked = jnp.where(
+        jnp.arange(logits.shape[-1])[None] == idx[:, None], -jnp.inf, logits
+    )
+    top2 = jnp.exp(jnp.max(masked, axis=-1) - lse)
+    # entropy via the numerically-stable identity H = lse - E_p[x]
+    ent = jnp.maximum(lse - jnp.sum(p * logits, axis=-1), 0.0)
+    return jnp.stack(
+        [idx.astype(jnp.float32), top1, top2, top1 - top2, ent, jnp.sqrt(ent), lse, m],
+        axis=-1,
+    )

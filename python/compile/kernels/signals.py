@@ -1,0 +1,62 @@
+"""L1: fused stop-signal head as a Pallas kernel.
+
+One pass over a row of draft logits produces *every* scalar any TapOut arm
+policy needs, so the logits are read exactly once:
+
+  col 0  argmax        (index of top-1 logit, stored as f32)
+  col 1  top1_p        p(x = argmax)                       [Max-Confidence]
+  col 2  top2_p        p of the runner-up
+  col 3  margin        top1_p - top2_p                     [LogitMargin]
+  col 4  entropy       H(p) = logsumexp - E_p[logit]       [AdaEDL]
+  col 5  sqrt_entropy  sqrt(H)                             [SVIP, SVIP-Diff]
+  col 6  logsumexp     m + log sum exp(x - m)
+  col 7  max_logit     m
+
+Grid: one program per logits row; the whole row lives in VMEM (V·4 B per
+program — see DESIGN.md §7 for the VMEM/MXU accounting). ``interpret=True``
+because CPU PJRT cannot execute Mosaic custom-calls; the kernel *structure*
+(single read of the row, reduction-only work) is the TPU design.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SIG_WIDTH = 8
+
+
+def _signal_kernel(x_ref, o_ref):
+    x = x_ref[0, :]                                  # [V] logits row in VMEM
+    m = jnp.max(x)
+    idx = jnp.argmax(x).astype(jnp.float32)
+    e = jnp.exp(x - m)                               # stable exponentials
+    s = jnp.sum(e)
+    lse = m + jnp.log(s)
+    top1 = jnp.max(e) / s
+    # runner-up: mask the winning index out, take the next max
+    masked = jnp.where(jnp.arange(x.shape[0]) == jnp.argmax(x), -jnp.inf, x)
+    top2 = jnp.exp(jnp.max(masked) - m) / s
+    # H(p) = logsumexp - E_p[x];  E_p[x] = m + sum(e*(x-m))/s
+    ex = m + jnp.sum(e * (x - m)) / s
+    ent = jnp.maximum(lse - ex, 0.0)
+    o_ref[...] = jnp.stack(
+        [idx, top1, top2, top1 - top2, ent, jnp.sqrt(ent), lse, m]
+    ).reshape(1, SIG_WIDTH)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def signal_head(logits: jnp.ndarray) -> jnp.ndarray:
+    """logits [K, V] f32 -> signals [K, SIG_WIDTH] f32."""
+    K, V = logits.shape
+    return pl.pallas_call(
+        _signal_kernel,
+        grid=(K,),
+        in_specs=[pl.BlockSpec((1, V), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, SIG_WIDTH), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((K, SIG_WIDTH), jnp.float32),
+        interpret=True,
+    )(logits)

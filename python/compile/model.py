@@ -1,0 +1,276 @@
+"""L2: tiny char-level transformer LMs (draft + target zoo) in JAX.
+
+Two views of the same weights:
+  * training view — ``forward_train(params, tokens)`` over a params pytree;
+  * AOT view — ``block(wflat, world, tokens, start)`` over a *flat* weight
+    vector and a *flat* "world" state buffer (KV cache + out region), the
+    form lowered to HLO text and executed from rust via PJRT ``execute_b``.
+
+The AOT contract (see DESIGN.md §4):
+  * one function family per model: ``block_K`` processes K tokens starting
+    at position ``start`` (K=1 is the decode step; K=P is prefill; K≥k is
+    verification of k tokens, padded);
+  * world = [ kv-cache | out-region ]; the function returns the updated
+    world as a single non-tuple root so rust can feed the returned buffer
+    straight back without host round-trips;
+  * out-region rows: for each of the K positions, the fused L1 stop-signal
+    head (kernels/signals.py) writes ``SIG_WIDTH`` floats
+    [argmax, top1_p, top2_p, margin, entropy, sqrt_entropy, logsumexp,
+    max_logit].
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.signals import SIG_WIDTH, signal_head
+from . import corpus
+
+MAX_SEQ = 384
+K_LADDER = [1, 4, 8, 16, 32, 64, 128, 256, 384]
+OUT_ROWS = MAX_SEQ  # out region can hold signals for a full prefill
+EPS = 1e-6
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    vocab: int = corpus.VOCAB_SIZE
+    max_seq: int = MAX_SEQ
+    train_steps: int = 300
+    train_batch: int = 12
+    train_seq: int = 128
+    lr: float = 3e-3
+    corpus_chars: int = 400_000
+    corpus_seed: int = 1234
+    mix: dict = field(default_factory=dict, hash=False)
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def kv_elems(self) -> int:
+        return self.n_layers * 2 * self.max_seq * self.d_model
+
+    @property
+    def out_elems(self) -> int:
+        return OUT_ROWS * SIG_WIDTH
+
+    @property
+    def world_elems(self) -> int:
+        return self.kv_elems + self.out_elems
+
+
+# The model zoo (DESIGN.md §3): 2 targets + 3 drafts -> 4 paper-analog pairs.
+MODEL_ZOO: dict[str, ModelConfig] = {
+    "target-base": ModelConfig("target-base", d_model=128, n_layers=6, n_heads=4,
+                               train_steps=320, train_batch=12),
+    "target-big": ModelConfig("target-big", d_model=160, n_layers=8, n_heads=5,
+                              train_steps=320, train_batch=8),
+    "draft-base": ModelConfig("draft-base", d_model=64, n_layers=2, n_heads=2,
+                              train_steps=400, train_batch=16),
+    "draft-tiny": ModelConfig("draft-tiny", d_model=32, n_layers=1, n_heads=1,
+                              train_steps=400, train_batch=16),
+    # misaligned draft: trained on a skewed category mixture (OLMo-pair analog)
+    "draft-skew": ModelConfig("draft-skew", d_model=64, n_layers=2, n_heads=2,
+                              train_steps=400, train_batch=16, corpus_seed=99,
+                              mix={"coding": 0.1, "math": 0.1, "translation": 0.1}),
+}
+
+# paper-analog model pairs (draft, target)
+PAIRS = {
+    "pair-a": ("draft-base", "target-base"),   # ~ Llama-3 1B/8B
+    "pair-b": ("draft-base", "target-big"),    # ~ Llama-3 1B/70B
+    "pair-c": ("draft-tiny", "target-base"),   # ~ Gemma3 270M/27B
+    "pair-d": ("draft-skew", "target-big"),    # ~ OLMo-2 1B/32B
+}
+
+
+# --- parameters --------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict:
+    k = jax.random.PRNGKey(seed)
+    d, v = cfg.d_model, cfg.vocab
+    ks = jax.random.split(k, 2 + 6 * cfg.n_layers)
+    s = 0.02
+    params = {
+        "emb": jax.random.normal(ks[0], (v, d)) * s,
+        "pos": jax.random.normal(ks[1], (cfg.max_seq, d)) * s,
+        "lnf": jnp.ones((d,)),
+        "layers": [],
+    }
+    for i in range(cfg.n_layers):
+        b = ks[2 + 6 * i: 8 + 6 * i]
+        params["layers"].append({
+            "ln1": jnp.ones((d,)),
+            "wq": jax.random.normal(b[0], (d, d)) * s,
+            "wk": jax.random.normal(b[1], (d, d)) * s,
+            "wv": jax.random.normal(b[2], (d, d)) * s,
+            "wo": jax.random.normal(b[3], (d, d)) * s,
+            "ln2": jnp.ones((d,)),
+            "w1": jax.random.normal(b[4], (d, 4 * d)) * s,
+            "w2": jax.random.normal(b[5], (4 * d, d)) * s,
+        })
+    return params
+
+
+def _leaves(cfg: ModelConfig):
+    """Deterministic (name, shape) layout of the flat weight vector."""
+    d, v = cfg.d_model, cfg.vocab
+    out = [("emb", (v, d)), ("pos", (cfg.max_seq, d)), ("lnf", (d,))]
+    for i in range(cfg.n_layers):
+        out += [
+            (f"l{i}.ln1", (d,)), (f"l{i}.wq", (d, d)), (f"l{i}.wk", (d, d)),
+            (f"l{i}.wv", (d, d)), (f"l{i}.wo", (d, d)), (f"l{i}.ln2", (d,)),
+            (f"l{i}.w1", (d, 4 * d)), (f"l{i}.w2", (4 * d, d)),
+        ]
+    return out
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(int(np.prod(s)) for _, s in _leaves(cfg))
+
+
+def pack_params(cfg: ModelConfig, params: dict) -> np.ndarray:
+    flat = {"emb": params["emb"], "pos": params["pos"], "lnf": params["lnf"]}
+    for i, l in enumerate(params["layers"]):
+        for kname, val in l.items():
+            flat[f"l{i}.{kname}"] = val
+    chunks = [np.asarray(flat[n], np.float32).reshape(-1) for n, _ in _leaves(cfg)]
+    return np.concatenate(chunks)
+
+
+def unpack_params(cfg: ModelConfig, wflat: jnp.ndarray) -> dict:
+    params: dict = {"layers": [{} for _ in range(cfg.n_layers)]}
+    off = 0
+    for name, shape in _leaves(cfg):
+        n = int(np.prod(shape))
+        arr = jax.lax.dynamic_slice(wflat, (off,), (n,)).reshape(shape)
+        off += n
+        if "." in name:
+            li, kname = name.split(".")
+            params["layers"][int(li[1:])][kname] = arr
+        else:
+            params[name] = arr
+    return params
+
+
+# --- core ops ----------------------------------------------------------------
+
+
+def rmsnorm(x, g):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + EPS) * g
+
+
+def _mlp(layer, x):
+    return jax.nn.gelu(x @ layer["w1"]) @ layer["w2"]
+
+
+def forward_train(cfg: ModelConfig, params: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Full causal forward for training. tokens [B,T] -> logits [B,T,V]."""
+    B, T = tokens.shape
+    h = params["emb"][tokens] + params["pos"][:T][None]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    for layer in params["layers"]:
+        x = rmsnorm(h, layer["ln1"])
+        q = (x @ layer["wq"]).reshape(B, T, cfg.n_heads, cfg.head_dim)
+        k = (x @ layer["wk"]).reshape(B, T, cfg.n_heads, cfg.head_dim)
+        v = (x @ layer["wv"]).reshape(B, T, cfg.n_heads, cfg.head_dim)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(cfg.head_dim)
+        att = jnp.where(mask[None, None], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(B, T, cfg.d_model)
+        h = h + o @ layer["wo"]
+        h = h + _mlp(layer, rmsnorm(h, layer["ln2"]))
+    return rmsnorm(h, params["lnf"]) @ params["emb"].T
+
+
+def loss_fn(cfg: ModelConfig, params: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    logits = forward_train(cfg, params, tokens[:, :-1])
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+# --- AOT block over the packed world -----------------------------------------
+
+
+def split_world(cfg: ModelConfig, world: jnp.ndarray):
+    kv = world[: cfg.kv_elems].reshape(cfg.n_layers, 2, cfg.max_seq, cfg.d_model)
+    out = world[cfg.kv_elems:]
+    return kv, out
+
+
+def join_world(cfg: ModelConfig, kv: jnp.ndarray, out: jnp.ndarray) -> jnp.ndarray:
+    return jnp.concatenate([kv.reshape(-1), out])
+
+
+def block_fn(cfg: ModelConfig, K: int, wflat, world, tokens, start):
+    """Process K tokens starting at absolute position ``start``.
+
+    wflat  f32[param_count]  — flat weights (device-resident, loaded once)
+    world  f32[world_elems]  — KV cache + out region (device-resident loop)
+    tokens i32[K]            — input tokens (may include right padding)
+    start  i32[]             — absolute position of tokens[0]
+
+    Returns the updated world. Writes kv[start:start+K] and the signal
+    matrix [K, SIG_WIDTH] at the head of the out region.
+    """
+    params = unpack_params(cfg, wflat)
+    kv, _ = split_world(cfg, world)
+    S, H, Dh = cfg.max_seq, cfg.n_heads, cfg.head_dim
+
+    positions = start + jnp.arange(K, dtype=jnp.int32)            # [K]
+    h = params["emb"][tokens] + params["pos"][positions]          # [K,d]
+    cols = jnp.arange(S, dtype=jnp.int32)                         # [S]
+    # row i may attend to absolute positions <= start+i
+    mask = cols[None, :] <= positions[:, None]                    # [K,S]
+
+    for li, layer in enumerate(params["layers"]):
+        x = rmsnorm(h, layer["ln1"])
+        q = (x @ layer["wq"]).reshape(K, H, Dh)
+        knew = x @ layer["wk"]                                    # [K,d]
+        vnew = x @ layer["wv"]
+        kv = jax.lax.dynamic_update_slice(kv, knew[None, None], (li, 0, start, 0))
+        kv = jax.lax.dynamic_update_slice(kv, vnew[None, None], (li, 1, start, 0))
+        kcache = kv[li, 0].reshape(S, H, Dh)
+        vcache = kv[li, 1].reshape(S, H, Dh)
+        att = jnp.einsum("khd,shd->hks", q, kcache) / np.sqrt(Dh)
+        att = jnp.where(mask[None], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("hks,shd->khd", att, vcache).reshape(K, cfg.d_model)
+        h = h + o @ layer["wo"]
+        h = h + _mlp(layer, rmsnorm(h, layer["ln2"]))
+
+    logits = rmsnorm(h, params["lnf"]) @ params["emb"].T          # [K,V]
+    sig = signal_head(logits)                                     # [K,SIG_WIDTH]
+    out = jnp.zeros((OUT_ROWS, SIG_WIDTH), jnp.float32)
+    out = jax.lax.dynamic_update_slice(out, sig, (0, 0))
+    return join_world(cfg, kv, out.reshape(-1))
+
+
+def make_block(cfg: ModelConfig, K: int):
+    def fn(wflat, world, tokens, start):
+        return block_fn(cfg, K, wflat, world, tokens, start)
+    fn.__name__ = f"{cfg.name}_block{K}"
+    return fn
+
+
+def example_args(cfg: ModelConfig, K: int):
+    return (
+        jax.ShapeDtypeStruct((param_count(cfg),), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.world_elems,), jnp.float32),
+        jax.ShapeDtypeStruct((K,), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )

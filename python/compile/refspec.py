@@ -1,0 +1,175 @@
+"""Reference (python) speculative decoder over the exact AOT block functions.
+
+Purposes:
+  * the golden-trace generator — rust integration tests replay these traces
+    and must match token-for-token (same HLO, same greedy rule);
+  * the trace source for train_classifier.py (SpecDec++ analog);
+  * the pytest home of the core invariant: greedy speculative decoding must
+    emit exactly the target model's greedy continuation.
+
+Position bookkeeping (mirrors rust/src/spec/session.rs):
+  `cur` = number of tokens a model has processed as *inputs* (== the next
+  input's absolute position). Every call feeds the contiguous block
+  committed[cur..]; after verification both models roll `cur` back to the
+  committed prefix. Garbage KV beyond `cur` is never read (attention masks
+  to <= position) and is overwritten when those positions are re-fed.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, model
+
+SIG = 8  # signal row width (kernels/signals.py)
+
+
+class PyModel:
+    """A model instance driving the packed-world block functions."""
+
+    def __init__(self, cfg: model.ModelConfig, wflat: np.ndarray):
+        self.cfg = cfg
+        self.w = jnp.asarray(wflat, jnp.float32)
+        self.world = jnp.zeros((cfg.world_elems,), jnp.float32)
+        self.cur = 0
+        self._fns: dict[int, callable] = {}
+        self._ladder = sorted(
+            model.K_LADDER if cfg.name.startswith("target") else [1, 4, 64, 128, 256, 384]
+        )
+
+    @classmethod
+    def load(cls, name: str, artifacts: Path) -> "PyModel":
+        cfg = model.MODEL_ZOO[name]
+        wflat = np.fromfile(artifacts / "weights" / f"{name}.bin", "<f4")
+        assert wflat.size == model.param_count(cfg), (name, wflat.size)
+        return cls(cfg, wflat)
+
+    def reset(self) -> None:
+        self.world = jnp.zeros((self.cfg.world_elems,), jnp.float32)
+        self.cur = 0
+
+    def _fn(self, k: int):
+        if k not in self._fns:
+            self._fns[k] = jax.jit(model.make_block(self.cfg, k))
+        return self._fns[k]
+
+    def block(self, tokens: list[int], start: int) -> np.ndarray:
+        """Feed `tokens` at absolute position `start`; return signal rows
+        [len(tokens), SIG]. Requires start == self.cur (contiguity)."""
+        assert start == self.cur, (start, self.cur)
+        n = len(tokens)
+        K = next(k for k in self._ladder if k >= n)
+        toks = np.zeros(K, np.int32)
+        toks[:n] = tokens
+        self.world = self._fn(K)(self.w, self.world, jnp.asarray(toks), jnp.int32(start))
+        self.cur = start + n
+        out = np.asarray(self.world[self.cfg.kv_elems:]).reshape(model.OUT_ROWS, SIG)
+        return out[:n]
+
+
+def greedy_decode(m: PyModel, prompt_ids: list[int], max_new: int) -> list[int]:
+    """Plain autoregressive greedy decoding (the spec-decode oracle)."""
+    m.reset()
+    committed = list(prompt_ids)
+    limit = min(max_new, m.cfg.max_seq - len(prompt_ids) - 1)
+    for _ in range(limit):
+        sig = m.block(committed[m.cur:], m.cur)
+        nxt = int(sig[-1, 0])
+        committed.append(nxt)
+        if nxt == corpus.EOS:
+            break
+    return committed
+
+
+def spec_decode(
+    draft: PyModel,
+    target: PyModel,
+    prompt_ids: list[int],
+    max_new: int,
+    stop_after: int = 6,
+    gamma_max: int = 128,
+):
+    """Greedy speculative decoding with a static draft length (Algorithm 1
+    with the Static-k policy). Returns (committed, rounds) where rounds is
+    a list of dicts with per-session drafting statistics."""
+    draft.reset()
+    target.reset()
+    committed = list(prompt_ids)
+    n0 = len(prompt_ids)
+    S = min(draft.cfg.max_seq, target.cfg.max_seq)
+    rounds = []
+
+    while len(committed) - n0 < max_new and committed[-1] != corpus.EOS:
+        C = len(committed)
+        headroom = S - C - 2
+        if headroom < 1:
+            break
+        gamma = min(stop_after, gamma_max, headroom)
+
+        # --- draft session: catch up on committed tokens, then propose
+        sig = draft.block(committed[draft.cur:], draft.cur)
+        proposals: list[int] = []
+        sig_rows: list[np.ndarray] = []
+        while True:
+            nxt = int(sig[-1, 0])
+            proposals.append(nxt)
+            sig_rows.append(sig[-1].copy())
+            if len(proposals) >= gamma:
+                break
+            sig = draft.block([nxt], C + len(proposals) - 1)
+
+        # --- verification: target processes the un-processed committed
+        # suffix plus *all* proposals in one parallel block. Row r predicts
+        # the token at absolute position tc+r+1, so row off+i (off = C-1-tc)
+        # predicts position C+i: it both checks proposals[i] and supplies
+        # the bonus token at the first mismatch (or after full acceptance).
+        tc = target.cur
+        inputs = committed[tc:] + proposals
+        vsig = target.block(inputs, tc)
+        preds = vsig[:, 0].astype(int)
+        off = C - 1 - tc
+        m = 0
+        while m < len(proposals) and preds[off + m] == proposals[m]:
+            m += 1
+        bonus = int(preds[off + m])
+        accepted = proposals[:m]
+        committed.extend(accepted + [bonus])
+        # roll back both models to the committed prefix
+        target.cur = min(target.cur, C + m)
+        draft.cur = min(draft.cur, C + m)
+        rounds.append({
+            "drafted": len(proposals),
+            "accepted": m,
+            "signals": [r.tolist() for r in sig_rows],
+            "labels": [1] * m + [0] * (len(proposals) - m),
+        })
+        if bonus == corpus.EOS:
+            break
+
+    return committed, rounds
+
+
+def golden_traces(pair: str, artifacts: Path, n_prompts: int = 4) -> dict:
+    """Golden spec-decode traces for the rust integration tests."""
+    dname, tname = model.PAIRS[pair]
+    draft = PyModel.load(dname, artifacts)
+    target = PyModel.load(tname, artifacts)
+    suites = corpus.build_suites(seed=7)
+    traces = []
+    for p in suites["specbench"][:n_prompts]:
+        ids = [corpus.BOS] + corpus.encode(p.text)
+        committed, rounds = spec_decode(draft, target, ids, max_new=48, stop_after=6)
+        traces.append({
+            "category": p.category,
+            "prompt_ids": ids,
+            "committed": committed,
+            "drafted": [r["drafted"] for r in rounds],
+            "accepted": [r["accepted"] for r in rounds],
+        })
+    return {"pair": pair, "draft": dname, "target": tname, "stop_after": 6,
+            "max_new": 48, "traces": traces}

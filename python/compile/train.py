@@ -1,0 +1,154 @@
+"""Build-time training of the tiny model zoo (DESIGN.md §3).
+
+Trains each model in MODEL_ZOO on its TinyBench mixture with hand-rolled
+Adam (no optax in the image) and writes flat f32 weights + metadata to
+artifacts/weights/. Runs once under `make artifacts`; never on the request
+path.
+
+Env knobs:
+  TAPOUT_TRAIN_SCALE  float multiplier on train_steps (default 1.0;
+                      CI smoke can use 0.05)
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, model
+
+
+def batches(stream: np.ndarray, rng: np.random.RandomState, batch: int, seq: int):
+    """Random contiguous windows out of the token stream."""
+    hi = len(stream) - seq - 1
+    while True:
+        idx = rng.randint(0, hi, size=batch)
+        yield np.stack([stream[i: i + seq + 1] for i in idx])
+
+
+def adam_init(params):
+    z = jax.tree.map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.99, eps=1e-8, clip=1.0):
+    # global-norm gradient clipping
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(g * g) for g in jax.tree.leaves(grads)) + 1e-12
+    )
+    scale = jnp.minimum(1.0, clip / gnorm)
+    grads = jax.tree.map(lambda g: g * scale, grads)
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    bc1, bc2 = 1 - b1**t, 1 - b2**t
+    params = jax.tree.map(
+        lambda p, m_, v_: p - lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps),
+        params, m, v,
+    )
+    return params, {"m": m, "v": v, "t": t}
+
+
+# Which teacher each draft distills from. Acceptance in speculative
+# decoding measures argmax agreement with the *target*, not corpus fit, so
+# drafts train against the teacher's logits (0.3 CE + 0.7 KL) — the same
+# reason production draft models are distilled from their targets.
+DISTILL = {
+    "draft-base": "target-base",
+    "draft-tiny": "target-base",
+    "draft-skew": "target-big",
+}
+
+
+def train_model(cfg: model.ModelConfig, out_dir: Path, scale: float = 1.0) -> dict:
+    steps = max(20, int(cfg.train_steps * scale))
+    stream = np.array(
+        corpus.token_stream(cfg.corpus_seed, cfg.corpus_chars, cfg.mix), np.int32
+    )
+    rng = np.random.RandomState(cfg.corpus_seed + 1)
+    gen = batches(stream, rng, cfg.train_batch, cfg.train_seq)
+
+    params = model.init_params(cfg, seed=cfg.corpus_seed)
+    opt = adam_init(params)
+
+    teacher = None
+    if cfg.name in DISTILL:
+        tcfg = model.MODEL_ZOO[DISTILL[cfg.name]]
+        tflat = np.fromfile(out_dir / f"{tcfg.name}.bin", "<f4")
+        teacher = (tcfg, model.unpack_params(tcfg, jnp.asarray(tflat)))
+        print(f"  [{cfg.name}] distilling from {tcfg.name}", flush=True)
+
+    @jax.jit
+    def step_fn(params, opt, toks, lr):
+        def loss_with_distill(p):
+            ce = model.loss_fn(cfg, p, toks)
+            if teacher is None:
+                return ce
+            tcfg, tparams = teacher
+            tlogits = jax.lax.stop_gradient(
+                model.forward_train(tcfg, tparams, toks[:, :-1])
+            )
+            dlogits = model.forward_train(cfg, p, toks[:, :-1])
+            tp = jax.nn.softmax(tlogits, axis=-1)
+            kl = jnp.sum(
+                tp * (jax.nn.log_softmax(tlogits, -1) - jax.nn.log_softmax(dlogits, -1)),
+                axis=-1,
+            ).mean()
+            return 0.3 * ce + 0.7 * kl
+
+        loss, grads = jax.value_and_grad(loss_with_distill)(params)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    t0 = time.time()
+    first = last = None
+    for i in range(steps):
+        # cosine decay with a short warmup
+        warm = min(1.0, (i + 1) / 20)
+        lr = cfg.lr * warm * (0.5 * (1 + np.cos(np.pi * i / steps)) * 0.9 + 0.1)
+        params, opt, loss = step_fn(params, opt, jnp.array(next(gen)), lr)
+        if i == 0:
+            first = float(loss)
+        if i % 40 == 0 or i == steps - 1:
+            last = float(loss)
+            print(f"  [{cfg.name}] step {i:4d}/{steps} loss {last:.3f} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+
+    wflat = model.pack_params(cfg, params)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    wflat.astype("<f4").tofile(out_dir / f"{cfg.name}.bin")
+    meta = {
+        "name": cfg.name, "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads, "vocab": cfg.vocab, "max_seq": cfg.max_seq,
+        "param_count": int(wflat.size), "train_steps": steps,
+        "loss_first": first, "loss_final": last,
+        "train_seconds": round(time.time() - t0, 1),
+    }
+    (out_dir / f"{cfg.name}.json").write_text(json.dumps(meta, indent=1))
+    print(f"  [{cfg.name}] done: loss {first:.3f} -> {last:.3f}, "
+          f"{wflat.size} params, {meta['train_seconds']}s", flush=True)
+    return meta
+
+
+def main() -> None:
+    scale = float(os.environ.get("TAPOUT_TRAIN_SCALE", "1.0"))
+    out_dir = Path(sys.argv[1] if len(sys.argv) > 1 else "../artifacts/weights")
+    only = sys.argv[2].split(",") if len(sys.argv) > 2 else list(model.MODEL_ZOO)
+    for name in only:
+        cfg = model.MODEL_ZOO[name]
+        dst = out_dir / f"{cfg.name}.bin"
+        if dst.exists():
+            print(f"  [{cfg.name}] cached, skipping", flush=True)
+            continue
+        train_model(cfg, out_dir, scale)
+
+
+if __name__ == "__main__":
+    main()

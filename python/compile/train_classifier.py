@@ -1,0 +1,152 @@
+"""SpecDec++ analog (training-based baseline, paper Table 4).
+
+The paper trains a 4-layer ResNet (SiLU) on target hidden states with BCE
+(rejection weight 6) and stops drafting when p(accept) < 0.7. Hidden states
+do not cross our AOT boundary, so the classifier consumes the same signal
+vector the training-free arms see (a *conservative* substitution for
+TapOut — see DESIGN.md §3): [top1, top2, margin, entropy, sqrtH,
+draft_position/16, ema_accept].
+
+Trains at build time on spec-decode traces from the alpaca suite (pair-a)
+and exports weights to artifacts/specdecpp.json for the rust inference
+re-implementation (rust/src/policies/specdecpp.rs).
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, model, refspec
+
+WIDTH = 32
+N_BLOCKS = 3  # input layer + 3 residual blocks = 4 weight layers
+REJECTION_WEIGHT = 6.0
+THRESHOLD = 0.7
+N_FEATURES = 7
+
+
+def collect_traces(artifacts: Path, n_prompts: int = 32, max_new: int = 96):
+    """Run long-draft spec decode on the alpaca suite; label each drafted
+    token with accept/reject."""
+    dname, tname = model.PAIRS["pair-a"]
+    draft = refspec.PyModel.load(dname, artifacts)
+    target = refspec.PyModel.load(tname, artifacts)
+    suites = corpus.build_suites(seed=7)
+    feats, labels = [], []
+    for p in suites["alpaca"][:n_prompts]:
+        ids = [corpus.BOS] + corpus.encode(p.text)
+        ema = 0.7
+        _, rounds = refspec.spec_decode(draft, target, ids, max_new=max_new,
+                                        stop_after=16)
+        for r in rounds:
+            for i, (sig, y) in enumerate(zip(r["signals"], r["labels"])):
+                # sig = [argmax, top1, top2, margin, entropy, sqrtH, lse, max]
+                feats.append([sig[1], sig[2], sig[3], sig[4], sig[5],
+                              i / 16.0, ema])
+                labels.append(float(y))
+            acc = r["accepted"] / max(1, r["drafted"])
+            ema = 0.9 * ema + 0.1 * acc
+    return np.array(feats, np.float32), np.array(labels, np.float32)
+
+
+def init_mlp(seed: int = 0):
+    k = jax.random.PRNGKey(seed)
+    ks = jax.random.split(k, N_BLOCKS + 2)
+    s = 0.3
+    params = [{"w": jax.random.normal(ks[0], (N_FEATURES, WIDTH)) * s,
+               "b": jnp.zeros(WIDTH)}]
+    for i in range(N_BLOCKS):
+        params.append({"w": jax.random.normal(ks[1 + i], (WIDTH, WIDTH)) * s,
+                       "b": jnp.zeros(WIDTH)})
+    params.append({"w": jax.random.normal(ks[-1], (WIDTH, 1)) * s,
+                   "b": jnp.zeros(1)})
+    return params
+
+
+def mlp_fwd(params, x):
+    h = jax.nn.silu(x @ params[0]["w"] + params[0]["b"])
+    for blk in params[1:-1]:
+        h = h + jax.nn.silu(h @ blk["w"] + blk["b"])  # residual (ResNet-style)
+    return (h @ params[-1]["w"] + params[-1]["b"])[..., 0]
+
+
+def train(feats: np.ndarray, labels: np.ndarray, steps: int = 1500, lr: float = 3e-3):
+    mean, std = feats.mean(0), feats.std(0) + 1e-6
+    xs = jnp.asarray((feats - mean) / std)
+    ys = jnp.asarray(labels)
+    # BCE with rejection weight 6 (paper's SpecDec++ setting)
+    wts = jnp.where(ys > 0.5, 1.0, REJECTION_WEIGHT)
+
+    params = init_mlp()
+    opt = [{k: jnp.zeros_like(v) for k, v in layer.items()} for layer in params]
+    opt2 = [{k: jnp.zeros_like(v) for k, v in layer.items()} for layer in params]
+
+    @jax.jit
+    def step(params, m, v, t):
+        def loss_fn(p):
+            logit = mlp_fwd(p, xs)
+            l = jnp.maximum(logit, 0) - logit * ys + jnp.log1p(jnp.exp(-jnp.abs(logit)))
+            return (wts * l).mean()
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        new_p, new_m, new_v = [], [], []
+        for p_, g_, m_, v_ in zip(params, g, m, v):
+            nm = {k: 0.9 * m_[k] + 0.1 * g_[k] for k in p_}
+            nv = {k: 0.99 * v_[k] + 0.01 * g_[k] ** 2 for k in p_}
+            np_ = {k: p_[k] - lr * (nm[k] / (1 - 0.9 ** t)) /
+                   (jnp.sqrt(nv[k] / (1 - 0.99 ** t)) + 1e-8) for k in p_}
+            new_p.append(np_), new_m.append(nm), new_v.append(nv)
+        return new_p, new_m, new_v, loss
+
+    first = last = None
+    for t in range(1, steps + 1):
+        params, opt, opt2, loss = step(params, opt, opt2, t)
+        if t == 1:
+            first = float(loss)
+    last = float(loss)
+
+    # training-set accuracy (sanity)
+    pred = np.asarray(jax.nn.sigmoid(mlp_fwd(params, xs))) > 0.5
+    acc = float((pred == (labels > 0.5)).mean())
+    return params, (mean, std), {"loss_first": first, "loss_final": last, "acc": acc}
+
+
+def export(params, norm, stats, n_samples: int, dst: Path) -> None:
+    mean, std = norm
+    obj = {
+        "arch": "resmlp-silu", "width": WIDTH, "blocks": N_BLOCKS,
+        "features": ["top1", "top2", "margin", "entropy", "sqrt_entropy",
+                     "pos_over_16", "ema_accept"],
+        "rejection_weight": REJECTION_WEIGHT, "threshold": THRESHOLD,
+        "n_train_samples": n_samples,
+        "mean": np.asarray(mean).tolist(), "std": np.asarray(std).tolist(),
+        "layers": [{"w": np.asarray(l["w"]).tolist(),
+                    "b": np.asarray(l["b"]).tolist()} for l in params],
+        "train_stats": stats,
+    }
+    dst.write_text(json.dumps(obj))
+
+
+def main() -> None:
+    artifacts = Path(sys.argv[1] if len(sys.argv) > 1 else "../artifacts")
+    dst = artifacts / "specdecpp.json"
+    if dst.exists():
+        print("  [specdecpp] cached, skipping", flush=True)
+        return
+    print("  [specdecpp] collecting traces...", flush=True)
+    feats, labels = collect_traces(artifacts)
+    print(f"  [specdecpp] {len(feats)} samples, accept rate {labels.mean():.2f}",
+          flush=True)
+    params, norm, stats = train(feats, labels)
+    export(params, norm, stats, len(feats), dst)
+    print(f"  [specdecpp] loss {stats['loss_first']:.3f} -> "
+          f"{stats['loss_final']:.3f}, acc {stats['acc']:.2f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Artifact-pipeline validation: manifest consistency, HLO text format,
+golden traces, classifier export. Skipped when `make artifacts` has not run
+(the rest of the suite is artifact-independent)."""
+
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from compile import corpus, model
+
+ART = Path(__file__).resolve().parents[1].parent / "artifacts"
+
+pytestmark = pytest.mark.skipif(
+    not (ART / "manifest.json").exists(), reason="artifacts not built"
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    return json.loads((ART / "manifest.json").read_text())
+
+
+def test_manifest_consistency(manifest):
+    assert manifest["vocab"] == corpus.VOCAB_SIZE
+    assert manifest["max_seq"] == model.MAX_SEQ
+    assert set(manifest["pairs"]) == set(model.PAIRS)
+    for name, m in manifest["models"].items():
+        cfg = model.MODEL_ZOO[name]
+        assert m["param_count"] == model.param_count(cfg)
+        assert m["world_elems"] == m["kv_elems"] + m["out_elems"]
+        for k, rel in m["hlo"].items():
+            assert (ART / rel).exists(), rel
+            assert int(k) in m["ladder"]
+        for k, rel in m["extract"].items():
+            assert (ART / rel).exists(), rel
+
+
+def test_weights_files_match_param_counts(manifest):
+    for name, m in manifest["models"].items():
+        w = np.fromfile(ART / m["weights"], "<f4")
+        assert w.size == m["param_count"], name
+        assert np.isfinite(w).all(), name
+        # trained weights are not all zeros / not untouched init
+        assert w.std() > 1e-3, name
+
+
+def test_hlo_is_text_with_alias(manifest):
+    """HLO artifacts must be text (xla 0.5.1 interchange) and block modules
+    must carry the world-donation alias (the §Perf optimization)."""
+    m = manifest["models"]["draft-tiny"]
+    txt = (ART / m["hlo"]["1"]).read_text()
+    assert txt.startswith("HloModule")
+    assert "input_output_alias" in txt.splitlines()[0]
+    ext = (ART / m["extract"]["1"]).read_text()
+    assert ext.startswith("HloModule")
+
+
+def test_prompts_suites(manifest):
+    prompts = json.loads((ART / "prompts.json").read_text())
+    assert set(prompts) == {"specbench", "mtbench", "humaneval", "alpaca"}
+    cats = {p["category"] for p in prompts["specbench"]}
+    assert cats == set(corpus.CATEGORIES)
+    for p in prompts["humaneval"]:
+        assert p["category"] == "coding"
+
+
+def test_golden_traces_are_replayable_in_python():
+    """The golden traces must be reproducible by the reference decoder
+    (guards against weight/corpus drift without re-running rust)."""
+    from compile import refspec
+
+    golden = json.loads((ART / "golden" / "pair-a.json").read_text())
+    dname, tname = golden["draft"], golden["target"]
+    draft = refspec.PyModel.load(dname, ART)
+    target = refspec.PyModel.load(tname, ART)
+    t = golden["traces"][0]
+    committed, rounds = refspec.spec_decode(
+        draft, target, t["prompt_ids"], max_new=golden["max_new"],
+        stop_after=golden["stop_after"],
+    )
+    assert committed == t["committed"]
+    assert [r["drafted"] for r in rounds] == t["drafted"]
+    assert [r["accepted"] for r in rounds] == t["accepted"]
+
+
+def test_classifier_export_shape():
+    path = ART / "specdecpp.json"
+    if not path.exists():
+        pytest.skip("classifier not trained")
+    c = json.loads(path.read_text())
+    n_feat = len(c["features"])
+    assert len(c["mean"]) == n_feat == len(c["std"])
+    assert len(c["layers"]) == c["blocks"] + 2
+    assert np.array(c["layers"][0]["w"]).shape == (n_feat, c["width"])
+    assert np.array(c["layers"][-1]["w"]).shape == (c["width"], 1)
+    assert 0.0 < c["threshold"] < 1.0
+    # trained: accuracy recorded and better than chance on its skewed data
+    assert c["train_stats"]["acc"] > 0.6

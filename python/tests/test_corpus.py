@@ -1,0 +1,77 @@
+"""TinyBench corpus generator tests."""
+
+import random
+
+import pytest
+
+from compile import corpus
+
+
+def test_vocab_size():
+    assert corpus.VOCAB_SIZE == len(corpus.SPECIALS) + len(corpus.ALPHABET)
+    assert len(set(corpus.ALPHABET)) == len(corpus.ALPHABET)
+
+
+def test_encode_decode_roundtrip():
+    txt = "def f(a, b):\n    return a + b  # 42!"
+    assert corpus.decode(corpus.encode(txt)) == txt
+
+
+@pytest.mark.parametrize("cat", corpus.CATEGORIES)
+def test_all_categories_generate_and_encode(cat):
+    rng = random.Random(5)
+    for _ in range(5):
+        s = corpus.sample(cat, rng)
+        ids = corpus.encode(s)
+        assert len(ids) > 20
+        # every char must be representable (encode is lossless here)
+        assert corpus.decode(ids) == s
+
+
+def test_determinism():
+    a = corpus.token_stream(42, 5000)
+    b = corpus.token_stream(42, 5000)
+    assert a == b
+    c = corpus.token_stream(43, 5000)
+    assert a != c
+
+
+def test_mix_skews_distribution():
+    """A skewed mixture should change the stream content."""
+    a = corpus.token_stream(1, 20000)
+    b = corpus.token_stream(1, 20000, mix={"coding": 0.0, "math": 0.0})
+    # 'def ' appears in coding samples only
+    sa = corpus.decode(a)
+    sb = corpus.decode(b)
+    assert sa.count("def ") > sb.count("def ")
+
+
+def test_suites_shape():
+    suites = corpus.build_suites(seed=7, per_cat=2)
+    assert set(suites) == {"specbench", "mtbench", "humaneval", "alpaca"}
+    assert len(suites["specbench"]) == 2 * len(corpus.CATEGORIES)
+    assert all(p.category == "coding" for p in suites["humaneval"])
+    cats = {p.category for p in suites["specbench"]}
+    assert cats == set(corpus.CATEGORIES)
+    for p in suites["specbench"]:
+        assert len(p.text) >= 16
+        assert p.max_new > 0
+
+
+def test_suites_json_roundtrip():
+    import json
+    suites = corpus.build_suites(seed=7, per_cat=1)
+    obj = json.loads(corpus.suites_to_json(suites))
+    assert set(obj) == set(suites)
+    assert obj["humaneval"][0]["category"] == "coding"
+
+
+def test_math_grammar_is_consistent():
+    """math samples contain correct arithmetic (the low-entropy guarantee)."""
+    rng = random.Random(9)
+    s = corpus.gen_math(rng)
+    for part in s.rstrip(".").split("; "):
+        lhs, rhs = part.split(" = ")
+        a, op, b = lhs.split()
+        v = {"+": int(a) + int(b), "*": int(a) * int(b), "-": int(a) - int(b)}[op]
+        assert v == int(rhs)

@@ -1,0 +1,115 @@
+"""L1 correctness: pallas fused stop-signal head vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/scales/distributions; targeted cases cover ties,
+saturated softmax, and tiny vocabularies.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels.ref import signal_head_ref
+from compile.kernels.signals import SIG_WIDTH, signal_head
+
+COLS = dict(argmax=0, top1=1, top2=2, margin=3, entropy=4, sqrt_entropy=5,
+            logsumexp=6, max_logit=7)
+
+
+def run_both(x: np.ndarray):
+    x = jnp.asarray(x, jnp.float32)
+    return np.asarray(signal_head(x)), np.asarray(signal_head_ref(x))
+
+
+@settings(max_examples=40, deadline=None,
+          suppress_health_check=[hypothesis.HealthCheck.too_slow])
+@given(
+    rows=st.integers(1, 12),
+    vocab=st.integers(2, 257),
+    scale=st.floats(0.01, 30.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref(rows, vocab, scale, seed):
+    x = np.random.RandomState(seed).randn(rows, vocab).astype(np.float32) * scale
+    a, b = run_both(x)
+    # sqrt amplifies fp32 cancellation noise near zero entropy: H ~ eps
+    # gives sqrt(H) errors of sqrt(eps); the policies' thresholds live at
+    # 0.2-0.8 so 2e-2 absolute noise there is immaterial.
+    np.testing.assert_allclose(a[:, :5], b[:, :5], atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(a[:, 5], b[:, 5], atol=2e-2, rtol=1e-3)
+    np.testing.assert_allclose(a[:, 6:], b[:, 6:], atol=2e-4, rtol=2e-4)
+
+
+def test_signal_semantics_uniform():
+    """Uniform logits: entropy = ln V, top1 = 1/V, margin = 0."""
+    v = 96
+    a, _ = run_both(np.zeros((3, v), np.float32))
+    np.testing.assert_allclose(a[:, COLS["entropy"]], np.log(v), atol=1e-5)
+    np.testing.assert_allclose(a[:, COLS["top1"]], 1.0 / v, atol=1e-6)
+    np.testing.assert_allclose(a[:, COLS["margin"]], 0.0, atol=1e-6)
+
+
+def test_signal_semantics_peaked():
+    """A huge single logit: entropy -> 0, top1 -> 1, argmax correct."""
+    x = np.zeros((1, 50), np.float32)
+    x[0, 17] = 60.0
+    a, _ = run_both(x)
+    assert int(a[0, COLS["argmax"]]) == 17
+    assert a[0, COLS["top1"]] > 0.999999
+    assert a[0, COLS["entropy"]] < 1e-4
+    assert a[0, COLS["sqrt_entropy"]] < 2e-2
+
+
+def test_two_way_tie():
+    """Exact two-way tie: top1 == top2 == ~0.5, margin == 0."""
+    x = np.full((1, 8), -5.0, np.float32)
+    x[0, 2] = x[0, 5] = 4.0
+    a, b = run_both(x)
+    np.testing.assert_allclose(a, b, atol=1e-5)
+    np.testing.assert_allclose(a[0, COLS["margin"]], 0.0, atol=1e-5)
+    assert abs(a[0, COLS["top1"]] - a[0, COLS["top2"]]) < 1e-5
+
+
+def test_large_negative_shift_invariance():
+    """Signals (except lse/max) are shift-invariant in the logits."""
+    x = np.random.RandomState(3).randn(4, 96).astype(np.float32)
+    a, _ = run_both(x)
+    c, _ = run_both(x + 1000.0)
+    np.testing.assert_allclose(a[:, :6], c[:, :6], atol=1e-3)
+
+
+def test_entropy_nonnegative_extremes():
+    rs = np.random.RandomState(11)
+    x = (rs.randn(16, 96) * 100).astype(np.float32)
+    a, _ = run_both(x)
+    assert (a[:, COLS["entropy"]] >= 0).all()
+    assert (a[:, COLS["sqrt_entropy"]] >= 0).all()
+    assert (a[:, COLS["top1"]] <= 1.0 + 1e-6).all()
+    assert (a[:, COLS["top2"]] <= a[:, COLS["top1"]] + 1e-6).all()
+
+
+def test_single_row_vocab96_golden():
+    """Pin one concrete case so kernel regressions are loud."""
+    rs = np.random.RandomState(0)
+    x = rs.randn(1, 96).astype(np.float32) * 2
+    a, b = run_both(x)
+    np.testing.assert_allclose(a, b, atol=1e-5)
+    p = np.exp(x[0] - x[0].max())
+    p /= p.sum()
+    np.testing.assert_allclose(a[0, COLS["top1"]], p.max(), atol=1e-5)
+    np.testing.assert_allclose(
+        a[0, COLS["entropy"]], -(p * np.log(p)).sum(), atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("rows", [1, 2, 7, 64])
+def test_row_independence(rows):
+    """Each row's signals depend only on that row."""
+    rs = np.random.RandomState(rows)
+    x = rs.randn(rows, 64).astype(np.float32)
+    a, _ = run_both(x)
+    for i in range(rows):
+        ai, _ = run_both(x[i: i + 1])
+        np.testing.assert_allclose(a[i], ai[0], atol=1e-5)

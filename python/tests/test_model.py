@@ -1,0 +1,156 @@
+"""L2 model tests: KV-cache block semantics, packing, masking invariants.
+
+Uses the smallest zoo config (draft-tiny) so every test traces in seconds.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import corpus, model
+
+CFG = model.MODEL_ZOO["draft-tiny"]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = model.init_params(CFG, seed=3)
+    w = jnp.asarray(model.pack_params(CFG, params))
+    fns = {k: jax.jit(model.make_block(CFG, k)) for k in (1, 4, 8)}
+    return params, w, fns
+
+
+def sig_rows(world, n):
+    out = np.asarray(world[CFG.kv_elems:]).reshape(model.OUT_ROWS, 8)
+    return out[:n]
+
+
+def test_pack_unpack_roundtrip(setup):
+    params, w, _ = setup
+    rec = model.unpack_params(CFG, w)
+    np.testing.assert_allclose(np.asarray(rec["emb"]), np.asarray(params["emb"]))
+    np.testing.assert_allclose(
+        np.asarray(rec["layers"][0]["w2"]), np.asarray(params["layers"][0]["w2"])
+    )
+    assert w.size == model.param_count(CFG)
+
+
+def test_block_matches_train_forward(setup):
+    """Parallel block over fresh world == training forward (same argmax +
+    same distribution stats)."""
+    params, w, fns = setup
+    toks = jnp.asarray(corpus.encode("q: where is")[:8], jnp.int32)
+    world = jnp.zeros((CFG.world_elems,), jnp.float32)
+    world = fns[8](w, world, toks, jnp.int32(0))
+    sig = sig_rows(world, 8)
+    logits = np.asarray(model.forward_train(CFG, params, toks[None])[0])
+    np.testing.assert_array_equal(sig[:, 0].astype(int), logits.argmax(-1))
+    # entropy of each position matches softmax entropy
+    p = jax.nn.softmax(logits, -1)
+    ent = -(p * np.log(p + 1e-30)).sum(-1)
+    np.testing.assert_allclose(sig[:, 4], ent, atol=1e-3)
+
+
+def test_incremental_equals_parallel(setup):
+    """Feeding tokens one at a time through the KV cache must equal one
+    parallel block — the core KV correctness invariant."""
+    _, w, fns = setup
+    toks = corpus.encode("translate: red cat")[:12]
+    world_p = fns[8](w, jnp.zeros((CFG.world_elems,), jnp.float32),
+                     jnp.asarray(toks[:8], jnp.int32), jnp.int32(0))
+    ref = sig_rows(world_p, 8)
+
+    world = jnp.zeros((CFG.world_elems,), jnp.float32)
+    got = []
+    for i, t in enumerate(toks[:8]):
+        world = fns[1](w, world, jnp.asarray([t], jnp.int32), jnp.int32(i))
+        got.append(sig_rows(world, 1)[0])
+    np.testing.assert_allclose(np.stack(got), ref, atol=1e-4)
+
+
+def test_mixed_block_sizes(setup):
+    """4 + 1 + 1 + ... split must equal the parallel result too."""
+    _, w, fns = setup
+    toks = corpus.encode("12 + 34 = 46")[:6]
+    world_p = fns[8](w, jnp.zeros((CFG.world_elems,), jnp.float32),
+                     jnp.asarray(toks + [0, 0], jnp.int32), jnp.int32(0))
+    ref = sig_rows(world_p, 6)
+
+    world = jnp.zeros((CFG.world_elems,), jnp.float32)
+    world = fns[4](w, world, jnp.asarray(toks[:4], jnp.int32), jnp.int32(0))
+    a = sig_rows(world, 4)
+    world = fns[1](w, world, jnp.asarray(toks[4:5], jnp.int32), jnp.int32(4))
+    b = sig_rows(world, 1)
+    world = fns[1](w, world, jnp.asarray(toks[5:6], jnp.int32), jnp.int32(5))
+    c = sig_rows(world, 1)
+    np.testing.assert_allclose(np.vstack([a, b[:1], c[:1]]), ref, atol=1e-4)
+
+
+def test_padding_rows_do_not_affect_prefix(setup):
+    """Right padding in a bucket must not change earlier rows (causality)."""
+    _, w, fns = setup
+    toks = corpus.encode("abc")
+    w1 = fns[8](w, jnp.zeros((CFG.world_elems,), jnp.float32),
+                jnp.asarray(toks + [0] * 5, jnp.int32), jnp.int32(0))
+    w2 = fns[8](w, jnp.zeros((CFG.world_elems,), jnp.float32),
+                jnp.asarray(toks + [9] * 5, jnp.int32), jnp.int32(0))
+    np.testing.assert_allclose(sig_rows(w1, 3), sig_rows(w2, 3), atol=1e-6)
+
+
+def test_stale_kv_beyond_cursor_is_harmless(setup):
+    """Garbage KV at positions >= the write cursor is never read: rewriting
+    positions 2.. after polluting them must give the parallel result."""
+    _, w, fns = setup
+    toks = corpus.encode("the quiet")[:8]
+    ref = sig_rows(
+        fns[8](w, jnp.zeros((CFG.world_elems,), jnp.float32),
+               jnp.asarray(toks, jnp.int32), jnp.int32(0)), 8)
+
+    world = jnp.zeros((CFG.world_elems,), jnp.float32)
+    world = fns[4](w, world, jnp.asarray(toks[:4], jnp.int32), jnp.int32(0))
+    # pollute: draft 4 wrong tokens at positions 4..8, then "roll back"
+    world = fns[4](w, world, jnp.asarray([17, 18, 19, 20], jnp.int32), jnp.int32(4))
+    # re-feed the true continuation at position 4
+    world = fns[4](w, world, jnp.asarray(toks[4:8], jnp.int32), jnp.int32(4))
+    got = sig_rows(world, 4)
+    np.testing.assert_allclose(got, ref[4:8], atol=1e-4)
+
+
+def test_world_elems_layout():
+    assert CFG.world_elems == CFG.kv_elems + model.OUT_ROWS * 8
+    assert CFG.kv_elems == CFG.n_layers * 2 * CFG.max_seq * CFG.d_model
+
+
+def test_zoo_configs_consistent():
+    for name, cfg in model.MODEL_ZOO.items():
+        assert cfg.name == name
+        assert cfg.d_model % cfg.n_heads == 0
+        assert cfg.vocab == corpus.VOCAB_SIZE
+    for pair, (d, t) in model.PAIRS.items():
+        assert d in model.MODEL_ZOO and t in model.MODEL_ZOO
+        assert model.param_count(model.MODEL_ZOO[d]) < model.param_count(
+            model.MODEL_ZOO[t]
+        ), pair
+
+
+def test_loss_decreases_quickly():
+    """Tiny sanity training run: loss must drop on a repetitive stream."""
+    import numpy as np
+    from compile import train
+    cfg = model.ModelConfig("t", d_model=32, n_layers=1, n_heads=1,
+                            train_seq=32, train_batch=8)
+    stream = np.array(corpus.token_stream(0, 20000), np.int32)
+    rng = np.random.RandomState(0)
+    gen = train.batches(stream, rng, 8, 32)
+    params = model.init_params(cfg, 0)
+    opt = train.adam_init(params)
+    import jax
+    step = jax.jit(lambda p, o, t: (lambda l, g: train.adam_update(p, g, o, 3e-3) + (l,))(
+        *jax.value_and_grad(lambda q: model.loss_fn(cfg, q, t))(p)))
+    l0 = None
+    for i in range(30):
+        params, opt, loss = step(params, opt, jnp.asarray(next(gen)))
+        if i == 0:
+            l0 = float(loss)
+    assert float(loss) < l0 * 0.8

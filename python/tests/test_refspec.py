@@ -1,0 +1,94 @@
+"""Reference speculative decoder invariants (untrained tiny models — these
+tests exercise the algorithm, not the zoo weights; artifact-dependent tests
+live in test_artifacts.py)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import corpus, model, refspec
+
+
+def make_py_model(seed: int, name: str = "draft-tiny") -> refspec.PyModel:
+    cfg = model.MODEL_ZOO[name]
+    params = model.init_params(cfg, seed=seed)
+    return refspec.PyModel(cfg, model.pack_params(cfg, params))
+
+
+@pytest.fixture(scope="module")
+def pair():
+    # untrained but *distinct* models: acceptance is low but well-defined
+    return make_py_model(1), make_py_model(2)
+
+
+@pytest.fixture(scope="module")
+def self_pair():
+    # identical weights: draft == target, everything must be accepted
+    return make_py_model(7), make_py_model(7)
+
+
+PROMPT = [corpus.BOS] + corpus.encode("q: where is alice? a:")
+
+
+def test_spec_equals_greedy(pair):
+    """THE invariant: greedy spec decode == target-only greedy decode."""
+    draft, target = pair
+    committed, _ = refspec.spec_decode(draft, target, PROMPT, max_new=24,
+                                       stop_after=4)
+    oracle_model = make_py_model(2)
+    oracle = refspec.greedy_decode(oracle_model, PROMPT, max_new=24)
+    n = min(len(committed), len(oracle))
+    assert committed[:n] == oracle[:n]
+
+
+def test_self_speculation_accepts_everything(self_pair):
+    """Draft == target => every drafted token accepted in every round."""
+    draft, target = self_pair
+    committed, rounds = refspec.spec_decode(draft, target, PROMPT, max_new=16,
+                                            stop_after=4)
+    assert len(rounds) >= 1
+    for r in rounds[:-1]:
+        assert r["accepted"] == r["drafted"]
+    assert len(committed) >= len(PROMPT) + 16
+
+
+def test_rounds_bookkeeping(pair):
+    draft, target = pair
+    committed, rounds = refspec.spec_decode(draft, target, PROMPT, max_new=20,
+                                            stop_after=5)
+    new = len(committed) - len(PROMPT)
+    # each round commits accepted + 1 bonus token
+    total = sum(r["accepted"] + 1 for r in rounds)
+    assert total == new
+    for r in rounds:
+        assert 0 <= r["accepted"] <= r["drafted"] <= 5
+        assert len(r["signals"]) == r["drafted"]
+        assert len(r["labels"]) == r["drafted"]
+        assert sum(r["labels"]) == r["accepted"]
+        # labels are a prefix of accepts followed by rejects
+        assert r["labels"] == sorted(r["labels"], reverse=True)
+
+
+def test_signals_match_policy_semantics(pair):
+    """Signal rows carry sane probabilities."""
+    draft, target = pair
+    _, rounds = refspec.spec_decode(draft, target, PROMPT, max_new=12,
+                                    stop_after=6)
+    for r in rounds:
+        for sig in r["signals"]:
+            argmax, top1, top2, margin, ent, sqent = sig[:6]
+            assert 0 <= argmax < corpus.VOCAB_SIZE
+            assert 0 < top1 <= 1.0 + 1e-6
+            assert 0 <= top2 <= top1 + 1e-6
+            assert abs(margin - (top1 - top2)) < 1e-5
+            assert ent >= -1e-6
+            assert abs(sqent - np.sqrt(max(ent, 0))) < 1e-4
+
+
+def test_max_seq_headroom_respected(pair):
+    """Generation near MAX_SEQ must not write beyond the KV buffer."""
+    draft, target = pair
+    long_prompt = [corpus.BOS] + corpus.encode("x = 1; " * 52)  # ~360 tokens
+    committed, rounds = refspec.spec_decode(draft, target, long_prompt,
+                                            max_new=64, stop_after=8)
+    assert len(committed) <= model.MAX_SEQ

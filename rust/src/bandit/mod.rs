@@ -1,0 +1,98 @@
+//! Multi-armed bandits (paper §3) — UCB1, UCB-Tuned, Thompson Sampling —
+//! and the sequence/token-level TapOut controllers that bind bandits to the
+//! arm-policy pool.
+
+pub mod controller;
+pub mod thompson;
+pub mod ucb1;
+pub mod ucb_tuned;
+
+pub use controller::{Reward, SeqBandit, TokenBandit};
+pub use thompson::{BetaTs, GaussianTs};
+pub use ucb1::Ucb1;
+pub use ucb_tuned::UcbTuned;
+
+use crate::util::Rng;
+
+/// A stochastic multi-armed bandit over a fixed arm set.
+pub trait Bandit: Send {
+    fn n_arms(&self) -> usize;
+
+    /// Choose an arm to play.
+    fn select(&mut self, rng: &mut Rng) -> usize;
+
+    /// Observe `reward` (in [0, 1]) for `arm`.
+    fn update(&mut self, arm: usize, reward: f64);
+
+    /// Interpretable per-arm value estimates (the paper's μ_i readout,
+    /// Figs. 5-6). For TS this is the posterior mean.
+    fn values(&self) -> Vec<f64>;
+
+    fn counts(&self) -> Vec<u64>;
+
+    fn name(&self) -> String;
+
+    /// Forget everything (fresh request stream).
+    fn reset(&mut self);
+}
+
+pub type BoxedBandit = Box<dyn Bandit>;
+
+/// Factory used by the experiment harness ("ucb1" | "ucb-tuned" |
+/// "ts-gaussian" | "ts-beta").
+pub fn make_bandit(kind: &str, n_arms: usize) -> BoxedBandit {
+    match kind {
+        "ucb1" => Box::new(Ucb1::new(n_arms)),
+        "ucb-tuned" => Box::new(UcbTuned::new(n_arms)),
+        "ts-gaussian" => Box::new(GaussianTs::new(n_arms)),
+        "ts-beta" => Box::new(BetaTs::new(n_arms)),
+        other => panic!("unknown bandit kind: {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Shared regret smoke-test: every bandit should concentrate on the
+    /// best of three Bernoulli arms (0.2 / 0.5 / 0.8).
+    fn check_concentrates(mut b: BoxedBandit) {
+        let ps = [0.2, 0.5, 0.8];
+        let mut rng = Rng::new(7);
+        for _ in 0..3000 {
+            let a = b.select(&mut rng);
+            let r = if rng.bool(ps[a]) { 1.0 } else { 0.0 };
+            b.update(a, r);
+        }
+        let counts = b.counts();
+        let best = counts[2];
+        assert!(
+            best > counts[0] * 2 && best > counts[1] * 2,
+            "{}: counts {counts:?}",
+            b.name()
+        );
+        let vals = b.values();
+        assert!(vals[2] > vals[0], "{}: values {vals:?}", b.name());
+    }
+
+    #[test]
+    fn all_bandits_concentrate_on_best_arm() {
+        for kind in ["ucb1", "ucb-tuned", "ts-gaussian", "ts-beta"] {
+            check_concentrates(make_bandit(kind, 3));
+        }
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        for kind in ["ucb1", "ucb-tuned", "ts-gaussian", "ts-beta"] {
+            let mut b = make_bandit(kind, 2);
+            let mut rng = Rng::new(1);
+            for _ in 0..50 {
+                let a = b.select(&mut rng);
+                b.update(a, 1.0);
+            }
+            b.reset();
+            assert_eq!(b.counts(), vec![0, 0], "{kind}");
+        }
+    }
+}

@@ -1,0 +1,186 @@
+//! Thompson Sampling (paper §3.3):
+//!   * `BetaTs` — Beta-Bernoulli posterior for the token-level bandit's
+//!     binary accept/reject rewards;
+//!   * `GaussianTs` — known-noise-variance Gaussian conjugate posterior for
+//!     the sequence-level bandit's continuous r ∈ [0, 1] rewards.
+
+use super::Bandit;
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct BetaTs {
+    alpha: Vec<f64>,
+    beta: Vec<f64>,
+    counts: Vec<u64>,
+}
+
+impl BetaTs {
+    pub fn new(n_arms: usize) -> Self {
+        BetaTs { alpha: vec![1.0; n_arms], beta: vec![1.0; n_arms], counts: vec![0; n_arms] }
+    }
+}
+
+impl Bandit for BetaTs {
+    fn n_arms(&self) -> usize {
+        self.counts.len()
+    }
+
+    fn select(&mut self, rng: &mut Rng) -> usize {
+        let mut best = 0;
+        let mut best_v = f64::NEG_INFINITY;
+        for a in 0..self.n_arms() {
+            let v = rng.beta(self.alpha[a], self.beta[a]);
+            if v > best_v {
+                best_v = v;
+                best = a;
+            }
+        }
+        best
+    }
+
+    fn update(&mut self, arm: usize, reward: f64) {
+        // fractional rewards are treated as soft Bernoulli evidence
+        let r = reward.clamp(0.0, 1.0);
+        self.alpha[arm] += r;
+        self.beta[arm] += 1.0 - r;
+        self.counts[arm] += 1;
+    }
+
+    fn values(&self) -> Vec<f64> {
+        self.alpha
+            .iter()
+            .zip(&self.beta)
+            .map(|(&a, &b)| a / (a + b))
+            .collect()
+    }
+
+    fn counts(&self) -> Vec<u64> {
+        self.counts.clone()
+    }
+
+    fn name(&self) -> String {
+        "ts-beta".into()
+    }
+
+    fn reset(&mut self) {
+        self.alpha.iter_mut().for_each(|x| *x = 1.0);
+        self.beta.iter_mut().for_each(|x| *x = 1.0);
+        self.counts.iter_mut().for_each(|x| *x = 0);
+    }
+}
+
+/// Gaussian TS with known observation noise σ² and prior N(μ0, s0²).
+/// Posterior after n observations with sum S:
+///   precision  ρ = 1/s0² + n/σ²
+///   mean       μ = (μ0/s0² + S/σ²) / ρ
+#[derive(Clone, Debug)]
+pub struct GaussianTs {
+    mu0: f64,
+    s0sq: f64,
+    noise_sq: f64,
+    sums: Vec<f64>,
+    counts: Vec<u64>,
+}
+
+impl GaussianTs {
+    pub fn new(n_arms: usize) -> Self {
+        // prior centred mid-range over the [0,1] reward; noise matched to
+        // the empirical spread of r_blend
+        GaussianTs {
+            mu0: 0.5,
+            s0sq: 0.25,
+            noise_sq: 0.05,
+            sums: vec![0.0; n_arms],
+            counts: vec![0; n_arms],
+        }
+    }
+
+    fn posterior(&self, a: usize) -> (f64, f64) {
+        let rho = 1.0 / self.s0sq + self.counts[a] as f64 / self.noise_sq;
+        let mu = (self.mu0 / self.s0sq + self.sums[a] / self.noise_sq) / rho;
+        (mu, 1.0 / rho)
+    }
+}
+
+impl Bandit for GaussianTs {
+    fn n_arms(&self) -> usize {
+        self.counts.len()
+    }
+
+    fn select(&mut self, rng: &mut Rng) -> usize {
+        let mut best = 0;
+        let mut best_v = f64::NEG_INFINITY;
+        for a in 0..self.n_arms() {
+            let (mu, var) = self.posterior(a);
+            let v = rng.normal_scaled(mu, var.sqrt());
+            if v > best_v {
+                best_v = v;
+                best = a;
+            }
+        }
+        best
+    }
+
+    fn update(&mut self, arm: usize, reward: f64) {
+        self.sums[arm] += reward;
+        self.counts[arm] += 1;
+    }
+
+    fn values(&self) -> Vec<f64> {
+        (0..self.n_arms()).map(|a| self.posterior(a).0).collect()
+    }
+
+    fn counts(&self) -> Vec<u64> {
+        self.counts.clone()
+    }
+
+    fn name(&self) -> String {
+        "ts-gaussian".into()
+    }
+
+    fn reset(&mut self) {
+        self.sums.iter_mut().for_each(|x| *x = 0.0);
+        self.counts.iter_mut().for_each(|x| *x = 0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn beta_posterior_mean_tracks_data() {
+        let mut b = BetaTs::new(2);
+        for _ in 0..100 {
+            b.update(0, 1.0);
+            b.update(1, 0.0);
+        }
+        let v = b.values();
+        assert!(v[0] > 0.95 && v[1] < 0.05, "{v:?}");
+    }
+
+    #[test]
+    fn gaussian_posterior_shrinks_towards_data() {
+        let mut g = GaussianTs::new(1);
+        let (mu_prior, var_prior) = g.posterior(0);
+        assert!((mu_prior - 0.5).abs() < 1e-12);
+        for _ in 0..200 {
+            g.update(0, 0.9);
+        }
+        let (mu, var) = g.posterior(0);
+        assert!((mu - 0.9).abs() < 0.02, "posterior mean {mu}");
+        assert!(var < var_prior / 50.0, "posterior variance must shrink");
+    }
+
+    #[test]
+    fn gaussian_ts_explores_under_uncertainty() {
+        // with no data, selections should be spread across arms
+        let mut g = GaussianTs::new(4);
+        let mut rng = Rng::new(3);
+        let mut seen = [0u32; 4];
+        for _ in 0..400 {
+            seen[g.select(&mut rng)] += 1;
+        }
+        assert!(seen.iter().all(|&c| c > 40), "{seen:?}");
+    }
+}

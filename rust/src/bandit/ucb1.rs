@@ -1,0 +1,125 @@
+//! UCB1 (Auer et al., 2002) — the paper's headline controller
+//! ("TapOut - Seq UCB1"):  a_t = argmax_a  μ̂_a + sqrt(2 ln t / N_a).
+
+use super::Bandit;
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Ucb1 {
+    sums: Vec<f64>,
+    counts: Vec<u64>,
+    t: u64,
+}
+
+impl Ucb1 {
+    pub fn new(n_arms: usize) -> Self {
+        assert!(n_arms >= 1);
+        Ucb1 { sums: vec![0.0; n_arms], counts: vec![0; n_arms], t: 0 }
+    }
+
+    pub fn ucb(&self, arm: usize) -> f64 {
+        if self.counts[arm] == 0 {
+            return f64::INFINITY;
+        }
+        let mean = self.sums[arm] / self.counts[arm] as f64;
+        mean + (2.0 * (self.t.max(1) as f64).ln() / self.counts[arm] as f64).sqrt()
+    }
+}
+
+impl Bandit for Ucb1 {
+    fn n_arms(&self) -> usize {
+        self.counts.len()
+    }
+
+    fn select(&mut self, _rng: &mut Rng) -> usize {
+        // play each arm once first, then maximize the UCB index
+        if let Some(a) = self.counts.iter().position(|&c| c == 0) {
+            return a;
+        }
+        let mut best = 0;
+        let mut best_v = f64::NEG_INFINITY;
+        for a in 0..self.n_arms() {
+            let v = self.ucb(a);
+            if v > best_v {
+                best_v = v;
+                best = a;
+            }
+        }
+        best
+    }
+
+    fn update(&mut self, arm: usize, reward: f64) {
+        self.t += 1;
+        self.counts[arm] += 1;
+        self.sums[arm] += reward;
+    }
+
+    fn values(&self) -> Vec<f64> {
+        self.sums
+            .iter()
+            .zip(&self.counts)
+            .map(|(&s, &c)| if c == 0 { 0.0 } else { s / c as f64 })
+            .collect()
+    }
+
+    fn counts(&self) -> Vec<u64> {
+        self.counts.clone()
+    }
+
+    fn name(&self) -> String {
+        "ucb1".into()
+    }
+
+    fn reset(&mut self) {
+        self.sums.iter_mut().for_each(|x| *x = 0.0);
+        self.counts.iter_mut().for_each(|x| *x = 0);
+        self.t = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plays_every_arm_once_first() {
+        let mut b = Ucb1::new(4);
+        let mut rng = Rng::new(0);
+        let mut seen = vec![false; 4];
+        for _ in 0..4 {
+            let a = b.select(&mut rng);
+            assert!(!seen[a], "arm {a} repeated before all arms tried");
+            seen[a] = true;
+            b.update(a, 0.5);
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn exploration_bonus_decays_with_count() {
+        let mut b = Ucb1::new(2);
+        let mut rng = Rng::new(0);
+        for _ in 0..2 {
+            let a = b.select(&mut rng);
+            b.update(a, 0.5);
+        }
+        let u0 = b.ucb(0);
+        for _ in 0..50 {
+            b.update(0, 0.5);
+        }
+        assert!(b.ucb(0) < u0, "bonus should shrink as N_a grows");
+        // arm 1 (unplayed since) now has the larger index
+        assert!(b.ucb(1) > b.ucb(0));
+    }
+
+    #[test]
+    fn values_are_empirical_means() {
+        let mut b = Ucb1::new(2);
+        b.update(0, 1.0);
+        b.update(0, 0.0);
+        b.update(1, 0.25);
+        let v = b.values();
+        assert!((v[0] - 0.5).abs() < 1e-12);
+        assert!((v[1] - 0.25).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,127 @@
+//! UCB-Tuned (Auer et al., 2002 §4) — variance-aware exploration, ablated
+//! against UCB1 in paper §4.1.3 (Fig. 4):
+//!   index = μ̂_a + sqrt( (ln t / N_a) · min(1/4, V_a(t)) )
+//!   V_a(t) = σ̂²_a + sqrt(2 ln t / N_a)
+
+use super::Bandit;
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct UcbTuned {
+    sums: Vec<f64>,
+    sumsq: Vec<f64>,
+    counts: Vec<u64>,
+    t: u64,
+}
+
+impl UcbTuned {
+    pub fn new(n_arms: usize) -> Self {
+        assert!(n_arms >= 1);
+        UcbTuned {
+            sums: vec![0.0; n_arms],
+            sumsq: vec![0.0; n_arms],
+            counts: vec![0; n_arms],
+            t: 0,
+        }
+    }
+
+    fn mean(&self, a: usize) -> f64 {
+        self.sums[a] / self.counts[a] as f64
+    }
+
+    pub fn variance_bound(&self, a: usize) -> f64 {
+        let n = self.counts[a] as f64;
+        let mean = self.mean(a);
+        let var = (self.sumsq[a] / n - mean * mean).max(0.0);
+        var + (2.0 * (self.t.max(1) as f64).ln() / n).sqrt()
+    }
+
+    pub fn index(&self, a: usize) -> f64 {
+        if self.counts[a] == 0 {
+            return f64::INFINITY;
+        }
+        let n = self.counts[a] as f64;
+        let lnt = (self.t.max(1) as f64).ln();
+        self.mean(a) + (lnt / n * self.variance_bound(a).min(0.25)).sqrt()
+    }
+}
+
+impl Bandit for UcbTuned {
+    fn n_arms(&self) -> usize {
+        self.counts.len()
+    }
+
+    fn select(&mut self, _rng: &mut Rng) -> usize {
+        if let Some(a) = self.counts.iter().position(|&c| c == 0) {
+            return a;
+        }
+        (0..self.n_arms())
+            .max_by(|&a, &b| self.index(a).partial_cmp(&self.index(b)).unwrap())
+            .unwrap()
+    }
+
+    fn update(&mut self, arm: usize, reward: f64) {
+        self.t += 1;
+        self.counts[arm] += 1;
+        self.sums[arm] += reward;
+        self.sumsq[arm] += reward * reward;
+    }
+
+    fn values(&self) -> Vec<f64> {
+        self.sums
+            .iter()
+            .zip(&self.counts)
+            .map(|(&s, &c)| if c == 0 { 0.0 } else { s / c as f64 })
+            .collect()
+    }
+
+    fn counts(&self) -> Vec<u64> {
+        self.counts.clone()
+    }
+
+    fn name(&self) -> String {
+        "ucb-tuned".into()
+    }
+
+    fn reset(&mut self) {
+        self.sums.iter_mut().for_each(|x| *x = 0.0);
+        self.sumsq.iter_mut().for_each(|x| *x = 0.0);
+        self.counts.iter_mut().for_each(|x| *x = 0);
+        self.t = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn low_variance_arm_gets_smaller_bonus() {
+        let mut b = UcbTuned::new(2);
+        // arm 0: constant 0.5 (zero variance); arm 1: alternating 0/1.
+        // needs enough plays that the sqrt(2 ln t / n) slack in V_a falls
+        // below the 1/4 cap for the low-variance arm.
+        for i in 0..2000 {
+            b.update(0, 0.5);
+            b.update(1, (i % 2) as f64);
+        }
+        let bonus0 = b.index(0) - 0.5;
+        let bonus1 = b.index(1) - 0.5;
+        assert!(
+            bonus1 > bonus0,
+            "high-variance arm should keep a larger bonus: {bonus0} vs {bonus1}"
+        );
+    }
+
+    #[test]
+    fn variance_bound_capped_at_quarter_in_index() {
+        let mut b = UcbTuned::new(1);
+        for i in 0..100 {
+            b.update(0, (i % 2) as f64); // max-variance Bernoulli
+        }
+        // index uses min(1/4, V) — bonus must not exceed sqrt(ln t / n * 1/4)
+        let lnt = (b.t as f64).ln();
+        let cap = (lnt / 100.0 * 0.25).sqrt();
+        assert!(b.index(0) - 0.5 <= cap + 1e-12);
+    }
+}

@@ -1,0 +1,152 @@
+//! Minimal HTTP/1.1 JSON API over std::net (offline stand-in for a web
+//! framework). Routes:
+//!
+//!   GET  /health              -> {"ok": true, ...}
+//!   GET  /metrics             -> aggregated serving metrics
+//!   POST /generate            -> {"prompt": "...", "max_new": 64}
+//!
+//! One thread per connection; the engine worker serializes decoding.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::util::Json;
+
+use super::server::Engine;
+
+pub struct HttpServer {
+    pub addr: String,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind and serve in background threads. Port 0 picks a free port.
+    pub fn start(engine: Arc<Engine>, port: u16) -> Result<HttpServer> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let addr = listener.local_addr()?.to_string();
+        let handle = std::thread::Builder::new()
+            .name("tapout-http".into())
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    let Ok(stream) = stream else { continue };
+                    let eng = engine.clone();
+                    std::thread::spawn(move || {
+                        let _ = handle_conn(stream, &eng);
+                    });
+                }
+            })?;
+        Ok(HttpServer { addr, handle: Some(handle) })
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        // listener thread exits with the process; detach
+        if let Some(h) = self.handle.take() {
+            drop(h);
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, engine: &Engine) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("/").to_string();
+
+    // headers
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
+            content_length = v.trim().parse().unwrap_or(0);
+        }
+    }
+    let mut body = vec![0u8; content_length.min(1 << 20)];
+    if content_length > 0 {
+        reader.read_exact(&mut body)?;
+    }
+    let body = String::from_utf8_lossy(&body).to_string();
+
+    let (status, payload) = route(engine, &method, &path, &body);
+    respond(stream, status, &payload.render())
+}
+
+fn route(engine: &Engine, method: &str, path: &str, body: &str) -> (u16, Json) {
+    match (method, path) {
+        ("GET", "/health") => {
+            let mut o = Json::obj();
+            o.set("ok", true)
+                .set("pair", engine.config.pair.as_str())
+                .set("method", engine.config.method.as_str());
+            (200, o)
+        }
+        ("GET", "/metrics") => (200, engine.metrics.lock().unwrap().to_json()),
+        ("POST", "/generate") => match Json::parse(body) {
+            Ok(req) => {
+                let prompt = req.get("prompt").and_then(|x| x.as_str()).unwrap_or("");
+                if prompt.is_empty() {
+                    let mut o = Json::obj();
+                    o.set("error", "missing prompt");
+                    return (400, o);
+                }
+                let max_new = req.get("max_new").and_then(|x| x.as_usize()).unwrap_or(96);
+                let rx = engine.submit(prompt, max_new.min(256));
+                match rx.recv_timeout(std::time::Duration::from_secs(120)) {
+                    Ok(resp) => {
+                        let mut o = Json::obj();
+                        o.set("id", resp.id as usize)
+                            .set("text", resp.text.as_str())
+                            .set("new_tokens", resp.result.new_tokens().len())
+                            .set("mean_accepted", resp.result.mean_accepted())
+                            .set("acceptance_rate", resp.result.acceptance_rate())
+                            .set("decode_ms", resp.result.wall_ns as f64 / 1e6)
+                            .set("tokens_per_sec", resp.tokens_per_sec());
+                        (200, o)
+                    }
+                    Err(_) => {
+                        let mut o = Json::obj();
+                        o.set("error", "generation timed out or failed");
+                        (500, o)
+                    }
+                }
+            }
+            Err(e) => {
+                let mut o = Json::obj();
+                o.set("error", format!("bad json: {e}"));
+                (400, o)
+            }
+        },
+        _ => {
+            let mut o = Json::obj();
+            o.set("error", "not found");
+            (404, o)
+        }
+    }
+}
+
+fn respond(mut stream: TcpStream, status: u16, body: &str) -> Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        _ => "Internal Server Error",
+    };
+    write!(
+        stream,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()?;
+    Ok(())
+}

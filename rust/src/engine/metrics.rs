@@ -1,0 +1,133 @@
+//! Serving metrics: per-request records aggregated into the latency /
+//! throughput report the end-to-end example prints (TTFT ≈ queue + prefill
+//! + first verified commit; TPOT = decode time per generated token).
+
+use crate::util::stats::Samples;
+use crate::util::Json;
+
+use super::request::Response;
+
+#[derive(Debug, Default)]
+pub struct EngineMetrics {
+    pub completed: u64,
+    pub new_tokens: u64,
+    pub drafted: u64,
+    pub accepted: u64,
+    pub queue_ms: Samples,
+    pub total_ms: Samples,
+    pub decode_ms: Samples,
+    pub tpot_ms: Samples,
+    pub ttft_ms: Samples,
+    /// wall-clock span covered by the record stream (throughput basis)
+    pub span_ns: u64,
+}
+
+impl EngineMetrics {
+    pub fn record(&mut self, r: &Response) {
+        self.completed += 1;
+        self.new_tokens += r.result.new_tokens().len() as u64;
+        self.drafted += r.result.drafted() as u64;
+        self.accepted += r.result.accepted() as u64;
+        self.queue_ms.push(r.queue_ns as f64 / 1e6);
+        self.total_ms.push(r.total_ns as f64 / 1e6);
+        self.decode_ms.push(r.result.wall_ns as f64 / 1e6);
+        let n = r.result.new_tokens().len().max(1) as f64;
+        self.tpot_ms.push(r.result.wall_ns as f64 / 1e6 / n);
+        // first commit ≈ first round (prefill + draft + verify) + queueing
+        let first_round_ns = r
+            .result
+            .rounds
+            .first()
+            .map(|x| x.draft_ns + x.verify_ns)
+            .unwrap_or(r.result.wall_ns);
+        self.ttft_ms.push((r.queue_ns + first_round_ns) as f64 / 1e6);
+    }
+
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted == 0 { 0.0 } else { self.accepted as f64 / self.drafted as f64 }
+    }
+
+    pub fn throughput_tok_s(&self) -> f64 {
+        if self.span_ns == 0 {
+            return 0.0;
+        }
+        self.new_tokens as f64 / (self.span_ns as f64 / 1e9)
+    }
+
+    pub fn report(&mut self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "requests: {}   generated tokens: {}   acceptance: {:.2}\n",
+            self.completed,
+            self.new_tokens,
+            self.acceptance_rate()
+        ));
+        if self.span_ns > 0 {
+            s.push_str(&format!("throughput: {:.1} tok/s\n", self.throughput_tok_s()));
+        }
+        let mut line = |name: &str, smp: &mut Samples| {
+            format!(
+                "{name:<10} mean {:>8.2} ms   p50 {:>8.2}   p95 {:>8.2}   p99 {:>8.2}\n",
+                smp.mean(),
+                smp.percentile(50.0),
+                smp.percentile(95.0),
+                smp.percentile(99.0)
+            )
+        };
+        let q = line("queue", &mut self.queue_ms);
+        let t = line("ttft", &mut self.ttft_ms);
+        let d = line("decode", &mut self.decode_ms);
+        let p = line("tpot", &mut self.tpot_ms);
+        let e = line("e2e", &mut self.total_ms);
+        s.push_str(&q);
+        s.push_str(&t);
+        s.push_str(&d);
+        s.push_str(&p);
+        s.push_str(&e);
+        s
+    }
+
+    pub fn to_json(&mut self) -> Json {
+        let mut o = Json::obj();
+        o.set("completed", self.completed as usize)
+            .set("new_tokens", self.new_tokens as usize)
+            .set("acceptance_rate", self.acceptance_rate())
+            .set("throughput_tok_s", self.throughput_tok_s())
+            .set("ttft_p50_ms", self.ttft_ms.percentile(50.0))
+            .set("ttft_p99_ms", self.ttft_ms.percentile(99.0))
+            .set("tpot_mean_ms", self.tpot_ms.mean())
+            .set("e2e_p50_ms", self.total_ms.percentile(50.0))
+            .set("e2e_p99_ms", self.total_ms.percentile(99.0));
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::GenResult;
+
+    fn resp(id: u64, tokens: usize, wall_ms: u64) -> Response {
+        let mut result = GenResult::default();
+        result.tokens = vec![0; tokens + 4];
+        result.prompt_len = 4;
+        result.wall_ns = wall_ms * 1_000_000;
+        Response { id, text: String::new(), result, queue_ns: 1_000_000, total_ns: wall_ms * 1_000_000 + 1_000_000 }
+    }
+
+    #[test]
+    fn aggregates_and_reports() {
+        let mut m = EngineMetrics::default();
+        m.record(&resp(1, 10, 20));
+        m.record(&resp(2, 30, 30));
+        m.span_ns = 1_000_000_000;
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.new_tokens, 40);
+        assert!((m.throughput_tok_s() - 40.0).abs() < 1e-9);
+        let rep = m.report();
+        assert!(rep.contains("requests: 2"));
+        assert!(rep.contains("tpot"));
+        let j = m.to_json();
+        assert_eq!(j.get("completed").unwrap().as_usize().unwrap(), 2);
+    }
+}

@@ -1,0 +1,17 @@
+//! Serving layer (the vLLM-router-shaped part of L3): request types,
+//! admission scheduler, KV slot pool, the engine worker with persistent
+//! online bandit state, serving metrics, and a minimal HTTP JSON API.
+
+pub mod http;
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+pub mod server;
+pub mod slots;
+
+pub use http::HttpServer;
+pub use metrics::EngineMetrics;
+pub use request::{Request, Response};
+pub use scheduler::{Policy, Scheduler};
+pub use server::{Engine, EngineConfig};
+pub use slots::{Slot, SlotPool};

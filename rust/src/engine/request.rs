@@ -1,0 +1,47 @@
+//! Request/response types for the serving engine.
+
+use std::time::Instant;
+
+use crate::spec::GenResult;
+
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt_text: String,
+    /// pre-encoded prompt (BOS included); filled by the engine if empty
+    pub prompt: Vec<u32>,
+    pub category: String,
+    pub max_new: usize,
+    pub arrival: Instant,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt_text: impl Into<String>, max_new: usize) -> Request {
+        Request {
+            id,
+            prompt_text: prompt_text.into(),
+            prompt: Vec::new(),
+            category: String::new(),
+            max_new,
+            arrival: Instant::now(),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub text: String,
+    pub result: GenResult,
+    /// queueing delay before decoding started
+    pub queue_ns: u64,
+    /// total time from arrival to completion
+    pub total_ns: u64,
+}
+
+impl Response {
+    pub fn tokens_per_sec(&self) -> f64 {
+        let n = self.result.new_tokens().len() as f64;
+        n / (self.result.wall_ns.max(1) as f64 / 1e9)
+    }
+}

@@ -1,0 +1,112 @@
+//! Admission scheduler — decides which queued request decodes next.
+//!
+//! With single-sequence executables the "batching" decision is ordering +
+//! admission (the paper's router layer); the KV slot pool (slots.rs) holds
+//! per-sequence device state so interleaved execution never re-prefills.
+
+use std::collections::VecDeque;
+
+use super::request::Request;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// first come, first served
+    Fcfs,
+    /// shortest (prompt + budget) job first — latency-optimal under load
+    Sjf,
+}
+
+impl Policy {
+    pub fn parse(s: &str) -> Policy {
+        match s {
+            "sjf" => Policy::Sjf,
+            _ => Policy::Fcfs,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct Scheduler {
+    policy: Policy,
+    queue: VecDeque<Request>,
+    admitted: u64,
+}
+
+impl Scheduler {
+    pub fn new(policy: Policy) -> Scheduler {
+        Scheduler { policy, queue: VecDeque::new(), admitted: 0 }
+    }
+
+    pub fn push(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub fn admitted(&self) -> u64 {
+        self.admitted
+    }
+
+    /// Next request to decode, per policy.
+    pub fn pop(&mut self) -> Option<Request> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let idx = match self.policy {
+            Policy::Fcfs => 0,
+            Policy::Sjf => {
+                let mut best = 0;
+                let mut best_cost = usize::MAX;
+                for (i, r) in self.queue.iter().enumerate() {
+                    let cost = r.prompt_text.len() + r.max_new;
+                    if cost < best_cost {
+                        best_cost = cost;
+                        best = i;
+                    }
+                }
+                best
+            }
+        };
+        self.admitted += 1;
+        self.queue.remove(idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, plen: usize, max_new: usize) -> Request {
+        let mut r = Request::new(id, "x".repeat(plen), max_new);
+        r.category = "qa".into();
+        r
+    }
+
+    #[test]
+    fn fcfs_preserves_order() {
+        let mut s = Scheduler::new(Policy::Fcfs);
+        s.push(req(1, 10, 100));
+        s.push(req(2, 1, 1));
+        assert_eq!(s.pop().unwrap().id, 1);
+        assert_eq!(s.pop().unwrap().id, 2);
+        assert!(s.pop().is_none());
+    }
+
+    #[test]
+    fn sjf_picks_cheapest() {
+        let mut s = Scheduler::new(Policy::Sjf);
+        s.push(req(1, 100, 200));
+        s.push(req(2, 5, 10));
+        s.push(req(3, 50, 50));
+        assert_eq!(s.pop().unwrap().id, 2);
+        assert_eq!(s.pop().unwrap().id, 3);
+        assert_eq!(s.pop().unwrap().id, 1);
+        assert_eq!(s.admitted(), 3);
+    }
+}

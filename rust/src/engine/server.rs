@@ -1,0 +1,217 @@
+//! The serving engine: a worker thread owning the PJRT models, a TapOut
+//! controller with *persistent online bandit state across requests*, an
+//! admission scheduler, and the metrics sink. Requests go in over a
+//! channel; each caller gets a private response channel.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::models::{Manifest, ModelAssets};
+use crate::runtime::Runtime;
+use crate::spec::{generate, GenConfig, MethodSpec, BOS};
+use crate::util::Rng;
+
+use super::metrics::EngineMetrics;
+use super::request::{Request, Response};
+use super::scheduler::{Policy, Scheduler};
+use super::slots::SlotPool;
+
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub artifacts: PathBuf,
+    pub pair: String,
+    pub method: String,
+    pub gamma_max: usize,
+    pub sched: Policy,
+    pub slots: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            artifacts: PathBuf::from("artifacts"),
+            pair: "pair-a".into(),
+            method: "seq-ucb1".into(),
+            gamma_max: 128,
+            sched: Policy::Fcfs,
+            slots: 2,
+        }
+    }
+}
+
+enum Job {
+    Run(Request, Sender<Response>),
+    Shutdown,
+}
+
+pub struct Engine {
+    tx: Sender<Job>,
+    handle: Option<JoinHandle<()>>,
+    next_id: AtomicU64,
+    pub metrics: Arc<Mutex<EngineMetrics>>,
+    pub config: EngineConfig,
+}
+
+impl Engine {
+    /// Boot the engine: loads artifacts, warms up the hot-path executables,
+    /// spawns the decode worker.
+    pub fn start(config: EngineConfig) -> Result<Engine> {
+        let metrics = Arc::new(Mutex::new(EngineMetrics::default()));
+        let (tx, rx) = channel::<Job>();
+
+        let manifest = Manifest::load(&config.artifacts)?;
+        let runtime = Runtime::cpu().context("PJRT client")?;
+        let (dspec, tspec) = manifest.pair(&config.pair)?;
+        let (dname, tname) = (dspec.name.clone(), tspec.name.clone());
+        let draft_assets = ModelAssets::load(&runtime, &manifest, &dname)?;
+        let target_assets = ModelAssets::load(&runtime, &manifest, &tname)?;
+        let method = MethodSpec::parse(&config.method, &config.artifacts.display().to_string())
+            .map_err(|e| anyhow::anyhow!(e))?;
+
+        let cfg = config.clone();
+        let m = metrics.clone();
+        let handle = std::thread::Builder::new()
+            .name("tapout-engine".into())
+            .spawn(move || {
+                if let Err(e) = worker(cfg, manifest, draft_assets, target_assets, method, rx, m)
+                {
+                    eprintln!("[engine] worker failed: {e:#}");
+                }
+            })?;
+
+        Ok(Engine {
+            tx,
+            handle: Some(handle),
+            next_id: AtomicU64::new(1),
+            metrics,
+            config,
+        })
+    }
+
+    /// Submit a text prompt; returns a receiver for the response.
+    pub fn submit(&self, prompt: &str, max_new: usize) -> Receiver<Response> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = Request::new(id, prompt, max_new);
+        self.submit_request(req)
+    }
+
+    pub fn submit_request(&self, req: Request) -> Receiver<Response> {
+        let (rtx, rrx) = channel();
+        let _ = self.tx.send(Job::Run(req, rtx));
+        rrx
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Job::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker(
+    cfg: EngineConfig,
+    manifest: Manifest,
+    draft_assets: Arc<ModelAssets>,
+    target_assets: Arc<ModelAssets>,
+    method: MethodSpec,
+    rx: Receiver<Job>,
+    metrics: Arc<Mutex<EngineMetrics>>,
+) -> Result<()> {
+    // warm up the step + common verify buckets so first-request latency is
+    // not dominated by XLA compilation
+    draft_assets.exes.warmup(&[1, 4, 128, 256])?;
+    target_assets.exes.warmup(&[1, 8, 16, 128, 256])?;
+
+    let mut pool = SlotPool::new(&draft_assets, &target_assets, cfg.slots.max(1))?;
+    let mut sched = Scheduler::new(cfg.sched);
+    let mut waiters: std::collections::HashMap<u64, Sender<Response>> = Default::default();
+    let mut ctrl = method.build(cfg.gamma_max).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut rng = Rng::new(0xE46);
+    let started = Instant::now();
+
+    loop {
+        // drain everything that has arrived, then schedule
+        loop {
+            match rx.try_recv() {
+                Ok(Job::Run(mut req, reply)) => {
+                    if req.prompt.is_empty() {
+                        req.prompt = vec![BOS];
+                        req.prompt.extend(manifest.encode(&req.prompt_text));
+                    }
+                    waiters.insert(req.id, reply);
+                    sched.push(req);
+                }
+                Ok(Job::Shutdown) => return Ok(()),
+                Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => return Ok(()),
+            }
+        }
+
+        let Some(req) = sched.pop() else {
+            // idle: block for the next job
+            match rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(Job::Run(mut req, reply)) => {
+                    if req.prompt.is_empty() {
+                        req.prompt = vec![BOS];
+                        req.prompt.extend(manifest.encode(&req.prompt_text));
+                    }
+                    waiters.insert(req.id, reply);
+                    sched.push(req);
+                }
+                Ok(Job::Shutdown) => return Ok(()),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return Ok(()),
+            }
+            continue;
+        };
+
+        let mut slot = pool.acquire().expect("sequential worker always has a slot");
+        let queue_ns = req.arrival.elapsed().as_nanos() as u64;
+        let gen_cfg = GenConfig {
+            max_new: req.max_new,
+            gamma_max: cfg.gamma_max,
+            stop_at_eos: true,
+            collect_signals: false,
+        };
+        let outcome = generate(
+            &mut slot.draft,
+            &mut slot.target,
+            &mut ctrl,
+            &mut rng,
+            &req.prompt,
+            &gen_cfg,
+        );
+        pool.release(slot);
+
+        match outcome {
+            Ok(result) => {
+                let resp = Response {
+                    id: req.id,
+                    text: manifest.decode(result.new_tokens()),
+                    queue_ns,
+                    total_ns: req.arrival.elapsed().as_nanos() as u64,
+                    result,
+                };
+                {
+                    let mut m = metrics.lock().unwrap();
+                    m.record(&resp);
+                    m.span_ns = started.elapsed().as_nanos() as u64;
+                }
+                if let Some(tx) = waiters.remove(&req.id) {
+                    let _ = tx.send(resp);
+                }
+            }
+            Err(e) => {
+                eprintln!("[engine] request {} failed: {e:#}", req.id);
+                waiters.remove(&req.id);
+            }
+        }
+    }
+}

@@ -1,0 +1,59 @@
+//! KV slot pool — per-sequence device state (draft + target worlds) that
+//! survives across requests. A slot owns one `PjrtModel` pair; acquiring a
+//! slot is O(1) because the contiguous-cursor protocol never needs the KV
+//! cache cleared (stale entries beyond the cursor are dead by construction).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::models::{ModelAssets, PjrtModel};
+
+pub struct Slot {
+    pub id: usize,
+    pub draft: PjrtModel,
+    pub target: PjrtModel,
+    /// requests served by this slot (reuse diagnostics)
+    pub served: u64,
+}
+
+pub struct SlotPool {
+    free: Vec<Slot>,
+    total: usize,
+}
+
+impl SlotPool {
+    pub fn new(
+        draft_assets: &Arc<ModelAssets>,
+        target_assets: &Arc<ModelAssets>,
+        n: usize,
+    ) -> Result<SlotPool> {
+        let mut free = Vec::with_capacity(n);
+        for id in 0..n {
+            free.push(Slot {
+                id,
+                draft: PjrtModel::new(draft_assets.clone())?,
+                target: PjrtModel::new(target_assets.clone())?,
+                served: 0,
+            });
+        }
+        Ok(SlotPool { free, total: n })
+    }
+
+    pub fn acquire(&mut self) -> Option<Slot> {
+        self.free.pop()
+    }
+
+    pub fn release(&mut self, mut slot: Slot) {
+        slot.served += 1;
+        self.free.push(slot);
+    }
+
+    pub fn available(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+}

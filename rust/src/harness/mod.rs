@@ -1,0 +1,10 @@
+//! Experiment harness: workloads, the measurement runner, and one runner
+//! per paper table/figure (DESIGN.md §5).
+
+pub mod experiments;
+pub mod runner;
+pub mod workload;
+
+pub use experiments::{run_experiment, ExpOpts};
+pub use runner::{run_method, run_probe, Backend, CatStats, MethodResult};
+pub use workload::{load_suite, poisson_arrivals, sim_suite, WorkItem};

@@ -1,0 +1,152 @@
+//! Workloads for the experiment harness and the serving benches.
+//!
+//! PJRT runs use the TinyBench prompt suites from artifacts/prompts.json
+//! (the SpecBench / MT-Bench / HumanEval / Alpaca analogs, DESIGN.md §3);
+//! simulator runs synthesize position-indexed scenarios with the same
+//! category labels. Poisson arrivals drive the serving benchmark.
+
+use anyhow::Result;
+
+use crate::models::{Manifest, PromptEntry};
+use crate::util::Rng;
+
+/// One unit of work: an encoded prompt plus metadata.
+#[derive(Clone, Debug)]
+pub struct WorkItem {
+    pub category: String,
+    pub prompt: Vec<u32>,
+    pub text: String,
+    pub max_new: usize,
+    /// deterministic per-item seed (drives simulator scenarios + TS)
+    pub seed: u64,
+}
+
+/// Load a prompt suite from the artifacts, encoded and seeded.
+pub fn load_suite(manifest: &Manifest, suite: &str, limit: usize) -> Result<Vec<WorkItem>> {
+    let prompts = manifest.prompts(suite)?;
+    Ok(materialize(manifest, &prompts, suite, limit))
+}
+
+fn materialize(
+    manifest: &Manifest,
+    prompts: &[PromptEntry],
+    suite: &str,
+    limit: usize,
+) -> Vec<WorkItem> {
+    let mut out = Vec::new();
+    // interleave categories so truncation by `limit` keeps coverage
+    let mut by_cat: Vec<Vec<&PromptEntry>> = Vec::new();
+    for p in prompts {
+        match by_cat.iter_mut().find(|v| v[0].category == p.category) {
+            Some(v) => v.push(p),
+            None => by_cat.push(vec![p]),
+        }
+    }
+    let mut idx = 0;
+    'outer: loop {
+        let mut any = false;
+        for cat in &by_cat {
+            if let Some(p) = cat.get(idx) {
+                any = true;
+                let mut prompt = vec![crate::spec::BOS];
+                prompt.extend(manifest.encode(&p.text));
+                out.push(WorkItem {
+                    category: p.category.clone(),
+                    prompt,
+                    text: p.text.clone(),
+                    max_new: p.max_new,
+                    seed: hash_seed(suite, out.len()),
+                });
+                if out.len() >= limit {
+                    break 'outer;
+                }
+            }
+        }
+        if !any {
+            break;
+        }
+        idx += 1;
+    }
+    out
+}
+
+fn hash_seed(suite: &str, i: usize) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in suite.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+    }
+    h ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15)
+}
+
+/// Simulator workload with the same category structure as a suite.
+pub fn sim_suite(suite: &str, per_cat: usize, max_new: usize) -> Vec<WorkItem> {
+    let cats: Vec<&str> = match suite {
+        "humaneval" => vec!["coding"],
+        "mtbench" => vec![
+            "writing", "roleplay", "reasoning", "math", "qa", "extraction", "stem",
+            "humanities",
+        ],
+        _ => vec![
+            "coding", "extraction", "humanities", "math", "math_reasoning", "qa", "rag",
+            "reasoning", "roleplay", "stem", "summarization", "translation", "writing",
+        ],
+    };
+    let mut out = Vec::new();
+    for rep in 0..per_cat {
+        for &c in &cats {
+            let seed = hash_seed(suite, out.len()) ^ (rep as u64) << 32;
+            // prompts are positional in the simulator; ~48-96 tokens
+            let plen = 48 + (seed % 49) as usize;
+            out.push(WorkItem {
+                category: c.to_string(),
+                prompt: (0..plen).map(|p| 3 + (p % 29) as u32).collect(),
+                text: String::new(),
+                max_new,
+                seed,
+            });
+        }
+    }
+    out
+}
+
+/// Poisson arrival times (seconds) for `n` requests at `rate` req/s.
+pub fn poisson_arrivals(seed: u64, n: usize, rate: f64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    (0..n)
+        .map(|_| {
+            t += rng.exponential(rate);
+            t
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_suite_covers_categories() {
+        let items = sim_suite("specbench", 2, 64);
+        assert_eq!(items.len(), 26);
+        assert!(items.iter().any(|w| w.category == "coding"));
+        // deterministic
+        let again = sim_suite("specbench", 2, 64);
+        assert_eq!(items[5].seed, again[5].seed);
+        assert!(items.iter().all(|w| w.prompt.len() >= 48));
+    }
+
+    #[test]
+    fn humaneval_is_coding_only() {
+        let items = sim_suite("humaneval", 3, 64);
+        assert!(items.iter().all(|w| w.category == "coding"));
+    }
+
+    #[test]
+    fn arrivals_monotone_with_right_rate() {
+        let a = poisson_arrivals(1, 4000, 8.0);
+        assert!(a.windows(2).all(|w| w[1] >= w[0]));
+        let mean_gap = a.last().unwrap() / 4000.0;
+        assert!((mean_gap - 0.125).abs() < 0.01, "{mean_gap}");
+    }
+}

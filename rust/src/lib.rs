@@ -1,0 +1,26 @@
+//! # TapOut — bandit-based dynamic speculative decoding
+//!
+//! Reproduction of *TapOut: A Bandit-Based Approach to Dynamic Speculative
+//! Decoding* (Sridhar et al., 2025) as a three-layer rust + JAX + Pallas
+//! serving stack (see DESIGN.md):
+//!
+//! * **L3 (this crate)** — the speculative-decoding coordinator: bandit
+//!   controllers ([`bandit`]), the training-free arm-policy pool
+//!   ([`policies`]), the Algorithm-1 session loop ([`spec`]), a serving
+//!   engine with scheduler/slots/metrics/HTTP ([`engine`]), the PJRT
+//!   runtime ([`runtime`]), model backends ([`models`]) and the experiment
+//!   harness regenerating every paper table/figure ([`harness`]).
+//! * **L2 (python/compile, build-time)** — tiny JAX transformer zoo, AOT
+//!   lowered to HLO text under `artifacts/`.
+//! * **L1 (python/compile/kernels)** — the fused Pallas stop-signal head
+//!   whose per-token output is [`signals::TokenSignals`].
+
+pub mod bandit;
+pub mod engine;
+pub mod harness;
+pub mod models;
+pub mod policies;
+pub mod runtime;
+pub mod signals;
+pub mod spec;
+pub mod util;

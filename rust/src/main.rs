@@ -1,0 +1,185 @@
+//! `tapout` — CLI for the TapOut dynamic-speculative-decoding stack.
+//!
+//! Subcommands:
+//!   generate  --pair pair-a --method seq-ucb1 --prompt "..." [--max-new N]
+//!   serve     --port 8077 --pair pair-a --method seq-ucb1 [--sched fcfs|sjf]
+//!   exp       --id <table2|table3|table4|table5|fig2|fig3|fig4|fig5|fig6|abl-arms|tune|all>
+//!             [--backend pjrt|sim] [--scale F] [--gamma N]
+//!   selftest  verify the rust engine replays the python golden traces
+//!             token-for-token (artifacts/golden/pair-a.json)
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use tapout::engine::{Engine, EngineConfig, HttpServer, Policy};
+use tapout::harness::{run_experiment, ExpOpts};
+use tapout::models::{Manifest, ModelAssets, PjrtModel};
+use tapout::runtime::Runtime;
+use tapout::spec::{generate, GenConfig, MethodSpec};
+use tapout::util::cli::Args;
+use tapout::util::{Json, Rng};
+
+fn main() {
+    let args = Args::parse();
+    let r = match args.subcommand.as_deref() {
+        Some("generate") => cmd_generate(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("exp") => cmd_exp(&args),
+        Some("selftest") => cmd_selftest(&args),
+        _ => {
+            eprintln!(
+                "usage: tapout <generate|serve|exp|selftest> [flags]\n\
+                 see rust/src/main.rs header for flags"
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.str("artifacts", "artifacts"))
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(&artifacts_dir(args))?;
+    let runtime = Runtime::cpu()?;
+    let pair = args.str("pair", "pair-a");
+    let method = MethodSpec::parse(
+        &args.str("method", "seq-ucb1"),
+        &artifacts_dir(args).display().to_string(),
+    )
+    .map_err(|e| anyhow::anyhow!(e))?;
+    let prompt_text = args.str("prompt", "q: where is alice? a:");
+    let max_new = args.usize("max-new", 96);
+
+    let (dspec, tspec) = manifest.pair(&pair)?;
+    println!(
+        "pair {pair}: draft={} ({} params) target={} ({} params), method {}",
+        dspec.name,
+        dspec.param_count,
+        tspec.name,
+        tspec.param_count,
+        method.label()
+    );
+    let (dn, tn) = (dspec.name.clone(), tspec.name.clone());
+    let mut draft = PjrtModel::new(ModelAssets::load(&runtime, &manifest, &dn)?)?;
+    let mut target = PjrtModel::new(ModelAssets::load(&runtime, &manifest, &tn)?)?;
+
+    let mut ctrl = method.build(args.usize("gamma", 128))?;
+    let mut rng = Rng::new(args.usize("seed", 0) as u64);
+    let mut prompt = vec![tapout::spec::BOS];
+    prompt.extend(manifest.encode(&prompt_text));
+
+    let cfg = GenConfig { max_new, ..GenConfig::default() };
+    let r = generate(&mut draft, &mut target, &mut ctrl, &mut rng, &prompt, &cfg)?;
+    println!("--- completion ---\n{}{}", prompt_text, manifest.decode(r.new_tokens()));
+    println!(
+        "--- stats --- tokens {}  sessions {}  m {:.2}  accept {:.2}  {:.1} tok/s",
+        r.new_tokens().len(),
+        r.rounds.len(),
+        r.mean_accepted(),
+        r.acceptance_rate(),
+        r.new_tokens().len() as f64 / (r.wall_ns as f64 / 1e9),
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = EngineConfig {
+        artifacts: artifacts_dir(args),
+        pair: args.str("pair", "pair-a"),
+        method: args.str("method", "seq-ucb1"),
+        gamma_max: args.usize("gamma", 128),
+        sched: Policy::parse(&args.str("sched", "fcfs")),
+        slots: args.usize("slots", 2),
+    };
+    let port = args.usize("port", 8077) as u16;
+    let engine = Arc::new(Engine::start(cfg).context("starting engine")?);
+    let http = HttpServer::start(engine, port)?;
+    println!(
+        "tapout serving on http://{}  (POST /generate, GET /health, GET /metrics)",
+        http.addr
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let opts = ExpOpts {
+        artifacts: artifacts_dir(args),
+        results: PathBuf::from(args.str("results", "results")),
+        backend: args.str("backend", "pjrt"),
+        scale: args.f64("scale", 1.0),
+        gamma_max: args.usize("gamma", 128),
+    };
+    let id = args.str("id", "all");
+    run_experiment(&id, opts)
+}
+
+/// Replays the python reference decoder's golden traces through the rust
+/// engine: committed tokens, per-round drafted/accepted counts must match
+/// exactly (same HLO, same greedy rule) — the cross-language end-to-end
+/// correctness check.
+fn cmd_selftest(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let manifest = Manifest::load(&dir)?;
+    let runtime = Runtime::cpu()?;
+    let text = std::fs::read_to_string(dir.join("golden/pair-a.json"))
+        .context("reading golden traces (run `make artifacts`)")?;
+    let golden = Json::parse(&text).map_err(|e| anyhow::anyhow!("golden json: {e}"))?;
+
+    let pair = golden.get("pair").and_then(|x| x.as_str()).unwrap_or("pair-a");
+    let stop_after = golden.get("stop_after").and_then(|x| x.as_usize()).unwrap_or(6);
+    let max_new = golden.get("max_new").and_then(|x| x.as_usize()).unwrap_or(48);
+    let (dspec, tspec) = manifest.pair(pair)?;
+    let (dn, tn) = (dspec.name.clone(), tspec.name.clone());
+    let mut draft = PjrtModel::new(ModelAssets::load(&runtime, &manifest, &dn)?)?;
+    let mut target = PjrtModel::new(ModelAssets::load(&runtime, &manifest, &tn)?)?;
+
+    let empty = Vec::new();
+    let traces = golden.get("traces").and_then(|x| x.as_arr()).unwrap_or(&empty);
+    anyhow::ensure!(!traces.is_empty(), "no golden traces");
+    let mut ok = 0;
+    for (i, t) in traces.iter().enumerate() {
+        let prompt: Vec<u32> =
+            t.get("prompt_ids").unwrap().f64s().iter().map(|&x| x as u32).collect();
+        let want: Vec<u32> =
+            t.get("committed").unwrap().f64s().iter().map(|&x| x as u32).collect();
+        let want_drafted: Vec<usize> =
+            t.get("drafted").unwrap().f64s().iter().map(|&x| x as usize).collect();
+        let want_accepted: Vec<usize> =
+            t.get("accepted").unwrap().f64s().iter().map(|&x| x as usize).collect();
+
+        let mut ctrl = MethodSpec::Static(stop_after).build(128)?;
+        let mut rng = Rng::new(0);
+        let cfg = GenConfig { max_new, gamma_max: 128, stop_at_eos: true, collect_signals: false };
+        let r = generate(&mut draft, &mut target, &mut ctrl, &mut rng, &prompt, &cfg)?;
+
+        let got_drafted: Vec<usize> = r.rounds.iter().map(|x| x.drafted).collect();
+        let got_accepted: Vec<usize> = r.rounds.iter().map(|x| x.accepted).collect();
+        anyhow::ensure!(
+            r.tokens == want,
+            "trace {i}: token mismatch\n got {:?}\nwant {:?}",
+            r.tokens,
+            want
+        );
+        anyhow::ensure!(got_drafted == want_drafted, "trace {i}: drafted mismatch");
+        anyhow::ensure!(got_accepted == want_accepted, "trace {i}: accepted mismatch");
+        ok += 1;
+        println!(
+            "trace {i} ({}): OK — {} tokens, {} rounds",
+            t.get("category").and_then(|x| x.as_str()).unwrap_or("?"),
+            want.len(),
+            want_drafted.len()
+        );
+    }
+    println!("selftest: {ok}/{} golden traces replayed exactly", traces.len());
+    Ok(())
+}

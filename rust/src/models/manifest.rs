@@ -1,0 +1,250 @@
+//! Artifact manifest — the contract between `make artifacts` (python) and
+//! the rust coordinator. Parses artifacts/manifest.json + prompts.json and
+//! loads flat f32 weight files.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::Json;
+
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub param_count: usize,
+    pub kv_elems: usize,
+    pub out_elems: usize,
+    pub world_elems: usize,
+    pub weights_path: PathBuf,
+    pub ladder: Vec<usize>,
+    pub hlo_files: HashMap<usize, PathBuf>,
+    /// per-bucket signal extractor executables (world -> [k*8]); needed
+    /// because PJRT CPU lacks CopyRawToHost (see aot.py lower_extract)
+    pub extract_files: HashMap<usize, PathBuf>,
+}
+
+#[derive(Clone, Debug)]
+pub struct PromptEntry {
+    pub category: String,
+    pub text: String,
+    pub max_new: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub sig_width: usize,
+    pub alphabet: String,
+    pub models: HashMap<String, ModelSpec>,
+    /// paper-analog pairs: name -> (draft, target)
+    pub pairs: Vec<(String, (String, String))>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest.json: {e}"))?;
+        let need = |k: &str| -> Result<&Json> {
+            j.get(k).ok_or_else(|| anyhow::anyhow!("manifest missing key {k}"))
+        };
+
+        let mut models = HashMap::new();
+        if let Json::Obj(m) = need("models")? {
+            for (name, mj) in m {
+                let geti = |k: &str| -> Result<usize> {
+                    mj.get(k)
+                        .and_then(|x| x.as_usize())
+                        .ok_or_else(|| anyhow::anyhow!("model {name} missing {k}"))
+                };
+                let mut hlo_files = HashMap::new();
+                if let Some(Json::Obj(h)) = mj.get("hlo") {
+                    for (k, v) in h {
+                        hlo_files.insert(
+                            k.parse::<usize>().map_err(|_| anyhow::anyhow!("bad bucket {k}"))?,
+                            dir.join(v.as_str().unwrap_or_default()),
+                        );
+                    }
+                }
+                let mut extract_files = HashMap::new();
+                if let Some(Json::Obj(h)) = mj.get("extract") {
+                    for (k, v) in h {
+                        extract_files.insert(
+                            k.parse::<usize>().map_err(|_| anyhow::anyhow!("bad bucket {k}"))?,
+                            dir.join(v.as_str().unwrap_or_default()),
+                        );
+                    }
+                }
+                let ladder = mj
+                    .get("ladder")
+                    .map(|l| l.f64s().iter().map(|&x| x as usize).collect())
+                    .unwrap_or_default();
+                models.insert(
+                    name.clone(),
+                    ModelSpec {
+                        name: name.clone(),
+                        d_model: geti("d_model")?,
+                        n_layers: geti("n_layers")?,
+                        n_heads: geti("n_heads")?,
+                        vocab: geti("vocab")?,
+                        max_seq: geti("max_seq")?,
+                        param_count: geti("param_count")?,
+                        kv_elems: geti("kv_elems")?,
+                        out_elems: geti("out_elems")?,
+                        world_elems: geti("world_elems")?,
+                        weights_path: dir.join(
+                            mj.get("weights").and_then(|x| x.as_str()).unwrap_or_default(),
+                        ),
+                        ladder,
+                        hlo_files,
+                        extract_files,
+                    },
+                );
+            }
+        }
+
+        let mut pairs = Vec::new();
+        if let Some(Json::Obj(p)) = j.get("pairs") {
+            for (name, v) in p {
+                let a = v.at(0).and_then(|x| x.as_str()).unwrap_or_default().to_string();
+                let b = v.at(1).and_then(|x| x.as_str()).unwrap_or_default().to_string();
+                pairs.push((name.clone(), (a, b)));
+            }
+        }
+        pairs.sort();
+
+        Ok(Manifest {
+            root: dir.to_path_buf(),
+            vocab: need("vocab")?.as_usize().unwrap_or(96),
+            max_seq: need("max_seq")?.as_usize().unwrap_or(384),
+            sig_width: need("sig_width")?.as_usize().unwrap_or(8),
+            alphabet: need("alphabet")?.as_str().unwrap_or_default().to_string(),
+            models,
+            pairs,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("model {name} not in manifest"))
+    }
+
+    pub fn pair(&self, name: &str) -> Result<(&ModelSpec, &ModelSpec)> {
+        let (d, t) = self
+            .pairs
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, p)| p)
+            .ok_or_else(|| anyhow::anyhow!("pair {name} not in manifest"))?;
+        Ok((self.model(d)?, self.model(t)?))
+    }
+
+    /// Flat little-endian f32 weight file.
+    pub fn load_weights(&self, spec: &ModelSpec) -> Result<Vec<f32>> {
+        let bytes = std::fs::read(&spec.weights_path)
+            .with_context(|| format!("reading {}", spec.weights_path.display()))?;
+        anyhow::ensure!(
+            bytes.len() == spec.param_count * 4,
+            "weight file {} has {} bytes, expected {}",
+            spec.weights_path.display(),
+            bytes.len(),
+            spec.param_count * 4
+        );
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    // --- tokenizer (char-level; mirrors python corpus.py) -----------------
+
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.chars()
+            .filter_map(|c| self.alphabet.find(c).map(|i| (i + 3) as u32))
+            .collect()
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let chars: Vec<char> = self.alphabet.chars().collect();
+        ids.iter()
+            .filter_map(|&i| chars.get((i as usize).wrapping_sub(3)).copied())
+            .collect()
+    }
+
+    // --- prompt suites ----------------------------------------------------
+
+    pub fn prompts(&self, suite: &str) -> Result<Vec<PromptEntry>> {
+        let text = std::fs::read_to_string(self.root.join("prompts.json"))
+            .context("reading prompts.json")?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("prompts.json: {e}"))?;
+        let arr = j
+            .get(suite)
+            .and_then(|x| x.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("suite {suite} not in prompts.json"))?;
+        Ok(arr
+            .iter()
+            .map(|p| PromptEntry {
+                category: p.get("category").and_then(|x| x.as_str()).unwrap_or("").into(),
+                text: p.get("text").and_then(|x| x.as_str()).unwrap_or("").into(),
+                max_new: p.get("max_new").and_then(|x| x.as_usize()).unwrap_or(160),
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn tokenizer_roundtrip_without_artifacts() {
+        // independent of artifacts: construct a manifest by hand
+        let m = Manifest {
+            root: PathBuf::new(),
+            vocab: 96,
+            max_seq: 384,
+            sig_width: 8,
+            alphabet: "abc 123".into(),
+            models: HashMap::new(),
+            pairs: vec![],
+        };
+        let ids = m.encode("cab 31");
+        assert_eq!(ids, vec![5, 3, 4, 6, 9, 7]);
+        assert_eq!(m.decode(&ids), "cab 31");
+        // unknown chars are dropped
+        assert_eq!(m.encode("a!b"), vec![3, 4]);
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.models.len() >= 2);
+        assert_eq!(m.pairs.len(), 4);
+        for (_, spec) in &m.models {
+            assert_eq!(spec.world_elems, spec.kv_elems + spec.out_elems);
+            assert!(!spec.ladder.is_empty());
+        }
+        let (d, t) = m.pair("pair-a").unwrap();
+        assert!(d.param_count < t.param_count);
+        let prompts = m.prompts("specbench").unwrap();
+        assert!(!prompts.is_empty());
+    }
+}

@@ -1,0 +1,11 @@
+//! Model backends: PJRT (artifact-backed tiny LMs) and the simulator.
+
+pub mod manifest;
+pub mod pjrt;
+pub mod sim;
+pub mod traits;
+
+pub use manifest::{Manifest, ModelSpec, PromptEntry};
+pub use pjrt::{ModelAssets, PjrtModel};
+pub use sim::{sim_pair, Scenario, SimModel};
+pub use traits::{LanguageModel, ModelCost};

@@ -1,0 +1,188 @@
+//! PJRT-backed model — the production backend. Executes the AOT HLO
+//! artifacts with a device-resident world buffer:
+//!
+//!   host                         device
+//!   ----                         ------
+//!   tokens[K], start  ──────▶   block_K(wflat, world, tokens, start)
+//!   signals [n×8]     ◀──────   world' (new buffer; fed back next call)
+//!
+//! Weights are uploaded once per model and shared (Arc) across serving
+//! slots; executables are compiled lazily per shape bucket and shared too.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::models::manifest::{Manifest, ModelSpec};
+use crate::models::traits::{LanguageModel, ModelCost};
+use crate::runtime::{ExecutableCache, Runtime, SendWrap};
+use crate::signals::{TokenSignals, SIG_WIDTH};
+
+/// Per-model immutable assets shared by all instances (serving slots).
+pub struct ModelAssets {
+    pub runtime: Runtime,
+    pub spec: ModelSpec,
+    pub weights: SendWrap<xla::PjRtBuffer>,
+    pub exes: ExecutableCache,
+    /// per-bucket signal extractors (world -> [k*8]); PJRT CPU cannot
+    /// offset-read device buffers, so the out-region is sliced on device
+    pub extractors: ExecutableCache,
+    /// token-row cost relative to target-base (analytic cost model)
+    pub rel_cost: f64,
+}
+
+// SAFETY: PJRT CPU objects are used from one engine thread at a time; the
+// Rc-based client clone count is only mutated while a single thread owns the
+// assets (see runtime::SendWrap).
+unsafe impl Send for ModelAssets {}
+unsafe impl Sync for ModelAssets {}
+unsafe impl Send for PjrtModel {}
+
+impl ModelAssets {
+    pub fn load(runtime: &Runtime, manifest: &Manifest, name: &str) -> Result<Arc<ModelAssets>> {
+        let spec = manifest.model(name)?.clone();
+        let host = manifest.load_weights(&spec)?;
+        let weights = runtime
+            .f32_to_device(&host, &[spec.param_count])
+            .with_context(|| format!("uploading weights for {name}"))?;
+        let ref_params = manifest
+            .model("target-base")
+            .map(|m| m.param_count)
+            .unwrap_or(spec.param_count);
+        let exes = ExecutableCache::new(runtime.clone(), spec.hlo_files.clone());
+        let extractors = ExecutableCache::new(runtime.clone(), spec.extract_files.clone());
+        Ok(Arc::new(ModelAssets {
+            runtime: runtime.clone(),
+            spec,
+            weights: SendWrap(weights),
+            exes,
+            extractors,
+            rel_cost: spec_rel_cost(&host, ref_params),
+        }))
+    }
+}
+
+fn spec_rel_cost(host: &[f32], ref_params: usize) -> f64 {
+    host.len() as f64 / ref_params.max(1) as f64
+}
+
+/// A stateful model instance (one per active sequence slot).
+pub struct PjrtModel {
+    assets: Arc<ModelAssets>,
+    world: SendWrap<xla::PjRtBuffer>,
+    cur: usize,
+    cost: ModelCost,
+    sig_host: Vec<f32>,
+}
+
+impl PjrtModel {
+    pub fn new(assets: Arc<ModelAssets>) -> Result<PjrtModel> {
+        let spec = &assets.spec;
+        let zeros = vec![0.0f32; spec.world_elems];
+        let world = assets.runtime.f32_to_device(&zeros, &[spec.world_elems])?;
+        Ok(PjrtModel {
+            sig_host: vec![0.0; spec.out_elems],
+            world: SendWrap(world),
+            assets,
+            cur: 0,
+            cost: ModelCost::default(),
+        })
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        &self.assets.spec
+    }
+
+    pub fn assets(&self) -> &Arc<ModelAssets> {
+        &self.assets
+    }
+
+    /// Pre-compile the buckets the serving hot path uses.
+    pub fn warmup(&self, buckets: &[usize]) -> Result<()> {
+        self.assets.exes.warmup(buckets)
+    }
+}
+
+impl LanguageModel for PjrtModel {
+    fn name(&self) -> String {
+        format!("pjrt:{}", self.assets.spec.name)
+    }
+
+    fn reset(&mut self) {
+        // KV garbage beyond the cursor is never read (contiguity protocol),
+        // so resetting is O(1): no device writes needed.
+        self.cur = 0;
+    }
+
+    fn block(&mut self, tokens: &[u32], start: usize) -> Result<Vec<TokenSignals>> {
+        anyhow::ensure!(start == self.cur, "non-contiguous block: start {start} cur {}", self.cur);
+        anyhow::ensure!(!tokens.is_empty(), "empty block");
+        let n = tokens.len();
+        let spec = &self.assets.spec;
+        anyhow::ensure!(start + n <= spec.max_seq, "KV overflow: {}+{n} > {}", start, spec.max_seq);
+
+        let k = self.assets.exes.bucket_for(n)?;
+        let exe = self.assets.exes.get(k)?;
+
+        // stage tokens (padded to the bucket) and the start scalar
+        let mut padded = vec![0i32; k];
+        for (dst, &t) in padded.iter_mut().zip(tokens) {
+            *dst = t as i32;
+        }
+        let toks_buf = self.assets.runtime.i32_to_device(&padded, &[k])?;
+        let start_buf = self.assets.runtime.scalar_i32(start as i32)?;
+
+        let mut result = exe
+            .0
+            .execute_b(&[&self.assets.weights.0, &self.world.0, &toks_buf, &start_buf])
+            .with_context(|| format!("executing {} block{k}", spec.name))?;
+        let new_world = result
+            .pop()
+            .and_then(|mut r| if r.is_empty() { None } else { Some(r.remove(0)) })
+            .ok_or_else(|| anyhow::anyhow!("no output buffer"))?;
+        self.world = SendWrap(new_world);
+
+        // read back only the signal rows: slice on device (extractor for
+        // the smallest bucket >= n), then copy the tiny result to host
+        let ek = self.assets.extractors.bucket_for(n)?;
+        let ext = self.assets.extractors.get(ek)?;
+        let mut eres = ext
+            .0
+            .execute_b(&[&self.world.0])
+            .context("extracting signal out-region")?;
+        let sig_buf = eres
+            .pop()
+            .and_then(|mut r| if r.is_empty() { None } else { Some(r.remove(0)) })
+            .ok_or_else(|| anyhow::anyhow!("no extractor output"))?;
+        let lit = sig_buf.to_literal_sync()?;
+        let vals: Vec<f32> = lit.to_vec()?;
+        let want = n * SIG_WIDTH;
+        self.sig_host[..want].copy_from_slice(&vals[..want]);
+
+        self.cur = start + n;
+        self.cost.calls += 1;
+        self.cost.rows += n as u64;
+        self.cost.padded_rows += k as u64;
+        Ok(TokenSignals::parse_rows(&self.sig_host, n))
+    }
+
+    fn cur(&self) -> usize {
+        self.cur
+    }
+
+    fn rollback(&mut self, to: usize) {
+        self.cur = self.cur.min(to);
+    }
+
+    fn max_seq(&self) -> usize {
+        self.assets.spec.max_seq
+    }
+
+    fn cost(&self) -> ModelCost {
+        self.cost
+    }
+
+    fn rel_cost(&self) -> f64 {
+        self.assets.rel_cost
+    }
+}

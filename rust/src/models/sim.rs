@@ -1,0 +1,330 @@
+//! Simulator backend — synthetic correlated draft/target pairs.
+//!
+//! Stands in for workloads the sealed environment cannot run at scale
+//! (DESIGN.md §3): bandit-horizon experiments, property tests and benches
+//! over millions of tokens. The simulator reproduces the *structure* the
+//! paper exploits:
+//!
+//!   * each request has a deterministic "script" — the target's greedy
+//!     continuation (a pure function of seed × position, so KV rollback is
+//!     trivially consistent);
+//!   * a per-category difficulty profile τ(p) (coding ≪ prose, decaying
+//!     with position — the Fig. 2 shape);
+//!   * the draft agrees with the script with probability that *rises* as
+//!     its entropy falls, so the L1 stop signals carry real information,
+//!     exactly like a trained draft model.
+//!
+//! Implements the same `LanguageModel` trait as the PJRT backend; signal
+//! rows are computed with `TokenSignals::from_logits` over a synthetic
+//! 32-way distribution so every invariant (top1 ≥ top2, margin, entropy
+//! consistency) holds exactly.
+
+use crate::models::traits::{LanguageModel, ModelCost};
+use crate::signals::TokenSignals;
+
+pub const SIM_VOCAB: u32 = 32;
+const SIM_MAX_SEQ: usize = 4096;
+
+/// Difficulty profile of a workload category.
+#[derive(Clone, Copy, Debug)]
+pub struct CategoryProfile {
+    /// baseline difficulty in [0, 1] (coding low, prose high)
+    pub base: f32,
+    /// exponential decay of difficulty with position (entropy decays with
+    /// generation length — paper Fig. 2)
+    pub decay: f32,
+    /// probability of a "hard burst" position (names, numbers, ...)
+    pub burst_p: f32,
+    pub burst_mag: f32,
+}
+
+impl CategoryProfile {
+    pub fn for_category(cat: &str) -> CategoryProfile {
+        match cat {
+            "coding" => CategoryProfile { base: 0.06, decay: 0.004, burst_p: 0.04, burst_mag: 0.45 },
+            "math" | "math_reasoning" => {
+                CategoryProfile { base: 0.10, decay: 0.003, burst_p: 0.10, burst_mag: 0.55 }
+            }
+            "extraction" | "translation" | "rag" => {
+                CategoryProfile { base: 0.13, decay: 0.003, burst_p: 0.07, burst_mag: 0.5 }
+            }
+            "qa" | "summarization" | "reasoning" | "stem" => {
+                CategoryProfile { base: 0.22, decay: 0.002, burst_p: 0.09, burst_mag: 0.45 }
+            }
+            // writing / roleplay / humanities and default: open-ended prose
+            _ => CategoryProfile { base: 0.34, decay: 0.001, burst_p: 0.11, burst_mag: 0.4 },
+        }
+    }
+
+    /// Difficulty at absolute position p.
+    pub fn tau(&self, seed: u64, p: usize) -> f32 {
+        let decayed = self.base * (-(self.decay as f64) * p as f64).exp() as f32;
+        let burst = if unit(seed, p as u64, 0xB00) < self.burst_p as f64 {
+            self.burst_mag
+        } else {
+            0.0
+        };
+        (decayed + burst).clamp(0.0, 0.95)
+    }
+}
+
+/// Deterministic unit-interval hash of (seed, position, salt).
+fn unit(seed: u64, p: u64, salt: u64) -> f64 {
+    let mut z = seed
+        .wrapping_mul(0x9E3779B97F4A7C15)
+        .wrapping_add(p.wrapping_mul(0xBF58476D1CE4E5B9))
+        .wrapping_add(salt.wrapping_mul(0x94D049BB133111EB));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    ((z ^ (z >> 31)) >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Shared per-request scenario: the script + difficulty.
+#[derive(Clone, Copy, Debug)]
+pub struct Scenario {
+    pub seed: u64,
+    pub profile: CategoryProfile,
+}
+
+impl Scenario {
+    pub fn new(seed: u64, category: &str) -> Scenario {
+        Scenario { seed, profile: CategoryProfile::for_category(category) }
+    }
+
+    /// The target's greedy continuation token at position p.
+    pub fn script(&self, p: usize) -> u32 {
+        3 + (unit(self.seed, p as u64, 0x5C27) * (SIM_VOCAB - 3) as f64) as u32
+    }
+}
+
+/// One side of a simulated pair.
+pub struct SimModel {
+    scenario: Scenario,
+    /// draft quality in [0,1]; None = this is the target
+    quality: Option<f32>,
+    cur: usize,
+    cost: ModelCost,
+    rel_cost: f64,
+    name: String,
+}
+
+impl SimModel {
+    pub fn target(scenario: Scenario) -> SimModel {
+        SimModel {
+            scenario,
+            quality: None,
+            cur: 0,
+            cost: ModelCost::default(),
+            rel_cost: 1.0,
+            name: "sim-target".into(),
+        }
+    }
+
+    /// `quality` ∈ [0,1]: probability scale of agreeing with the target
+    /// in easy (τ=0) positions. rel_cost ≈ draft/target FLOP ratio.
+    pub fn draft(scenario: Scenario, quality: f32, rel_cost: f64) -> SimModel {
+        SimModel {
+            scenario,
+            quality: Some(quality),
+            cur: 0,
+            cost: ModelCost::default(),
+            rel_cost,
+            name: format!("sim-draft(q={quality})"),
+        }
+    }
+
+    /// Reseat on a new request scenario (keeps cost counters).
+    pub fn set_scenario(&mut self, scenario: Scenario) {
+        self.scenario = scenario;
+        self.cur = 0;
+    }
+
+    /// Signals for the prediction of position `p` (i.e. after processing
+    /// the input at p-1).
+    fn row_for(&self, p: usize) -> TokenSignals {
+        let s = &self.scenario;
+        let tau = s.profile.tau(s.seed, p);
+        let script_tok = s.script(p);
+        let (agree, conf) = match self.quality {
+            None => {
+                // target: confident, mildly affected by difficulty
+                (true, 1.0 - 0.25 * tau as f64)
+            }
+            Some(q) => {
+                // agreement probability falls with difficulty
+                let a = (q as f64 * (1.0 - tau as f64)).clamp(0.0, 1.0);
+                let agrees = unit(s.seed, p as u64, 0xA6EE) < a;
+                // confidence noisily tracks the agreement probability —
+                // this is what makes entropy *informative* for stopping
+                let noise = (unit(s.seed, p as u64, 0xC0F) - 0.5) * 0.12;
+                (agrees, (0.18 + 0.80 * a + noise).clamp(0.05, 0.995))
+            }
+        };
+        let argmax = if agree {
+            script_tok
+        } else {
+            // a deterministic wrong token ≠ script
+            let alt = 3 + (unit(s.seed, p as u64, 0xBAD) * (SIM_VOCAB - 3) as f64) as u32;
+            if alt == script_tok { (alt - 3 + 1) % (SIM_VOCAB - 3) + 3 } else { alt }
+        };
+        // synthesize an actual logit row: peak `conf`, runner-up, uniform tail
+        let v = SIM_VOCAB as usize;
+        let conf = conf as f32;
+        let p2 = (1.0 - conf) * 0.5;
+        let tail = (1.0 - conf - p2).max(1e-6) / (v - 2) as f32;
+        let mut logits = vec![tail.ln(); v];
+        let runner = (argmax as usize + 1 - 3) % (v - 3) + 3;
+        logits[argmax as usize] = conf.ln();
+        logits[runner] = p2.max(1e-6).ln();
+        TokenSignals::from_logits(&logits)
+    }
+}
+
+impl LanguageModel for SimModel {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn reset(&mut self) {
+        self.cur = 0;
+    }
+
+    fn block(&mut self, tokens: &[u32], start: usize) -> anyhow::Result<Vec<TokenSignals>> {
+        anyhow::ensure!(start == self.cur, "non-contiguous block: start {start} cur {}", self.cur);
+        anyhow::ensure!(!tokens.is_empty(), "empty block");
+        self.cost.calls += 1;
+        self.cost.rows += tokens.len() as u64;
+        self.cost.padded_rows += tokens.len() as u64;
+        self.cur = start + tokens.len();
+        // row i = prediction for position start+i+1
+        Ok((0..tokens.len()).map(|i| self.row_for(start + i + 1)).collect())
+    }
+
+    fn cur(&self) -> usize {
+        self.cur
+    }
+
+    fn rollback(&mut self, to: usize) {
+        self.cur = self.cur.min(to);
+    }
+
+    fn max_seq(&self) -> usize {
+        SIM_MAX_SEQ
+    }
+
+    fn cost(&self) -> ModelCost {
+        self.cost
+    }
+
+    fn rel_cost(&self) -> f64 {
+        self.rel_cost
+    }
+}
+
+/// Convenience: a (draft, target) pair over a fresh scenario.
+pub fn sim_pair(seed: u64, category: &str, quality: f32) -> (SimModel, SimModel) {
+    let sc = Scenario::new(seed, category);
+    (SimModel::draft(sc, quality, 1.0 / 20.0), SimModel::target(sc))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_rollback_consistent() {
+        let sc = Scenario::new(42, "coding");
+        let mut m = SimModel::draft(sc, 0.9, 0.05);
+        let a = m.block(&[5, 6, 7, 8], 0).unwrap();
+        m.rollback(2);
+        let b = m.block(&[7, 8], 2).unwrap();
+        assert_eq!(a[2..], b[..], "re-fed rows must match");
+    }
+
+    #[test]
+    fn contiguity_enforced() {
+        let sc = Scenario::new(1, "qa");
+        let mut m = SimModel::target(sc);
+        m.block(&[3], 0).unwrap();
+        assert!(m.block(&[3], 5).is_err());
+    }
+
+    #[test]
+    fn coding_easier_than_prose() {
+        let mut agree_coding = 0;
+        let mut agree_prose = 0;
+        let n = 2000;
+        for seed in 0..n {
+            let (mut d, t) = sim_pair(seed, "coding", 0.9);
+            let row = d.block(&[3], 0).unwrap()[0];
+            if row.argmax == t.scenario.script(1) {
+                agree_coding += 1;
+            }
+            let (mut d, t) = sim_pair(seed, "writing", 0.9);
+            let row = d.block(&[3], 0).unwrap()[0];
+            if row.argmax == t.scenario.script(1) {
+                agree_prose += 1;
+            }
+        }
+        assert!(
+            agree_coding > agree_prose + n as i32 / 20,
+            "coding {agree_coding} vs prose {agree_prose}"
+        );
+    }
+
+    #[test]
+    fn entropy_is_informative_about_agreement() {
+        // split rows at the median entropy; low-entropy rows must agree
+        // more often (that is what makes the stop signals informative)
+        let mut rows = Vec::new();
+        for seed in 0..3000u64 {
+            let (mut d, t) = sim_pair(seed, "writing", 0.85);
+            let row = d.block(&[3], 0).unwrap()[0];
+            rows.push((row.sqrt_entropy, row.argmax == t.scenario.script(1)));
+        }
+        // compare the lowest vs highest entropy quartiles
+        let mut ents: Vec<f32> = rows.iter().map(|r| r.0).collect();
+        ents.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q1 = ents[ents.len() / 4];
+        let q3 = ents[3 * ents.len() / 4];
+        let mut lo = (0, 0);
+        let mut hi = (0, 0);
+        for (e, agrees) in rows {
+            if e <= q1 {
+                lo.0 += agrees as i32;
+                lo.1 += 1;
+            } else if e >= q3 {
+                hi.0 += agrees as i32;
+                hi.1 += 1;
+            }
+        }
+        let rate = |b: &(i32, i32)| b.0 as f64 / b.1.max(1) as f64;
+        assert!(lo.1 > 100 && hi.1 > 100, "both buckets populated: {lo:?} {hi:?}");
+        assert!(
+            rate(&lo) > rate(&hi) + 0.1,
+            "low-entropy agree {:.2} vs high {:.2}",
+            rate(&lo),
+            rate(&hi)
+        );
+    }
+
+    #[test]
+    fn target_signals_are_confident() {
+        let sc = Scenario::new(7, "coding");
+        let mut t = SimModel::target(sc);
+        let rows = t.block(&[3, 4, 5], 0).unwrap();
+        for r in rows {
+            assert!(r.top1 > 0.5);
+        }
+    }
+
+    #[test]
+    fn cost_counters_accumulate() {
+        let sc = Scenario::new(7, "qa");
+        let mut m = SimModel::target(sc);
+        m.block(&[3, 4], 0).unwrap();
+        m.block(&[5], 2).unwrap();
+        assert_eq!(m.cost().calls, 2);
+        assert_eq!(m.cost().rows, 3);
+    }
+}

@@ -1,0 +1,51 @@
+//! Backend-agnostic model interface shared by the PJRT backend (real tiny
+//! LMs from artifacts/) and the simulator backend (synthetic correlated
+//! streams). The speculative-decoding session (spec/session.rs) is written
+//! against this trait only.
+
+use crate::signals::TokenSignals;
+
+/// Cumulative compute counters (the analytic cost model of DESIGN.md §3).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ModelCost {
+    /// number of block invocations (≈ kernel-launch / dispatch count)
+    pub calls: u64,
+    /// total token rows processed (≈ FLOPs ∝ rows × params)
+    pub rows: u64,
+    /// padded rows actually computed (bucket waste included)
+    pub padded_rows: u64,
+}
+
+pub trait LanguageModel: Send {
+    /// Human-readable backend/model identifier.
+    fn name(&self) -> String;
+
+    /// Start a fresh sequence: the write cursor returns to 0. KV contents
+    /// need not be cleared — garbage beyond the cursor is never read.
+    fn reset(&mut self);
+
+    /// Feed `tokens` at absolute position `start`, which must equal
+    /// `cur()` (contiguity invariant). Returns one signal row per token:
+    /// row i describes the model's next-token distribution after input
+    /// position start+i. Advances `cur` by tokens.len().
+    fn block(&mut self, tokens: &[u32], start: usize) -> anyhow::Result<Vec<TokenSignals>>;
+
+    /// Number of tokens processed as inputs so far (== next input position).
+    fn cur(&self) -> usize;
+
+    /// Roll the cursor back to `to` (no-op if already &le; to). KV beyond
+    /// the cursor becomes dead and will be overwritten on re-feed.
+    fn rollback(&mut self, to: usize);
+
+    /// Maximum sequence length the KV cache supports.
+    fn max_seq(&self) -> usize;
+
+    /// Cumulative cost counters since construction.
+    fn cost(&self) -> ModelCost;
+
+    /// Relative cost of one token row vs target-base (for the analytic
+    /// cost model; ≈ param ratio).
+    fn rel_cost(&self) -> f64 {
+        1.0
+    }
+}

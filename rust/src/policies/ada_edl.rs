@@ -1,0 +1,139 @@
+//! AdaEDL (Agrawal et al., 2024; paper App. A.1): entropy-based lower bound
+//! on the token acceptance probability with an *adaptive* threshold λ.
+//!
+//! Stop when  1 - sqrt(γ_e · H(p)) < λ_t.
+//! After each verification round with acceptance ratio r:
+//!     accept_rate ← β1·accept_rate + (1-β1)·r
+//!     λ ← β2·λ + (1-β2)·(λ + ε·sign(α - r))
+//! i.e. λ creeps up (stop earlier) while acceptance runs below the target
+//! α and creeps down when acceptance is comfortable.
+
+use super::StopPolicy;
+use crate::signals::TokenSignals;
+
+#[derive(Clone, Debug)]
+pub struct AdaEdl {
+    /// entropy scale γ_e (the paper overloads γ; this is AdaEDL's own
+    /// scaling hyperparameter, not the draft length)
+    pub gamma_e: f32,
+    /// target acceptance ratio α
+    pub alpha: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub epsilon: f32,
+    lambda0: f32,
+    lambda: f32,
+    accept_rate: f32,
+}
+
+impl AdaEdl {
+    pub fn new(gamma_e: f32, lambda0: f32) -> Self {
+        AdaEdl {
+            gamma_e,
+            alpha: 0.8,
+            beta1: 0.9,
+            beta2: 0.9,
+            epsilon: 0.02,
+            lambda0,
+            lambda: lambda0,
+            accept_rate: 0.8,
+        }
+    }
+
+    pub fn lambda(&self) -> f32 {
+        self.lambda
+    }
+}
+
+impl Default for AdaEdl {
+    fn default() -> Self {
+        // gamma_e scaled for the char-level vocab (H up to ln 96 ≈ 4.6):
+        // sqrt(0.15 * H) spans [0, 0.83] over realistic entropies.
+        AdaEdl::new(0.15, 0.45)
+    }
+}
+
+impl StopPolicy for AdaEdl {
+    fn name(&self) -> String {
+        format!("ada-edl@g{:.2}", self.gamma_e)
+    }
+
+    fn should_stop(&mut self, sig: &TokenSignals, _idx: usize) -> bool {
+        // 1 - sqrt(γ_e·H) is the acceptance-probability lower bound
+        1.0 - (self.gamma_e * sig.entropy).max(0.0).sqrt() < self.lambda
+    }
+
+    fn on_verify(&mut self, accepted: usize, drafted: usize) {
+        if drafted == 0 {
+            return;
+        }
+        let r = accepted as f32 / drafted as f32;
+        self.accept_rate = self.beta1 * self.accept_rate + (1.0 - self.beta1) * r;
+        let drift = self.epsilon * (self.alpha - r).signum();
+        self.lambda = self.beta2 * self.lambda + (1.0 - self.beta2) * (self.lambda + drift);
+        self.lambda = self.lambda.clamp(0.0, 0.95);
+    }
+
+    fn reset(&mut self) {
+        self.lambda = self.lambda0;
+        self.accept_rate = 0.8;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sig(entropy: f32) -> TokenSignals {
+        TokenSignals {
+            argmax: 0, top1: 0.5, top2: 0.1, margin: 0.4, entropy,
+            sqrt_entropy: entropy.sqrt(), logsumexp: 0.0, max_logit: 0.0,
+        }
+    }
+
+    #[test]
+    fn stops_on_high_entropy_bound() {
+        let mut p = AdaEdl::default();
+        assert!(!p.should_stop(&sig(0.01), 0)); // bound ~0.96 > λ
+        assert!(p.should_stop(&sig(4.0), 1)); // bound ~0.23 < λ
+    }
+
+    #[test]
+    fn lambda_rises_on_rejections_falls_on_accepts() {
+        let mut p = AdaEdl::default();
+        let l0 = p.lambda();
+        for _ in 0..20 {
+            p.on_verify(0, 6); // everything rejected -> stop earlier
+        }
+        assert!(p.lambda() > l0, "{} !> {l0}", p.lambda());
+        let l1 = p.lambda();
+        for _ in 0..40 {
+            p.on_verify(6, 6); // everything accepted -> draft longer
+        }
+        assert!(p.lambda() < l1);
+    }
+
+    #[test]
+    fn reset_restores_initial_lambda() {
+        let mut p = AdaEdl::default();
+        let l0 = p.lambda();
+        p.on_verify(0, 6);
+        p.on_verify(0, 6);
+        assert_ne!(p.lambda(), l0);
+        p.reset();
+        assert_eq!(p.lambda(), l0);
+    }
+
+    #[test]
+    fn lambda_stays_clamped() {
+        let mut p = AdaEdl::default();
+        for _ in 0..5000 {
+            p.on_verify(0, 6);
+        }
+        assert!(p.lambda() <= 0.95);
+        for _ in 0..5000 {
+            p.on_verify(6, 6);
+        }
+        assert!(p.lambda() >= 0.0);
+    }
+}

@@ -1,0 +1,54 @@
+//! Logit Margin (paper App. A.1, TapOut's second new arm): stop when the
+//! top-1/top-2 probability gap collapses — a two-way-race indicator that
+//! fires even when entropy stays moderate.
+
+use super::StopPolicy;
+use crate::signals::TokenSignals;
+
+#[derive(Clone, Debug)]
+pub struct LogitMargin {
+    pub h: f32,
+}
+
+impl LogitMargin {
+    /// Paper default threshold h = 0.2.
+    pub fn new(h: f32) -> Self {
+        LogitMargin { h }
+    }
+}
+
+impl Default for LogitMargin {
+    fn default() -> Self {
+        LogitMargin::new(0.2)
+    }
+}
+
+impl StopPolicy for LogitMargin {
+    fn name(&self) -> String {
+        format!("logit-margin@{:.2}", self.h)
+    }
+
+    fn should_stop(&mut self, sig: &TokenSignals, _idx: usize) -> bool {
+        sig.margin <= self.h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sig(margin: f32) -> TokenSignals {
+        TokenSignals {
+            argmax: 0, top1: 0.5, top2: 0.5 - margin, margin, entropy: 1.0,
+            sqrt_entropy: 1.0, logsumexp: 0.0, max_logit: 0.0,
+        }
+    }
+
+    #[test]
+    fn stops_on_collapsed_margin() {
+        let mut p = LogitMargin::new(0.2);
+        assert!(!p.should_stop(&sig(0.5), 0));
+        assert!(p.should_stop(&sig(0.2), 1)); // <= h stops
+        assert!(p.should_stop(&sig(0.05), 2));
+    }
+}

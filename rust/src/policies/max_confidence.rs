@@ -1,0 +1,53 @@
+//! Max-Confidence (paper Table 1): stop when p(top-1) < h. The simplest
+//! confidence heuristic — drafts while the draft model is sure of itself.
+
+use super::StopPolicy;
+use crate::signals::TokenSignals;
+
+#[derive(Clone, Debug)]
+pub struct MaxConfidence {
+    pub h: f32,
+}
+
+impl MaxConfidence {
+    /// Paper default threshold h = 0.8.
+    pub fn new(h: f32) -> Self {
+        MaxConfidence { h }
+    }
+}
+
+impl Default for MaxConfidence {
+    fn default() -> Self {
+        MaxConfidence::new(0.8)
+    }
+}
+
+impl StopPolicy for MaxConfidence {
+    fn name(&self) -> String {
+        format!("max-conf@{:.2}", self.h)
+    }
+
+    fn should_stop(&mut self, sig: &TokenSignals, _idx: usize) -> bool {
+        sig.top1 < self.h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sig(top1: f32) -> TokenSignals {
+        TokenSignals {
+            argmax: 0, top1, top2: 0.0, margin: top1, entropy: 0.0,
+            sqrt_entropy: 0.0, logsumexp: 0.0, max_logit: 0.0,
+        }
+    }
+
+    #[test]
+    fn stops_below_threshold() {
+        let mut p = MaxConfidence::new(0.8);
+        assert!(!p.should_stop(&sig(0.95), 0));
+        assert!(!p.should_stop(&sig(0.80), 1));
+        assert!(p.should_stop(&sig(0.79), 2));
+    }
+}

@@ -1,0 +1,47 @@
+//! Stop policies — the TapOut bandit's arm pool (paper Table 1 / App. A.1)
+//! plus the Static-γ baseline and the training-based SpecDec++ classifier.
+//!
+//! A policy answers one question after each drafted token: *stop drafting
+//! and verify now?* It sees only the L1 signal row for the token plus its
+//! own per-request state. `on_verify` delivers the session outcome so
+//! stateful policies (AdaEDL's λ, SpecDec++'s EMA feature) can adapt.
+
+pub mod ada_edl;
+pub mod logit_margin;
+pub mod max_confidence;
+pub mod pool;
+pub mod specdecpp;
+pub mod static_len;
+pub mod svip;
+pub mod svip_diff;
+
+pub use ada_edl::AdaEdl;
+pub use logit_margin::LogitMargin;
+pub use max_confidence::MaxConfidence;
+pub use specdecpp::SpecDecPP;
+pub use static_len::{AlwaysContinue, StaticLen};
+pub use svip::Svip;
+pub use svip_diff::SvipDiff;
+
+use crate::signals::TokenSignals;
+
+pub trait StopPolicy: Send {
+    /// Short stable identifier (used in reports and bandit arm labels).
+    fn name(&self) -> String;
+
+    /// Called once per drafting session before the first proposal.
+    fn on_session_start(&mut self) {}
+
+    /// Decide after drafting token `idx` (0-based within the session) with
+    /// signal row `sig`: true = stop drafting, send for verification.
+    fn should_stop(&mut self, sig: &TokenSignals, idx: usize) -> bool;
+
+    /// Verification feedback: `accepted` of `drafted` proposals survived.
+    fn on_verify(&mut self, _accepted: usize, _drafted: usize) {}
+
+    /// Reset all per-request state (start of a new generation).
+    fn reset(&mut self) {}
+}
+
+/// Boxed-policy convenience used by the arm pool and the controllers.
+pub type BoxedPolicy = Box<dyn StopPolicy>;

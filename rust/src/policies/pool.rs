@@ -1,0 +1,69 @@
+//! Arm-pool construction for the TapOut bandit.
+//!
+//! `default_arms()` is the paper's Table 1 configuration: one arm per
+//! training-free technique with its fixed (untuned) threshold.
+//! `multi_threshold_arms()` is the App. A.2 ablation pool: several
+//! thresholds per technique (found there to be ~12% *worse* overall).
+
+use super::{AdaEdl, BoxedPolicy, LogitMargin, MaxConfidence, Svip, SvipDiff};
+
+/// Paper Table 1: the five training-free arms with fixed thresholds.
+pub fn default_arms() -> Vec<BoxedPolicy> {
+    vec![
+        Box::new(MaxConfidence::new(0.8)),
+        Box::new(Svip::new(0.6)),
+        Box::new(AdaEdl::default()),
+        Box::new(SvipDiff::new(0.2)),
+        Box::new(LogitMargin::new(0.2)),
+    ]
+}
+
+pub fn arm_names() -> Vec<String> {
+    default_arms().iter().map(|a| a.name()).collect()
+}
+
+/// App. A.2 ablation: 3 thresholds per thresholded technique (13 arms).
+pub fn multi_threshold_arms() -> Vec<BoxedPolicy> {
+    let mut arms: Vec<BoxedPolicy> = Vec::new();
+    for h in [0.6, 0.8, 0.9] {
+        arms.push(Box::new(MaxConfidence::new(h)));
+    }
+    for h in [0.2, 0.4, 0.6] {
+        arms.push(Box::new(Svip::new(h)));
+    }
+    arms.push(Box::new(AdaEdl::default()));
+    for h in [0.1, 0.2, 0.4] {
+        arms.push(Box::new(SvipDiff::new(h)));
+    }
+    for h in [0.1, 0.2, 0.4] {
+        arms.push(Box::new(LogitMargin::new(h)));
+    }
+    arms
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_pool_matches_table1() {
+        let arms = default_arms();
+        assert_eq!(arms.len(), 5);
+        let names: Vec<String> = arms.iter().map(|a| a.name()).collect();
+        assert!(names.iter().any(|n| n.starts_with("max-conf@0.80")));
+        assert!(names.iter().any(|n| n.starts_with("svip@0.60")));
+        assert!(names.iter().any(|n| n.starts_with("ada-edl")));
+        assert!(names.iter().any(|n| n.starts_with("svip-diff@0.20")));
+        assert!(names.iter().any(|n| n.starts_with("logit-margin@0.20")));
+    }
+
+    #[test]
+    fn ablation_pool_is_larger_and_distinct() {
+        let arms = multi_threshold_arms();
+        assert_eq!(arms.len(), 13);
+        let mut names: Vec<String> = arms.iter().map(|a| a.name()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 13, "arm names must be unique");
+    }
+}

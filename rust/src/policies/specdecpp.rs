@@ -1,0 +1,179 @@
+//! SpecDec++ (Huang et al., 2025) — the training-based baseline of paper
+//! Table 4. Inference re-implementation of the residual MLP trained at
+//! build time by python/compile/train_classifier.py; weights come from
+//! artifacts/specdecpp.json.
+//!
+//! Features (standardized): [top1, top2, margin, entropy, sqrt_entropy,
+//! position/16, ema_accept]. Stops when p(accept) < threshold (0.7).
+
+use crate::signals::TokenSignals;
+use crate::util::Json;
+
+use super::StopPolicy;
+
+#[derive(Clone, Debug)]
+struct Layer {
+    w: Vec<Vec<f32>>, // [in][out]
+    b: Vec<f32>,
+}
+
+#[derive(Clone, Debug)]
+pub struct SpecDecPP {
+    mean: Vec<f32>,
+    std: Vec<f32>,
+    layers: Vec<Layer>,
+    pub threshold: f32,
+    ema_accept: f32,
+}
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+impl SpecDecPP {
+    pub fn from_json(j: &Json) -> Result<SpecDecPP, String> {
+        let grab = |k: &str| -> Result<Vec<f32>, String> {
+            Ok(j.get(k).ok_or(format!("missing {k}"))?.f64s().iter().map(|&x| x as f32).collect())
+        };
+        let mut layers = Vec::new();
+        for lj in j.get("layers").and_then(|x| x.as_arr()).ok_or("missing layers")? {
+            let w = lj
+                .get("w")
+                .and_then(|x| x.as_arr())
+                .ok_or("missing w")?
+                .iter()
+                .map(|row| row.f64s().iter().map(|&x| x as f32).collect())
+                .collect();
+            let b = lj.get("b").ok_or("missing b")?.f64s().iter().map(|&x| x as f32).collect();
+            layers.push(Layer { w, b });
+        }
+        Ok(SpecDecPP {
+            mean: grab("mean")?,
+            std: grab("std")?,
+            layers,
+            threshold: j.get("threshold").and_then(|x| x.as_f64()).unwrap_or(0.7) as f32,
+            ema_accept: 0.7,
+        })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<SpecDecPP, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        SpecDecPP::from_json(&Json::parse(&text)?)
+    }
+
+    fn matvec(l: &Layer, x: &[f32]) -> Vec<f32> {
+        let nout = l.b.len();
+        let mut out = l.b.clone();
+        for (i, &xi) in x.iter().enumerate() {
+            let row = &l.w[i];
+            for o in 0..nout {
+                out[o] += xi * row[o];
+            }
+        }
+        out
+    }
+
+    /// p(accept) for a drafted token.
+    pub fn predict(&self, sig: &TokenSignals, idx: usize) -> f32 {
+        let raw = [
+            sig.top1,
+            sig.top2,
+            sig.margin,
+            sig.entropy,
+            sig.sqrt_entropy,
+            idx as f32 / 16.0,
+            self.ema_accept,
+        ];
+        let x: Vec<f32> = raw
+            .iter()
+            .zip(self.mean.iter().zip(&self.std))
+            .map(|(&v, (&m, &s))| (v - m) / s)
+            .collect();
+        // input layer
+        let mut h: Vec<f32> = Self::matvec(&self.layers[0], &x).iter().map(|&v| silu(v)).collect();
+        // residual blocks
+        for l in &self.layers[1..self.layers.len() - 1] {
+            let y = Self::matvec(l, &h);
+            for (hi, yi) in h.iter_mut().zip(y) {
+                *hi += silu(yi);
+            }
+        }
+        let logit = Self::matvec(&self.layers[self.layers.len() - 1], &h)[0];
+        1.0 / (1.0 + (-logit).exp())
+    }
+}
+
+impl StopPolicy for SpecDecPP {
+    fn name(&self) -> String {
+        format!("specdec++@{:.2}", self.threshold)
+    }
+
+    fn should_stop(&mut self, sig: &TokenSignals, idx: usize) -> bool {
+        self.predict(sig, idx) < self.threshold
+    }
+
+    fn on_verify(&mut self, accepted: usize, drafted: usize) {
+        if drafted > 0 {
+            let r = accepted as f32 / drafted as f32;
+            self.ema_accept = 0.9 * self.ema_accept + 0.1 * r;
+        }
+    }
+
+    fn reset(&mut self) {
+        self.ema_accept = 0.7;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tiny hand-built classifier: p(accept) rises with margin.
+    fn toy() -> SpecDecPP {
+        let j = Json::parse(
+            r#"{
+              "mean": [0,0,0,0,0,0,0], "std": [1,1,1,1,1,1,1],
+              "threshold": 0.5,
+              "layers": [
+                {"w": [[0,0],[0,0],[4,4],[0,0],[0,0],[0,0],[0,0]], "b": [0,0]},
+                {"w": [[0,0],[0,0]], "b": [0,0]},
+                {"w": [[1],[1]], "b": [0]}
+              ]
+            }"#,
+        )
+        .unwrap();
+        SpecDecPP::from_json(&j).unwrap()
+    }
+
+    fn sig(margin: f32) -> TokenSignals {
+        TokenSignals {
+            argmax: 0, top1: 0.5, top2: 0.5 - margin, margin, entropy: 0.0,
+            sqrt_entropy: 0.0, logsumexp: 0.0, max_logit: 0.0,
+        }
+    }
+
+    #[test]
+    fn monotone_in_strong_feature() {
+        let c = toy();
+        let lo = c.predict(&sig(-1.0), 0);
+        let hi = c.predict(&sig(1.0), 0);
+        assert!(hi > lo);
+        assert!((0.0..=1.0).contains(&lo) && (0.0..=1.0).contains(&hi));
+    }
+
+    #[test]
+    fn stop_decision_follows_threshold() {
+        let mut c = toy();
+        assert!(c.should_stop(&sig(-1.0), 0)); // low p(accept)
+        assert!(!c.should_stop(&sig(1.0), 0)); // high p(accept)
+    }
+
+    #[test]
+    fn ema_updates_and_resets() {
+        let mut c = toy();
+        c.on_verify(0, 8);
+        assert!(c.ema_accept < 0.7);
+        c.reset();
+        assert_eq!(c.ema_accept, 0.7);
+    }
+}

@@ -1,0 +1,71 @@
+//! Static-k drafting (the vanilla speculative-decoding baseline; the
+//! paper's Static-6 rows) and the AlwaysContinue probe used for trace
+//! collection and the Fig. 2 entropy study.
+
+use super::StopPolicy;
+use crate::signals::TokenSignals;
+
+#[derive(Clone, Debug)]
+pub struct StaticLen {
+    pub k: usize,
+}
+
+impl StaticLen {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1);
+        StaticLen { k }
+    }
+}
+
+impl StopPolicy for StaticLen {
+    fn name(&self) -> String {
+        format!("static-{}", self.k)
+    }
+
+    fn should_stop(&mut self, _sig: &TokenSignals, idx: usize) -> bool {
+        idx + 1 >= self.k
+    }
+}
+
+/// Never stops on its own — the session's γ_max cap ends drafting. Used to
+/// harvest full-length draft traces (classifier training, entropy studies).
+#[derive(Clone, Debug, Default)]
+pub struct AlwaysContinue;
+
+impl StopPolicy for AlwaysContinue {
+    fn name(&self) -> String {
+        "always-continue".into()
+    }
+
+    fn should_stop(&mut self, _sig: &TokenSignals, _idx: usize) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sig() -> TokenSignals {
+        TokenSignals {
+            argmax: 0, top1: 1.0, top2: 0.0, margin: 1.0, entropy: 0.0,
+            sqrt_entropy: 0.0, logsumexp: 0.0, max_logit: 0.0,
+        }
+    }
+
+    #[test]
+    fn static_k_stops_at_k() {
+        let mut p = StaticLen::new(3);
+        assert!(!p.should_stop(&sig(), 0));
+        assert!(!p.should_stop(&sig(), 1));
+        assert!(p.should_stop(&sig(), 2));
+    }
+
+    #[test]
+    fn always_continue_never_stops() {
+        let mut p = AlwaysContinue;
+        for i in 0..1000 {
+            assert!(!p.should_stop(&sig(), i));
+        }
+    }
+}

@@ -1,0 +1,53 @@
+//! SVIP (Zhang et al., 2025; paper Table 1): stop when sqrt(H(p)) > h —
+//! draft-model entropy as a self-verification signal.
+
+use super::StopPolicy;
+use crate::signals::TokenSignals;
+
+#[derive(Clone, Debug)]
+pub struct Svip {
+    pub h: f32,
+}
+
+impl Svip {
+    /// Paper default threshold h = 0.6.
+    pub fn new(h: f32) -> Self {
+        Svip { h }
+    }
+}
+
+impl Default for Svip {
+    fn default() -> Self {
+        Svip::new(0.6)
+    }
+}
+
+impl StopPolicy for Svip {
+    fn name(&self) -> String {
+        format!("svip@{:.2}", self.h)
+    }
+
+    fn should_stop(&mut self, sig: &TokenSignals, _idx: usize) -> bool {
+        sig.sqrt_entropy > self.h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sig(sqrt_entropy: f32) -> TokenSignals {
+        TokenSignals {
+            argmax: 0, top1: 0.5, top2: 0.1, margin: 0.4,
+            entropy: sqrt_entropy * sqrt_entropy, sqrt_entropy,
+            logsumexp: 0.0, max_logit: 0.0,
+        }
+    }
+
+    #[test]
+    fn stops_on_high_entropy() {
+        let mut p = Svip::new(0.6);
+        assert!(!p.should_stop(&sig(0.3), 0));
+        assert!(p.should_stop(&sig(0.9), 1));
+    }
+}

@@ -1,0 +1,80 @@
+//! SVIP-Difference (paper App. A.1, one of TapOut's two new arms): stop on
+//! an entropy *spike* — sqrt(H_t) - sqrt(H_{t-1}) > h. Catches transitions
+//! from confident runs into uncertain territory even when the absolute
+//! entropy is still below a global threshold.
+
+use super::StopPolicy;
+use crate::signals::TokenSignals;
+
+#[derive(Clone, Debug)]
+pub struct SvipDiff {
+    pub h: f32,
+    prev: Option<f32>,
+}
+
+impl SvipDiff {
+    /// Paper default threshold h = 0.2.
+    pub fn new(h: f32) -> Self {
+        SvipDiff { h, prev: None }
+    }
+}
+
+impl Default for SvipDiff {
+    fn default() -> Self {
+        SvipDiff::new(0.2)
+    }
+}
+
+impl StopPolicy for SvipDiff {
+    fn name(&self) -> String {
+        format!("svip-diff@{:.2}", self.h)
+    }
+
+    fn on_session_start(&mut self) {
+        self.prev = None;
+    }
+
+    fn should_stop(&mut self, sig: &TokenSignals, _idx: usize) -> bool {
+        let stop = match self.prev {
+            Some(prev) => sig.sqrt_entropy - prev > self.h,
+            None => false, // no spike measurable on the first token
+        };
+        self.prev = Some(sig.sqrt_entropy);
+        stop
+    }
+
+    fn reset(&mut self) {
+        self.prev = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sig(sq: f32) -> TokenSignals {
+        TokenSignals {
+            argmax: 0, top1: 0.5, top2: 0.1, margin: 0.4, entropy: sq * sq,
+            sqrt_entropy: sq, logsumexp: 0.0, max_logit: 0.0,
+        }
+    }
+
+    #[test]
+    fn stops_on_spike_not_level() {
+        let mut p = SvipDiff::new(0.2);
+        p.on_session_start();
+        assert!(!p.should_stop(&sig(1.0), 0)); // high but first token
+        assert!(!p.should_stop(&sig(1.1), 1)); // drift, no spike
+        assert!(p.should_stop(&sig(1.5), 2)); // spike of 0.4
+    }
+
+    #[test]
+    fn session_start_clears_history() {
+        let mut p = SvipDiff::new(0.2);
+        p.on_session_start();
+        assert!(!p.should_stop(&sig(0.1), 0));
+        p.on_session_start();
+        // would be a spike vs 0.1, but history was cleared
+        assert!(!p.should_stop(&sig(0.9), 0));
+    }
+}

@@ -1,0 +1,117 @@
+//! PJRT runtime — the only module that touches the `xla` crate.
+//!
+//! Loads HLO-text artifacts (see python/compile/aot.py), compiles them on
+//! the CPU PJRT client, and provides typed helpers for the device-resident
+//! world-buffer protocol: weights and KV worlds live on device as
+//! `PjRtBuffer`s fed back through `execute_b`; the host only reads the tiny
+//! signal out-region via offset `copy_raw_to_host_sync`.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+/// PJRT wrapper types hold raw pointers and are not `Send` by declaration,
+/// but the CPU PJRT client is internally synchronized and we only ever use
+/// each buffer/executable from one engine thread at a time (ownership moves
+/// with the model instance). This wrapper documents and confines that
+/// assumption.
+pub struct SendWrap<T>(pub T);
+
+// SAFETY: see type-level comment; all uses are single-threaded-at-a-time,
+// moves between threads happen only at request-free points.
+unsafe impl<T> Send for SendWrap<T> {}
+unsafe impl<T> Sync for SendWrap<T> {}
+
+#[derive(Clone)]
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text module (text, not proto — see
+    /// /opt/xla-example/README.md on the 64-bit-id incompatibility).
+    pub fn compile_hlo_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+
+    pub fn f32_to_device(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    pub fn i32_to_device(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    pub fn scalar_i32(&self, v: i32) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(&[v], &[], None)?)
+    }
+}
+
+/// A compiled executable cache keyed by shape bucket, shared by all model
+/// instances (serving slots) of one model.
+pub struct ExecutableCache {
+    runtime: Runtime,
+    files: HashMap<usize, std::path::PathBuf>,
+    compiled: Mutex<HashMap<usize, Arc<SendWrap<xla::PjRtLoadedExecutable>>>>,
+}
+
+impl ExecutableCache {
+    pub fn new(runtime: Runtime, files: HashMap<usize, std::path::PathBuf>) -> Self {
+        ExecutableCache { runtime, files, compiled: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn buckets(&self) -> Vec<usize> {
+        let mut ks: Vec<usize> = self.files.keys().copied().collect();
+        ks.sort_unstable();
+        ks
+    }
+
+    /// Smallest bucket >= n.
+    pub fn bucket_for(&self, n: usize) -> Result<usize> {
+        self.buckets()
+            .into_iter()
+            .find(|&k| k >= n)
+            .ok_or_else(|| anyhow::anyhow!("no shape bucket >= {n}"))
+    }
+
+    /// Get (lazily compiling) the executable for bucket `k`.
+    pub fn get(&self, k: usize) -> Result<Arc<SendWrap<xla::PjRtLoadedExecutable>>> {
+        let mut map = self.compiled.lock().unwrap();
+        if let Some(e) = map.get(&k) {
+            return Ok(e.clone());
+        }
+        let path = self
+            .files
+            .get(&k)
+            .ok_or_else(|| anyhow::anyhow!("no HLO file for bucket {k}"))?;
+        let exe = Arc::new(SendWrap(self.runtime.compile_hlo_file(path)?));
+        map.insert(k, exe.clone());
+        Ok(exe)
+    }
+
+    /// Eagerly compile a set of buckets (engine warmup).
+    pub fn warmup(&self, ks: &[usize]) -> Result<()> {
+        for &k in ks {
+            if self.files.contains_key(&k) {
+                self.get(k)?;
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,151 @@
+//! `TokenSignals` — the L1 fused stop-signal head's per-token output.
+//!
+//! Mirrors python/compile/kernels/signals.py exactly: one 8-float row per
+//! drafted position, read from the device out-region. Every stop policy
+//! consumes only this struct, so the policies are backend-agnostic (PJRT
+//! models and the simulator produce the same shape).
+
+pub const SIG_WIDTH: usize = 8;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TokenSignals {
+    /// argmax token id (greedy proposal / greedy verification token)
+    pub argmax: u32,
+    /// p(top-1)
+    pub top1: f32,
+    /// p(top-2)
+    pub top2: f32,
+    /// top1 - top2
+    pub margin: f32,
+    /// H(p) in nats
+    pub entropy: f32,
+    /// sqrt(H(p)) — the SVIP statistic
+    pub sqrt_entropy: f32,
+    /// logsumexp of the logits
+    pub logsumexp: f32,
+    /// max logit
+    pub max_logit: f32,
+}
+
+impl TokenSignals {
+    pub fn from_row(row: &[f32]) -> TokenSignals {
+        debug_assert!(row.len() >= SIG_WIDTH);
+        TokenSignals {
+            argmax: row[0] as u32,
+            top1: row[1],
+            top2: row[2],
+            margin: row[3],
+            entropy: row[4],
+            sqrt_entropy: row[5],
+            logsumexp: row[6],
+            max_logit: row[7],
+        }
+    }
+
+    /// Compute signals from a raw logits row (host-side reference path;
+    /// used by the simulator backend and unit tests).
+    pub fn from_logits(logits: &[f32]) -> TokenSignals {
+        assert!(logits.len() >= 2);
+        let mut max = f32::NEG_INFINITY;
+        let mut argmax = 0usize;
+        for (i, &x) in logits.iter().enumerate() {
+            if x > max {
+                max = x;
+                argmax = i;
+            }
+        }
+        let mut sum = 0.0f64;
+        let mut ex = 0.0f64; // sum e*(x-m)
+        let mut max2 = f32::NEG_INFINITY;
+        for (i, &x) in logits.iter().enumerate() {
+            let e = ((x - max) as f64).exp();
+            sum += e;
+            ex += e * (x - max) as f64;
+            if i != argmax && x > max2 {
+                max2 = x;
+            }
+        }
+        let lse = max as f64 + sum.ln();
+        let top1 = (1.0 / sum) as f32; // exp(0)/sum
+        let top2 = (((max2 - max) as f64).exp() / sum) as f32;
+        // H = lse - E_p[x] = ln(sum) - ex/sum
+        let ent = (sum.ln() - ex / sum).max(0.0) as f32;
+        TokenSignals {
+            argmax: argmax as u32,
+            top1,
+            top2,
+            margin: top1 - top2,
+            entropy: ent,
+            sqrt_entropy: ent.sqrt(),
+            logsumexp: lse as f32,
+            max_logit: max,
+        }
+    }
+
+    pub fn to_row(&self) -> [f32; SIG_WIDTH] {
+        [
+            self.argmax as f32,
+            self.top1,
+            self.top2,
+            self.margin,
+            self.entropy,
+            self.sqrt_entropy,
+            self.logsumexp,
+            self.max_logit,
+        ]
+    }
+
+    /// Parse consecutive rows from a flat out-region slice.
+    pub fn parse_rows(flat: &[f32], n: usize) -> Vec<TokenSignals> {
+        (0..n)
+            .map(|i| TokenSignals::from_row(&flat[i * SIG_WIDTH..(i + 1) * SIG_WIDTH]))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_logits_uniform() {
+        let v = 96;
+        let s = TokenSignals::from_logits(&vec![0.0; v]);
+        assert!((s.top1 - 1.0 / v as f32).abs() < 1e-6);
+        assert!((s.entropy - (v as f32).ln()).abs() < 1e-4);
+        assert!(s.margin.abs() < 1e-6);
+    }
+
+    #[test]
+    fn from_logits_peaked() {
+        let mut x = vec![0.0f32; 50];
+        x[17] = 50.0;
+        let s = TokenSignals::from_logits(&x);
+        assert_eq!(s.argmax, 17);
+        assert!(s.top1 > 0.999);
+        assert!(s.entropy < 1e-3);
+    }
+
+    #[test]
+    fn row_roundtrip() {
+        let s = TokenSignals::from_logits(&[1.0, 3.0, 2.0, -1.0]);
+        let r = s.to_row();
+        let s2 = TokenSignals::from_row(&r);
+        assert_eq!(s, s2);
+        let rows: Vec<f32> = [s.to_row(), s.to_row()].concat();
+        assert_eq!(TokenSignals::parse_rows(&rows, 2), vec![s, s2]);
+    }
+
+    #[test]
+    fn entropy_consistency_vs_direct() {
+        // direct -sum p ln p on a random-ish row
+        let x: Vec<f32> = (0..32).map(|i| ((i * 37 % 13) as f32) * 0.37 - 2.0).collect();
+        let s = TokenSignals::from_logits(&x);
+        let m = x.iter().cloned().fold(f32::MIN, f32::max);
+        let es: Vec<f64> = x.iter().map(|&v| ((v - m) as f64).exp()).collect();
+        let z: f64 = es.iter().sum();
+        let h: f64 = -es.iter().map(|e| (e / z) * (e / z).ln()).sum::<f64>();
+        assert!((s.entropy as f64 - h).abs() < 1e-5, "{} vs {h}", s.entropy);
+        assert!((s.top1 + s.top2 - s.margin - 2.0 * s.top2).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,8 @@
+//! Speculative decoding core: Algorithm 1 session loop + the stop
+//! controller that hosts the paper's methods.
+
+pub mod session;
+pub mod stop;
+
+pub use session::{generate, greedy, GenConfig, GenResult, RoundStat, BOS, EOS};
+pub use stop::{MethodSpec, StopController};

@@ -1,0 +1,215 @@
+//! The speculative-decoding session loop — Algorithm 1 of the paper, with
+//! greedy (exact-match) verification and the contiguous-cursor KV protocol
+//! described in models/traits.rs and DESIGN.md §4.
+
+use std::time::Instant;
+
+use crate::models::traits::LanguageModel;
+use crate::signals::TokenSignals;
+use crate::util::Rng;
+
+use super::stop::StopController;
+
+pub const EOS: u32 = 2;
+pub const BOS: u32 = 1;
+
+#[derive(Clone, Copy, Debug)]
+pub struct GenConfig {
+    pub max_new: usize,
+    /// max draft length γ (128 in the paper's dynamic setting)
+    pub gamma_max: usize,
+    /// stop at EOS (disable for fixed-length benchmarking)
+    pub stop_at_eos: bool,
+    /// keep per-token signal rows in the round stats (Fig. 2 / classifier)
+    pub collect_signals: bool,
+}
+
+impl Default for GenConfig {
+    fn default() -> Self {
+        GenConfig { max_new: 160, gamma_max: 128, stop_at_eos: true, collect_signals: false }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct RoundStat {
+    pub drafted: usize,
+    pub accepted: usize,
+    /// bandit arm that drove this session (Seq controllers only)
+    pub arm: Option<usize>,
+    pub draft_ns: u64,
+    pub verify_ns: u64,
+    pub signals: Vec<TokenSignals>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct GenResult {
+    /// full committed sequence (prompt + generation)
+    pub tokens: Vec<u32>,
+    pub prompt_len: usize,
+    pub rounds: Vec<RoundStat>,
+    pub wall_ns: u64,
+}
+
+impl GenResult {
+    pub fn new_tokens(&self) -> &[u32] {
+        &self.tokens[self.prompt_len..]
+    }
+
+    pub fn drafted(&self) -> usize {
+        self.rounds.iter().map(|r| r.drafted).sum()
+    }
+
+    pub fn accepted(&self) -> usize {
+        self.rounds.iter().map(|r| r.accepted).sum()
+    }
+
+    /// mean accepted length per drafting session (paper's m)
+    pub fn mean_accepted(&self) -> f64 {
+        if self.rounds.is_empty() {
+            return 0.0;
+        }
+        self.accepted() as f64 / self.rounds.len() as f64
+    }
+
+    /// acceptance rate (paper's %)
+    pub fn acceptance_rate(&self) -> f64 {
+        let d = self.drafted();
+        if d == 0 {
+            return 0.0;
+        }
+        self.accepted() as f64 / d as f64
+    }
+}
+
+/// Run one full generation with speculative decoding.
+///
+/// Invariants maintained (tested in rust/tests/):
+///   * both models only ever receive contiguous blocks starting at their
+///     cursor;
+///   * after every round both cursors ≤ committed length;
+///   * committed tokens never change once appended (greedy spec decoding
+///     is lossless: output == target-only greedy output).
+pub fn generate(
+    draft: &mut dyn LanguageModel,
+    target: &mut dyn LanguageModel,
+    ctrl: &mut StopController,
+    rng: &mut Rng,
+    prompt: &[u32],
+    cfg: &GenConfig,
+) -> anyhow::Result<GenResult> {
+    let t_start = Instant::now();
+    assert!(!prompt.is_empty(), "prompt must be non-empty");
+    let max_seq = draft.max_seq().min(target.max_seq());
+    assert!(prompt.len() + 2 < max_seq, "prompt too long for KV cache");
+
+    draft.reset();
+    target.reset();
+    ctrl.reset_request();
+
+    let mut committed: Vec<u32> = prompt.to_vec();
+    let n0 = prompt.len();
+    let mut rounds = Vec::new();
+
+    'outer: while committed.len() - n0 < cfg.max_new {
+        if cfg.stop_at_eos && committed.last() == Some(&EOS) {
+            break;
+        }
+        let c = committed.len();
+        let headroom = max_seq.saturating_sub(c + 2);
+        if headroom < 1 {
+            break;
+        }
+        let gamma = cfg.gamma_max.min(headroom);
+
+        ctrl.session_start(rng);
+
+        // --- draft session: catch up on committed suffix, then propose
+        let t_draft = Instant::now();
+        let mut sig = draft.block(&committed[draft.cur()..], draft.cur())?;
+        let mut proposals: Vec<u32> = Vec::with_capacity(gamma);
+        let mut sig_rows: Vec<TokenSignals> = Vec::new();
+        loop {
+            let last = *sig.last().expect("block returns >=1 row");
+            proposals.push(last.argmax);
+            sig_rows.push(last);
+            let idx = proposals.len() - 1;
+            if proposals.len() >= gamma || ctrl.should_stop(&last, idx, rng) {
+                break;
+            }
+            sig = draft.block(&[last.argmax], c + proposals.len() - 1)?;
+        }
+        let draft_ns = t_draft.elapsed().as_nanos() as u64;
+
+        // --- verification: one parallel target block over the unprocessed
+        // committed suffix + all proposals. Row off+i predicts position
+        // c+i, so it both checks proposals[i] and supplies the bonus token.
+        let t_verify = Instant::now();
+        let tc = target.cur();
+        let mut inputs: Vec<u32> = committed[tc..].to_vec();
+        inputs.extend_from_slice(&proposals);
+        let vsig = target.block(&inputs, tc)?;
+        let off = c - 1 - tc;
+        let mut m = 0;
+        while m < proposals.len() && vsig[off + m].argmax == proposals[m] {
+            m += 1;
+        }
+        let bonus = vsig[off + m].argmax;
+        let verify_ns = t_verify.elapsed().as_nanos() as u64;
+
+        committed.extend_from_slice(&proposals[..m]);
+        committed.push(bonus);
+        target.rollback(c + m);
+        draft.rollback(c + m);
+
+        ctrl.on_verify(m, proposals.len());
+        rounds.push(RoundStat {
+            drafted: proposals.len(),
+            accepted: m,
+            arm: ctrl.current_arm(),
+            draft_ns,
+            verify_ns,
+            signals: if cfg.collect_signals { sig_rows } else { Vec::new() },
+        });
+
+        if cfg.stop_at_eos && bonus == EOS {
+            break 'outer;
+        }
+    }
+
+    // note: the final round may overshoot max_new; full rounds are kept
+    // (matches the python reference decoder — verification is atomic)
+    Ok(GenResult {
+        tokens: committed,
+        prompt_len: n0,
+        rounds,
+        wall_ns: t_start.elapsed().as_nanos() as u64,
+    })
+}
+
+/// Plain target-only greedy decoding (the correctness oracle and the
+/// "no speculation" latency reference).
+pub fn greedy(
+    target: &mut dyn LanguageModel,
+    prompt: &[u32],
+    cfg: &GenConfig,
+) -> anyhow::Result<GenResult> {
+    let t_start = Instant::now();
+    target.reset();
+    let mut committed = prompt.to_vec();
+    let n0 = prompt.len();
+    let max_seq = target.max_seq();
+    while committed.len() - n0 < cfg.max_new && committed.len() + 1 < max_seq {
+        let sig = target.block(&committed[target.cur()..], target.cur())?;
+        let nxt = sig.last().unwrap().argmax;
+        committed.push(nxt);
+        if cfg.stop_at_eos && nxt == EOS {
+            break;
+        }
+    }
+    Ok(GenResult {
+        tokens: committed,
+        prompt_len: n0,
+        rounds: vec![],
+        wall_ns: t_start.elapsed().as_nanos() as u64,
+    })
+}

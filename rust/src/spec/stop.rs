@@ -1,0 +1,286 @@
+//! `StopController` — the single dispatch point the decoding session talks
+//! to. Wraps the Static-γ baseline, a single stop policy (the tuned
+//! baselines), or a TapOut bandit at either granularity.
+
+use crate::bandit::{Reward, SeqBandit, TokenBandit};
+use crate::policies::pool::{default_arms, multi_threshold_arms};
+use crate::policies::{
+    AdaEdl, AlwaysContinue, BoxedPolicy, LogitMargin, MaxConfidence, SpecDecPP, StaticLen,
+    Svip, SvipDiff,
+};
+use crate::policies::StopPolicy;
+use crate::signals::TokenSignals;
+use crate::util::Rng;
+
+pub enum StopController {
+    Static(StaticLen),
+    Policy(BoxedPolicy),
+    Seq(SeqBandit),
+    Token(TokenBandit),
+}
+
+/// Method specification as used by the CLI / experiment harness. Matches
+/// the row labels of paper Tables 3-5.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MethodSpec {
+    Static(usize),
+    AdaEdl,
+    Svip(f32),
+    MaxConf(f32),
+    LogitMargin(f32),
+    SvipDiff(f32),
+    SpecDecPP(String), // path to specdecpp.json
+    SeqBandit { kind: String, reward: Reward, multi_arms: bool },
+    TokenBandit { kind: String, multi_arms: bool },
+}
+
+impl MethodSpec {
+    /// Parse CLI names: static-6, ada-edl, svip, max-conf, logit-margin,
+    /// svip-diff, specdec++, seq-ucb1, seq-ucb-tuned, seq-ts, token-ucb1,
+    /// token-ts (optionally ":rsimple" or ":multi" suffixes on bandits).
+    pub fn parse(s: &str, artifacts_dir: &str) -> Result<MethodSpec, String> {
+        let (base, opts) = match s.split_once(':') {
+            Some((b, o)) => (b, o.split(',').collect::<Vec<_>>()),
+            None => (s, vec![]),
+        };
+        let reward = if opts.contains(&"rsimple") {
+            Reward::Simple
+        } else {
+            Reward::Blend(0.5)
+        };
+        let multi_arms = opts.contains(&"multi");
+        let seq = |kind: &str| MethodSpec::SeqBandit {
+            kind: kind.into(),
+            reward,
+            multi_arms,
+        };
+        let tok = |kind: &str| MethodSpec::TokenBandit { kind: kind.into(), multi_arms };
+        Ok(match base {
+            _ if base.starts_with("static-") => {
+                let k = base[7..].parse().map_err(|_| format!("bad static k in {s}"))?;
+                MethodSpec::Static(k)
+            }
+            "ada-edl" => MethodSpec::AdaEdl,
+            "svip" => MethodSpec::Svip(0.6),
+            "max-conf" => MethodSpec::MaxConf(0.8),
+            "logit-margin" => MethodSpec::LogitMargin(0.2),
+            "svip-diff" => MethodSpec::SvipDiff(0.2),
+            "specdec++" => {
+                MethodSpec::SpecDecPP(format!("{artifacts_dir}/specdecpp.json"))
+            }
+            "seq-ucb1" => seq("ucb1"),
+            "seq-ucb-tuned" => seq("ucb-tuned"),
+            "seq-ts" => seq("ts-gaussian"),
+            "token-ucb1" => tok("ucb1"),
+            "token-ts" => tok("ts-beta"),
+            other => return Err(format!("unknown method: {other}")),
+        })
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            MethodSpec::Static(k) => format!("Static-{k}"),
+            MethodSpec::AdaEdl => "AdaEDL".into(),
+            MethodSpec::Svip(_) => "SVIP".into(),
+            MethodSpec::MaxConf(_) => "MC".into(),
+            MethodSpec::LogitMargin(_) => "LogitMargin".into(),
+            MethodSpec::SvipDiff(_) => "SVIPDiff".into(),
+            MethodSpec::SpecDecPP(_) => "SpecDec++".into(),
+            MethodSpec::SeqBandit { kind, reward, multi_arms } => {
+                let mut s = format!("TapOut-Seq-{}", pretty_kind(kind));
+                if *reward == Reward::Simple {
+                    s.push_str("(r_simple)");
+                }
+                if *multi_arms {
+                    s.push_str("(multi)");
+                }
+                s
+            }
+            MethodSpec::TokenBandit { kind, .. } => {
+                format!("TapOut-Token-{}", pretty_kind(kind))
+            }
+        }
+    }
+
+    /// Does this method require hyperparameter tuning? (paper column)
+    pub fn tuning_required(&self) -> bool {
+        matches!(
+            self,
+            MethodSpec::AdaEdl
+                | MethodSpec::Svip(_)
+                | MethodSpec::MaxConf(_)
+                | MethodSpec::LogitMargin(_)
+                | MethodSpec::SvipDiff(_)
+                | MethodSpec::SpecDecPP(_)
+        )
+    }
+
+    pub fn build(&self, gamma_max: usize) -> anyhow::Result<StopController> {
+        Ok(match self {
+            MethodSpec::Static(k) => StopController::Static(StaticLen::new(*k)),
+            MethodSpec::AdaEdl => StopController::Policy(Box::new(AdaEdl::default())),
+            MethodSpec::Svip(h) => StopController::Policy(Box::new(Svip::new(*h))),
+            MethodSpec::MaxConf(h) => {
+                StopController::Policy(Box::new(MaxConfidence::new(*h)))
+            }
+            MethodSpec::LogitMargin(h) => {
+                StopController::Policy(Box::new(LogitMargin::new(*h)))
+            }
+            MethodSpec::SvipDiff(h) => {
+                StopController::Policy(Box::new(SvipDiff::new(*h)))
+            }
+            MethodSpec::SpecDecPP(path) => StopController::Policy(Box::new(
+                SpecDecPP::load(std::path::Path::new(path))
+                    .map_err(|e| anyhow::anyhow!("specdec++ load: {e}"))?,
+            )),
+            MethodSpec::SeqBandit { kind, reward, multi_arms } => {
+                let arms = if *multi_arms { multi_threshold_arms() } else { default_arms() };
+                StopController::Seq(SeqBandit::new(kind, arms, *reward, gamma_max))
+            }
+            MethodSpec::TokenBandit { kind, multi_arms } => {
+                let arms = if *multi_arms { multi_threshold_arms() } else { default_arms() };
+                StopController::Token(TokenBandit::new(kind, arms, gamma_max))
+            }
+        })
+    }
+
+    pub fn all_paper_methods() -> Vec<&'static str> {
+        vec![
+            "static-6", "ada-edl", "svip", "max-conf", "seq-ts", "seq-ucb1",
+            "token-ts", "token-ucb1",
+        ]
+    }
+}
+
+fn pretty_kind(kind: &str) -> &'static str {
+    match kind {
+        "ucb1" => "UCB1",
+        "ucb-tuned" => "UCBTuned",
+        "ts-gaussian" | "ts-beta" => "TS",
+        _ => "?",
+    }
+}
+
+impl StopController {
+    /// A probe controller that never stops early (trace collection).
+    pub fn always_continue() -> StopController {
+        StopController::Policy(Box::new(AlwaysContinue))
+    }
+
+    pub fn session_start(&mut self, rng: &mut Rng) {
+        match self {
+            StopController::Static(_) => {}
+            StopController::Policy(p) => p.on_session_start(),
+            StopController::Seq(c) => c.session_start(rng),
+            StopController::Token(c) => c.session_start(rng),
+        }
+    }
+
+    pub fn should_stop(&mut self, sig: &TokenSignals, idx: usize, rng: &mut Rng) -> bool {
+        match self {
+            StopController::Static(p) => p.should_stop(sig, idx),
+            StopController::Policy(p) => p.should_stop(sig, idx),
+            StopController::Seq(c) => c.should_stop(sig, idx),
+            StopController::Token(c) => c.should_stop(sig, idx, rng),
+        }
+    }
+
+    pub fn on_verify(&mut self, accepted: usize, drafted: usize) {
+        match self {
+            StopController::Static(_) => {}
+            StopController::Policy(p) => p.on_verify(accepted, drafted),
+            StopController::Seq(c) => c.on_verify(accepted, drafted),
+            StopController::Token(c) => c.on_verify(accepted, drafted),
+        }
+    }
+
+    pub fn reset_request(&mut self) {
+        match self {
+            StopController::Static(_) => {}
+            StopController::Policy(p) => p.reset(),
+            StopController::Seq(c) => c.reset(),
+            StopController::Token(c) => c.reset(),
+        }
+    }
+
+    /// Arm-value readout for interpretability experiments (Seq only).
+    pub fn arm_values(&self) -> Option<Vec<f64>> {
+        match self {
+            StopController::Seq(c) => Some(c.bandit.values()),
+            _ => None,
+        }
+    }
+
+    pub fn current_arm(&self) -> Option<usize> {
+        match self {
+            StopController::Seq(c) => Some(c.current_arm()),
+            _ => None,
+        }
+    }
+
+    pub fn set_track_history(&mut self, on: bool) {
+        if let StopController::Seq(c) = self {
+            c.track_history = on;
+        }
+    }
+
+    pub fn value_history(&self) -> Option<&[Vec<f64>]> {
+        match self {
+            StopController::Seq(c) => Some(&c.value_history),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_paper_methods() {
+        for name in MethodSpec::all_paper_methods() {
+            let m = MethodSpec::parse(name, "artifacts").unwrap();
+            assert!(!m.label().is_empty());
+        }
+        assert!(MethodSpec::parse("nope", ".").is_err());
+    }
+
+    #[test]
+    fn parse_options() {
+        let m = MethodSpec::parse("seq-ucb1:rsimple", ".").unwrap();
+        match m {
+            MethodSpec::SeqBandit { reward, .. } => assert_eq!(reward, Reward::Simple),
+            _ => panic!(),
+        }
+        let m = MethodSpec::parse("seq-ucb1:multi", ".").unwrap();
+        match m {
+            MethodSpec::SeqBandit { multi_arms, .. } => assert!(multi_arms),
+            _ => panic!(),
+        }
+        assert_eq!(
+            MethodSpec::parse("static-8", ".").unwrap(),
+            MethodSpec::Static(8)
+        );
+    }
+
+    #[test]
+    fn tuning_column_matches_paper() {
+        assert!(!MethodSpec::parse("static-6", ".").unwrap().tuning_required());
+        assert!(MethodSpec::parse("svip", ".").unwrap().tuning_required());
+        assert!(MethodSpec::parse("ada-edl", ".").unwrap().tuning_required());
+        assert!(!MethodSpec::parse("seq-ucb1", ".").unwrap().tuning_required());
+        assert!(!MethodSpec::parse("token-ts", ".").unwrap().tuning_required());
+    }
+
+    #[test]
+    fn build_and_drive_static() {
+        let mut c = MethodSpec::Static(3).build(128).unwrap();
+        let mut rng = Rng::new(0);
+        c.session_start(&mut rng);
+        let sig = TokenSignals::from_logits(&[3.0, 0.0]);
+        assert!(!c.should_stop(&sig, 0, &mut rng));
+        assert!(!c.should_stop(&sig, 1, &mut rng));
+        assert!(c.should_stop(&sig, 2, &mut rng));
+        c.on_verify(2, 3);
+    }
+}

@@ -1,0 +1,118 @@
+//! Micro-benchmark harness (offline stand-in for `criterion`).
+//!
+//! Used by `benches/*.rs` (built with `harness = false`): warmup, timed
+//! iterations, mean/std/p50/p99 reporting, and plain-text output that
+//! `cargo bench` captures. Supports `TAPOUT_BENCH_FAST=1` for CI smoke.
+
+use std::time::Instant;
+
+use super::stats::Samples;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p99 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+fn fast_mode() -> bool {
+    std::env::var("TAPOUT_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Time `f` adaptively: run batches until ~`budget_ms` of samples exist.
+pub fn bench<F: FnMut()>(name: &str, budget_ms: u64, mut f: F) -> BenchResult {
+    let budget_ms = if fast_mode() { budget_ms.min(50) } else { budget_ms };
+    // warmup: one call, then estimate per-iter cost
+    let t0 = Instant::now();
+    f();
+    let per_iter = t0.elapsed().as_nanos().max(1) as f64;
+    let target_iters =
+        ((budget_ms as f64 * 1e6) / per_iter).clamp(5.0, 100_000.0) as usize;
+
+    let mut samples = Samples::new();
+    // batch tiny functions so Instant overhead stays <1%
+    let batch = (100.0 / per_iter * 1000.0).clamp(1.0, 10_000.0) as usize;
+    let mut done = 0;
+    while done < target_iters {
+        let n = batch.min(target_iters - done);
+        let t = Instant::now();
+        for _ in 0..n {
+            f();
+        }
+        samples.push(t.elapsed().as_nanos() as f64 / n as f64);
+        done += n;
+    }
+    let mean = samples.mean();
+    let var = samples
+        .values()
+        .iter()
+        .map(|x| (x - mean) * (x - mean))
+        .sum::<f64>()
+        / samples.len().max(1) as f64;
+    let res = BenchResult {
+        name: name.to_string(),
+        iters: done,
+        mean_ns: mean,
+        std_ns: var.sqrt(),
+        p50_ns: samples.percentile(50.0),
+        p99_ns: samples.percentile(99.0),
+    };
+    println!("{}", res.report());
+    res
+}
+
+/// Group header for readable `cargo bench` output.
+pub fn group(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let mut acc = 0u64;
+        let r = bench("noop-ish", 20, || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.iters >= 5);
+        assert!(r.p99_ns >= r.p50_ns * 0.5);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("µs"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(2e9).ends_with("s"));
+    }
+}

@@ -1,0 +1,101 @@
+//! Tiny CLI argument parser (offline stand-in for `clap`).
+//!
+//! Grammar: `tapout <subcommand> [--flag value | --switch] [positional...]`.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse_from<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let mut out = Args::default();
+        let mut it = it.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // --key=value | --key value | --switch
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn parse() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.flags.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.flags.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn subcommand_flags_positional() {
+        // note: a bare switch consumes a following non-flag token as its
+        // value, so positionals must precede switches (documented grammar)
+        let a = argv("exp --id table3 --scale 0.5 extra1 extra2 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("exp"));
+        assert_eq!(a.str("id", ""), "table3");
+        assert!((a.f64("scale", 1.0) - 0.5).abs() < 1e-12);
+        assert!(a.bool("verbose"));
+        assert_eq!(a.positional, vec!["extra1", "extra2"]);
+    }
+
+    #[test]
+    fn equals_syntax_and_defaults() {
+        let a = argv("serve --port=8080");
+        assert_eq!(a.usize("port", 0), 8080);
+        assert_eq!(a.usize("missing", 7), 7);
+        assert!(!a.bool("missing"));
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = argv("x --delta -3");
+        // "-3" does not start with -- so it is consumed as the value
+        assert!((a.f64("delta", 0.0) + 3.0).abs() < 1e-12);
+    }
+}

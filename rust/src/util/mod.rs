@@ -1,0 +1,15 @@
+//! Offline stand-ins for the crates the sealed image does not provide
+//! (`rand`, `serde_json`, `clap`, `criterion`, `proptest`) — see
+//! DESIGN.md §6. Everything here is dependency-free std-only code with its
+//! own unit tests.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,59 @@
+//! Mini property-testing helper (offline stand-in for `proptest`).
+//!
+//! `forall(seed, cases, gen, check)` runs `check` on `cases` random inputs
+//! produced by `gen`; on failure it reports the first failing case and the
+//! seed that regenerates it. Shrinking-lite: retries the failing index with
+//! "smaller" regenerated inputs is left to the generator (generators take
+//! a `size` hint that grows over the run, so early failures are small).
+
+use super::rng::Rng;
+
+/// Run `check` on `cases` generated inputs. `gen` receives (rng, size)
+/// where size ramps 0.1 -> 1.0 across the run so early cases are small.
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng, f64) -> T,
+    mut check: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for i in 0..cases {
+        let size = 0.1 + 0.9 * (i as f64 / cases.max(1) as f64);
+        let mut case_rng = rng.fork(i as u64);
+        let input = gen(&mut case_rng, size);
+        if let Err(msg) = check(&input) {
+            panic!(
+                "property failed at case {i}/{cases} (seed {seed}): {msg}\ninput: {input:#?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        forall(
+            1,
+            200,
+            |r, size| (r.below((10.0 * size) as usize + 2), r.f64()),
+            |(n, x)| {
+                if *x >= 0.0 && *x < 1.0 && *n < 12 {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failures() {
+        forall(2, 50, |r, _| r.below(100), |n| {
+            if *n < 90 { Ok(()) } else { Err(format!("{n} too big")) }
+        });
+    }
+}

@@ -1,0 +1,88 @@
+//! Markdown/ASCII table builder for experiment reports (stand-in for
+//! pretty-printing crates). Emits GitHub-flavoured markdown that is also
+//! readable raw in a terminal.
+
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let emit = |cells: &[String], out: &mut String| {
+            out.push('|');
+            for i in 0..ncol {
+                out.push(' ');
+                out.push_str(&cells[i]);
+                for _ in cells[i].len()..widths[i] {
+                    out.push(' ');
+                }
+                out.push_str(" |");
+            }
+            out.push('\n');
+        };
+        emit(&self.headers, &mut out);
+        out.push('|');
+        for w in &widths {
+            out.push_str(&"-".repeat(w + 2));
+            out.push('|');
+        }
+        out.push('\n');
+        for row in &self.rows {
+            emit(row, &mut out);
+        }
+        out
+    }
+}
+
+/// Format a float with fixed decimals (tables use 2 almost everywhere).
+pub fn fmt(x: f64, decimals: usize) -> String {
+    format!("{x:.decimals$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_markdown() {
+        let mut t = Table::new(&["method", "m", "s"]);
+        t.row(vec!["Static-6".into(), "3.51".into(), "1.00".into()]);
+        t.row(vec!["TapOut - Seq UCB1".into(), "5.29".into(), "1.15".into()]);
+        let r = t.render();
+        assert!(r.contains("| method "));
+        assert!(r.lines().count() == 4);
+        // all lines same length (alignment)
+        let lens: Vec<usize> = r.lines().map(|l| l.len()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]), "{r}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        Table::new(&["a", "b"]).row(vec!["x".into()]);
+    }
+}

@@ -1,0 +1,148 @@
+//! Serving-layer integration tests. PJRT-dependent tests self-skip when
+//! `make artifacts` has not been run (CI smoke without artifacts), so the
+//! suite is green in both states.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use tapout::engine::{Engine, EngineConfig, HttpServer, Policy};
+use tapout::util::Json;
+
+fn artifacts_ready() -> bool {
+    Path::new("artifacts/manifest.json").exists()
+}
+
+fn engine() -> Engine {
+    Engine::start(EngineConfig {
+        pair: "pair-a".into(),
+        method: "seq-ucb1".into(),
+        gamma_max: 64,
+        sched: Policy::Fcfs,
+        slots: 2,
+        ..EngineConfig::default()
+    })
+    .unwrap()
+}
+
+#[test]
+fn engine_serves_requests_and_records_metrics() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let eng = engine();
+    let rx1 = eng.submit("q: where is alice? a:", 32);
+    let rx2 = eng.submit("translate: red cat -> ", 24);
+    let r1 = rx1.recv_timeout(Duration::from_secs(120)).unwrap();
+    let r2 = rx2.recv_timeout(Duration::from_secs(120)).unwrap();
+    assert!(!r1.result.new_tokens().is_empty());
+    assert!(!r2.result.new_tokens().is_empty());
+    assert!(!r1.text.is_empty());
+    {
+        let m = eng.metrics.lock().unwrap();
+        assert_eq!(m.completed, 2);
+        assert!(m.drafted > 0);
+    }
+    eng.shutdown();
+}
+
+#[test]
+fn http_api_round_trip() {
+    if !artifacts_ready() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let eng = Arc::new(engine());
+    let http = HttpServer::start(eng.clone(), 0).unwrap();
+    let addr = http.addr.clone();
+
+    let get = |path: &str| -> (u16, Json) {
+        use std::io::{Read, Write};
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        parse_http(&buf)
+    };
+    let post = |path: &str, body: &str| -> (u16, Json) {
+        use std::io::{Read, Write};
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        write!(
+            s,
+            "POST {path} HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        parse_http(&buf)
+    };
+
+    let (code, health) = get("/health");
+    assert_eq!(code, 200);
+    assert_eq!(health.get("ok").unwrap().as_bool(), Some(true));
+
+    let (code, gen) = post("/generate", r#"{"prompt": "12 + 34 = ", "max_new": 16}"#);
+    assert_eq!(code, 200, "{gen:?}");
+    assert!(gen.get("new_tokens").unwrap().as_usize().unwrap() > 0);
+    assert!(gen.get("text").unwrap().as_str().is_some());
+
+    let (code, err) = post("/generate", r#"{"max_new": 4}"#);
+    assert_eq!(code, 400, "{err:?}");
+
+    let (code, miss) = get("/nope");
+    assert_eq!(code, 404, "{miss:?}");
+
+    let (code, metrics) = get("/metrics");
+    assert_eq!(code, 200);
+    assert!(metrics.get("completed").unwrap().as_usize().unwrap() >= 1);
+}
+
+fn parse_http(raw: &str) -> (u16, Json) {
+    let code: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .unwrap_or(0);
+    let body = raw.split("\r\n\r\n").nth(1).unwrap_or("{}");
+    (code, Json::parse(body).unwrap_or(Json::Null))
+}
+
+#[test]
+fn pjrt_models_match_python_numerics() {
+    // thin re-check of what `tapout selftest` verifies, kept in the test
+    // suite so `cargo test` covers the PJRT path when artifacts exist
+    if !artifacts_ready() || !Path::new("artifacts/golden/pair-a.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_tapout"))
+        .arg("selftest")
+        .output()
+        .unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        stdout.contains("golden traces replayed exactly"),
+        "selftest failed:\n{stdout}\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+#[test]
+fn specdecpp_classifier_loads_from_artifacts() {
+    if !Path::new("artifacts/specdecpp.json").exists() {
+        eprintln!("skipping: classifier not trained");
+        return;
+    }
+    let c = tapout::policies::SpecDecPP::load(Path::new("artifacts/specdecpp.json")).unwrap();
+    // confident low-entropy token should have a higher accept prob than a
+    // maximally-uncertain one
+    let hi = tapout::signals::TokenSignals::from_logits(&{
+        let mut v = vec![0.0f32; 96];
+        v[10] = 12.0;
+        v
+    });
+    let lo = tapout::signals::TokenSignals::from_logits(&vec![0.0f32; 96]);
+    assert!(c.predict(&hi, 0) > c.predict(&lo, 0));
+}

@@ -1,0 +1,196 @@
+//! Integration + property tests over the speculative-decoding core using
+//! the simulator backend (fast, deterministic, millions of tokens).
+//!
+//! The central invariant: **greedy speculative decoding is lossless** —
+//! whatever the stop controller does, the committed output must equal the
+//! target-only greedy continuation. Every method is run through that check
+//! under randomized scenarios (mini-proptest, util::prop).
+
+use tapout::models::sim::{Scenario, SimModel};
+use tapout::models::LanguageModel;
+use tapout::spec::{generate, greedy, GenConfig, MethodSpec, StopController};
+use tapout::util::prop::forall;
+use tapout::util::Rng;
+
+fn sim_models(seed: u64, cat: &str, quality: f32) -> (SimModel, SimModel) {
+    let sc = Scenario::new(seed, cat);
+    (SimModel::draft(sc, quality, 0.05), SimModel::target(sc))
+}
+
+fn prompt(len: usize) -> Vec<u32> {
+    (0..len).map(|i| 3 + (i % 29) as u32).collect()
+}
+
+fn run(
+    seed: u64,
+    cat: &str,
+    quality: f32,
+    method: &str,
+    max_new: usize,
+) -> (Vec<u32>, Vec<(usize, usize)>) {
+    let (mut draft, mut target) = sim_models(seed, cat, quality);
+    let mut ctrl = MethodSpec::parse(method, "artifacts").unwrap().build(64).unwrap();
+    let mut rng = Rng::new(seed);
+    let cfg = GenConfig { max_new, gamma_max: 64, stop_at_eos: false, collect_signals: false };
+    let r = generate(&mut draft, &mut target, &mut ctrl, &mut rng, &prompt(16), &cfg).unwrap();
+    let rounds = r.rounds.iter().map(|x| (x.drafted, x.accepted)).collect();
+    (r.tokens, rounds)
+}
+
+fn oracle(seed: u64, cat: &str, max_new: usize) -> Vec<u32> {
+    let sc = Scenario::new(seed, cat);
+    let mut target = SimModel::target(sc);
+    let cfg = GenConfig { max_new, gamma_max: 64, stop_at_eos: false, collect_signals: false };
+    greedy(&mut target, &prompt(16), &cfg).unwrap().tokens
+}
+
+const METHODS: &[&str] = &[
+    "static-1", "static-6", "static-17", "ada-edl", "svip", "max-conf",
+    "logit-margin", "svip-diff", "seq-ucb1", "seq-ucb-tuned", "seq-ts",
+    "token-ucb1", "token-ts", "seq-ucb1:rsimple", "seq-ucb1:multi",
+];
+
+#[test]
+fn spec_decode_is_lossless_for_every_method() {
+    // the oracle prefix must match regardless of the stopping method
+    for (i, method) in METHODS.iter().enumerate() {
+        let seed = 100 + i as u64;
+        let want = oracle(seed, "qa", 40);
+        let (got, _) = run(seed, "qa", 0.85, method, 40);
+        let n = want.len().min(got.len()).min(16 + 40);
+        assert_eq!(got[..n], want[..n], "method {method} diverged from greedy oracle");
+    }
+}
+
+#[test]
+fn prop_lossless_across_scenarios() {
+    forall(
+        42,
+        60,
+        |r, size| {
+            (
+                r.next_u64(),
+                ["coding", "qa", "writing", "math"][r.below(4)],
+                0.3 + 0.65 * r.f64() as f32,
+                METHODS[r.below(METHODS.len())],
+                8 + (40.0 * size) as usize,
+            )
+        },
+        |&(seed, cat, q, method, max_new)| {
+            let want = oracle(seed, cat, max_new);
+            let (got, rounds) = run(seed, cat, q, method, max_new);
+            let n = want.len().min(got.len());
+            if got[..n] != want[..n] {
+                return Err(format!("{method} diverged on {cat} (q={q})"));
+            }
+            for &(d, a) in &rounds {
+                if a > d {
+                    return Err(format!("accepted {a} > drafted {d}"));
+                }
+                if d == 0 {
+                    return Err("empty draft session".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_round_accounting() {
+    // committed length == prompt + sum(accepted + 1 bonus per round)
+    forall(
+        7,
+        40,
+        |r, _| (r.next_u64(), METHODS[r.below(METHODS.len())]),
+        |&(seed, method)| {
+            let (got, rounds) = run(seed, "reasoning", 0.8, method, 32);
+            let committed_new = got.len() - 16;
+            let from_rounds: usize = rounds.iter().map(|(_, a)| a + 1).sum();
+            if committed_new != from_rounds {
+                return Err(format!("{committed_new} != {from_rounds}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn static_k_drafts_exactly_k() {
+    let (_, rounds) = run(5, "qa", 0.9, "static-5", 40);
+    // all rounds draft exactly 5 except possibly a tail capped by headroom
+    for &(d, _) in &rounds[..rounds.len() - 1] {
+        assert_eq!(d, 5);
+    }
+}
+
+#[test]
+fn gamma_max_is_respected() {
+    let (mut draft, mut target) = sim_models(9, "coding", 0.99);
+    // always-continue policy would draft forever without the cap
+    let mut ctrl = StopController::always_continue();
+    let mut rng = Rng::new(9);
+    let cfg = GenConfig { max_new: 64, gamma_max: 11, stop_at_eos: false, collect_signals: false };
+    let r = generate(&mut draft, &mut target, &mut ctrl, &mut rng, &prompt(8), &cfg).unwrap();
+    assert!(r.rounds.iter().all(|x| x.drafted <= 11));
+    assert!(r.rounds.iter().any(|x| x.drafted == 11), "cap should bind for a strong draft");
+}
+
+#[test]
+fn cursor_invariants_after_generation() {
+    let (mut draft, mut target) = sim_models(11, "qa", 0.7);
+    let mut ctrl = MethodSpec::parse("seq-ucb1", ".").unwrap().build(32).unwrap();
+    let mut rng = Rng::new(11);
+    let cfg = GenConfig { max_new: 48, gamma_max: 32, stop_at_eos: false, collect_signals: false };
+    let r = generate(&mut draft, &mut target, &mut ctrl, &mut rng, &prompt(12), &cfg).unwrap();
+    assert!(draft.cur() <= r.tokens.len());
+    assert!(target.cur() <= r.tokens.len());
+}
+
+#[test]
+fn online_bandit_state_persists_across_requests() {
+    // run many requests through one Seq controller; the bandit must end up
+    // with counts across requests (online learning) and a meaningful best arm
+    let mut ctrl = MethodSpec::parse("seq-ucb1", ".").unwrap().build(64).unwrap();
+    let mut rng = Rng::new(3);
+    let cfg = GenConfig { max_new: 24, gamma_max: 64, stop_at_eos: false, collect_signals: false };
+    let mut sessions = 0;
+    for seed in 0..30 {
+        let (mut draft, mut target) = sim_models(seed, "qa", 0.85);
+        let r = generate(&mut draft, &mut target, &mut ctrl, &mut rng, &prompt(10), &cfg).unwrap();
+        sessions += r.rounds.len();
+    }
+    let values = ctrl.arm_values().unwrap();
+    assert_eq!(values.len(), 5);
+    assert!(sessions > 50);
+    assert!(values.iter().any(|&v| v > 0.0), "{values:?}");
+}
+
+#[test]
+fn weak_draft_yields_lower_acceptance() {
+    let acc = |q: f32| {
+        let mut total = (0, 0);
+        for seed in 0..20 {
+            let (got, rounds) = {
+                let (mut draft, mut target) = sim_models(seed, "qa", q);
+                let mut ctrl = MethodSpec::Static(6).build(64).unwrap();
+                let mut rng = Rng::new(seed);
+                let cfg = GenConfig {
+                    max_new: 32, gamma_max: 64, stop_at_eos: false, collect_signals: false,
+                };
+                let r = generate(&mut draft, &mut target, &mut ctrl, &mut rng, &prompt(12), &cfg)
+                    .unwrap();
+                (r.tokens, r.rounds)
+            };
+            let _ = got;
+            for r in rounds {
+                total.0 += r.accepted;
+                total.1 += r.drafted;
+            }
+        }
+        total.0 as f64 / total.1 as f64
+    };
+    let strong = acc(0.95);
+    let weak = acc(0.4);
+    assert!(strong > weak + 0.1, "strong {strong:.2} vs weak {weak:.2}");
+}
