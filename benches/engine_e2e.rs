@@ -6,7 +6,9 @@
 //! `TAPOUT_BENCH_FAST=1` shrinks everything for CI smoke.
 
 use std::path::Path;
+use std::time::Instant;
 
+use tapout::engine::{BackendKind, Engine, EngineConfig, Policy};
 use tapout::harness::{run_method, run_probe, sim_suite, Backend};
 use tapout::models::{LanguageModel, Manifest, ModelAssets, PjrtModel};
 use tapout::runtime::Runtime;
@@ -15,7 +17,62 @@ use tapout::util::bench::{bench, fmt_ns, group};
 
 fn main() {
     sim_tables();
+    serving_scaling();
     pjrt_ladder();
+}
+
+/// Multi-worker serving throughput vs the sequential baseline, on the sim
+/// backend (runs everywhere): the same request burst through 1, 2, and 4
+/// decode workers sharing one online bandit. Wall-clock speedup tracks
+/// available cores; the outputs are identical by construction (lossless
+/// greedy speculative decoding), so this isolates the engine overhead.
+fn serving_scaling() {
+    let fast = std::env::var("TAPOUT_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let (n_req, max_new) = if fast { (16, 48) } else { (64, 160) };
+    let cats = ["coding", "qa", "writing", "math", "extraction"];
+    let prompts: Vec<String> = (0..n_req)
+        .map(|i| format!("{} benchmark request {i} with a moderately long prompt body", cats[i % cats.len()]))
+        .collect();
+
+    group(&format!(
+        "engine serving: {n_req}-request burst, max_new {max_new} (sim backend)"
+    ));
+    let mut baseline_ns = 0.0;
+    for workers in [1usize, 2, 4] {
+        let eng = Engine::start(EngineConfig {
+            method: "seq-ucb1".into(),
+            gamma_max: 128,
+            sched: Policy::Fcfs,
+            slots: workers,
+            workers,
+            backend: BackendKind::sim_default(),
+            ..EngineConfig::default()
+        })
+        .unwrap();
+        let t0 = Instant::now();
+        let rxs: Vec<_> = prompts.iter().map(|p| eng.submit(p, max_new)).collect();
+        for rx in rxs {
+            let r = rx.recv().unwrap();
+            assert!(r.is_ok(), "{:?}", r.error);
+        }
+        let elapsed_ns = t0.elapsed().as_nanos() as f64;
+        let (new_tokens, sessions) = {
+            let m = eng.metrics.lock().unwrap();
+            (m.new_tokens, eng.bandit_sessions())
+        };
+        if workers == 1 {
+            baseline_ns = elapsed_ns;
+        }
+        println!(
+            "  workers={workers}: {} in wall {}  -> {:>9.0} tok/s  ({:.2}x vs sequential, {} bandit sessions)",
+            new_tokens,
+            fmt_ns(elapsed_ns),
+            new_tokens as f64 / (elapsed_ns / 1e9),
+            baseline_ns / elapsed_ns,
+            sessions,
+        );
+        eng.shutdown();
+    }
 }
 
 /// One bench per paper artifact, on the simulator backend (the controller

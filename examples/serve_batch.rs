@@ -28,16 +28,18 @@ fn main() -> Result<()> {
     let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
     let items = load_suite(&manifest, "mtbench", n)?;
 
+    let slots = args.usize("slots", 2);
     let cfg = EngineConfig {
         pair: args.str("pair", "pair-a"),
         method: method.clone(),
         sched: Policy::parse(&sched),
-        slots: 2,
+        slots,
+        workers: args.usize("workers", slots),
         ..EngineConfig::default()
     };
     println!(
-        "booting engine: pair={} method={} sched={} ({} requests @ {:.1} req/s)",
-        cfg.pair, method, sched, items.len(), rate
+        "booting engine: pair={} method={} sched={} workers={} ({} requests @ {:.1} req/s)",
+        cfg.pair, method, sched, cfg.workers, items.len(), rate
     );
     let engine = Arc::new(Engine::start(cfg)?);
 
@@ -75,6 +77,14 @@ fn main() -> Result<()> {
     }
 
     println!("\n=== serving report ({got}/{} ok) ===", items.len());
-    println!("{}", engine.metrics.lock().unwrap().report());
+    let (report, span_ns) = {
+        let mut m = engine.metrics.lock().unwrap();
+        (m.report(), m.span_ns)
+    };
+    println!("{report}");
+    println!("{}", engine.stats.report(span_ns));
+    if let Some(counts) = engine.bandit_counts() {
+        println!("shared bandit: {} sessions, arm plays {:?}", engine.bandit_sessions(), counts);
+    }
     Ok(())
 }

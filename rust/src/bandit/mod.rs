@@ -3,11 +3,13 @@
 //! arm-policy pool.
 
 pub mod controller;
+pub mod shared;
 pub mod thompson;
 pub mod ucb1;
 pub mod ucb_tuned;
 
 pub use controller::{Reward, SeqBandit, TokenBandit};
+pub use shared::{SessionController, SharedController};
 pub use thompson::{BetaTs, GaussianTs};
 pub use ucb1::Ucb1;
 pub use ucb_tuned::UcbTuned;

@@ -1,0 +1,417 @@
+//! Shared TapOut controller for the multi-worker serving engine
+//! (DESIGN.md §2).
+//!
+//! The paper's method is *online*: the bandit keeps improving as it
+//! observes more verification outcomes. In a serving engine that only
+//! pays off if every concurrent request feeds the same learner, so the
+//! bandit state lives here — one process-wide [`SharedController`] — while
+//! each decode worker drives its own [`SessionController`], a lightweight
+//! per-thread handle implementing [`DecodeControl`].
+//!
+//! Split of state (mirrors `SeqBandit`/`TokenBandit`, which remain the
+//! single-threaded implementations used by the harness):
+//!
+//! * **shared, locked** — the bandit(s): arm value estimates and play
+//!   counts. Touched only at session boundaries: one `select` at
+//!   session start, one `update` at verification. Both are a few float
+//!   ops under a `Mutex`, never held across model execution.
+//! * **per-worker, lock-free** — the arm-policy pool (stop heuristics)
+//!   and the current-arm / chosen-arms bookkeeping. Policies are cheap
+//!   deterministic per-session state machines; giving each worker its own
+//!   pool keeps the per-token `should_stop` hot path free of any lock at
+//!   sequence granularity.
+//!
+//! Atomicity argument: a session's lifecycle is select(arm) → … →
+//! update(arm, r). Workers record the selected arm *locally*, so an
+//! interleaved session on another worker can never redirect the reward
+//! (the seed engine's `SeqBandit.current` field would have been a data
+//! race here). UCB1/UCB-Tuned/TS are order-agnostic over bounded reward
+//! streams, so interleaving different sessions' select/update pairs
+//! preserves convergence — both regret analyses only need each arm's
+//! reward tally to be exact, which the per-update lock guarantees.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::policies::pool::{default_arms, multi_threshold_arms};
+use crate::policies::BoxedPolicy;
+use crate::signals::TokenSignals;
+use crate::spec::{DecodeControl, MethodSpec};
+use crate::util::Rng;
+
+use super::{make_bandit, BoxedBandit, Reward};
+
+/// Sequence-granularity shared state: one bandit over the arm pool.
+struct SeqShared {
+    bandit: Mutex<BoxedBandit>,
+    reward: Reward,
+}
+
+/// Token-granularity shared state: an independent bandit per draft
+/// position, grown lazily (same protocol as `TokenBandit`).
+struct TokenShared {
+    kind: String,
+    n_arms: usize,
+    bandits: Mutex<Vec<BoxedBandit>>,
+}
+
+impl TokenShared {
+    /// Select an arm for draft position `idx`, growing the ladder on
+    /// demand.
+    fn select_at(&self, idx: usize, rng: &mut Rng) -> usize {
+        let mut bandits = self.bandits.lock().unwrap();
+        while bandits.len() <= idx {
+            bandits.push(make_bandit(&self.kind, self.n_arms));
+        }
+        bandits[idx].select(rng)
+    }
+}
+
+/// Process-wide controller handle: owns the shared bandit state and mints
+/// per-worker [`SessionController`]s. Cheap to clone-by-`Arc` internally;
+/// the engine keeps one and calls [`SharedController::session`] per
+/// worker thread.
+pub struct SharedController {
+    method: MethodSpec,
+    gamma_max: usize,
+    seq: Option<Arc<SeqShared>>,
+    token: Option<Arc<TokenShared>>,
+    /// drafting sessions started (select events) across all workers
+    sessions: Arc<AtomicU64>,
+    /// verification outcomes absorbed (update events) across all workers
+    updates: Arc<AtomicU64>,
+}
+
+fn arm_pool(multi: bool) -> Vec<BoxedPolicy> {
+    if multi {
+        multi_threshold_arms()
+    } else {
+        default_arms()
+    }
+}
+
+impl SharedController {
+    pub fn new(method: &MethodSpec, gamma_max: usize) -> SharedController {
+        let (seq, token) = match method {
+            MethodSpec::SeqBandit { kind, reward, multi_arms } => {
+                let n = arm_pool(*multi_arms).len();
+                let shared = SeqShared {
+                    bandit: Mutex::new(make_bandit(kind, n)),
+                    reward: *reward,
+                };
+                (Some(Arc::new(shared)), None)
+            }
+            MethodSpec::TokenBandit { kind, multi_arms } => {
+                let shared = TokenShared {
+                    kind: kind.clone(),
+                    n_arms: arm_pool(*multi_arms).len(),
+                    bandits: Mutex::new(Vec::new()),
+                };
+                (None, Some(Arc::new(shared)))
+            }
+            _ => (None, None),
+        };
+        SharedController {
+            method: method.clone(),
+            gamma_max,
+            seq,
+            token,
+            sessions: Arc::new(AtomicU64::new(0)),
+            updates: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Mint the per-worker session handle. Bandit methods share this
+    /// controller's bandit; stateless methods (Static-k, tuned single
+    /// policies) get a private `StopController` — they have no state worth
+    /// sharing, and per-worker isolation keeps them contention-free.
+    pub fn session(&self) -> Result<SessionController> {
+        let mode = match &self.method {
+            MethodSpec::SeqBandit { multi_arms, .. } => Mode::Seq {
+                shared: self.seq.clone().expect("seq state exists for seq methods"),
+                arms: arm_pool(*multi_arms),
+                current: 0,
+            },
+            MethodSpec::TokenBandit { multi_arms, .. } => Mode::Token {
+                shared: self.token.clone().expect("token state exists for token methods"),
+                arms: arm_pool(*multi_arms),
+                chosen: Vec::new(),
+            },
+            other => Mode::Local(other.build(self.gamma_max)?),
+        };
+        Ok(SessionController {
+            mode,
+            gamma_max: self.gamma_max,
+            sessions: self.sessions.clone(),
+            updates: self.updates.clone(),
+        })
+    }
+
+    /// Is there actually shared learning state (a bandit method)?
+    pub fn is_shared(&self) -> bool {
+        self.seq.is_some() || self.token.is_some()
+    }
+
+    pub fn method_label(&self) -> String {
+        self.method.label()
+    }
+
+    /// Total drafting sessions observed across all workers since boot —
+    /// the inter-request carryover readout (a fresh-per-request controller
+    /// would reset this).
+    pub fn sessions(&self) -> u64 {
+        self.sessions.load(Ordering::Relaxed)
+    }
+
+    /// Total bandit reward updates absorbed across all workers.
+    pub fn updates(&self) -> u64 {
+        self.updates.load(Ordering::Relaxed)
+    }
+
+    /// Per-arm play counts. Seq: the shared bandit's counts. Token:
+    /// summed over the per-position ladder. `None` for stateless methods.
+    pub fn arm_counts(&self) -> Option<Vec<u64>> {
+        if let Some(seq) = &self.seq {
+            return Some(seq.bandit.lock().unwrap().counts());
+        }
+        if let Some(token) = &self.token {
+            let bandits = token.bandits.lock().unwrap();
+            let mut sum = vec![0u64; token.n_arms];
+            for b in bandits.iter() {
+                for (s, c) in sum.iter_mut().zip(b.counts()) {
+                    *s += c;
+                }
+            }
+            return Some(sum);
+        }
+        None
+    }
+
+    /// Per-arm value estimates (Seq granularity only — the Figs. 5-6
+    /// readout).
+    pub fn arm_values(&self) -> Option<Vec<f64>> {
+        self.seq.as_ref().map(|s| s.bandit.lock().unwrap().values())
+    }
+
+    /// Names of the arms in play (bandit methods only).
+    pub fn arm_names(&self) -> Option<Vec<String>> {
+        match &self.method {
+            MethodSpec::SeqBandit { multi_arms, .. }
+            | MethodSpec::TokenBandit { multi_arms, .. } => {
+                Some(arm_pool(*multi_arms).iter().map(|a| a.name()).collect())
+            }
+            _ => None,
+        }
+    }
+}
+
+enum Mode {
+    /// Stateless methods: a private per-worker controller.
+    Local(crate::spec::StopController),
+    /// Sequence-level bandit: shared learner, per-worker arm pool.
+    Seq { shared: Arc<SeqShared>, arms: Vec<BoxedPolicy>, current: usize },
+    /// Token-level bandit ladder: shared learners, per-worker arm pool.
+    Token { shared: Arc<TokenShared>, arms: Vec<BoxedPolicy>, chosen: Vec<usize> },
+}
+
+/// Per-worker controller handle: owned (`&mut`) by exactly one decode
+/// worker, so everything outside the tiny bandit critical sections is
+/// lock-free. Implements [`DecodeControl`], making it interchangeable
+/// with `StopController` inside `spec::generate`.
+pub struct SessionController {
+    mode: Mode,
+    gamma_max: usize,
+    sessions: Arc<AtomicU64>,
+    updates: Arc<AtomicU64>,
+}
+
+impl DecodeControl for SessionController {
+    fn session_start(&mut self, rng: &mut Rng) {
+        match &mut self.mode {
+            Mode::Local(c) => c.session_start(rng),
+            Mode::Seq { shared, arms, current } => {
+                // atomic select: the chosen arm is recorded locally, so a
+                // concurrent session can never redirect this one's reward
+                *current = shared.bandit.lock().unwrap().select(rng);
+                arms[*current].on_session_start();
+            }
+            Mode::Token { arms, chosen, .. } => {
+                chosen.clear();
+                for a in arms.iter_mut() {
+                    a.on_session_start();
+                }
+            }
+        }
+        self.sessions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn should_stop(&mut self, sig: &TokenSignals, idx: usize, rng: &mut Rng) -> bool {
+        match &mut self.mode {
+            Mode::Local(c) => c.should_stop(sig, idx, rng),
+            Mode::Seq { arms, current, .. } => arms[*current].should_stop(sig, idx),
+            Mode::Token { shared, arms, chosen } => {
+                let arm = shared.select_at(idx, rng);
+                debug_assert_eq!(chosen.len(), idx);
+                chosen.push(arm);
+                arms[arm].should_stop(sig, idx)
+            }
+        }
+    }
+
+    fn on_verify(&mut self, accepted: usize, drafted: usize) {
+        match &mut self.mode {
+            Mode::Local(c) => c.on_verify(accepted, drafted),
+            Mode::Seq { shared, arms, current } => {
+                let r = shared.reward.compute(accepted, drafted, self.gamma_max);
+                shared.bandit.lock().unwrap().update(*current, r);
+                // only the arm that drove the session sees the outcome
+                arms[*current].on_verify(accepted, drafted);
+            }
+            Mode::Token { shared, arms, chosen } => {
+                {
+                    let mut bandits = shared.bandits.lock().unwrap();
+                    for i in 0..drafted.min(chosen.len()) {
+                        let r = if i < accepted { 1.0 } else { 0.0 };
+                        bandits[i].update(chosen[i], r);
+                    }
+                }
+                for a in arms.iter_mut() {
+                    a.on_verify(accepted, drafted);
+                }
+            }
+        }
+        self.updates.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn reset_request(&mut self) {
+        match &mut self.mode {
+            Mode::Local(c) => c.reset_request(),
+            // per-request policy state resets; the *shared* bandit memory
+            // persists across requests and workers (the online setting)
+            Mode::Seq { arms, .. } => {
+                for a in arms.iter_mut() {
+                    a.reset();
+                }
+            }
+            Mode::Token { arms, chosen, .. } => {
+                for a in arms.iter_mut() {
+                    a.reset();
+                }
+                chosen.clear();
+            }
+        }
+    }
+
+    fn current_arm(&self) -> Option<usize> {
+        match &self.mode {
+            Mode::Local(c) => c.current_arm(),
+            Mode::Seq { current, .. } => Some(*current),
+            Mode::Token { .. } => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(s: &str) -> MethodSpec {
+        MethodSpec::parse(s, ".").unwrap()
+    }
+
+    #[test]
+    fn shared_seq_bandit_converges_across_threads() {
+        let ctrl = SharedController::new(&spec("seq-ucb1"), 128);
+        let n_threads = 4;
+        let per_thread = 200;
+        std::thread::scope(|scope| {
+            for t in 0..n_threads {
+                let mut session = ctrl.session().unwrap();
+                scope.spawn(move || {
+                    let mut rng = Rng::new(100 + t as u64);
+                    for _ in 0..per_thread {
+                        session.session_start(&mut rng);
+                        // arm 1 is the rewarding arm, as in the SeqBandit
+                        // single-threaded convergence test
+                        let (acc, dr) =
+                            if session.current_arm() == Some(1) { (5, 6) } else { (1, 6) };
+                        session.on_verify(acc, dr);
+                    }
+                });
+            }
+        });
+        let total = (n_threads * per_thread) as u64;
+        assert_eq!(ctrl.sessions(), total);
+        assert_eq!(ctrl.updates(), total);
+        let counts = ctrl.arm_counts().unwrap();
+        assert_eq!(counts.iter().sum::<u64>(), total, "{counts:?}");
+        assert!(
+            counts[1] as f64 > total as f64 * 0.5,
+            "shared bandit should concentrate on arm 1: {counts:?}"
+        );
+        let vals = ctrl.arm_values().unwrap();
+        assert!(vals[1] > vals[0] && vals[1] > vals[2], "{vals:?}");
+    }
+
+    #[test]
+    fn token_shared_ladder_accumulates_from_all_workers() {
+        let ctrl = SharedController::new(&spec("token-ucb1"), 8);
+        let sig = TokenSignals::from_logits(&[5.0, 0.0, 0.0, 0.0]);
+        let positions = 4;
+        let per_thread = 25;
+        std::thread::scope(|scope| {
+            for t in 0..2 {
+                let mut session = ctrl.session().unwrap();
+                let sig = sig;
+                scope.spawn(move || {
+                    let mut rng = Rng::new(7 + t as u64);
+                    for _ in 0..per_thread {
+                        session.session_start(&mut rng);
+                        for i in 0..positions {
+                            let _ = session.should_stop(&sig, i, &mut rng);
+                        }
+                        session.on_verify(2, positions);
+                    }
+                });
+            }
+        });
+        let counts = ctrl.arm_counts().unwrap();
+        // every (thread, session, position) triple played exactly one arm
+        assert_eq!(counts.iter().sum::<u64>(), 2 * per_thread as u64 * positions as u64);
+        assert!(ctrl.is_shared());
+    }
+
+    #[test]
+    fn stateless_methods_get_private_controllers() {
+        let ctrl = SharedController::new(&spec("static-3"), 128);
+        assert!(!ctrl.is_shared());
+        assert!(ctrl.arm_counts().is_none());
+        assert!(ctrl.arm_values().is_none());
+        let mut session = ctrl.session().unwrap();
+        let mut rng = Rng::new(0);
+        session.session_start(&mut rng);
+        let sig = TokenSignals::from_logits(&[3.0, 0.0]);
+        assert!(!session.should_stop(&sig, 0, &mut rng));
+        assert!(!session.should_stop(&sig, 1, &mut rng));
+        assert!(session.should_stop(&sig, 2, &mut rng));
+        session.on_verify(2, 3);
+        assert_eq!(ctrl.sessions(), 1);
+        assert_eq!(ctrl.updates(), 1);
+    }
+
+    #[test]
+    fn session_reset_preserves_shared_memory() {
+        let ctrl = SharedController::new(&spec("seq-ucb1"), 128);
+        let mut session = ctrl.session().unwrap();
+        let mut rng = Rng::new(3);
+        for _ in 0..10 {
+            session.session_start(&mut rng);
+            session.on_verify(3, 6);
+        }
+        session.reset_request();
+        let counts = ctrl.arm_counts().unwrap();
+        assert_eq!(counts.iter().sum::<u64>(), 10, "bandit memory survives reset_request");
+    }
+}

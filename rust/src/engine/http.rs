@@ -2,10 +2,13 @@
 //! framework). Routes:
 //!
 //!   GET  /health              -> {"ok": true, ...}
-//!   GET  /metrics             -> aggregated serving metrics
+//!   GET  /metrics             -> serving metrics + per-worker stats +
+//!                                shared-bandit state
 //!   POST /generate            -> {"prompt": "...", "max_new": 64}
 //!
-//! One thread per connection; the engine worker serializes decoding.
+//! One thread per connection; decoding parallelism comes from the
+//! engine's worker pool (server.rs), and decode failures surface as a
+//! 500 with an error body.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -88,10 +91,13 @@ fn route(engine: &Engine, method: &str, path: &str, body: &str) -> (u16, Json) {
             let mut o = Json::obj();
             o.set("ok", true)
                 .set("pair", engine.config.pair.as_str())
-                .set("method", engine.config.method.as_str());
+                .set("method", engine.config.method.as_str())
+                .set("backend", engine.config.backend.label())
+                .set("workers", engine.config.workers)
+                .set("slots", engine.config.slots);
             (200, o)
         }
-        ("GET", "/metrics") => (200, engine.metrics.lock().unwrap().to_json()),
+        ("GET", "/metrics") => (200, engine.metrics_json()),
         ("POST", "/generate") => match Json::parse(body) {
             Ok(req) => {
                 let prompt = req.get("prompt").and_then(|x| x.as_str()).unwrap_or("");
@@ -103,7 +109,7 @@ fn route(engine: &Engine, method: &str, path: &str, body: &str) -> (u16, Json) {
                 let max_new = req.get("max_new").and_then(|x| x.as_usize()).unwrap_or(96);
                 let rx = engine.submit(prompt, max_new.min(256));
                 match rx.recv_timeout(std::time::Duration::from_secs(120)) {
-                    Ok(resp) => {
+                    Ok(resp) if resp.is_ok() => {
                         let mut o = Json::obj();
                         o.set("id", resp.id as usize)
                             .set("text", resp.text.as_str())
@@ -113,6 +119,14 @@ fn route(engine: &Engine, method: &str, path: &str, body: &str) -> (u16, Json) {
                             .set("decode_ms", resp.result.wall_ns as f64 / 1e6)
                             .set("tokens_per_sec", resp.tokens_per_sec());
                         (200, o)
+                    }
+                    Ok(resp) => {
+                        // explicit decode failure: the worker replied with
+                        // an error body instead of dropping the waiter
+                        let mut o = Json::obj();
+                        o.set("id", resp.id as usize)
+                            .set("error", resp.error.as_deref().unwrap_or("decode failed"));
+                        (500, o)
                     }
                     Err(_) => {
                         let mut o = Json::obj();

@@ -1,6 +1,18 @@
 //! Serving metrics: per-request records aggregated into the latency /
 //! throughput report the end-to-end example prints (TTFT ≈ queue + prefill
 //! + first verified commit; TPOT = decode time per generated token).
+//!
+//! Two sinks with different locking disciplines (DESIGN.md §2):
+//!
+//! * [`EngineMetrics`] — latency/throughput samples, guarded by one mutex
+//!   that is taken **once per completed request** (never on the per-token
+//!   decode hot path).
+//! * [`EngineStats`] — queue depth, per-worker utilization and slot-wait
+//!   counters, all atomics: workers update them lock-free while decoding
+//!   and readers (`/metrics`, the bench harness) snapshot without
+//!   stopping anyone.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 use crate::util::stats::Samples;
 use crate::util::Json;
@@ -10,6 +22,7 @@ use super::request::Response;
 #[derive(Debug, Default)]
 pub struct EngineMetrics {
     pub completed: u64,
+    pub failed: u64,
     pub new_tokens: u64,
     pub drafted: u64,
     pub accepted: u64,
@@ -24,6 +37,10 @@ pub struct EngineMetrics {
 
 impl EngineMetrics {
     pub fn record(&mut self, r: &Response) {
+        if r.error.is_some() {
+            self.failed += 1;
+            return;
+        }
         self.completed += 1;
         self.new_tokens += r.result.new_tokens().len() as u64;
         self.drafted += r.result.drafted() as u64;
@@ -57,8 +74,9 @@ impl EngineMetrics {
     pub fn report(&mut self) -> String {
         let mut s = String::new();
         s.push_str(&format!(
-            "requests: {}   generated tokens: {}   acceptance: {:.2}\n",
+            "requests: {}   failed: {}   generated tokens: {}   acceptance: {:.2}\n",
             self.completed,
+            self.failed,
             self.new_tokens,
             self.acceptance_rate()
         ));
@@ -90,6 +108,7 @@ impl EngineMetrics {
     pub fn to_json(&mut self) -> Json {
         let mut o = Json::obj();
         o.set("completed", self.completed as usize)
+            .set("failed", self.failed as usize)
             .set("new_tokens", self.new_tokens as usize)
             .set("acceptance_rate", self.acceptance_rate())
             .set("throughput_tok_s", self.throughput_tok_s())
@@ -99,6 +118,101 @@ impl EngineMetrics {
             .set("e2e_p50_ms", self.total_ms.percentile(50.0))
             .set("e2e_p99_ms", self.total_ms.percentile(99.0));
         o
+    }
+}
+
+/// Lock-free counters for one decode worker.
+#[derive(Debug, Default)]
+pub struct WorkerStats {
+    pub requests: AtomicU64,
+    pub errors: AtomicU64,
+    /// wall time spent inside `generate` (decode busy time)
+    pub busy_ns: AtomicU64,
+    /// wall time spent blocked waiting for a KV slot
+    pub slot_wait_ns: AtomicU64,
+}
+
+impl WorkerStats {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("requests", self.requests.load(Ordering::Relaxed) as usize)
+            .set("errors", self.errors.load(Ordering::Relaxed) as usize)
+            .set("busy_ms", self.busy_ns.load(Ordering::Relaxed) as f64 / 1e6)
+            .set("slot_wait_ms", self.slot_wait_ns.load(Ordering::Relaxed) as f64 / 1e6);
+        o
+    }
+}
+
+/// Engine-wide atomics: updated by the dispatcher and every worker with
+/// no shared lock; snapshot by readers at any time.
+#[derive(Debug)]
+pub struct EngineStats {
+    pub workers: Vec<WorkerStats>,
+    pub submitted: AtomicU64,
+    pub queue_depth: AtomicUsize,
+    pub peak_queue_depth: AtomicUsize,
+}
+
+impl EngineStats {
+    pub fn new(n_workers: usize) -> EngineStats {
+        EngineStats {
+            workers: (0..n_workers).map(|_| WorkerStats::default()).collect(),
+            submitted: AtomicU64::new(0),
+            queue_depth: AtomicUsize::new(0),
+            peak_queue_depth: AtomicUsize::new(0),
+        }
+    }
+
+    /// Record the instantaneous queue depth (dispatcher after push,
+    /// workers after pop).
+    pub fn note_depth(&self, depth: usize) {
+        self.queue_depth.store(depth, Ordering::Relaxed);
+        self.peak_queue_depth.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    pub fn total_requests(&self) -> u64 {
+        self.workers.iter().map(|w| w.requests.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Mean decode-busy fraction across workers over `span_ns` of wall
+    /// clock — the slot/worker utilization readout.
+    pub fn utilization(&self, span_ns: u64) -> f64 {
+        if span_ns == 0 || self.workers.is_empty() {
+            return 0.0;
+        }
+        let busy: u64 = self.workers.iter().map(|w| w.busy_ns.load(Ordering::Relaxed)).sum();
+        busy as f64 / (span_ns as f64 * self.workers.len() as f64)
+    }
+
+    pub fn to_json(&self, span_ns: u64) -> Json {
+        let mut o = Json::obj();
+        o.set("workers", self.workers.len())
+            .set("submitted", self.submitted.load(Ordering::Relaxed) as usize)
+            .set("queue_depth", self.queue_depth.load(Ordering::Relaxed))
+            .set("peak_queue_depth", self.peak_queue_depth.load(Ordering::Relaxed))
+            .set("utilization", self.utilization(span_ns));
+        let per_worker: Vec<Json> = self.workers.iter().map(|w| w.to_json()).collect();
+        o.set("per_worker", per_worker);
+        o
+    }
+
+    pub fn report(&self, span_ns: u64) -> String {
+        let mut s = format!(
+            "workers: {}   peak queue depth: {}   utilization: {:.0}%\n",
+            self.workers.len(),
+            self.peak_queue_depth.load(Ordering::Relaxed),
+            self.utilization(span_ns) * 100.0
+        );
+        for (i, w) in self.workers.iter().enumerate() {
+            s.push_str(&format!(
+                "  worker {i}: {} requests ({} errors)  busy {:.1} ms  slot-wait {:.1} ms\n",
+                w.requests.load(Ordering::Relaxed),
+                w.errors.load(Ordering::Relaxed),
+                w.busy_ns.load(Ordering::Relaxed) as f64 / 1e6,
+                w.slot_wait_ns.load(Ordering::Relaxed) as f64 / 1e6,
+            ));
+        }
+        s
     }
 }
 
@@ -112,7 +226,14 @@ mod tests {
         result.tokens = vec![0; tokens + 4];
         result.prompt_len = 4;
         result.wall_ns = wall_ms * 1_000_000;
-        Response { id, text: String::new(), result, queue_ns: 1_000_000, total_ns: wall_ms * 1_000_000 + 1_000_000 }
+        Response {
+            id,
+            text: String::new(),
+            result,
+            queue_ns: 1_000_000,
+            total_ns: wall_ms * 1_000_000 + 1_000_000,
+            error: None,
+        }
     }
 
     #[test]
@@ -129,5 +250,34 @@ mod tests {
         assert!(rep.contains("tpot"));
         let j = m.to_json();
         assert_eq!(j.get("completed").unwrap().as_usize().unwrap(), 2);
+    }
+
+    #[test]
+    fn failures_counted_separately() {
+        let mut m = EngineMetrics::default();
+        m.record(&resp(1, 10, 20));
+        m.record(&Response::failure(2, 1_000, 2_000, "boom".into()));
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.failed, 1);
+        // failed requests contribute no latency samples
+        assert_eq!(m.new_tokens, 10);
+        let j = m.to_json();
+        assert_eq!(j.get("failed").unwrap().as_usize().unwrap(), 1);
+    }
+
+    #[test]
+    fn engine_stats_track_depth_and_utilization() {
+        let s = EngineStats::new(2);
+        s.note_depth(3);
+        s.note_depth(7);
+        s.note_depth(1);
+        assert_eq!(s.queue_depth.load(Ordering::Relaxed), 1);
+        assert_eq!(s.peak_queue_depth.load(Ordering::Relaxed), 7);
+        s.workers[0].busy_ns.store(500, Ordering::Relaxed);
+        s.workers[1].busy_ns.store(500, Ordering::Relaxed);
+        assert!((s.utilization(1000) - 0.5).abs() < 1e-12);
+        let j = s.to_json(1000);
+        assert_eq!(j.get("workers").unwrap().as_usize().unwrap(), 2);
+        assert!(s.report(1000).contains("worker 1"));
     }
 }

@@ -1,6 +1,7 @@
 //! Serving layer (the vLLM-router-shaped part of L3): request types,
-//! admission scheduler, KV slot pool, the engine worker with persistent
-//! online bandit state, serving metrics, and a minimal HTTP JSON API.
+//! admission scheduler, concurrent KV slot pool, the dispatcher + decode
+//! worker pool sharing one online bandit, serving metrics, and a minimal
+//! HTTP JSON API. See DESIGN.md §2 for the concurrency design.
 
 pub mod http;
 pub mod metrics;
@@ -10,8 +11,8 @@ pub mod server;
 pub mod slots;
 
 pub use http::HttpServer;
-pub use metrics::EngineMetrics;
+pub use metrics::{EngineMetrics, EngineStats, WorkerStats};
 pub use request::{Request, Response};
 pub use scheduler::{Policy, Scheduler};
-pub use server::{Engine, EngineConfig};
+pub use server::{BackendKind, Engine, EngineConfig};
 pub use slots::{Slot, SlotPool};

@@ -26,6 +26,30 @@ impl Request {
             arrival: Instant::now(),
         }
     }
+
+    /// Scheduling cost (SJF key): tokenized prompt length + decode budget.
+    /// Before the engine has encoded the prompt, char count stands in for
+    /// the token count (the tokenizer is char-level, manifest.rs).
+    pub fn cost(&self) -> usize {
+        let prompt_tokens = if self.prompt.is_empty() {
+            self.prompt_text.chars().count()
+        } else {
+            self.prompt.len()
+        };
+        prompt_tokens + self.max_new
+    }
+
+    /// Deterministic per-request scenario seed (drives the simulator
+    /// backend): a pure function of the prompt, so identical prompts
+    /// decode identically on any worker of any engine.
+    pub fn scenario_seed(&self) -> u64 {
+        crate::util::fnv1a(
+            self.prompt_text
+                .bytes()
+                .map(u64::from)
+                .chain(self.prompt.iter().map(|&t| t as u64)),
+        )
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -37,9 +61,28 @@ pub struct Response {
     pub queue_ns: u64,
     /// total time from arrival to completion
     pub total_ns: u64,
+    /// decode failure, if any — a failed request still gets a reply so
+    /// clients never hang on a dropped channel
+    pub error: Option<String>,
 }
 
 impl Response {
+    /// An error reply carrying no generation result.
+    pub fn failure(id: u64, queue_ns: u64, total_ns: u64, error: String) -> Response {
+        Response {
+            id,
+            text: String::new(),
+            result: GenResult::default(),
+            queue_ns,
+            total_ns,
+            error: Some(error),
+        }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        self.error.is_none()
+    }
+
     pub fn tokens_per_sec(&self) -> f64 {
         let n = self.result.new_tokens().len() as f64;
         n / (self.result.wall_ns.max(1) as f64 / 1e9)

@@ -3,8 +3,15 @@
 //! With single-sequence executables the "batching" decision is ordering +
 //! admission (the paper's router layer); the KV slot pool (slots.rs) holds
 //! per-sequence device state so interleaved execution never re-prefills.
+//!
+//! The queue is a binary heap keyed per policy, so `pop` is O(log n)
+//! under load (the seed implementation scanned the whole queue per pop).
+//! In the multi-worker engine (DESIGN.md §2) the scheduler sits behind
+//! one short-lived mutex: workers lock, pop, and release before touching
+//! any model state.
 
-use std::collections::VecDeque;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
 
 use super::request::Request;
 
@@ -25,20 +32,72 @@ impl Policy {
     }
 }
 
-#[derive(Debug)]
+/// Heap entry: min-(key, seq) ordering via reversed `Ord`. `key` is 0
+/// under FCFS (arrival order decides) and the request's decode cost under
+/// SJF; `seq` breaks ties by arrival so equal-cost jobs stay FIFO.
+struct Entry {
+    key: u64,
+    seq: u64,
+    req: Request,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key && self.seq == other.seq
+    }
+}
+
+impl Eq for Entry {}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed: BinaryHeap is a max-heap, we want the smallest
+        // (key, seq) on top
+        (other.key, other.seq).cmp(&(self.key, self.seq))
+    }
+}
+
 pub struct Scheduler {
     policy: Policy,
-    queue: VecDeque<Request>,
+    queue: BinaryHeap<Entry>,
+    next_seq: u64,
     admitted: u64,
+}
+
+impl std::fmt::Debug for Scheduler {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Scheduler")
+            .field("policy", &self.policy)
+            .field("queued", &self.queue.len())
+            .field("admitted", &self.admitted)
+            .finish()
+    }
 }
 
 impl Scheduler {
     pub fn new(policy: Policy) -> Scheduler {
-        Scheduler { policy, queue: VecDeque::new(), admitted: 0 }
+        Scheduler {
+            policy,
+            queue: BinaryHeap::new(),
+            next_seq: 0,
+            admitted: 0,
+        }
     }
 
     pub fn push(&mut self, req: Request) {
-        self.queue.push_back(req);
+        let key = match self.policy {
+            Policy::Fcfs => 0,
+            Policy::Sjf => req.cost() as u64,
+        };
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.queue.push(Entry { key, seq, req });
     }
 
     pub fn len(&self) -> usize {
@@ -53,28 +112,11 @@ impl Scheduler {
         self.admitted
     }
 
-    /// Next request to decode, per policy.
+    /// Next request to decode, per policy. O(log n).
     pub fn pop(&mut self) -> Option<Request> {
-        if self.queue.is_empty() {
-            return None;
-        }
-        let idx = match self.policy {
-            Policy::Fcfs => 0,
-            Policy::Sjf => {
-                let mut best = 0;
-                let mut best_cost = usize::MAX;
-                for (i, r) in self.queue.iter().enumerate() {
-                    let cost = r.prompt_text.len() + r.max_new;
-                    if cost < best_cost {
-                        best_cost = cost;
-                        best = i;
-                    }
-                }
-                best
-            }
-        };
+        let entry = self.queue.pop()?;
         self.admitted += 1;
-        self.queue.remove(idx)
+        Some(entry.req)
     }
 }
 
@@ -107,6 +149,44 @@ mod tests {
         assert_eq!(s.pop().unwrap().id, 2);
         assert_eq!(s.pop().unwrap().id, 3);
         assert_eq!(s.pop().unwrap().id, 1);
+        assert_eq!(s.admitted(), 3);
+    }
+
+    #[test]
+    fn sjf_costs_by_token_count_when_encoded() {
+        // long text but few tokens must beat short text with many tokens
+        let mut cheap = Request::new(1, "x".repeat(500), 10);
+        cheap.prompt = vec![1, 3, 4]; // 3 tokens after encoding
+        let mut costly = Request::new(2, "y", 10);
+        costly.prompt = (0..400).map(|i| 3 + (i % 29)).collect();
+        let mut s = Scheduler::new(Policy::Sjf);
+        s.push(costly);
+        s.push(cheap);
+        assert_eq!(s.pop().unwrap().id, 1);
+        assert_eq!(s.pop().unwrap().id, 2);
+    }
+
+    #[test]
+    fn sjf_ties_stay_fifo() {
+        let mut s = Scheduler::new(Policy::Sjf);
+        for id in 1..=4 {
+            s.push(req(id, 10, 10));
+        }
+        for id in 1..=4 {
+            assert_eq!(s.pop().unwrap().id, id);
+        }
+    }
+
+    #[test]
+    fn interleaved_push_pop_keeps_heap_consistent() {
+        let mut s = Scheduler::new(Policy::Sjf);
+        s.push(req(1, 30, 30));
+        s.push(req(2, 1, 1));
+        assert_eq!(s.pop().unwrap().id, 2);
+        s.push(req(3, 2, 2));
+        assert_eq!(s.pop().unwrap().id, 3);
+        assert_eq!(s.pop().unwrap().id, 1);
+        assert!(s.is_empty());
         assert_eq!(s.admitted(), 3);
     }
 }

@@ -1,26 +1,79 @@
-//! The serving engine: a worker thread owning the PJRT models, a TapOut
-//! controller with *persistent online bandit state across requests*, an
-//! admission scheduler, and the metrics sink. Requests go in over a
-//! channel; each caller gets a private response channel.
+//! The serving engine: a dispatcher thread feeding a pool of decode
+//! workers (one per KV slot by default), all updating a single shared
+//! TapOut controller with *persistent online bandit state across requests
+//! and workers* (DESIGN.md §2). Requests go in over a channel; each caller
+//! gets a private response channel, and failures are answered explicitly
+//! rather than dropped.
+//!
+//! Concurrency layout:
+//!
+//!   submit() ──ch──▶ dispatcher ──sched──▶ worker 0 ─┐
+//!                      (encode,   (mutex +  worker 1 ─┼─▶ SlotPool ──▶
+//!                       admit)     condvar) worker N ─┘   (checkout)
+//!
+//!   * scheduler + waiter map: one mutex, held for queue ops only;
+//!   * KV slots: blocking checkout (slots.rs) — workers may outnumber
+//!     slots;
+//!   * bandit: shared select/update via `SharedController`
+//!     (bandit/shared.rs); the per-token stop path is lock-free for
+//!     sequence-granularity methods (token-granularity bandits take a
+//!     short shared lock per drafted token — see bandit/shared.rs);
+//!   * metrics: per-request samples under one mutex, per-worker counters
+//!     and queue depth as atomics (metrics.rs).
 
+use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::models::{Manifest, ModelAssets};
+use crate::bandit::{SessionController, SharedController};
+use crate::models::{sim_decode, sim_encode, Manifest, ModelAssets};
 use crate::runtime::Runtime;
-use crate::spec::{generate, GenConfig, MethodSpec, BOS};
-use crate::util::Rng;
+use crate::spec::{generate, GenConfig, MethodSpec, BOS, EOS};
+use crate::util::{Json, Rng};
 
-use super::metrics::EngineMetrics;
+use super::metrics::{EngineMetrics, EngineStats};
 use super::request::{Request, Response};
 use super::scheduler::{Policy, Scheduler};
 use super::slots::SlotPool;
+
+/// Which model backend the engine decodes with.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BackendKind {
+    /// real tiny LMs via PJRT artifacts (requires `make artifacts`)
+    Pjrt,
+    /// synthetic correlated draft/target pairs (models/sim.rs) — runs
+    /// anywhere, used by the concurrency tests and scaling benches
+    Sim { quality: f32, rel_cost: f64 },
+}
+
+impl BackendKind {
+    /// Strict: an unknown backend name is an error, not a silent PJRT
+    /// fallback (which would surface as a misleading artifacts failure).
+    pub fn parse(s: &str) -> Result<BackendKind, String> {
+        match s {
+            "pjrt" => Ok(BackendKind::Pjrt),
+            "sim" => Ok(BackendKind::sim_default()),
+            other => Err(format!("unknown backend: {other} (expected pjrt|sim)")),
+        }
+    }
+
+    pub fn sim_default() -> BackendKind {
+        BackendKind::Sim { quality: 0.9, rel_cost: 1.0 / 16.0 }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::Sim { .. } => "sim",
+        }
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
@@ -29,7 +82,11 @@ pub struct EngineConfig {
     pub method: String,
     pub gamma_max: usize,
     pub sched: Policy,
+    /// KV slots (resident sequence states)
     pub slots: usize,
+    /// decode worker threads; may exceed `slots` (they queue at checkout)
+    pub workers: usize,
+    pub backend: BackendKind,
 }
 
 impl Default for EngineConfig {
@@ -41,6 +98,33 @@ impl Default for EngineConfig {
             gamma_max: 128,
             sched: Policy::Fcfs,
             slots: 2,
+            workers: 2,
+            backend: BackendKind::Pjrt,
+        }
+    }
+}
+
+/// Prompt/text codec — the manifest tokenizer on PJRT, the fixed byte map
+/// on the simulator.
+enum Codec {
+    Manifest(Box<Manifest>),
+    Sim,
+}
+
+impl Codec {
+    fn encode_prompt(&self, text: &str) -> Vec<u32> {
+        let mut p = vec![BOS];
+        match self {
+            Codec::Manifest(m) => p.extend(m.encode(text)),
+            Codec::Sim => p.extend(sim_encode(text)),
+        }
+        p
+    }
+
+    fn decode(&self, tokens: &[u32]) -> String {
+        match self {
+            Codec::Manifest(m) => m.decode(tokens),
+            Codec::Sim => sim_decode(tokens),
         }
     }
 }
@@ -50,47 +134,120 @@ enum Job {
     Shutdown,
 }
 
+struct QueueState {
+    sched: Scheduler,
+    waiters: HashMap<u64, Sender<Response>>,
+    shutdown: bool,
+}
+
+/// State shared by the dispatcher and every worker.
+struct EngineShared {
+    q: Mutex<QueueState>,
+    cv: Condvar,
+    pool: SlotPool,
+    codec: Codec,
+    gamma_max: usize,
+    /// serving-span origin (throughput/utilization time base); reset by
+    /// the dispatcher once warmup finishes so XLA compile time never
+    /// deflates the reported throughput
+    started: Mutex<Instant>,
+}
+
 pub struct Engine {
     tx: Sender<Job>,
-    handle: Option<JoinHandle<()>>,
+    dispatcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
     next_id: AtomicU64,
     pub metrics: Arc<Mutex<EngineMetrics>>,
+    pub stats: Arc<EngineStats>,
     pub config: EngineConfig,
+    controller: SharedController,
+    shared: Arc<EngineShared>,
 }
 
 impl Engine {
-    /// Boot the engine: loads artifacts, warms up the hot-path executables,
-    /// spawns the decode worker.
-    pub fn start(config: EngineConfig) -> Result<Engine> {
+    /// Boot the engine: loads artifacts (PJRT backend), builds the slot
+    /// pool and the shared controller, spawns the dispatcher and the
+    /// decode workers.
+    pub fn start(mut config: EngineConfig) -> Result<Engine> {
+        // normalize once; every later read of config.workers/slots (http
+        // /health, CLI banner, metrics) sees the effective values
+        config.workers = config.workers.max(1);
+        config.slots = config.slots.max(1);
+        let n_workers = config.workers;
+        let n_slots = config.slots;
         let metrics = Arc::new(Mutex::new(EngineMetrics::default()));
+        let stats = Arc::new(EngineStats::new(n_workers));
         let (tx, rx) = channel::<Job>();
 
-        let manifest = Manifest::load(&config.artifacts)?;
-        let runtime = Runtime::cpu().context("PJRT client")?;
-        let (dspec, tspec) = manifest.pair(&config.pair)?;
-        let (dname, tname) = (dspec.name.clone(), tspec.name.clone());
-        let draft_assets = ModelAssets::load(&runtime, &manifest, &dname)?;
-        let target_assets = ModelAssets::load(&runtime, &manifest, &tname)?;
         let method = MethodSpec::parse(&config.method, &config.artifacts.display().to_string())
             .map_err(|e| anyhow::anyhow!(e))?;
+        let controller = SharedController::new(&method, config.gamma_max);
 
-        let cfg = config.clone();
-        let m = metrics.clone();
-        let handle = std::thread::Builder::new()
-            .name("tapout-engine".into())
-            .spawn(move || {
-                if let Err(e) = worker(cfg, manifest, draft_assets, target_assets, method, rx, m)
-                {
-                    eprintln!("[engine] worker failed: {e:#}");
-                }
-            })?;
+        let (pool, codec, warm_assets) = match config.backend {
+            BackendKind::Pjrt => {
+                let manifest = Manifest::load(&config.artifacts)?;
+                let runtime = Runtime::cpu().context("PJRT client")?;
+                let (dspec, tspec) = manifest.pair(&config.pair)?;
+                let (dname, tname) = (dspec.name.clone(), tspec.name.clone());
+                let draft_assets = ModelAssets::load(&runtime, &manifest, &dname)?;
+                let target_assets = ModelAssets::load(&runtime, &manifest, &tname)?;
+                let pool = SlotPool::pjrt(&draft_assets, &target_assets, n_slots)?;
+                (pool, Codec::Manifest(Box::new(manifest)), Some((draft_assets, target_assets)))
+            }
+            BackendKind::Sim { quality, rel_cost } => {
+                (SlotPool::sim(quality, rel_cost, n_slots), Codec::Sim, None)
+            }
+        };
+
+        let shared = Arc::new(EngineShared {
+            q: Mutex::new(QueueState {
+                sched: Scheduler::new(config.sched),
+                waiters: HashMap::new(),
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+            pool,
+            codec,
+            gamma_max: config.gamma_max,
+            started: Mutex::new(Instant::now()),
+        });
+
+        // mint every per-worker session up front so a controller build
+        // error (e.g. a missing classifier file) fails `start` cleanly
+        // before any thread exists
+        let mut sessions = Vec::with_capacity(n_workers);
+        for _ in 0..n_workers {
+            sessions.push(controller.session()?);
+        }
+        let mut workers = Vec::with_capacity(n_workers);
+        for (i, session) in sessions.into_iter().enumerate() {
+            let sh = shared.clone();
+            let m = metrics.clone();
+            let st = stats.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("tapout-worker-{i}"))
+                    .spawn(move || worker_loop(i, sh, session, m, st))?,
+            );
+        }
+
+        let sh = shared.clone();
+        let st = stats.clone();
+        let dispatcher = std::thread::Builder::new()
+            .name("tapout-dispatch".into())
+            .spawn(move || dispatcher_loop(sh, rx, st, warm_assets))?;
 
         Ok(Engine {
             tx,
-            handle: Some(handle),
+            dispatcher: Some(dispatcher),
+            workers,
             next_id: AtomicU64::new(1),
             metrics,
+            stats,
             config,
+            controller,
+            shared,
         })
     }
 
@@ -107,111 +264,222 @@ impl Engine {
         rrx
     }
 
+    /// Graceful shutdown: queued requests drain, then all threads exit.
     pub fn shutdown(mut self) {
         let _ = self.tx.send(Job::Shutdown);
-        if let Some(h) = self.handle.take() {
+        if let Some(h) = self.dispatcher.take() {
             let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    // --- shared-bandit readouts (the online-learning observability) ----
+
+    /// Drafting sessions absorbed by the shared controller since boot —
+    /// the inter-request / inter-worker carryover counter.
+    pub fn bandit_sessions(&self) -> u64 {
+        self.controller.sessions()
+    }
+
+    pub fn bandit_updates(&self) -> u64 {
+        self.controller.updates()
+    }
+
+    /// Per-arm play counts of the shared bandit (None for stateless
+    /// methods).
+    pub fn bandit_counts(&self) -> Option<Vec<u64>> {
+        self.controller.arm_counts()
+    }
+
+    pub fn bandit_values(&self) -> Option<Vec<f64>> {
+        self.controller.arm_values()
+    }
+
+    /// Combined serving report: request samples + worker/queue stats +
+    /// shared-bandit state.
+    pub fn metrics_json(&self) -> Json {
+        // one time base for the whole document: boot → last completed
+        // request (what throughput uses); live uptime only before the
+        // first completion
+        let (mut o, mut span_ns) = {
+            let mut m = self.metrics.lock().unwrap();
+            (m.to_json(), m.span_ns)
+        };
+        if span_ns == 0 {
+            span_ns = self.shared.started.lock().unwrap().elapsed().as_nanos() as u64;
+        }
+        o.set("engine", self.stats.to_json(span_ns));
+        if self.controller.is_shared() {
+            let mut b = Json::obj();
+            b.set("method", self.controller.method_label())
+                .set("sessions", self.controller.sessions() as usize)
+                .set("updates", self.controller.updates() as usize);
+            if let Some(counts) = self.controller.arm_counts() {
+                b.set("arm_counts", counts.iter().map(|&c| c as f64).collect::<Vec<f64>>());
+            }
+            if let Some(values) = self.controller.arm_values() {
+                b.set("arm_values", values);
+            }
+            if let Some(names) = self.controller.arm_names() {
+                b.set("arm_names", names.iter().map(|n| Json::from(n.as_str())).collect::<Vec<Json>>());
+            }
+            o.set("bandit", b);
+        }
+        o
+    }
+}
+
+fn dispatcher_loop(
+    shared: Arc<EngineShared>,
+    rx: Receiver<Job>,
+    stats: Arc<EngineStats>,
+    warm_assets: Option<(Arc<ModelAssets>, Arc<ModelAssets>)>,
+) {
+    // warm up the step + common verify buckets so first-request latency is
+    // not dominated by XLA compilation; failures fall back to lazy compile
+    if let Some((draft, target)) = warm_assets {
+        if let Err(e) = draft
+            .exes
+            .warmup(&[1, 4, 128, 256])
+            .and_then(|_| target.exes.warmup(&[1, 8, 16, 128, 256]))
+        {
+            eprintln!("[engine] warmup failed (continuing lazily): {e:#}");
+        }
+        // serving span starts after compilation, as in the seed engine
+        *shared.started.lock().unwrap() = Instant::now();
+    }
+
+    loop {
+        match rx.recv() {
+            Ok(Job::Run(mut req, reply)) => {
+                if req.prompt.is_empty() {
+                    req.prompt = shared.codec.encode_prompt(&req.prompt_text);
+                }
+                stats.submitted.fetch_add(1, Ordering::Relaxed);
+                {
+                    let mut q = shared.q.lock().unwrap();
+                    q.waiters.insert(req.id, reply);
+                    q.sched.push(req);
+                    stats.note_depth(q.sched.len());
+                }
+                shared.cv.notify_one();
+            }
+            Ok(Job::Shutdown) | Err(_) => {
+                shared.q.lock().unwrap().shutdown = true;
+                shared.cv.notify_all();
+                return;
+            }
         }
     }
 }
 
-fn worker(
-    cfg: EngineConfig,
-    manifest: Manifest,
-    draft_assets: Arc<ModelAssets>,
-    target_assets: Arc<ModelAssets>,
-    method: MethodSpec,
-    rx: Receiver<Job>,
+fn worker_loop(
+    worker_id: usize,
+    shared: Arc<EngineShared>,
+    mut session: SessionController,
     metrics: Arc<Mutex<EngineMetrics>>,
-) -> Result<()> {
-    // warm up the step + common verify buckets so first-request latency is
-    // not dominated by XLA compilation
-    draft_assets.exes.warmup(&[1, 4, 128, 256])?;
-    target_assets.exes.warmup(&[1, 8, 16, 128, 256])?;
-
-    let mut pool = SlotPool::new(&draft_assets, &target_assets, cfg.slots.max(1))?;
-    let mut sched = Scheduler::new(cfg.sched);
-    let mut waiters: std::collections::HashMap<u64, Sender<Response>> = Default::default();
-    let mut ctrl = method.build(cfg.gamma_max).map_err(|e| anyhow::anyhow!("{e}"))?;
-    let mut rng = Rng::new(0xE46);
-    let started = Instant::now();
-
+    stats: Arc<EngineStats>,
+) {
+    let mut rng = Rng::new(0xE46C0DE ^ ((worker_id as u64) << 8));
     loop {
-        // drain everything that has arrived, then schedule
-        loop {
-            match rx.try_recv() {
-                Ok(Job::Run(mut req, reply)) => {
-                    if req.prompt.is_empty() {
-                        req.prompt = vec![BOS];
-                        req.prompt.extend(manifest.encode(&req.prompt_text));
-                    }
-                    waiters.insert(req.id, reply);
-                    sched.push(req);
+        // pull the next request per scheduling policy (queued work drains
+        // even after shutdown is flagged)
+        let job = {
+            let mut q = shared.q.lock().unwrap();
+            loop {
+                if let Some(req) = q.sched.pop() {
+                    stats.note_depth(q.sched.len());
+                    let reply = q.waiters.remove(&req.id);
+                    break Some((req, reply));
                 }
-                Ok(Job::Shutdown) => return Ok(()),
-                Err(std::sync::mpsc::TryRecvError::Empty) => break,
-                Err(std::sync::mpsc::TryRecvError::Disconnected) => return Ok(()),
-            }
-        }
-
-        let Some(req) = sched.pop() else {
-            // idle: block for the next job
-            match rx.recv_timeout(Duration::from_millis(50)) {
-                Ok(Job::Run(mut req, reply)) => {
-                    if req.prompt.is_empty() {
-                        req.prompt = vec![BOS];
-                        req.prompt.extend(manifest.encode(&req.prompt_text));
-                    }
-                    waiters.insert(req.id, reply);
-                    sched.push(req);
+                if q.shutdown {
+                    break None;
                 }
-                Ok(Job::Shutdown) => return Ok(()),
-                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
-                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return Ok(()),
+                q = shared.cv.wait(q).unwrap();
             }
-            continue;
         };
+        let Some((req, reply)) = job else { return };
+        let wstats = &stats.workers[worker_id];
 
-        let mut slot = pool.acquire().expect("sequential worker always has a slot");
+        let t_wait = Instant::now();
+        let mut slot = shared.pool.acquire();
+        wstats
+            .slot_wait_ns
+            .fetch_add(t_wait.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        // queueing delay = arrival → decode start, *including* the slot
+        // wait — under workers > slots contention that wait is real
+        // queueing and must show up in queue/TTFT percentiles
         let queue_ns = req.arrival.elapsed().as_nanos() as u64;
+
+        let seed = req.scenario_seed();
+        slot.draft.begin_request(seed, &req.category);
+        slot.target.begin_request(seed, &req.category);
         let gen_cfg = GenConfig {
             max_new: req.max_new,
-            gamma_max: cfg.gamma_max,
+            gamma_max: shared.gamma_max,
             stop_at_eos: true,
             collect_signals: false,
         };
+        let t_busy = Instant::now();
         let outcome = generate(
-            &mut slot.draft,
-            &mut slot.target,
-            &mut ctrl,
+            slot.draft.as_mut(),
+            slot.target.as_mut(),
+            &mut session,
             &mut rng,
             &req.prompt,
             &gen_cfg,
         );
-        pool.release(slot);
+        wstats
+            .busy_ns
+            .fetch_add(t_busy.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        shared.pool.release(slot);
+        wstats.requests.fetch_add(1, Ordering::Relaxed);
 
-        match outcome {
-            Ok(result) => {
-                let resp = Response {
+        let resp = match outcome {
+            Ok(mut result) => {
+                // serving contract: never return more than max_new tokens,
+                // and nothing past the first EOS. The last verification
+                // round may overshoot both (verification is atomic), and
+                // the overshoot depends on which arm the bandit played —
+                // capping here makes the reply a pure function of the
+                // prompt, identical across worker counts.
+                result.tokens.truncate(result.prompt_len + req.max_new);
+                let eos_at = result.new_tokens().iter().position(|&t| t == EOS);
+                if let Some(p) = eos_at {
+                    result.tokens.truncate(result.prompt_len + p + 1);
+                }
+                Response {
                     id: req.id,
-                    text: manifest.decode(result.new_tokens()),
+                    text: shared.codec.decode(result.new_tokens()),
                     queue_ns,
                     total_ns: req.arrival.elapsed().as_nanos() as u64,
                     result,
-                };
-                {
-                    let mut m = metrics.lock().unwrap();
-                    m.record(&resp);
-                    m.span_ns = started.elapsed().as_nanos() as u64;
-                }
-                if let Some(tx) = waiters.remove(&req.id) {
-                    let _ = tx.send(resp);
+                    error: None,
                 }
             }
             Err(e) => {
                 eprintln!("[engine] request {} failed: {e:#}", req.id);
-                waiters.remove(&req.id);
+                wstats.errors.fetch_add(1, Ordering::Relaxed);
+                Response::failure(
+                    req.id,
+                    queue_ns,
+                    req.arrival.elapsed().as_nanos() as u64,
+                    format!("{e:#}"),
+                )
             }
+        };
+        {
+            // span read under the metrics lock so a preempted worker can
+            // never overwrite a later worker's larger span with a smaller
+            // one (which would overstate throughput)
+            let mut m = metrics.lock().unwrap();
+            m.record(&resp);
+            m.span_ns = shared.started.lock().unwrap().elapsed().as_nanos() as u64;
+        }
+        if let Some(tx) = reply {
+            let _ = tx.send(resp);
         }
     }
 }

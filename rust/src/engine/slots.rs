@@ -1,59 +1,163 @@
 //! KV slot pool — per-sequence device state (draft + target worlds) that
-//! survives across requests. A slot owns one `PjrtModel` pair; acquiring a
-//! slot is O(1) because the contiguous-cursor protocol never needs the KV
-//! cache cleared (stale entries beyond the cursor are dead by construction).
+//! survives across requests. A slot owns one model pair; acquiring a slot
+//! is O(1) because the contiguous-cursor protocol never needs the KV cache
+//! cleared (stale entries beyond the cursor are dead by construction).
+//!
+//! The pool is shared by all decode workers (`&self` API behind a
+//! mutex + condvar, DESIGN.md §2): checkout moves the `Slot` out of the
+//! pool, so a checked-out slot is owned by exactly one worker with no
+//! further synchronization. `acquire` blocks until a slot frees up, which
+//! lets the worker count exceed the slot count without panicking — extra
+//! workers simply queue at the checkout.
 
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::Result;
 
-use crate::models::{ModelAssets, PjrtModel};
+use crate::models::sim::Scenario;
+use crate::models::{LanguageModel, ModelAssets, PjrtModel, SimModel};
 
 pub struct Slot {
     pub id: usize,
-    pub draft: PjrtModel,
-    pub target: PjrtModel,
+    pub draft: Box<dyn LanguageModel>,
+    pub target: Box<dyn LanguageModel>,
     /// requests served by this slot (reuse diagnostics)
     pub served: u64,
 }
 
 pub struct SlotPool {
-    free: Vec<Slot>,
+    free: Mutex<Vec<Slot>>,
+    freed: Condvar,
     total: usize,
 }
 
 impl SlotPool {
-    pub fn new(
+    /// Pool over explicit (draft, target) model pairs.
+    pub fn from_pairs(pairs: Vec<(Box<dyn LanguageModel>, Box<dyn LanguageModel>)>) -> SlotPool {
+        let total = pairs.len();
+        let free = pairs
+            .into_iter()
+            .enumerate()
+            .map(|(id, (draft, target))| Slot { id, draft, target, served: 0 })
+            .collect();
+        SlotPool { free: Mutex::new(free), freed: Condvar::new(), total }
+    }
+
+    /// `n` PJRT slots sharing one set of weights/executables.
+    pub fn pjrt(
         draft_assets: &Arc<ModelAssets>,
         target_assets: &Arc<ModelAssets>,
         n: usize,
     ) -> Result<SlotPool> {
-        let mut free = Vec::with_capacity(n);
-        for id in 0..n {
-            free.push(Slot {
-                id,
-                draft: PjrtModel::new(draft_assets.clone())?,
-                target: PjrtModel::new(target_assets.clone())?,
-                served: 0,
-            });
+        let mut pairs: Vec<(Box<dyn LanguageModel>, Box<dyn LanguageModel>)> =
+            Vec::with_capacity(n);
+        for _ in 0..n {
+            pairs.push((
+                Box::new(PjrtModel::new(draft_assets.clone())?),
+                Box::new(PjrtModel::new(target_assets.clone())?),
+            ));
         }
-        Ok(SlotPool { free, total: n })
+        Ok(SlotPool::from_pairs(pairs))
     }
 
-    pub fn acquire(&mut self) -> Option<Slot> {
-        self.free.pop()
+    /// `n` simulator slots; each request reseats the scenario via
+    /// `LanguageModel::begin_request`.
+    pub fn sim(quality: f32, rel_cost: f64, n: usize) -> SlotPool {
+        let placeholder = Scenario::new(0, "qa");
+        let pairs = (0..n)
+            .map(|_| {
+                (
+                    Box::new(SimModel::draft(placeholder, quality, rel_cost))
+                        as Box<dyn LanguageModel>,
+                    Box::new(SimModel::target(placeholder)) as Box<dyn LanguageModel>,
+                )
+            })
+            .collect();
+        SlotPool::from_pairs(pairs)
     }
 
-    pub fn release(&mut self, mut slot: Slot) {
+    /// Non-blocking checkout.
+    pub fn try_acquire(&self) -> Option<Slot> {
+        self.free.lock().unwrap().pop()
+    }
+
+    /// Blocking checkout: waits until another worker releases a slot.
+    pub fn acquire(&self) -> Slot {
+        let mut free = self.free.lock().unwrap();
+        loop {
+            if let Some(slot) = free.pop() {
+                return slot;
+            }
+            free = self.freed.wait(free).unwrap();
+        }
+    }
+
+    pub fn release(&self, mut slot: Slot) {
         slot.served += 1;
-        self.free.push(slot);
+        self.free.lock().unwrap().push(slot);
+        self.freed.notify_one();
     }
 
     pub fn available(&self) -> usize {
-        self.free.len()
+        self.free.lock().unwrap().len()
     }
 
     pub fn total(&self) -> usize {
         self.total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn checkout_and_release_cycle() {
+        let pool = SlotPool::sim(0.9, 0.05, 2);
+        assert_eq!(pool.total(), 2);
+        let a = pool.try_acquire().unwrap();
+        let b = pool.try_acquire().unwrap();
+        assert!(pool.try_acquire().is_none());
+        assert_eq!(pool.available(), 0);
+        pool.release(a);
+        pool.release(b);
+        assert_eq!(pool.available(), 2);
+        let c = pool.try_acquire().unwrap();
+        assert_eq!(c.served, 1, "release counts a completed checkout");
+    }
+
+    #[test]
+    fn blocking_acquire_waits_for_release() {
+        let pool = Arc::new(SlotPool::sim(0.9, 0.05, 1));
+        let slot = pool.try_acquire().unwrap();
+        let p = pool.clone();
+        let waiter = std::thread::spawn(move || {
+            let s = p.acquire(); // blocks until the main thread releases
+            p.release(s);
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        pool.release(slot);
+        waiter.join().unwrap();
+        assert_eq!(pool.available(), 1);
+    }
+
+    #[test]
+    fn more_workers_than_slots_all_make_progress() {
+        let pool = Arc::new(SlotPool::sim(0.9, 0.05, 2));
+        let mut handles = Vec::new();
+        for _ in 0..6 {
+            let p = pool.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..20 {
+                    let s = p.acquire();
+                    p.release(s);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(pool.available(), 2);
     }
 }

@@ -71,11 +71,7 @@ fn materialize(
 }
 
 fn hash_seed(suite: &str, i: usize) -> u64 {
-    let mut h = 0xcbf29ce484222325u64;
-    for b in suite.bytes() {
-        h = (h ^ b as u64).wrapping_mul(0x100000001b3);
-    }
-    h ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15)
+    crate::util::fnv1a(suite.bytes().map(u64::from)) ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15)
 }
 
 /// Simulator workload with the same category structure as a suite.

@@ -2,12 +2,14 @@
 //!
 //! Reproduction of *TapOut: A Bandit-Based Approach to Dynamic Speculative
 //! Decoding* (Sridhar et al., 2025) as a three-layer rust + JAX + Pallas
-//! serving stack (see DESIGN.md):
+//! serving stack (see `DESIGN.md` at the repo root; §2 covers the
+//! concurrent engine, §4 the KV protocol):
 //!
 //! * **L3 (this crate)** — the speculative-decoding coordinator: bandit
 //!   controllers ([`bandit`]), the training-free arm-policy pool
 //!   ([`policies`]), the Algorithm-1 session loop ([`spec`]), a serving
-//!   engine with scheduler/slots/metrics/HTTP ([`engine`]), the PJRT
+//!   engine with a dispatcher + decode-worker pool sharing one online
+//!   bandit, scheduler/slots/metrics/HTTP ([`engine`]), the PJRT
 //!   runtime ([`runtime`]), model backends ([`models`]) and the experiment
 //!   harness regenerating every paper table/figure ([`harness`]).
 //! * **L2 (python/compile, build-time)** — tiny JAX transformer zoo, AOT

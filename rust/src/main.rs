@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   generate  --pair pair-a --method seq-ucb1 --prompt "..." [--max-new N]
 //!   serve     --port 8077 --pair pair-a --method seq-ucb1 [--sched fcfs|sjf]
+//!             [--workers N] [--slots N] [--backend pjrt|sim]
 //!   exp       --id <table2|table3|table4|table5|fig2|fig3|fig4|fig5|fig6|abl-arms|tune|all>
 //!             [--backend pjrt|sim] [--scale F] [--gamma N]
 //!   selftest  verify the rust engine replays the python golden traces
@@ -13,7 +14,7 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use tapout::engine::{Engine, EngineConfig, HttpServer, Policy};
+use tapout::engine::{BackendKind, Engine, EngineConfig, HttpServer, Policy};
 use tapout::harness::{run_experiment, ExpOpts};
 use tapout::models::{Manifest, ModelAssets, PjrtModel};
 use tapout::runtime::Runtime;
@@ -91,20 +92,29 @@ fn cmd_generate(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    let slots = args.usize("slots", 2);
     let cfg = EngineConfig {
         artifacts: artifacts_dir(args),
         pair: args.str("pair", "pair-a"),
         method: args.str("method", "seq-ucb1"),
         gamma_max: args.usize("gamma", 128),
         sched: Policy::parse(&args.str("sched", "fcfs")),
-        slots: args.usize("slots", 2),
+        slots,
+        // default: one decode worker per KV slot
+        workers: args.usize("workers", slots),
+        backend: BackendKind::parse(&args.str("backend", "pjrt"))
+            .map_err(|e| anyhow::anyhow!(e))?,
     };
     let port = args.usize("port", 8077) as u16;
     let engine = Arc::new(Engine::start(cfg).context("starting engine")?);
-    let http = HttpServer::start(engine, port)?;
+    let http = HttpServer::start(engine.clone(), port)?;
     println!(
-        "tapout serving on http://{}  (POST /generate, GET /health, GET /metrics)",
-        http.addr
+        "tapout serving on http://{}  (POST /generate, GET /health, GET /metrics)  \
+         backend={} workers={} slots={}",
+        http.addr,
+        engine.config.backend.label(),
+        engine.config.workers,
+        engine.config.slots,
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

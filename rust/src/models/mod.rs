@@ -7,5 +7,5 @@ pub mod traits;
 
 pub use manifest::{Manifest, ModelSpec, PromptEntry};
 pub use pjrt::{ModelAssets, PjrtModel};
-pub use sim::{sim_pair, Scenario, SimModel};
+pub use sim::{sim_decode, sim_encode, sim_pair, Scenario, SimModel};
 pub use traits::{LanguageModel, ModelCost};

@@ -189,6 +189,10 @@ impl LanguageModel for SimModel {
         self.cur = 0;
     }
 
+    fn begin_request(&mut self, seed: u64, category: &str) {
+        self.set_scenario(Scenario::new(seed, category));
+    }
+
     fn block(&mut self, tokens: &[u32], start: usize) -> anyhow::Result<Vec<TokenSignals>> {
         anyhow::ensure!(start == self.cur, "non-contiguous block: start {start} cur {}", self.cur);
         anyhow::ensure!(!tokens.is_empty(), "empty block");
@@ -225,6 +229,21 @@ impl LanguageModel for SimModel {
 pub fn sim_pair(seed: u64, category: &str, quality: f32) -> (SimModel, SimModel) {
     let sc = Scenario::new(seed, category);
     (SimModel::draft(sc, quality, 1.0 / 20.0), SimModel::target(sc))
+}
+
+/// Text → sim-vocab tokens (the serving engine's codec on the simulator
+/// backend; BOS not included). The mapping only needs to be deterministic:
+/// sim outputs are driven by the scenario script, not the prompt content.
+pub fn sim_encode(text: &str) -> Vec<u32> {
+    text.bytes().map(|b| 3 + (b % (SIM_VOCAB as u8 - 3)) as u32).collect()
+}
+
+/// Sim tokens → printable text (lossy by construction; diagnostics only).
+pub fn sim_decode(tokens: &[u32]) -> String {
+    tokens
+        .iter()
+        .map(|&t| char::from(b'a' + (t.saturating_sub(3) % 26) as u8))
+        .collect()
 }
 
 #[cfg(test)]

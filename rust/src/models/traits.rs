@@ -24,6 +24,12 @@ pub trait LanguageModel: Send {
     /// need not be cleared — garbage beyond the cursor is never read.
     fn reset(&mut self);
 
+    /// Rebind per-request context before a serving-engine decode. Backends
+    /// with per-request state override this (the simulator reseats its
+    /// scenario on the request's seed/category); KV-cache backends need
+    /// nothing — `generate()` resets the cursor itself.
+    fn begin_request(&mut self, _seed: u64, _category: &str) {}
+
     /// Feed `tokens` at absolute position `start`, which must equal
     /// `cur()` (contiguity invariant). Returns one signal row per token:
     /// row i describes the model's next-token distribution after input

@@ -5,4 +5,4 @@ pub mod session;
 pub mod stop;
 
 pub use session::{generate, greedy, GenConfig, GenResult, RoundStat, BOS, EOS};
-pub use stop::{MethodSpec, StopController};
+pub use stop::{DecodeControl, MethodSpec, StopController};

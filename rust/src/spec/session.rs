@@ -1,6 +1,11 @@
 //! The speculative-decoding session loop — Algorithm 1 of the paper, with
 //! greedy (exact-match) verification and the contiguous-cursor KV protocol
 //! described in models/traits.rs and DESIGN.md §4.
+//!
+//! The loop is written against [`DecodeControl`], so the same code path
+//! serves both the single-threaded harness (`StopController`) and the
+//! multi-worker engine (`bandit::SessionController` over a shared bandit,
+//! DESIGN.md §2).
 
 use std::time::Instant;
 
@@ -8,7 +13,7 @@ use crate::models::traits::LanguageModel;
 use crate::signals::TokenSignals;
 use crate::util::Rng;
 
-use super::stop::StopController;
+use super::stop::DecodeControl;
 
 pub const EOS: u32 = 2;
 pub const BOS: u32 = 1;
@@ -92,15 +97,19 @@ impl GenResult {
 pub fn generate(
     draft: &mut dyn LanguageModel,
     target: &mut dyn LanguageModel,
-    ctrl: &mut StopController,
+    ctrl: &mut dyn DecodeControl,
     rng: &mut Rng,
     prompt: &[u32],
     cfg: &GenConfig,
 ) -> anyhow::Result<GenResult> {
     let t_start = Instant::now();
-    assert!(!prompt.is_empty(), "prompt must be non-empty");
+    anyhow::ensure!(!prompt.is_empty(), "prompt must be non-empty");
     let max_seq = draft.max_seq().min(target.max_seq());
-    assert!(prompt.len() + 2 < max_seq, "prompt too long for KV cache");
+    anyhow::ensure!(
+        prompt.len() + 2 < max_seq,
+        "prompt too long for KV cache: {} + 2 >= {max_seq}",
+        prompt.len()
+    );
 
     draft.reset();
     target.reset();

@@ -19,6 +19,54 @@ pub enum StopController {
     Token(TokenBandit),
 }
 
+/// What the decoding session (`spec::generate`) needs from a controller.
+///
+/// Two implementors exist: [`StopController`] (the single-threaded harness
+/// and CLI path — one controller owned by one loop) and
+/// `bandit::SessionController` (the serving path — per-worker session
+/// state over a process-wide shared bandit; see DESIGN.md §2).
+pub trait DecodeControl: Send {
+    /// A new drafting session begins (bandit arm selection happens here).
+    fn session_start(&mut self, rng: &mut Rng);
+
+    /// Should drafting stop after the proposal at position `idx`?
+    fn should_stop(&mut self, sig: &TokenSignals, idx: usize, rng: &mut Rng) -> bool;
+
+    /// Verification outcome for the session: `accepted` of `drafted`.
+    fn on_verify(&mut self, accepted: usize, drafted: usize);
+
+    /// A new request begins (per-request policy state resets; bandit
+    /// memory persists — the whole point of an *online* method).
+    fn reset_request(&mut self);
+
+    /// Arm that drove the current session (Seq-granularity bandits only).
+    fn current_arm(&self) -> Option<usize> {
+        None
+    }
+}
+
+impl DecodeControl for StopController {
+    fn session_start(&mut self, rng: &mut Rng) {
+        StopController::session_start(self, rng)
+    }
+
+    fn should_stop(&mut self, sig: &TokenSignals, idx: usize, rng: &mut Rng) -> bool {
+        StopController::should_stop(self, sig, idx, rng)
+    }
+
+    fn on_verify(&mut self, accepted: usize, drafted: usize) {
+        StopController::on_verify(self, accepted, drafted)
+    }
+
+    fn reset_request(&mut self) {
+        StopController::reset_request(self)
+    }
+
+    fn current_arm(&self) -> Option<usize> {
+        StopController::current_arm(self)
+    }
+}
+
 /// Method specification as used by the CLI / experiment harness. Matches
 /// the row labels of paper Tables 3-5.
 #[derive(Clone, Debug, PartialEq)]

@@ -13,3 +13,14 @@ pub mod table;
 
 pub use json::Json;
 pub use rng::Rng;
+
+/// FNV-1a-style deterministic mix over a value stream — the single
+/// definition behind workload seeds (harness/workload.rs) and serving
+/// scenario seeds (engine/request.rs), so the two can never drift.
+pub fn fnv1a(vals: impl IntoIterator<Item = u64>) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for v in vals {
+        h = (h ^ v).wrapping_mul(0x100000001b3);
+    }
+    h
+}

@@ -1,0 +1,191 @@
+//! Concurrent-serving integration tests on the simulator backend — these
+//! run everywhere (no artifacts needed) and pin down the multi-worker
+//! engine's contract (DESIGN.md §2):
+//!
+//!   * a burst of requests against `workers >= 2` all get answered;
+//!   * each reply is byte-identical to the single-worker engine's reply
+//!     and to the target-only greedy oracle (greedy speculative decoding
+//!     is lossless, so worker count must never change output);
+//!   * one shared bandit accumulates updates from all workers — its play
+//!     counts sum to the number of drafting sessions across the burst;
+//!   * workers may outnumber KV slots (checkout blocks instead of
+//!     panicking);
+//!   * decode failures produce explicit error responses, not hangs.
+
+use std::time::Duration;
+
+use tapout::engine::{BackendKind, Engine, EngineConfig, Policy, Request, Response};
+use tapout::models::{sim_encode, Scenario, SimModel};
+use tapout::spec::{greedy, GenConfig, BOS};
+
+const MAX_NEW: usize = 48;
+const TIMEOUT: Duration = Duration::from_secs(120);
+
+fn sim_config(workers: usize, slots: usize) -> EngineConfig {
+    EngineConfig {
+        method: "seq-ucb1".into(),
+        gamma_max: 64,
+        sched: Policy::Fcfs,
+        slots,
+        workers,
+        backend: BackendKind::sim_default(),
+        ..EngineConfig::default()
+    }
+}
+
+fn burst_prompts(n: usize) -> Vec<String> {
+    (0..n)
+        .map(|i| format!("concurrent serving request number {i}: summarize the findings"))
+        .collect()
+}
+
+/// What the engine computes internally for a text submission: the
+/// scenario seed is a pure function of the prompt.
+fn oracle_tokens(text: &str) -> Vec<u32> {
+    let mut prompt = vec![BOS];
+    prompt.extend(sim_encode(text));
+    let mut req = Request::new(0, text, MAX_NEW);
+    req.prompt = prompt.clone();
+    let mut target = SimModel::target(Scenario::new(req.scenario_seed(), &req.category));
+    let cfg = GenConfig { max_new: MAX_NEW, stop_at_eos: true, ..GenConfig::default() };
+    let r = greedy(&mut target, &prompt, &cfg).unwrap();
+    r.new_tokens().to_vec()
+}
+
+fn collect(rxs: Vec<std::sync::mpsc::Receiver<Response>>) -> Vec<Response> {
+    rxs.into_iter()
+        .map(|rx| rx.recv_timeout(TIMEOUT).expect("response must arrive"))
+        .collect()
+}
+
+#[test]
+fn multi_worker_burst_matches_sequential_engine_and_greedy_oracle() {
+    let prompts = burst_prompts(16);
+
+    // single-worker reference replies
+    let seq = Engine::start(sim_config(1, 1)).unwrap();
+    let seq_out: Vec<Vec<u32>> = prompts
+        .iter()
+        .map(|p| {
+            let r = seq.submit(p, MAX_NEW).recv_timeout(TIMEOUT).unwrap();
+            assert!(r.is_ok(), "{:?}", r.error);
+            r.result.new_tokens().to_vec()
+        })
+        .collect();
+    seq.shutdown();
+
+    // concurrent burst
+    let eng = Engine::start(sim_config(4, 4)).unwrap();
+    let rxs: Vec<_> = prompts.iter().map(|p| eng.submit(p, MAX_NEW)).collect();
+    let responses = collect(rxs);
+
+    let mut total_sessions = 0u64;
+    for (i, r) in responses.iter().enumerate() {
+        assert!(r.is_ok(), "request {i} failed: {:?}", r.error);
+        assert!(!r.result.new_tokens().is_empty());
+        assert_eq!(
+            r.result.new_tokens(),
+            &seq_out[i][..],
+            "request {i}: multi-worker output diverged from sequential engine"
+        );
+        assert_eq!(
+            r.result.new_tokens(),
+            &oracle_tokens(&prompts[i])[..],
+            "request {i}: output diverged from the greedy oracle"
+        );
+        total_sessions += r.result.rounds.len() as u64;
+    }
+
+    {
+        let m = eng.metrics.lock().unwrap();
+        assert_eq!(m.completed, 16);
+        assert_eq!(m.failed, 0);
+        assert!(m.drafted > 0);
+    }
+    assert_eq!(eng.stats.total_requests(), 16);
+
+    // one shared bandit absorbed every session from every worker
+    assert_eq!(eng.bandit_sessions(), total_sessions);
+    assert_eq!(eng.bandit_updates(), total_sessions);
+    let counts = eng.bandit_counts().expect("seq-ucb1 has a shared bandit");
+    assert_eq!(
+        counts.iter().sum::<u64>(),
+        total_sessions,
+        "shared bandit counts must sum to the sessions across all workers: {counts:?}"
+    );
+    eng.shutdown();
+}
+
+#[test]
+fn workers_may_exceed_slots_without_panicking() {
+    // 4 workers contend for 2 KV slots: checkout blocks, everything
+    // completes, and slot reuse shows up in the pool accounting
+    let eng = Engine::start(sim_config(4, 2)).unwrap();
+    let prompts = burst_prompts(16);
+    let rxs: Vec<_> = prompts.iter().map(|p| eng.submit(p, MAX_NEW)).collect();
+    for (i, r) in collect(rxs).iter().enumerate() {
+        assert!(r.is_ok(), "request {i} failed: {:?}", r.error);
+        assert_eq!(r.result.new_tokens(), &oracle_tokens(&prompts[i])[..]);
+    }
+    assert_eq!(eng.metrics.lock().unwrap().completed, 16);
+    eng.shutdown();
+}
+
+#[test]
+fn bandit_state_carries_over_between_bursts() {
+    let eng = Engine::start(sim_config(2, 2)).unwrap();
+    let first = burst_prompts(4);
+    collect(first.iter().map(|p| eng.submit(p, MAX_NEW)).collect());
+    let after_first = eng.bandit_sessions();
+    assert!(after_first > 0);
+
+    let second: Vec<String> = (0..4).map(|i| format!("second wave item {i}")).collect();
+    collect(second.iter().map(|p| eng.submit(p, MAX_NEW)).collect());
+    assert!(
+        eng.bandit_sessions() > after_first,
+        "the shared bandit must keep learning across bursts (online setting)"
+    );
+    eng.shutdown();
+}
+
+#[test]
+fn decode_failure_yields_error_response_not_a_hang() {
+    let eng = Engine::start(sim_config(2, 2)).unwrap();
+    // the sim KV cache holds 4096 positions; this prompt cannot fit
+    let oversized = "x".repeat(5000);
+    let r = eng
+        .submit(&oversized, 8)
+        .recv_timeout(TIMEOUT)
+        .expect("failed request must still be answered");
+    assert!(!r.is_ok());
+    assert!(
+        r.error.as_deref().unwrap_or("").contains("prompt too long"),
+        "error should explain the failure: {:?}",
+        r.error
+    );
+
+    // the engine keeps serving afterwards
+    let ok = eng.submit("small follow-up request", MAX_NEW).recv_timeout(TIMEOUT).unwrap();
+    assert!(ok.is_ok());
+    let m = eng.metrics.lock().unwrap();
+    assert_eq!(m.failed, 1);
+    assert_eq!(m.completed, 1);
+    drop(m);
+    eng.shutdown();
+}
+
+#[test]
+fn sjf_scheduling_serves_all_requests() {
+    let mut cfg = sim_config(2, 2);
+    cfg.sched = Policy::Sjf;
+    let eng = Engine::start(cfg).unwrap();
+    // mixed sizes so SJF actually reorders
+    let rx_big = eng.submit(&"long prompt ".repeat(40), 96);
+    let rxs: Vec<_> = (0..8).map(|i| eng.submit(&format!("tiny {i}"), 16)).collect();
+    assert!(rx_big.recv_timeout(TIMEOUT).unwrap().is_ok());
+    for r in collect(rxs) {
+        assert!(r.is_ok());
+    }
+    assert_eq!(eng.metrics.lock().unwrap().completed, 9);
+    eng.shutdown();
+}

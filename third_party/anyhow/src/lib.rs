@@ -1,0 +1,218 @@
+//! Offline stand-in for the `anyhow` crate — the API subset this repo uses
+//! (`Error`, `Result`, `Context`, `anyhow!`, `bail!`, `ensure!`), written
+//! against std only so the sealed build image needs no registry access.
+//! Replace the path dependency in the root Cargo.toml with the crates.io
+//! `anyhow` to switch back; no call site changes are required.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A chain of error messages, innermost cause first.
+pub struct Error {
+    /// `chain[0]` is the root cause; the last entry is the outermost
+    /// context (what `Display` without `#` prints).
+    chain: Vec<String>,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message (used by the `Context` trait).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.push(context.to_string());
+        self
+    }
+
+    /// The innermost message in the chain.
+    pub fn root_cause_msg(&self) -> &str {
+        &self.chain[0]
+    }
+
+    fn fmt_chain(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, msg) in self.chain.iter().rev().enumerate() {
+            if i > 0 {
+                write!(f, ": ")?;
+            }
+            write!(f, "{msg}")?;
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the full context chain, outermost first
+            self.fmt_chain(f)
+        } else {
+            write!(f, "{}", self.chain.last().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.last().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for msg in self.chain.iter().rev().skip(1) {
+                write!(f, "\n    {msg}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like the real anyhow: `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket conversion legal.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.insert(0, s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to a `Result` or `Option` (mirrors `anyhow::Context`).
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn context_chain_formats_outermost_first() {
+        let e: Error = std::result::Result::<(), _>::Err(io_err())
+            .context("loading weights")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "loading weights");
+        assert_eq!(format!("{e:#}"), "loading weights: missing file");
+        assert!(format!("{e:?}").contains("Caused by:"));
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let x = 3;
+        let e = anyhow!("bad value {x}");
+        assert_eq!(format!("{e}"), "bad value 3");
+        let e = anyhow!("bucket {} missing", 7);
+        assert_eq!(format!("{e}"), "bucket 7 missing");
+        let s = String::from("plain");
+        let e = anyhow!(s);
+        assert_eq!(format!("{e}"), "plain");
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        fn f(ok: bool) -> Result<u32> {
+            ensure!(ok, "wanted {} to hold", "ok");
+            Ok(1)
+        }
+        assert_eq!(f(true).unwrap(), 1);
+        assert_eq!(format!("{}", f(false).unwrap_err()), "wanted ok to hold");
+
+        fn g() -> Result<()> {
+            bail!("always fails");
+        }
+        assert!(g().is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("empty").unwrap_err();
+        assert_eq!(format!("{e}"), "empty");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = String::from_utf8(vec![0xff])?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+}
