@@ -8,7 +8,7 @@
 use std::path::Path;
 use std::time::Instant;
 
-use tapout::engine::{BackendKind, Engine, EngineConfig, Policy};
+use tapout::engine::{BackendKind, BatchConfig, Engine, EngineConfig, Policy};
 use tapout::harness::{run_method, run_probe, sim_suite, Backend};
 use tapout::models::{LanguageModel, Manifest, ModelAssets, PjrtModel};
 use tapout::runtime::Runtime;
@@ -21,11 +21,15 @@ fn main() {
     pjrt_ladder();
 }
 
-/// Multi-worker serving throughput vs the sequential baseline, on the sim
-/// backend (runs everywhere): the same request burst through 1, 2, and 4
-/// decode workers sharing one online bandit. Wall-clock speedup tracks
-/// available cores; the outputs are identical by construction (lossless
-/// greedy speculative decoding), so this isolates the engine overhead.
+/// Multi-worker serving throughput, sequential vs batched verification,
+/// on the sim backend (runs everywhere): the same request burst through
+/// 1, 2, and 4 decode workers sharing one online bandit, once with the
+/// batcher off (the PR 1 engine) and once with cross-session batched
+/// verification (docs/ARCHITECTURE.md §4). Outputs are asserted
+/// byte-identical across every mode and worker count (lossless greedy
+/// speculative decoding), so the comparison isolates engine overhead;
+/// the batched rows also report target-forward amortization (sessions
+/// per forward) — the quantity that buys real hardware batched matmuls.
 fn serving_scaling() {
     let fast = std::env::var("TAPOUT_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
     let (n_req, max_new) = if fast { (16, 48) } else { (64, 160) };
@@ -38,41 +42,88 @@ fn serving_scaling() {
         "engine serving: {n_req}-request burst, max_new {max_new} (sim backend)"
     ));
     let mut baseline_ns = 0.0;
-    for workers in [1usize, 2, 4] {
-        let eng = Engine::start(EngineConfig {
-            method: "seq-ucb1".into(),
-            gamma_max: 128,
-            sched: Policy::Fcfs,
-            slots: workers,
-            workers,
-            backend: BackendKind::sim_default(),
-            ..EngineConfig::default()
-        })
-        .unwrap();
-        let t0 = Instant::now();
-        let rxs: Vec<_> = prompts.iter().map(|p| eng.submit(p, max_new)).collect();
-        for rx in rxs {
-            let r = rx.recv().unwrap();
-            assert!(r.is_ok(), "{:?}", r.error);
+    let mut reference: Vec<Vec<u32>> = Vec::new();
+    let mut batched_4w_tok_s = 0.0;
+    let mut sequential_4w_tok_s = 0.0;
+    for (label, batch) in [("sequential", BatchConfig::off()), ("batched", BatchConfig::default())]
+    {
+        for workers in [1usize, 2, 4] {
+            let eng = Engine::start(EngineConfig {
+                method: "seq-ucb1".into(),
+                gamma_max: 128,
+                sched: Policy::Fcfs,
+                slots: workers,
+                workers,
+                backend: BackendKind::sim_default(),
+                verify_batch: batch,
+                ..EngineConfig::default()
+            })
+            .unwrap();
+            let t0 = Instant::now();
+            let rxs: Vec<_> = prompts.iter().map(|p| eng.submit(p, max_new)).collect();
+            let outputs: Vec<Vec<u32>> = rxs
+                .into_iter()
+                .map(|rx| {
+                    let r = rx.recv().unwrap();
+                    assert!(r.is_ok(), "{:?}", r.error);
+                    r.result.new_tokens().to_vec()
+                })
+                .collect();
+            let elapsed_ns = t0.elapsed().as_nanos() as f64;
+            if reference.is_empty() {
+                reference = outputs;
+            } else {
+                assert_eq!(
+                    outputs, reference,
+                    "{label} workers={workers}: output diverged from sequential 1-worker"
+                );
+            }
+            let (new_tokens, sessions) = {
+                let m = eng.metrics.lock().unwrap();
+                (m.new_tokens, eng.bandit_sessions())
+            };
+            if workers == 1 && batch.max_batch == 0 {
+                baseline_ns = elapsed_ns;
+            }
+            let tok_s = new_tokens as f64 / (elapsed_ns / 1e9);
+            if workers == 4 {
+                if batch.max_batch == 0 {
+                    sequential_4w_tok_s = tok_s;
+                } else {
+                    batched_4w_tok_s = tok_s;
+                }
+            }
+            let occupancy = {
+                use std::sync::atomic::Ordering;
+                let b = eng.stats.batch.batches.load(Ordering::Relaxed);
+                if b == 0 {
+                    String::new()
+                } else {
+                    format!(
+                        "  [occupancy {:.2}, {} forwards for {} sessions, pad waste {:.0}%]",
+                        eng.stats.batch.mean_occupancy(),
+                        b,
+                        eng.stats.batch.coalesced.load(Ordering::Relaxed),
+                        eng.stats.batch.pad_waste_frac() * 100.0
+                    )
+                }
+            };
+            println!(
+                "  {label:<10} workers={workers}: {} in wall {}  -> {:>9.0} tok/s  ({:.2}x vs sequential, {} bandit sessions){occupancy}",
+                new_tokens,
+                fmt_ns(elapsed_ns),
+                tok_s,
+                baseline_ns / elapsed_ns,
+                sessions,
+            );
+            eng.shutdown();
         }
-        let elapsed_ns = t0.elapsed().as_nanos() as f64;
-        let (new_tokens, sessions) = {
-            let m = eng.metrics.lock().unwrap();
-            (m.new_tokens, eng.bandit_sessions())
-        };
-        if workers == 1 {
-            baseline_ns = elapsed_ns;
-        }
-        println!(
-            "  workers={workers}: {} in wall {}  -> {:>9.0} tok/s  ({:.2}x vs sequential, {} bandit sessions)",
-            new_tokens,
-            fmt_ns(elapsed_ns),
-            new_tokens as f64 / (elapsed_ns / 1e9),
-            baseline_ns / elapsed_ns,
-            sessions,
-        );
-        eng.shutdown();
     }
+    println!(
+        "  batched/sequential @ 4 workers: {:.2}x  (>= 1.0 expected: coalesced forwards \
+         amortize per-call dispatch)",
+        batched_4w_tok_s / sequential_4w_tok_s.max(1e-9)
+    );
 }
 
 /// One bench per paper artifact, on the simulator backend (the controller

@@ -21,6 +21,8 @@ pub enum Reward {
 }
 
 impl Reward {
+    /// Reward for a session that had `accepted` of `drafted` proposals
+    /// survive, under draft-length cap `gamma_max`.
     pub fn compute(&self, accepted: usize, drafted: usize, gamma_max: usize) -> f64 {
         let y = accepted as f64;
         let x = drafted.max(1) as f64;
@@ -31,6 +33,7 @@ impl Reward {
         }
     }
 
+    /// Paper-style label ("r_simple" / "r_blend").
     pub fn label(&self) -> &'static str {
         match self {
             Reward::Simple => "r_simple",
@@ -41,17 +44,24 @@ impl Reward {
 
 /// Sequence-level TapOut controller.
 pub struct SeqBandit {
+    /// the learner over the arm pool
     pub bandit: BoxedBandit,
+    /// stop-policy arm pool (paper Table 1 / App. A.2)
     pub arms: Vec<BoxedPolicy>,
+    /// reward formulation fed to the learner
     pub reward: Reward,
+    /// draft-length cap used to normalize rewards
     pub gamma_max: usize,
     current: usize,
     /// per-session snapshots of arm values (the Figs. 5-6 readout)
     pub value_history: Vec<Vec<f64>>,
+    /// record `value_history` on every verify (off by default)
     pub track_history: bool,
 }
 
 impl SeqBandit {
+    /// A sequence-level controller over `arms` driven by a fresh
+    /// `bandit_kind` learner.
     pub fn new(
         bandit_kind: &str,
         arms: Vec<BoxedPolicy>,
@@ -70,19 +80,23 @@ impl SeqBandit {
         }
     }
 
+    /// Select the arm that will drive the coming drafting session.
     pub fn session_start(&mut self, rng: &mut Rng) {
         self.current = self.bandit.select(rng);
         self.arms[self.current].on_session_start();
     }
 
+    /// Arm selected for the current session.
     pub fn current_arm(&self) -> usize {
         self.current
     }
 
+    /// Delegate the stop decision to the session's arm.
     pub fn should_stop(&mut self, sig: &TokenSignals, idx: usize) -> bool {
         self.arms[self.current].should_stop(sig, idx)
     }
 
+    /// Reward the session's arm with the verification outcome.
     pub fn on_verify(&mut self, accepted: usize, drafted: usize) {
         let r = self.reward.compute(accepted, drafted, self.gamma_max);
         self.bandit.update(self.current, r);
@@ -94,10 +108,12 @@ impl SeqBandit {
         }
     }
 
+    /// Names of the arms in play.
     pub fn arm_names(&self) -> Vec<String> {
         self.arms.iter().map(|a| a.name()).collect()
     }
 
+    /// Start a new request stream.
     pub fn reset(&mut self) {
         // per-request policy state resets; bandit memory persists across
         // requests (the whole point of an *online* method)
@@ -111,13 +127,17 @@ impl SeqBandit {
 pub struct TokenBandit {
     kind: String,
     n_arms: usize,
+    /// one lazily grown learner per draft position
     pub bandits: Vec<BoxedBandit>,
+    /// stop-policy arm pool shared by every position
     pub arms: Vec<BoxedPolicy>,
+    /// draft-length cap (ladder never grows past it)
     pub gamma_max: usize,
     chosen: Vec<usize>,
 }
 
 impl TokenBandit {
+    /// A token-level controller over `arms` with an empty position ladder.
     pub fn new(bandit_kind: &str, arms: Vec<BoxedPolicy>, gamma_max: usize) -> Self {
         TokenBandit {
             kind: bandit_kind.to_string(),
@@ -129,6 +149,7 @@ impl TokenBandit {
         }
     }
 
+    /// Begin a drafting session (clears the per-session arm choices).
     pub fn session_start(&mut self, _rng: &mut Rng) {
         self.chosen.clear();
         for a in &mut self.arms {
@@ -143,6 +164,7 @@ impl TokenBandit {
         &mut self.bandits[idx]
     }
 
+    /// Select position `idx`'s arm and delegate the stop decision to it.
     pub fn should_stop(&mut self, sig: &TokenSignals, idx: usize, rng: &mut Rng) -> bool {
         let arm = self.bandit_at(idx).select(rng);
         debug_assert_eq!(self.chosen.len(), idx);
@@ -150,6 +172,7 @@ impl TokenBandit {
         self.arms[arm].should_stop(sig, idx)
     }
 
+    /// Reward each played position: 1 iff its token was accepted.
     pub fn on_verify(&mut self, accepted: usize, drafted: usize) {
         for i in 0..drafted.min(self.chosen.len()) {
             let r = if i < accepted { 1.0 } else { 0.0 };
@@ -162,6 +185,7 @@ impl TokenBandit {
         }
     }
 
+    /// Start a new request stream (ladder memory persists).
     pub fn reset(&mut self) {
         for a in &mut self.arms {
             a.reset();

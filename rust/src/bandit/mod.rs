@@ -18,6 +18,7 @@ use crate::util::Rng;
 
 /// A stochastic multi-armed bandit over a fixed arm set.
 pub trait Bandit: Send {
+    /// Number of arms this learner plays over.
     fn n_arms(&self) -> usize;
 
     /// Choose an arm to play.
@@ -30,14 +31,17 @@ pub trait Bandit: Send {
     /// Figs. 5-6). For TS this is the posterior mean.
     fn values(&self) -> Vec<f64>;
 
+    /// Per-arm play counts.
     fn counts(&self) -> Vec<u64>;
 
+    /// Short stable identifier (report labels).
     fn name(&self) -> String;
 
     /// Forget everything (fresh request stream).
     fn reset(&mut self);
 }
 
+/// Boxed-bandit convenience used by the controllers.
 pub type BoxedBandit = Box<dyn Bandit>;
 
 /// Factory used by the experiment harness ("ucb1" | "ucb-tuned" |

@@ -29,6 +29,14 @@
 //! streams, so interleaving different sessions' select/update pairs
 //! preserves convergence — both regret analyses only need each arm's
 //! reward tally to be exact, which the per-update lock guarantees.
+//!
+//! Batched verification (docs/ARCHITECTURE.md §4) changes *when* rewards
+//! land, not *how*: a worker's `on_verify` fires once its session's rows
+//! scatter back from the batcher, so the shared bandit absorbs a burst of
+//! updates per batched forward — one per coalesced session — instead of
+//! one per private forward. By the same order-agnosticism, that timing
+//! shift is invisible to the learner; play-count conservation across
+//! batch windows is pinned by `rust/tests/engine_batched.rs`.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -93,6 +101,8 @@ fn arm_pool(multi: bool) -> Vec<BoxedPolicy> {
 }
 
 impl SharedController {
+    /// Build the process-wide shared state for `method` (no state for
+    /// stateless methods — their sessions get private controllers).
     pub fn new(method: &MethodSpec, gamma_max: usize) -> SharedController {
         let (seq, token) = match method {
             MethodSpec::SeqBandit { kind, reward, multi_arms } => {
@@ -154,6 +164,7 @@ impl SharedController {
         self.seq.is_some() || self.token.is_some()
     }
 
+    /// Paper-style label of the configured method.
     pub fn method_label(&self) -> String {
         self.method.label()
     }

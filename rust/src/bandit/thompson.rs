@@ -7,6 +7,7 @@
 use super::Bandit;
 use crate::util::Rng;
 
+/// Beta-Bernoulli Thompson sampling state.
 #[derive(Clone, Debug)]
 pub struct BetaTs {
     alpha: Vec<f64>,
@@ -15,6 +16,7 @@ pub struct BetaTs {
 }
 
 impl BetaTs {
+    /// A fresh Beta(1,1) posterior per arm.
     pub fn new(n_arms: usize) -> Self {
         BetaTs { alpha: vec![1.0; n_arms], beta: vec![1.0; n_arms], counts: vec![0; n_arms] }
     }
@@ -83,6 +85,7 @@ pub struct GaussianTs {
 }
 
 impl GaussianTs {
+    /// A fresh N(0.5, 0.25) prior per arm.
     pub fn new(n_arms: usize) -> Self {
         // prior centred mid-range over the [0,1] reward; noise matched to
         // the empirical spread of r_blend

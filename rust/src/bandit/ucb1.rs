@@ -4,6 +4,7 @@
 use super::Bandit;
 use crate::util::Rng;
 
+/// UCB1 state: per-arm reward sums and play counts.
 #[derive(Clone, Debug)]
 pub struct Ucb1 {
     sums: Vec<f64>,
@@ -12,11 +13,13 @@ pub struct Ucb1 {
 }
 
 impl Ucb1 {
+    /// A fresh learner over `n_arms` arms.
     pub fn new(n_arms: usize) -> Self {
         assert!(n_arms >= 1);
         Ucb1 { sums: vec![0.0; n_arms], counts: vec![0; n_arms], t: 0 }
     }
 
+    /// The UCB index of `arm` (infinite while unplayed).
     pub fn ucb(&self, arm: usize) -> f64 {
         if self.counts[arm] == 0 {
             return f64::INFINITY;

@@ -6,6 +6,7 @@
 use super::Bandit;
 use crate::util::Rng;
 
+/// UCB-Tuned state: per-arm sums, squared sums, and play counts.
 #[derive(Clone, Debug)]
 pub struct UcbTuned {
     sums: Vec<f64>,
@@ -15,6 +16,7 @@ pub struct UcbTuned {
 }
 
 impl UcbTuned {
+    /// A fresh learner over `n_arms` arms.
     pub fn new(n_arms: usize) -> Self {
         assert!(n_arms >= 1);
         UcbTuned {
@@ -29,6 +31,7 @@ impl UcbTuned {
         self.sums[a] / self.counts[a] as f64
     }
 
+    /// V_a(t): the empirical variance plus its exploration bonus.
     pub fn variance_bound(&self, a: usize) -> f64 {
         let n = self.counts[a] as f64;
         let mean = self.mean(a);
@@ -36,6 +39,7 @@ impl UcbTuned {
         var + (2.0 * (self.t.max(1) as f64).ln() / n).sqrt()
     }
 
+    /// The UCB-Tuned index of `a` (infinite while unplayed).
     pub fn index(&self, a: usize) -> f64 {
         if self.counts[a] == 0 {
             return f64::INFINITY;

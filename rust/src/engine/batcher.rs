@@ -1,0 +1,431 @@
+//! Cross-session verification batcher (docs/ARCHITECTURE.md §4).
+//!
+//! PR 1's engine gave every worker a private `block()` call, so at N
+//! workers the backend saw N sequential single-sequence forwards. The
+//! batcher closes that gap: decode workers *submit* their target steps
+//! (catch-up + proposals, one job per verification round) and *await* the
+//! scattered signal rows, while one batcher thread coalesces whatever
+//! sessions are in flight within a small wait window into a single
+//! [`LanguageModel::block_batch`] forward:
+//!
+//! ```text
+//!   worker 0 ── submit ──▶ ┌──────────┐      block_batch(&[item; B])
+//!   worker 1 ── submit ──▶ │ batcher  │ ──▶  one target forward
+//!   worker N ── submit ──▶ │ (window) │ ◀──  B × signal rows
+//!              ◀─ await ── └──────────┘      scatter to each session
+//! ```
+//!
+//! Correctness: each job carries a self-describing [`BatchItem`]
+//! (sequence key, scenario seed, contiguous token block), the backend's
+//! batched rows are byte-identical to its sequential rows, and each
+//! session blocks until its own rows return — so per-request output stays
+//! a pure function of the prompt at every worker count and batch window
+//! (pinned by `rust/tests/engine_batched.rs`).
+//!
+//! Latency: the window only applies while *more* sessions could join —
+//! the batcher stops waiting as soon as it holds one job per in-flight
+//! decode, so a single-worker engine never pays the window at all.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::models::{BatchItem, LanguageModel, ModelCost};
+use crate::signals::TokenSignals;
+
+use super::metrics::EngineStats;
+
+/// Verification-batching knobs (`EngineConfig::verify_batch`).
+#[derive(Clone, Copy, Debug)]
+pub struct BatchConfig {
+    /// maximum sessions coalesced into one target forward; 0 disables
+    /// the batcher entirely (per-slot direct verification, the PR 1
+    /// engine)
+    pub max_batch: usize,
+    /// how long one batch waits for more in-flight sessions, in
+    /// microseconds. Only paid while fewer jobs than in-flight decodes
+    /// are held; size it to the backend's per-block latency (sub-ms for
+    /// the simulator, ~ms for PJRT).
+    pub window_us: u64,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig { max_batch: 8, window_us: 100 }
+    }
+}
+
+impl BatchConfig {
+    /// Is the batcher active at all?
+    pub fn enabled(&self) -> bool {
+        self.max_batch >= 1
+    }
+
+    /// Direct per-slot verification (no batcher thread).
+    pub fn off() -> BatchConfig {
+        BatchConfig { max_batch: 0, window_us: 0 }
+    }
+}
+
+/// One submitted verification step: the item plus its reply channel.
+/// Errors cross the channel as strings because one backend error answers
+/// every job of the batch.
+struct BatchJob {
+    item: BatchItem,
+    reply: Sender<Result<Vec<TokenSignals>, String>>,
+}
+
+enum BatchMsg {
+    Run(BatchJob),
+    Shutdown,
+}
+
+/// Cloneable submit-side handle held by every decode worker.
+#[derive(Clone)]
+pub struct BatcherHandle {
+    tx: Sender<BatchMsg>,
+    in_flight: Arc<AtomicUsize>,
+}
+
+impl BatcherHandle {
+    /// A request decode is starting: one more session may submit jobs.
+    /// The batcher uses the in-flight count to stop waiting early (a lone
+    /// session never pays the window).
+    pub fn note_decode_start(&self) {
+        self.in_flight.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// The matching end of [`BatcherHandle::note_decode_start`].
+    pub fn note_decode_end(&self) {
+        self.in_flight.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Submit one verification step and block until its rows scatter
+    /// back (the session-side await).
+    fn submit(&self, item: BatchItem) -> Result<Vec<TokenSignals>> {
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(BatchMsg::Run(BatchJob { item, reply: rtx }))
+            .map_err(|_| anyhow::anyhow!("verification batcher is gone"))?;
+        match rrx.recv() {
+            Ok(Ok(rows)) => Ok(rows),
+            Ok(Err(msg)) => Err(anyhow::anyhow!(msg)),
+            Err(_) => Err(anyhow::anyhow!("verification batcher dropped the reply")),
+        }
+    }
+
+    /// Ask the batcher thread to exit once current jobs are answered.
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(BatchMsg::Shutdown);
+    }
+}
+
+/// The batcher: one thread owning the batch-capable verifier model.
+pub struct Batcher {
+    handle: BatcherHandle,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Batcher {
+    /// Spawn the batcher thread over a batch-capable target model (the
+    /// sim target or a `PjrtBatchVerifier`).
+    pub fn spawn(
+        verifier: Box<dyn LanguageModel>,
+        cfg: BatchConfig,
+        stats: Arc<EngineStats>,
+    ) -> Result<Batcher> {
+        anyhow::ensure!(cfg.enabled(), "Batcher::spawn with max_batch 0");
+        let (tx, rx) = channel();
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let handle = BatcherHandle { tx, in_flight: in_flight.clone() };
+        let thread = std::thread::Builder::new()
+            .name("tapout-batcher".into())
+            .spawn(move || batcher_loop(rx, verifier, cfg, in_flight, stats))?;
+        Ok(Batcher { handle, thread: Some(thread) })
+    }
+
+    /// The submit-side handle workers clone.
+    pub fn handle(&self) -> BatcherHandle {
+        self.handle.clone()
+    }
+
+    /// Stop the thread and wait for it (queued jobs are still answered).
+    pub fn shutdown(mut self) {
+        self.handle.shutdown();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn batcher_loop(
+    rx: Receiver<BatchMsg>,
+    mut verifier: Box<dyn LanguageModel>,
+    cfg: BatchConfig,
+    in_flight: Arc<AtomicUsize>,
+    stats: Arc<EngineStats>,
+) {
+    let window = Duration::from_micros(cfg.window_us);
+    loop {
+        let first = match rx.recv() {
+            Ok(BatchMsg::Run(job)) => job,
+            Ok(BatchMsg::Shutdown) | Err(_) => return,
+        };
+        let mut jobs = vec![first];
+        let mut stop_after = false;
+        let t_fill = Instant::now();
+        let deadline = t_fill + window;
+        while jobs.len() < cfg.max_batch {
+            // every in-flight decode already has a job here: executing
+            // now beats waiting for sessions that are still drafting
+            if jobs.len() >= in_flight.load(Ordering::Relaxed) {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(BatchMsg::Run(job)) => jobs.push(job),
+                Ok(BatchMsg::Shutdown) => {
+                    stop_after = true;
+                    break;
+                }
+                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        let fill_ns = t_fill.elapsed().as_nanos() as u64;
+
+        let items: Vec<BatchItem> = jobs.iter().map(|j| j.item.clone()).collect();
+        let before = verifier.cost();
+        let out = verifier.block_batch(&items);
+        let after = verifier.cost();
+
+        match out {
+            Ok(rows) => {
+                // gauges count *successful* forwards only, so occupancy /
+                // pad-waste stay meaningful under backend errors
+                stats.batch.note(
+                    jobs.len(),
+                    delta(after, before, |c| c.rows),
+                    delta(after, before, |c| c.padded_rows),
+                    fill_ns,
+                );
+                debug_assert_eq!(rows.len(), jobs.len(), "backend scattered a wrong-size batch");
+                for (job, r) in jobs.into_iter().zip(rows) {
+                    let _ = job.reply.send(Ok(r));
+                }
+            }
+            Err(e) => {
+                let msg = format!("batched verification failed: {e:#}");
+                for job in jobs {
+                    let _ = job.reply.send(Err(msg.clone()));
+                }
+            }
+        }
+        if stop_after {
+            return;
+        }
+    }
+}
+
+fn delta(after: ModelCost, before: ModelCost, f: impl Fn(&ModelCost) -> u64) -> u64 {
+    f(&after).saturating_sub(f(&before))
+}
+
+/// Per-slot target-model stand-in that routes every `block` through the
+/// batcher — the submit/await side of docs/ARCHITECTURE.md §4.
+///
+/// Implements [`LanguageModel`], so `spec::generate` drives it exactly
+/// like a resident target: the handle keeps the sequence cursor and
+/// enforces the contiguity invariant locally, while the resident KV (if
+/// the backend has any) lives with the batcher's verifier, keyed by this
+/// handle's slot id.
+pub struct BatchedTarget {
+    handle: BatcherHandle,
+    seq: usize,
+    seed: u64,
+    category: String,
+    cur: usize,
+    max_seq: usize,
+    rel_cost: f64,
+    cost: ModelCost,
+}
+
+impl BatchedTarget {
+    /// A handle for the sequence resident in slot `seq`. `max_seq` and
+    /// `rel_cost` mirror the backing target model's geometry so session
+    /// headroom checks behave identically to the direct path.
+    pub fn new(seq: usize, handle: BatcherHandle, max_seq: usize, rel_cost: f64) -> BatchedTarget {
+        BatchedTarget {
+            handle,
+            seq,
+            seed: 0,
+            category: String::new(),
+            cur: 0,
+            max_seq,
+            rel_cost,
+            cost: ModelCost::default(),
+        }
+    }
+}
+
+impl LanguageModel for BatchedTarget {
+    fn name(&self) -> String {
+        format!("batched-target(slot {})", self.seq)
+    }
+
+    fn reset(&mut self) {
+        self.cur = 0;
+    }
+
+    fn begin_request(&mut self, seed: u64, category: &str) {
+        self.seed = seed;
+        self.category = category.to_string();
+        self.cur = 0;
+    }
+
+    fn block(&mut self, tokens: &[u32], start: usize) -> Result<Vec<TokenSignals>> {
+        anyhow::ensure!(start == self.cur, "non-contiguous block: start {start} cur {}", self.cur);
+        anyhow::ensure!(!tokens.is_empty(), "empty block");
+        anyhow::ensure!(
+            start + tokens.len() <= self.max_seq,
+            "KV overflow: {start}+{} > {}",
+            tokens.len(),
+            self.max_seq
+        );
+        let rows = self.handle.submit(BatchItem {
+            seq: self.seq,
+            seed: self.seed,
+            category: self.category.clone(),
+            tokens: tokens.to_vec(),
+            start,
+        })?;
+        anyhow::ensure!(
+            rows.len() == tokens.len(),
+            "batcher returned {} rows for {} tokens",
+            rows.len(),
+            tokens.len()
+        );
+        self.cur = start + tokens.len();
+        self.cost.calls += 1;
+        self.cost.rows += tokens.len() as u64;
+        self.cost.padded_rows += tokens.len() as u64;
+        Ok(rows)
+    }
+
+    fn cur(&self) -> usize {
+        self.cur
+    }
+
+    fn rollback(&mut self, to: usize) {
+        self.cur = self.cur.min(to);
+    }
+
+    fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    fn cost(&self) -> ModelCost {
+        self.cost
+    }
+
+    fn rel_cost(&self) -> f64 {
+        self.rel_cost
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{Scenario, SimModel};
+    use std::sync::Barrier;
+
+    fn spawn_sim_batcher(cfg: BatchConfig) -> (Batcher, Arc<EngineStats>) {
+        let stats = Arc::new(EngineStats::new(1));
+        let verifier = Box::new(SimModel::target(Scenario::new(0, "qa")));
+        (Batcher::spawn(verifier, cfg, stats.clone()).unwrap(), stats)
+    }
+
+    #[test]
+    fn scattered_rows_match_direct_slot_model() {
+        let (batcher, stats) = spawn_sim_batcher(BatchConfig { max_batch: 4, window_us: 200_000 });
+        let barrier = Arc::new(Barrier::new(4));
+        let mut threads = Vec::new();
+        for t in 0..4usize {
+            let handle = batcher.handle();
+            let barrier = barrier.clone();
+            threads.push(std::thread::spawn(move || {
+                let mut target = BatchedTarget::new(t, handle.clone(), 4096, 1.0);
+                target.begin_request(42 + t as u64, "coding");
+                target.reset();
+                handle.note_decode_start();
+                barrier.wait();
+                let rows = target.block(&[3, 4, 5], 0).unwrap();
+                handle.note_decode_end();
+                (t, rows)
+            }));
+        }
+        for th in threads {
+            let (t, rows) = th.join().unwrap();
+            let mut solo = SimModel::target(Scenario::new(42 + t as u64, "coding"));
+            let want = solo.block(&[3, 4, 5], 0).unwrap();
+            assert_eq!(rows, want, "thread {t} got wrong rows");
+        }
+        // all four synchronized submissions coalesced into one forward
+        let batches = stats.batch.batches.load(Ordering::Relaxed);
+        let coalesced = stats.batch.coalesced.load(Ordering::Relaxed);
+        assert_eq!(coalesced, 4);
+        assert_eq!(batches, 1, "4 synchronized sessions should form one batch");
+        assert_eq!(stats.batch.peak.load(Ordering::Relaxed), 4);
+        assert!(stats.batch.padded_rows.load(Ordering::Relaxed) >= coalesced);
+        batcher.shutdown();
+    }
+
+    #[test]
+    fn lone_session_skips_the_window() {
+        let (batcher, stats) =
+            spawn_sim_batcher(BatchConfig { max_batch: 8, window_us: 2_000_000 });
+        let handle = batcher.handle();
+        let mut target = BatchedTarget::new(0, handle.clone(), 4096, 1.0);
+        target.begin_request(7, "qa");
+        handle.note_decode_start();
+        let t0 = Instant::now();
+        target.block(&[3, 3], 0).unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_millis(500),
+            "a lone in-flight session must not wait out the 2s window"
+        );
+        handle.note_decode_end();
+        assert_eq!(stats.batch.batches.load(Ordering::Relaxed), 1);
+        batcher.shutdown();
+    }
+
+    #[test]
+    fn handle_enforces_contiguity_and_sizes() {
+        let (batcher, _stats) = spawn_sim_batcher(BatchConfig { max_batch: 1, window_us: 0 });
+        let mut target = BatchedTarget::new(0, batcher.handle(), 16, 1.0);
+        target.begin_request(1, "qa");
+        assert!(target.block(&[3], 5).is_err(), "non-contiguous start must fail");
+        assert!(target.block(&[3; 17], 0).is_err(), "KV overflow must fail");
+        let rows = target.block(&[3, 4], 0).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(target.cur(), 2);
+        target.rollback(1);
+        assert_eq!(target.cur(), 1);
+        batcher.shutdown();
+    }
+
+    #[test]
+    fn submit_after_shutdown_errors_instead_of_hanging() {
+        let (batcher, _stats) = spawn_sim_batcher(BatchConfig { max_batch: 2, window_us: 0 });
+        let handle = batcher.handle();
+        batcher.shutdown();
+        let mut target = BatchedTarget::new(0, handle, 4096, 1.0);
+        target.begin_request(1, "qa");
+        assert!(target.block(&[3], 0).is_err());
+    }
+}

@@ -20,7 +20,9 @@ use crate::util::Json;
 
 use super::server::Engine;
 
+/// The background HTTP listener (one thread per connection).
 pub struct HttpServer {
+    /// bound address, e.g. `127.0.0.1:8077`
     pub addr: String,
     handle: Option<std::thread::JoinHandle<()>>,
 }
@@ -94,7 +96,8 @@ fn route(engine: &Engine, method: &str, path: &str, body: &str) -> (u16, Json) {
                 .set("method", engine.config.method.as_str())
                 .set("backend", engine.config.backend.label())
                 .set("workers", engine.config.workers)
-                .set("slots", engine.config.slots);
+                .set("slots", engine.config.slots)
+                .set("max_batch", engine.config.verify_batch.max_batch);
             (200, o)
         }
         ("GET", "/metrics") => (200, engine.metrics_json()),

@@ -19,23 +19,36 @@ use crate::util::Json;
 
 use super::request::Response;
 
+/// Per-request latency/throughput samples (one mutex, taken once per
+/// completed request).
 #[derive(Debug, Default)]
 pub struct EngineMetrics {
+    /// requests answered successfully
     pub completed: u64,
+    /// requests answered with an error `Response`
     pub failed: u64,
+    /// generated tokens across completed requests
     pub new_tokens: u64,
+    /// tokens proposed by the draft model
     pub drafted: u64,
+    /// proposed tokens that survived verification
     pub accepted: u64,
+    /// queueing delay samples (arrival → decode start), ms
     pub queue_ms: Samples,
+    /// end-to-end latency samples (arrival → reply), ms
     pub total_ms: Samples,
+    /// decode wall-time samples, ms
     pub decode_ms: Samples,
+    /// time-per-output-token samples, ms
     pub tpot_ms: Samples,
+    /// time-to-first-token samples (queue + first round), ms
     pub ttft_ms: Samples,
     /// wall-clock span covered by the record stream (throughput basis)
     pub span_ns: u64,
 }
 
 impl EngineMetrics {
+    /// Fold one reply into the aggregates (failures only bump `failed`).
     pub fn record(&mut self, r: &Response) {
         if r.error.is_some() {
             self.failed += 1;
@@ -60,10 +73,12 @@ impl EngineMetrics {
         self.ttft_ms.push((r.queue_ns + first_round_ns) as f64 / 1e6);
     }
 
+    /// Fraction of drafted tokens that verification accepted.
     pub fn acceptance_rate(&self) -> f64 {
         if self.drafted == 0 { 0.0 } else { self.accepted as f64 / self.drafted as f64 }
     }
 
+    /// Generated tokens per second over the recorded span.
     pub fn throughput_tok_s(&self) -> f64 {
         if self.span_ns == 0 {
             return 0.0;
@@ -71,6 +86,7 @@ impl EngineMetrics {
         self.new_tokens as f64 / (self.span_ns as f64 / 1e9)
     }
 
+    /// Human-readable latency table (the CLI / bench footer).
     pub fn report(&mut self) -> String {
         let mut s = String::new();
         s.push_str(&format!(
@@ -105,6 +121,8 @@ impl EngineMetrics {
         s
     }
 
+    /// JSON object for the top-level `/metrics` fields (see
+    /// docs/OPERATIONS.md).
     pub fn to_json(&mut self) -> Json {
         let mut o = Json::obj();
         o.set("completed", self.completed as usize)
@@ -124,7 +142,9 @@ impl EngineMetrics {
 /// Lock-free counters for one decode worker.
 #[derive(Debug, Default)]
 pub struct WorkerStats {
+    /// requests this worker decoded (including failures)
     pub requests: AtomicU64,
+    /// requests that ended in an error reply
     pub errors: AtomicU64,
     /// wall time spent inside `generate` (decode busy time)
     pub busy_ns: AtomicU64,
@@ -133,6 +153,7 @@ pub struct WorkerStats {
 }
 
 impl WorkerStats {
+    /// JSON object for one `engine.per_worker` entry.
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
         o.set("requests", self.requests.load(Ordering::Relaxed) as usize)
@@ -143,23 +164,93 @@ impl WorkerStats {
     }
 }
 
+/// Lock-free gauges for the verification batcher (batch occupancy and
+/// pad waste — docs/ARCHITECTURE.md §4). Updated by the batcher thread
+/// once per executed batch; snapshot by `/metrics` readers any time.
+#[derive(Debug, Default)]
+pub struct BatchStats {
+    /// batched target forwards executed
+    pub batches: AtomicU64,
+    /// sessions coalesced across all batches (Σ occupancy)
+    pub coalesced: AtomicU64,
+    /// largest single-batch occupancy seen
+    pub peak: AtomicUsize,
+    /// real token rows verified through the batcher
+    pub rows: AtomicU64,
+    /// rows actually computed after shape-bucket padding
+    pub padded_rows: AtomicU64,
+    /// wall time spent waiting for sessions to coalesce
+    pub fill_wait_ns: AtomicU64,
+}
+
+impl BatchStats {
+    /// Record one executed batch of `n` coalesced sessions.
+    pub fn note(&self, n: usize, rows: u64, padded_rows: u64, fill_ns: u64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.coalesced.fetch_add(n as u64, Ordering::Relaxed);
+        self.peak.fetch_max(n, Ordering::Relaxed);
+        self.rows.fetch_add(rows, Ordering::Relaxed);
+        self.padded_rows.fetch_add(padded_rows, Ordering::Relaxed);
+        self.fill_wait_ns.fetch_add(fill_ns, Ordering::Relaxed);
+    }
+
+    /// Mean sessions per batched forward (1.0 = no cross-session
+    /// coalescing happened).
+    pub fn mean_occupancy(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.coalesced.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    /// Fraction of computed rows that were shape-bucket padding.
+    pub fn pad_waste_frac(&self) -> f64 {
+        let padded = self.padded_rows.load(Ordering::Relaxed);
+        if padded == 0 {
+            return 0.0;
+        }
+        1.0 - self.rows.load(Ordering::Relaxed) as f64 / padded as f64
+    }
+
+    /// JSON object for the `/metrics` `engine.batch` field.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("batches", self.batches.load(Ordering::Relaxed) as usize)
+            .set("coalesced_sessions", self.coalesced.load(Ordering::Relaxed) as usize)
+            .set("mean_occupancy", self.mean_occupancy())
+            .set("peak_occupancy", self.peak.load(Ordering::Relaxed))
+            .set("pad_waste_frac", self.pad_waste_frac())
+            .set("fill_wait_ms", self.fill_wait_ns.load(Ordering::Relaxed) as f64 / 1e6);
+        o
+    }
+}
+
 /// Engine-wide atomics: updated by the dispatcher and every worker with
 /// no shared lock; snapshot by readers at any time.
 #[derive(Debug)]
 pub struct EngineStats {
+    /// per-worker counters, indexed by worker id
     pub workers: Vec<WorkerStats>,
+    /// requests accepted by the dispatcher since boot
     pub submitted: AtomicU64,
+    /// instantaneous scheduler queue depth
     pub queue_depth: AtomicUsize,
+    /// high-water mark of the scheduler queue depth
     pub peak_queue_depth: AtomicUsize,
+    /// verification-batcher occupancy / pad-waste gauges
+    pub batch: BatchStats,
 }
 
 impl EngineStats {
+    /// Fresh counters for an engine with `n_workers` decode workers.
     pub fn new(n_workers: usize) -> EngineStats {
         EngineStats {
             workers: (0..n_workers).map(|_| WorkerStats::default()).collect(),
             submitted: AtomicU64::new(0),
             queue_depth: AtomicUsize::new(0),
             peak_queue_depth: AtomicUsize::new(0),
+            batch: BatchStats::default(),
         }
     }
 
@@ -170,6 +261,7 @@ impl EngineStats {
         self.peak_queue_depth.fetch_max(depth, Ordering::Relaxed);
     }
 
+    /// Requests decoded across all workers.
     pub fn total_requests(&self) -> u64 {
         self.workers.iter().map(|w| w.requests.load(Ordering::Relaxed)).sum()
     }
@@ -184,18 +276,22 @@ impl EngineStats {
         busy as f64 / (span_ns as f64 * self.workers.len() as f64)
     }
 
+    /// JSON object for the `/metrics` `engine` field (see
+    /// docs/OPERATIONS.md for the field-by-field reference).
     pub fn to_json(&self, span_ns: u64) -> Json {
         let mut o = Json::obj();
         o.set("workers", self.workers.len())
             .set("submitted", self.submitted.load(Ordering::Relaxed) as usize)
             .set("queue_depth", self.queue_depth.load(Ordering::Relaxed))
             .set("peak_queue_depth", self.peak_queue_depth.load(Ordering::Relaxed))
-            .set("utilization", self.utilization(span_ns));
+            .set("utilization", self.utilization(span_ns))
+            .set("batch", self.batch.to_json());
         let per_worker: Vec<Json> = self.workers.iter().map(|w| w.to_json()).collect();
         o.set("per_worker", per_worker);
         o
     }
 
+    /// Human-readable worker/batch summary (the CLI / bench footer).
     pub fn report(&self, span_ns: u64) -> String {
         let mut s = format!(
             "workers: {}   peak queue depth: {}   utilization: {:.0}%\n",
@@ -203,6 +299,15 @@ impl EngineStats {
             self.peak_queue_depth.load(Ordering::Relaxed),
             self.utilization(span_ns) * 100.0
         );
+        if self.batch.batches.load(Ordering::Relaxed) > 0 {
+            s.push_str(&format!(
+                "batched verify: {} forwards  mean occupancy {:.2}  peak {}  pad waste {:.0}%\n",
+                self.batch.batches.load(Ordering::Relaxed),
+                self.batch.mean_occupancy(),
+                self.batch.peak.load(Ordering::Relaxed),
+                self.batch.pad_waste_frac() * 100.0
+            ));
+        }
         for (i, w) in self.workers.iter().enumerate() {
             s.push_str(&format!(
                 "  worker {i}: {} requests ({} errors)  busy {:.1} ms  slot-wait {:.1} ms\n",
@@ -263,6 +368,23 @@ mod tests {
         assert_eq!(m.new_tokens, 10);
         let j = m.to_json();
         assert_eq!(j.get("failed").unwrap().as_usize().unwrap(), 1);
+    }
+
+    #[test]
+    fn batch_stats_occupancy_and_pad_waste() {
+        let s = EngineStats::new(1);
+        s.batch.note(4, 20, 32, 1_000);
+        s.batch.note(2, 10, 16, 500);
+        assert_eq!(s.batch.batches.load(Ordering::Relaxed), 2);
+        assert_eq!(s.batch.coalesced.load(Ordering::Relaxed), 6);
+        assert_eq!(s.batch.peak.load(Ordering::Relaxed), 4);
+        assert!((s.batch.mean_occupancy() - 3.0).abs() < 1e-12);
+        assert!((s.batch.pad_waste_frac() - (1.0 - 30.0 / 48.0)).abs() < 1e-12);
+        let j = s.to_json(1_000);
+        let b = j.get("batch").unwrap();
+        assert_eq!(b.get("batches").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(b.get("peak_occupancy").unwrap().as_usize().unwrap(), 4);
+        assert!(s.report(1_000).contains("batched verify"));
     }
 
     #[test]

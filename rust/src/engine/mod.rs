@@ -1,8 +1,11 @@
 //! Serving layer (the vLLM-router-shaped part of L3): request types,
 //! admission scheduler, concurrent KV slot pool, the dispatcher + decode
-//! worker pool sharing one online bandit, serving metrics, and a minimal
-//! HTTP JSON API. See DESIGN.md §2 for the concurrency design.
+//! worker pool sharing one online bandit, the cross-session verification
+//! batcher, serving metrics, and a minimal HTTP JSON API. See
+//! docs/ARCHITECTURE.md §3–§5 for the concurrency design (DESIGN.md keeps
+//! the legacy section map).
 
+pub mod batcher;
 pub mod http;
 pub mod metrics;
 pub mod request;
@@ -10,8 +13,9 @@ pub mod scheduler;
 pub mod server;
 pub mod slots;
 
+pub use batcher::{BatchConfig, BatchedTarget, Batcher, BatcherHandle};
 pub use http::HttpServer;
-pub use metrics::{EngineMetrics, EngineStats, WorkerStats};
+pub use metrics::{BatchStats, EngineMetrics, EngineStats, WorkerStats};
 pub use request::{Request, Response};
 pub use scheduler::{Policy, Scheduler};
 pub use server::{BackendKind, Engine, EngineConfig};

@@ -4,18 +4,25 @@ use std::time::Instant;
 
 use crate::spec::GenResult;
 
+/// One queued generation request.
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// engine-assigned id (echoed in the reply)
     pub id: u64,
+    /// raw prompt text
     pub prompt_text: String,
     /// pre-encoded prompt (BOS included); filled by the engine if empty
     pub prompt: Vec<u32>,
+    /// workload category ("coding", "qa", ...; drives the simulator)
     pub category: String,
+    /// decode budget
     pub max_new: usize,
+    /// submission timestamp (queue/TTFT base)
     pub arrival: Instant,
 }
 
 impl Request {
+    /// A text request with `arrival` stamped now.
     pub fn new(id: u64, prompt_text: impl Into<String>, max_new: usize) -> Request {
         Request {
             id,
@@ -52,10 +59,14 @@ impl Request {
     }
 }
 
+/// The engine's reply to one request.
 #[derive(Clone, Debug)]
 pub struct Response {
+    /// id of the request this answers
     pub id: u64,
+    /// decoded text of the generated suffix
     pub text: String,
+    /// full generation result (tokens + round stats)
     pub result: GenResult,
     /// queueing delay before decoding started
     pub queue_ns: u64,
@@ -79,10 +90,12 @@ impl Response {
         }
     }
 
+    /// Did the decode succeed?
     pub fn is_ok(&self) -> bool {
         self.error.is_none()
     }
 
+    /// Decode throughput of this single request.
     pub fn tokens_per_sec(&self) -> f64 {
         let n = self.result.new_tokens().len() as f64;
         n / (self.result.wall_ns.max(1) as f64 / 1e9)

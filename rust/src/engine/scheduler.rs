@@ -9,12 +9,25 @@
 //! In the multi-worker engine (DESIGN.md §2) the scheduler sits behind
 //! one short-lived mutex: workers lock, pop, and release before touching
 //! any model state.
+//!
+//! **Ordering policy** (docs/ARCHITECTURE.md §5): SJF keys on each
+//! request's *own* remaining service estimate (tokenized prompt length +
+//! decode budget). Sessions already holding a slot shift every queued
+//! request's absolute wait by the same amount, so they are deliberately
+//! *excluded from the ordering key* — but they must not be excluded from
+//! the *wait estimate*, which older revisions got wrong. The scheduler
+//! therefore tracks in-flight cost separately (`note_done`,
+//! `queue_wait_estimate`) and surfaces it in `/metrics`. Equal-cost
+//! requests always pop in arrival order (`seq` tie-break), in-flight
+//! load notwithstanding — pinned by `sjf_ties_stay_fifo` and
+//! `in_flight_load_never_reorders_the_queue`.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 use super::request::Request;
 
+/// Admission-ordering policy for queued requests.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Policy {
     /// first come, first served
@@ -24,6 +37,7 @@ pub enum Policy {
 }
 
 impl Policy {
+    /// Parse a CLI policy name ("sjf"; anything else means FCFS).
     pub fn parse(s: &str) -> Policy {
         match s {
             "sjf" => Policy::Sjf,
@@ -38,6 +52,9 @@ impl Policy {
 struct Entry {
     key: u64,
     seq: u64,
+    /// request's own service-cost estimate (kept for both policies so
+    /// pending/in-flight cost accounting is policy-independent)
+    cost: u64,
     req: Request,
 }
 
@@ -63,11 +80,21 @@ impl Ord for Entry {
     }
 }
 
+/// The admission queue: a policy-keyed binary heap plus pending /
+/// in-flight cost accounting for honest queue-wait estimates.
 pub struct Scheduler {
     policy: Policy,
     queue: BinaryHeap<Entry>,
     next_seq: u64,
     admitted: u64,
+    /// Σ cost of queued requests
+    pending_cost: u64,
+    /// Σ cost of requests popped but not yet reported done — the
+    /// sessions already holding a slot, which shift every queued
+    /// request's wait but never their relative order
+    in_flight_cost: u64,
+    /// number of popped-but-unfinished requests
+    in_flight: usize,
 }
 
 impl std::fmt::Debug for Scheduler {
@@ -81,42 +108,90 @@ impl std::fmt::Debug for Scheduler {
 }
 
 impl Scheduler {
+    /// An empty queue under `policy`.
     pub fn new(policy: Policy) -> Scheduler {
         Scheduler {
             policy,
             queue: BinaryHeap::new(),
             next_seq: 0,
             admitted: 0,
+            pending_cost: 0,
+            in_flight_cost: 0,
+            in_flight: 0,
         }
     }
 
+    /// Enqueue a request (O(log n)).
     pub fn push(&mut self, req: Request) {
+        let cost = req.cost() as u64;
         let key = match self.policy {
             Policy::Fcfs => 0,
-            Policy::Sjf => req.cost() as u64,
+            Policy::Sjf => cost,
         };
         let seq = self.next_seq;
         self.next_seq += 1;
-        self.queue.push(Entry { key, seq, req });
+        self.pending_cost += cost;
+        self.queue.push(Entry { key, seq, cost, req });
     }
 
+    /// Queued (not yet popped) request count.
     pub fn len(&self) -> usize {
         self.queue.len()
     }
 
+    /// Is the queue empty?
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
     }
 
+    /// Requests popped for decoding since construction.
     pub fn admitted(&self) -> u64 {
         self.admitted
     }
 
-    /// Next request to decode, per policy. O(log n).
+    /// Next request to decode, per policy. O(log n). The popped request
+    /// moves from the pending-cost ledger to the in-flight ledger; the
+    /// worker must pair it with [`Scheduler::note_done`] when the decode
+    /// finishes.
     pub fn pop(&mut self) -> Option<Request> {
         let entry = self.queue.pop()?;
         self.admitted += 1;
+        self.pending_cost -= entry.cost;
+        self.in_flight_cost += entry.cost;
+        self.in_flight += 1;
         Some(entry.req)
+    }
+
+    /// A previously popped request finished decoding (pass its
+    /// `Request::cost()`); releases it from the in-flight ledger.
+    pub fn note_done(&mut self, cost: usize) {
+        self.in_flight_cost = self.in_flight_cost.saturating_sub(cost as u64);
+        self.in_flight = self.in_flight.saturating_sub(1);
+    }
+
+    /// Σ service cost of queued requests.
+    pub fn pending_cost(&self) -> u64 {
+        self.pending_cost
+    }
+
+    /// Σ service cost of requests currently decoding.
+    pub fn in_flight_cost(&self) -> u64 {
+        self.in_flight_cost
+    }
+
+    /// Requests currently decoding.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    /// Expected service cost ahead of a *newly arriving* request, in SJF
+    /// cost units per worker: queued work plus the sessions already
+    /// holding a slot. The in-flight term is what makes the estimate
+    /// honest — it shifts every arrival's wait identically, which is
+    /// exactly why it never participates in the ordering key (see the
+    /// module docs).
+    pub fn queue_wait_estimate(&self, workers: usize) -> f64 {
+        (self.pending_cost + self.in_flight_cost) as f64 / workers.max(1) as f64
     }
 }
 
@@ -175,6 +250,41 @@ mod tests {
         for id in 1..=4 {
             assert_eq!(s.pop().unwrap().id, id);
         }
+    }
+
+    #[test]
+    fn in_flight_load_never_reorders_the_queue() {
+        // pin the policy: sessions already holding a slot contribute to
+        // the wait *estimate* but never to the ordering key — equal-cost
+        // requests stay FIFO and cheaper requests still pop first, no
+        // matter how much in-flight work there is
+        let mut s = Scheduler::new(Policy::Sjf);
+        s.push(req(1, 10, 10)); // cost 20
+        let running = s.pop().unwrap();
+        assert_eq!(running.id, 1);
+        assert_eq!(s.in_flight(), 1);
+        assert_eq!(s.in_flight_cost(), 20);
+
+        s.push(req(2, 30, 30)); // cost 60
+        s.push(req(3, 5, 5)); // cost 10
+        s.push(req(4, 5, 5)); // cost 10, same as 3 -> FIFO after it
+        assert_eq!(s.pending_cost(), 80);
+        // estimate counts queued + in-flight work
+        assert!((s.queue_wait_estimate(2) - 50.0).abs() < 1e-12);
+        assert_eq!(s.pop().unwrap().id, 3, "cheapest first, in-flight load ignored");
+        assert_eq!(s.pop().unwrap().id, 4, "equal cost stays arrival-ordered");
+        assert_eq!(s.pop().unwrap().id, 2);
+
+        // ledger conservation: everything popped is in flight until done
+        assert_eq!(s.pending_cost(), 0);
+        assert_eq!(s.in_flight(), 4);
+        assert_eq!(s.in_flight_cost(), 100);
+        for cost in [20, 60, 10, 10] {
+            s.note_done(cost);
+        }
+        assert_eq!(s.in_flight(), 0);
+        assert_eq!(s.in_flight_cost(), 0);
+        assert!((s.queue_wait_estimate(4) - 0.0).abs() < 1e-12);
     }
 
     #[test]

@@ -10,16 +10,26 @@
 //!   submit() ──ch──▶ dispatcher ──sched──▶ worker 0 ─┐
 //!                      (encode,   (mutex +  worker 1 ─┼─▶ SlotPool ──▶
 //!                       admit)     condvar) worker N ─┘   (checkout)
+//!                                                 │
+//!                              verification batcher (batcher.rs):
+//!                              workers submit target steps, one thread
+//!                              coalesces in-flight sessions into one
+//!                              block_batch forward and scatters rows
 //!
 //!   * scheduler + waiter map: one mutex, held for queue ops only;
 //!   * KV slots: blocking checkout (slots.rs) — workers may outnumber
 //!     slots;
+//!   * target forwards: routed through the per-backend batcher when
+//!     `verify_batch` is enabled (docs/ARCHITECTURE.md §4); drafting
+//!     stays per-slot;
 //!   * bandit: shared select/update via `SharedController`
 //!     (bandit/shared.rs); the per-token stop path is lock-free for
 //!     sequence-granularity methods (token-granularity bandits take a
 //!     short shared lock per drafted token — see bandit/shared.rs);
-//!   * metrics: per-request samples under one mutex, per-worker counters
-//!     and queue depth as atomics (metrics.rs).
+//!     verify rewards land when each batch scatters, i.e. asynchronously
+//!     per batch rather than per private forward;
+//!   * metrics: per-request samples under one mutex, per-worker counters,
+//!     queue depth and batch occupancy/pad-waste as atomics (metrics.rs).
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -32,11 +42,15 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::bandit::{SessionController, SharedController};
-use crate::models::{sim_decode, sim_encode, Manifest, ModelAssets};
+use crate::models::{
+    sim_decode, sim_encode, LanguageModel, Manifest, ModelAssets, PjrtBatchVerifier, Scenario,
+    SimModel,
+};
 use crate::runtime::Runtime;
 use crate::spec::{generate, GenConfig, MethodSpec, BOS, EOS};
 use crate::util::{Json, Rng};
 
+use super::batcher::{BatchConfig, BatchedTarget, Batcher, BatcherHandle};
 use super::metrics::{EngineMetrics, EngineStats};
 use super::request::{Request, Response};
 use super::scheduler::{Policy, Scheduler};
@@ -63,10 +77,12 @@ impl BackendKind {
         }
     }
 
+    /// The default simulator pair (quality 0.9, 16x cheaper draft).
     pub fn sim_default() -> BackendKind {
         BackendKind::Sim { quality: 0.9, rel_cost: 1.0 / 16.0 }
     }
 
+    /// Short name for banners and `/health`.
     pub fn label(&self) -> &'static str {
         match self {
             BackendKind::Pjrt => "pjrt",
@@ -75,18 +91,28 @@ impl BackendKind {
     }
 }
 
+/// Everything `Engine::start` needs to boot a serving engine.
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
+    /// artifact directory (PJRT backend only)
     pub artifacts: PathBuf,
+    /// manifest pair name ("pair-a", ...)
     pub pair: String,
+    /// stop-method spec (`MethodSpec::parse` names, e.g. "seq-ucb1")
     pub method: String,
+    /// max draft length γ per session
     pub gamma_max: usize,
+    /// admission-ordering policy
     pub sched: Policy,
     /// KV slots (resident sequence states)
     pub slots: usize,
     /// decode worker threads; may exceed `slots` (they queue at checkout)
     pub workers: usize,
+    /// model backend the engine decodes with
     pub backend: BackendKind,
+    /// cross-session verification batching (docs/ARCHITECTURE.md §4);
+    /// `BatchConfig::off()` restores per-slot direct verification
+    pub verify_batch: BatchConfig,
 }
 
 impl Default for EngineConfig {
@@ -100,6 +126,7 @@ impl Default for EngineConfig {
             slots: 2,
             workers: 2,
             backend: BackendKind::Pjrt,
+            verify_batch: BatchConfig::default(),
         }
     }
 }
@@ -147,22 +174,30 @@ struct EngineShared {
     pool: SlotPool,
     codec: Codec,
     gamma_max: usize,
+    /// submit side of the verification batcher; `None` when
+    /// `verify_batch` is off (workers verify on their slot's own target)
+    batcher: Option<BatcherHandle>,
     /// serving-span origin (throughput/utilization time base); reset by
     /// the dispatcher once warmup finishes so XLA compile time never
     /// deflates the reported throughput
     started: Mutex<Instant>,
 }
 
+/// The serving engine handle: submit requests, read metrics, shut down.
 pub struct Engine {
     tx: Sender<Job>,
     dispatcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     next_id: AtomicU64,
+    /// per-request latency/throughput samples
     pub metrics: Arc<Mutex<EngineMetrics>>,
+    /// lock-free queue/worker/batch gauges
     pub stats: Arc<EngineStats>,
+    /// the (normalized) configuration the engine booted with
     pub config: EngineConfig,
     controller: SharedController,
     shared: Arc<EngineShared>,
+    batcher: Option<Batcher>,
 }
 
 impl Engine {
@@ -184,20 +219,38 @@ impl Engine {
             .map_err(|e| anyhow::anyhow!(e))?;
         let controller = SharedController::new(&method, config.gamma_max);
 
-        let (pool, codec, warm_assets) = match config.backend {
-            BackendKind::Pjrt => {
-                let manifest = Manifest::load(&config.artifacts)?;
-                let runtime = Runtime::cpu().context("PJRT client")?;
-                let (dspec, tspec) = manifest.pair(&config.pair)?;
-                let (dname, tname) = (dspec.name.clone(), tspec.name.clone());
-                let draft_assets = ModelAssets::load(&runtime, &manifest, &dname)?;
-                let target_assets = ModelAssets::load(&runtime, &manifest, &tname)?;
-                let pool = SlotPool::pjrt(&draft_assets, &target_assets, n_slots)?;
-                (pool, Codec::Manifest(Box::new(manifest)), Some((draft_assets, target_assets)))
-            }
-            BackendKind::Sim { quality, rel_cost } => {
-                (SlotPool::sim(quality, rel_cost, n_slots), Codec::Sim, None)
-            }
+        let (pool, codec, warm_assets, verifier): (_, _, _, Box<dyn LanguageModel>) =
+            match config.backend {
+                BackendKind::Pjrt => {
+                    let manifest = Manifest::load(&config.artifacts)?;
+                    let runtime = Runtime::cpu().context("PJRT client")?;
+                    let (dspec, tspec) = manifest.pair(&config.pair)?;
+                    let (dname, tname) = (dspec.name.clone(), tspec.name.clone());
+                    let draft_assets = ModelAssets::load(&runtime, &manifest, &dname)?;
+                    let target_assets = ModelAssets::load(&runtime, &manifest, &tname)?;
+                    let pool = SlotPool::pjrt(&draft_assets, &target_assets, n_slots)?;
+                    let verifier = Box::new(PjrtBatchVerifier::new(target_assets.clone()));
+                    (
+                        pool,
+                        Codec::Manifest(Box::new(manifest)),
+                        Some((draft_assets, target_assets)),
+                        verifier,
+                    )
+                }
+                BackendKind::Sim { quality, rel_cost } => (
+                    SlotPool::sim(quality, rel_cost, n_slots),
+                    Codec::Sim,
+                    None,
+                    // the sim target is stateless per position, so one
+                    // verifier serves every sequence's batch items
+                    Box::new(SimModel::target(Scenario::new(0, "qa"))),
+                ),
+            };
+
+        let batcher = if config.verify_batch.enabled() {
+            Some(Batcher::spawn(verifier, config.verify_batch, stats.clone())?)
+        } else {
+            None
         };
 
         let shared = Arc::new(EngineShared {
@@ -210,6 +263,7 @@ impl Engine {
             pool,
             codec,
             gamma_max: config.gamma_max,
+            batcher: batcher.as_ref().map(|b| b.handle()),
             started: Mutex::new(Instant::now()),
         });
 
@@ -248,6 +302,7 @@ impl Engine {
             config,
             controller,
             shared,
+            batcher,
         })
     }
 
@@ -258,6 +313,7 @@ impl Engine {
         self.submit_request(req)
     }
 
+    /// Submit a pre-built request (pre-encoded prompts, custom category).
     pub fn submit_request(&self, req: Request) -> Receiver<Response> {
         let (rtx, rrx) = channel();
         let _ = self.tx.send(Job::Run(req, rtx));
@@ -265,6 +321,8 @@ impl Engine {
     }
 
     /// Graceful shutdown: queued requests drain, then all threads exit.
+    /// The batcher stops last — draining workers still need it to answer
+    /// their in-flight verification steps.
     pub fn shutdown(mut self) {
         let _ = self.tx.send(Job::Shutdown);
         if let Some(h) = self.dispatcher.take() {
@@ -272,6 +330,9 @@ impl Engine {
         }
         for h in self.workers.drain(..) {
             let _ = h.join();
+        }
+        if let Some(b) = self.batcher.take() {
+            b.shutdown();
         }
     }
 
@@ -283,6 +344,7 @@ impl Engine {
         self.controller.sessions()
     }
 
+    /// Verification outcomes absorbed by the shared controller since boot.
     pub fn bandit_updates(&self) -> u64 {
         self.controller.updates()
     }
@@ -293,6 +355,8 @@ impl Engine {
         self.controller.arm_counts()
     }
 
+    /// Per-arm value estimates of the shared bandit (None for stateless
+    /// methods and token granularity).
     pub fn bandit_values(&self) -> Option<Vec<f64>> {
         self.controller.arm_values()
     }
@@ -311,6 +375,17 @@ impl Engine {
             span_ns = self.shared.started.lock().unwrap().elapsed().as_nanos() as u64;
         }
         o.set("engine", self.stats.to_json(span_ns));
+        {
+            // scheduler ledger: queued + in-flight work and the honest
+            // queue-wait estimate (docs/ARCHITECTURE.md §5)
+            let q = self.shared.q.lock().unwrap();
+            let mut sj = Json::obj();
+            sj.set("pending_cost", q.sched.pending_cost() as usize)
+                .set("in_flight", q.sched.in_flight())
+                .set("in_flight_cost", q.sched.in_flight_cost() as usize)
+                .set("queue_wait_est_cost", q.sched.queue_wait_estimate(self.config.workers));
+            o.set("sched", sj);
+        }
         if self.controller.is_shared() {
             let mut b = Json::obj();
             b.set("method", self.controller.method_label())
@@ -415,7 +490,6 @@ fn worker_loop(
 
         let seed = req.scenario_seed();
         slot.draft.begin_request(seed, &req.category);
-        slot.target.begin_request(seed, &req.category);
         let gen_cfg = GenConfig {
             max_new: req.max_new,
             gamma_max: shared.gamma_max,
@@ -423,19 +497,50 @@ fn worker_loop(
             collect_signals: false,
         };
         let t_busy = Instant::now();
-        let outcome = generate(
-            slot.draft.as_mut(),
-            slot.target.as_mut(),
-            &mut session,
-            &mut rng,
-            &req.prompt,
-            &gen_cfg,
-        );
+        let outcome = match &shared.batcher {
+            Some(handle) => {
+                // batched path (docs/ARCHITECTURE.md §4): target steps are
+                // submitted to the batcher keyed by this slot's id; the
+                // slot's own target stays resident but idle
+                let mut target = BatchedTarget::new(
+                    slot.id,
+                    handle.clone(),
+                    slot.target.max_seq(),
+                    slot.target.rel_cost(),
+                );
+                target.begin_request(seed, &req.category);
+                handle.note_decode_start();
+                let r = generate(
+                    slot.draft.as_mut(),
+                    &mut target,
+                    &mut session,
+                    &mut rng,
+                    &req.prompt,
+                    &gen_cfg,
+                );
+                handle.note_decode_end();
+                r
+            }
+            None => {
+                slot.target.begin_request(seed, &req.category);
+                generate(
+                    slot.draft.as_mut(),
+                    slot.target.as_mut(),
+                    &mut session,
+                    &mut rng,
+                    &req.prompt,
+                    &gen_cfg,
+                )
+            }
+        };
         wstats
             .busy_ns
             .fetch_add(t_busy.elapsed().as_nanos() as u64, Ordering::Relaxed);
         shared.pool.release(slot);
         wstats.requests.fetch_add(1, Ordering::Relaxed);
+        // release this request from the scheduler's in-flight ledger so
+        // the queue-wait estimate stays honest (scheduler.rs)
+        shared.q.lock().unwrap().sched.note_done(req.cost());
 
         let resp = match outcome {
             Ok(mut result) => {

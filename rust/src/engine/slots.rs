@@ -17,14 +17,22 @@ use anyhow::Result;
 use crate::models::sim::Scenario;
 use crate::models::{LanguageModel, ModelAssets, PjrtModel, SimModel};
 
+/// One checked-out sequence state: a draft+target model pair whose KV
+/// survives across requests. In the batched engine the slot `id` doubles
+/// as the sequence key the verification batcher keys resident state on.
 pub struct Slot {
+    /// stable slot id (== `BatchItem::seq` in the batched engine)
     pub id: usize,
+    /// the slot's resident draft model
     pub draft: Box<dyn LanguageModel>,
+    /// the slot's resident target model (idle while the verification
+    /// batcher is enabled — its geometry still drives headroom checks)
     pub target: Box<dyn LanguageModel>,
     /// requests served by this slot (reuse diagnostics)
     pub served: u64,
 }
 
+/// The shared checkout pool of KV slots (blocking condvar checkout).
 pub struct SlotPool {
     free: Mutex<Vec<Slot>>,
     freed: Condvar,
@@ -92,16 +100,19 @@ impl SlotPool {
         }
     }
 
+    /// Return a checked-out slot and wake one blocked `acquire`.
     pub fn release(&self, mut slot: Slot) {
         slot.served += 1;
         self.free.lock().unwrap().push(slot);
         self.freed.notify_one();
     }
 
+    /// Slots currently free.
     pub fn available(&self) -> usize {
         self.free.lock().unwrap().len()
     }
 
+    /// Total slots the pool was built with.
     pub fn total(&self) -> usize {
         self.total
     }

@@ -2,27 +2,38 @@
 //!
 //! Reproduction of *TapOut: A Bandit-Based Approach to Dynamic Speculative
 //! Decoding* (Sridhar et al., 2025) as a three-layer rust + JAX + Pallas
-//! serving stack (see `DESIGN.md` at the repo root; §2 covers the
-//! concurrent engine, §4 the KV protocol):
+//! serving stack. The architecture book lives in `docs/ARCHITECTURE.md`
+//! (§4 covers cross-session batched verification, §5 the scheduler and
+//! KV protocol); `DESIGN.md` at the repo root keeps the legacy section
+//! map that older code comments cite.
 //!
 //! * **L3 (this crate)** — the speculative-decoding coordinator: bandit
 //!   controllers ([`bandit`]), the training-free arm-policy pool
-//!   ([`policies`]), the Algorithm-1 session loop ([`spec`]), a serving
-//!   engine with a dispatcher + decode-worker pool sharing one online
-//!   bandit, scheduler/slots/metrics/HTTP ([`engine`]), the PJRT
-//!   runtime ([`runtime`]), model backends ([`models`]) and the experiment
-//!   harness regenerating every paper table/figure ([`harness`]).
+//!   ([`policies`], cataloged in `docs/POLICIES.md`), the Algorithm-1
+//!   session loop ([`spec`]), a serving engine with a dispatcher + decode
+//!   worker pool sharing one online bandit and a cross-session
+//!   verification batcher, scheduler/slots/metrics/HTTP ([`engine`]), the
+//!   PJRT runtime ([`runtime`]), model backends ([`models`]) and the
+//!   experiment harness regenerating every paper table/figure
+//!   ([`harness`]).
 //! * **L2 (python/compile, build-time)** — tiny JAX transformer zoo, AOT
 //!   lowered to HLO text under `artifacts/`.
 //! * **L1 (python/compile/kernels)** — the fused Pallas stop-signal head
 //!   whose per-token output is [`signals::TokenSignals`].
 
+#![warn(missing_docs)]
+
 pub mod bandit;
 pub mod engine;
+// offline stand-in internals: module-level docs only, item-level rustdoc
+// tracked as debt (docs/OPERATIONS.md "rustdoc gate")
+#[allow(missing_docs)]
 pub mod harness;
 pub mod models;
 pub mod policies;
+#[allow(missing_docs)]
 pub mod runtime;
 pub mod signals;
 pub mod spec;
+#[allow(missing_docs)]
 pub mod util;

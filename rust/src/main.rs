@@ -14,7 +14,7 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use tapout::engine::{BackendKind, Engine, EngineConfig, HttpServer, Policy};
+use tapout::engine::{BackendKind, BatchConfig, Engine, EngineConfig, HttpServer, Policy};
 use tapout::harness::{run_experiment, ExpOpts};
 use tapout::models::{Manifest, ModelAssets, PjrtModel};
 use tapout::runtime::Runtime;
@@ -104,6 +104,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         workers: args.usize("workers", slots),
         backend: BackendKind::parse(&args.str("backend", "pjrt"))
             .map_err(|e| anyhow::anyhow!(e))?,
+        // --batch 0 restores per-slot direct verification
+        verify_batch: BatchConfig {
+            max_batch: args.usize("batch", BatchConfig::default().max_batch),
+            window_us: args.usize("batch-window-us", 100) as u64,
+        },
     };
     let port = args.usize("port", 8077) as u16;
     let engine = Arc::new(Engine::start(cfg).context("starting engine")?);

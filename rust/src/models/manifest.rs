@@ -9,46 +9,81 @@ use anyhow::{Context, Result};
 
 use crate::util::Json;
 
+/// One model's entry in `artifacts/manifest.json`: geometry, weight file,
+/// and the per-shape-bucket executables.
 #[derive(Clone, Debug)]
 pub struct ModelSpec {
+    /// manifest key ("draft-base", "target-base", ...)
     pub name: String,
+    /// embedding width
     pub d_model: usize,
+    /// transformer depth
     pub n_layers: usize,
+    /// attention heads
     pub n_heads: usize,
+    /// vocabulary size
     pub vocab: usize,
+    /// KV-cache capacity in tokens
     pub max_seq: usize,
+    /// flat f32 parameter count (weights file is param_count × 4 bytes)
     pub param_count: usize,
+    /// KV region of the world buffer, in f32 elements
     pub kv_elems: usize,
+    /// signal out-region of the world buffer, in f32 elements
     pub out_elems: usize,
+    /// total world buffer size (kv_elems + out_elems)
     pub world_elems: usize,
+    /// flat little-endian f32 weight file
     pub weights_path: PathBuf,
+    /// sequence-length shape buckets the block executables are lowered for
     pub ladder: Vec<usize>,
+    /// per-bucket single-sequence block executables (HLO text)
     pub hlo_files: HashMap<usize, PathBuf>,
     /// per-bucket signal extractor executables (world -> [k*8]); needed
     /// because PJRT CPU lacks CopyRawToHost (see aot.py lower_extract)
     pub extract_files: HashMap<usize, PathBuf>,
+    /// batch-dimension buckets the batched verification executables are
+    /// lowered for (docs/ARCHITECTURE.md §4); empty when the artifact set
+    /// ships no batched executables — the PJRT batch verifier then falls
+    /// back to per-sequence forwards
+    pub batch_ladder: Vec<usize>,
+    /// batched block executables keyed (batch bucket -> row bucket -> HLO
+    /// file); each takes `weights, world×B, tokens[B*K], starts[B]`
+    pub batch_files: HashMap<usize, HashMap<usize, PathBuf>>,
 }
 
+/// One prompt of a TinyBench suite (`artifacts/prompts.json`).
 #[derive(Clone, Debug)]
 pub struct PromptEntry {
+    /// workload category label ("coding", "qa", ...)
     pub category: String,
+    /// prompt text (char-level tokenizer input)
     pub text: String,
+    /// decode budget for this prompt
     pub max_new: usize,
 }
 
+/// Parsed `artifacts/manifest.json` — the artifact directory's index.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// artifact directory the manifest was loaded from
     pub root: PathBuf,
+    /// tokenizer vocabulary size
     pub vocab: usize,
+    /// global KV capacity ceiling
     pub max_seq: usize,
+    /// signal row width (must equal `signals::SIG_WIDTH`)
     pub sig_width: usize,
+    /// char-level tokenizer alphabet (index + 3 = token id)
     pub alphabet: String,
+    /// models by manifest key
     pub models: HashMap<String, ModelSpec>,
     /// paper-analog pairs: name -> (draft, target)
     pub pairs: Vec<(String, (String, String))>,
 }
 
 impl Manifest {
+    /// Parse `<dir>/manifest.json` (run `make artifacts` to produce it).
     pub fn load(dir: &Path) -> Result<Manifest> {
         let text = std::fs::read_to_string(dir.join("manifest.json"))
             .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
@@ -87,6 +122,31 @@ impl Manifest {
                     .get("ladder")
                     .map(|l| l.f64s().iter().map(|&x| x as usize).collect())
                     .unwrap_or_default();
+                // optional batched-verification artifacts (absent in seed
+                // artifact sets; the engine falls back gracefully)
+                let mut batch_files: HashMap<usize, HashMap<usize, PathBuf>> = HashMap::new();
+                if let Some(Json::Obj(bmap)) = mj.get("hlo_batch") {
+                    for (b, inner) in bmap {
+                        let b: usize =
+                            b.parse().map_err(|_| anyhow::anyhow!("bad batch bucket {b}"))?;
+                        let mut per_k = HashMap::new();
+                        if let Json::Obj(kmap) = inner {
+                            for (k, v) in kmap {
+                                per_k.insert(
+                                    k.parse::<usize>()
+                                        .map_err(|_| anyhow::anyhow!("bad bucket {k}"))?,
+                                    dir.join(v.as_str().unwrap_or_default()),
+                                );
+                            }
+                        }
+                        batch_files.insert(b, per_k);
+                    }
+                }
+                let mut batch_ladder: Vec<usize> = mj
+                    .get("batch_ladder")
+                    .map(|l| l.f64s().iter().map(|&x| x as usize).collect())
+                    .unwrap_or_else(|| batch_files.keys().copied().collect());
+                batch_ladder.sort_unstable();
                 models.insert(
                     name.clone(),
                     ModelSpec {
@@ -106,6 +166,8 @@ impl Manifest {
                         ladder,
                         hlo_files,
                         extract_files,
+                        batch_ladder,
+                        batch_files,
                     },
                 );
             }
@@ -132,12 +194,14 @@ impl Manifest {
         })
     }
 
+    /// Spec for one model by manifest key.
     pub fn model(&self, name: &str) -> Result<&ModelSpec> {
         self.models
             .get(name)
             .ok_or_else(|| anyhow::anyhow!("model {name} not in manifest"))
     }
 
+    /// (draft, target) specs for a named pair ("pair-a", ...).
     pub fn pair(&self, name: &str) -> Result<(&ModelSpec, &ModelSpec)> {
         let (d, t) = self
             .pairs
@@ -167,12 +231,14 @@ impl Manifest {
 
     // --- tokenizer (char-level; mirrors python corpus.py) -----------------
 
+    /// Text → token ids (unknown characters are dropped).
     pub fn encode(&self, text: &str) -> Vec<u32> {
         text.chars()
             .filter_map(|c| self.alphabet.find(c).map(|i| (i + 3) as u32))
             .collect()
     }
 
+    /// Token ids → text (ids outside the alphabet are dropped).
     pub fn decode(&self, ids: &[u32]) -> String {
         let chars: Vec<char> = self.alphabet.chars().collect();
         ids.iter()
@@ -182,6 +248,7 @@ impl Manifest {
 
     // --- prompt suites ----------------------------------------------------
 
+    /// Load one prompt suite from `<root>/prompts.json`.
     pub fn prompts(&self, suite: &str) -> Result<Vec<PromptEntry>> {
         let text = std::fs::read_to_string(self.root.join("prompts.json"))
             .context("reading prompts.json")?;

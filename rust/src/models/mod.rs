@@ -1,4 +1,6 @@
-//! Model backends: PJRT (artifact-backed tiny LMs) and the simulator.
+//! Model backends: PJRT (artifact-backed tiny LMs) and the simulator,
+//! plus the batched-verification entry point ([`BatchItem`],
+//! [`LanguageModel::block_batch`]) the serving engine's batcher drives.
 
 pub mod manifest;
 pub mod pjrt;
@@ -6,6 +8,6 @@ pub mod sim;
 pub mod traits;
 
 pub use manifest::{Manifest, ModelSpec, PromptEntry};
-pub use pjrt::{ModelAssets, PjrtModel};
-pub use sim::{sim_decode, sim_encode, sim_pair, Scenario, SimModel};
-pub use traits::{LanguageModel, ModelCost};
+pub use pjrt::{ModelAssets, PjrtBatchVerifier, PjrtModel};
+pub use sim::{sim_bucket, sim_decode, sim_encode, sim_pair, Scenario, SimModel};
+pub use traits::{BatchItem, LanguageModel, ModelCost};

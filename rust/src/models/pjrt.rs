@@ -8,25 +8,44 @@
 //!
 //! Weights are uploaded once per model and shared (Arc) across serving
 //! slots; executables are compiled lazily per shape bucket and shared too.
+//!
+//! Two model types live here:
+//!
+//! * [`PjrtModel`] — one resident sequence (one world buffer), the
+//!   single-sequence hot path.
+//! * [`PjrtBatchVerifier`] — the cross-session batched verification path
+//!   (docs/ARCHITECTURE.md §4): one resident world *per engine slot*,
+//!   fed through `block_batch`. When the manifest ships batched
+//!   executables (`hlo_batch`), whole batches run as one stacked forward
+//!   padded to the manifest's batch buckets; otherwise it degrades to
+//!   per-sequence forwards that still amortize weight residency.
 
+use std::collections::HashMap;
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use crate::models::manifest::{Manifest, ModelSpec};
-use crate::models::traits::{LanguageModel, ModelCost};
+use crate::models::traits::{BatchItem, LanguageModel, ModelCost};
 use crate::runtime::{ExecutableCache, Runtime, SendWrap};
 use crate::signals::{TokenSignals, SIG_WIDTH};
 
 /// Per-model immutable assets shared by all instances (serving slots).
 pub struct ModelAssets {
+    /// PJRT client handle
     pub runtime: Runtime,
+    /// manifest geometry for this model
     pub spec: ModelSpec,
+    /// device-resident flat weight buffer, shared by every instance
     pub weights: SendWrap<xla::PjRtBuffer>,
+    /// per-bucket single-sequence block executables
     pub exes: ExecutableCache,
     /// per-bucket signal extractors (world -> [k*8]); PJRT CPU cannot
     /// offset-read device buffers, so the out-region is sliced on device
     pub extractors: ExecutableCache,
+    /// batched block executables, one cache per batch bucket (empty when
+    /// the artifact set ships none — see `ModelSpec::batch_files`)
+    pub batch_exes: HashMap<usize, ExecutableCache>,
     /// token-row cost relative to target-base (analytic cost model)
     pub rel_cost: f64,
 }
@@ -39,6 +58,7 @@ unsafe impl Sync for ModelAssets {}
 unsafe impl Send for PjrtModel {}
 
 impl ModelAssets {
+    /// Load one model's weights onto the device and index its executables.
     pub fn load(runtime: &Runtime, manifest: &Manifest, name: &str) -> Result<Arc<ModelAssets>> {
         let spec = manifest.model(name)?.clone();
         let host = manifest.load_weights(&spec)?;
@@ -51,12 +71,17 @@ impl ModelAssets {
             .unwrap_or(spec.param_count);
         let exes = ExecutableCache::new(runtime.clone(), spec.hlo_files.clone());
         let extractors = ExecutableCache::new(runtime.clone(), spec.extract_files.clone());
+        let mut batch_exes = HashMap::new();
+        for (&b, files) in &spec.batch_files {
+            batch_exes.insert(b, ExecutableCache::new(runtime.clone(), files.clone()));
+        }
         Ok(Arc::new(ModelAssets {
             runtime: runtime.clone(),
             spec,
             weights: SendWrap(weights),
             exes,
             extractors,
+            batch_exes,
             rel_cost: spec_rel_cost(&host, ref_params),
         }))
     }
@@ -67,32 +92,49 @@ fn spec_rel_cost(host: &[f32], ref_params: usize) -> f64 {
 }
 
 /// A stateful model instance (one per active sequence slot).
+///
+/// The device world buffer is allocated lazily on the first forward, so
+/// an instance that never runs — e.g. a slot target idling while the
+/// verification batcher owns all target forwards — costs no device
+/// memory beyond the struct.
 pub struct PjrtModel {
     assets: Arc<ModelAssets>,
-    world: SendWrap<xla::PjRtBuffer>,
+    world: Option<SendWrap<xla::PjRtBuffer>>,
     cur: usize,
     cost: ModelCost,
     sig_host: Vec<f32>,
 }
 
 impl PjrtModel {
+    /// A fresh instance over shared assets (world buffer not yet
+    /// allocated).
     pub fn new(assets: Arc<ModelAssets>) -> Result<PjrtModel> {
-        let spec = &assets.spec;
-        let zeros = vec![0.0f32; spec.world_elems];
-        let world = assets.runtime.f32_to_device(&zeros, &[spec.world_elems])?;
         Ok(PjrtModel {
-            sig_host: vec![0.0; spec.out_elems],
-            world: SendWrap(world),
+            sig_host: vec![0.0; assets.spec.out_elems],
+            world: None,
             assets,
             cur: 0,
             cost: ModelCost::default(),
         })
     }
 
+    /// Allocate the zeroed device world on first use.
+    pub(crate) fn ensure_world(&mut self) -> Result<()> {
+        if self.world.is_none() {
+            let spec = &self.assets.spec;
+            let zeros = vec![0.0f32; spec.world_elems];
+            let world = self.assets.runtime.f32_to_device(&zeros, &[spec.world_elems])?;
+            self.world = Some(SendWrap(world));
+        }
+        Ok(())
+    }
+
+    /// Manifest geometry of this model.
     pub fn spec(&self) -> &ModelSpec {
         &self.assets.spec
     }
 
+    /// The shared assets this instance executes against.
     pub fn assets(&self) -> &Arc<ModelAssets> {
         &self.assets
     }
@@ -100,6 +142,39 @@ impl PjrtModel {
     /// Pre-compile the buckets the serving hot path uses.
     pub fn warmup(&self, buckets: &[usize]) -> Result<()> {
         self.assets.exes.warmup(buckets)
+    }
+
+    /// Current world buffer (a stacked batched forward reads it as one
+    /// input lane). Callers must have run [`PjrtModel::ensure_world`].
+    pub(crate) fn world_ref(&self) -> &xla::PjRtBuffer {
+        &self.world.as_ref().expect("world allocated (ensure_world ran)").0
+    }
+
+    /// Install the world buffer a batched forward produced for this lane
+    /// and advance the cursor to `cur`.
+    pub(crate) fn adopt_world(&mut self, world: xla::PjRtBuffer, cur: usize) {
+        self.world = Some(SendWrap(world));
+        self.cur = cur;
+    }
+
+    /// Read the first `n` signal rows out of the current world via the
+    /// on-device extractor (shared by `block` and the batched path).
+    pub(crate) fn extract_signals(&mut self, n: usize) -> Result<Vec<TokenSignals>> {
+        let ek = self.assets.extractors.bucket_for(n)?;
+        let ext = self.assets.extractors.get(ek)?;
+        let mut eres = ext
+            .0
+            .execute_b(&[self.world_ref()])
+            .context("extracting signal out-region")?;
+        let sig_buf = eres
+            .pop()
+            .and_then(|mut r| if r.is_empty() { None } else { Some(r.remove(0)) })
+            .ok_or_else(|| anyhow::anyhow!("no extractor output"))?;
+        let lit = sig_buf.to_literal_sync()?;
+        let vals: Vec<f32> = lit.to_vec()?;
+        let want = n * SIG_WIDTH;
+        self.sig_host[..want].copy_from_slice(&vals[..want]);
+        Ok(TokenSignals::parse_rows(&self.sig_host, n))
     }
 }
 
@@ -123,6 +198,7 @@ impl LanguageModel for PjrtModel {
 
         let k = self.assets.exes.bucket_for(n)?;
         let exe = self.assets.exes.get(k)?;
+        self.ensure_world()?;
 
         // stage tokens (padded to the bucket) and the start scalar
         let mut padded = vec![0i32; k];
@@ -134,36 +210,19 @@ impl LanguageModel for PjrtModel {
 
         let mut result = exe
             .0
-            .execute_b(&[&self.assets.weights.0, &self.world.0, &toks_buf, &start_buf])
+            .execute_b(&[&self.assets.weights.0, self.world_ref(), &toks_buf, &start_buf])
             .with_context(|| format!("executing {} block{k}", spec.name))?;
         let new_world = result
             .pop()
             .and_then(|mut r| if r.is_empty() { None } else { Some(r.remove(0)) })
             .ok_or_else(|| anyhow::anyhow!("no output buffer"))?;
-        self.world = SendWrap(new_world);
-
-        // read back only the signal rows: slice on device (extractor for
-        // the smallest bucket >= n), then copy the tiny result to host
-        let ek = self.assets.extractors.bucket_for(n)?;
-        let ext = self.assets.extractors.get(ek)?;
-        let mut eres = ext
-            .0
-            .execute_b(&[&self.world.0])
-            .context("extracting signal out-region")?;
-        let sig_buf = eres
-            .pop()
-            .and_then(|mut r| if r.is_empty() { None } else { Some(r.remove(0)) })
-            .ok_or_else(|| anyhow::anyhow!("no extractor output"))?;
-        let lit = sig_buf.to_literal_sync()?;
-        let vals: Vec<f32> = lit.to_vec()?;
-        let want = n * SIG_WIDTH;
-        self.sig_host[..want].copy_from_slice(&vals[..want]);
+        self.world = Some(SendWrap(new_world));
 
         self.cur = start + n;
         self.cost.calls += 1;
         self.cost.rows += n as u64;
         self.cost.padded_rows += k as u64;
-        Ok(TokenSignals::parse_rows(&self.sig_host, n))
+        self.extract_signals(n)
     }
 
     fn cur(&self) -> usize {
@@ -180,6 +239,209 @@ impl LanguageModel for PjrtModel {
 
     fn cost(&self) -> ModelCost {
         self.cost
+    }
+
+    fn rel_cost(&self) -> f64 {
+        self.assets.rel_cost
+    }
+}
+
+/// Multi-sequence PJRT verifier for the engine's verification batcher
+/// (docs/ARCHITECTURE.md §4).
+///
+/// Keeps one resident [`PjrtModel`] per engine slot (`BatchItem::seq`),
+/// lazily created, so every sequence's KV world survives across batches
+/// exactly as a dedicated slot target would. `block_batch` prefers one
+/// *stacked* forward over a manifest batch bucket
+/// (`weights, world×B, tokens[B*K], starts[B]` — pad lanes re-execute
+/// lane 0 and are discarded); when the artifact set ships no batched
+/// executables it falls back to per-sequence forwards, which still
+/// benefit from batching at the engine level (one dispatcher wake per
+/// batch instead of per session).
+pub struct PjrtBatchVerifier {
+    assets: Arc<ModelAssets>,
+    seqs: HashMap<usize, PjrtModel>,
+    /// cost of stacked batched forwards; per-sequence fallback forwards
+    /// are accounted inside the per-sequence models
+    cost: ModelCost,
+}
+
+impl PjrtBatchVerifier {
+    /// A verifier with no resident sequences yet.
+    pub fn new(assets: Arc<ModelAssets>) -> PjrtBatchVerifier {
+        PjrtBatchVerifier { assets, seqs: HashMap::new(), cost: ModelCost::default() }
+    }
+
+    /// Number of resident per-sequence worlds.
+    pub fn resident_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+
+    fn ensure_seq(&mut self, id: usize) -> Result<()> {
+        if !self.seqs.contains_key(&id) {
+            self.seqs.insert(id, PjrtModel::new(self.assets.clone())?);
+        }
+        Ok(())
+    }
+
+    /// Roll every item's resident world to its start and check the
+    /// per-sequence contiguity invariant.
+    fn align(&mut self, items: &[BatchItem]) -> Result<()> {
+        for it in items {
+            self.ensure_seq(it.seq)?;
+            let m = self.seqs.get_mut(&it.seq).expect("just ensured");
+            m.ensure_world()?;
+            m.begin_request(it.seed, &it.category);
+            m.rollback(it.start);
+            anyhow::ensure!(
+                m.cur() == it.start,
+                "non-contiguous batch item for seq {}: start {} cur {}",
+                it.seq,
+                it.start,
+                m.cur()
+            );
+            anyhow::ensure!(
+                it.start + it.tokens.len() <= self.assets.spec.max_seq,
+                "KV overflow in batch: seq {} {}+{} > {}",
+                it.seq,
+                it.start,
+                it.tokens.len(),
+                self.assets.spec.max_seq
+            );
+        }
+        Ok(())
+    }
+
+    /// One stacked forward over a manifest batch bucket, or `None` when no
+    /// batched executable covers this batch shape.
+    fn try_stacked(&mut self, items: &[BatchItem]) -> Result<Option<Vec<Vec<TokenSignals>>>> {
+        if items.len() < 2 || self.assets.batch_exes.is_empty() {
+            return Ok(None);
+        }
+        let assets = self.assets.clone();
+        // the manifest's batch ladder is authoritative: an executable
+        // outside it (or a ladder entry with no executable) is never used
+        let Some(bb) = assets
+            .spec
+            .batch_ladder
+            .iter()
+            .copied()
+            .filter(|b| *b >= items.len() && assets.batch_exes.contains_key(b))
+            .min()
+        else {
+            return Ok(None);
+        };
+        let cache = &assets.batch_exes[&bb];
+        let kmax = items.iter().map(|it| it.tokens.len()).max().unwrap_or(0);
+        let Ok(kb) = cache.bucket_for(kmax) else {
+            return Ok(None);
+        };
+        let exe = cache.get(kb)?;
+
+        // stage tokens [bb*kb] and starts [bb]; pad lanes replay lane 0 at
+        // start 0 and their outputs are discarded
+        let mut padded = vec![0i32; bb * kb];
+        let mut starts = vec![0i32; bb];
+        for (lane, it) in items.iter().enumerate() {
+            for (dst, &t) in padded[lane * kb..(lane + 1) * kb].iter_mut().zip(&it.tokens) {
+                *dst = t as i32;
+            }
+            starts[lane] = it.start as i32;
+        }
+        let toks_buf = assets.runtime.i32_to_device(&padded, &[bb * kb])?;
+        let starts_buf = assets.runtime.i32_to_device(&starts, &[bb])?;
+
+        let mut new_worlds: Vec<xla::PjRtBuffer> = {
+            let first = &self.seqs[&items[0].seq];
+            let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(bb + 3);
+            args.push(&assets.weights.0);
+            for it in items {
+                args.push(self.seqs[&it.seq].world_ref());
+            }
+            for _ in items.len()..bb {
+                args.push(first.world_ref());
+            }
+            args.push(&toks_buf);
+            args.push(&starts_buf);
+            let mut result = exe
+                .0
+                .execute_b(&args)
+                .with_context(|| format!("executing {} batch{bb}x{kb}", assets.spec.name))?;
+            result.pop().ok_or_else(|| anyhow::anyhow!("no batched output buffers"))?
+        };
+        anyhow::ensure!(
+            new_worlds.len() >= items.len(),
+            "batched executable returned {} worlds for {} lanes",
+            new_worlds.len(),
+            items.len()
+        );
+        new_worlds.truncate(items.len());
+
+        self.cost.calls += 1;
+        self.cost.rows += items.iter().map(|it| it.tokens.len() as u64).sum::<u64>();
+        self.cost.padded_rows += (bb * kb) as u64;
+
+        let mut rows = Vec::with_capacity(items.len());
+        for (it, world) in items.iter().zip(new_worlds) {
+            let m = self.seqs.get_mut(&it.seq).expect("aligned above");
+            m.adopt_world(world, it.start + it.tokens.len());
+            rows.push(m.extract_signals(it.tokens.len())?);
+        }
+        Ok(Some(rows))
+    }
+}
+
+impl LanguageModel for PjrtBatchVerifier {
+    fn name(&self) -> String {
+        format!("pjrt-batch:{}", self.assets.spec.name)
+    }
+
+    fn reset(&mut self) {
+        // drop every resident sequence world (fresh engine)
+        self.seqs.clear();
+    }
+
+    fn block(&mut self, _tokens: &[u32], _start: usize) -> Result<Vec<TokenSignals>> {
+        anyhow::bail!("PjrtBatchVerifier is batch-only: use block_batch")
+    }
+
+    fn block_batch(&mut self, items: &[BatchItem]) -> Result<Vec<Vec<TokenSignals>>> {
+        anyhow::ensure!(!items.is_empty(), "empty batch");
+        for it in items {
+            anyhow::ensure!(!it.tokens.is_empty(), "empty block in batch (seq {})", it.seq);
+        }
+        self.align(items)?;
+        if let Some(rows) = self.try_stacked(items)? {
+            return Ok(rows);
+        }
+        // fallback: per-sequence forwards through the resident models
+        let mut out = Vec::with_capacity(items.len());
+        for it in items {
+            let m = self.seqs.get_mut(&it.seq).expect("aligned above");
+            out.push(m.block(&it.tokens, it.start)?);
+        }
+        Ok(out)
+    }
+
+    fn cur(&self) -> usize {
+        0
+    }
+
+    fn rollback(&mut self, _to: usize) {}
+
+    fn max_seq(&self) -> usize {
+        self.assets.spec.max_seq
+    }
+
+    fn cost(&self) -> ModelCost {
+        let mut c = self.cost;
+        for m in self.seqs.values() {
+            let mc = m.cost();
+            c.calls += mc.calls;
+            c.rows += mc.rows;
+            c.padded_rows += mc.padded_rows;
+        }
+        c
     }
 
     fn rel_cost(&self) -> f64 {

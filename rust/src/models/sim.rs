@@ -19,11 +19,32 @@
 //! 32-way distribution so every invariant (top1 ≥ top2, margin, entropy
 //! consistency) holds exactly.
 
-use crate::models::traits::{LanguageModel, ModelCost};
+use crate::models::traits::{BatchItem, LanguageModel, ModelCost};
 use crate::signals::TokenSignals;
 
+/// Size of the simulator's synthetic vocabulary (ids 0..SIM_VOCAB; 0-2 are
+/// reserved for PAD/BOS/EOS as in the artifact tokenizer).
 pub const SIM_VOCAB: u32 = 32;
 const SIM_MAX_SEQ: usize = 4096;
+
+/// Shape buckets the simulated batched forward pads to — the sim analog of
+/// the manifest's batch/sequence ladders (docs/ARCHITECTURE.md §4). Both
+/// the batch dimension and the row dimension round up to the next bucket,
+/// and the waste lands in `ModelCost::padded_rows` so the engine's
+/// pad-waste gauge is exercised without PJRT.
+pub const SIM_BATCH_BUCKETS: [usize; 5] = [1, 2, 4, 8, 16];
+
+/// Smallest simulator bucket ≥ `n` (saturating at the largest bucket times
+/// a power of two, so arbitrarily large batches still bucket).
+pub fn sim_bucket(n: usize) -> usize {
+    for &b in &SIM_BATCH_BUCKETS {
+        if b >= n {
+            return b;
+        }
+    }
+    // beyond the ladder: next power of two keeps padding bounded < 2x
+    n.next_power_of_two()
+}
 
 /// Difficulty profile of a workload category.
 #[derive(Clone, Copy, Debug)]
@@ -35,10 +56,12 @@ pub struct CategoryProfile {
     pub decay: f32,
     /// probability of a "hard burst" position (names, numbers, ...)
     pub burst_p: f32,
+    /// additive difficulty of a burst position
     pub burst_mag: f32,
 }
 
 impl CategoryProfile {
+    /// Difficulty profile for a TinyBench-style category label.
     pub fn for_category(cat: &str) -> CategoryProfile {
         match cat {
             "coding" => CategoryProfile { base: 0.06, decay: 0.004, burst_p: 0.04, burst_mag: 0.45 },
@@ -82,11 +105,14 @@ fn unit(seed: u64, p: u64, salt: u64) -> f64 {
 /// Shared per-request scenario: the script + difficulty.
 #[derive(Clone, Copy, Debug)]
 pub struct Scenario {
+    /// request seed (a pure function of the prompt, engine/request.rs)
     pub seed: u64,
+    /// per-category difficulty profile
     pub profile: CategoryProfile,
 }
 
 impl Scenario {
+    /// Scenario for one request: its seed plus the category profile.
     pub fn new(seed: u64, category: &str) -> Scenario {
         Scenario { seed, profile: CategoryProfile::for_category(category) }
     }
@@ -109,6 +135,7 @@ pub struct SimModel {
 }
 
 impl SimModel {
+    /// The simulated target model for `scenario`.
     pub fn target(scenario: Scenario) -> SimModel {
         SimModel {
             scenario,
@@ -140,9 +167,18 @@ impl SimModel {
     }
 
     /// Signals for the prediction of position `p` (i.e. after processing
-    /// the input at p-1).
+    /// the input at p-1) under this model's *current* scenario.
     fn row_for(&self, p: usize) -> TokenSignals {
-        let s = &self.scenario;
+        let s = self.scenario;
+        self.row_at(&s, p)
+    }
+
+    /// Signals for position `p` under an explicit scenario — the
+    /// scenario-parametric core shared by the single-sequence path and
+    /// the batched verification path (rows are a pure function of
+    /// (scenario, quality, position), which is what makes batched and
+    /// sequential verification byte-identical).
+    fn row_at(&self, s: &Scenario, p: usize) -> TokenSignals {
         let tau = s.profile.tau(s.seed, p);
         let script_tok = s.script(p);
         let (agree, conf) = match self.quality {
@@ -202,6 +238,33 @@ impl LanguageModel for SimModel {
         self.cur = start + tokens.len();
         // row i = prediction for position start+i+1
         Ok((0..tokens.len()).map(|i| self.row_for(start + i + 1)).collect())
+    }
+
+    /// Native batched forward: one padded pass over every item
+    /// (docs/ARCHITECTURE.md §4). Rows are a pure function of
+    /// (scenario, position), so the output is byte-identical to feeding
+    /// each item through `block` on its own slot model; only the cost
+    /// accounting differs — one call, shape-bucketed padding.
+    fn block_batch(&mut self, seqs: &[BatchItem]) -> anyhow::Result<Vec<Vec<TokenSignals>>> {
+        anyhow::ensure!(!seqs.is_empty(), "empty batch");
+        let kmax = seqs.iter().map(|s| s.tokens.len()).max().unwrap_or(0);
+        anyhow::ensure!(kmax > 0, "empty block in batch");
+        // pad batch and row dimensions to the sim bucket ladder; the
+        // waste is what the engine's pad-waste gauge reads
+        let bb = sim_bucket(seqs.len());
+        let kb = sim_bucket(kmax);
+        self.cost.calls += 1;
+        self.cost.rows += seqs.iter().map(|s| s.tokens.len() as u64).sum::<u64>();
+        self.cost.padded_rows += (bb * kb) as u64;
+        Ok(seqs
+            .iter()
+            .map(|item| {
+                let sc = Scenario::new(item.seed, &item.category);
+                (0..item.tokens.len())
+                    .map(|i| self.row_at(&sc, item.start + i + 1))
+                    .collect()
+            })
+            .collect())
     }
 
     fn cur(&self) -> usize {
@@ -335,6 +398,61 @@ mod tests {
         for r in rows {
             assert!(r.top1 > 0.5);
         }
+    }
+
+    #[test]
+    fn batched_rows_match_sequential_rows() {
+        // the batched verifier path must be byte-identical to driving each
+        // sequence's own slot model through block()
+        let items: Vec<BatchItem> = (0..3)
+            .map(|i| BatchItem {
+                seq: i,
+                seed: 1000 + i as u64,
+                category: ["coding", "qa", "writing"][i].into(),
+                tokens: vec![3 + i as u32; 4 + i],
+                start: 2 * i,
+            })
+            .collect();
+        let mut verifier = SimModel::target(Scenario::new(0, "qa"));
+        let batched = verifier.block_batch(&items).unwrap();
+        for (item, rows) in items.iter().zip(&batched) {
+            let mut solo = SimModel::target(Scenario::new(item.seed, &item.category));
+            // reach the item's start position contiguously, then feed it
+            if item.start > 0 {
+                solo.block(&vec![3; item.start], 0).unwrap();
+            }
+            let want = solo.block(&item.tokens, item.start).unwrap();
+            assert_eq!(rows, &want, "seq {} diverged", item.seq);
+        }
+    }
+
+    #[test]
+    fn batched_cost_counts_one_call_and_padding() {
+        let items: Vec<BatchItem> = (0..3)
+            .map(|i| BatchItem {
+                seq: i,
+                seed: i as u64,
+                category: "qa".into(),
+                tokens: vec![3; 5],
+                start: 0,
+            })
+            .collect();
+        let mut verifier = SimModel::target(Scenario::new(0, "qa"));
+        verifier.block_batch(&items).unwrap();
+        let c = verifier.cost();
+        assert_eq!(c.calls, 1, "one batched forward, not one per item");
+        assert_eq!(c.rows, 15);
+        // batch 3 -> bucket 4, rows 5 -> bucket 8
+        assert_eq!(c.padded_rows, 32);
+        assert!(verifier.block_batch(&[]).is_err());
+    }
+
+    #[test]
+    fn sim_bucket_ladder() {
+        assert_eq!(sim_bucket(1), 1);
+        assert_eq!(sim_bucket(3), 4);
+        assert_eq!(sim_bucket(16), 16);
+        assert_eq!(sim_bucket(17), 32);
     }
 
     #[test]

@@ -2,6 +2,18 @@
 //! LMs from artifacts/) and the simulator backend (synthetic correlated
 //! streams). The speculative-decoding session (spec/session.rs) is written
 //! against this trait only.
+//!
+//! Two entry points exist for running a forward pass:
+//!
+//! * [`LanguageModel::block`] — the single-sequence hot path: feed a
+//!   contiguous token block at the model's cursor, get one signal row per
+//!   token back.
+//! * [`LanguageModel::block_batch`] — the cross-session batched path
+//!   (docs/ARCHITECTURE.md §4): several *different* sequences' blocks are
+//!   coalesced into one target forward. Backends with a native batched
+//!   implementation (the simulator, the PJRT batch verifier) override it;
+//!   the default loops [`block`](LanguageModel::block) so single-sequence
+//!   backends keep working unchanged.
 
 use crate::signals::TokenSignals;
 
@@ -16,6 +28,38 @@ pub struct ModelCost {
     pub padded_rows: u64,
 }
 
+/// One sequence's contribution to a batched forward
+/// ([`LanguageModel::block_batch`]).
+///
+/// A `BatchItem` is self-describing: it carries the stable per-sequence
+/// key (`seq`, the engine's KV-slot id), the scenario rebind for
+/// stateless backends (`seed`/`category`, mirroring
+/// [`LanguageModel::begin_request`]), and the contiguous token block
+/// (`tokens` at absolute position `start`). The caller — normally the
+/// engine's verification batcher (`engine/batcher.rs`) — guarantees the
+/// per-sequence contiguity invariant: `start` equals the sequence's
+/// committed cursor, exactly as for [`LanguageModel::block`].
+#[derive(Clone, Debug)]
+pub struct BatchItem {
+    /// stable per-sequence key (the engine's KV-slot id); KV-cache
+    /// backends key their resident per-sequence state on it
+    pub seq: usize,
+    /// scenario seed (pure function of the prompt; drives the simulator)
+    pub seed: u64,
+    /// workload category (drives the simulator's difficulty profile)
+    pub category: String,
+    /// contiguous token block to feed
+    pub tokens: Vec<u32>,
+    /// absolute position of `tokens[0]` — must equal the sequence cursor
+    pub start: usize,
+}
+
+/// The model interface the speculative-decoding session loop drives.
+///
+/// Implementors: `PjrtModel` (artifact-backed tiny LMs), `SimModel`
+/// (synthetic correlated streams), `PjrtBatchVerifier` (multi-sequence
+/// PJRT verification) and the engine's `BatchedTarget` submit/await
+/// handle.
 pub trait LanguageModel: Send {
     /// Human-readable backend/model identifier.
     fn name(&self) -> String;
@@ -35,6 +79,28 @@ pub trait LanguageModel: Send {
     /// row i describes the model's next-token distribution after input
     /// position start+i. Advances `cur` by tokens.len().
     fn block(&mut self, tokens: &[u32], start: usize) -> anyhow::Result<Vec<TokenSignals>>;
+
+    /// Run one forward over several sequences' blocks at once, returning
+    /// each item's signal rows in input order (the cross-session batched
+    /// verification entry point, docs/ARCHITECTURE.md §4).
+    ///
+    /// The default implementation processes items one at a time through
+    /// [`block`](LanguageModel::block), rolling the cursor back to each
+    /// item's `start` first — correct for streams drawn from a *single*
+    /// sequence (or a backend whose `begin_request` leaves the cursor in
+    /// place), and an explicit contiguity error otherwise. Backends with
+    /// true multi-sequence state override it: the simulator computes every
+    /// row in one padded pass, and the PJRT batch verifier keeps one
+    /// resident world per `BatchItem::seq` and executes shape-bucketed
+    /// stacked forwards.
+    fn block_batch(&mut self, seqs: &[BatchItem]) -> anyhow::Result<Vec<Vec<TokenSignals>>> {
+        let mut out = Vec::with_capacity(seqs.len());
+        for item in seqs {
+            self.rollback(item.start);
+            out.push(self.block(&item.tokens, item.start)?);
+        }
+        Ok(out)
+    }
 
     /// Number of tokens processed as inputs so far (== next input position).
     fn cur(&self) -> usize;

@@ -11,6 +11,7 @@
 use super::StopPolicy;
 use crate::signals::TokenSignals;
 
+/// AdaEDL: entropy lower bound on acceptance with adaptive threshold λ.
 #[derive(Clone, Debug)]
 pub struct AdaEdl {
     /// entropy scale γ_e (the paper overloads γ; this is AdaEDL's own
@@ -18,8 +19,11 @@ pub struct AdaEdl {
     pub gamma_e: f32,
     /// target acceptance ratio α
     pub alpha: f32,
+    /// EMA factor of the tracked acceptance rate
     pub beta1: f32,
+    /// EMA factor of the λ drift
     pub beta2: f32,
+    /// λ drift step per verification round
     pub epsilon: f32,
     lambda0: f32,
     lambda: f32,
@@ -27,6 +31,7 @@ pub struct AdaEdl {
 }
 
 impl AdaEdl {
+    /// AdaEDL with entropy scale `gamma_e` and initial threshold `lambda0`.
     pub fn new(gamma_e: f32, lambda0: f32) -> Self {
         AdaEdl {
             gamma_e,
@@ -40,6 +45,7 @@ impl AdaEdl {
         }
     }
 
+    /// Current adaptive threshold λ.
     pub fn lambda(&self) -> f32 {
         self.lambda
     }

@@ -5,8 +5,10 @@
 use super::StopPolicy;
 use crate::signals::TokenSignals;
 
+/// Stop when the top-1/top-2 probability gap collapses below `h`.
 #[derive(Clone, Debug)]
 pub struct LogitMargin {
+    /// margin threshold
     pub h: f32,
 }
 

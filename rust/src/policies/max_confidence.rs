@@ -4,8 +4,10 @@
 use super::StopPolicy;
 use crate::signals::TokenSignals;
 
+/// Stop when p(top-1) drops below `h`.
 #[derive(Clone, Debug)]
 pub struct MaxConfidence {
+    /// confidence threshold
     pub h: f32,
 }
 

@@ -25,6 +25,7 @@ pub use svip_diff::SvipDiff;
 
 use crate::signals::TokenSignals;
 
+/// A stop heuristic: one decision per drafted token.
 pub trait StopPolicy: Send {
     /// Short stable identifier (used in reports and bandit arm labels).
     fn name(&self) -> String;

@@ -18,6 +18,7 @@ pub fn default_arms() -> Vec<BoxedPolicy> {
     ]
 }
 
+/// Names of the Table 1 arms, in pool order.
 pub fn arm_names() -> Vec<String> {
     default_arms().iter().map(|a| a.name()).collect()
 }

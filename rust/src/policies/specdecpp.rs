@@ -17,11 +17,13 @@ struct Layer {
     b: Vec<f32>,
 }
 
+/// SpecDec++ acceptance classifier (residual MLP, build-time trained).
 #[derive(Clone, Debug)]
 pub struct SpecDecPP {
     mean: Vec<f32>,
     std: Vec<f32>,
     layers: Vec<Layer>,
+    /// stop when p(accept) falls below this
     pub threshold: f32,
     ema_accept: f32,
 }
@@ -31,6 +33,7 @@ fn silu(x: f32) -> f32 {
 }
 
 impl SpecDecPP {
+    /// Parse classifier weights from the artifact JSON document.
     pub fn from_json(j: &Json) -> Result<SpecDecPP, String> {
         let grab = |k: &str| -> Result<Vec<f32>, String> {
             Ok(j.get(k).ok_or(format!("missing {k}"))?.f64s().iter().map(|&x| x as f32).collect())
@@ -56,6 +59,7 @@ impl SpecDecPP {
         })
     }
 
+    /// Load classifier weights from `artifacts/specdecpp.json`.
     pub fn load(path: &std::path::Path) -> Result<SpecDecPP, String> {
         let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
         SpecDecPP::from_json(&Json::parse(&text)?)

@@ -5,12 +5,15 @@
 use super::StopPolicy;
 use crate::signals::TokenSignals;
 
+/// Draft exactly `k` tokens per session, unconditionally.
 #[derive(Clone, Debug)]
 pub struct StaticLen {
+    /// fixed draft length
     pub k: usize,
 }
 
 impl StaticLen {
+    /// Static-k drafting (k >= 1).
     pub fn new(k: usize) -> Self {
         assert!(k >= 1);
         StaticLen { k }

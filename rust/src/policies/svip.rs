@@ -4,8 +4,10 @@
 use super::StopPolicy;
 use crate::signals::TokenSignals;
 
+/// Stop when sqrt-entropy exceeds `h`.
 #[derive(Clone, Debug)]
 pub struct Svip {
+    /// sqrt-entropy threshold
     pub h: f32,
 }
 

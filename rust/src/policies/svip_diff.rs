@@ -6,8 +6,10 @@
 use super::StopPolicy;
 use crate::signals::TokenSignals;
 
+/// Stop on a sqrt-entropy *spike* larger than `h`.
 #[derive(Clone, Debug)]
 pub struct SvipDiff {
+    /// spike threshold
     pub h: f32,
     prev: Option<f32>,
 }

@@ -5,8 +5,10 @@
 //! consumes only this struct, so the policies are backend-agnostic (PJRT
 //! models and the simulator produce the same shape).
 
+/// Floats per signal row (the L1 kernel's fixed output width).
 pub const SIG_WIDTH: usize = 8;
 
+/// One drafted position's stop-signal row.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct TokenSignals {
     /// argmax token id (greedy proposal / greedy verification token)
@@ -28,6 +30,7 @@ pub struct TokenSignals {
 }
 
 impl TokenSignals {
+    /// Parse one 8-float device row.
     pub fn from_row(row: &[f32]) -> TokenSignals {
         debug_assert!(row.len() >= SIG_WIDTH);
         TokenSignals {
@@ -82,6 +85,7 @@ impl TokenSignals {
         }
     }
 
+    /// Serialize back to the 8-float device layout.
     pub fn to_row(&self) -> [f32; SIG_WIDTH] {
         [
             self.argmax as f32,

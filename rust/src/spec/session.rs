@@ -6,6 +6,13 @@
 //! serves both the single-threaded harness (`StopController`) and the
 //! multi-worker engine (`bandit::SessionController` over a shared bandit,
 //! DESIGN.md §2).
+//!
+//! The *target* side is equally polymorphic: in the batched serving
+//! engine, `target` is an `engine::BatchedTarget` handle, so the single
+//! verification `block` per round becomes a submit/await against the
+//! cross-session batcher (docs/ARCHITECTURE.md §4) — the loop itself is
+//! byte-identical either way, which is what keeps batched and sequential
+//! outputs equal.
 
 use std::time::Instant;
 
@@ -15,11 +22,15 @@ use crate::util::Rng;
 
 use super::stop::DecodeControl;
 
+/// End-of-sequence token id (shared by the sim and artifact tokenizers).
 pub const EOS: u32 = 2;
+/// Beginning-of-sequence token id.
 pub const BOS: u32 = 1;
 
+/// Generation limits and switches for one request.
 #[derive(Clone, Copy, Debug)]
 pub struct GenConfig {
+    /// maximum tokens to generate past the prompt
     pub max_new: usize,
     /// max draft length γ (128 in the paper's dynamic setting)
     pub gamma_max: usize,
@@ -35,35 +46,49 @@ impl Default for GenConfig {
     }
 }
 
+/// Outcome of one draft/verify round.
 #[derive(Clone, Debug, Default)]
 pub struct RoundStat {
+    /// proposals drafted this round
     pub drafted: usize,
+    /// proposals the target accepted (the bonus token is extra)
     pub accepted: usize,
     /// bandit arm that drove this session (Seq controllers only)
     pub arm: Option<usize>,
+    /// wall time of the draft phase
     pub draft_ns: u64,
+    /// wall time of the verification phase (includes batcher queueing in
+    /// the batched engine)
     pub verify_ns: u64,
+    /// per-proposal signal rows (kept only when `collect_signals` is on)
     pub signals: Vec<TokenSignals>,
 }
 
+/// One finished generation: the committed sequence plus round stats.
 #[derive(Clone, Debug, Default)]
 pub struct GenResult {
     /// full committed sequence (prompt + generation)
     pub tokens: Vec<u32>,
+    /// length of the prompt prefix inside `tokens`
     pub prompt_len: usize,
+    /// one entry per draft/verify round
     pub rounds: Vec<RoundStat>,
+    /// decode wall time
     pub wall_ns: u64,
 }
 
 impl GenResult {
+    /// The generated suffix (everything past the prompt).
     pub fn new_tokens(&self) -> &[u32] {
         &self.tokens[self.prompt_len..]
     }
 
+    /// Total proposals drafted across all rounds.
     pub fn drafted(&self) -> usize {
         self.rounds.iter().map(|r| r.drafted).sum()
     }
 
+    /// Total proposals accepted across all rounds.
     pub fn accepted(&self) -> usize {
         self.rounds.iter().map(|r| r.accepted).sum()
     }

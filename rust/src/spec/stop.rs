@@ -12,10 +12,15 @@ use crate::policies::StopPolicy;
 use crate::signals::TokenSignals;
 use crate::util::Rng;
 
+/// The harness/CLI stop controller (one owner, one decode loop).
 pub enum StopController {
+    /// fixed-length drafting (the Static-γ baseline)
     Static(StaticLen),
+    /// a single tuned stop policy
     Policy(BoxedPolicy),
+    /// sequence-level TapOut bandit
     Seq(SeqBandit),
+    /// token-level TapOut bandit ladder
     Token(TokenBandit),
 }
 
@@ -71,15 +76,36 @@ impl DecodeControl for StopController {
 /// the row labels of paper Tables 3-5.
 #[derive(Clone, Debug, PartialEq)]
 pub enum MethodSpec {
+    /// Static-k drafting (vanilla speculative decoding)
     Static(usize),
+    /// AdaEDL with its adaptive λ threshold
     AdaEdl,
+    /// SVIP at threshold h
     Svip(f32),
+    /// Max-Confidence at threshold h
     MaxConf(f32),
+    /// Logit-Margin at threshold h
     LogitMargin(f32),
+    /// SVIP-Difference at threshold h
     SvipDiff(f32),
-    SpecDecPP(String), // path to specdecpp.json
-    SeqBandit { kind: String, reward: Reward, multi_arms: bool },
-    TokenBandit { kind: String, multi_arms: bool },
+    /// SpecDec++ classifier (payload: path to specdecpp.json)
+    SpecDecPP(String),
+    /// sequence-level TapOut bandit over the arm pool
+    SeqBandit {
+        /// bandit kind ("ucb1" | "ucb-tuned" | "ts-gaussian")
+        kind: String,
+        /// reward formulation
+        reward: Reward,
+        /// use the 13-arm App. A.2 ablation pool
+        multi_arms: bool,
+    },
+    /// token-level TapOut bandit ladder
+    TokenBandit {
+        /// bandit kind ("ucb1" | "ts-beta")
+        kind: String,
+        /// use the 13-arm App. A.2 ablation pool
+        multi_arms: bool,
+    },
 }
 
 impl MethodSpec {
@@ -125,6 +151,7 @@ impl MethodSpec {
         })
     }
 
+    /// Paper-style row label (Tables 3-5).
     pub fn label(&self) -> String {
         match self {
             MethodSpec::Static(k) => format!("Static-{k}"),
@@ -163,6 +190,7 @@ impl MethodSpec {
         )
     }
 
+    /// Materialize the controller this spec describes.
     pub fn build(&self, gamma_max: usize) -> anyhow::Result<StopController> {
         Ok(match self {
             MethodSpec::Static(k) => StopController::Static(StaticLen::new(*k)),
@@ -192,6 +220,7 @@ impl MethodSpec {
         })
     }
 
+    /// The method names every paper table sweeps.
     pub fn all_paper_methods() -> Vec<&'static str> {
         vec![
             "static-6", "ada-edl", "svip", "max-conf", "seq-ts", "seq-ucb1",
@@ -215,6 +244,7 @@ impl StopController {
         StopController::Policy(Box::new(AlwaysContinue))
     }
 
+    /// A new drafting session begins (bandit arm selection).
     pub fn session_start(&mut self, rng: &mut Rng) {
         match self {
             StopController::Static(_) => {}
@@ -224,6 +254,7 @@ impl StopController {
         }
     }
 
+    /// Stop drafting after the proposal at `idx`?
     pub fn should_stop(&mut self, sig: &TokenSignals, idx: usize, rng: &mut Rng) -> bool {
         match self {
             StopController::Static(p) => p.should_stop(sig, idx),
@@ -233,6 +264,7 @@ impl StopController {
         }
     }
 
+    /// Deliver a session's verification outcome.
     pub fn on_verify(&mut self, accepted: usize, drafted: usize) {
         match self {
             StopController::Static(_) => {}
@@ -242,6 +274,7 @@ impl StopController {
         }
     }
 
+    /// A new request begins (per-request state resets; learning persists).
     pub fn reset_request(&mut self) {
         match self {
             StopController::Static(_) => {}
@@ -259,6 +292,7 @@ impl StopController {
         }
     }
 
+    /// Arm driving the current session (Seq granularity only).
     pub fn current_arm(&self) -> Option<usize> {
         match self {
             StopController::Seq(c) => Some(c.current_arm()),
@@ -266,12 +300,14 @@ impl StopController {
         }
     }
 
+    /// Toggle per-session arm-value snapshots (Figs. 5-6).
     pub fn set_track_history(&mut self, on: bool) {
         if let StopController::Seq(c) = self {
             c.track_history = on;
         }
     }
 
+    /// Recorded arm-value snapshots, if tracking was on (Seq only).
     pub fn value_history(&self) -> Option<&[Vec<f64>]> {
         match self {
             StopController::Seq(c) => Some(&c.value_history),

@@ -1,0 +1,182 @@
+//! Batched-verification integration tests on the simulator backend
+//! (docs/ARCHITECTURE.md §4) — these run everywhere and pin the batcher's
+//! contract:
+//!
+//!   * per-request output is a pure function of the prompt: a 16-request
+//!     burst through the batched engine is byte-identical to the
+//!     sequential (batching-off) engine and to the target-only greedy
+//!     oracle, at every batch window in {1, 4, 8} and worker count;
+//!   * bandit play-count conservation holds unchanged — every drafting
+//!     session's reward lands exactly once no matter how sessions were
+//!     coalesced into forwards;
+//!   * the occupancy/pad-waste gauges observe the batching that happened;
+//!   * decode failures still produce explicit error responses.
+
+use std::time::Duration;
+
+use tapout::engine::{BackendKind, BatchConfig, Engine, EngineConfig, Policy, Request, Response};
+use tapout::models::{sim_encode, Scenario, SimModel};
+use tapout::spec::{greedy, GenConfig, BOS};
+
+const MAX_NEW: usize = 48;
+const TIMEOUT: Duration = Duration::from_secs(120);
+
+fn config(workers: usize, slots: usize, batch: BatchConfig) -> EngineConfig {
+    EngineConfig {
+        method: "seq-ucb1".into(),
+        gamma_max: 64,
+        sched: Policy::Fcfs,
+        slots,
+        workers,
+        backend: BackendKind::sim_default(),
+        verify_batch: batch,
+        ..EngineConfig::default()
+    }
+}
+
+fn burst_prompts(n: usize) -> Vec<String> {
+    (0..n)
+        .map(|i| format!("batched serving request number {i}: explain the result"))
+        .collect()
+}
+
+/// The target-only greedy continuation the engine must reproduce
+/// (identical to the oracle in engine_concurrent.rs).
+fn oracle_tokens(text: &str) -> Vec<u32> {
+    let mut prompt = vec![BOS];
+    prompt.extend(sim_encode(text));
+    let mut req = Request::new(0, text, MAX_NEW);
+    req.prompt = prompt.clone();
+    let mut target = SimModel::target(Scenario::new(req.scenario_seed(), &req.category));
+    let cfg = GenConfig { max_new: MAX_NEW, stop_at_eos: true, ..GenConfig::default() };
+    let r = greedy(&mut target, &prompt, &cfg).unwrap();
+    r.new_tokens().to_vec()
+}
+
+fn collect(rxs: Vec<std::sync::mpsc::Receiver<Response>>) -> Vec<Response> {
+    rxs.into_iter()
+        .map(|rx| rx.recv_timeout(TIMEOUT).expect("response must arrive"))
+        .collect()
+}
+
+#[test]
+fn batched_burst_matches_sequential_engine_at_every_window() {
+    let prompts = burst_prompts(16);
+
+    // reference: the sequential engine (batcher off, one worker)
+    let seq = Engine::start(config(1, 1, BatchConfig::off())).unwrap();
+    let seq_out: Vec<Vec<u32>> = prompts
+        .iter()
+        .map(|p| {
+            let r = seq.submit(p, MAX_NEW).recv_timeout(TIMEOUT).unwrap();
+            assert!(r.is_ok(), "{:?}", r.error);
+            r.result.new_tokens().to_vec()
+        })
+        .collect();
+    seq.shutdown();
+
+    for max_batch in [1usize, 4, 8] {
+        let eng = Engine::start(config(
+            4,
+            4,
+            BatchConfig { max_batch, window_us: 200 },
+        ))
+        .unwrap();
+        let rxs: Vec<_> = prompts.iter().map(|p| eng.submit(p, MAX_NEW)).collect();
+        let responses = collect(rxs);
+
+        let mut total_sessions = 0u64;
+        for (i, r) in responses.iter().enumerate() {
+            assert!(r.is_ok(), "window {max_batch} request {i} failed: {:?}", r.error);
+            assert_eq!(
+                r.result.new_tokens(),
+                &seq_out[i][..],
+                "window {max_batch} request {i}: batched output diverged from sequential engine"
+            );
+            assert_eq!(
+                r.result.new_tokens(),
+                &oracle_tokens(&prompts[i])[..],
+                "window {max_batch} request {i}: output diverged from the greedy oracle"
+            );
+            total_sessions += r.result.rounds.len() as u64;
+        }
+
+        // play-count conservation across the batcher: one select + one
+        // update per drafting session, regardless of coalescing
+        assert_eq!(eng.bandit_sessions(), total_sessions, "window {max_batch}");
+        assert_eq!(eng.bandit_updates(), total_sessions, "window {max_batch}");
+        let counts = eng.bandit_counts().expect("seq-ucb1 has a shared bandit");
+        assert_eq!(
+            counts.iter().sum::<u64>(),
+            total_sessions,
+            "window {max_batch}: bandit counts must sum to sessions: {counts:?}"
+        );
+
+        // every verification round went through the batcher
+        use std::sync::atomic::Ordering;
+        let batches = eng.stats.batch.batches.load(Ordering::Relaxed);
+        let coalesced = eng.stats.batch.coalesced.load(Ordering::Relaxed);
+        assert_eq!(coalesced, total_sessions, "window {max_batch}");
+        assert!(batches > 0 && batches <= coalesced, "window {max_batch}");
+        let peak = eng.stats.batch.peak.load(Ordering::Relaxed);
+        assert!(peak <= max_batch, "window {max_batch}: peak {peak} exceeded the window");
+        if max_batch == 1 {
+            assert_eq!(batches, coalesced, "window 1 must not coalesce");
+        }
+        assert!(
+            eng.stats.batch.padded_rows.load(Ordering::Relaxed)
+                >= eng.stats.batch.rows.load(Ordering::Relaxed),
+            "padding can only add rows"
+        );
+        eng.shutdown();
+    }
+}
+
+#[test]
+fn batched_engine_with_more_workers_than_slots() {
+    let eng = Engine::start(config(4, 2, BatchConfig::default())).unwrap();
+    let prompts = burst_prompts(12);
+    let rxs: Vec<_> = prompts.iter().map(|p| eng.submit(p, MAX_NEW)).collect();
+    for (i, r) in collect(rxs).iter().enumerate() {
+        assert!(r.is_ok(), "request {i} failed: {:?}", r.error);
+        assert_eq!(r.result.new_tokens(), &oracle_tokens(&prompts[i])[..]);
+    }
+    assert_eq!(eng.metrics.lock().unwrap().completed, 12);
+    eng.shutdown();
+}
+
+#[test]
+fn batched_decode_failure_is_an_error_response_not_a_hang() {
+    let eng = Engine::start(config(2, 2, BatchConfig::default())).unwrap();
+    // the sim KV cache holds 4096 positions; this prompt cannot fit
+    let oversized = "y".repeat(5000);
+    let r = eng
+        .submit(&oversized, 8)
+        .recv_timeout(TIMEOUT)
+        .expect("failed request must still be answered");
+    assert!(!r.is_ok());
+    assert!(
+        r.error.as_deref().unwrap_or("").contains("prompt too long"),
+        "error should explain the failure: {:?}",
+        r.error
+    );
+    // the engine (and its batcher) keep serving afterwards
+    let ok = eng.submit("follow-up after failure", MAX_NEW).recv_timeout(TIMEOUT).unwrap();
+    assert!(ok.is_ok());
+    eng.shutdown();
+}
+
+#[test]
+fn metrics_json_reports_batch_and_sched_gauges() {
+    let eng = Engine::start(config(2, 2, BatchConfig::default())).unwrap();
+    collect(burst_prompts(6).iter().map(|p| eng.submit(p, MAX_NEW)).collect());
+    let j = eng.metrics_json();
+    let engine = j.get("engine").expect("engine object");
+    let batch = engine.get("batch").expect("batch gauges");
+    assert!(batch.get("batches").unwrap().as_usize().unwrap() > 0);
+    assert!(batch.get("mean_occupancy").unwrap().as_f64().unwrap() >= 1.0);
+    let sched = j.get("sched").expect("sched ledger");
+    assert_eq!(sched.get("in_flight").unwrap().as_usize().unwrap(), 0, "burst fully drained");
+    assert_eq!(sched.get("pending_cost").unwrap().as_usize().unwrap(), 0);
+    eng.shutdown();
+}
