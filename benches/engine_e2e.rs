@@ -8,16 +8,28 @@
 use std::path::Path;
 use std::time::Instant;
 
-use tapout::engine::{BackendKind, BatchConfig, Engine, EngineConfig, Policy};
+use tapout::engine::{BackendKind, BatchConfig, Engine, EngineConfig, FinishStatus, Policy};
 use tapout::harness::{run_method, run_probe, sim_suite, Backend};
 use tapout::models::{LanguageModel, Manifest, ModelAssets, PjrtModel};
 use tapout::runtime::Runtime;
 use tapout::spec::MethodSpec;
 use tapout::util::bench::{bench, fmt_ns, group};
+use tapout::util::Json;
+
+/// Machine-readable serving results are appended here so the perf
+/// trajectory is tracked across PRs (schema below in `serving_scaling`).
+const BENCH_JSON_PATH: &str = "BENCH_serving.json";
 
 fn main() {
     sim_tables();
-    serving_scaling();
+    let mut report = Json::obj();
+    report.set("schema", "tapout.bench.serving.v1");
+    serving_scaling(&mut report);
+    overload_shedding(&mut report);
+    match std::fs::write(BENCH_JSON_PATH, report.render()) {
+        Ok(()) => println!("\n[wrote {BENCH_JSON_PATH}]"),
+        Err(e) => eprintln!("\n[failed to write {BENCH_JSON_PATH}: {e}]"),
+    }
     pjrt_ladder();
 }
 
@@ -30,7 +42,7 @@ fn main() {
 /// speculative decoding), so the comparison isolates engine overhead;
 /// the batched rows also report target-forward amortization (sessions
 /// per forward) — the quantity that buys real hardware batched matmuls.
-fn serving_scaling() {
+fn serving_scaling(report: &mut Json) {
     let fast = std::env::var("TAPOUT_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
     let (n_req, max_new) = if fast { (16, 48) } else { (64, 160) };
     let cats = ["coding", "qa", "writing", "math", "extraction"];
@@ -45,6 +57,7 @@ fn serving_scaling() {
     let mut reference: Vec<Vec<u32>> = Vec::new();
     let mut batched_4w_tok_s = 0.0;
     let mut sequential_4w_tok_s = 0.0;
+    let mut mode_rows: Vec<Json> = Vec::new();
     for (label, batch) in [("sequential", BatchConfig::off()), ("batched", BatchConfig::default())]
     {
         for workers in [1usize, 2, 4] {
@@ -78,9 +91,19 @@ fn serving_scaling() {
                     "{label} workers={workers}: output diverged from sequential 1-worker"
                 );
             }
-            let (new_tokens, sessions) = {
-                let m = eng.metrics.lock().unwrap();
-                (m.new_tokens, eng.bandit_sessions())
+            // latency distributions for the machine-readable report:
+            // TTFT and per-output-token time percentiles per mode/worker
+            let (new_tokens, sessions, lat) = {
+                let mut m = eng.metrics.lock().unwrap();
+                let mut lat = Json::obj();
+                lat.set("ttft_p50_ms", m.ttft_ms.percentile(50.0))
+                    .set("ttft_p95_ms", m.ttft_ms.percentile(95.0))
+                    .set("ttft_p99_ms", m.ttft_ms.percentile(99.0))
+                    .set("tpot_p50_ms", m.tpot_ms.percentile(50.0))
+                    .set("tpot_p95_ms", m.tpot_ms.percentile(95.0))
+                    .set("tpot_p99_ms", m.tpot_ms.percentile(99.0))
+                    .set("e2e_p99_ms", m.total_ms.percentile(99.0));
+                (m.new_tokens, eng.bandit_sessions(), lat)
             };
             if workers == 1 && batch.max_batch == 0 {
                 baseline_ns = elapsed_ns;
@@ -116,6 +139,13 @@ fn serving_scaling() {
                 baseline_ns / elapsed_ns,
                 sessions,
             );
+            let mut row = Json::obj();
+            row.set("mode", label)
+                .set("workers", workers)
+                .set("throughput_tok_s", tok_s)
+                .set("wall_ms", elapsed_ns / 1e6)
+                .set("latency", lat);
+            mode_rows.push(row);
             eng.shutdown();
         }
     }
@@ -124,6 +154,71 @@ fn serving_scaling() {
          amortize per-call dispatch)",
         batched_4w_tok_s / sequential_4w_tok_s.max(1e-9)
     );
+    report
+        .set("requests", n_req)
+        .set("max_new", max_new)
+        .set("modes", mode_rows);
+}
+
+/// Shed rate at 2× overload: the engine's admission capacity is the
+/// queue bound plus one in-flight request per worker; a burst of twice
+/// that must shed roughly half with 429s while everything admitted still
+/// completes correctly. The shed rate lands in `BENCH_serving.json`.
+fn overload_shedding(report: &mut Json) {
+    let workers = 2usize;
+    let max_queue = 8usize;
+    let capacity = max_queue + workers;
+    let burst = 2 * capacity;
+
+    group(&format!(
+        "admission control: {burst}-request burst into capacity {capacity} (2x overload)"
+    ));
+    let eng = Engine::start(EngineConfig {
+        method: "seq-ucb1".into(),
+        gamma_max: 128,
+        sched: Policy::Fcfs,
+        slots: workers,
+        workers,
+        backend: BackendKind::sim_default(),
+        verify_batch: BatchConfig::default(),
+        max_queue,
+        ..EngineConfig::default()
+    })
+    .unwrap();
+    let rxs: Vec<_> = (0..burst)
+        .map(|i| eng.submit(&format!("overload burst request {i} body"), 96))
+        .collect();
+    let mut done = 0usize;
+    let mut rejected = 0usize;
+    for rx in rxs {
+        let r = rx.recv().unwrap();
+        match r.status {
+            FinishStatus::Rejected => rejected += 1,
+            _ if r.is_ok() => done += 1,
+            other => panic!("unexpected terminal status under overload: {other:?}"),
+        }
+    }
+    let shed_rate = rejected as f64 / burst as f64;
+    println!(
+        "  {done} completed, {rejected} shed of {burst}  -> shed rate {:.0}%  \
+         (queue bound {max_queue}, {workers} workers)",
+        shed_rate * 100.0
+    );
+    assert_eq!(done + rejected, burst, "every request gets a terminal reply");
+    // the queue bound is a hard floor on admissions (workers drain
+    // concurrently, so the real count is usually higher)
+    assert!(done >= max_queue, "at least the queue bound must be admitted: {done}");
+    eng.shutdown();
+
+    let mut o = Json::obj();
+    o.set("workers", workers)
+        .set("max_queue", max_queue)
+        .set("overload_factor", 2.0)
+        .set("submitted", burst)
+        .set("completed", done)
+        .set("rejected", rejected)
+        .set("shed_rate", shed_rate);
+    report.set("overload", o);
 }
 
 /// One bench per paper artifact, on the simulator backend (the controller

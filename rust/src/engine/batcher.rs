@@ -25,6 +25,15 @@
 //! Latency: the window only applies while *more* sessions could join —
 //! the batcher stops waiting as soon as it holds one job per in-flight
 //! decode, so a single-worker engine never pays the window at all.
+//!
+//! Cancellation (docs/ARCHITECTURE.md §10): a job may carry its
+//! request's [`CancelFlag`]. The batcher drops a cancelled session's
+//! pending seat instead of verifying it — the job is answered with an
+//! error immediately (unblocking the worker so it can report
+//! `Cancelled` and release its KV slot), it never occupies a batch row,
+//! and the fill wait is sliced so a session that stops submitting after
+//! cancellation can only stall the window by one slice, not the whole
+//! `window_us`.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -37,6 +46,12 @@ use crate::models::{BatchItem, LanguageModel, ModelCost};
 use crate::signals::TokenSignals;
 
 use super::metrics::EngineStats;
+use super::request::CancelFlag;
+
+/// Upper bound on one slice of the fill wait: between slices the batcher
+/// re-checks the in-flight count and sheds cancelled seats, so a vanished
+/// session stalls a filling batch by at most this long.
+const FILL_SLICE: Duration = Duration::from_millis(5);
 
 /// Verification-batching knobs (`EngineConfig::verify_batch`).
 #[derive(Clone, Copy, Debug)]
@@ -75,7 +90,22 @@ impl BatchConfig {
 /// every job of the batch.
 struct BatchJob {
     item: BatchItem,
+    /// the owning request's cancellation flag, when the session wants its
+    /// seat dropped on cancel (engine decode path)
+    cancel: Option<CancelFlag>,
     reply: Sender<Result<Vec<TokenSignals>, String>>,
+}
+
+impl BatchJob {
+    fn is_cancelled(&self) -> bool {
+        self.cancel.as_ref().is_some_and(|c| c.is_cancelled())
+    }
+
+    /// Answer a cancelled job without verifying it (the worker translates
+    /// this into a `Cancelled` terminal reply, not a decode failure).
+    fn drop_seat(self) {
+        let _ = self.reply.send(Err("verification dropped: request cancelled".into()));
+    }
 }
 
 enum BatchMsg {
@@ -104,11 +134,13 @@ impl BatcherHandle {
     }
 
     /// Submit one verification step and block until its rows scatter
-    /// back (the session-side await).
-    fn submit(&self, item: BatchItem) -> Result<Vec<TokenSignals>> {
+    /// back (the session-side await). A `cancel` flag lets the batcher
+    /// drop this session's seat instead of verifying it once the flag is
+    /// set.
+    fn submit(&self, item: BatchItem, cancel: Option<CancelFlag>) -> Result<Vec<TokenSignals>> {
         let (rtx, rrx) = channel();
         self.tx
-            .send(BatchMsg::Run(BatchJob { item, reply: rtx }))
+            .send(BatchMsg::Run(BatchJob { item, cancel, reply: rtx }))
             .map_err(|_| anyhow::anyhow!("verification batcher is gone"))?;
         match rrx.recv() {
             Ok(Ok(rows)) => Ok(rows),
@@ -170,9 +202,13 @@ fn batcher_loop(
 ) {
     let window = Duration::from_micros(cfg.window_us);
     loop {
-        let first = match rx.recv() {
-            Ok(BatchMsg::Run(job)) => job,
-            Ok(BatchMsg::Shutdown) | Err(_) => return,
+        // pull the first live job; cancelled seats are dropped on arrival
+        let first = loop {
+            match rx.recv() {
+                Ok(BatchMsg::Run(job)) if job.is_cancelled() => job.drop_seat(),
+                Ok(BatchMsg::Run(job)) => break job,
+                Ok(BatchMsg::Shutdown) | Err(_) => return,
+            }
         };
         let mut jobs = vec![first];
         let mut stop_after = false;
@@ -180,7 +216,9 @@ fn batcher_loop(
         let deadline = t_fill + window;
         while jobs.len() < cfg.max_batch {
             // every in-flight decode already has a job here: executing
-            // now beats waiting for sessions that are still drafting
+            // now beats waiting for sessions that are still drafting.
+            // Re-checked every fill slice, so a session that exits
+            // (cancelled / expired) releases the window promptly.
             if jobs.len() >= in_flight.load(Ordering::Relaxed) {
                 break;
             }
@@ -188,14 +226,31 @@ fn batcher_loop(
             if now >= deadline {
                 break;
             }
-            match rx.recv_timeout(deadline - now) {
+            match rx.recv_timeout((deadline - now).min(FILL_SLICE)) {
+                Ok(BatchMsg::Run(job)) if job.is_cancelled() => job.drop_seat(),
                 Ok(BatchMsg::Run(job)) => jobs.push(job),
                 Ok(BatchMsg::Shutdown) => {
                     stop_after = true;
                     break;
                 }
-                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
+                // a slice timeout just loops back to re-check the fill
+                // conditions; a real window expiry exits above
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => break,
             }
+        }
+        // final sweep: a seat whose request was cancelled while the
+        // window filled is dropped rather than verified
+        let (live, dead): (Vec<_>, Vec<_>) = jobs.into_iter().partition(|j| !j.is_cancelled());
+        for job in dead {
+            job.drop_seat();
+        }
+        let jobs = live;
+        if jobs.is_empty() {
+            if stop_after {
+                return;
+            }
+            continue;
         }
         let fill_ns = t_fill.elapsed().as_nanos() as u64;
 
@@ -253,6 +308,7 @@ pub struct BatchedTarget {
     max_seq: usize,
     rel_cost: f64,
     cost: ModelCost,
+    cancel: Option<CancelFlag>,
 }
 
 impl BatchedTarget {
@@ -269,7 +325,15 @@ impl BatchedTarget {
             max_seq,
             rel_cost,
             cost: ModelCost::default(),
+            cancel: None,
         }
+    }
+
+    /// Attach the owning request's cancellation flag so the batcher can
+    /// drop this session's pending seat once the flag is set.
+    pub fn with_cancel(mut self, flag: CancelFlag) -> BatchedTarget {
+        self.cancel = Some(flag);
+        self
     }
 }
 
@@ -297,13 +361,16 @@ impl LanguageModel for BatchedTarget {
             tokens.len(),
             self.max_seq
         );
-        let rows = self.handle.submit(BatchItem {
-            seq: self.seq,
-            seed: self.seed,
-            category: self.category.clone(),
-            tokens: tokens.to_vec(),
-            start,
-        })?;
+        let rows = self.handle.submit(
+            BatchItem {
+                seq: self.seq,
+                seed: self.seed,
+                category: self.category.clone(),
+                tokens: tokens.to_vec(),
+                start,
+            },
+            self.cancel.clone(),
+        )?;
         anyhow::ensure!(
             rows.len() == tokens.len(),
             "batcher returned {} rows for {} tokens",
@@ -416,6 +483,37 @@ mod tests {
         assert_eq!(target.cur(), 2);
         target.rollback(1);
         assert_eq!(target.cur(), 1);
+        batcher.shutdown();
+    }
+
+    #[test]
+    fn cancelled_seat_is_dropped_without_stalling_the_window() {
+        let (batcher, stats) = spawn_sim_batcher(BatchConfig { max_batch: 4, window_us: 500_000 });
+        let handle = batcher.handle();
+        handle.note_decode_start();
+        handle.note_decode_start(); // a second decode is nominally in flight
+
+        let flag = CancelFlag::new();
+        flag.cancel();
+        let mut dead = BatchedTarget::new(0, handle.clone(), 4096, 1.0).with_cancel(flag);
+        dead.begin_request(1, "qa");
+        let t0 = Instant::now();
+        let err = dead.block(&[3], 0);
+        assert!(err.is_err(), "a cancelled seat must not be verified");
+        assert!(
+            t0.elapsed() < Duration::from_millis(400),
+            "dropping the seat must not wait out the 500ms window"
+        );
+        assert_eq!(stats.batch.batches.load(Ordering::Relaxed), 0, "no forward ran");
+        handle.note_decode_end(); // the cancelled decode exits
+
+        // a live session still verifies correctly afterwards
+        let mut live = BatchedTarget::new(1, handle.clone(), 4096, 1.0);
+        live.begin_request(2, "qa");
+        let rows = live.block(&[3, 4], 0).unwrap();
+        let mut solo = SimModel::target(Scenario::new(2, "qa"));
+        assert_eq!(rows, solo.block(&[3, 4], 0).unwrap());
+        handle.note_decode_end();
         batcher.shutdown();
     }
 

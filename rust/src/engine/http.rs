@@ -3,12 +3,22 @@
 //!
 //!   GET  /health              -> {"ok": true, ...}
 //!   GET  /metrics             -> serving metrics + per-worker stats +
-//!                                shared-bandit state
-//!   POST /generate            -> {"prompt": "...", "max_new": 64}
+//!                                lifecycle counters + shared-bandit state
+//!   POST /generate            -> {"prompt": "...", "max_new": 64,
+//!                                 "stream": false, "deadline_ms": 0}
 //!
 //! One thread per connection; decoding parallelism comes from the
-//! engine's worker pool (server.rs), and decode failures surface as a
-//! 500 with an error body.
+//! engine's worker pool (server.rs). Error contract (docs/OPERATIONS.md):
+//! decode failures are a 500 with an error body, an over-size body is a
+//! 413, a shed request (admission control) is a 429 carrying the queue-
+//! wait estimate, and a request that outlives its deadline is a 504.
+//!
+//! With `"stream": true` the reply is a chunked `text/event-stream`: one
+//! `data:` event per committed decode round (ids + text) and a final
+//! `data:` event with `"done": true` and the request summary. A client
+//! that disconnects mid-stream cancels the request at the next round
+//! boundary — its KV slot, batch seat, and queue entry are released
+//! (docs/ARCHITECTURE.md §10).
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -18,7 +28,12 @@ use anyhow::Result;
 
 use crate::util::Json;
 
+use super::request::{FinishStatus, Request, StreamEvent};
 use super::server::Engine;
+
+/// Largest request body accepted before answering 413 (the JSON body of
+/// a generate call is tiny; anything near this is a client bug).
+pub const MAX_BODY_BYTES: usize = 1 << 20;
 
 /// The background HTTP listener (one thread per connection).
 pub struct HttpServer {
@@ -77,17 +92,52 @@ fn handle_conn(stream: TcpStream, engine: &Engine) -> Result<()> {
             content_length = v.trim().parse().unwrap_or(0);
         }
     }
-    let mut body = vec![0u8; content_length.min(1 << 20)];
+
+    // over-size bodies are refused up front — never silently truncated
+    // into confusing JSON decode errors (docs/OPERATIONS.md)
+    if content_length > MAX_BODY_BYTES {
+        let mut o = Json::obj();
+        o.set(
+            "error",
+            format!("body too large: {content_length} bytes (max {MAX_BODY_BYTES})"),
+        );
+        return respond(stream, 413, &o.render());
+    }
+
+    // read the full declared body; read_exact loops over short reads, so
+    // a body split across TCP segments reassembles correctly, and a
+    // connection that closes early is an explicit 400 instead of a
+    // truncated-JSON decode error
+    let mut body = vec![0u8; content_length];
     if content_length > 0 {
-        reader.read_exact(&mut body)?;
+        if let Err(e) = reader.read_exact(&mut body) {
+            let mut o = Json::obj();
+            o.set("error", format!("body ended before content-length ({content_length}): {e}"));
+            return respond(stream, 400, &o.render());
+        }
     }
     let body = String::from_utf8_lossy(&body).to_string();
 
-    let (status, payload) = route(engine, &method, &path, &body);
+    // streaming generate owns the raw stream (chunked SSE writes)
+    if method == "POST" && path == "/generate" {
+        match parse_generate(&body) {
+            Ok((req, stream_mode)) => {
+                return if stream_mode {
+                    stream_generate(stream, engine, req)
+                } else {
+                    let (status, payload) = unary_generate(engine, req);
+                    respond(stream, status, &payload.render())
+                };
+            }
+            Err((status, payload)) => return respond(stream, status, &payload.render()),
+        }
+    }
+
+    let (status, payload) = route(engine, &method, &path);
     respond(stream, status, &payload.render())
 }
 
-fn route(engine: &Engine, method: &str, path: &str, body: &str) -> (u16, Json) {
+fn route(engine: &Engine, method: &str, path: &str) -> (u16, Json) {
     match (method, path) {
         ("GET", "/health") => {
             let mut o = Json::obj();
@@ -97,53 +147,11 @@ fn route(engine: &Engine, method: &str, path: &str, body: &str) -> (u16, Json) {
                 .set("backend", engine.config.backend.label())
                 .set("workers", engine.config.workers)
                 .set("slots", engine.config.slots)
-                .set("max_batch", engine.config.verify_batch.max_batch);
+                .set("max_batch", engine.config.verify_batch.max_batch)
+                .set("max_queue", engine.config.max_queue);
             (200, o)
         }
         ("GET", "/metrics") => (200, engine.metrics_json()),
-        ("POST", "/generate") => match Json::parse(body) {
-            Ok(req) => {
-                let prompt = req.get("prompt").and_then(|x| x.as_str()).unwrap_or("");
-                if prompt.is_empty() {
-                    let mut o = Json::obj();
-                    o.set("error", "missing prompt");
-                    return (400, o);
-                }
-                let max_new = req.get("max_new").and_then(|x| x.as_usize()).unwrap_or(96);
-                let rx = engine.submit(prompt, max_new.min(256));
-                match rx.recv_timeout(std::time::Duration::from_secs(120)) {
-                    Ok(resp) if resp.is_ok() => {
-                        let mut o = Json::obj();
-                        o.set("id", resp.id as usize)
-                            .set("text", resp.text.as_str())
-                            .set("new_tokens", resp.result.new_tokens().len())
-                            .set("mean_accepted", resp.result.mean_accepted())
-                            .set("acceptance_rate", resp.result.acceptance_rate())
-                            .set("decode_ms", resp.result.wall_ns as f64 / 1e6)
-                            .set("tokens_per_sec", resp.tokens_per_sec());
-                        (200, o)
-                    }
-                    Ok(resp) => {
-                        // explicit decode failure: the worker replied with
-                        // an error body instead of dropping the waiter
-                        let mut o = Json::obj();
-                        o.set("id", resp.id as usize)
-                            .set("error", resp.error.as_deref().unwrap_or("decode failed"));
-                        (500, o)
-                    }
-                    Err(_) => {
-                        let mut o = Json::obj();
-                        o.set("error", "generation timed out or failed");
-                        (500, o)
-                    }
-                }
-            }
-            Err(e) => {
-                let mut o = Json::obj();
-                o.set("error", format!("bad json: {e}"));
-                (400, o)
-            }
-        },
         _ => {
             let mut o = Json::obj();
             o.set("error", "not found");
@@ -152,11 +160,171 @@ fn route(engine: &Engine, method: &str, path: &str, body: &str) -> (u16, Json) {
     }
 }
 
+/// Parse a /generate body into a ready-to-submit request plus the
+/// client's streaming preference.
+fn parse_generate(body: &str) -> std::result::Result<(Request, bool), (u16, Json)> {
+    let j = Json::parse(body).map_err(|e| {
+        let mut o = Json::obj();
+        o.set("error", format!("bad json: {e}"));
+        (400, o)
+    })?;
+    let prompt = j.get("prompt").and_then(|x| x.as_str()).unwrap_or("");
+    if prompt.is_empty() {
+        let mut o = Json::obj();
+        o.set("error", "missing prompt");
+        return Err((400, o));
+    }
+    let max_new = j.get("max_new").and_then(|x| x.as_usize()).unwrap_or(96);
+    let mut req = Request::new(0, prompt, max_new.min(256));
+    let deadline_ms = j.get("deadline_ms").and_then(|x| x.as_usize()).filter(|&ms| ms > 0);
+    if let Some(ms) = deadline_ms {
+        req = req.with_deadline_ms(ms as u64);
+    }
+    let stream_mode = j.get("stream").and_then(|x| x.as_bool()).unwrap_or(false);
+    Ok((req, stream_mode))
+}
+
+/// Map a terminal response to its HTTP status (docs/OPERATIONS.md).
+fn status_code(status: FinishStatus) -> u16 {
+    match status {
+        FinishStatus::Done => 200,
+        FinishStatus::Rejected => 429,
+        FinishStatus::Expired => 504,
+        FinishStatus::Failed | FinishStatus::Cancelled => 500,
+    }
+}
+
+fn unary_generate(engine: &Engine, req: Request) -> (u16, Json) {
+    let cancel = req.cancel_flag();
+    let rx = engine.submit_request(req);
+    match rx.recv_timeout(std::time::Duration::from_secs(120)) {
+        Ok(resp) if resp.is_ok() => {
+            let mut o = Json::obj();
+            o.set("id", resp.id as usize)
+                .set("status", resp.status.label())
+                .set("text", resp.text.as_str())
+                .set("new_tokens", resp.result.new_tokens().len())
+                .set("mean_accepted", resp.result.mean_accepted())
+                .set("acceptance_rate", resp.result.acceptance_rate())
+                .set("decode_ms", resp.result.wall_ns as f64 / 1e6)
+                .set("tokens_per_sec", resp.tokens_per_sec());
+            (200, o)
+        }
+        Ok(resp) => {
+            // explicit terminal state: rejected/expired/failed replies
+            // carry their reason instead of dropping the waiter
+            let mut o = Json::obj();
+            o.set("id", resp.id as usize)
+                .set("status", resp.status.label())
+                .set("error", resp.error.as_deref().unwrap_or("decode failed"));
+            (status_code(resp.status), o)
+        }
+        Err(_) => {
+            // give up on the decode, not just the reply: without the
+            // cancel the worker would keep burning its KV slot on a
+            // request nobody is waiting for
+            cancel.cancel();
+            let mut o = Json::obj();
+            o.set("error", "generation timed out or failed");
+            (500, o)
+        }
+    }
+}
+
+/// Serve one streaming generate: chunked transfer, one SSE `data:` event
+/// per committed round, a final `data:` event with the summary. A write
+/// failure (client gone) cancels the request via its shared flag.
+///
+/// The status line is held back until the first engine event: a request
+/// that terminates before any tokens (shed, expired in queue, failed)
+/// gets the documented plain-JSON error reply (429/504/500) instead of
+/// a 200 SSE stream. Once tokens have flowed, the terminal status
+/// arrives in-band in the final `data:` event.
+fn stream_generate(mut stream: TcpStream, engine: &Engine, req: Request) -> Result<()> {
+    let cancel = req.cancel_flag();
+    let rx = engine.submit_request_streaming(req);
+    let first = match rx.recv() {
+        Ok(ev) => ev,
+        Err(_) => {
+            let mut o = Json::obj();
+            o.set("error", "engine unavailable");
+            return respond(stream, 500, &o.render());
+        }
+    };
+    if let StreamEvent::Done(resp) = &first {
+        if resp.status != FinishStatus::Done {
+            let mut o = Json::obj();
+            o.set("id", resp.id as usize)
+                .set("status", resp.status.label())
+                .set("error", resp.error.as_deref().unwrap_or("request did not complete"));
+            return respond(stream, status_code(resp.status), &o.render());
+        }
+    }
+    write!(
+        stream,
+        "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\n\
+         Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
+    )?;
+    let mut pending = Some(first);
+    loop {
+        let event = match pending.take() {
+            Some(ev) => Ok(ev),
+            None => rx.recv(),
+        };
+        match event {
+            Ok(StreamEvent::Tokens { ids, text, .. }) => {
+                let mut o = Json::obj();
+                o.set("ids", ids.iter().map(|&t| Json::from(t)).collect::<Vec<Json>>())
+                    .set("text", text);
+                if write_sse_chunk(&mut stream, &o.render()).is_err() {
+                    // client disconnected: cancel and stop reading; the
+                    // worker sees the flag at the next round boundary
+                    cancel.cancel();
+                    return Ok(());
+                }
+            }
+            Ok(StreamEvent::Done(resp)) => {
+                let mut o = Json::obj();
+                o.set("done", true)
+                    .set("id", resp.id as usize)
+                    .set("status", resp.status.label())
+                    .set("new_tokens", resp.result.new_tokens().len())
+                    .set("mean_accepted", resp.result.mean_accepted())
+                    .set("acceptance_rate", resp.result.acceptance_rate())
+                    .set("decode_ms", resp.result.wall_ns as f64 / 1e6);
+                if let Some(e) = resp.error.as_deref() {
+                    o.set("error", e);
+                }
+                let _ = write_sse_chunk(&mut stream, &o.render());
+                // terminating zero-length chunk ends the response
+                let _ = stream.write_all(b"0\r\n\r\n");
+                let _ = stream.flush();
+                return Ok(());
+            }
+            Err(_) => {
+                // engine side hung up without a Done event (shutdown)
+                let _ = stream.write_all(b"0\r\n\r\n");
+                return Ok(());
+            }
+        }
+    }
+}
+
+/// Write one SSE event (`data: <json>\n\n`) as a single HTTP chunk.
+fn write_sse_chunk(stream: &mut TcpStream, payload: &str) -> std::io::Result<()> {
+    let data = format!("data: {payload}\n\n");
+    write!(stream, "{:X}\r\n{}\r\n", data.len(), data)?;
+    stream.flush()
+}
+
 fn respond(mut stream: TcpStream, status: u16, body: &str) -> Result<()> {
     let reason = match status {
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        504 => "Gateway Timeout",
         _ => "Internal Server Error",
     };
     write!(

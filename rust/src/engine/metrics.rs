@@ -17,7 +17,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use crate::util::stats::Samples;
 use crate::util::Json;
 
-use super::request::Response;
+use super::request::{FinishStatus, Response};
 
 /// Per-request latency/throughput samples (one mutex, taken once per
 /// completed request).
@@ -48,11 +48,18 @@ pub struct EngineMetrics {
 }
 
 impl EngineMetrics {
-    /// Fold one reply into the aggregates (failures only bump `failed`).
+    /// Fold one reply into the aggregates. Failures only bump `failed`;
+    /// cancelled/expired/rejected replies are counted by the lock-free
+    /// lifecycle counters ([`LifecycleStats`]) instead, so the latency
+    /// distributions only ever describe complete decodes.
     pub fn record(&mut self, r: &Response) {
-        if r.error.is_some() {
-            self.failed += 1;
-            return;
+        match r.status {
+            FinishStatus::Done => {}
+            FinishStatus::Failed => {
+                self.failed += 1;
+                return;
+            }
+            FinishStatus::Cancelled | FinishStatus::Expired | FinishStatus::Rejected => return,
         }
         self.completed += 1;
         self.new_tokens += r.result.new_tokens().len() as u64;
@@ -131,8 +138,12 @@ impl EngineMetrics {
             .set("acceptance_rate", self.acceptance_rate())
             .set("throughput_tok_s", self.throughput_tok_s())
             .set("ttft_p50_ms", self.ttft_ms.percentile(50.0))
+            .set("ttft_p95_ms", self.ttft_ms.percentile(95.0))
             .set("ttft_p99_ms", self.ttft_ms.percentile(99.0))
             .set("tpot_mean_ms", self.tpot_ms.mean())
+            .set("tpot_p50_ms", self.tpot_ms.percentile(50.0))
+            .set("tpot_p95_ms", self.tpot_ms.percentile(95.0))
+            .set("tpot_p99_ms", self.tpot_ms.percentile(99.0))
             .set("e2e_p50_ms", self.total_ms.percentile(50.0))
             .set("e2e_p99_ms", self.total_ms.percentile(99.0));
         o
@@ -226,6 +237,32 @@ impl BatchStats {
     }
 }
 
+/// Lock-free counters for the request lifecycle's non-completion exits
+/// (docs/ARCHITECTURE.md §10): cancelled by the client, expired past the
+/// deadline, shed by the admission controller. Surfaced as the
+/// `engine.lifecycle` object in `/metrics` (docs/OPERATIONS.md).
+#[derive(Debug, Default)]
+pub struct LifecycleStats {
+    /// requests the client cancelled (flag or disconnect), queued or
+    /// mid-decode
+    pub cancelled: AtomicU64,
+    /// requests whose absolute deadline passed before completion
+    pub expired: AtomicU64,
+    /// requests shed by admission control (queue full → HTTP 429)
+    pub rejected: AtomicU64,
+}
+
+impl LifecycleStats {
+    /// JSON object for the `/metrics` `engine.lifecycle` field.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("cancelled", self.cancelled.load(Ordering::Relaxed) as usize)
+            .set("expired", self.expired.load(Ordering::Relaxed) as usize)
+            .set("rejected", self.rejected.load(Ordering::Relaxed) as usize);
+        o
+    }
+}
+
 /// Engine-wide atomics: updated by the dispatcher and every worker with
 /// no shared lock; snapshot by readers at any time.
 #[derive(Debug)]
@@ -240,6 +277,8 @@ pub struct EngineStats {
     pub peak_queue_depth: AtomicUsize,
     /// verification-batcher occupancy / pad-waste gauges
     pub batch: BatchStats,
+    /// cancelled / expired / rejected lifecycle exits
+    pub lifecycle: LifecycleStats,
 }
 
 impl EngineStats {
@@ -251,6 +290,7 @@ impl EngineStats {
             queue_depth: AtomicUsize::new(0),
             peak_queue_depth: AtomicUsize::new(0),
             batch: BatchStats::default(),
+            lifecycle: LifecycleStats::default(),
         }
     }
 
@@ -285,7 +325,8 @@ impl EngineStats {
             .set("queue_depth", self.queue_depth.load(Ordering::Relaxed))
             .set("peak_queue_depth", self.peak_queue_depth.load(Ordering::Relaxed))
             .set("utilization", self.utilization(span_ns))
-            .set("batch", self.batch.to_json());
+            .set("batch", self.batch.to_json())
+            .set("lifecycle", self.lifecycle.to_json());
         let per_worker: Vec<Json> = self.workers.iter().map(|w| w.to_json()).collect();
         o.set("per_worker", per_worker);
         o
@@ -337,6 +378,7 @@ mod tests {
             result,
             queue_ns: 1_000_000,
             total_ns: wall_ms * 1_000_000 + 1_000_000,
+            status: FinishStatus::Done,
             error: None,
         }
     }
@@ -368,6 +410,33 @@ mod tests {
         assert_eq!(m.new_tokens, 10);
         let j = m.to_json();
         assert_eq!(j.get("failed").unwrap().as_usize().unwrap(), 1);
+    }
+
+    #[test]
+    fn lifecycle_exits_do_not_pollute_latency_samples() {
+        let mut m = EngineMetrics::default();
+        m.record(&resp(1, 10, 20));
+        m.record(&Response::terminal(2, FinishStatus::Cancelled, 1_000, 2_000, "gone"));
+        m.record(&Response::terminal(3, FinishStatus::Expired, 1_000, 2_000, "late"));
+        m.record(&Response::terminal(4, FinishStatus::Rejected, 1_000, 1_000, "full"));
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.failed, 0, "lifecycle exits are not decode failures");
+        assert_eq!(m.total_ms.len(), 1, "only complete decodes sample latency");
+        let j = m.to_json();
+        assert!(j.get("ttft_p95_ms").is_some());
+        assert!(j.get("tpot_p99_ms").is_some());
+    }
+
+    #[test]
+    fn lifecycle_counters_render_in_engine_json() {
+        let s = EngineStats::new(1);
+        s.lifecycle.cancelled.fetch_add(2, Ordering::Relaxed);
+        s.lifecycle.rejected.fetch_add(5, Ordering::Relaxed);
+        let j = s.to_json(1_000);
+        let l = j.get("lifecycle").expect("lifecycle object");
+        assert_eq!(l.get("cancelled").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(l.get("expired").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(l.get("rejected").unwrap().as_usize().unwrap(), 5);
     }
 
     #[test]

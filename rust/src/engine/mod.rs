@@ -1,9 +1,11 @@
-//! Serving layer (the vLLM-router-shaped part of L3): request types,
-//! admission scheduler, concurrent KV slot pool, the dispatcher + decode
-//! worker pool sharing one online bandit, the cross-session verification
-//! batcher, serving metrics, and a minimal HTTP JSON API. See
-//! docs/ARCHITECTURE.md §3–§5 for the concurrency design (DESIGN.md keeps
-//! the legacy section map).
+//! Serving layer (the vLLM-router-shaped part of L3): request types and
+//! the per-request lifecycle (cancellation, deadlines, streaming),
+//! admission scheduler + load shedding, concurrent KV slot pool, the
+//! dispatcher + decode worker pool sharing one online bandit, the
+//! cross-session verification batcher, serving metrics, and a minimal
+//! HTTP JSON/SSE API. See docs/ARCHITECTURE.md §3–§5 for the concurrency
+//! design and §10 for the request lifecycle (DESIGN.md keeps the legacy
+//! section map).
 
 pub mod batcher;
 pub mod http;
@@ -15,8 +17,8 @@ pub mod slots;
 
 pub use batcher::{BatchConfig, BatchedTarget, Batcher, BatcherHandle};
 pub use http::HttpServer;
-pub use metrics::{BatchStats, EngineMetrics, EngineStats, WorkerStats};
-pub use request::{Request, Response};
+pub use metrics::{BatchStats, EngineMetrics, EngineStats, LifecycleStats, WorkerStats};
+pub use request::{CancelFlag, EmitClip, FinishStatus, Request, Response, StreamEvent};
 pub use scheduler::{Policy, Scheduler};
 pub use server::{BackendKind, Engine, EngineConfig};
 pub use slots::{Slot, SlotPool};

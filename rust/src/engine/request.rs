@@ -1,8 +1,75 @@
-//! Request/response types for the serving engine.
+//! Request/response types and the per-request lifecycle for the serving
+//! engine (docs/ARCHITECTURE.md §10).
+//!
+//! Every request moves through `Queued → Admitted → Decoding → {Done,
+//! Cancelled, Expired, Rejected}` (plus `Failed` for decode errors). The
+//! live stages are implicit in where the request sits (the scheduler
+//! queue, a worker); the terminal stage is explicit on the reply as
+//! [`FinishStatus`]. Two lifecycle controls ride on the request itself:
+//!
+//! * a shared [`CancelFlag`] — the submitter keeps a clone and can flip
+//!   it at any time; workers honor it at every step boundary, slot-wait
+//!   poll, and queue pop (the HTTP layer flips it on client disconnect);
+//! * an absolute `deadline` — checked at the same boundaries, turning a
+//!   too-slow request into an `Expired` reply instead of wasted decode.
 
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use crate::spec::GenResult;
+use crate::spec::{GenResult, EOS};
+
+/// Shared cancellation flag: the submitter keeps one clone, the engine's
+/// worker another. Setting it asks the engine to stop the request at the
+/// next step boundary — committed tokens up to that point still come back
+/// on the terminal reply.
+#[derive(Clone, Debug, Default)]
+pub struct CancelFlag(Arc<AtomicBool>);
+
+impl CancelFlag {
+    /// A fresh, un-cancelled flag.
+    pub fn new() -> CancelFlag {
+        CancelFlag::default()
+    }
+
+    /// Request cancellation (idempotent, thread-safe).
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    /// Has cancellation been requested?
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+/// Terminal lifecycle stage of one request (docs/ARCHITECTURE.md §10).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishStatus {
+    /// decode ran to its natural end
+    Done,
+    /// decode failed with an error
+    Failed,
+    /// the client cancelled (explicit flag or disconnect)
+    Cancelled,
+    /// the absolute deadline passed before completion
+    Expired,
+    /// the admission controller shed the request (queue full)
+    Rejected,
+}
+
+impl FinishStatus {
+    /// Stable lowercase label (HTTP bodies, logs, metrics).
+    pub fn label(&self) -> &'static str {
+        match self {
+            FinishStatus::Done => "done",
+            FinishStatus::Failed => "failed",
+            FinishStatus::Cancelled => "cancelled",
+            FinishStatus::Expired => "expired",
+            FinishStatus::Rejected => "rejected",
+        }
+    }
+}
 
 /// One queued generation request.
 #[derive(Clone, Debug)]
@@ -19,6 +86,12 @@ pub struct Request {
     pub max_new: usize,
     /// submission timestamp (queue/TTFT base)
     pub arrival: Instant,
+    /// absolute completion deadline; `None` means no deadline (a server
+    /// default may be applied at submit — server.rs)
+    pub deadline: Option<Instant>,
+    /// shared cancellation flag (clone it before submitting to keep a
+    /// handle — [`Request::cancel_flag`])
+    pub cancel: CancelFlag,
 }
 
 impl Request {
@@ -31,7 +104,25 @@ impl Request {
             category: String::new(),
             max_new,
             arrival: Instant::now(),
+            deadline: None,
+            cancel: CancelFlag::new(),
         }
+    }
+
+    /// Set an absolute deadline `ms` milliseconds after arrival.
+    pub fn with_deadline_ms(mut self, ms: u64) -> Request {
+        self.deadline = Some(self.arrival + Duration::from_millis(ms));
+        self
+    }
+
+    /// A clone of the shared cancellation flag (keep it to cancel later).
+    pub fn cancel_flag(&self) -> CancelFlag {
+        self.cancel.clone()
+    }
+
+    /// Has this request's deadline passed?
+    pub fn deadline_expired(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
     }
 
     /// Scheduling cost (SJF key): tokenized prompt length + decode budget.
@@ -66,14 +157,18 @@ pub struct Response {
     pub id: u64,
     /// decoded text of the generated suffix
     pub text: String,
-    /// full generation result (tokens + round stats)
+    /// full generation result (tokens + round stats); partial for
+    /// cancelled/expired requests
     pub result: GenResult,
     /// queueing delay before decoding started
     pub queue_ns: u64,
     /// total time from arrival to completion
     pub total_ns: u64,
-    /// decode failure, if any — a failed request still gets a reply so
-    /// clients never hang on a dropped channel
+    /// terminal lifecycle stage this reply reports
+    pub status: FinishStatus,
+    /// decode failure or shed/cancel/expiry explanation — a failed
+    /// request still gets a reply so clients never hang on a dropped
+    /// channel
     pub error: Option<String>,
 }
 
@@ -86,18 +181,181 @@ impl Response {
             result: GenResult::default(),
             queue_ns,
             total_ns,
+            status: FinishStatus::Failed,
             error: Some(error),
         }
     }
 
-    /// Did the decode succeed?
+    /// A terminal non-decode reply (rejected / cancelled-before-decode /
+    /// expired-in-queue).
+    pub fn terminal(
+        id: u64,
+        status: FinishStatus,
+        queue_ns: u64,
+        total_ns: u64,
+        why: impl Into<String>,
+    ) -> Response {
+        Response {
+            id,
+            text: String::new(),
+            result: GenResult::default(),
+            queue_ns,
+            total_ns,
+            status,
+            error: Some(why.into()),
+        }
+    }
+
+    /// Did the decode run to its natural end?
     pub fn is_ok(&self) -> bool {
-        self.error.is_none()
+        self.status == FinishStatus::Done && self.error.is_none()
     }
 
     /// Decode throughput of this single request.
     pub fn tokens_per_sec(&self) -> f64 {
         let n = self.result.new_tokens().len() as f64;
         n / (self.result.wall_ns.max(1) as f64 / 1e9)
+    }
+}
+
+/// One event on a streaming reply channel
+/// ([`crate::engine::Engine::submit_request_streaming`]).
+#[derive(Clone, Debug)]
+pub enum StreamEvent {
+    /// tokens committed by one decode round, already clipped to the
+    /// serving contract (≤ max_new, nothing past the first EOS) — the
+    /// concatenation over all events equals the non-streaming reply body
+    Tokens {
+        /// request id
+        id: u64,
+        /// newly committed token ids
+        ids: Vec<u32>,
+        /// decoded text of exactly those ids
+        text: String,
+    },
+    /// terminal event carrying the full reply (always the last event)
+    Done(Box<Response>),
+}
+
+/// Incremental enforcement of the serving reply contract: never more than
+/// `budget` tokens, nothing past the first EOS. Feeding it each round's
+/// committed tokens yields exactly the prefix the final (truncated) reply
+/// contains, so streamed chunks concatenate to the non-streaming body —
+/// and `done` tells the worker when further decode rounds can no longer
+/// change the reply.
+#[derive(Clone, Copy, Debug)]
+pub struct EmitClip {
+    budget: usize,
+    emitted: usize,
+    done: bool,
+}
+
+impl EmitClip {
+    /// A clip window of `budget` (= the request's `max_new`) tokens.
+    pub fn new(budget: usize) -> EmitClip {
+        EmitClip { budget, emitted: 0, done: false }
+    }
+
+    /// Clip one round's committed tokens against the remaining budget and
+    /// the first EOS. Returns the emittable slice and whether the reply
+    /// is now fully determined.
+    pub fn clip<'t>(&mut self, toks: &'t [u32]) -> (&'t [u32], bool) {
+        if self.done || self.emitted >= self.budget {
+            self.done = true;
+            return (&toks[..0], true);
+        }
+        let mut take = toks.len().min(self.budget - self.emitted);
+        if let Some(p) = toks[..take].iter().position(|&t| t == EOS) {
+            take = p + 1;
+            self.done = true;
+        }
+        self.emitted += take;
+        if self.emitted >= self.budget {
+            self.done = true;
+        }
+        (&toks[..take], self.done)
+    }
+
+    /// Tokens emitted so far.
+    pub fn emitted(&self) -> usize {
+        self.emitted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The reply contract applied in one shot (what the worker does to
+    /// the final result): truncate to max_new, then to the first EOS.
+    fn oneshot(toks: &[u32], budget: usize) -> Vec<u32> {
+        let mut v = toks[..toks.len().min(budget)].to_vec();
+        if let Some(p) = v.iter().position(|&t| t == EOS) {
+            v.truncate(p + 1);
+        }
+        v
+    }
+
+    #[test]
+    fn clip_matches_oneshot_truncation_round_by_round() {
+        // rounds with an EOS mid-stream and budget overshoot
+        let rounds: Vec<Vec<u32>> = vec![
+            vec![5, 6, 7],
+            vec![8],
+            vec![9, EOS, 11],
+            vec![12, 13],
+        ];
+        for budget in [0, 1, 3, 4, 5, 6, 9, 50] {
+            let flat: Vec<u32> = rounds.iter().flatten().copied().collect();
+            let want = oneshot(&flat, budget);
+            let mut clip = EmitClip::new(budget);
+            let mut got = Vec::new();
+            for r in &rounds {
+                let (emit, done) = clip.clip(r);
+                got.extend_from_slice(emit);
+                if done {
+                    break;
+                }
+            }
+            assert_eq!(got, want, "budget {budget}");
+            assert_eq!(clip.emitted(), want.len(), "budget {budget}");
+        }
+    }
+
+    #[test]
+    fn clip_eos_beyond_budget_does_not_count() {
+        let mut clip = EmitClip::new(2);
+        let (emit, done) = clip.clip(&[5, 6, EOS]);
+        assert_eq!(emit, &[5, 6]);
+        assert!(done, "budget reached");
+    }
+
+    #[test]
+    fn cancel_flag_is_shared() {
+        let req = Request::new(1, "x", 8);
+        let flag = req.cancel_flag();
+        assert!(!req.cancel.is_cancelled());
+        flag.cancel();
+        assert!(req.cancel.is_cancelled());
+        let clone = req.clone();
+        assert!(clone.cancel.is_cancelled(), "clones share the flag");
+    }
+
+    #[test]
+    fn deadline_expiry() {
+        let req = Request::new(1, "x", 8);
+        assert!(!req.deadline_expired(), "no deadline never expires");
+        let req = req.with_deadline_ms(0);
+        assert!(req.deadline_expired(), "0ms deadline is already past");
+    }
+
+    #[test]
+    fn terminal_and_failure_statuses() {
+        let r = Response::failure(3, 1, 2, "boom".into());
+        assert_eq!(r.status, FinishStatus::Failed);
+        assert!(!r.is_ok());
+        let r = Response::terminal(4, FinishStatus::Rejected, 1, 1, "queue full");
+        assert_eq!(r.status.label(), "rejected");
+        assert!(!r.is_ok());
     }
 }

@@ -162,6 +162,35 @@ impl Scheduler {
         Some(entry.req)
     }
 
+    /// Remove queued requests that are already dead — cancelled or past
+    /// their deadline — releasing their pending cost, and return them so
+    /// the caller can answer their waiters. The admission controller
+    /// (server.rs dispatcher) calls this before shedding a new arrival,
+    /// so a dead entry never holds a `max_queue` seat that a live
+    /// request could use (docs/ARCHITECTURE.md §10). Relative order of
+    /// the surviving entries is preserved (`key`/`seq` are untouched).
+    pub fn drain_dead(&mut self) -> Vec<Request> {
+        if self
+            .queue
+            .iter()
+            .all(|e| !e.req.cancel.is_cancelled() && !e.req.deadline_expired())
+        {
+            return Vec::new();
+        }
+        let mut dead = Vec::new();
+        let mut live = BinaryHeap::with_capacity(self.queue.len());
+        for e in std::mem::take(&mut self.queue) {
+            if e.req.cancel.is_cancelled() || e.req.deadline_expired() {
+                self.pending_cost -= e.cost;
+                dead.push(e.req);
+            } else {
+                live.push(e);
+            }
+        }
+        self.queue = live;
+        dead
+    }
+
     /// A previously popped request finished decoding (pass its
     /// `Request::cost()`); releases it from the in-flight ledger.
     pub fn note_done(&mut self, cost: usize) {
@@ -285,6 +314,25 @@ mod tests {
         assert_eq!(s.in_flight(), 0);
         assert_eq!(s.in_flight_cost(), 0);
         assert!((s.queue_wait_estimate(4) - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn drain_dead_evicts_cancelled_and_expired_only() {
+        let mut s = Scheduler::new(Policy::Sjf);
+        assert!(s.drain_dead().is_empty(), "fast path on an all-live queue");
+        let cancelled = req(2, 10, 10);
+        cancelled.cancel.cancel();
+        s.push(req(1, 10, 10));
+        s.push(cancelled);
+        s.push(Request::new(3, "xxxxx", 5).with_deadline_ms(0));
+        assert_eq!(s.pending_cost(), 50);
+        let dead = s.drain_dead();
+        let mut dead_ids: Vec<u64> = dead.iter().map(|r| r.id).collect();
+        dead_ids.sort_unstable();
+        assert_eq!(dead_ids, vec![2, 3]);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.pending_cost(), 20, "evicted cost left the pending ledger");
+        assert_eq!(s.pop().unwrap().id, 1, "live entries keep their order");
     }
 
     #[test]

@@ -2,19 +2,26 @@
 //! workers (one per KV slot by default), all updating a single shared
 //! TapOut controller with *persistent online bandit state across requests
 //! and workers* (DESIGN.md §2). Requests go in over a channel; each caller
-//! gets a private response channel, and failures are answered explicitly
-//! rather than dropped.
+//! gets a private response channel — unary or streaming — and failures
+//! are answered explicitly rather than dropped.
 //!
 //! Concurrency layout:
 //!
 //!   submit() ──ch──▶ dispatcher ──sched──▶ worker 0 ─┐
 //!                      (encode,   (mutex +  worker 1 ─┼─▶ SlotPool ──▶
-//!                       admit)     condvar) worker N ─┘   (checkout)
+//!                       admit/429) condvar) worker N ─┘   (checkout)
 //!                                                 │
 //!                              verification batcher (batcher.rs):
 //!                              workers submit target steps, one thread
 //!                              coalesces in-flight sessions into one
 //!                              block_batch forward and scatters rows
+//!
+//! Request lifecycle (docs/ARCHITECTURE.md §10): the dispatcher is the
+//! admission controller (a full queue sheds arrivals with `Rejected`);
+//! workers drive each decode through the resumable [`SpecSession`] step
+//! API, so every round boundary checks the request's cancellation flag
+//! and absolute deadline, streams the round's committed tokens into the
+//! caller's sink, and stops as soon as the reply is fully determined.
 //!
 //!   * scheduler + waiter map: one mutex, held for queue ops only;
 //!   * KV slots: blocking checkout (slots.rs) — workers may outnumber
@@ -37,7 +44,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -47,14 +54,19 @@ use crate::models::{
     SimModel,
 };
 use crate::runtime::Runtime;
-use crate::spec::{generate, GenConfig, MethodSpec, BOS, EOS};
+use crate::spec::{GenConfig, MethodSpec, SpecSession, StepOutcome, BOS};
 use crate::util::{Json, Rng};
 
 use super::batcher::{BatchConfig, BatchedTarget, Batcher, BatcherHandle};
 use super::metrics::{EngineMetrics, EngineStats};
-use super::request::{Request, Response};
+use super::request::{EmitClip, FinishStatus, Request, Response, StreamEvent};
 use super::scheduler::{Policy, Scheduler};
 use super::slots::SlotPool;
+
+/// How often a slot-waiting worker re-checks its request's cancellation
+/// flag and deadline (the slot wait is real queueing — it must stay
+/// interruptible, docs/ARCHITECTURE.md §10).
+const SLOT_POLL: Duration = Duration::from_millis(10);
 
 /// Which model backend the engine decodes with.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -113,6 +125,13 @@ pub struct EngineConfig {
     /// cross-session verification batching (docs/ARCHITECTURE.md §4);
     /// `BatchConfig::off()` restores per-slot direct verification
     pub verify_batch: BatchConfig,
+    /// admission control: maximum queued (not yet decoding) requests
+    /// before the dispatcher sheds new arrivals with a `Rejected` reply
+    /// (HTTP 429). 0 = unbounded queue (docs/ARCHITECTURE.md §10).
+    pub max_queue: usize,
+    /// default per-request deadline in milliseconds, applied at submit to
+    /// requests that carry none. 0 = no default deadline.
+    pub default_deadline_ms: u64,
 }
 
 impl Default for EngineConfig {
@@ -127,6 +146,8 @@ impl Default for EngineConfig {
             workers: 2,
             backend: BackendKind::Pjrt,
             verify_batch: BatchConfig::default(),
+            max_queue: 0,
+            default_deadline_ms: 0,
         }
     }
 }
@@ -156,14 +177,55 @@ impl Codec {
     }
 }
 
+/// Where one request's replies go: a unary response channel, or a
+/// streaming channel that sees each round's committed tokens before the
+/// terminal [`StreamEvent::Done`].
+enum ResponseSink {
+    Unary(Sender<Response>),
+    Stream(Sender<StreamEvent>),
+}
+
+impl ResponseSink {
+    /// Does this sink consume per-round token events? Unary sinks don't,
+    /// so callers can skip building them (text decode per round).
+    fn wants_tokens(&self) -> bool {
+        matches!(self, ResponseSink::Stream(_))
+    }
+
+    /// Emit one round's clipped tokens (no-op for unary sinks). Returns
+    /// `false` when the receiver is gone — the worker treats that as a
+    /// client disconnect and cancels the request.
+    fn send_tokens(&self, id: u64, ids: &[u32], text: String) -> bool {
+        match self {
+            ResponseSink::Unary(_) => true,
+            ResponseSink::Stream(tx) => {
+                tx.send(StreamEvent::Tokens { id, ids: ids.to_vec(), text }).is_ok()
+            }
+        }
+    }
+
+    /// Deliver the terminal reply (consumes the sink — exactly one
+    /// terminal event per request).
+    fn send_final(self, resp: Response) {
+        match self {
+            ResponseSink::Unary(tx) => {
+                let _ = tx.send(resp);
+            }
+            ResponseSink::Stream(tx) => {
+                let _ = tx.send(StreamEvent::Done(Box::new(resp)));
+            }
+        }
+    }
+}
+
 enum Job {
-    Run(Request, Sender<Response>),
+    Run(Request, ResponseSink),
     Shutdown,
 }
 
 struct QueueState {
     sched: Scheduler,
-    waiters: HashMap<u64, Sender<Response>>,
+    waiters: HashMap<u64, ResponseSink>,
     shutdown: bool,
 }
 
@@ -174,6 +236,10 @@ struct EngineShared {
     pool: SlotPool,
     codec: Codec,
     gamma_max: usize,
+    /// decode worker count (divisor of the admission queue-wait estimate)
+    n_workers: usize,
+    /// admission bound on queued requests; 0 = unbounded
+    max_queue: usize,
     /// submit side of the verification batcher; `None` when
     /// `verify_batch` is off (workers verify on their slot's own target)
     batcher: Option<BatcherHandle>,
@@ -263,6 +329,8 @@ impl Engine {
             pool,
             codec,
             gamma_max: config.gamma_max,
+            n_workers,
+            max_queue: config.max_queue,
             batcher: batcher.as_ref().map(|b| b.handle()),
             started: Mutex::new(Instant::now()),
         });
@@ -313,11 +381,37 @@ impl Engine {
         self.submit_request(req)
     }
 
-    /// Submit a pre-built request (pre-encoded prompts, custom category).
+    /// Submit a pre-built request (pre-encoded prompts, custom category,
+    /// deadline, cancel flag). An id of 0 is replaced with a fresh
+    /// engine-assigned id.
     pub fn submit_request(&self, req: Request) -> Receiver<Response> {
         let (rtx, rrx) = channel();
-        let _ = self.tx.send(Job::Run(req, rtx));
+        self.dispatch(req, ResponseSink::Unary(rtx));
         rrx
+    }
+
+    /// Submit a pre-built request and stream its tokens: the receiver
+    /// sees one [`StreamEvent::Tokens`] per committed decode round
+    /// (already clipped to the reply contract) and a final
+    /// [`StreamEvent::Done`] carrying the full response. Dropping the
+    /// receiver mid-stream cancels the request at the next round.
+    pub fn submit_request_streaming(&self, req: Request) -> Receiver<StreamEvent> {
+        let (rtx, rrx) = channel();
+        self.dispatch(req, ResponseSink::Stream(rtx));
+        rrx
+    }
+
+    /// Common submit path: assign an id if needed, apply the server's
+    /// default deadline, hand off to the dispatcher.
+    fn dispatch(&self, mut req: Request, sink: ResponseSink) {
+        if req.id == 0 {
+            req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        }
+        if req.deadline.is_none() && self.config.default_deadline_ms > 0 {
+            req.deadline =
+                Some(req.arrival + Duration::from_millis(self.config.default_deadline_ms));
+        }
+        let _ = self.tx.send(Job::Run(req, sink));
     }
 
     /// Graceful shutdown: queued requests drain, then all threads exit.
@@ -428,14 +522,62 @@ fn dispatcher_loop(
 
     loop {
         match rx.recv() {
-            Ok(Job::Run(mut req, reply)) => {
+            Ok(Job::Run(mut req, sink)) => {
                 if req.prompt.is_empty() {
                     req.prompt = shared.codec.encode_prompt(&req.prompt_text);
                 }
                 stats.submitted.fetch_add(1, Ordering::Relaxed);
                 {
                     let mut q = shared.q.lock().unwrap();
-                    q.waiters.insert(req.id, reply);
+                    // admission control (docs/ARCHITECTURE.md §10): a
+                    // full queue sheds the arrival with an explicit
+                    // Rejected reply (HTTP 429) instead of queueing
+                    // unboundedly; the 429 carries the SJF ledger's
+                    // queue-wait estimate so clients can back off
+                    // intelligently. Before shedding, evict queued
+                    // entries that are already dead (cancelled or past
+                    // deadline) — they must not hold seats a live
+                    // arrival could use.
+                    if shared.max_queue > 0 && q.sched.len() >= shared.max_queue {
+                        for dead in q.sched.drain_dead() {
+                            let status = if dead.cancel.is_cancelled() {
+                                FinishStatus::Cancelled
+                            } else {
+                                FinishStatus::Expired
+                            };
+                            note_lifecycle(&stats, status);
+                            if let Some(dead_sink) = q.waiters.remove(&dead.id) {
+                                let ns = dead.arrival.elapsed().as_nanos() as u64;
+                                dead_sink.send_final(Response::terminal(
+                                    dead.id,
+                                    status,
+                                    ns,
+                                    ns,
+                                    "evicted from queue: request no longer live",
+                                ));
+                            }
+                        }
+                    }
+                    if shared.max_queue > 0 && q.sched.len() >= shared.max_queue {
+                        let depth = q.sched.len();
+                        let est = q.sched.queue_wait_estimate(shared.n_workers);
+                        drop(q);
+                        stats.lifecycle.rejected.fetch_add(1, Ordering::Relaxed);
+                        let now_ns = req.arrival.elapsed().as_nanos() as u64;
+                        sink.send_final(Response::terminal(
+                            req.id,
+                            FinishStatus::Rejected,
+                            now_ns,
+                            now_ns,
+                            format!(
+                                "queue full ({depth} queued, max {}): request shed; \
+                                 queue-wait estimate {est:.0} cost units",
+                                shared.max_queue
+                            ),
+                        ));
+                        continue;
+                    }
+                    q.waiters.insert(req.id, sink);
                     q.sched.push(req);
                     stats.note_depth(q.sched.len());
                 }
@@ -445,6 +587,80 @@ fn dispatcher_loop(
                 shared.q.lock().unwrap().shutdown = true;
                 shared.cv.notify_all();
                 return;
+            }
+        }
+    }
+}
+
+/// How one step-driven decode ended (docs/ARCHITECTURE.md §10). The
+/// cancelled/expired arms carry the partial result committed up to the
+/// step boundary that observed the exit condition.
+enum DecodeEnd {
+    Complete(crate::spec::GenResult),
+    Cancelled(crate::spec::GenResult),
+    Expired(crate::spec::GenResult),
+    Failed(anyhow::Error),
+}
+
+/// Drive one request's [`SpecSession`] to an end state: step through
+/// draft→verify→accept rounds, stream each round's clipped tokens into
+/// the sink, and honor the cancellation flag and deadline at every step
+/// boundary. Decoding stops as soon as the reply is fully determined
+/// (clip window closed), so post-EOS / post-budget rounds are never run.
+fn drive_session(
+    draft: &mut dyn LanguageModel,
+    target: &mut dyn LanguageModel,
+    session: &mut SessionController,
+    rng: &mut Rng,
+    req: &Request,
+    sink: &ResponseSink,
+    shared: &EngineShared,
+) -> DecodeEnd {
+    let gen_cfg = GenConfig {
+        max_new: req.max_new,
+        gamma_max: shared.gamma_max,
+        stop_at_eos: true,
+        collect_signals: false,
+    };
+    let mut sess = match SpecSession::new(draft, target, session, rng, &req.prompt, &gen_cfg) {
+        Ok(s) => s,
+        Err(e) => return DecodeEnd::Failed(e),
+    };
+    let mut clip = EmitClip::new(req.max_new);
+    loop {
+        // lifecycle checks sit at the step boundary — the decode core
+        // stays oblivious to cancellation and deadlines
+        if req.cancel.is_cancelled() {
+            return DecodeEnd::Cancelled(sess.finish());
+        }
+        if req.deadline_expired() {
+            return DecodeEnd::Expired(sess.finish());
+        }
+        match sess.step() {
+            Ok(StepOutcome::Finished(_)) => return DecodeEnd::Complete(sess.finish()),
+            Ok(StepOutcome::Round(commit)) => {
+                let (emit, done) = clip.clip(&commit.new_tokens);
+                if !emit.is_empty()
+                    && sink.wants_tokens()
+                    && !sink.send_tokens(req.id, emit, shared.codec.decode(emit))
+                {
+                    // the stream receiver is gone: client disconnected —
+                    // flag the request so the batcher drops any pending
+                    // seat too, and exit as Cancelled
+                    req.cancel.cancel();
+                    return DecodeEnd::Cancelled(sess.finish());
+                }
+                if done {
+                    return DecodeEnd::Complete(sess.finish());
+                }
+            }
+            Err(e) => {
+                // a batcher seat dropped on cancellation surfaces as a
+                // step error; report it as the cancellation it is
+                if req.cancel.is_cancelled() {
+                    return DecodeEnd::Cancelled(sess.finish());
+                }
+                return DecodeEnd::Failed(e);
             }
         }
     }
@@ -476,13 +692,47 @@ fn worker_loop(
             }
         };
         let Some((req, reply)) = job else { return };
+        let Some(sink) = reply else {
+            // no waiter registered (should not happen) — just release the
+            // scheduler's in-flight ledger entry
+            shared.q.lock().unwrap().sched.note_done(req.cost());
+            continue;
+        };
         let wstats = &stats.workers[worker_id];
 
+        // interruptible slot checkout: a request that is cancelled or
+        // expires while waiting for a KV slot exits here without ever
+        // decoding (its seat frees instantly for the next request)
         let t_wait = Instant::now();
-        let mut slot = shared.pool.acquire();
+        let mut slot = None;
+        let mut exit: Option<(FinishStatus, &'static str)> = None;
+        loop {
+            if req.cancel.is_cancelled() {
+                exit = Some((FinishStatus::Cancelled, "cancelled before decode"));
+                break;
+            }
+            if req.deadline_expired() {
+                exit = Some((FinishStatus::Expired, "deadline expired before decode"));
+                break;
+            }
+            if let Some(s) = shared.pool.acquire_timeout(SLOT_POLL) {
+                slot = Some(s);
+                break;
+            }
+        }
         wstats
             .slot_wait_ns
             .fetch_add(t_wait.elapsed().as_nanos() as u64, Ordering::Relaxed);
+
+        if let Some((status, why)) = exit {
+            shared.q.lock().unwrap().sched.note_done(req.cost());
+            note_lifecycle(&stats, status);
+            let now_ns = req.arrival.elapsed().as_nanos() as u64;
+            sink.send_final(Response::terminal(req.id, status, now_ns, now_ns, why));
+            continue;
+        }
+        let mut slot = slot.expect("no exit implies a checked-out slot");
+
         // queueing delay = arrival → decode start, *including* the slot
         // wait — under workers > slots contention that wait is real
         // queueing and must show up in queue/TTFT percentiles
@@ -490,46 +740,45 @@ fn worker_loop(
 
         let seed = req.scenario_seed();
         slot.draft.begin_request(seed, &req.category);
-        let gen_cfg = GenConfig {
-            max_new: req.max_new,
-            gamma_max: shared.gamma_max,
-            stop_at_eos: true,
-            collect_signals: false,
-        };
         let t_busy = Instant::now();
-        let outcome = match &shared.batcher {
+        let end = match &shared.batcher {
             Some(handle) => {
                 // batched path (docs/ARCHITECTURE.md §4): target steps are
                 // submitted to the batcher keyed by this slot's id; the
-                // slot's own target stays resident but idle
+                // slot's own target stays resident but idle. The cancel
+                // flag rides along so the batcher can drop this session's
+                // pending seat without stalling the fill window.
                 let mut target = BatchedTarget::new(
                     slot.id,
                     handle.clone(),
                     slot.target.max_seq(),
                     slot.target.rel_cost(),
-                );
+                )
+                .with_cancel(req.cancel.clone());
                 target.begin_request(seed, &req.category);
                 handle.note_decode_start();
-                let r = generate(
+                let r = drive_session(
                     slot.draft.as_mut(),
                     &mut target,
                     &mut session,
                     &mut rng,
-                    &req.prompt,
-                    &gen_cfg,
+                    &req,
+                    &sink,
+                    &shared,
                 );
                 handle.note_decode_end();
                 r
             }
             None => {
                 slot.target.begin_request(seed, &req.category);
-                generate(
+                drive_session(
                     slot.draft.as_mut(),
                     slot.target.as_mut(),
                     &mut session,
                     &mut rng,
-                    &req.prompt,
-                    &gen_cfg,
+                    &req,
+                    &sink,
+                    &shared,
                 )
             }
         };
@@ -542,29 +791,33 @@ fn worker_loop(
         // the queue-wait estimate stays honest (scheduler.rs)
         shared.q.lock().unwrap().sched.note_done(req.cost());
 
-        let resp = match outcome {
-            Ok(mut result) => {
-                // serving contract: never return more than max_new tokens,
-                // and nothing past the first EOS. The last verification
-                // round may overshoot both (verification is atomic), and
-                // the overshoot depends on which arm the bandit played —
-                // capping here makes the reply a pure function of the
-                // prompt, identical across worker counts.
-                result.tokens.truncate(result.prompt_len + req.max_new);
-                let eos_at = result.new_tokens().iter().position(|&t| t == EOS);
-                if let Some(p) = eos_at {
-                    result.tokens.truncate(result.prompt_len + p + 1);
-                }
-                Response {
-                    id: req.id,
-                    text: shared.codec.decode(result.new_tokens()),
-                    queue_ns,
-                    total_ns: req.arrival.elapsed().as_nanos() as u64,
-                    result,
-                    error: None,
-                }
+        let resp = match end {
+            DecodeEnd::Complete(result) => {
+                finish_response(&shared, &req, result, FinishStatus::Done, None, queue_ns)
             }
-            Err(e) => {
+            DecodeEnd::Cancelled(result) => {
+                note_lifecycle(&stats, FinishStatus::Cancelled);
+                finish_response(
+                    &shared,
+                    &req,
+                    result,
+                    FinishStatus::Cancelled,
+                    Some("cancelled mid-decode".into()),
+                    queue_ns,
+                )
+            }
+            DecodeEnd::Expired(result) => {
+                note_lifecycle(&stats, FinishStatus::Expired);
+                finish_response(
+                    &shared,
+                    &req,
+                    result,
+                    FinishStatus::Expired,
+                    Some("deadline expired mid-decode".into()),
+                    queue_ns,
+                )
+            }
+            DecodeEnd::Failed(e) => {
                 eprintln!("[engine] request {} failed: {e:#}", req.id);
                 wstats.errors.fetch_add(1, Ordering::Relaxed);
                 Response::failure(
@@ -583,8 +836,52 @@ fn worker_loop(
             m.record(&resp);
             m.span_ns = shared.started.lock().unwrap().elapsed().as_nanos() as u64;
         }
-        if let Some(tx) = reply {
-            let _ = tx.send(resp);
-        }
+        sink.send_final(resp);
+    }
+}
+
+/// Bump the matching lifecycle counter for a non-completion exit.
+fn note_lifecycle(stats: &EngineStats, status: FinishStatus) {
+    match status {
+        FinishStatus::Cancelled => &stats.lifecycle.cancelled,
+        FinishStatus::Expired => &stats.lifecycle.expired,
+        FinishStatus::Rejected => &stats.lifecycle.rejected,
+        FinishStatus::Done | FinishStatus::Failed => return,
+    }
+    .fetch_add(1, Ordering::Relaxed);
+}
+
+/// Apply the serving reply contract to a (possibly partial) decode
+/// result and build the terminal response. The contract: never more than
+/// max_new tokens, nothing past the first EOS. The last verification
+/// round may overshoot both (verification is atomic), and the overshoot
+/// depends on which arm the bandit played — capping here makes the reply
+/// a pure function of the prompt, identical across worker counts,
+/// streaming modes, and batch windows. The cap is computed with the same
+/// [`EmitClip`] that clipped the streamed chunks (one shot over the full
+/// suffix == its round-by-round application, pinned by the EmitClip unit
+/// tests), so the streamed-concatenation-equals-body guarantee has a
+/// single implementation.
+fn finish_response(
+    shared: &EngineShared,
+    req: &Request,
+    mut result: crate::spec::GenResult,
+    status: FinishStatus,
+    error: Option<String>,
+    queue_ns: u64,
+) -> Response {
+    let keep = {
+        let mut clip = EmitClip::new(req.max_new);
+        clip.clip(result.new_tokens()).0.len()
+    };
+    result.tokens.truncate(result.prompt_len + keep);
+    Response {
+        id: req.id,
+        text: shared.codec.decode(result.new_tokens()),
+        queue_ns,
+        total_ns: req.arrival.elapsed().as_nanos() as u64,
+        result,
+        status,
+        error,
     }
 }

@@ -100,6 +100,27 @@ impl SlotPool {
         }
     }
 
+    /// Bounded blocking checkout: like [`SlotPool::acquire`], but gives
+    /// up after `timeout`. Decode workers poll this in a loop so a
+    /// request that is cancelled or expires *while waiting for a slot*
+    /// exits the lifecycle promptly instead of blocking until a slot
+    /// frees (server.rs).
+    pub fn acquire_timeout(&self, timeout: std::time::Duration) -> Option<Slot> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut free = self.free.lock().unwrap();
+        loop {
+            if let Some(slot) = free.pop() {
+                return Some(slot);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (g, _res) = self.freed.wait_timeout(free, deadline - now).unwrap();
+            free = g;
+        }
+    }
+
     /// Return a checked-out slot and wake one blocked `acquire`.
     pub fn release(&self, mut slot: Slot) {
         slot.served += 1;
@@ -151,6 +172,18 @@ mod tests {
         pool.release(slot);
         waiter.join().unwrap();
         assert_eq!(pool.available(), 1);
+    }
+
+    #[test]
+    fn acquire_timeout_gives_up_and_succeeds() {
+        let pool = SlotPool::sim(0.9, 0.05, 1);
+        let held = pool.try_acquire().unwrap();
+        assert!(
+            pool.acquire_timeout(Duration::from_millis(10)).is_none(),
+            "no slot can free while we hold the only one"
+        );
+        pool.release(held);
+        assert!(pool.acquire_timeout(Duration::from_millis(10)).is_some());
     }
 
     #[test]

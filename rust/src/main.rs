@@ -2,8 +2,10 @@
 //!
 //! Subcommands:
 //!   generate  --pair pair-a --method seq-ucb1 --prompt "..." [--max-new N]
+//!             [--stream]  (print tokens as each round commits)
 //!   serve     --port 8077 --pair pair-a --method seq-ucb1 [--sched fcfs|sjf]
 //!             [--workers N] [--slots N] [--backend pjrt|sim]
+//!             [--max-queue N] [--deadline-ms MS]
 //!   exp       --id <table2|table3|table4|table5|fig2|fig3|fig4|fig5|fig6|abl-arms|tune|all>
 //!             [--backend pjrt|sim] [--scale F] [--gamma N]
 //!   selftest  verify the rust engine replays the python golden traces
@@ -18,7 +20,7 @@ use tapout::engine::{BackendKind, BatchConfig, Engine, EngineConfig, HttpServer,
 use tapout::harness::{run_experiment, ExpOpts};
 use tapout::models::{Manifest, ModelAssets, PjrtModel};
 use tapout::runtime::Runtime;
-use tapout::spec::{generate, GenConfig, MethodSpec};
+use tapout::spec::{generate, GenConfig, MethodSpec, SpecSession, StepOutcome};
 use tapout::util::cli::Args;
 use tapout::util::{Json, Rng};
 
@@ -78,8 +80,25 @@ fn cmd_generate(args: &Args) -> Result<()> {
     prompt.extend(manifest.encode(&prompt_text));
 
     let cfg = GenConfig { max_new, ..GenConfig::default() };
-    let r = generate(&mut draft, &mut target, &mut ctrl, &mut rng, &prompt, &cfg)?;
-    println!("--- completion ---\n{}{}", prompt_text, manifest.decode(r.new_tokens()));
+    let r = if args.bool("stream") {
+        // step-driven decode: print each round's committed tokens as they
+        // land (the CLI face of the SpecSession API, ARCHITECTURE.md §10)
+        use std::io::Write as _;
+        print!("--- completion (streaming) ---\n{prompt_text}");
+        std::io::stdout().flush().ok();
+        let mut sess =
+            SpecSession::new(&mut draft, &mut target, &mut ctrl, &mut rng, &prompt, &cfg)?;
+        while let StepOutcome::Round(commit) = sess.step()? {
+            print!("{}", manifest.decode(&commit.new_tokens));
+            std::io::stdout().flush().ok();
+        }
+        println!();
+        sess.finish()
+    } else {
+        let r = generate(&mut draft, &mut target, &mut ctrl, &mut rng, &prompt, &cfg)?;
+        println!("--- completion ---\n{}{}", prompt_text, manifest.decode(r.new_tokens()));
+        r
+    };
     println!(
         "--- stats --- tokens {}  sessions {}  m {:.2}  accept {:.2}  {:.1} tok/s",
         r.new_tokens().len(),
@@ -109,17 +128,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
             max_batch: args.usize("batch", BatchConfig::default().max_batch),
             window_us: args.usize("batch-window-us", 100) as u64,
         },
+        // --max-queue 0 = unbounded (no admission shedding)
+        max_queue: args.usize("max-queue", 0),
+        // --deadline-ms 0 = no default deadline
+        default_deadline_ms: args.usize("deadline-ms", 0) as u64,
     };
     let port = args.usize("port", 8077) as u16;
     let engine = Arc::new(Engine::start(cfg).context("starting engine")?);
     let http = HttpServer::start(engine.clone(), port)?;
     println!(
-        "tapout serving on http://{}  (POST /generate, GET /health, GET /metrics)  \
-         backend={} workers={} slots={}",
+        "tapout serving on http://{}  (POST /generate [stream:true for SSE], GET /health, \
+         GET /metrics)  backend={} workers={} slots={} max_queue={} deadline_ms={}",
         http.addr,
         engine.config.backend.label(),
         engine.config.workers,
         engine.config.slots,
+        engine.config.max_queue,
+        engine.config.default_deadline_ms,
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -4,5 +4,8 @@
 pub mod session;
 pub mod stop;
 
-pub use session::{generate, greedy, GenConfig, GenResult, RoundStat, BOS, EOS};
+pub use session::{
+    generate, greedy, FinishReason, GenConfig, GenResult, RoundStat, SpecSession, StepCommit,
+    StepOutcome, BOS, EOS,
+};
 pub use stop::{DecodeControl, MethodSpec, StopController};

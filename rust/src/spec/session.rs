@@ -111,55 +111,167 @@ impl GenResult {
     }
 }
 
-/// Run one full generation with speculative decoding.
+/// Why a step-driven decode reached its natural end.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// the `max_new` generation budget is exhausted
+    MaxNew,
+    /// the last committed token is EOS (with `stop_at_eos` on)
+    Eos,
+    /// no KV headroom remains for another round
+    KvExhausted,
+}
+
+/// Newly committed tokens plus bandit accounting from one
+/// draft→verify→accept round ([`SpecSession::step`]).
+#[derive(Clone, Debug)]
+pub struct StepCommit {
+    /// tokens committed by this round: accepted proposals + bonus token
+    pub new_tokens: Vec<u32>,
+    /// proposals drafted this round
+    pub drafted: usize,
+    /// proposals the target accepted
+    pub accepted: usize,
+    /// bandit arm that drove the session (Seq controllers only)
+    pub arm: Option<usize>,
+}
+
+/// Result of one [`SpecSession::step`] call.
+#[derive(Clone, Debug)]
+pub enum StepOutcome {
+    /// one round ran and committed at least one token (the bonus)
+    Round(StepCommit),
+    /// the decode is complete; this call committed nothing
+    Finished(FinishReason),
+}
+
+/// A resumable speculative-decoding session: one draft→verify→accept
+/// round per [`SpecSession::step`] call.
 ///
-/// Invariants maintained (tested in rust/tests/):
-///   * both models only ever receive contiguous blocks starting at their
-///     cursor;
-///   * after every round both cursors ≤ committed length;
-///   * committed tokens never change once appended (greedy spec decoding
-///     is lossless: output == target-only greedy output).
-pub fn generate(
-    draft: &mut dyn LanguageModel,
-    target: &mut dyn LanguageModel,
-    ctrl: &mut dyn DecodeControl,
-    rng: &mut Rng,
-    prompt: &[u32],
-    cfg: &GenConfig,
-) -> anyhow::Result<GenResult> {
-    let t_start = Instant::now();
-    anyhow::ensure!(!prompt.is_empty(), "prompt must be non-empty");
-    let max_seq = draft.max_seq().min(target.max_seq());
-    anyhow::ensure!(
-        prompt.len() + 2 < max_seq,
-        "prompt too long for KV cache: {} + 2 >= {max_seq}",
-        prompt.len()
-    );
+/// This is the step-driven core the serving engine builds its request
+/// lifecycle on (docs/ARCHITECTURE.md §10): the caller owns the loop, so
+/// it can check cancellation flags and deadlines, stream the committed
+/// tokens, or interleave sessions — all at round granularity, which is
+/// exactly the granularity at which TapOut's bandit reward lands.
+/// [`generate`] is the thin run-to-completion loop over this type, so the
+/// harness path and the engine path decode byte-identically.
+pub struct SpecSession<'a> {
+    draft: &'a mut dyn LanguageModel,
+    target: &'a mut dyn LanguageModel,
+    ctrl: &'a mut dyn DecodeControl,
+    rng: &'a mut Rng,
+    cfg: GenConfig,
+    max_seq: usize,
+    committed: Vec<u32>,
+    prompt_len: usize,
+    rounds: Vec<RoundStat>,
+    t_start: Instant,
+    finished: Option<FinishReason>,
+}
 
-    draft.reset();
-    target.reset();
-    ctrl.reset_request();
+impl<'a> SpecSession<'a> {
+    /// Validate the prompt, reset both models and the controller, and
+    /// return a session positioned before its first round.
+    ///
+    /// Invariants maintained across steps (tested in rust/tests/):
+    ///   * both models only ever receive contiguous blocks starting at
+    ///     their cursor;
+    ///   * after every round both cursors ≤ committed length;
+    ///   * committed tokens never change once appended (greedy spec
+    ///     decoding is lossless: output == target-only greedy output).
+    pub fn new(
+        draft: &'a mut dyn LanguageModel,
+        target: &'a mut dyn LanguageModel,
+        ctrl: &'a mut dyn DecodeControl,
+        rng: &'a mut Rng,
+        prompt: &[u32],
+        cfg: &GenConfig,
+    ) -> anyhow::Result<SpecSession<'a>> {
+        let t_start = Instant::now();
+        anyhow::ensure!(!prompt.is_empty(), "prompt must be non-empty");
+        let max_seq = draft.max_seq().min(target.max_seq());
+        anyhow::ensure!(
+            prompt.len() + 2 < max_seq,
+            "prompt too long for KV cache: {} + 2 >= {max_seq}",
+            prompt.len()
+        );
+        draft.reset();
+        target.reset();
+        ctrl.reset_request();
+        Ok(SpecSession {
+            draft,
+            target,
+            ctrl,
+            rng,
+            cfg: *cfg,
+            max_seq,
+            prompt_len: prompt.len(),
+            committed: prompt.to_vec(),
+            rounds: Vec::new(),
+            t_start,
+            finished: None,
+        })
+    }
 
-    let mut committed: Vec<u32> = prompt.to_vec();
-    let n0 = prompt.len();
-    let mut rounds = Vec::new();
+    /// The full committed sequence so far (prompt + generation).
+    pub fn committed(&self) -> &[u32] {
+        &self.committed
+    }
 
-    'outer: while committed.len() - n0 < cfg.max_new {
-        if cfg.stop_at_eos && committed.last() == Some(&EOS) {
-            break;
+    /// Tokens generated past the prompt so far.
+    pub fn generated(&self) -> usize {
+        self.committed.len() - self.prompt_len
+    }
+
+    /// Rounds run so far.
+    pub fn rounds(&self) -> &[RoundStat] {
+        &self.rounds
+    }
+
+    /// Has the session reached its natural end?
+    pub fn is_finished(&self) -> bool {
+        self.finished.is_some()
+    }
+
+    /// Termination check at the step boundary, in the same priority order
+    /// as the classic `generate` loop.
+    fn check_done(&self) -> Option<FinishReason> {
+        if self.generated() >= self.cfg.max_new {
+            return Some(FinishReason::MaxNew);
         }
-        let c = committed.len();
-        let headroom = max_seq.saturating_sub(c + 2);
-        if headroom < 1 {
-            break;
+        if self.cfg.stop_at_eos && self.committed.last() == Some(&EOS) {
+            return Some(FinishReason::Eos);
         }
-        let gamma = cfg.gamma_max.min(headroom);
+        if self.max_seq.saturating_sub(self.committed.len() + 2) < 1 {
+            return Some(FinishReason::KvExhausted);
+        }
+        None
+    }
 
-        ctrl.session_start(rng);
+    /// Run one draft→verify→accept round, or report that the decode is
+    /// complete. A finished session keeps returning
+    /// [`StepOutcome::Finished`]; an errored step leaves the committed
+    /// prefix intact (verification is atomic — a round either commits
+    /// fully or not at all).
+    pub fn step(&mut self) -> anyhow::Result<StepOutcome> {
+        if let Some(r) = self.finished {
+            return Ok(StepOutcome::Finished(r));
+        }
+        if let Some(r) = self.check_done() {
+            self.finished = Some(r);
+            return Ok(StepOutcome::Finished(r));
+        }
+
+        let c = self.committed.len();
+        let headroom = self.max_seq.saturating_sub(c + 2);
+        let gamma = self.cfg.gamma_max.min(headroom);
+
+        self.ctrl.session_start(self.rng);
 
         // --- draft session: catch up on committed suffix, then propose
         let t_draft = Instant::now();
-        let mut sig = draft.block(&committed[draft.cur()..], draft.cur())?;
+        let dc = self.draft.cur();
+        let mut sig = self.draft.block(&self.committed[dc..], dc)?;
         let mut proposals: Vec<u32> = Vec::with_capacity(gamma);
         let mut sig_rows: Vec<TokenSignals> = Vec::new();
         loop {
@@ -167,10 +279,10 @@ pub fn generate(
             proposals.push(last.argmax);
             sig_rows.push(last);
             let idx = proposals.len() - 1;
-            if proposals.len() >= gamma || ctrl.should_stop(&last, idx, rng) {
+            if proposals.len() >= gamma || self.ctrl.should_stop(&last, idx, self.rng) {
                 break;
             }
-            sig = draft.block(&[last.argmax], c + proposals.len() - 1)?;
+            sig = self.draft.block(&[last.argmax], c + proposals.len() - 1)?;
         }
         let draft_ns = t_draft.elapsed().as_nanos() as u64;
 
@@ -178,10 +290,10 @@ pub fn generate(
         // committed suffix + all proposals. Row off+i predicts position
         // c+i, so it both checks proposals[i] and supplies the bonus token.
         let t_verify = Instant::now();
-        let tc = target.cur();
-        let mut inputs: Vec<u32> = committed[tc..].to_vec();
+        let tc = self.target.cur();
+        let mut inputs: Vec<u32> = self.committed[tc..].to_vec();
         inputs.extend_from_slice(&proposals);
-        let vsig = target.block(&inputs, tc)?;
+        let vsig = self.target.block(&inputs, tc)?;
         let off = c - 1 - tc;
         let mut m = 0;
         while m < proposals.len() && vsig[off + m].argmax == proposals[m] {
@@ -190,34 +302,61 @@ pub fn generate(
         let bonus = vsig[off + m].argmax;
         let verify_ns = t_verify.elapsed().as_nanos() as u64;
 
-        committed.extend_from_slice(&proposals[..m]);
-        committed.push(bonus);
-        target.rollback(c + m);
-        draft.rollback(c + m);
+        self.committed.extend_from_slice(&proposals[..m]);
+        self.committed.push(bonus);
+        self.target.rollback(c + m);
+        self.draft.rollback(c + m);
 
-        ctrl.on_verify(m, proposals.len());
-        rounds.push(RoundStat {
+        self.ctrl.on_verify(m, proposals.len());
+        let arm = self.ctrl.current_arm();
+        self.rounds.push(RoundStat {
             drafted: proposals.len(),
             accepted: m,
-            arm: ctrl.current_arm(),
+            arm,
             draft_ns,
             verify_ns,
-            signals: if cfg.collect_signals { sig_rows } else { Vec::new() },
+            signals: if self.cfg.collect_signals { sig_rows } else { Vec::new() },
         });
 
-        if cfg.stop_at_eos && bonus == EOS {
-            break 'outer;
-        }
+        // an EOS bonus is picked up by check_done on the next call — same
+        // endpoint as the classic loop's eager break, one state fewer
+        Ok(StepOutcome::Round(StepCommit {
+            new_tokens: self.committed[c..].to_vec(),
+            drafted: proposals.len(),
+            accepted: m,
+            arm,
+        }))
     }
 
-    // note: the final round may overshoot max_new; full rounds are kept
-    // (matches the python reference decoder — verification is atomic)
-    Ok(GenResult {
-        tokens: committed,
-        prompt_len: n0,
-        rounds,
-        wall_ns: t_start.elapsed().as_nanos() as u64,
-    })
+    /// Close the session and return the accumulated result. Valid at any
+    /// step boundary — an early finish (cancellation, deadline) simply
+    /// returns the committed prefix.
+    pub fn finish(self) -> GenResult {
+        // note: the final round may overshoot max_new; full rounds are
+        // kept (matches the python reference decoder — verification is
+        // atomic)
+        GenResult {
+            tokens: self.committed,
+            prompt_len: self.prompt_len,
+            rounds: self.rounds,
+            wall_ns: self.t_start.elapsed().as_nanos() as u64,
+        }
+    }
+}
+
+/// Run one full generation with speculative decoding: the thin
+/// run-to-completion loop over [`SpecSession`] (the harness / CLI path).
+pub fn generate(
+    draft: &mut dyn LanguageModel,
+    target: &mut dyn LanguageModel,
+    ctrl: &mut dyn DecodeControl,
+    rng: &mut Rng,
+    prompt: &[u32],
+    cfg: &GenConfig,
+) -> anyhow::Result<GenResult> {
+    let mut session = SpecSession::new(draft, target, ctrl, rng, prompt, cfg)?;
+    while let StepOutcome::Round(_) = session.step()? {}
+    Ok(session.finish())
 }
 
 /// Plain target-only greedy decoding (the correctness oracle and the

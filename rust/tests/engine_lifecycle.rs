@@ -1,0 +1,483 @@
+//! Request-lifecycle integration tests on the simulator backend
+//! (docs/ARCHITECTURE.md §10) — streaming, cancellation, deadlines, and
+//! admission control:
+//!
+//!   * streamed-token concatenation == the non-streaming reply body ==
+//!     the sequential-engine / greedy-oracle output, at workers {1, 4} ×
+//!     batch windows {1, 8};
+//!   * mid-decode cancellation returns a partial prefix, frees the KV
+//!     slot and any pending batch seat (the engine keeps serving and
+//!     shuts down cleanly — no batcher deadlock), and preserves bandit
+//!     play-count conservation;
+//!   * an expired deadline produces an `Expired` reply instead of decode
+//!     work;
+//!   * a full queue sheds arrivals with `Rejected` (HTTP 429), and the
+//!     HTTP layer enforces the 413 body bound, reassembles split bodies,
+//!     and streams SSE events that concatenate to the unary reply.
+
+use std::io::{Read, Write};
+use std::sync::Arc;
+use std::time::Duration;
+
+use tapout::engine::{
+    BackendKind, BatchConfig, Engine, EngineConfig, FinishStatus, HttpServer, Policy, Request,
+    Response, StreamEvent,
+};
+use tapout::models::{sim_encode, Scenario, SimModel};
+use tapout::spec::{greedy, GenConfig, BOS};
+use tapout::util::Json;
+
+const MAX_NEW: usize = 48;
+const TIMEOUT: Duration = Duration::from_secs(120);
+
+fn config(workers: usize, slots: usize, batch: BatchConfig) -> EngineConfig {
+    EngineConfig {
+        method: "seq-ucb1".into(),
+        gamma_max: 64,
+        sched: Policy::Fcfs,
+        slots,
+        workers,
+        backend: BackendKind::sim_default(),
+        verify_batch: batch,
+        ..EngineConfig::default()
+    }
+}
+
+/// The target-only greedy continuation the engine must reproduce
+/// (identical to the oracle in engine_concurrent.rs).
+fn oracle_tokens(text: &str, max_new: usize) -> Vec<u32> {
+    let mut prompt = vec![BOS];
+    prompt.extend(sim_encode(text));
+    let mut req = Request::new(0, text, max_new);
+    req.prompt = prompt.clone();
+    let mut target = SimModel::target(Scenario::new(req.scenario_seed(), &req.category));
+    let cfg = GenConfig { max_new, stop_at_eos: true, ..GenConfig::default() };
+    let r = greedy(&mut target, &prompt, &cfg).unwrap();
+    r.new_tokens().to_vec()
+}
+
+/// Drain one streaming reply: (concatenated ids, concatenated text,
+/// terminal response).
+fn drain_stream(rx: std::sync::mpsc::Receiver<StreamEvent>) -> (Vec<u32>, String, Response) {
+    let mut ids = Vec::new();
+    let mut text = String::new();
+    loop {
+        match rx.recv_timeout(TIMEOUT).expect("stream must terminate") {
+            StreamEvent::Tokens { ids: i, text: t, .. } => {
+                ids.extend(i);
+                text.push_str(&t);
+            }
+            StreamEvent::Done(resp) => return (ids, text, *resp),
+        }
+    }
+}
+
+#[test]
+fn streamed_tokens_match_body_and_oracle_across_workers_and_windows() {
+    let prompts: Vec<String> = (0..8)
+        .map(|i| format!("lifecycle streaming request number {i}: describe the outcome"))
+        .collect();
+
+    for workers in [1usize, 4] {
+        for window in [1usize, 8] {
+            let eng = Engine::start(config(
+                workers,
+                workers,
+                BatchConfig { max_batch: window, window_us: 200 },
+            ))
+            .unwrap();
+
+            // non-streaming replies (the sequential-engine reference at
+            // workers=1, and the same engine's own unary path otherwise)
+            let body: Vec<Response> = prompts
+                .iter()
+                .map(|p| {
+                    let r = eng.submit(p, MAX_NEW).recv_timeout(TIMEOUT).unwrap();
+                    assert!(r.is_ok(), "{:?}", r.error);
+                    r
+                })
+                .collect();
+
+            // streaming replies for the same prompts
+            for (i, p) in prompts.iter().enumerate() {
+                let rx = eng.submit_request_streaming(Request::new(0, p.clone(), MAX_NEW));
+                let (ids, text, done) = drain_stream(rx);
+                assert_eq!(done.status, FinishStatus::Done);
+                assert_eq!(
+                    ids,
+                    done.result.new_tokens(),
+                    "workers {workers} window {window} req {i}: chunks != terminal body"
+                );
+                assert_eq!(
+                    text, done.text,
+                    "workers {workers} window {window} req {i}: chunk text != body text"
+                );
+                assert_eq!(
+                    ids,
+                    body[i].result.new_tokens(),
+                    "workers {workers} window {window} req {i}: streamed != non-streaming"
+                );
+                assert_eq!(
+                    ids,
+                    oracle_tokens(p, MAX_NEW),
+                    "workers {workers} window {window} req {i}: diverged from greedy oracle"
+                );
+            }
+            eng.shutdown();
+        }
+    }
+}
+
+#[test]
+fn cancelled_before_decode_is_terminal_and_releases_the_ledger() {
+    let eng = Engine::start(config(1, 1, BatchConfig::off())).unwrap();
+    let req = Request::new(0, "cancel me before anything happens", MAX_NEW);
+    let flag = req.cancel_flag();
+    flag.cancel();
+    let r = eng.submit_request(req).recv_timeout(TIMEOUT).unwrap();
+    assert_eq!(r.status, FinishStatus::Cancelled);
+    assert!(!r.is_ok());
+    assert!(r.result.new_tokens().is_empty(), "nothing decoded");
+
+    // the engine keeps serving, and the scheduler ledger fully drained
+    let ok = eng.submit("follow-up after cancellation", MAX_NEW).recv_timeout(TIMEOUT).unwrap();
+    assert!(ok.is_ok());
+    let j = eng.metrics_json();
+    let sched = j.get("sched").unwrap();
+    assert_eq!(sched.get("in_flight").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(sched.get("pending_cost").unwrap().as_usize().unwrap(), 0);
+    let lifecycle = j.get("engine").unwrap().get("lifecycle").unwrap();
+    assert_eq!(lifecycle.get("cancelled").unwrap().as_usize().unwrap(), 1);
+    eng.shutdown();
+}
+
+#[test]
+fn mid_decode_cancellation_frees_slot_and_conserves_bandit_counts() {
+    // batcher on with a generous window: the cancelled session's pending
+    // seat must be dropped, not verified, and nothing may deadlock
+    let eng = Engine::start(config(2, 1, BatchConfig { max_batch: 8, window_us: 20_000 })).unwrap();
+    // sim scenarios never emit EOS, so this decode would run ~3800 tokens
+    // (hundreds of rounds) if nobody cancelled it
+    let req = Request::new(0, "very long decode to cancel midway", 3800);
+    let flag = req.cancel_flag();
+    let rx = eng.submit_request_streaming(req);
+
+    // wait for the first committed round, then cancel mid-decode
+    match rx.recv_timeout(TIMEOUT).expect("first event") {
+        StreamEvent::Tokens { .. } => flag.cancel(),
+        StreamEvent::Done(r) => panic!("decode finished before cancellation: {:?}", r.status),
+    }
+    let (ids, _text, done) = drain_stream(rx);
+    assert_eq!(done.status, FinishStatus::Cancelled);
+    assert!(!ids.is_empty(), "tokens before the cancel were streamed");
+    assert!(
+        done.result.new_tokens().len() < 3800,
+        "cancellation must land before the full budget"
+    );
+    // the partial prefix is still exact: a prefix of the greedy oracle
+    let oracle = oracle_tokens("very long decode to cancel midway", 3800);
+    assert_eq!(done.result.new_tokens(), &oracle[..done.result.new_tokens().len()]);
+
+    // slot freed: with 1 KV slot, a follow-up can only complete if the
+    // cancelled session released its checkout
+    let ok = eng.submit("follow-up after mid-decode cancel", MAX_NEW).recv_timeout(TIMEOUT).unwrap();
+    assert!(ok.is_ok(), "{:?}", ok.error);
+    assert_eq!(ok.result.new_tokens(), &oracle_tokens("follow-up after mid-decode cancel", MAX_NEW)[..]);
+
+    // bandit play-count conservation: every reward landed on exactly one
+    // counted play, even though one round's verification was dropped
+    let counts = eng.bandit_counts().expect("seq-ucb1 has a shared bandit");
+    assert_eq!(counts.iter().sum::<u64>(), eng.bandit_updates());
+    assert!(eng.bandit_sessions() >= eng.bandit_updates());
+    assert!(
+        eng.bandit_sessions() - eng.bandit_updates() <= 1,
+        "at most the aborted round may be reward-less"
+    );
+
+    use std::sync::atomic::Ordering;
+    assert_eq!(eng.stats.lifecycle.cancelled.load(Ordering::Relaxed), 1);
+    // shutdown must not hang on the batcher (the dropped seat is gone)
+    eng.shutdown();
+}
+
+#[test]
+fn expired_deadline_yields_expired_response_and_engine_survives() {
+    let eng = Engine::start(config(1, 1, BatchConfig::default())).unwrap();
+    let req = Request::new(0, "this request is already too late", MAX_NEW).with_deadline_ms(0);
+    let r = eng.submit_request(req).recv_timeout(TIMEOUT).unwrap();
+    assert_eq!(r.status, FinishStatus::Expired);
+    assert!(!r.is_ok());
+
+    let ok = eng.submit("on time", MAX_NEW).recv_timeout(TIMEOUT).unwrap();
+    assert!(ok.is_ok());
+    use std::sync::atomic::Ordering;
+    assert_eq!(eng.stats.lifecycle.expired.load(Ordering::Relaxed), 1);
+    assert_eq!(eng.metrics.lock().unwrap().failed, 0, "expiry is not a failure");
+    eng.shutdown();
+}
+
+#[test]
+fn default_deadline_from_config_applies_to_plain_submits() {
+    let mut cfg = config(1, 1, BatchConfig::off());
+    cfg.default_deadline_ms = 1; // expires almost immediately
+    let eng = Engine::start(cfg).unwrap();
+    // occupy the only worker so the victim expires in the queue; the
+    // occupier carries an explicit generous deadline, which suppresses
+    // the server default
+    let occupy = eng.submit_request_streaming(
+        Request::new(0, "occupying decode", 3800).with_deadline_ms(600_000),
+    );
+    match occupy.recv_timeout(TIMEOUT).unwrap() {
+        StreamEvent::Tokens { .. } => {}
+        StreamEvent::Done(r) => panic!("occupier ended early: {:?}", r.status),
+    }
+    let victim = eng.submit("queued past its deadline", MAX_NEW);
+    let r = victim.recv_timeout(TIMEOUT).unwrap();
+    assert_eq!(r.status, FinishStatus::Expired);
+    let (_ids, _text, done) = drain_stream(occupy);
+    assert_eq!(done.status, FinishStatus::Done, "explicit deadline overrides the default");
+    eng.shutdown();
+}
+
+#[test]
+fn overload_sheds_with_rejected_status_and_wait_estimate() {
+    let mut cfg = config(1, 1, BatchConfig::off());
+    cfg.max_queue = 2;
+    let eng = Engine::start(cfg).unwrap();
+
+    // occupy the single worker (streaming, so we know decode started and
+    // the queue is empty again)
+    let occupy_req = Request::new(0, "occupy the worker for a while", 3800);
+    let occupy_flag = occupy_req.cancel_flag();
+    let occupy = eng.submit_request_streaming(occupy_req);
+    match occupy.recv_timeout(TIMEOUT).unwrap() {
+        StreamEvent::Tokens { .. } => {}
+        StreamEvent::Done(r) => panic!("occupier ended early: {:?}", r.status),
+    }
+
+    // queue capacity is 2: exactly two of these five are admitted
+    let rxs: Vec<_> = (0..5).map(|i| eng.submit(&format!("burst item {i}"), 16)).collect();
+    let responses: Vec<Response> =
+        rxs.into_iter().map(|rx| rx.recv_timeout(TIMEOUT).unwrap()).collect();
+    let rejected: Vec<&Response> =
+        responses.iter().filter(|r| r.status == FinishStatus::Rejected).collect();
+    let done = responses.iter().filter(|r| r.is_ok()).count();
+    assert_eq!(rejected.len(), 3, "queue of 2 must shed 3 of 5: {responses:?}");
+    assert_eq!(done, 2);
+    for r in &rejected {
+        let msg = r.error.as_deref().unwrap_or("");
+        assert!(msg.contains("queue full"), "shed reason must be explicit: {msg}");
+        assert!(msg.contains("queue-wait estimate"), "429 carries the SJF estimate: {msg}");
+    }
+    use std::sync::atomic::Ordering;
+    assert_eq!(eng.stats.lifecycle.rejected.load(Ordering::Relaxed), 3);
+
+    // the occupier either finished on its own while the burst drained or
+    // gets cancelled here — both release its slot for shutdown
+    occupy_flag.cancel();
+    let (_ids, _text, done_resp) = drain_stream(occupy);
+    assert!(
+        matches!(done_resp.status, FinishStatus::Done | FinishStatus::Cancelled),
+        "unexpected occupier exit: {:?}",
+        done_resp.status
+    );
+    eng.shutdown();
+}
+
+#[test]
+fn dead_queue_entries_do_not_hold_admission_seats() {
+    let mut cfg = config(1, 1, BatchConfig::off());
+    cfg.max_queue = 1;
+    let eng = Engine::start(cfg).unwrap();
+
+    // occupy the single worker, then fill the queue of 1
+    let occupy_req = Request::new(0, "occupy the worker for eviction test", 3800);
+    let occupy_flag = occupy_req.cancel_flag();
+    let occupy = eng.submit_request_streaming(occupy_req);
+    match occupy.recv_timeout(TIMEOUT).unwrap() {
+        StreamEvent::Tokens { .. } => {}
+        StreamEvent::Done(r) => panic!("occupier ended early: {:?}", r.status),
+    }
+    let seat_holder = Request::new(0, "queued then cancelled", 16);
+    let seat_flag = seat_holder.cancel_flag();
+    let seat_rx = eng.submit_request(seat_holder);
+
+    // cancel the queued request, then submit another: the dispatcher must
+    // evict the dead entry and admit the newcomer instead of shedding it
+    seat_flag.cancel();
+    let newcomer = eng.submit("admitted after eviction", 16);
+
+    let seat = seat_rx.recv_timeout(TIMEOUT).unwrap();
+    assert_eq!(seat.status, FinishStatus::Cancelled, "{:?}", seat.error);
+    let r = newcomer.recv_timeout(TIMEOUT).unwrap();
+    assert!(r.is_ok(), "evicting the dead entry must admit the newcomer: {:?}", r.error);
+
+    occupy_flag.cancel();
+    let (_ids, _text, done) = drain_stream(occupy);
+    assert!(matches!(done.status, FinishStatus::Done | FinishStatus::Cancelled));
+    eng.shutdown();
+}
+
+// ---------------------------------------------------------------- HTTP --
+
+fn http_get(addr: &str, path: &str) -> (u16, String) {
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).unwrap();
+    parse_http(&buf)
+}
+
+fn http_post(addr: &str, path: &str, body: &str) -> (u16, String) {
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    write!(
+        s,
+        "POST {path} HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).unwrap();
+    parse_http(&buf)
+}
+
+fn parse_http(raw: &str) -> (u16, String) {
+    let code: u16 =
+        raw.split_whitespace().nth(1).and_then(|c| c.parse().ok()).unwrap_or(0);
+    let body = raw.split("\r\n\r\n").skip(1).collect::<Vec<_>>().join("\r\n\r\n");
+    (code, body)
+}
+
+#[test]
+fn http_streaming_split_bodies_and_413() {
+    let eng = Arc::new(Engine::start(config(2, 2, BatchConfig::default())).unwrap());
+    let http = HttpServer::start(eng.clone(), 0).unwrap();
+    let addr = http.addr.clone();
+
+    // 1) oversize body: declared length alone triggers the 413 — the
+    // server must not wait for (or truncate) a megabyte of JSON
+    {
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        write!(s, "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: 2000000\r\n\r\n")
+            .unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        let (code, body) = parse_http(&buf);
+        assert_eq!(code, 413, "{body}");
+        assert!(body.contains("body too large"), "{body}");
+    }
+
+    // 2) body split across two TCP writes reassembles (no truncated-JSON
+    // decode error)
+    let unary_text = {
+        let body = r#"{"prompt": "split body request", "max_new": 24}"#;
+        let (a, b) = body.split_at(17);
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        write!(s, "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n", body.len())
+            .unwrap();
+        s.write_all(a.as_bytes()).unwrap();
+        s.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        s.write_all(b.as_bytes()).unwrap();
+        s.flush().unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        let (code, body) = parse_http(&buf);
+        assert_eq!(code, 200, "{body}");
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("status").unwrap().as_str().unwrap(), "done");
+        j.get("text").unwrap().as_str().unwrap().to_string()
+    };
+
+    // 3) a declared body that never fully arrives is a 400, not a hang
+    {
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        write!(s, "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: 50\r\n\r\nshort")
+            .unwrap();
+        s.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        let (code, body) = parse_http(&buf);
+        assert_eq!(code, 400, "{body}");
+        assert!(body.contains("content-length"), "{body}");
+    }
+
+    // 4) SSE streaming: data events concatenate to the unary reply text
+    {
+        let body = r#"{"prompt": "split body request", "max_new": 24, "stream": true}"#;
+        let (code, raw) = http_post(&addr, "/generate", body);
+        assert_eq!(code, 200);
+        let mut text = String::new();
+        let mut saw_done = false;
+        for line in raw.lines() {
+            let Some(payload) = line.strip_prefix("data: ") else { continue };
+            let j = Json::parse(payload).unwrap_or(Json::Null);
+            if j.get("done").and_then(|x| x.as_bool()).unwrap_or(false) {
+                saw_done = true;
+                assert_eq!(j.get("status").unwrap().as_str().unwrap(), "done");
+                assert_eq!(
+                    j.get("new_tokens").unwrap().as_usize().unwrap(),
+                    unary_text.chars().count(),
+                    "terminal event token count"
+                );
+            } else if let Some(t) = j.get("text").and_then(|x| x.as_str()) {
+                text.push_str(t);
+            }
+        }
+        assert!(saw_done, "stream must end with a done event:\n{raw}");
+        assert_eq!(text, unary_text, "streamed chunks != unary body");
+    }
+
+    // 5) /metrics exposes the lifecycle counters
+    let (code, metrics) = http_get(&addr, "/metrics");
+    assert_eq!(code, 200);
+    let j = Json::parse(&metrics).unwrap();
+    assert!(j.path(&["engine", "lifecycle", "rejected"]).is_some());
+    assert!(j.get("ttft_p95_ms").is_some());
+    assert!(j.get("tpot_p99_ms").is_some());
+}
+
+#[test]
+fn http_sheds_with_429_when_queue_is_full() {
+    let mut cfg = config(1, 1, BatchConfig::off());
+    cfg.max_queue = 1;
+    let eng = Arc::new(Engine::start(cfg).unwrap());
+    let http = HttpServer::start(eng.clone(), 0).unwrap();
+
+    // occupy the worker, then fill the queue of 1
+    let occupy_req = Request::new(0, "occupy the worker", 3800);
+    let occupy_flag = occupy_req.cancel_flag();
+    let occupy = eng.submit_request_streaming(occupy_req);
+    match occupy.recv_timeout(TIMEOUT).unwrap() {
+        StreamEvent::Tokens { .. } => {}
+        StreamEvent::Done(r) => panic!("occupier ended early: {:?}", r.status),
+    }
+    let queued = eng.submit("sits in the queue", 16);
+
+    let (code, body) =
+        http_post(&http.addr, "/generate", r#"{"prompt": "one too many", "max_new": 8}"#);
+    assert_eq!(code, 429, "{body}");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("status").unwrap().as_str().unwrap(), "rejected");
+    assert!(j.get("error").unwrap().as_str().unwrap().contains("queue-wait estimate"));
+
+    // a *streaming* request shed before any tokens also gets the plain
+    // 429 (the status line is held until the first engine event)
+    let (code, body) = http_post(
+        &http.addr,
+        "/generate",
+        r#"{"prompt": "one too many, streamed", "max_new": 8, "stream": true}"#,
+    );
+    assert_eq!(code, 429, "{body}");
+    assert!(body.contains("rejected"), "{body}");
+
+    occupy_flag.cancel();
+    let (_ids, _t, done) = drain_stream(occupy);
+    assert!(
+        matches!(done.status, FinishStatus::Done | FinishStatus::Cancelled),
+        "unexpected occupier exit: {:?}",
+        done.status
+    );
+    assert!(queued.recv_timeout(TIMEOUT).unwrap().is_ok());
+    // the Arc-held engine is leaked at test exit, as in engine_serving.rs
+}

@@ -8,7 +8,10 @@
 
 use tapout::models::sim::{Scenario, SimModel};
 use tapout::models::LanguageModel;
-use tapout::spec::{generate, greedy, GenConfig, MethodSpec, StopController};
+use tapout::spec::{
+    generate, greedy, FinishReason, GenConfig, MethodSpec, SpecSession, StepOutcome,
+    StopController,
+};
 use tapout::util::prop::forall;
 use tapout::util::Rng;
 
@@ -134,6 +137,53 @@ fn gamma_max_is_respected() {
     let r = generate(&mut draft, &mut target, &mut ctrl, &mut rng, &prompt(8), &cfg).unwrap();
     assert!(r.rounds.iter().all(|x| x.drafted <= 11));
     assert!(r.rounds.iter().any(|x| x.drafted == 11), "cap should bind for a strong draft");
+}
+
+#[test]
+fn step_api_is_equivalent_to_generate() {
+    // the step-driven session (ARCHITECTURE.md §10) and the classic
+    // run-to-completion loop must be the same decode: identical committed
+    // tokens and per-round accounting, with the per-step commits
+    // concatenating to exactly the generated suffix
+    for (seed, method) in [(3u64, "seq-ucb1"), (7, "static-5"), (13, "svip")] {
+        let cfg =
+            GenConfig { max_new: 40, gamma_max: 32, stop_at_eos: false, collect_signals: false };
+
+        let (mut draft, mut target) = sim_models(seed, "qa", 0.85);
+        let mut ctrl = MethodSpec::parse(method, ".").unwrap().build(32).unwrap();
+        let mut rng = Rng::new(seed);
+        let want =
+            generate(&mut draft, &mut target, &mut ctrl, &mut rng, &prompt(10), &cfg).unwrap();
+
+        let (mut draft, mut target) = sim_models(seed, "qa", 0.85);
+        let mut ctrl = MethodSpec::parse(method, ".").unwrap().build(32).unwrap();
+        let mut rng = Rng::new(seed);
+        let mut sess = SpecSession::new(
+            &mut draft,
+            &mut target,
+            &mut ctrl,
+            &mut rng,
+            &prompt(10),
+            &cfg,
+        )
+        .unwrap();
+        let mut streamed: Vec<u32> = Vec::new();
+        let reason = loop {
+            match sess.step().unwrap() {
+                StepOutcome::Round(c) => {
+                    assert_eq!(c.accepted + 1, c.new_tokens.len(), "accepted + bonus");
+                    streamed.extend_from_slice(&c.new_tokens);
+                }
+                StepOutcome::Finished(r) => break r,
+            }
+        };
+        assert!(sess.is_finished());
+        assert_eq!(reason, FinishReason::MaxNew, "{method}: EOS-free sim hits the budget");
+        let got = sess.finish();
+        assert_eq!(got.tokens, want.tokens, "{method}: step loop diverged from generate");
+        assert_eq!(got.rounds.len(), want.rounds.len(), "{method}");
+        assert_eq!(streamed, got.new_tokens(), "{method}: commits must concatenate exactly");
+    }
 }
 
 #[test]
