@@ -8,7 +8,9 @@
 use std::path::Path;
 use std::time::Instant;
 
-use tapout::engine::{BackendKind, BatchConfig, Engine, EngineConfig, FinishStatus, Policy};
+use tapout::engine::{
+    BackendKind, BatchConfig, Engine, EngineConfig, EngineMode, FinishStatus, Policy,
+};
 use tapout::harness::{run_method, run_probe, sim_suite, Backend};
 use tapout::models::{LanguageModel, Manifest, ModelAssets, PjrtModel};
 use tapout::runtime::Runtime;
@@ -20,6 +22,11 @@ use tapout::util::Json;
 /// trajectory is tracked across PRs (schema below in `serving_scaling`).
 const BENCH_JSON_PATH: &str = "BENCH_serving.json";
 
+/// Workers-vs-Continuous execution-core comparison lands here
+/// (`tapout.bench.continuous.v1`, schema below in
+/// `continuous_vs_workers`).
+const BENCH_CONTINUOUS_JSON_PATH: &str = "BENCH_continuous.json";
+
 fn main() {
     sim_tables();
     let mut report = Json::obj();
@@ -30,7 +37,123 @@ fn main() {
         Ok(()) => println!("\n[wrote {BENCH_JSON_PATH}]"),
         Err(e) => eprintln!("\n[failed to write {BENCH_JSON_PATH}: {e}]"),
     }
+    let mut creport = Json::obj();
+    creport.set("schema", "tapout.bench.continuous.v1");
+    continuous_vs_workers(&mut creport);
+    match std::fs::write(BENCH_CONTINUOUS_JSON_PATH, creport.render()) {
+        Ok(()) => println!("\n[wrote {BENCH_CONTINUOUS_JSON_PATH}]"),
+        Err(e) => eprintln!("\n[failed to write {BENCH_CONTINUOUS_JSON_PATH}: {e}]"),
+    }
     pjrt_ladder();
+}
+
+/// Workers vs Continuous execution core at slots {1, 2, 4, 8} on the sim
+/// backend (docs/ARCHITECTURE.md §11): the same request burst through
+/// the thread-per-request worker pool and through the continuous-batching
+/// step loop. Outputs are asserted byte-identical (lossless greedy
+/// speculative decoding), so the comparison isolates the execution
+/// model. The headline quantity is the *draft dispatch count*
+/// (`engine.draft.forwards`): the step loop coalesces every in-flight
+/// session's drafting into one forward per micro-round, so at slots ≥ 4
+/// it must dispatch strictly fewer draft forwards than the worker pool —
+/// the per-round kernel-launch amortization BanditSpec-style serving
+/// loops buy.
+fn continuous_vs_workers(report: &mut Json) {
+    let fast = std::env::var("TAPOUT_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let (n_req, max_new) = if fast { (16, 48) } else { (48, 128) };
+    let cats = ["coding", "qa", "writing", "math", "extraction"];
+    let prompts: Vec<String> = (0..n_req)
+        .map(|i| format!("{} continuous bench request {i} with a moderately long body", cats[i % cats.len()]))
+        .collect();
+
+    group(&format!(
+        "execution core: Workers vs Continuous, {n_req}-request burst, max_new {max_new} (sim)"
+    ));
+    let mut reference: Vec<Vec<u32>> = Vec::new();
+    let mut rows: Vec<Json> = Vec::new();
+    for slots in [1usize, 2, 4, 8] {
+        let mut forwards = [0u64; 2];
+        for (mi, mode) in [EngineMode::Workers, EngineMode::Continuous].into_iter().enumerate() {
+            let eng = Engine::start(EngineConfig {
+                method: "seq-ucb1".into(),
+                gamma_max: 128,
+                sched: Policy::Fcfs,
+                slots,
+                workers: slots,
+                backend: BackendKind::sim_default(),
+                verify_batch: BatchConfig::default(),
+                mode,
+                ..EngineConfig::default()
+            })
+            .unwrap();
+            let t0 = Instant::now();
+            let rxs: Vec<_> = prompts.iter().map(|p| eng.submit(p, max_new)).collect();
+            let outputs: Vec<Vec<u32>> = rxs
+                .into_iter()
+                .map(|rx| {
+                    let r = rx.recv().unwrap();
+                    assert!(r.is_ok(), "{:?}", r.error);
+                    r.result.new_tokens().to_vec()
+                })
+                .collect();
+            let elapsed_ns = t0.elapsed().as_nanos() as f64;
+            if reference.is_empty() {
+                reference = outputs;
+            } else {
+                assert_eq!(
+                    outputs, reference,
+                    "{} slots={slots}: output diverged from the reference burst",
+                    mode.label()
+                );
+            }
+            let (new_tokens, lat) = {
+                let mut m = eng.metrics.lock().unwrap();
+                let mut lat = Json::obj();
+                lat.set("ttft_p50_ms", m.ttft_ms.percentile(50.0))
+                    .set("ttft_p95_ms", m.ttft_ms.percentile(95.0))
+                    .set("tpot_p50_ms", m.tpot_ms.percentile(50.0))
+                    .set("tpot_p95_ms", m.tpot_ms.percentile(95.0));
+                (m.new_tokens, lat)
+            };
+            use std::sync::atomic::Ordering;
+            let fw = eng.stats.draft.forwards.load(Ordering::Relaxed);
+            let occ = eng.stats.draft.mean_occupancy();
+            forwards[mi] = fw;
+            let tok_s = new_tokens as f64 / (elapsed_ns / 1e9);
+            println!(
+                "  {:<10} slots={slots}: {new_tokens} tokens in {}  -> {tok_s:>9.0} tok/s  \
+                 [draft forwards {fw}, occupancy {occ:.2}]",
+                mode.label(),
+                fmt_ns(elapsed_ns),
+            );
+            let mut row = Json::obj();
+            row.set("mode", mode.label())
+                .set("slots", slots)
+                .set("throughput_tok_s", tok_s)
+                .set("wall_ms", elapsed_ns / 1e6)
+                .set("draft_forwards", fw as usize)
+                .set("draft_occupancy", occ)
+                .set("latency", lat);
+            rows.push(row);
+            eng.shutdown();
+        }
+        println!(
+            "    draft dispatches: workers {} vs continuous {}  ({:.2}x fewer)",
+            forwards[0],
+            forwards[1],
+            forwards[0] as f64 / forwards[1].max(1) as f64
+        );
+        if slots >= 4 {
+            assert!(
+                forwards[1] < forwards[0],
+                "slots {slots}: the step loop must dispatch fewer draft forwards \
+                 ({} continuous vs {} workers)",
+                forwards[1],
+                forwards[0]
+            );
+        }
+    }
+    report.set("requests", n_req).set("max_new", max_new).set("modes", rows);
 }
 
 /// Multi-worker serving throughput, sequential vs batched verification,

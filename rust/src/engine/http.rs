@@ -145,6 +145,7 @@ fn route(engine: &Engine, method: &str, path: &str) -> (u16, Json) {
                 .set("pair", engine.config.pair.as_str())
                 .set("method", engine.config.method.as_str())
                 .set("backend", engine.config.backend.label())
+                .set("mode", engine.config.mode.label())
                 .set("workers", engine.config.workers)
                 .set("slots", engine.config.slots)
                 .set("max_batch", engine.config.verify_batch.max_batch)

@@ -237,6 +237,161 @@ impl BatchStats {
     }
 }
 
+/// Lock-free gauges for *draft-side* forwards (docs/ARCHITECTURE.md
+/// §11). Updated by decode workers (per-request cost deltas of the
+/// slot's draft model) in Workers mode and by the continuous stepper
+/// (per-micro-round deltas of the shared batched drafter) in Continuous
+/// mode, so the two execution models are directly comparable: Continuous
+/// coalesces every in-flight session's drafting into one forward per
+/// micro-round, which is exactly a lower `forwards` count for the same
+/// `rows`.
+#[derive(Debug, Default)]
+pub struct DraftStats {
+    /// draft forwards dispatched (`ModelCost::calls` deltas)
+    pub forwards: AtomicU64,
+    /// per-session draft blocks served (Σ batch occupancy; == `forwards`
+    /// in Workers mode, where every dispatch serves one session)
+    pub sessions: AtomicU64,
+    /// real draft token rows computed
+    pub rows: AtomicU64,
+    /// rows actually computed after shape-bucket padding
+    pub padded_rows: AtomicU64,
+}
+
+impl DraftStats {
+    /// Fold one draft-cost delta covering `sessions` per-session blocks.
+    pub fn note(&self, sessions: usize, calls: u64, rows: u64, padded_rows: u64) {
+        self.forwards.fetch_add(calls, Ordering::Relaxed);
+        self.sessions.fetch_add(sessions as u64, Ordering::Relaxed);
+        self.rows.fetch_add(rows, Ordering::Relaxed);
+        self.padded_rows.fetch_add(padded_rows, Ordering::Relaxed);
+    }
+
+    /// Mean per-session blocks served per dispatched forward (1.0 = no
+    /// cross-session draft coalescing).
+    pub fn mean_occupancy(&self) -> f64 {
+        let f = self.forwards.load(Ordering::Relaxed);
+        if f == 0 {
+            return 0.0;
+        }
+        self.sessions.load(Ordering::Relaxed) as f64 / f as f64
+    }
+
+    /// Fraction of computed draft rows that were shape-bucket padding.
+    pub fn pad_waste_frac(&self) -> f64 {
+        let padded = self.padded_rows.load(Ordering::Relaxed);
+        if padded == 0 {
+            return 0.0;
+        }
+        1.0 - self.rows.load(Ordering::Relaxed) as f64 / padded as f64
+    }
+
+    /// JSON object for the `/metrics` `engine.draft` field.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("forwards", self.forwards.load(Ordering::Relaxed) as usize)
+            .set("sessions", self.sessions.load(Ordering::Relaxed) as usize)
+            .set("mean_occupancy", self.mean_occupancy())
+            .set("rows", self.rows.load(Ordering::Relaxed) as usize)
+            .set("pad_waste_frac", self.pad_waste_frac());
+        o
+    }
+}
+
+/// Size of the per-iteration in-flight histogram (buckets 0..=31 plus a
+/// saturating 32+ bucket) — covers any realistic slot count.
+pub const STEP_HIST_BUCKETS: usize = 33;
+
+/// Lock-free gauges for the continuous-batching step loop
+/// (docs/ARCHITECTURE.md §11): how many sessions each iteration held,
+/// how admissions interleave with decoding, and what the batched draft
+/// path is buying. Updated once per iteration by the stepper thread;
+/// all zero in Workers mode (the `engine.step` object is only rendered
+/// once an iteration has run).
+#[derive(Debug)]
+pub struct StepStats {
+    /// step-loop iterations that drove at least one session
+    pub steps: AtomicU64,
+    /// requests admitted into KV slots by the stepper
+    pub admitted: AtomicU64,
+    /// sessions retired (finished / cancelled / expired / failed)
+    pub retired: AtomicU64,
+    /// per-iteration in-flight histogram: `inflight_hist[n]` counts
+    /// iterations that stepped `n` sessions (last bucket saturates)
+    pub inflight_hist: Vec<AtomicU64>,
+    /// largest in-flight count any iteration stepped
+    pub peak_inflight: AtomicUsize,
+}
+
+impl Default for StepStats {
+    fn default() -> Self {
+        StepStats {
+            steps: AtomicU64::new(0),
+            admitted: AtomicU64::new(0),
+            retired: AtomicU64::new(0),
+            inflight_hist: (0..STEP_HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            peak_inflight: AtomicUsize::new(0),
+        }
+    }
+}
+
+impl StepStats {
+    /// Record one executed iteration that stepped `in_flight` sessions
+    /// and admitted `admitted` new requests.
+    pub fn note_step(&self, in_flight: usize, admitted: usize) {
+        self.steps.fetch_add(1, Ordering::Relaxed);
+        self.admitted.fetch_add(admitted as u64, Ordering::Relaxed);
+        self.inflight_hist[in_flight.min(STEP_HIST_BUCKETS - 1)].fetch_add(1, Ordering::Relaxed);
+        self.peak_inflight.fetch_max(in_flight, Ordering::Relaxed);
+    }
+
+    /// Mean admissions per executed iteration.
+    pub fn admissions_per_step(&self) -> f64 {
+        let s = self.steps.load(Ordering::Relaxed);
+        if s == 0 {
+            return 0.0;
+        }
+        self.admitted.load(Ordering::Relaxed) as f64 / s as f64
+    }
+
+    /// Mean sessions stepped per iteration.
+    pub fn mean_inflight(&self) -> f64 {
+        let s = self.steps.load(Ordering::Relaxed);
+        if s == 0 {
+            return 0.0;
+        }
+        let weighted: u64 = self
+            .inflight_hist
+            .iter()
+            .enumerate()
+            .map(|(n, c)| n as u64 * c.load(Ordering::Relaxed))
+            .sum();
+        weighted as f64 / s as f64
+    }
+
+    /// JSON object for the `/metrics` `engine.step` field. The draft
+    /// occupancy/pad-waste gauges live in `draft` (the same numbers as
+    /// `engine.draft`) because in Continuous mode every draft forward is
+    /// a step-loop micro-round.
+    pub fn to_json(&self, draft: &DraftStats) -> Json {
+        // trim trailing empty buckets so the histogram stays readable
+        let hist: Vec<u64> =
+            self.inflight_hist.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let keep = hist.iter().rposition(|&c| c > 0).map(|p| p + 1).unwrap_or(1);
+        let mut o = Json::obj();
+        o.set("steps", self.steps.load(Ordering::Relaxed) as usize)
+            .set("admitted", self.admitted.load(Ordering::Relaxed) as usize)
+            .set("retired", self.retired.load(Ordering::Relaxed) as usize)
+            .set("admissions_per_step", self.admissions_per_step())
+            .set("mean_in_flight", self.mean_inflight())
+            .set("peak_in_flight", self.peak_inflight.load(Ordering::Relaxed))
+            .set("in_flight_hist", hist[..keep].iter().map(|&c| c as f64).collect::<Vec<f64>>())
+            .set("draft_occupancy", draft.mean_occupancy())
+            .set("draft_pad_waste_frac", draft.pad_waste_frac());
+        o
+    }
+}
+
 /// Lock-free counters for the request lifecycle's non-completion exits
 /// (docs/ARCHITECTURE.md §10): cancelled by the client, expired past the
 /// deadline, shed by the admission controller. Surfaced as the
@@ -277,6 +432,10 @@ pub struct EngineStats {
     pub peak_queue_depth: AtomicUsize,
     /// verification-batcher occupancy / pad-waste gauges
     pub batch: BatchStats,
+    /// draft-side forward gauges (both execution modes)
+    pub draft: DraftStats,
+    /// continuous step-loop gauges (Continuous mode only)
+    pub step: StepStats,
     /// cancelled / expired / rejected lifecycle exits
     pub lifecycle: LifecycleStats,
 }
@@ -290,6 +449,8 @@ impl EngineStats {
             queue_depth: AtomicUsize::new(0),
             peak_queue_depth: AtomicUsize::new(0),
             batch: BatchStats::default(),
+            draft: DraftStats::default(),
+            step: StepStats::default(),
             lifecycle: LifecycleStats::default(),
         }
     }
@@ -326,7 +487,11 @@ impl EngineStats {
             .set("peak_queue_depth", self.peak_queue_depth.load(Ordering::Relaxed))
             .set("utilization", self.utilization(span_ns))
             .set("batch", self.batch.to_json())
+            .set("draft", self.draft.to_json())
             .set("lifecycle", self.lifecycle.to_json());
+        if self.step.steps.load(Ordering::Relaxed) > 0 {
+            o.set("step", self.step.to_json(&self.draft));
+        }
         let per_worker: Vec<Json> = self.workers.iter().map(|w| w.to_json()).collect();
         o.set("per_worker", per_worker);
         o
@@ -347,6 +512,17 @@ impl EngineStats {
                 self.batch.mean_occupancy(),
                 self.batch.peak.load(Ordering::Relaxed),
                 self.batch.pad_waste_frac() * 100.0
+            ));
+        }
+        if self.step.steps.load(Ordering::Relaxed) > 0 {
+            s.push_str(&format!(
+                "step loop: {} iterations  mean in-flight {:.2}  peak {}  \
+                 admissions/step {:.2}  draft occupancy {:.2}\n",
+                self.step.steps.load(Ordering::Relaxed),
+                self.step.mean_inflight(),
+                self.step.peak_inflight.load(Ordering::Relaxed),
+                self.step.admissions_per_step(),
+                self.draft.mean_occupancy(),
             ));
         }
         for (i, w) in self.workers.iter().enumerate() {
@@ -454,6 +630,42 @@ mod tests {
         assert_eq!(b.get("batches").unwrap().as_usize().unwrap(), 2);
         assert_eq!(b.get("peak_occupancy").unwrap().as_usize().unwrap(), 4);
         assert!(s.report(1_000).contains("batched verify"));
+    }
+
+    #[test]
+    fn step_stats_histogram_and_rates() {
+        let s = EngineStats::new(1);
+        s.step.note_step(4, 2);
+        s.step.note_step(4, 0);
+        s.step.note_step(1, 1);
+        s.draft.note(9, 3, 18, 32);
+        assert_eq!(s.step.steps.load(Ordering::Relaxed), 3);
+        assert!((s.step.admissions_per_step() - 1.0).abs() < 1e-12);
+        assert!((s.step.mean_inflight() - 3.0).abs() < 1e-12);
+        assert_eq!(s.step.peak_inflight.load(Ordering::Relaxed), 4);
+        assert!((s.draft.mean_occupancy() - 3.0).abs() < 1e-12);
+        assert!((s.draft.pad_waste_frac() - (1.0 - 18.0 / 32.0)).abs() < 1e-12);
+        let j = s.to_json(1_000);
+        let step = j.get("step").expect("step object present once iterations ran");
+        assert_eq!(step.get("steps").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(step.get("peak_in_flight").unwrap().as_usize().unwrap(), 4);
+        let hist = step.get("in_flight_hist").unwrap().f64s();
+        assert_eq!(hist.len(), 5, "trailing empty buckets trimmed");
+        assert_eq!(hist[4] as u64, 2);
+        assert_eq!(hist[1] as u64, 1);
+        let draft = j.get("draft").expect("draft gauges always present");
+        assert_eq!(draft.get("forwards").unwrap().as_usize().unwrap(), 3);
+        assert!(s.report(1_000).contains("step loop"));
+    }
+
+    #[test]
+    fn step_object_absent_in_workers_mode() {
+        let s = EngineStats::new(1);
+        s.draft.note(2, 2, 10, 10);
+        let j = s.to_json(1_000);
+        assert!(j.get("step").is_none(), "no iterations ran");
+        assert!(j.get("draft").is_some());
+        assert!((s.draft.mean_occupancy() - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -1,11 +1,12 @@
 //! Serving layer (the vLLM-router-shaped part of L3): request types and
 //! the per-request lifecycle (cancellation, deadlines, streaming),
-//! admission scheduler + load shedding, concurrent KV slot pool, the
-//! dispatcher + decode worker pool sharing one online bandit, the
-//! cross-session verification batcher, serving metrics, and a minimal
-//! HTTP JSON/SSE API. See docs/ARCHITECTURE.md §3–§5 for the concurrency
-//! design and §10 for the request lifecycle (DESIGN.md keeps the legacy
-//! section map).
+//! admission scheduler + load shedding, concurrent KV slot pool, two
+//! execution cores sharing one online bandit — the dispatcher + decode
+//! worker pool with its cross-session verification batcher, and the
+//! continuous-batching step loop ([`stepper`]) — serving metrics, and a
+//! minimal HTTP JSON/SSE API. See docs/ARCHITECTURE.md §3–§5 for the
+//! concurrency design, §10 for the request lifecycle, and §11 for
+//! continuous batching (DESIGN.md keeps the legacy section map).
 
 pub mod batcher;
 pub mod http;
@@ -14,11 +15,14 @@ pub mod request;
 pub mod scheduler;
 pub mod server;
 pub mod slots;
+pub mod stepper;
 
 pub use batcher::{BatchConfig, BatchedTarget, Batcher, BatcherHandle};
 pub use http::HttpServer;
-pub use metrics::{BatchStats, EngineMetrics, EngineStats, LifecycleStats, WorkerStats};
+pub use metrics::{
+    BatchStats, DraftStats, EngineMetrics, EngineStats, LifecycleStats, StepStats, WorkerStats,
+};
 pub use request::{CancelFlag, EmitClip, FinishStatus, Request, Response, StreamEvent};
 pub use scheduler::{Policy, Scheduler};
-pub use server::{BackendKind, Engine, EngineConfig};
+pub use server::{BackendKind, Engine, EngineConfig, EngineMode};
 pub use slots::{Slot, SlotPool};

@@ -21,11 +21,32 @@
 //! requests always pop in arrival order (`seq` tie-break), in-flight
 //! load notwithstanding — pinned by `sjf_ties_stay_fifo` and
 //! `in_flight_load_never_reorders_the_queue`.
+//!
+//! **Aging** (starvation fix): pure SJF starves a long request forever
+//! under a sustained flood of short jobs — every newcomer outbids it.
+//! The SJF key therefore ages by arrival index:
+//! `key = cost + SJF_AGING_PER_ARRIVAL · seq`. Keys stay static (heap
+//! compatible) yet every later arrival is handicapped by how much
+//! younger it is, so a queued request's *relative* priority rises with
+//! every arrival it has waited through; once
+//! `AGING · (seq_new − seq_old) > cost_old − cost_new` the oldest entry
+//! wins regardless of cost. Cheap jobs still pop first among
+//! near-contemporaries, and equal-key entries stay FIFO. Pinned by
+//! `long_job_is_not_starved_under_short_job_flood`
+//! (rust/tests/engine_lifecycle.rs).
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 use super::request::Request;
+
+/// SJF aging rate, in cost units of handicap per later arrival: a queued
+/// request effectively gets this much cheaper relative to every request
+/// that arrives after it, so a long job starved by a short-job flood is
+/// guaranteed to pop within `cost / SJF_AGING_PER_ARRIVAL` further
+/// arrivals (see the module docs). 16 ≈ one tiny request's cost, so
+/// ordering among contemporaries is still effectively pure SJF.
+pub const SJF_AGING_PER_ARRIVAL: u64 = 16;
 
 /// Admission-ordering policy for queued requests.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -47,8 +68,9 @@ impl Policy {
 }
 
 /// Heap entry: min-(key, seq) ordering via reversed `Ord`. `key` is 0
-/// under FCFS (arrival order decides) and the request's decode cost under
-/// SJF; `seq` breaks ties by arrival so equal-cost jobs stay FIFO.
+/// under FCFS (arrival order decides) and the request's decode cost plus
+/// the arrival-index aging term under SJF; `seq` breaks ties by arrival
+/// so equal-key jobs stay FIFO.
 struct Entry {
     key: u64,
     seq: u64,
@@ -121,12 +143,14 @@ impl Scheduler {
         }
     }
 
-    /// Enqueue a request (O(log n)).
+    /// Enqueue a request (O(log n)). The SJF key carries the arrival-index
+    /// aging term (module docs): older entries win against sufficiently
+    /// newer ones no matter the cost gap, so no request starves.
     pub fn push(&mut self, req: Request) {
         let cost = req.cost() as u64;
         let key = match self.policy {
             Policy::Fcfs => 0,
-            Policy::Sjf => cost,
+            Policy::Sjf => cost + SJF_AGING_PER_ARRIVAL * self.next_seq,
         };
         let seq = self.next_seq;
         self.next_seq += 1;
@@ -333,6 +357,32 @@ mod tests {
         assert_eq!(s.len(), 1);
         assert_eq!(s.pending_cost(), 20, "evicted cost left the pending ledger");
         assert_eq!(s.pop().unwrap().id, 1, "live entries keep their order");
+    }
+
+    #[test]
+    fn aging_promotes_old_entries_past_cheaper_newcomers() {
+        let mut s = Scheduler::new(Policy::Sjf);
+        s.push(req(1, 200, 200)); // cost 400, seq 0 -> key 400
+        // newcomers of cost 20 outbid it only while their aging handicap
+        // is below the cost gap: 20 + 16*seq < 400  =>  seq <= 23
+        for id in 2..=40 {
+            s.push(req(id, 10, 10));
+        }
+        let mut order = Vec::new();
+        while let Some(r) = s.pop() {
+            order.push(r.id);
+        }
+        let pos = order.iter().position(|&id| id == 1).unwrap();
+        assert!(
+            pos <= 24,
+            "aged long job must pop once ~cost/AGING newer arrivals exist: popped at {pos}"
+        );
+        assert!(pos >= 5, "near-contemporaneous short jobs still beat it: popped at {pos}");
+        // short jobs among themselves stay FIFO (equal cost, growing keys)
+        let shorts: Vec<u64> = order.iter().copied().filter(|&id| id != 1).collect();
+        let mut sorted = shorts.clone();
+        sorted.sort_unstable();
+        assert_eq!(shorts, sorted);
     }
 
     #[test]

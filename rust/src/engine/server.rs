@@ -1,11 +1,15 @@
-//! The serving engine: a dispatcher thread feeding a pool of decode
-//! workers (one per KV slot by default), all updating a single shared
-//! TapOut controller with *persistent online bandit state across requests
-//! and workers* (DESIGN.md §2). Requests go in over a channel; each caller
+//! The serving engine: a dispatcher thread feeding either a pool of
+//! decode workers (one per KV slot by default, `EngineMode::Workers`) or
+//! a single continuous-batching step loop over every in-flight session
+//! (`EngineMode::Continuous`, engine/stepper.rs,
+//! docs/ARCHITECTURE.md §11), all updating a single shared TapOut
+//! controller with *persistent online bandit state across requests and
+//! workers* (DESIGN.md §2). Requests go in over a channel; each caller
 //! gets a private response channel — unary or streaming — and failures
 //! are answered explicitly rather than dropped.
 //!
-//! Concurrency layout:
+//! Concurrency layout (Workers mode; Continuous replaces the worker pool
+//! and the batcher thread with one stepper thread owning every slot):
 //!
 //!   submit() ──ch──▶ dispatcher ──sched──▶ worker 0 ─┐
 //!                      (encode,   (mutex +  worker 1 ─┼─▶ SlotPool ──▶
@@ -78,6 +82,30 @@ pub enum BackendKind {
     Sim { quality: f32, rel_cost: f64 },
 }
 
+/// Which execution model drives decoding (docs/ARCHITECTURE.md §2 / §11).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineMode {
+    /// thread-per-request decode workers over the slot pool, with the
+    /// cross-session verification batcher (the PR 1–3 engine; kept as
+    /// the differential oracle for the continuous path)
+    Workers,
+    /// one continuous-batching step loop over every in-flight session:
+    /// iteration-level admission into free KV slots, batched drafting
+    /// micro-rounds, and window-free batched verification
+    /// (`engine/stepper.rs`)
+    Continuous,
+}
+
+impl EngineMode {
+    /// Short name for banners and `/health`.
+    pub fn label(&self) -> &'static str {
+        match self {
+            EngineMode::Workers => "workers",
+            EngineMode::Continuous => "continuous",
+        }
+    }
+}
+
 impl BackendKind {
     /// Strict: an unknown backend name is an error, not a silent PJRT
     /// fallback (which would surface as a misleading artifacts failure).
@@ -132,6 +160,13 @@ pub struct EngineConfig {
     /// default per-request deadline in milliseconds, applied at submit to
     /// requests that carry none. 0 = no default deadline.
     pub default_deadline_ms: u64,
+    /// execution model: thread-per-request decode workers (the
+    /// differential oracle) or the continuous-batching step loop
+    /// (docs/ARCHITECTURE.md §11). In `Continuous` mode `workers` is
+    /// ignored — concurrency is bounded by `slots` — and `verify_batch`
+    /// only gates *whether* verification batches (`max_batch == 0`
+    /// disables coalescing); the step loop itself is the batching window.
+    pub mode: EngineMode,
 }
 
 impl Default for EngineConfig {
@@ -148,13 +183,14 @@ impl Default for EngineConfig {
             verify_batch: BatchConfig::default(),
             max_queue: 0,
             default_deadline_ms: 0,
+            mode: EngineMode::Workers,
         }
     }
 }
 
 /// Prompt/text codec — the manifest tokenizer on PJRT, the fixed byte map
 /// on the simulator.
-enum Codec {
+pub(crate) enum Codec {
     Manifest(Box<Manifest>),
     Sim,
 }
@@ -169,7 +205,7 @@ impl Codec {
         p
     }
 
-    fn decode(&self, tokens: &[u32]) -> String {
+    pub(crate) fn decode(&self, tokens: &[u32]) -> String {
         match self {
             Codec::Manifest(m) => m.decode(tokens),
             Codec::Sim => sim_decode(tokens),
@@ -180,7 +216,7 @@ impl Codec {
 /// Where one request's replies go: a unary response channel, or a
 /// streaming channel that sees each round's committed tokens before the
 /// terminal [`StreamEvent::Done`].
-enum ResponseSink {
+pub(crate) enum ResponseSink {
     Unary(Sender<Response>),
     Stream(Sender<StreamEvent>),
 }
@@ -188,14 +224,14 @@ enum ResponseSink {
 impl ResponseSink {
     /// Does this sink consume per-round token events? Unary sinks don't,
     /// so callers can skip building them (text decode per round).
-    fn wants_tokens(&self) -> bool {
+    pub(crate) fn wants_tokens(&self) -> bool {
         matches!(self, ResponseSink::Stream(_))
     }
 
     /// Emit one round's clipped tokens (no-op for unary sinks). Returns
     /// `false` when the receiver is gone — the worker treats that as a
     /// client disconnect and cancels the request.
-    fn send_tokens(&self, id: u64, ids: &[u32], text: String) -> bool {
+    pub(crate) fn send_tokens(&self, id: u64, ids: &[u32], text: String) -> bool {
         match self {
             ResponseSink::Unary(_) => true,
             ResponseSink::Stream(tx) => {
@@ -206,7 +242,7 @@ impl ResponseSink {
 
     /// Deliver the terminal reply (consumes the sink — exactly one
     /// terminal event per request).
-    fn send_final(self, resp: Response) {
+    pub(crate) fn send_final(self, resp: Response) {
         match self {
             ResponseSink::Unary(tx) => {
                 let _ = tx.send(resp);
@@ -223,30 +259,33 @@ enum Job {
     Shutdown,
 }
 
-struct QueueState {
-    sched: Scheduler,
-    waiters: HashMap<u64, ResponseSink>,
-    shutdown: bool,
+pub(crate) struct QueueState {
+    pub(crate) sched: Scheduler,
+    pub(crate) waiters: HashMap<u64, ResponseSink>,
+    pub(crate) shutdown: bool,
 }
 
-/// State shared by the dispatcher and every worker.
-struct EngineShared {
-    q: Mutex<QueueState>,
-    cv: Condvar,
-    pool: SlotPool,
-    codec: Codec,
-    gamma_max: usize,
-    /// decode worker count (divisor of the admission queue-wait estimate)
-    n_workers: usize,
+/// State shared by the dispatcher and every decode driver (the worker
+/// pool in Workers mode, the step loop in Continuous mode).
+pub(crate) struct EngineShared {
+    pub(crate) q: Mutex<QueueState>,
+    pub(crate) cv: Condvar,
+    pub(crate) pool: SlotPool,
+    pub(crate) codec: Codec,
+    pub(crate) gamma_max: usize,
+    /// decode parallelism (divisor of the admission queue-wait estimate):
+    /// worker threads in Workers mode, KV slots in Continuous mode
+    pub(crate) n_workers: usize,
     /// admission bound on queued requests; 0 = unbounded
-    max_queue: usize,
+    pub(crate) max_queue: usize,
     /// submit side of the verification batcher; `None` when
     /// `verify_batch` is off (workers verify on their slot's own target)
+    /// and always in Continuous mode (the step loop batches directly)
     batcher: Option<BatcherHandle>,
     /// serving-span origin (throughput/utilization time base); reset by
     /// the dispatcher once warmup finishes so XLA compile time never
     /// deflates the reported throughput
-    started: Mutex<Instant>,
+    pub(crate) started: Mutex<Instant>,
 }
 
 /// The serving engine handle: submit requests, read metrics, shut down.
@@ -268,55 +307,78 @@ pub struct Engine {
 
 impl Engine {
     /// Boot the engine: loads artifacts (PJRT backend), builds the slot
-    /// pool and the shared controller, spawns the dispatcher and the
-    /// decode workers.
+    /// pool and the shared controller, then spawns the dispatcher plus
+    /// either the decode-worker pool (`EngineMode::Workers`) or the
+    /// continuous-batching step loop (`EngineMode::Continuous`,
+    /// `engine/stepper.rs`).
     pub fn start(mut config: EngineConfig) -> Result<Engine> {
         // normalize once; every later read of config.workers/slots (http
-        // /health, CLI banner, metrics) sees the effective values
-        config.workers = config.workers.max(1);
+        // /health, CLI banner, metrics) sees the effective values. In
+        // Continuous mode there is one stepper thread and concurrency is
+        // bounded by slots, so `workers` normalizes to the slot count
+        // (it divides the admission queue-wait estimate).
         config.slots = config.slots.max(1);
+        config.workers = match config.mode {
+            EngineMode::Workers => config.workers.max(1),
+            EngineMode::Continuous => config.slots,
+        };
+        let continuous = config.mode == EngineMode::Continuous;
         let n_workers = config.workers;
         let n_slots = config.slots;
         let metrics = Arc::new(Mutex::new(EngineMetrics::default()));
-        let stats = Arc::new(EngineStats::new(n_workers));
+        // per-thread decode counters: one stepper thread in Continuous
+        let stats = Arc::new(EngineStats::new(if continuous { 1 } else { n_workers }));
         let (tx, rx) = channel::<Job>();
 
         let method = MethodSpec::parse(&config.method, &config.artifacts.display().to_string())
             .map_err(|e| anyhow::anyhow!(e))?;
         let controller = SharedController::new(&method, config.gamma_max);
 
-        let (pool, codec, warm_assets, verifier): (_, _, _, Box<dyn LanguageModel>) =
-            match config.backend {
-                BackendKind::Pjrt => {
-                    let manifest = Manifest::load(&config.artifacts)?;
-                    let runtime = Runtime::cpu().context("PJRT client")?;
-                    let (dspec, tspec) = manifest.pair(&config.pair)?;
-                    let (dname, tname) = (dspec.name.clone(), tspec.name.clone());
-                    let draft_assets = ModelAssets::load(&runtime, &manifest, &dname)?;
-                    let target_assets = ModelAssets::load(&runtime, &manifest, &tname)?;
-                    let pool = SlotPool::pjrt(&draft_assets, &target_assets, n_slots)?;
-                    let verifier = Box::new(PjrtBatchVerifier::new(target_assets.clone()));
-                    (
-                        pool,
-                        Codec::Manifest(Box::new(manifest)),
-                        Some((draft_assets, target_assets)),
-                        verifier,
-                    )
-                }
-                BackendKind::Sim { quality, rel_cost } => (
-                    SlotPool::sim(quality, rel_cost, n_slots),
-                    Codec::Sim,
-                    None,
-                    // the sim target is stateless per position, so one
-                    // verifier serves every sequence's batch items
-                    Box::new(SimModel::target(Scenario::new(0, "qa"))),
-                ),
-            };
+        let (pool, codec, warm_assets, verifier, drafter): (
+            _,
+            _,
+            _,
+            Box<dyn LanguageModel>,
+            Box<dyn LanguageModel>,
+        ) = match config.backend {
+            BackendKind::Pjrt => {
+                let manifest = Manifest::load(&config.artifacts)?;
+                let runtime = Runtime::cpu().context("PJRT client")?;
+                let (dspec, tspec) = manifest.pair(&config.pair)?;
+                let (dname, tname) = (dspec.name.clone(), tspec.name.clone());
+                let draft_assets = ModelAssets::load(&runtime, &manifest, &dname)?;
+                let target_assets = ModelAssets::load(&runtime, &manifest, &tname)?;
+                let pool = SlotPool::pjrt(&draft_assets, &target_assets, n_slots)?;
+                let verifier = Box::new(PjrtBatchVerifier::new(target_assets.clone()));
+                // the continuous engine drafts through the same
+                // multi-sequence executor type, over the draft assets
+                let drafter = Box::new(PjrtBatchVerifier::new(draft_assets.clone()));
+                (
+                    pool,
+                    Codec::Manifest(Box::new(manifest)),
+                    Some((draft_assets, target_assets)),
+                    verifier,
+                    drafter,
+                )
+            }
+            BackendKind::Sim { quality, rel_cost } => (
+                SlotPool::sim(quality, rel_cost, n_slots),
+                Codec::Sim,
+                None,
+                // the sim models are stateless per position, so one
+                // verifier/drafter serves every sequence's batch items
+                Box::new(SimModel::target(Scenario::new(0, "qa"))),
+                Box::new(SimModel::draft(Scenario::new(0, "qa"), quality, rel_cost)),
+            ),
+        };
 
-        let batcher = if config.verify_batch.enabled() {
-            Some(Batcher::spawn(verifier, config.verify_batch, stats.clone())?)
+        // the worker engine coalesces verification through the batcher
+        // thread; the step loop keeps the verifier and batches directly
+        // (it *is* the window)
+        let (batcher, verifier) = if !continuous && config.verify_batch.enabled() {
+            (Some(Batcher::spawn(verifier, config.verify_batch, stats.clone())?), None)
         } else {
-            None
+            (None, Some(verifier))
         };
 
         let shared = Arc::new(EngineShared {
@@ -335,23 +397,45 @@ impl Engine {
             started: Mutex::new(Instant::now()),
         });
 
-        // mint every per-worker session up front so a controller build
-        // error (e.g. a missing classifier file) fails `start` cleanly
-        // before any thread exists
-        let mut sessions = Vec::with_capacity(n_workers);
-        for _ in 0..n_workers {
+        // mint every per-thread (Workers) / per-slot (Continuous) session
+        // controller up front so a controller build error (e.g. a missing
+        // classifier file) fails `start` cleanly before any thread exists
+        let n_sessions = if continuous { n_slots } else { n_workers };
+        let mut sessions = Vec::with_capacity(n_sessions);
+        for _ in 0..n_sessions {
             sessions.push(controller.session()?);
         }
-        let mut workers = Vec::with_capacity(n_workers);
-        for (i, session) in sessions.into_iter().enumerate() {
+        let mut workers = Vec::new();
+        if continuous {
             let sh = shared.clone();
             let m = metrics.clone();
             let st = stats.clone();
+            let verify_cap = config.verify_batch.max_batch;
+            let verifier = verifier.expect("continuous mode keeps its verifier");
             workers.push(
                 std::thread::Builder::new()
-                    .name(format!("tapout-worker-{i}"))
-                    .spawn(move || worker_loop(i, sh, session, m, st))?,
+                    .name("tapout-stepper".into())
+                    .spawn(move || {
+                        super::stepper::step_loop(
+                            sh, drafter, verifier, sessions, verify_cap, m, st,
+                        )
+                    })?,
             );
+        } else {
+            // workers draft on their slot's own model; with the batcher
+            // off they also verify on their slot's own target
+            drop(drafter);
+            drop(verifier);
+            for (i, session) in sessions.into_iter().enumerate() {
+                let sh = shared.clone();
+                let m = metrics.clone();
+                let st = stats.clone();
+                workers.push(
+                    std::thread::Builder::new()
+                        .name(format!("tapout-worker-{i}"))
+                        .spawn(move || worker_loop(i, sh, session, m, st))?,
+                );
+            }
         }
 
         let sh = shared.clone();
@@ -739,6 +823,7 @@ fn worker_loop(
         let queue_ns = req.arrival.elapsed().as_nanos() as u64;
 
         let seed = req.scenario_seed();
+        let draft_before = slot.draft.cost();
         slot.draft.begin_request(seed, &req.category);
         let t_busy = Instant::now();
         let end = match &shared.batcher {
@@ -785,6 +870,18 @@ fn worker_loop(
         wstats
             .busy_ns
             .fetch_add(t_busy.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        // draft-side dispatch accounting (`engine.draft`): this request's
+        // cost delta on the slot's draft model, so Workers and Continuous
+        // mode are comparable forward-for-forward (every workers-mode
+        // dispatch serves exactly one session)
+        let dc = slot.draft.cost();
+        let calls = dc.calls.saturating_sub(draft_before.calls);
+        stats.draft.note(
+            calls as usize,
+            calls,
+            dc.rows.saturating_sub(draft_before.rows),
+            dc.padded_rows.saturating_sub(draft_before.padded_rows),
+        );
         shared.pool.release(slot);
         wstats.requests.fetch_add(1, Ordering::Relaxed);
         // release this request from the scheduler's in-flight ledger so
@@ -841,7 +938,7 @@ fn worker_loop(
 }
 
 /// Bump the matching lifecycle counter for a non-completion exit.
-fn note_lifecycle(stats: &EngineStats, status: FinishStatus) {
+pub(crate) fn note_lifecycle(stats: &EngineStats, status: FinishStatus) {
     match status {
         FinishStatus::Cancelled => &stats.lifecycle.cancelled,
         FinishStatus::Expired => &stats.lifecycle.expired,
@@ -862,7 +959,7 @@ fn note_lifecycle(stats: &EngineStats, status: FinishStatus) {
 /// suffix == its round-by-round application, pinned by the EmitClip unit
 /// tests), so the streamed-concatenation-equals-body guarantee has a
 /// single implementation.
-fn finish_response(
+pub(crate) fn finish_response(
     shared: &EngineShared,
     req: &Request,
     mut result: crate::spec::GenResult,

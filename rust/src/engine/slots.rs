@@ -9,6 +9,15 @@
 //! further synchronization. `acquire` blocks until a slot frees up, which
 //! lets the worker count exceed the slot count without panicking — extra
 //! workers simply queue at the checkout.
+//!
+//! The continuous engine (docs/ARCHITECTURE.md §11) is the pool's sole
+//! consumer in `Continuous` mode: the step loop admits with the
+//! non-blocking `try_acquire` (a free slot it observes cannot be taken
+//! by anyone else) and releases at retire, so slot occupancy equals its
+//! in-flight session count by construction. The slot's resident models
+//! idle there — batched drafting/verification own the per-sequence
+//! state, keyed by the slot `id` — but the `id` and the `served`
+//! counter still anchor sequence identity and reuse accounting.
 
 use std::sync::{Arc, Condvar, Mutex};
 

@@ -1,0 +1,649 @@
+//! Continuous-batching execution core (docs/ARCHITECTURE.md §11).
+//!
+//! The Workers engine is thread-per-request: each decode owns its slot's
+//! draft model, so draft forwards — the majority of kernel dispatches in
+//! Algorithm 1 — never batch across sessions, and concurrency is capped
+//! by worker threads. This module replaces that pool with one
+//! iteration-level step loop (the vLLM-style execution model BanditSpec
+//! and Not-a-Bandit evaluate inside): a single thread owns every
+//! in-flight session and, each iteration,
+//!
+//! ```text
+//!   ┌─▶ retire    finished / cancelled / expired / failed sessions
+//!   │             (terminal reply, slot freed, ledger released)
+//!   │   admit     scheduler → free KV slots, mid-flight
+//!   │   draft     batched micro-rounds over ALL drafting sessions:
+//!   │             one `draft_batch` per proposal position; sessions
+//!   │             drop out as their arm's stop rule fires (ragged)
+//!   │   verify    one window-free `block_batch` over every session —
+//!   │             the step loop IS the batching window
+//!   └── commit    accept/bonus per session, stream, bandit reward
+//! ```
+//!
+//! **Correctness.** Each session's round is the exact round of
+//! [`SpecSession::step`](crate::spec::SpecSession::step), re-sequenced
+//! across sessions: the stop decisions (`DecodeControl::should_stop`
+//! after every drafted token, short-circuited at γ), the accept rule
+//! ([`spec::accept_greedy`](crate::spec::accept_greedy)), the
+//! termination check ([`spec::finish_check`](crate::spec::finish_check)),
+//! and the cursor protocol (catch-up to `c`, k−1 single-token feeds,
+//! rollback to `c+m`) are the same code or the same formulas, and
+//! batched rows are byte-identical to sequential rows (models/sim.rs,
+//! models/pjrt.rs). Greedy speculative decoding is lossless, so outputs
+//! match the Workers engine and the greedy oracle byte-for-byte at any
+//! slot count — pinned by `rust/tests/engine_continuous.rs`.
+//!
+//! **Bandit accounting.** One `session_start` (select) and one
+//! `on_verify` (reward) per session per round, exactly as in Workers
+//! mode, so shared-bandit play-count conservation holds across execution
+//! modes. Controllers are per *slot* here (one decode thread), not per
+//! worker.
+//!
+//! **Lifecycle.** Cancellation flags, deadlines, and gone stream
+//! receivers are observed at iteration boundaries — the same round
+//! granularity the Workers engine polls at — and a retiring session
+//! frees its KV slot within one iteration.
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::bandit::SessionController;
+use crate::models::{BatchItem, LanguageModel, ModelCost};
+use crate::spec::{
+    accept_greedy, finish_check, validate_prompt, DecodeControl, GenConfig, GenResult, RoundStat,
+};
+use crate::util::Rng;
+
+use super::metrics::{EngineMetrics, EngineStats};
+use super::request::{EmitClip, FinishStatus, Request, Response};
+use super::server::{finish_response, note_lifecycle, EngineShared, ResponseSink};
+use super::slots::Slot;
+
+/// One in-flight decode held by the step loop: the request, its KV slot,
+/// and the session state [`SpecSession`](crate::spec::SpecSession) would
+/// keep — plus the per-round scratch the phased (draft-batch / verify)
+/// execution needs between micro-rounds.
+struct ActiveSession {
+    req: Request,
+    sink: ResponseSink,
+    slot: Slot,
+    cfg: GenConfig,
+    clip: EmitClip,
+    /// cached `Request::scenario_seed` (a prompt hash — computed once,
+    /// stamped on every `BatchItem`)
+    seed: u64,
+    /// arrival → decode start (admission), the reply's queue_ns
+    queue_ns: u64,
+    /// decode start (wall_ns base)
+    t_decode: Instant,
+    committed: Vec<u32>,
+    prompt_len: usize,
+    rounds: Vec<RoundStat>,
+    /// mirrored draft-model cursor (the contiguous-cursor protocol,
+    /// docs/ARCHITECTURE.md §6, tracked engine-side exactly like
+    /// `BatchedTarget` does for the verify side)
+    draft_cur: usize,
+    /// mirrored target/verifier cursor
+    target_cur: usize,
+    max_seq: usize,
+    /// reply fully determined (natural finish or clip window closed)
+    done: bool,
+    /// decode error — retired as a `Failed` reply next iteration
+    failed: Option<String>,
+    // --- per-round scratch ---
+    /// committed length at round start (`c` in SpecSession::step)
+    round_c: usize,
+    /// this round's draft cap γ (per-arm raggedness comes from stop
+    /// rules firing at different positions per session)
+    gamma: usize,
+    proposals: Vec<u32>,
+    /// last drafted token (the next micro-round's single-token input)
+    last_tok: u32,
+    draft_ns: u64,
+    verify_ns: u64,
+}
+
+/// Terminal state a session retires with (priority-ordered: an errored
+/// round beats everything; a fully determined reply beats a cancel that
+/// landed in the same iteration, matching `drive_session`).
+enum SessionExit {
+    Failed(String),
+    Complete,
+    Cancelled,
+    Expired,
+}
+
+fn exit_of(s: &ActiveSession) -> Option<SessionExit> {
+    if let Some(e) = &s.failed {
+        return Some(SessionExit::Failed(e.clone()));
+    }
+    if s.done {
+        return Some(SessionExit::Complete);
+    }
+    if s.req.cancel.is_cancelled() {
+        return Some(SessionExit::Cancelled);
+    }
+    if s.req.deadline_expired() {
+        return Some(SessionExit::Expired);
+    }
+    None
+}
+
+/// The continuous-batching step loop: runs on one dedicated thread
+/// (`tapout-stepper`) for the life of the engine. `controllers` is
+/// indexed by slot id; `verify_cap` caps one verify `block_batch` (0 =
+/// per-session verification, the batching-off oracle).
+pub(crate) fn step_loop(
+    shared: Arc<EngineShared>,
+    mut drafter: Box<dyn LanguageModel>,
+    mut verifier: Box<dyn LanguageModel>,
+    mut controllers: Vec<SessionController>,
+    verify_cap: usize,
+    metrics: Arc<Mutex<EngineMetrics>>,
+    stats: Arc<EngineStats>,
+) {
+    let mut rng = Rng::new(0xE46C0DE ^ 0x57E9);
+    let mut sessions: Vec<ActiveSession> = Vec::new();
+    let max_seq = drafter.max_seq().min(verifier.max_seq());
+
+    loop {
+        retire(&mut sessions, &shared, &metrics, &stats);
+        let admitted = admit(&mut sessions, &shared, &metrics, &stats, max_seq);
+
+        if sessions.is_empty() {
+            // park until new work arrives; queued work drains even after
+            // shutdown is flagged (same contract as the worker pool)
+            let mut q = shared.q.lock().unwrap();
+            loop {
+                if !q.sched.is_empty() {
+                    break;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = shared.cv.wait(q).unwrap();
+            }
+            continue;
+        }
+
+        let t_busy = Instant::now();
+        let stepped = run_round(
+            &mut sessions,
+            &mut controllers,
+            drafter.as_mut(),
+            verifier.as_mut(),
+            verify_cap,
+            &mut rng,
+            &shared,
+            &stats,
+        );
+        stats.workers[0]
+            .busy_ns
+            .fetch_add(t_busy.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        if stepped > 0 || admitted > 0 {
+            stats.step.note_step(stepped, admitted);
+        }
+    }
+}
+
+/// Answer and unwind every session that reached a terminal state:
+/// terminal reply through its sink, KV slot back to the pool, scheduler
+/// ledger released — all within one iteration of the exit condition.
+fn retire(
+    sessions: &mut Vec<ActiveSession>,
+    shared: &EngineShared,
+    metrics: &Mutex<EngineMetrics>,
+    stats: &EngineStats,
+) {
+    if sessions.iter().all(|s| exit_of(s).is_none()) {
+        return;
+    }
+    let mut keep = Vec::with_capacity(sessions.len());
+    for s in sessions.drain(..) {
+        match exit_of(&s) {
+            None => keep.push(s),
+            Some(exit) => finalize(s, exit, shared, metrics, stats),
+        }
+    }
+    *sessions = keep;
+}
+
+fn finalize(
+    s: ActiveSession,
+    exit: SessionExit,
+    shared: &EngineShared,
+    metrics: &Mutex<EngineMetrics>,
+    stats: &EngineStats,
+) {
+    let ActiveSession {
+        req,
+        sink,
+        slot,
+        committed,
+        prompt_len,
+        rounds,
+        t_decode,
+        queue_ns,
+        ..
+    } = s;
+    let result = GenResult {
+        tokens: committed,
+        prompt_len,
+        rounds,
+        wall_ns: t_decode.elapsed().as_nanos() as u64,
+    };
+    shared.q.lock().unwrap().sched.note_done(req.cost());
+    stats.step.retired.fetch_add(1, Ordering::Relaxed);
+    stats.workers[0].requests.fetch_add(1, Ordering::Relaxed);
+    let resp = match exit {
+        SessionExit::Complete => {
+            finish_response(shared, &req, result, FinishStatus::Done, None, queue_ns)
+        }
+        SessionExit::Cancelled => {
+            note_lifecycle(stats, FinishStatus::Cancelled);
+            finish_response(
+                shared,
+                &req,
+                result,
+                FinishStatus::Cancelled,
+                Some("cancelled mid-decode".into()),
+                queue_ns,
+            )
+        }
+        SessionExit::Expired => {
+            note_lifecycle(stats, FinishStatus::Expired);
+            finish_response(
+                shared,
+                &req,
+                result,
+                FinishStatus::Expired,
+                Some("deadline expired mid-decode".into()),
+                queue_ns,
+            )
+        }
+        SessionExit::Failed(e) => {
+            eprintln!("[engine] request {} failed: {e}", req.id);
+            stats.workers[0].errors.fetch_add(1, Ordering::Relaxed);
+            Response::failure(req.id, queue_ns, req.arrival.elapsed().as_nanos() as u64, e)
+        }
+    };
+    {
+        let mut m = metrics.lock().unwrap();
+        m.record(&resp);
+        m.span_ns = shared.started.lock().unwrap().elapsed().as_nanos() as u64;
+    }
+    sink.send_final(resp);
+    shared.pool.release(slot);
+}
+
+/// Pop scheduled requests into free KV slots — iteration-level admission
+/// straight from the scheduler, so a request admitted mid-flight joins
+/// the very next round (its first round is its prefill). Returns the
+/// number of sessions admitted.
+fn admit(
+    sessions: &mut Vec<ActiveSession>,
+    shared: &EngineShared,
+    metrics: &Mutex<EngineMetrics>,
+    stats: &EngineStats,
+    max_seq: usize,
+) -> usize {
+    let mut admitted = 0;
+    // the stepper is the pool's only consumer, so a free slot observed
+    // here cannot be taken by anyone else
+    while shared.pool.available() > 0 {
+        let popped = {
+            let mut q = shared.q.lock().unwrap();
+            match q.sched.pop() {
+                Some(req) => {
+                    stats.note_depth(q.sched.len());
+                    let sink = q.waiters.remove(&req.id);
+                    Some((req, sink))
+                }
+                None => None,
+            }
+        };
+        let Some((req, sink)) = popped else { break };
+        let Some(sink) = sink else {
+            // no waiter registered (should not happen) — release the
+            // scheduler's in-flight ledger entry
+            shared.q.lock().unwrap().sched.note_done(req.cost());
+            continue;
+        };
+        // lifecycle checks before occupying a slot (same exits as the
+        // worker pool's slot-wait loop)
+        let now_ns = req.arrival.elapsed().as_nanos() as u64;
+        if req.cancel.is_cancelled() {
+            shared.q.lock().unwrap().sched.note_done(req.cost());
+            note_lifecycle(stats, FinishStatus::Cancelled);
+            sink.send_final(Response::terminal(
+                req.id,
+                FinishStatus::Cancelled,
+                now_ns,
+                now_ns,
+                "cancelled before decode",
+            ));
+            continue;
+        }
+        if req.deadline_expired() {
+            shared.q.lock().unwrap().sched.note_done(req.cost());
+            note_lifecycle(stats, FinishStatus::Expired);
+            sink.send_final(Response::terminal(
+                req.id,
+                FinishStatus::Expired,
+                now_ns,
+                now_ns,
+                "deadline expired before decode",
+            ));
+            continue;
+        }
+        // prompt validation — the same spec::validate_prompt the worker
+        // path hits inside SpecSession::new, so a rejected prompt fails
+        // with the identical message in both execution modes
+        if let Err(e) = validate_prompt(&req.prompt, max_seq) {
+            let msg = format!("{e:#}");
+            shared.q.lock().unwrap().sched.note_done(req.cost());
+            stats.workers[0].errors.fetch_add(1, Ordering::Relaxed);
+            let resp = Response::failure(req.id, now_ns, now_ns, msg);
+            {
+                let mut m = metrics.lock().unwrap();
+                m.record(&resp);
+            }
+            sink.send_final(resp);
+            continue;
+        }
+        let slot = shared.pool.try_acquire().expect("available slot observed above");
+        let queue_ns = req.arrival.elapsed().as_nanos() as u64;
+        let cfg = GenConfig {
+            max_new: req.max_new,
+            gamma_max: shared.gamma_max,
+            stop_at_eos: true,
+            collect_signals: false,
+        };
+        let clip = EmitClip::new(req.max_new);
+        let committed = req.prompt.clone();
+        let prompt_len = committed.len();
+        let seed = req.scenario_seed();
+        sessions.push(ActiveSession {
+            req,
+            sink,
+            slot,
+            cfg,
+            clip,
+            seed,
+            queue_ns,
+            t_decode: Instant::now(),
+            committed,
+            prompt_len,
+            rounds: Vec::new(),
+            draft_cur: 0,
+            target_cur: 0,
+            max_seq,
+            done: false,
+            failed: None,
+            round_c: 0,
+            gamma: 0,
+            proposals: Vec::new(),
+            last_tok: 0,
+            draft_ns: 0,
+            verify_ns: 0,
+        });
+        admitted += 1;
+    }
+    admitted
+}
+
+/// Mark every listed session failed — one backend error inside a batched
+/// forward answers every participating session explicitly, exactly as
+/// the worker engine's batcher does.
+fn fail_all(sessions: &mut [ActiveSession], idxs: &[usize], msg: &str) {
+    for &i in idxs {
+        sessions[i].failed = Some(msg.to_string());
+    }
+}
+
+fn note_draft(stats: &EngineStats, after: ModelCost, before: ModelCost, n_sessions: usize) {
+    stats.draft.note(
+        n_sessions,
+        after.calls.saturating_sub(before.calls),
+        after.rows.saturating_sub(before.rows),
+        after.padded_rows.saturating_sub(before.padded_rows),
+    );
+}
+
+/// Run one speculation round for every live session: batched drafting
+/// micro-rounds, then window-free batched verification, then per-session
+/// commit/stream/reward. Returns how many sessions stepped.
+#[allow(clippy::too_many_arguments)]
+fn run_round(
+    sessions: &mut [ActiveSession],
+    controllers: &mut [SessionController],
+    drafter: &mut dyn LanguageModel,
+    verifier: &mut dyn LanguageModel,
+    verify_cap: usize,
+    rng: &mut Rng,
+    shared: &EngineShared,
+    stats: &EngineStats,
+) -> usize {
+    // --- round begin: termination check + bandit select per session ----
+    let mut live: Vec<usize> = Vec::new();
+    for (i, s) in sessions.iter_mut().enumerate() {
+        if s.done || s.failed.is_some() {
+            continue; // retires next iteration
+        }
+        if s.req.cancel.is_cancelled() || s.req.deadline_expired() {
+            continue; // observed at the round boundary, retires next
+        }
+        if finish_check(
+            s.committed.len(),
+            s.prompt_len,
+            s.committed.last().copied(),
+            &s.cfg,
+            s.max_seq,
+        )
+        .is_some()
+        {
+            s.done = true;
+            continue;
+        }
+        let c = s.committed.len();
+        s.round_c = c;
+        s.gamma = s.cfg.gamma_max.min(s.max_seq.saturating_sub(c + 2));
+        s.proposals.clear();
+        s.draft_ns = 0;
+        s.verify_ns = 0;
+        // one select per session per round — the bandit atomicity
+        // contract of bandit/shared.rs, unchanged by the re-sequencing
+        controllers[s.slot.id].session_start(rng);
+        live.push(i);
+    }
+    if live.is_empty() {
+        return 0;
+    }
+
+    // --- draft micro-round 0: every session's committed catch-up (the
+    // ragged one — prefills mix with 1–2 token decode catch-ups).
+    // BatchItems are rebuilt per micro-round (tokens/start change every
+    // position); the small per-item category clone is noise next to the
+    // model forward each batch pays -----------------------------------
+    let t0 = Instant::now();
+    let items: Vec<BatchItem> = live
+        .iter()
+        .map(|&i| {
+            let s = &sessions[i];
+            BatchItem {
+                seq: s.slot.id,
+                seed: s.seed,
+                category: s.req.category.clone(),
+                tokens: s.committed[s.draft_cur..].to_vec(),
+                start: s.draft_cur,
+            }
+        })
+        .collect();
+    let before = drafter.cost();
+    let rows = match drafter.draft_batch(&items) {
+        Ok(r) => r,
+        Err(e) => {
+            fail_all(sessions, &live, &format!("batched draft failed: {e:#}"));
+            return live.len();
+        }
+    };
+    note_draft(stats, drafter.cost(), before, items.len());
+    let dt = t0.elapsed().as_nanos() as u64;
+    let mut drafting: Vec<usize> = Vec::new();
+    for (r, &i) in rows.iter().zip(&live) {
+        let s = &mut sessions[i];
+        let sid = s.slot.id;
+        s.draft_ns += dt;
+        s.draft_cur = s.round_c; // catch-up advanced the cursor to c
+        let last = *r.last().expect("draft_batch returns >=1 row per item");
+        s.proposals.push(last.argmax);
+        s.last_tok = last.argmax;
+        // the stop check short-circuits at γ, exactly as SpecSession::step
+        let stopped =
+            s.proposals.len() >= s.gamma || controllers[sid].should_stop(&last, 0, rng);
+        if !stopped {
+            drafting.push(i);
+        }
+    }
+
+    // --- subsequent micro-rounds: one token per still-drafting session;
+    // the batch shrinks as per-arm stop rules fire (γ raggedness) ------
+    while !drafting.is_empty() {
+        let t = Instant::now();
+        let items: Vec<BatchItem> = drafting
+            .iter()
+            .map(|&i| {
+                let s = &sessions[i];
+                BatchItem {
+                    seq: s.slot.id,
+                    seed: s.seed,
+                    category: s.req.category.clone(),
+                    tokens: vec![s.last_tok],
+                    start: s.round_c + s.proposals.len() - 1,
+                }
+            })
+            .collect();
+        let before = drafter.cost();
+        let rows = match drafter.draft_batch(&items) {
+            Ok(r) => r,
+            Err(e) => {
+                // only this micro-round's participants fail; sessions
+                // that already stopped drafting still verify
+                fail_all(sessions, &drafting, &format!("batched draft failed: {e:#}"));
+                break;
+            }
+        };
+        note_draft(stats, drafter.cost(), before, items.len());
+        let dt = t.elapsed().as_nanos() as u64;
+        let mut still: Vec<usize> = Vec::new();
+        for (r, &i) in rows.iter().zip(&drafting) {
+            let s = &mut sessions[i];
+            let sid = s.slot.id;
+            s.draft_ns += dt;
+            let last = *r.last().expect("draft_batch returns >=1 row per item");
+            s.proposals.push(last.argmax);
+            s.last_tok = last.argmax;
+            let idx = s.proposals.len() - 1;
+            let stopped =
+                s.proposals.len() >= s.gamma || controllers[sid].should_stop(&last, idx, rng);
+            if !stopped {
+                still.push(i);
+            }
+        }
+        drafting = still;
+    }
+    // the draft cursor after k proposals: catch-up left it at c, then
+    // k−1 single-token feeds — mirror of the sequential session
+    for &i in &live {
+        let s = &mut sessions[i];
+        if s.failed.is_none() {
+            s.draft_cur = s.round_c + s.proposals.len() - 1;
+        }
+    }
+
+    // --- verify: the step loop is the window — every live session's
+    // target block coalesces into one block_batch (capped by the
+    // configured max_batch; 0 = per-session, the batching-off oracle) --
+    let verifying: Vec<usize> =
+        live.iter().copied().filter(|&i| sessions[i].failed.is_none()).collect();
+    let cap = if verify_cap == 0 { 1 } else { verify_cap };
+    for chunk in verifying.chunks(cap) {
+        let t = Instant::now();
+        let items: Vec<BatchItem> = chunk
+            .iter()
+            .map(|&i| {
+                let s = &sessions[i];
+                let mut tokens = s.committed[s.target_cur..].to_vec();
+                tokens.extend_from_slice(&s.proposals);
+                BatchItem {
+                    seq: s.slot.id,
+                    seed: s.seed,
+                    category: s.req.category.clone(),
+                    tokens,
+                    start: s.target_cur,
+                }
+            })
+            .collect();
+        let before = verifier.cost();
+        let vrows = match verifier.block_batch(&items) {
+            Ok(r) => r,
+            Err(e) => {
+                fail_all(sessions, chunk, &format!("batched verification failed: {e:#}"));
+                continue;
+            }
+        };
+        let after = verifier.cost();
+        stats.batch.note(
+            chunk.len(),
+            after.rows.saturating_sub(before.rows),
+            after.padded_rows.saturating_sub(before.padded_rows),
+            0, // no fill wait: the step loop is the window
+        );
+        let vt = t.elapsed().as_nanos() as u64;
+
+        // --- commit/stream/reward per session ---------------------------
+        for (r, &i) in vrows.iter().zip(chunk) {
+            let s = &mut sessions[i];
+            let sid = s.slot.id;
+            s.verify_ns += vt;
+            let k = s.proposals.len();
+            let (m, bonus) = accept_greedy(r, s.target_cur, s.round_c, &s.proposals);
+            s.committed.extend_from_slice(&s.proposals[..m]);
+            s.committed.push(bonus);
+            // rollback both mirrored cursors to the committed boundary
+            s.target_cur = s.round_c + m;
+            s.draft_cur = s.draft_cur.min(s.round_c + m);
+            // one reward per session per round (conservation)
+            controllers[sid].on_verify(m, k);
+            let arm = controllers[sid].current_arm();
+            s.rounds.push(RoundStat {
+                drafted: k,
+                accepted: m,
+                arm,
+                draft_ns: s.draft_ns,
+                verify_ns: s.verify_ns,
+                signals: Vec::new(),
+            });
+            // stream this round's committed tokens through the clip
+            let new_tokens: Vec<u32> = s.committed[s.round_c..].to_vec();
+            let (emit, reply_done) = s.clip.clip(&new_tokens);
+            let send_failed = !emit.is_empty()
+                && s.sink.wants_tokens()
+                && !s.sink.send_tokens(s.req.id, emit, shared.codec.decode(emit));
+            if send_failed {
+                // stream receiver gone: client disconnected — flag the
+                // request; it retires as Cancelled next iteration. The
+                // disconnect outranks a same-round clip close, exactly as
+                // drive_session returns Cancelled without consulting the
+                // clip, so both modes report the identical event the same
+                s.req.cancel.cancel();
+            } else if reply_done {
+                // the reply can no longer change: stop decoding now, so
+                // post-EOS / post-budget rounds are never run
+                s.done = true;
+            }
+        }
+    }
+    live.len()
+}

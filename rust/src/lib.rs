@@ -10,9 +10,10 @@
 //! * **L3 (this crate)** — the speculative-decoding coordinator: bandit
 //!   controllers ([`bandit`]), the training-free arm-policy pool
 //!   ([`policies`], cataloged in `docs/POLICIES.md`), the Algorithm-1
-//!   session loop ([`spec`]), a serving engine with a dispatcher + decode
-//!   worker pool sharing one online bandit and a cross-session
-//!   verification batcher, scheduler/slots/metrics/HTTP ([`engine`]), the
+//!   session loop ([`spec`]), a serving engine with two execution cores
+//!   sharing one online bandit — a dispatcher + decode worker pool with
+//!   its cross-session verification batcher, and a continuous-batching
+//!   step loop — plus scheduler/slots/metrics/HTTP ([`engine`]), the
 //!   PJRT runtime ([`runtime`]), model backends ([`models`]) and the
 //!   experiment harness regenerating every paper table/figure
 //!   ([`harness`]).

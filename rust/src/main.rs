@@ -4,7 +4,7 @@
 //!   generate  --pair pair-a --method seq-ucb1 --prompt "..." [--max-new N]
 //!             [--stream]  (print tokens as each round commits)
 //!   serve     --port 8077 --pair pair-a --method seq-ucb1 [--sched fcfs|sjf]
-//!             [--workers N] [--slots N] [--backend pjrt|sim]
+//!             [--workers N] [--slots N] [--backend pjrt|sim] [--continuous]
 //!             [--max-queue N] [--deadline-ms MS]
 //!   exp       --id <table2|table3|table4|table5|fig2|fig3|fig4|fig5|fig6|abl-arms|tune|all>
 //!             [--backend pjrt|sim] [--scale F] [--gamma N]
@@ -16,7 +16,9 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use tapout::engine::{BackendKind, BatchConfig, Engine, EngineConfig, HttpServer, Policy};
+use tapout::engine::{
+    BackendKind, BatchConfig, Engine, EngineConfig, EngineMode, HttpServer, Policy,
+};
 use tapout::harness::{run_experiment, ExpOpts};
 use tapout::models::{Manifest, ModelAssets, PjrtModel};
 use tapout::runtime::Runtime;
@@ -132,15 +134,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_queue: args.usize("max-queue", 0),
         // --deadline-ms 0 = no default deadline
         default_deadline_ms: args.usize("deadline-ms", 0) as u64,
+        // --continuous swaps the worker pool for the continuous-batching
+        // step loop (docs/ARCHITECTURE.md §11)
+        mode: if args.bool("continuous") { EngineMode::Continuous } else { EngineMode::Workers },
     };
     let port = args.usize("port", 8077) as u16;
     let engine = Arc::new(Engine::start(cfg).context("starting engine")?);
     let http = HttpServer::start(engine.clone(), port)?;
     println!(
         "tapout serving on http://{}  (POST /generate [stream:true for SSE], GET /health, \
-         GET /metrics)  backend={} workers={} slots={} max_queue={} deadline_ms={}",
+         GET /metrics)  backend={} mode={} workers={} slots={} max_queue={} deadline_ms={}",
         http.addr,
         engine.config.backend.label(),
+        engine.config.mode.label(),
         engine.config.workers,
         engine.config.slots,
         engine.config.max_queue,

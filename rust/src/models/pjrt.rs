@@ -423,6 +423,16 @@ impl LanguageModel for PjrtBatchVerifier {
         Ok(out)
     }
 
+    /// Native batched drafting (docs/ARCHITECTURE.md §11): this type is
+    /// a generic multi-sequence executor — resident world per slot id,
+    /// stacked forwards when the manifest ships batched executables — so
+    /// the continuous engine instantiates it over the *draft* assets and
+    /// drives each drafting micro-round through the same batched path as
+    /// verification.
+    fn draft_batch(&mut self, items: &[BatchItem]) -> Result<Vec<Vec<TokenSignals>>> {
+        self.block_batch(items)
+    }
+
     fn cur(&self) -> usize {
         0
     }

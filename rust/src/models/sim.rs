@@ -214,6 +214,31 @@ impl SimModel {
         logits[runner] = p2.max(1e-6).ln();
         TokenSignals::from_logits(&logits)
     }
+
+    /// The shared batched-pass core behind `block_batch` and
+    /// `draft_batch`: one call, batch and row dimensions padded to the
+    /// sim bucket ladder, rows computed per item scenario.
+    fn batched_rows(&mut self, seqs: &[BatchItem]) -> anyhow::Result<Vec<Vec<TokenSignals>>> {
+        anyhow::ensure!(!seqs.is_empty(), "empty batch");
+        let kmax = seqs.iter().map(|s| s.tokens.len()).max().unwrap_or(0);
+        anyhow::ensure!(kmax > 0, "empty block in batch");
+        // pad batch and row dimensions to the sim bucket ladder; the
+        // waste is what the engine's pad-waste gauges read
+        let bb = sim_bucket(seqs.len());
+        let kb = sim_bucket(kmax);
+        self.cost.calls += 1;
+        self.cost.rows += seqs.iter().map(|s| s.tokens.len() as u64).sum::<u64>();
+        self.cost.padded_rows += (bb * kb) as u64;
+        Ok(seqs
+            .iter()
+            .map(|item| {
+                let sc = Scenario::new(item.seed, &item.category);
+                (0..item.tokens.len())
+                    .map(|i| self.row_at(&sc, item.start + i + 1))
+                    .collect()
+            })
+            .collect())
+    }
 }
 
 impl LanguageModel for SimModel {
@@ -246,25 +271,15 @@ impl LanguageModel for SimModel {
     /// each item through `block` on its own slot model; only the cost
     /// accounting differs — one call, shape-bucketed padding.
     fn block_batch(&mut self, seqs: &[BatchItem]) -> anyhow::Result<Vec<Vec<TokenSignals>>> {
-        anyhow::ensure!(!seqs.is_empty(), "empty batch");
-        let kmax = seqs.iter().map(|s| s.tokens.len()).max().unwrap_or(0);
-        anyhow::ensure!(kmax > 0, "empty block in batch");
-        // pad batch and row dimensions to the sim bucket ladder; the
-        // waste is what the engine's pad-waste gauge reads
-        let bb = sim_bucket(seqs.len());
-        let kb = sim_bucket(kmax);
-        self.cost.calls += 1;
-        self.cost.rows += seqs.iter().map(|s| s.tokens.len() as u64).sum::<u64>();
-        self.cost.padded_rows += (bb * kb) as u64;
-        Ok(seqs
-            .iter()
-            .map(|item| {
-                let sc = Scenario::new(item.seed, &item.category);
-                (0..item.tokens.len())
-                    .map(|i| self.row_at(&sc, item.start + i + 1))
-                    .collect()
-            })
-            .collect())
+        self.batched_rows(seqs)
+    }
+
+    /// Native batched drafting (docs/ARCHITECTURE.md §11): the same
+    /// padded pass as [`LanguageModel::block_batch`] — a drafting
+    /// micro-round is just a ragged batch of per-sequence blocks, and on
+    /// a draft-side model the rows carry the draft distribution.
+    fn draft_batch(&mut self, seqs: &[BatchItem]) -> anyhow::Result<Vec<Vec<TokenSignals>>> {
+        self.batched_rows(seqs)
     }
 
     fn cur(&self) -> usize {

@@ -102,6 +102,35 @@ pub trait LanguageModel: Send {
         Ok(out)
     }
 
+    /// Run one forward over several sequences' *draft* blocks at once —
+    /// the continuous-batching engine's drafting entry point
+    /// (docs/ARCHITECTURE.md §11). Semantically identical to
+    /// [`block_batch`](LanguageModel::block_batch) (each item's rows come
+    /// back in input order, byte-identical to feeding the item through
+    /// [`block`](LanguageModel::block) on its own slot model), but kept
+    /// as a separate path because the call pattern differs: the stepper
+    /// issues one `draft_batch` per drafting micro-round — a ragged mix
+    /// of long catch-up blocks (prefill rounds) and single-token
+    /// continuation blocks — and per-arm draft lengths make successive
+    /// batches shrink as sessions stop drafting. Backends pad the ragged
+    /// batch to their bucket ladder and account the waste in
+    /// [`ModelCost::padded_rows`], which is what the engine's
+    /// `engine.step` pad-waste gauge reads.
+    ///
+    /// The default implementation processes items one at a time through
+    /// [`block`](LanguageModel::block), with the same single-sequence
+    /// caveat as the default `block_batch`. Backends with true
+    /// multi-sequence state override it (the simulator's padded pass,
+    /// the PJRT batch executor's resident worlds).
+    fn draft_batch(&mut self, seqs: &[BatchItem]) -> anyhow::Result<Vec<Vec<TokenSignals>>> {
+        let mut out = Vec::with_capacity(seqs.len());
+        for item in seqs {
+            self.rollback(item.start);
+            out.push(self.block(&item.tokens, item.start)?);
+        }
+        Ok(out)
+    }
+
     /// Number of tokens processed as inputs so far (== next input position).
     fn cur(&self) -> usize;
 

@@ -5,7 +5,7 @@ pub mod session;
 pub mod stop;
 
 pub use session::{
-    generate, greedy, FinishReason, GenConfig, GenResult, RoundStat, SpecSession, StepCommit,
-    StepOutcome, BOS, EOS,
+    accept_greedy, finish_check, generate, greedy, validate_prompt, FinishReason, GenConfig,
+    GenResult, RoundStat, SpecSession, StepCommit, StepOutcome, BOS, EOS,
 };
 pub use stop::{DecodeControl, MethodSpec, StopController};

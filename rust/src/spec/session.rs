@@ -145,6 +145,67 @@ pub enum StepOutcome {
     Finished(FinishReason),
 }
 
+/// Validate a prompt against the KV-cache geometry. Shared by
+/// [`SpecSession::new`] and the continuous engine's admission
+/// (`engine/stepper.rs`), so a rejected prompt fails with the identical
+/// message in both execution modes.
+pub fn validate_prompt(prompt: &[u32], max_seq: usize) -> anyhow::Result<()> {
+    anyhow::ensure!(!prompt.is_empty(), "prompt must be non-empty");
+    anyhow::ensure!(
+        prompt.len() + 2 < max_seq,
+        "prompt too long for KV cache: {} + 2 >= {max_seq}",
+        prompt.len()
+    );
+    Ok(())
+}
+
+/// Termination check for a step-driven decode, in the same priority
+/// order the classic `generate` loop used: budget, then EOS, then KV
+/// headroom. Shared by [`SpecSession::step`]'s boundary check and the
+/// engine's continuous stepper (`engine/stepper.rs`), so both decode
+/// drivers stop at exactly the same boundary.
+pub fn finish_check(
+    committed_len: usize,
+    prompt_len: usize,
+    last: Option<u32>,
+    cfg: &GenConfig,
+    max_seq: usize,
+) -> Option<FinishReason> {
+    if committed_len - prompt_len >= cfg.max_new {
+        return Some(FinishReason::MaxNew);
+    }
+    if cfg.stop_at_eos && last == Some(EOS) {
+        return Some(FinishReason::Eos);
+    }
+    if max_seq.saturating_sub(committed_len + 2) < 1 {
+        return Some(FinishReason::KvExhausted);
+    }
+    None
+}
+
+/// The greedy-verification accept rule (Algorithm 1's exact-match test),
+/// shared by [`SpecSession::step`] and the engine's continuous stepper.
+///
+/// `vsig` are the target's signal rows for one verification block fed at
+/// absolute position `tc` (committed catch-up + all proposals), `c` is
+/// the committed length at round start, and `proposals` the drafted
+/// tokens. Row `off + i` (with `off = c - 1 - tc`) predicts position
+/// `c + i`, so it both checks `proposals[i]` and supplies the bonus
+/// token. Returns `(accepted, bonus)`.
+pub fn accept_greedy(
+    vsig: &[TokenSignals],
+    tc: usize,
+    c: usize,
+    proposals: &[u32],
+) -> (usize, u32) {
+    let off = c - 1 - tc;
+    let mut m = 0;
+    while m < proposals.len() && vsig[off + m].argmax == proposals[m] {
+        m += 1;
+    }
+    (m, vsig[off + m].argmax)
+}
+
 /// A resumable speculative-decoding session: one draft→verify→accept
 /// round per [`SpecSession::step`] call.
 ///
@@ -188,13 +249,8 @@ impl<'a> SpecSession<'a> {
         cfg: &GenConfig,
     ) -> anyhow::Result<SpecSession<'a>> {
         let t_start = Instant::now();
-        anyhow::ensure!(!prompt.is_empty(), "prompt must be non-empty");
         let max_seq = draft.max_seq().min(target.max_seq());
-        anyhow::ensure!(
-            prompt.len() + 2 < max_seq,
-            "prompt too long for KV cache: {} + 2 >= {max_seq}",
-            prompt.len()
-        );
+        validate_prompt(prompt, max_seq)?;
         draft.reset();
         target.reset();
         ctrl.reset_request();
@@ -233,19 +289,15 @@ impl<'a> SpecSession<'a> {
         self.finished.is_some()
     }
 
-    /// Termination check at the step boundary, in the same priority order
-    /// as the classic `generate` loop.
+    /// Termination check at the step boundary ([`finish_check`]).
     fn check_done(&self) -> Option<FinishReason> {
-        if self.generated() >= self.cfg.max_new {
-            return Some(FinishReason::MaxNew);
-        }
-        if self.cfg.stop_at_eos && self.committed.last() == Some(&EOS) {
-            return Some(FinishReason::Eos);
-        }
-        if self.max_seq.saturating_sub(self.committed.len() + 2) < 1 {
-            return Some(FinishReason::KvExhausted);
-        }
-        None
+        finish_check(
+            self.committed.len(),
+            self.prompt_len,
+            self.committed.last().copied(),
+            &self.cfg,
+            self.max_seq,
+        )
     }
 
     /// Run one draft→verify→accept round, or report that the decode is
@@ -294,12 +346,7 @@ impl<'a> SpecSession<'a> {
         let mut inputs: Vec<u32> = self.committed[tc..].to_vec();
         inputs.extend_from_slice(&proposals);
         let vsig = self.target.block(&inputs, tc)?;
-        let off = c - 1 - tc;
-        let mut m = 0;
-        while m < proposals.len() && vsig[off + m].argmax == proposals[m] {
-            m += 1;
-        }
-        let bonus = vsig[off + m].argmax;
+        let (m, bonus) = accept_greedy(&vsig, tc, c, &proposals);
         let verify_ns = t_verify.elapsed().as_nanos() as u64;
 
         self.committed.extend_from_slice(&proposals[..m]);

@@ -1,0 +1,279 @@
+//! Continuous-batching integration tests on the simulator backend
+//! (docs/ARCHITECTURE.md §11) — these run everywhere and pin the step
+//! loop's contract:
+//!
+//!   * a 24-request *staggered-arrival* burst through the continuous
+//!     engine is byte-identical to the sequential (1-worker Workers
+//!     mode) engine and to the target-only greedy oracle at slots
+//!     {1, 4, 8} — admissions landing mid-flight must not perturb any
+//!     session already decoding;
+//!   * a mid-decode cancellation in continuous mode frees its KV slot
+//!     within one iteration (a follow-up on a 1-slot engine completes)
+//!     and the partial prefix is exact;
+//!   * shared-bandit play-count conservation holds across execution
+//!     modes: one select + one update per round in both engines;
+//!   * the `engine.step` and `engine.draft` gauges observe the batching
+//!     that happened (draft occupancy > 1 at slots ≥ 4 under load).
+
+use std::time::Duration;
+
+use tapout::engine::{
+    BackendKind, Engine, EngineConfig, EngineMode, FinishStatus, Policy, Request, Response,
+    StreamEvent,
+};
+use tapout::models::{sim_encode, Scenario, SimModel};
+use tapout::spec::{greedy, GenConfig, BOS};
+
+const MAX_NEW: usize = 48;
+const TIMEOUT: Duration = Duration::from_secs(120);
+
+fn config(mode: EngineMode, workers: usize, slots: usize) -> EngineConfig {
+    EngineConfig {
+        method: "seq-ucb1".into(),
+        gamma_max: 64,
+        sched: Policy::Fcfs,
+        slots,
+        workers,
+        backend: BackendKind::sim_default(),
+        mode,
+        ..EngineConfig::default()
+    }
+}
+
+fn burst_prompts(n: usize) -> Vec<String> {
+    (0..n)
+        .map(|i| format!("continuous batching request number {i}: lay out the plan"))
+        .collect()
+}
+
+/// The target-only greedy continuation the engine must reproduce
+/// (identical to the oracle in engine_concurrent.rs).
+fn oracle_tokens(text: &str, max_new: usize) -> Vec<u32> {
+    let mut prompt = vec![BOS];
+    prompt.extend(sim_encode(text));
+    let mut req = Request::new(0, text, max_new);
+    req.prompt = prompt.clone();
+    let mut target = SimModel::target(Scenario::new(req.scenario_seed(), &req.category));
+    let cfg = GenConfig { max_new, stop_at_eos: true, ..GenConfig::default() };
+    let r = greedy(&mut target, &prompt, &cfg).unwrap();
+    r.new_tokens().to_vec()
+}
+
+fn collect(rxs: Vec<std::sync::mpsc::Receiver<Response>>) -> Vec<Response> {
+    rxs.into_iter()
+        .map(|rx| rx.recv_timeout(TIMEOUT).expect("response must arrive"))
+        .collect()
+}
+
+#[test]
+fn staggered_burst_matches_sequential_engine_and_oracle_across_slot_counts() {
+    let prompts = burst_prompts(24);
+
+    // reference: the sequential Workers engine (1 worker, 1 slot)
+    let seq = Engine::start(config(EngineMode::Workers, 1, 1)).unwrap();
+    let seq_out: Vec<Vec<u32>> = prompts
+        .iter()
+        .map(|p| {
+            let r = seq.submit(p, MAX_NEW).recv_timeout(TIMEOUT).unwrap();
+            assert!(r.is_ok(), "{:?}", r.error);
+            r.result.new_tokens().to_vec()
+        })
+        .collect();
+    seq.shutdown();
+
+    for slots in [1usize, 4, 8] {
+        let eng = Engine::start(config(EngineMode::Continuous, 0, slots)).unwrap();
+        // staggered arrivals: three waves, so later admissions land while
+        // earlier sessions are mid-decode (iteration-level admission)
+        let mut rxs = Vec::new();
+        for wave in prompts.chunks(8) {
+            for p in wave {
+                rxs.push(eng.submit(p, MAX_NEW));
+            }
+            std::thread::sleep(Duration::from_millis(3));
+        }
+        let responses = collect(rxs);
+
+        let mut total_rounds = 0u64;
+        for (i, r) in responses.iter().enumerate() {
+            assert!(r.is_ok(), "slots {slots} request {i} failed: {:?}", r.error);
+            assert_eq!(
+                r.result.new_tokens(),
+                &seq_out[i][..],
+                "slots {slots} request {i}: continuous output diverged from sequential engine"
+            );
+            assert_eq!(
+                r.result.new_tokens(),
+                &oracle_tokens(&prompts[i], MAX_NEW)[..],
+                "slots {slots} request {i}: output diverged from the greedy oracle"
+            );
+            total_rounds += r.result.rounds.len() as u64;
+        }
+
+        // play-count conservation in continuous mode: one select and one
+        // update per round, every round's reward landed exactly once
+        assert_eq!(eng.bandit_sessions(), total_rounds, "slots {slots}");
+        assert_eq!(eng.bandit_updates(), total_rounds, "slots {slots}");
+        let counts = eng.bandit_counts().expect("seq-ucb1 has a shared bandit");
+        assert_eq!(counts.iter().sum::<u64>(), total_rounds, "slots {slots}: {counts:?}");
+
+        // the step loop observed its own execution
+        use std::sync::atomic::Ordering;
+        let steps = eng.stats.step.steps.load(Ordering::Relaxed);
+        assert!(steps > 0, "slots {slots}: iterations must be counted");
+        assert_eq!(
+            eng.stats.step.admitted.load(Ordering::Relaxed),
+            24,
+            "slots {slots}: every request admitted through the stepper"
+        );
+        assert_eq!(eng.stats.step.retired.load(Ordering::Relaxed), 24, "slots {slots}");
+        assert!(
+            eng.stats.step.peak_inflight.load(Ordering::Relaxed) <= slots,
+            "slots {slots}: in-flight can never exceed the slot count"
+        );
+        // draft forwards were dispatched and accounted
+        let fw = eng.stats.draft.forwards.load(Ordering::Relaxed);
+        assert!(fw > 0, "slots {slots}");
+        assert!(
+            eng.stats.draft.padded_rows.load(Ordering::Relaxed)
+                >= eng.stats.draft.rows.load(Ordering::Relaxed),
+            "slots {slots}: padding can only add rows"
+        );
+        if slots >= 4 {
+            assert!(
+                eng.stats.draft.mean_occupancy() > 1.0,
+                "slots {slots}: drafting must coalesce across sessions under load"
+            );
+        }
+        eng.shutdown();
+    }
+}
+
+#[test]
+fn mid_decode_cancel_frees_slot_within_one_iteration() {
+    // 1 KV slot: the follow-up can only complete if the cancelled
+    // session released its slot at the next iteration boundary
+    let eng = Engine::start(config(EngineMode::Continuous, 0, 1)).unwrap();
+    // sim scenarios never emit EOS, so this decode would run ~3800 tokens
+    let req = Request::new(0, "continuous decode to cancel midway", 3800);
+    let flag = req.cancel_flag();
+    let rx = eng.submit_request_streaming(req);
+
+    match rx.recv_timeout(TIMEOUT).expect("first event") {
+        StreamEvent::Tokens { .. } => flag.cancel(),
+        StreamEvent::Done(r) => panic!("decode finished before cancellation: {:?}", r.status),
+    }
+    let (ids, done) = {
+        let mut ids = Vec::new();
+        loop {
+            match rx.recv_timeout(TIMEOUT).expect("stream must terminate") {
+                StreamEvent::Tokens { ids: i, .. } => ids.extend(i),
+                StreamEvent::Done(resp) => break (ids, *resp),
+            }
+        }
+    };
+    assert_eq!(done.status, FinishStatus::Cancelled);
+    assert!(!ids.is_empty(), "tokens before the cancel were streamed");
+    assert!(done.result.new_tokens().len() < 3800, "cancel landed before the budget");
+    // the partial prefix is still exact: a prefix of the greedy oracle
+    let oracle = oracle_tokens("continuous decode to cancel midway", 3800);
+    assert_eq!(done.result.new_tokens(), &oracle[..done.result.new_tokens().len()]);
+
+    let ok = eng
+        .submit("follow-up after continuous cancel", MAX_NEW)
+        .recv_timeout(TIMEOUT)
+        .unwrap();
+    assert!(ok.is_ok(), "{:?}", ok.error);
+    assert_eq!(
+        ok.result.new_tokens(),
+        &oracle_tokens("follow-up after continuous cancel", MAX_NEW)[..]
+    );
+
+    use std::sync::atomic::Ordering;
+    assert_eq!(eng.stats.lifecycle.cancelled.load(Ordering::Relaxed), 1);
+    // conservation with at most the aborted round reward-less
+    let counts = eng.bandit_counts().expect("seq-ucb1 has a shared bandit");
+    assert_eq!(counts.iter().sum::<u64>(), eng.bandit_updates());
+    assert!(eng.bandit_sessions() - eng.bandit_updates() <= 1);
+    eng.shutdown();
+}
+
+#[test]
+fn play_count_conservation_matches_across_modes() {
+    // the same burst through both execution models: each must conserve
+    // plays (Σ arm counts == updates == sessions == Σ rounds) — the
+    // re-sequenced continuous rounds change *when* rewards land, never
+    // whether they land
+    let prompts = burst_prompts(12);
+    let mut per_mode_rounds = Vec::new();
+    for mode in [EngineMode::Workers, EngineMode::Continuous] {
+        let eng = Engine::start(config(mode, 4, 4)).unwrap();
+        let rxs: Vec<_> = prompts.iter().map(|p| eng.submit(p, MAX_NEW)).collect();
+        let responses = collect(rxs);
+        let rounds: u64 = responses
+            .iter()
+            .map(|r| {
+                assert!(r.is_ok(), "{:?}", r.error);
+                r.result.rounds.len() as u64
+            })
+            .sum();
+        assert_eq!(eng.bandit_sessions(), rounds, "{mode:?}");
+        assert_eq!(eng.bandit_updates(), rounds, "{mode:?}");
+        let counts = eng.bandit_counts().expect("shared bandit");
+        assert_eq!(counts.iter().sum::<u64>(), rounds, "{mode:?}: {counts:?}");
+        per_mode_rounds.push((mode, responses));
+        eng.shutdown();
+    }
+    // outputs also agree between the two modes (lossless decoding)
+    let (_, workers_out) = &per_mode_rounds[0];
+    let (_, continuous_out) = &per_mode_rounds[1];
+    for (i, (w, c)) in workers_out.iter().zip(continuous_out).enumerate() {
+        assert_eq!(
+            w.result.new_tokens(),
+            c.result.new_tokens(),
+            "request {i}: Workers and Continuous outputs diverged"
+        );
+    }
+}
+
+#[test]
+fn continuous_failure_is_an_error_response_and_engine_survives() {
+    let eng = Engine::start(config(EngineMode::Continuous, 0, 2)).unwrap();
+    // the sim KV cache holds 4096 positions; this prompt cannot fit
+    let oversized = "z".repeat(5000);
+    let r = eng
+        .submit(&oversized, 8)
+        .recv_timeout(TIMEOUT)
+        .expect("failed request must still be answered");
+    assert!(!r.is_ok());
+    assert!(
+        r.error.as_deref().unwrap_or("").contains("prompt too long"),
+        "error should explain the failure: {:?}",
+        r.error
+    );
+    let ok = eng.submit("follow-up after failure", MAX_NEW).recv_timeout(TIMEOUT).unwrap();
+    assert!(ok.is_ok(), "{:?}", ok.error);
+    eng.shutdown();
+}
+
+#[test]
+fn metrics_json_reports_step_gauges_in_continuous_mode() {
+    let eng = Engine::start(config(EngineMode::Continuous, 0, 4)).unwrap();
+    collect(burst_prompts(8).iter().map(|p| eng.submit(p, MAX_NEW)).collect());
+    let j = eng.metrics_json();
+    let engine = j.get("engine").expect("engine object");
+    let step = engine.get("step").expect("step gauges present in continuous mode");
+    assert!(step.get("steps").unwrap().as_usize().unwrap() > 0);
+    assert_eq!(step.get("admitted").unwrap().as_usize().unwrap(), 8);
+    assert!(step.get("admissions_per_step").unwrap().as_f64().unwrap() > 0.0);
+    assert!(step.get("in_flight_hist").is_some());
+    assert!(step.get("draft_occupancy").unwrap().as_f64().unwrap() >= 1.0);
+    let draft = engine.get("draft").expect("draft gauges");
+    assert!(draft.get("forwards").unwrap().as_usize().unwrap() > 0);
+    // verification went through the window-free batched path
+    let batch = engine.get("batch").expect("batch gauges");
+    assert!(batch.get("batches").unwrap().as_usize().unwrap() > 0);
+    let sched = j.get("sched").expect("sched ledger");
+    assert_eq!(sched.get("in_flight").unwrap().as_usize().unwrap(), 0, "burst fully drained");
+    eng.shutdown();
+}

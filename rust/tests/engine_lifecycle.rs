@@ -318,6 +318,39 @@ fn dead_queue_entries_do_not_hold_admission_seats() {
     eng.shutdown();
 }
 
+#[test]
+fn long_job_is_not_starved_under_short_job_flood() {
+    // Pure SJF starves a long request forever under sustained short-job
+    // load: every newcomer outbids it. The aged ordering key
+    // (docs/ARCHITECTURE.md §5) guarantees the long job pops within
+    // ~cost/SJF_AGING_PER_ARRIVAL further arrivals. Simulate sustained
+    // load: one short job arrives for every job served, indefinitely.
+    use tapout::engine::Scheduler;
+    let mut s = Scheduler::new(Policy::Sjf);
+    let mut long = Request::new(1, "x".repeat(500), 500); // cost 1000
+    long.category = "qa".into();
+    let long_cost = long.cost();
+    s.push(long);
+    let mut popped_long_at = None;
+    for i in 0..4 * (long_cost / 16) {
+        let mut short = Request::new(100 + i as u64, "y".repeat(10), 10); // cost 20
+        short.category = "qa".into();
+        s.push(short);
+        let r = s.pop().expect("queue never empty under sustained load");
+        s.note_done(r.cost());
+        if r.id == 1 {
+            popped_long_at = Some(i);
+            break;
+        }
+    }
+    let at = popped_long_at.expect("the long job must not starve under a short-job flood");
+    assert!(
+        at <= long_cost / 16 + 2,
+        "aging must promote the long job within ~cost/AGING arrivals, popped at {at}"
+    );
+    assert!(at > 2, "near-contemporaneous short jobs still win (SJF preserved), popped at {at}");
+}
+
 // ---------------------------------------------------------------- HTTP --
 
 fn http_get(addr: &str, path: &str) -> (u16, String) {
