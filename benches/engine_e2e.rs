@@ -12,9 +12,9 @@ use tapout::engine::{
     BackendKind, BatchConfig, Engine, EngineConfig, EngineMode, FinishStatus, Policy,
 };
 use tapout::harness::{run_method, run_probe, sim_suite, Backend};
-use tapout::models::{LanguageModel, Manifest, ModelAssets, PjrtModel};
+use tapout::models::{sim_encode, LanguageModel, Manifest, ModelAssets, PjrtModel, SimModel};
 use tapout::runtime::Runtime;
-use tapout::spec::MethodSpec;
+use tapout::spec::{greedy, GenConfig, MethodSpec, BOS};
 use tapout::util::bench::{bench, fmt_ns, group};
 use tapout::util::Json;
 
@@ -27,7 +27,18 @@ const BENCH_JSON_PATH: &str = "BENCH_serving.json";
 /// `continuous_vs_workers`).
 const BENCH_CONTINUOUS_JSON_PATH: &str = "BENCH_continuous.json";
 
+/// Prefix-cache on/off comparison on a shared-prefix workload lands here
+/// (`tapout.bench.cache.v1`, schema below in `prefix_cache_bench`).
+const BENCH_CACHE_JSON_PATH: &str = "BENCH_cache.json";
+
 fn main() {
+    // TAPOUT_BENCH_ONLY=cache runs just the prefix-cache comparison —
+    // the CI gate asserting cached prefill < uncached at slots >= 4
+    // without paying for the full bench suite
+    if std::env::var("TAPOUT_BENCH_ONLY").as_deref() == Ok("cache") {
+        run_cache_bench();
+        return;
+    }
     sim_tables();
     let mut report = Json::obj();
     report.set("schema", "tapout.bench.serving.v1");
@@ -44,7 +55,152 @@ fn main() {
         Ok(()) => println!("\n[wrote {BENCH_CONTINUOUS_JSON_PATH}]"),
         Err(e) => eprintln!("\n[failed to write {BENCH_CONTINUOUS_JSON_PATH}: {e}]"),
     }
+    run_cache_bench();
     pjrt_ladder();
+}
+
+fn run_cache_bench() {
+    let mut report = Json::obj();
+    report.set("schema", "tapout.bench.cache.v1");
+    prefix_cache_bench(&mut report);
+    match std::fs::write(BENCH_CACHE_JSON_PATH, report.render()) {
+        Ok(()) => println!("\n[wrote {BENCH_CACHE_JSON_PATH}]"),
+        Err(e) => eprintln!("\n[failed to write {BENCH_CACHE_JSON_PATH}: {e}]"),
+    }
+}
+
+/// Prefix-reuse KV cache on a shared-system-prompt workload
+/// (docs/ARCHITECTURE.md §12): the same burst — one long shared prefix,
+/// short unique suffixes — through the Workers engine at slots {1, 4}
+/// and the Continuous engine at slots {4}, each with the cache off and
+/// on. Outputs are asserted byte-identical across every configuration
+/// and against the target-only greedy oracle (the cache is lossless);
+/// the headline quantity is **prefill tokens computed vs served**:
+/// served is the prompt tokens each engine was asked to cover, computed
+/// is what it actually forwarded after cache hits. At slots ≥ 4 the
+/// cache-on engines must compute strictly fewer prefill tokens — the
+/// assert CI gates on — and TTFT p50 drops with them (reported in the
+/// JSON rows).
+fn prefix_cache_bench(report: &mut Json) {
+    use std::sync::atomic::Ordering;
+    let fast = std::env::var("TAPOUT_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let (n_req, max_new) = if fast { (16, 32) } else { (32, 64) };
+    let system =
+        "system: you are a terse serving assistant; answer from the shared template, cite the \
+         shared context, and stop. "
+            .repeat(3);
+    let prompts: Vec<String> =
+        (0..n_req).map(|i| format!("{system}user {i}: question number {i} please")).collect();
+    // prompt tokens the engine must cover per request: BOS + one token
+    // per byte (the sim codec)
+    let served_total: u64 = prompts.iter().map(|p| p.len() as u64 + 1).sum();
+
+    // the greedy oracle per prompt (the lossless reference)
+    let oracle: Vec<Vec<u32>> = prompts
+        .iter()
+        .map(|text| {
+            let mut prompt = vec![BOS];
+            prompt.extend(sim_encode(text));
+            let mut req = tapout::engine::Request::new(0, text.clone(), max_new);
+            req.prompt = prompt.clone();
+            let mut target =
+                SimModel::target(tapout::models::Scenario::new(req.scenario_seed(), &req.category));
+            let cfg = GenConfig { max_new, stop_at_eos: true, ..GenConfig::default() };
+            greedy(&mut target, &prompt, &cfg).unwrap().new_tokens().to_vec()
+        })
+        .collect();
+
+    group(&format!(
+        "prefix cache: {n_req}-request shared-prefix burst ({} shared tokens), max_new {max_new} (sim)",
+        system.len() + 1
+    ));
+    let mut rows: Vec<Json> = Vec::new();
+    for (mode, slots) in
+        [(EngineMode::Workers, 1usize), (EngineMode::Workers, 4), (EngineMode::Continuous, 4)]
+    {
+        let mut computed = [0u64; 2];
+        for (ci, cache) in [false, true].into_iter().enumerate() {
+            let eng = Engine::start(EngineConfig {
+                method: "seq-ucb1".into(),
+                gamma_max: 128,
+                sched: Policy::Fcfs,
+                slots,
+                workers: slots,
+                backend: BackendKind::sim_default(),
+                mode,
+                prefix_cache: cache,
+                ..EngineConfig::default()
+            })
+            .unwrap();
+            let t0 = Instant::now();
+            let rxs: Vec<_> = prompts.iter().map(|p| eng.submit(p, max_new)).collect();
+            let outputs: Vec<Vec<u32>> = rxs
+                .into_iter()
+                .map(|rx| {
+                    let r = rx.recv().unwrap();
+                    assert!(r.is_ok(), "{:?}", r.error);
+                    r.result.new_tokens().to_vec()
+                })
+                .collect();
+            let elapsed_ns = t0.elapsed().as_nanos() as f64;
+            assert_eq!(
+                outputs, oracle,
+                "{} slots={slots} cache={cache}: output diverged from the greedy oracle",
+                mode.label()
+            );
+            let cached = eng.cache_stats().cached_tokens.load(Ordering::Relaxed);
+            let hit_rate = eng.cache_stats().hit_rate();
+            computed[ci] = served_total - cached;
+            let (new_tokens, ttft_p50, ttft_p95) = {
+                let mut m = eng.metrics.lock().unwrap();
+                (m.new_tokens, m.ttft_ms.percentile(50.0), m.ttft_ms.percentile(95.0))
+            };
+            let tok_s = new_tokens as f64 / (elapsed_ns / 1e9);
+            println!(
+                "  {:<10} slots={slots} cache={:<5}: {tok_s:>9.0} tok/s  ttft p50 {ttft_p50:.2} ms  \
+                 prefill computed {}/{} (hit rate {hit_rate:.2})",
+                mode.label(),
+                cache,
+                computed[ci],
+                served_total,
+            );
+            let mut row = Json::obj();
+            row.set("mode", mode.label())
+                .set("slots", slots)
+                .set("cache", cache)
+                .set("throughput_tok_s", tok_s)
+                .set("wall_ms", elapsed_ns / 1e6)
+                .set("ttft_p50_ms", ttft_p50)
+                .set("ttft_p95_ms", ttft_p95)
+                .set("prefill_tokens_served", served_total as usize)
+                .set("prefill_tokens_computed", computed[ci] as usize)
+                .set("cached_tokens", cached as usize)
+                .set("hit_rate", hit_rate);
+            rows.push(row);
+            eng.shutdown();
+        }
+        println!(
+            "    prefill computed: off {} vs on {}  ({:.2}x fewer)",
+            computed[0],
+            computed[1],
+            computed[0] as f64 / computed[1].max(1) as f64
+        );
+        if slots >= 4 {
+            assert!(
+                computed[1] < computed[0],
+                "{} slots={slots}: the prefix cache must compute strictly fewer prefill tokens \
+                 ({} on vs {} off)",
+                mode.label(),
+                computed[1],
+                computed[0]
+            );
+        }
+    }
+    report
+        .set("requests", n_req)
+        .set("max_new", max_new)
+        .set("shared_prefix_tokens", system.len() + 1)
+        .set("modes", rows);
 }
 
 /// Workers vs Continuous execution core at slots {1, 2, 4, 8} on the sim

@@ -352,6 +352,22 @@ impl LanguageModel for BatchedTarget {
         self.cur = 0;
     }
 
+    /// Prefix reuse through the batcher (docs/ARCHITECTURE.md §12): the
+    /// handle holds no KV itself — the resident state lives with the
+    /// batcher's verifier, keyed by this handle's slot id — so retaining
+    /// is a *mirror* operation: place the local cursor at `keep` so the
+    /// first submitted block starts at the divergence point. The engine
+    /// only routes a cache hit to a slot whose resident verifier state
+    /// covers `keep` matching positions (slots.rs); on the PJRT backend
+    /// the verifier's `align` additionally guards that the resident
+    /// world's cursor really reaches `start` before executing.
+    fn retain_prefix(&mut self, seed: u64, category: &str, keep: usize) -> usize {
+        self.seed = seed;
+        self.category = category.to_string();
+        self.cur = keep;
+        keep
+    }
+
     fn block(&mut self, tokens: &[u32], start: usize) -> Result<Vec<TokenSignals>> {
         anyhow::ensure!(start == self.cur, "non-contiguous block: start {start} cur {}", self.cur);
         anyhow::ensure!(!tokens.is_empty(), "empty block");

@@ -1,0 +1,226 @@
+//! Cross-request prefix-reuse index (docs/ARCHITECTURE.md §12).
+//!
+//! Serving workloads repeat prompt prefixes constantly — system prompts,
+//! few-shot templates, chat history — and every repeat pays prefill twice
+//! (draft + target). The contiguous-cursor slot protocol (slots.rs,
+//! models/traits.rs) already keeps per-sequence KV resident across
+//! requests; the only missing piece is *routing*: when a request arrives,
+//! send it to the free slot whose resident sequence shares the longest
+//! token-id prefix with the request's prompt, roll the slot's cursors
+//! back to the divergence point, and prefill only the suffix.
+//!
+//! [`PrefixIndex`] is that routing structure: a token-id trie over the
+//! resident prefixes of the *free* slots of a
+//! [`SlotPool`](super::slots::SlotPool). Every slot's prefix is
+//! inserted as a root path and the slot
+//! id is marked on each node along it, so a lookup is one walk down the
+//! query prompt: the deepest reachable node holds exactly the free slots
+//! whose longest common prefix with the prompt equals that depth.
+//!
+//! The index stores token ids only — whether reuse is *valid* is the
+//! slot pool's contract (a slot's recorded prefix never exceeds its
+//! models' cursor watermark, slots.rs), and whether it is *safe* is the
+//! backend's (`LanguageModel::retain_prefix`). The trie itself is exact:
+//! a match is a literal token-for-token prefix equality, so routing can
+//! never introduce an approximate hit.
+//!
+//! Sizing: one node per distinct (depth, token) pair across free-slot
+//! prefixes — bounded by Σ prefix lengths ≤ slots × max_seq, a few tens
+//! of thousands of small nodes at the defaults. Nodes are arena-allocated
+//! and recycled on removal, so a long-lived server does not leak trie
+//! nodes as prefixes churn.
+
+use std::collections::HashMap;
+
+/// One trie node: outgoing token edges plus the ids of the free slots
+/// whose resident prefix passes through this node.
+#[derive(Debug, Default)]
+struct Node {
+    children: HashMap<u32, usize>,
+    slots: Vec<usize>,
+}
+
+/// A token-id trie over the resident prefixes of free KV slots, answering
+/// "which free slot shares the longest prefix with this prompt?" in one
+/// walk. Maintained by [`SlotPool`](super::slots::SlotPool) under its
+/// checkout mutex: insert at release, remove at checkout.
+#[derive(Debug)]
+pub struct PrefixIndex {
+    /// arena of nodes; index 0 is the root (never recycled)
+    nodes: Vec<Node>,
+    /// recycled node indexes (removal prunes emptied paths)
+    spare: Vec<usize>,
+}
+
+impl Default for PrefixIndex {
+    fn default() -> Self {
+        PrefixIndex::new()
+    }
+}
+
+impl PrefixIndex {
+    /// An empty index.
+    pub fn new() -> PrefixIndex {
+        PrefixIndex { nodes: vec![Node::default()], spare: Vec::new() }
+    }
+
+    fn alloc(&mut self) -> usize {
+        match self.spare.pop() {
+            Some(i) => i,
+            None => {
+                self.nodes.push(Node::default());
+                self.nodes.len() - 1
+            }
+        }
+    }
+
+    /// Register free slot `slot` as holding resident KV for `prefix`.
+    /// An empty prefix is a no-op (nothing to match against).
+    pub fn insert(&mut self, slot: usize, prefix: &[u32]) {
+        let mut at = 0;
+        for &tok in prefix {
+            let next = match self.nodes[at].children.get(&tok).copied() {
+                Some(n) => n,
+                None => {
+                    let n = self.alloc();
+                    self.nodes[at].children.insert(tok, n);
+                    n
+                }
+            };
+            self.nodes[next].slots.push(slot);
+            at = next;
+        }
+    }
+
+    /// Remove slot `slot`'s registration for `prefix` (the exact prefix
+    /// passed to [`PrefixIndex::insert`]), pruning nodes that no longer
+    /// carry any slot. Unknown registrations are ignored.
+    pub fn remove(&mut self, slot: usize, prefix: &[u32]) {
+        let mut at = 0;
+        // (parent, token, node) for each step of the path
+        let mut path = Vec::with_capacity(prefix.len());
+        for &tok in prefix {
+            let Some(&next) = self.nodes[at].children.get(&tok) else { return };
+            path.push((at, tok, next));
+            at = next;
+        }
+        let mut pruned_from = None;
+        for (i, &(parent, tok, node)) in path.iter().enumerate() {
+            let slots = &mut self.nodes[node].slots;
+            if let Some(p) = slots.iter().position(|&s| s == slot) {
+                slots.swap_remove(p);
+            }
+            // once a node on the path is emptied, this slot was the only
+            // one passing through it — everything deeper on the path is
+            // emptied too, so unlink the whole tail from its parent
+            if pruned_from.is_none() && self.nodes[node].slots.is_empty() {
+                self.nodes[parent].children.remove(&tok);
+                pruned_from = Some(i);
+            }
+        }
+        if let Some(from) = pruned_from {
+            for &(_, _, node) in &path[from..] {
+                self.nodes[node].children.clear();
+                self.nodes[node].slots.clear();
+                self.spare.push(node);
+            }
+        }
+    }
+
+    /// The free slot sharing the longest token-id prefix with `prompt`,
+    /// as `(slot id, common prefix length)`. `None` when no free slot
+    /// matches even the first token.
+    pub fn best_match(&self, prompt: &[u32]) -> Option<(usize, usize)> {
+        let mut at = 0;
+        let mut depth = 0;
+        for &tok in prompt {
+            match self.nodes[at].children.get(&tok) {
+                Some(&n) => {
+                    at = n;
+                    depth += 1;
+                }
+                None => break,
+            }
+        }
+        if depth == 0 {
+            return None;
+        }
+        // every surviving node carries ≥1 slot (remove() prunes), and
+        // every slot here has LCP exactly `depth`: a longer match would
+        // have let the walk descend further
+        self.nodes[at].slots.first().map(|&s| (s, depth))
+    }
+
+    /// Number of live (non-root, non-recycled) trie nodes — a leak guard
+    /// for tests and diagnostics.
+    pub fn node_count(&self) -> usize {
+        self.nodes.len() - 1 - self.spare.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn longest_match_wins_and_exact_tokens_required() {
+        let mut ix = PrefixIndex::new();
+        ix.insert(0, &[1, 2, 3]);
+        ix.insert(1, &[1, 2, 9, 9]);
+        assert_eq!(ix.best_match(&[1, 2, 3, 7]), Some((0, 3)));
+        assert_eq!(ix.best_match(&[1, 2, 9, 9, 5]), Some((1, 4)));
+        // diverging at depth 2: either slot matches with LCP 2
+        let (slot, lcp) = ix.best_match(&[1, 2, 4]).unwrap();
+        assert_eq!(lcp, 2);
+        assert!(slot == 0 || slot == 1);
+        assert_eq!(ix.best_match(&[8, 1, 2]), None, "no first-token match");
+    }
+
+    #[test]
+    fn remove_prunes_nodes_and_recycles_them() {
+        let mut ix = PrefixIndex::new();
+        ix.insert(0, &[1, 2, 3, 4]);
+        ix.insert(1, &[1, 2]);
+        assert_eq!(ix.node_count(), 4);
+        ix.remove(0, &[1, 2, 3, 4]);
+        // nodes for [1] and [1,2] survive (slot 1 passes through), the
+        // [1,2,3] / [1,2,3,4] tail is pruned and recycled
+        assert_eq!(ix.node_count(), 2);
+        assert_eq!(ix.best_match(&[1, 2, 3, 4]), Some((1, 2)));
+        ix.remove(1, &[1, 2]);
+        assert_eq!(ix.node_count(), 0);
+        assert_eq!(ix.best_match(&[1, 2]), None);
+        // recycled nodes are reused, not leaked
+        ix.insert(2, &[5, 6]);
+        assert_eq!(ix.node_count(), 2);
+        assert_eq!(ix.best_match(&[5, 6, 7]), Some((2, 2)));
+    }
+
+    #[test]
+    fn identical_prefixes_coexist() {
+        let mut ix = PrefixIndex::new();
+        ix.insert(0, &[4, 4, 4]);
+        ix.insert(1, &[4, 4, 4]);
+        let (first, lcp) = ix.best_match(&[4, 4, 4]).unwrap();
+        assert_eq!(lcp, 3);
+        ix.remove(first, &[4, 4, 4]);
+        let (second, lcp) = ix.best_match(&[4, 4, 4]).unwrap();
+        assert_eq!(lcp, 3);
+        assert_ne!(first, second);
+        ix.remove(second, &[4, 4, 4]);
+        assert_eq!(ix.best_match(&[4, 4, 4]), None);
+        assert_eq!(ix.node_count(), 0);
+    }
+
+    #[test]
+    fn empty_prefix_and_unknown_removals_are_noops() {
+        let mut ix = PrefixIndex::new();
+        ix.insert(0, &[]);
+        assert_eq!(ix.node_count(), 0);
+        assert_eq!(ix.best_match(&[1, 2]), None);
+        ix.remove(3, &[7, 7]); // never inserted
+        ix.insert(1, &[7]);
+        ix.remove(1, &[7, 8]); // longer than the registration
+        assert_eq!(ix.best_match(&[7]), Some((1, 1)));
+    }
+}

@@ -10,8 +10,11 @@
 //! One thread per connection; decoding parallelism comes from the
 //! engine's worker pool (server.rs). Error contract (docs/OPERATIONS.md):
 //! decode failures are a 500 with an error body, an over-size body is a
-//! 413, a shed request (admission control) is a 429 carrying the queue-
-//! wait estimate, and a request that outlives its deadline is a 504.
+//! 413, a POST without a `Content-Length` header is a 411 (header names
+//! match case-insensitively per RFC 9110), a chunked request body is a
+//! 501 (not implemented here), a shed request (admission control) is a
+//! 429 carrying the queue-wait estimate, and a request that outlives its
+//! deadline is a 504.
 //!
 //! With `"stream": true` the reply is a chunked `text/event-stream`: one
 //! `data:` event per committed decode round (ids + text) and a final
@@ -79,8 +82,12 @@ fn handle_conn(stream: TcpStream, engine: &Engine) -> Result<()> {
     let method = parts.next().unwrap_or("").to_string();
     let path = parts.next().unwrap_or("/").to_string();
 
-    // headers
-    let mut content_length = 0usize;
+    // headers — field names are matched case-insensitively per RFC 9110
+    // §5.1 (clients legitimately send `content-length`, `Content-Length`,
+    // or any mix; an exact-case match silently drops their body length)
+    let mut content_length: Option<usize> = None;
+    let mut bad_length: Option<String> = None;
+    let mut chunked = false;
     loop {
         let mut h = String::new();
         reader.read_line(&mut h)?;
@@ -88,10 +95,44 @@ fn handle_conn(stream: TcpStream, engine: &Engine) -> Result<()> {
         if h.is_empty() {
             break;
         }
-        if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
-            content_length = v.trim().parse().unwrap_or(0);
+        if let Some((name, value)) = h.split_once(':') {
+            let (name, value) = (name.trim(), value.trim());
+            if name.eq_ignore_ascii_case("content-length") {
+                match value.parse() {
+                    Ok(n) => content_length = Some(n),
+                    // present but unparseable is a framing error (400),
+                    // distinct from the header being absent (411)
+                    Err(_) => bad_length = Some(value.to_string()),
+                }
+            } else if name.eq_ignore_ascii_case("transfer-encoding") {
+                chunked = value.to_ascii_lowercase().contains("chunked");
+            }
         }
     }
+
+    // body-framing contract for routes that need a body (RFC 9110):
+    // chunked transfer coding is not implemented here — a chunked body
+    // read as `content-length` bytes would be garbage, so refuse it
+    // explicitly with 501; a POST with no length at all is 411 Length
+    // Required, not a misleading "bad json" 400 over an empty body
+    if method == "POST" && path == "/generate" {
+        if chunked {
+            let mut o = Json::obj();
+            o.set("error", "chunked transfer-encoding not supported: send content-length");
+            return respond(stream, 501, &o.render());
+        }
+        if let Some(bad) = bad_length {
+            let mut o = Json::obj();
+            o.set("error", format!("invalid content-length header: {bad:?}"));
+            return respond(stream, 400, &o.render());
+        }
+        if content_length.is_none() {
+            let mut o = Json::obj();
+            o.set("error", "missing content-length header (chunked bodies unsupported)");
+            return respond(stream, 411, &o.render());
+        }
+    }
+    let content_length = content_length.unwrap_or(0);
 
     // over-size bodies are refused up front — never silently truncated
     // into confusing JSON decode errors (docs/OPERATIONS.md)
@@ -149,7 +190,8 @@ fn route(engine: &Engine, method: &str, path: &str) -> (u16, Json) {
                 .set("workers", engine.config.workers)
                 .set("slots", engine.config.slots)
                 .set("max_batch", engine.config.verify_batch.max_batch)
-                .set("max_queue", engine.config.max_queue);
+                .set("max_queue", engine.config.max_queue)
+                .set("prefix_cache", engine.config.prefix_cache);
             (200, o)
         }
         ("GET", "/metrics") => (200, engine.metrics_json()),
@@ -323,8 +365,10 @@ fn respond(mut stream: TcpStream, status: u16, body: &str) -> Result<()> {
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
+        411 => "Length Required",
         413 => "Payload Too Large",
         429 => "Too Many Requests",
+        501 => "Not Implemented",
         504 => "Gateway Timeout",
         _ => "Internal Server Error",
     };

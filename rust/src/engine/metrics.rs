@@ -392,6 +392,110 @@ impl StepStats {
     }
 }
 
+/// Lock-free gauges for the cross-request prefix-reuse cache
+/// (docs/ARCHITECTURE.md §12): how often affinity checkout found a free
+/// slot with a matching resident prefix, how many prompt tokens the hits
+/// skipped, and how recorded prefixes churn. Owned by the
+/// [`SlotPool`](super::slots::SlotPool) (the pool is the cache) and
+/// surfaced as the `engine.cache` object in `/metrics`
+/// (docs/OPERATIONS.md). All counters stay zero while the cache is
+/// disabled.
+#[derive(Debug)]
+pub struct CacheStats {
+    /// is prefix reuse enabled on the owning pool?
+    pub enabled: bool,
+    /// affinity checkouts routed through the prefix index
+    pub lookups: AtomicU64,
+    /// checkouts that reused ≥ 1 cached prompt token
+    pub hits: AtomicU64,
+    /// prompt tokens whose prefill was skipped (Σ reuse length)
+    pub cached_tokens: AtomicU64,
+    /// prompt tokens across all looked-up requests (ratio denominator)
+    pub prompt_tokens: AtomicU64,
+    /// recorded prefixes discarded without being reused (a miss checkout
+    /// resets a slot that had cached state)
+    pub evictions: AtomicU64,
+    /// requests served per slot id (the slot-affinity reuse footprint)
+    pub served: Vec<AtomicU64>,
+}
+
+impl CacheStats {
+    /// Fresh counters for a pool of `n_slots` slots.
+    pub fn new(n_slots: usize, enabled: bool) -> CacheStats {
+        CacheStats {
+            enabled,
+            lookups: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            cached_tokens: AtomicU64::new(0),
+            prompt_tokens: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            served: (0..n_slots).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Record one affinity checkout of a `prompt_len`-token prompt that
+    /// reused `reuse` cached positions (0 = miss).
+    pub fn note_lookup(&self, prompt_len: usize, reuse: usize) {
+        self.lookups.fetch_add(1, Ordering::Relaxed);
+        self.prompt_tokens.fetch_add(prompt_len as u64, Ordering::Relaxed);
+        if reuse > 0 {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            self.cached_tokens.fetch_add(reuse as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Record one recorded prefix discarded without reuse.
+    pub fn note_eviction(&self) {
+        self.evictions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one completed checkout of slot `slot` (at release).
+    pub fn note_served(&self, slot: usize) {
+        if let Some(c) = self.served.get(slot) {
+            c.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Fraction of lookups that reused cached state.
+    pub fn hit_rate(&self) -> f64 {
+        let l = self.lookups.load(Ordering::Relaxed);
+        if l == 0 {
+            return 0.0;
+        }
+        self.hits.load(Ordering::Relaxed) as f64 / l as f64
+    }
+
+    /// Fraction of looked-up prompt tokens whose prefill was skipped.
+    pub fn cached_token_ratio(&self) -> f64 {
+        let p = self.prompt_tokens.load(Ordering::Relaxed);
+        if p == 0 {
+            return 0.0;
+        }
+        self.cached_tokens.load(Ordering::Relaxed) as f64 / p as f64
+    }
+
+    /// JSON object for the `/metrics` `engine.cache` field.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("enabled", self.enabled)
+            .set("lookups", self.lookups.load(Ordering::Relaxed) as usize)
+            .set("hits", self.hits.load(Ordering::Relaxed) as usize)
+            .set("hit_rate", self.hit_rate())
+            .set("cached_tokens", self.cached_tokens.load(Ordering::Relaxed) as usize)
+            .set("prompt_tokens", self.prompt_tokens.load(Ordering::Relaxed) as usize)
+            .set("cached_token_ratio", self.cached_token_ratio())
+            .set("evictions", self.evictions.load(Ordering::Relaxed) as usize)
+            .set(
+                "served",
+                self.served
+                    .iter()
+                    .map(|c| c.load(Ordering::Relaxed) as f64)
+                    .collect::<Vec<f64>>(),
+            );
+        o
+    }
+}
+
 /// Lock-free counters for the request lifecycle's non-completion exits
 /// (docs/ARCHITECTURE.md §10): cancelled by the client, expired past the
 /// deadline, shed by the admission controller. Surfaced as the
@@ -666,6 +770,28 @@ mod tests {
         assert!(j.get("step").is_none(), "no iterations ran");
         assert!(j.get("draft").is_some());
         assert!((s.draft.mean_occupancy() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cache_stats_rates_and_json() {
+        let c = CacheStats::new(2, true);
+        c.note_lookup(10, 0);
+        c.note_lookup(10, 6);
+        c.note_lookup(20, 10);
+        c.note_eviction();
+        c.note_served(0);
+        c.note_served(1);
+        c.note_served(1);
+        c.note_served(9); // out-of-range slot ids are ignored, not a panic
+        assert!((c.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((c.cached_token_ratio() - 16.0 / 40.0).abs() < 1e-12);
+        let j = c.to_json();
+        assert_eq!(j.get("lookups").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.get("hits").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.get("cached_tokens").unwrap().as_usize().unwrap(), 16);
+        assert_eq!(j.get("evictions").unwrap().as_usize().unwrap(), 1);
+        let served = j.get("served").unwrap().f64s();
+        assert_eq!(served, vec![1.0, 2.0]);
     }
 
     #[test]

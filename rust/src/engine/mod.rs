@@ -5,10 +5,13 @@
 //! worker pool with its cross-session verification batcher, and the
 //! continuous-batching step loop ([`stepper`]) — serving metrics, and a
 //! minimal HTTP JSON/SSE API. See docs/ARCHITECTURE.md §3–§5 for the
-//! concurrency design, §10 for the request lifecycle, and §11 for
-//! continuous batching (DESIGN.md keeps the legacy section map).
+//! concurrency design, §10 for the request lifecycle, §11 for
+//! continuous batching, and §12 for the cross-request prefix-reuse KV
+//! cache ([`cache`], slot-affinity checkout in [`slots`]) shared by both
+//! execution modes (DESIGN.md keeps the legacy section map).
 
 pub mod batcher;
+pub mod cache;
 pub mod http;
 pub mod metrics;
 pub mod request;
@@ -18,9 +21,11 @@ pub mod slots;
 pub mod stepper;
 
 pub use batcher::{BatchConfig, BatchedTarget, Batcher, BatcherHandle};
+pub use cache::PrefixIndex;
 pub use http::HttpServer;
 pub use metrics::{
-    BatchStats, DraftStats, EngineMetrics, EngineStats, LifecycleStats, StepStats, WorkerStats,
+    BatchStats, CacheStats, DraftStats, EngineMetrics, EngineStats, LifecycleStats, StepStats,
+    WorkerStats,
 };
 pub use request::{CancelFlag, EmitClip, FinishStatus, Request, Response, StreamEvent};
 pub use scheduler::{Policy, Scheduler};

@@ -92,6 +92,13 @@ pub struct Request {
     /// shared cancellation flag (clone it before submitting to keep a
     /// handle — [`Request::cancel_flag`])
     pub cancel: CancelFlag,
+    /// prefix-cache placement hint: prompt tokens the dispatcher expects
+    /// a slot-affinity checkout to reuse (docs/ARCHITECTURE.md §12).
+    /// Stamped by the dispatcher from the pool's `peek_reuse` at
+    /// admission; the SJF scheduler subtracts it from the service-cost
+    /// estimate ([`Request::sched_cost`]). Advisory only — it never
+    /// changes what decodes, just where the request sorts in the queue.
+    pub cached_hint: usize,
 }
 
 impl Request {
@@ -106,6 +113,7 @@ impl Request {
             arrival: Instant::now(),
             deadline: None,
             cancel: CancelFlag::new(),
+            cached_hint: 0,
         }
     }
 
@@ -135,6 +143,15 @@ impl Request {
             self.prompt.len()
         };
         prompt_tokens + self.max_new
+    }
+
+    /// Scheduling cost net of the prefix-cache placement hint: the
+    /// service estimate the SJF key and the scheduler's pending /
+    /// in-flight ledgers use. Every [`crate::engine::Scheduler`] ledger
+    /// release (`note_done`) must pass this same quantity so the ledgers
+    /// conserve (scheduler.rs).
+    pub fn sched_cost(&self) -> usize {
+        self.cost().saturating_sub(self.cached_hint)
     }
 
     /// Deterministic per-request scenario seed (drives the simulator

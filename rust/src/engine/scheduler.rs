@@ -25,7 +25,8 @@
 //! **Aging** (starvation fix): pure SJF starves a long request forever
 //! under a sustained flood of short jobs — every newcomer outbids it.
 //! The SJF key therefore ages by arrival index:
-//! `key = cost + SJF_AGING_PER_ARRIVAL · seq`. Keys stay static (heap
+//! `key = cost + SJF_AGING_PER_ARRIVAL · seq` (saturating arithmetic —
+//! see the private `sjf_key` helper). Keys stay static (heap
 //! compatible) yet every later arrival is handicapped by how much
 //! younger it is, so a queued request's *relative* priority rises with
 //! every arrival it has waited through; once
@@ -47,6 +48,19 @@ use super::request::Request;
 /// arrivals (see the module docs). 16 ≈ one tiny request's cost, so
 /// ordering among contemporaries is still effectively pure SJF.
 pub const SJF_AGING_PER_ARRIVAL: u64 = 16;
+
+/// The SJF heap key: service cost plus the arrival-index aging handicap,
+/// in **saturating** arithmetic. On a long-lived server `seq` grows
+/// without bound and a huge prompt can push `cost` near the type limit;
+/// `cost + 16·seq` in plain arithmetic overflows there (a debug-build
+/// panic, a silently *tiny* key — i.e. instant queue-jump — in release).
+/// Saturation pins the worst case at `u64::MAX`, where the `seq`
+/// tie-break keeps equal-key entries FIFO, so the failure mode degrades
+/// to arrival order instead of inverted priorities. Pinned by
+/// `aging_key_saturates_at_u64_boundaries`.
+fn sjf_key(cost: u64, seq: u64) -> u64 {
+    cost.saturating_add(SJF_AGING_PER_ARRIVAL.saturating_mul(seq))
+}
 
 /// Admission-ordering policy for queued requests.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -144,13 +158,21 @@ impl Scheduler {
     }
 
     /// Enqueue a request (O(log n)). The SJF key carries the arrival-index
-    /// aging term (module docs): older entries win against sufficiently
-    /// newer ones no matter the cost gap, so no request starves.
+    /// aging term (module docs; saturating — see the `sjf_key` helper):
+    /// older
+    /// entries win against sufficiently newer ones no matter the cost
+    /// gap, so no request starves. The cost is the request's
+    /// [`Request::sched_cost`] — its service estimate net of the
+    /// prefix-cache placement hint (docs/ARCHITECTURE.md §12), so a
+    /// request whose prompt prefix is already resident in a slot sorts
+    /// as the cheaper job it actually is. Ledger conservation follows
+    /// from every [`Scheduler::note_done`] passing the same
+    /// `sched_cost`.
     pub fn push(&mut self, req: Request) {
-        let cost = req.cost() as u64;
+        let cost = req.sched_cost() as u64;
         let key = match self.policy {
             Policy::Fcfs => 0,
-            Policy::Sjf => cost + SJF_AGING_PER_ARRIVAL * self.next_seq,
+            Policy::Sjf => sjf_key(cost, self.next_seq),
         };
         let seq = self.next_seq;
         self.next_seq += 1;
@@ -216,7 +238,9 @@ impl Scheduler {
     }
 
     /// A previously popped request finished decoding (pass its
-    /// `Request::cost()`); releases it from the in-flight ledger.
+    /// `Request::sched_cost()` — the same quantity `push` charged, so
+    /// the in-flight ledger conserves); releases it from the in-flight
+    /// ledger.
     pub fn note_done(&mut self, cost: usize) {
         self.in_flight_cost = self.in_flight_cost.saturating_sub(cost as u64);
         self.in_flight = self.in_flight.saturating_sub(1);
@@ -383,6 +407,50 @@ mod tests {
         let mut sorted = shorts.clone();
         sorted.sort_unstable();
         assert_eq!(shorts, sorted);
+    }
+
+    #[test]
+    fn aging_key_saturates_at_u64_boundaries() {
+        // a long-lived server's arrival index (or a huge prompt's cost)
+        // can drive `cost + 16·seq` past u64::MAX; the key must saturate
+        // — a debug-build panic or a wrapped (tiny) key would invert the
+        // queue's priorities
+        assert_eq!(sjf_key(u64::MAX, 0), u64::MAX);
+        assert_eq!(sjf_key(u64::MAX - 10, 1_000_000), u64::MAX);
+        assert_eq!(sjf_key(0, u64::MAX), u64::MAX, "aging product alone saturates");
+        // u64::MAX/16 · 16 = u64::MAX − 15, so a cost of 100 overflows
+        assert_eq!(sjf_key(100, u64::MAX / SJF_AGING_PER_ARRIVAL), u64::MAX);
+        // well inside the range the key stays exact
+        assert_eq!(sjf_key(100, 3), 100 + 3 * SJF_AGING_PER_ARRIVAL);
+        // saturated keys are equal, so ordering falls back to the seq
+        // tie-break (FIFO) instead of panicking or inverting
+        let mut s = Scheduler::new(Policy::Sjf);
+        s.next_seq = u64::MAX - 2;
+        s.push(req(1, 50, 50));
+        s.push(req(2, 1, 1));
+        assert_eq!(s.pop().unwrap().id, 1, "saturated keys stay FIFO by seq");
+        assert_eq!(s.pop().unwrap().id, 2);
+    }
+
+    #[test]
+    fn cached_hint_discounts_the_sjf_cost() {
+        // two equal-cost requests; the one whose prompt prefix is
+        // expected to be resident in a slot sorts as the cheaper job
+        let mut s = Scheduler::new(Policy::Sjf);
+        let plain = req(1, 50, 10); // cost 60
+        let mut hinted = req(2, 50, 10); // cost 60, 40 expected cached
+        hinted.cached_hint = 40;
+        assert_eq!(hinted.sched_cost(), 20);
+        s.push(plain);
+        s.push(hinted);
+        assert_eq!(s.pending_cost(), 80, "ledger charges the discounted cost");
+        assert_eq!(s.pop().unwrap().id, 2, "cache-hit request pops first");
+        assert_eq!(s.pop().unwrap().id, 1);
+        // conservation when note_done passes the same sched_cost
+        s.note_done(20);
+        s.note_done(60);
+        assert_eq!(s.in_flight_cost(), 0);
+        assert_eq!(s.in_flight(), 0);
     }
 
     #[test]

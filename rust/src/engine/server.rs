@@ -167,6 +167,13 @@ pub struct EngineConfig {
     /// only gates *whether* verification batches (`max_batch == 0`
     /// disables coalescing); the step loop itself is the batching window.
     pub mode: EngineMode,
+    /// cross-request prefix-reuse KV cache (docs/ARCHITECTURE.md §12):
+    /// admission routes each request to the free slot sharing the
+    /// longest resident token prefix with its prompt and prefills only
+    /// the suffix. Lossless — outputs are byte-identical with the cache
+    /// on or off; it only removes redundant prefill forwards. Applies to
+    /// both execution modes. Off by default (CLI `serve --prefix-cache`).
+    pub prefix_cache: bool,
 }
 
 impl Default for EngineConfig {
@@ -184,6 +191,7 @@ impl Default for EngineConfig {
             max_queue: 0,
             default_deadline_ms: 0,
             mode: EngineMode::Workers,
+            prefix_cache: false,
         }
     }
 }
@@ -372,6 +380,11 @@ impl Engine {
             ),
         };
 
+        // prefix-reuse routing is a pool property: with it on, checkout
+        // is affinity-matched and releases index the recorded resident
+        // prefixes (slots.rs, docs/ARCHITECTURE.md §12)
+        let pool = pool.with_prefix_cache(config.prefix_cache);
+
         // the worker engine coalesces verification through the batcher
         // thread; the step loop keeps the verifier and batches directly
         // (it *is* the window)
@@ -514,6 +527,12 @@ impl Engine {
         }
     }
 
+    /// The slot pool's prefix-cache gauges (the `/metrics` `engine.cache`
+    /// source — docs/ARCHITECTURE.md §12).
+    pub fn cache_stats(&self) -> &super::metrics::CacheStats {
+        self.shared.pool.cache_stats()
+    }
+
     // --- shared-bandit readouts (the online-learning observability) ----
 
     /// Drafting sessions absorbed by the shared controller since boot —
@@ -552,7 +571,10 @@ impl Engine {
         if span_ns == 0 {
             span_ns = self.shared.started.lock().unwrap().elapsed().as_nanos() as u64;
         }
-        o.set("engine", self.stats.to_json(span_ns));
+        let mut eng = self.stats.to_json(span_ns);
+        // the pool owns the prefix-cache gauges (it is the cache)
+        eng.set("cache", self.shared.pool.cache_stats().to_json());
+        o.set("engine", eng);
         {
             // scheduler ledger: queued + in-flight work and the honest
             // queue-wait estimate (docs/ARCHITECTURE.md §5)
@@ -610,6 +632,12 @@ fn dispatcher_loop(
                 if req.prompt.is_empty() {
                     req.prompt = shared.codec.encode_prompt(&req.prompt_text);
                 }
+                // affinity placement hint (docs/ARCHITECTURE.md §12):
+                // tokens a slot checkout is expected to reuse, so the
+                // SJF cost estimate can subtract the prefill the cache
+                // will skip. Advisory — 0 with the cache off, and a
+                // stale hint only perturbs queue order, never output.
+                req.cached_hint = shared.pool.peek_reuse(&req.prompt);
                 stats.submitted.fetch_add(1, Ordering::Relaxed);
                 {
                     let mut q = shared.q.lock().unwrap();
@@ -682,6 +710,12 @@ fn dispatcher_loop(
 enum DecodeEnd {
     Complete(crate::spec::GenResult),
     Cancelled(crate::spec::GenResult),
+    /// cancelled, but observed via a step *error* (e.g. a batcher seat
+    /// dropped mid-round, or a backend failure racing the cancel): the
+    /// reply is the same `Cancelled`, but the slot's resident sequence
+    /// state did not stop at a clean round boundary and must not be
+    /// recorded for prefix reuse (docs/ARCHITECTURE.md §12)
+    CancelledDirty(crate::spec::GenResult),
     Expired(crate::spec::GenResult),
     Failed(anyhow::Error),
 }
@@ -691,6 +725,12 @@ enum DecodeEnd {
 /// the sink, and honor the cancellation flag and deadline at every step
 /// boundary. Decoding stops as soon as the reply is fully determined
 /// (clip window closed), so post-EOS / post-budget rounds are never run.
+///
+/// `resident` is the cache-hit prefix both models already cover
+/// (docs/ARCHITECTURE.md §12): the session resumes at that cursor and
+/// prefills only the prompt suffix. 0 = fresh decode (the caller has
+/// already reset the models via `retain_prefix`).
+#[allow(clippy::too_many_arguments)]
 fn drive_session(
     draft: &mut dyn LanguageModel,
     target: &mut dyn LanguageModel,
@@ -699,6 +739,7 @@ fn drive_session(
     req: &Request,
     sink: &ResponseSink,
     shared: &EngineShared,
+    resident: usize,
 ) -> DecodeEnd {
     let gen_cfg = GenConfig {
         max_new: req.max_new,
@@ -706,10 +747,11 @@ fn drive_session(
         stop_at_eos: true,
         collect_signals: false,
     };
-    let mut sess = match SpecSession::new(draft, target, session, rng, &req.prompt, &gen_cfg) {
-        Ok(s) => s,
-        Err(e) => return DecodeEnd::Failed(e),
-    };
+    let mut sess =
+        match SpecSession::resume(draft, target, session, rng, &req.prompt, &gen_cfg, resident) {
+            Ok(s) => s,
+            Err(e) => return DecodeEnd::Failed(e),
+        };
     let mut clip = EmitClip::new(req.max_new);
     loop {
         // lifecycle checks sit at the step boundary — the decode core
@@ -740,9 +782,11 @@ fn drive_session(
             }
             Err(e) => {
                 // a batcher seat dropped on cancellation surfaces as a
-                // step error; report it as the cancellation it is
+                // step error; report it as the cancellation it is — but
+                // flag the slot state as dirty (the error may equally be
+                // a real backend failure racing the cancel)
                 if req.cancel.is_cancelled() {
-                    return DecodeEnd::Cancelled(sess.finish());
+                    return DecodeEnd::CancelledDirty(sess.finish());
                 }
                 return DecodeEnd::Failed(e);
             }
@@ -779,16 +823,19 @@ fn worker_loop(
         let Some(sink) = reply else {
             // no waiter registered (should not happen) — just release the
             // scheduler's in-flight ledger entry
-            shared.q.lock().unwrap().sched.note_done(req.cost());
+            shared.q.lock().unwrap().sched.note_done(req.sched_cost());
             continue;
         };
         let wstats = &stats.workers[worker_id];
 
-        // interruptible slot checkout: a request that is cancelled or
-        // expires while waiting for a KV slot exits here without ever
-        // decoding (its seat frees instantly for the next request)
+        // interruptible affinity slot checkout (docs/ARCHITECTURE.md
+        // §12): the pool routes the request to the free slot sharing the
+        // longest resident prefix with its prompt; a request that is
+        // cancelled or expires while waiting for a KV slot exits here
+        // without ever decoding (its seat frees instantly for the next
+        // request)
         let t_wait = Instant::now();
-        let mut slot = None;
+        let mut got = None;
         let mut exit: Option<(FinishStatus, &'static str)> = None;
         loop {
             if req.cancel.is_cancelled() {
@@ -799,8 +846,8 @@ fn worker_loop(
                 exit = Some((FinishStatus::Expired, "deadline expired before decode"));
                 break;
             }
-            if let Some(s) = shared.pool.acquire_timeout(SLOT_POLL) {
-                slot = Some(s);
+            if let Some(sr) = shared.pool.acquire_for_timeout(&req.prompt, SLOT_POLL) {
+                got = Some(sr);
                 break;
             }
         }
@@ -809,13 +856,13 @@ fn worker_loop(
             .fetch_add(t_wait.elapsed().as_nanos() as u64, Ordering::Relaxed);
 
         if let Some((status, why)) = exit {
-            shared.q.lock().unwrap().sched.note_done(req.cost());
+            shared.q.lock().unwrap().sched.note_done(req.sched_cost());
             note_lifecycle(&stats, status);
             let now_ns = req.arrival.elapsed().as_nanos() as u64;
             sink.send_final(Response::terminal(req.id, status, now_ns, now_ns, why));
             continue;
         }
-        let mut slot = slot.expect("no exit implies a checked-out slot");
+        let (mut slot, reuse) = got.expect("no exit implies a checked-out slot");
 
         // queueing delay = arrival → decode start, *including* the slot
         // wait — under workers > slots contention that wait is real
@@ -824,9 +871,12 @@ fn worker_loop(
 
         let seed = req.scenario_seed();
         let draft_before = slot.draft.cost();
-        slot.draft.begin_request(seed, &req.category);
+        // reset-vs-retain (slots.rs): a miss (reuse 0) starts the slot's
+        // sequence state fresh; a hit retains the routed prefix — the
+        // session then resumes at min(draft, target) retained positions
+        let resident_draft = slot.draft.retain_prefix(seed, &req.category, reuse);
         let t_busy = Instant::now();
-        let end = match &shared.batcher {
+        let (end, target_cur) = match &shared.batcher {
             Some(handle) => {
                 // batched path (docs/ARCHITECTURE.md §4): target steps are
                 // submitted to the batcher keyed by this slot's id; the
@@ -840,7 +890,7 @@ fn worker_loop(
                     slot.target.rel_cost(),
                 )
                 .with_cancel(req.cancel.clone());
-                target.begin_request(seed, &req.category);
+                let resident = resident_draft.min(target.retain_prefix(seed, &req.category, reuse));
                 handle.note_decode_start();
                 let r = drive_session(
                     slot.draft.as_mut(),
@@ -850,13 +900,15 @@ fn worker_loop(
                     &req,
                     &sink,
                     &shared,
+                    resident,
                 );
                 handle.note_decode_end();
-                r
+                (r, target.cur())
             }
             None => {
-                slot.target.begin_request(seed, &req.category);
-                drive_session(
+                let resident =
+                    resident_draft.min(slot.target.retain_prefix(seed, &req.category, reuse));
+                let r = drive_session(
                     slot.draft.as_mut(),
                     slot.target.as_mut(),
                     &mut session,
@@ -864,7 +916,9 @@ fn worker_loop(
                     &req,
                     &sink,
                     &shared,
-                )
+                    resident,
+                );
+                (r, slot.target.cur())
             }
         };
         wstats
@@ -882,17 +936,32 @@ fn worker_loop(
             dc.rows.saturating_sub(draft_before.rows),
             dc.padded_rows.saturating_sub(draft_before.padded_rows),
         );
+        // record the slot's resident prefix for affinity routing
+        // (docs/ARCHITECTURE.md §12): the committed sequence truncated to
+        // the lower of the two cursors. A failed (or error-cancelled)
+        // decode leaves the resident state untrusted, so the record is
+        // cleared and the next tenant starts fresh. With the cache off
+        // nothing records — release would drop it anyway.
+        if shared.pool.prefix_cache_enabled() {
+            let watermark = slot.draft.cur().min(target_cur);
+            match &end {
+                DecodeEnd::Failed(_) | DecodeEnd::CancelledDirty(_) => slot.clear_prefix(),
+                DecodeEnd::Complete(r) | DecodeEnd::Cancelled(r) | DecodeEnd::Expired(r) => {
+                    slot.record_prefix(&r.tokens, watermark);
+                }
+            }
+        }
         shared.pool.release(slot);
         wstats.requests.fetch_add(1, Ordering::Relaxed);
         // release this request from the scheduler's in-flight ledger so
         // the queue-wait estimate stays honest (scheduler.rs)
-        shared.q.lock().unwrap().sched.note_done(req.cost());
+        shared.q.lock().unwrap().sched.note_done(req.sched_cost());
 
         let resp = match end {
             DecodeEnd::Complete(result) => {
                 finish_response(&shared, &req, result, FinishStatus::Done, None, queue_ns)
             }
-            DecodeEnd::Cancelled(result) => {
+            DecodeEnd::Cancelled(result) | DecodeEnd::CancelledDirty(result) => {
                 note_lifecycle(&stats, FinishStatus::Cancelled);
                 finish_response(
                     &shared,

@@ -10,21 +10,62 @@
 //! lets the worker count exceed the slot count without panicking — extra
 //! workers simply queue at the checkout.
 //!
+//! **Prefix-reuse routing (docs/ARCHITECTURE.md §12).** Checkout is no
+//! longer an anonymous pop: each slot carries *resident-prefix metadata*
+//! (the token ids its KV covers below the cursor watermark, recorded by
+//! the engine at release via [`Slot::record_prefix`]), and a
+//! [`PrefixIndex`] over the free slots lives beside the free list. The
+//! affinity checkout ([`SlotPool::try_acquire_for`],
+//! [`SlotPool::acquire_for_timeout`]) routes a request to the free slot
+//! sharing the longest token-id prefix with its prompt and reports how
+//! many positions the caller may retain; reuse is capped at
+//! `prompt_len − 1` so the last prompt token is always re-fed (every
+//! decode round needs its signal row). The reset-vs-retain contract:
+//!
+//!   * **miss** (`reuse == 0`) — the caller must start the slot's
+//!     sequence state fresh (`LanguageModel::retain_prefix` with
+//!     `keep = 0`, which is a full reset). The pool discards the slot's
+//!     stale recorded prefix, counting an eviction.
+//!   * **hit** (`reuse > 0`) — the caller may roll both cursors back to
+//!     `reuse` and prefill only the suffix; the pool guarantees the
+//!     slot's recorded prefix matches the prompt token-for-token over
+//!     those positions, and the recorded prefix never exceeds the
+//!     cursor watermark the engine measured at release.
+//!
+//! Reuse is therefore deliberate, never accidental: a slot checked out
+//! without an index match always resets, and a cache hit is an explicit
+//! `(slot, reuse)` the engine threads through `retain_prefix` /
+//! `SpecSession::resume`. With the cache disabled the pool behaves
+//! exactly like the anonymous pool (every checkout reports `reuse 0`,
+//! nothing is recorded).
+//!
 //! The continuous engine (docs/ARCHITECTURE.md §11) is the pool's sole
 //! consumer in `Continuous` mode: the step loop admits with the
-//! non-blocking `try_acquire` (a free slot it observes cannot be taken
-//! by anyone else) and releases at retire, so slot occupancy equals its
-//! in-flight session count by construction. The slot's resident models
-//! idle there — batched drafting/verification own the per-sequence
-//! state, keyed by the slot `id` — but the `id` and the `served`
-//! counter still anchor sequence identity and reuse accounting.
+//! non-blocking affinity checkout (a free slot it observes cannot be
+//! taken by anyone else) and releases at retire, so slot occupancy equals
+//! its in-flight session count by construction. The slot's resident
+//! models idle there — batched drafting/verification own the
+//! per-sequence state, keyed by the slot `id` — but the `id`, the
+//! recorded prefix, and the `served` counter still anchor sequence
+//! identity and reuse accounting.
 
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::models::sim::Scenario;
 use crate::models::{LanguageModel, ModelAssets, PjrtModel, SimModel};
+
+use super::cache::PrefixIndex;
+use super::metrics::CacheStats;
+
+/// Smallest prefix match that counts as a cache hit. Every encoded
+/// prompt starts with BOS, so any two prompts trivially share one
+/// leading token; treating that as a hit would make *every* checkout
+/// "reuse" a slot (never resetting, never evicting) while saving a
+/// single prefill row. Matches shorter than this are misses.
+pub const MIN_REUSE: usize = 2;
 
 /// One checked-out sequence state: a draft+target model pair whose KV
 /// survives across requests. In the batched engine the slot `id` doubles
@@ -39,25 +80,95 @@ pub struct Slot {
     pub target: Box<dyn LanguageModel>,
     /// requests served by this slot (reuse diagnostics)
     pub served: u64,
+    /// token ids resident in this slot's sequence state below the cursor
+    /// watermark (`prefix.len()` *is* the watermark — the engine records
+    /// the tokens truncated to `min(draft cursor, target cursor)` at
+    /// release, docs/ARCHITECTURE.md §12)
+    prefix: Vec<u32>,
 }
 
-/// The shared checkout pool of KV slots (blocking condvar checkout).
+impl Slot {
+    /// The resident token prefix recorded at the last release (empty for
+    /// a fresh or reset slot).
+    pub fn resident_prefix(&self) -> &[u32] {
+        &self.prefix
+    }
+
+    /// Record this slot's resident sequence state for prefix-reuse
+    /// routing: `tokens` is the committed sequence the slot's models just
+    /// decoded, `watermark` the lowest of their cursor positions (KV at
+    /// positions `< watermark` is resident and was computed from exactly
+    /// these token ids). Call before [`SlotPool::release`]; the pool
+    /// indexes whatever is recorded here.
+    pub fn record_prefix(&mut self, tokens: &[u32], watermark: usize) {
+        self.prefix.clear();
+        self.prefix.extend_from_slice(&tokens[..watermark.min(tokens.len())]);
+    }
+
+    /// Forget the recorded prefix (a failed decode leaves the resident
+    /// state untrusted — the next tenant must start fresh).
+    pub fn clear_prefix(&mut self) {
+        self.prefix.clear();
+    }
+}
+
+struct PoolInner {
+    free: Vec<Slot>,
+    index: PrefixIndex,
+}
+
+/// The shared checkout pool of KV slots (blocking condvar checkout), with
+/// optional prefix-reuse affinity routing over the free slots.
 pub struct SlotPool {
-    free: Mutex<Vec<Slot>>,
+    inner: Mutex<PoolInner>,
     freed: Condvar,
     total: usize,
+    cache_on: bool,
+    cache: CacheStats,
 }
 
 impl SlotPool {
-    /// Pool over explicit (draft, target) model pairs.
+    /// Pool over explicit (draft, target) model pairs (prefix cache off;
+    /// see [`SlotPool::with_prefix_cache`]).
     pub fn from_pairs(pairs: Vec<(Box<dyn LanguageModel>, Box<dyn LanguageModel>)>) -> SlotPool {
         let total = pairs.len();
         let free = pairs
             .into_iter()
             .enumerate()
-            .map(|(id, (draft, target))| Slot { id, draft, target, served: 0 })
+            .map(|(id, (draft, target))| Slot {
+                id,
+                draft,
+                target,
+                served: 0,
+                prefix: Vec::new(),
+            })
             .collect();
-        SlotPool { free: Mutex::new(free), freed: Condvar::new(), total }
+        SlotPool {
+            inner: Mutex::new(PoolInner { free, index: PrefixIndex::new() }),
+            freed: Condvar::new(),
+            total,
+            cache_on: false,
+            cache: CacheStats::new(total, false),
+        }
+    }
+
+    /// Enable (or explicitly disable) cross-request prefix reuse. With
+    /// the cache off every checkout reports `reuse 0` and nothing is
+    /// indexed — byte-identical to the anonymous pool.
+    pub fn with_prefix_cache(mut self, enabled: bool) -> SlotPool {
+        self.cache_on = enabled;
+        self.cache = CacheStats::new(self.total, enabled);
+        self
+    }
+
+    /// Is prefix-reuse routing enabled?
+    pub fn prefix_cache_enabled(&self) -> bool {
+        self.cache_on
+    }
+
+    /// The pool's cache gauges (the `/metrics` `engine.cache` source).
+    pub fn cache_stats(&self) -> &CacheStats {
+        &self.cache
     }
 
     /// `n` PJRT slots sharing one set of weights/executables.
@@ -78,7 +189,7 @@ impl SlotPool {
     }
 
     /// `n` simulator slots; each request reseats the scenario via
-    /// `LanguageModel::begin_request`.
+    /// `LanguageModel::retain_prefix` / `LanguageModel::begin_request`.
     pub fn sim(quality: f32, rel_cost: f64, n: usize) -> SlotPool {
         let placeholder = Scenario::new(0, "qa");
         let pairs = (0..n)
@@ -93,53 +204,156 @@ impl SlotPool {
         SlotPool::from_pairs(pairs)
     }
 
-    /// Non-blocking checkout.
-    pub fn try_acquire(&self) -> Option<Slot> {
-        self.free.lock().unwrap().pop()
-    }
-
-    /// Blocking checkout: waits until another worker releases a slot.
-    pub fn acquire(&self) -> Slot {
-        let mut free = self.free.lock().unwrap();
-        loop {
-            if let Some(slot) = free.pop() {
-                return slot;
-            }
-            free = self.freed.wait(free).unwrap();
+    /// The checkout core, under the pool mutex: affinity-match `prompt`
+    /// against the free slots' recorded prefixes, fall back to the
+    /// least-recently released un-prefixed slot (preserving other slots'
+    /// cached prefixes) on a miss. Returns `(slot, reuse)`.
+    fn checkout_locked(&self, inner: &mut PoolInner, prompt: &[u32]) -> Option<(Slot, usize)> {
+        if inner.free.is_empty() {
+            return None;
         }
+        if !self.cache_on {
+            return inner.free.pop().map(|s| (s, 0));
+        }
+        if let Some((sid, lcp)) = inner.index.best_match(prompt) {
+            // always re-feed the last prompt token: its signal row seeds
+            // the first draft proposal and the first verification block
+            let reuse = lcp.min(prompt.len().saturating_sub(1));
+            if reuse >= MIN_REUSE {
+                let pos = inner
+                    .free
+                    .iter()
+                    .position(|s| s.id == sid)
+                    .expect("indexed slot is on the free list");
+                let slot = inner.free.remove(pos);
+                inner.index.remove(slot.id, &slot.prefix);
+                self.cache.note_lookup(prompt.len(), reuse);
+                return Some((slot, reuse));
+            }
+        }
+        // miss: prefer a slot with no cached prefix; otherwise evict the
+        // least-recently released one (front of the free list)
+        let pick = inner.free.iter().position(|s| s.prefix.is_empty()).unwrap_or(0);
+        let mut slot = inner.free.remove(pick);
+        if !slot.prefix.is_empty() {
+            inner.index.remove(slot.id, &slot.prefix);
+            slot.prefix.clear();
+            self.cache.note_eviction();
+        }
+        self.cache.note_lookup(prompt.len(), 0);
+        Some((slot, 0))
     }
 
-    /// Bounded blocking checkout: like [`SlotPool::acquire`], but gives
-    /// up after `timeout`. Decode workers poll this in a loop so a
-    /// request that is cancelled or expires *while waiting for a slot*
-    /// exits the lifecycle promptly instead of blocking until a slot
-    /// frees (server.rs).
-    pub fn acquire_timeout(&self, timeout: std::time::Duration) -> Option<Slot> {
-        let deadline = std::time::Instant::now() + timeout;
-        let mut free = self.free.lock().unwrap();
+    /// Non-blocking affinity checkout: the free slot with the longest
+    /// resident prefix matching `prompt`, plus how many positions the
+    /// caller may retain (0 = start fresh). See the module docs for the
+    /// reset-vs-retain contract.
+    pub fn try_acquire_for(&self, prompt: &[u32]) -> Option<(Slot, usize)> {
+        let mut inner = self.inner.lock().unwrap();
+        self.checkout_locked(&mut inner, prompt)
+    }
+
+    /// Bounded blocking affinity checkout: like
+    /// [`SlotPool::try_acquire_for`], but waits up to `timeout` for a
+    /// slot to free. Decode workers poll this in a loop so a request that
+    /// is cancelled or expires *while waiting for a slot* exits the
+    /// lifecycle promptly instead of blocking until a slot frees
+    /// (server.rs).
+    ///
+    /// Deadline edge: the free list is always re-checked *after* the
+    /// final `wait_timeout` returns — a slot released exactly at the
+    /// deadline instant is returned, not dropped for `None` (pinned by
+    /// `release_at_deadline_instant_is_still_returned`).
+    pub fn acquire_for_timeout(
+        &self,
+        prompt: &[u32],
+        timeout: Duration,
+    ) -> Option<(Slot, usize)> {
+        let deadline = Instant::now() + timeout;
+        let mut inner = self.inner.lock().unwrap();
         loop {
-            if let Some(slot) = free.pop() {
-                return Some(slot);
+            // checkout before the deadline test: after the last wake (or
+            // with the deadline already past at entry) a freed slot must
+            // still win over the timeout
+            if let Some(got) = self.checkout_locked(&mut inner, prompt) {
+                return Some(got);
             }
-            let now = std::time::Instant::now();
+            let now = Instant::now();
             if now >= deadline {
                 return None;
             }
-            let (g, _res) = self.freed.wait_timeout(free, deadline - now).unwrap();
-            free = g;
+            let (g, _res) = self.freed.wait_timeout(inner, deadline - now).unwrap();
+            inner = g;
         }
     }
 
-    /// Return a checked-out slot and wake one blocked `acquire`.
+    /// Non-blocking anonymous checkout (no affinity; the slot still
+    /// resets per the miss contract when the cache is on).
+    pub fn try_acquire(&self) -> Option<Slot> {
+        self.try_acquire_for(&[]).map(|(s, _)| s)
+    }
+
+    /// Blocking anonymous checkout: waits until another worker releases
+    /// a slot.
+    pub fn acquire(&self) -> Slot {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some((slot, _)) = self.checkout_locked(&mut inner, &[]) {
+                return slot;
+            }
+            inner = self.freed.wait(inner).unwrap();
+        }
+    }
+
+    /// Bounded blocking anonymous checkout ([`SlotPool::acquire`] with a
+    /// timeout; same deadline-edge contract as
+    /// [`SlotPool::acquire_for_timeout`]).
+    pub fn acquire_timeout(&self, timeout: Duration) -> Option<Slot> {
+        self.acquire_for_timeout(&[], timeout).map(|(s, _)| s)
+    }
+
+    /// Expected reuse (in prompt tokens) if a request with this prompt
+    /// checked out right now — the scheduler's affinity placement hint
+    /// (scheduler.rs subtracts it from the SJF service-cost estimate).
+    /// Advisory only: the free set can change before the real checkout.
+    pub fn peek_reuse(&self, prompt: &[u32]) -> usize {
+        if !self.cache_on {
+            return 0;
+        }
+        let inner = self.inner.lock().unwrap();
+        inner
+            .index
+            .best_match(prompt)
+            .map(|(_, lcp)| lcp.min(prompt.len().saturating_sub(1)))
+            .filter(|&r| r >= MIN_REUSE)
+            .unwrap_or(0)
+    }
+
+    /// Return a checked-out slot and wake one blocked `acquire`. With the
+    /// prefix cache on, whatever [`Slot::record_prefix`] recorded is
+    /// indexed for affinity routing; with it off the recorded prefix is
+    /// dropped so reuse can never happen accidentally.
     pub fn release(&self, mut slot: Slot) {
         slot.served += 1;
-        self.free.lock().unwrap().push(slot);
+        if self.cache_on {
+            // mirror per-slot served into the cache gauges (the
+            // `engine.cache` contract keeps every counter zero while
+            // the cache is disabled; `Slot::served` stays authoritative)
+            self.cache.note_served(slot.id);
+        } else {
+            slot.prefix.clear();
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if self.cache_on && !slot.prefix.is_empty() {
+            inner.index.insert(slot.id, &slot.prefix);
+        }
+        inner.free.push(slot);
         self.freed.notify_one();
     }
 
     /// Slots currently free.
     pub fn available(&self) -> usize {
-        self.free.lock().unwrap().len()
+        self.inner.lock().unwrap().free.len()
     }
 
     /// Total slots the pool was built with.
@@ -151,7 +365,7 @@ impl SlotPool {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::time::Duration;
+    use std::sync::atomic::Ordering;
 
     #[test]
     fn checkout_and_release_cycle() {
@@ -196,6 +410,20 @@ mod tests {
     }
 
     #[test]
+    fn release_at_deadline_instant_is_still_returned() {
+        // the deadline-edge contract: even with the deadline already in
+        // the past, a slot on the free list wins over the timeout — the
+        // free list is checked after the final wait, not before it
+        let pool = SlotPool::sim(0.9, 0.05, 1);
+        assert!(
+            pool.acquire_timeout(Duration::ZERO).is_some(),
+            "a free slot at the deadline instant must be returned"
+        );
+        // and with the slot held, the zero timeout gives up cleanly
+        assert!(pool.acquire_timeout(Duration::ZERO).is_none());
+    }
+
+    #[test]
     fn more_workers_than_slots_all_make_progress() {
         let pool = Arc::new(SlotPool::sim(0.9, 0.05, 2));
         let mut handles = Vec::new();
@@ -212,5 +440,88 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(pool.available(), 2);
+    }
+
+    #[test]
+    fn affinity_checkout_routes_to_longest_matching_prefix() {
+        let pool = SlotPool::sim(0.9, 0.05, 3).with_prefix_cache(true);
+        let mut a = pool.try_acquire().unwrap();
+        let mut b = pool.try_acquire().unwrap();
+        let c = pool.try_acquire().unwrap();
+        a.record_prefix(&[1, 5, 6, 7, 8], 5);
+        b.record_prefix(&[1, 5, 6, 9], 4);
+        let (a_id, b_id) = (a.id, b.id);
+        pool.release(a);
+        pool.release(b);
+        pool.release(c); // no prefix recorded
+
+        // prompt matching slot a's prefix for 4 tokens, slot b's for 3
+        let (slot, reuse) = pool.try_acquire_for(&[1, 5, 6, 7, 2, 2]).unwrap();
+        assert_eq!(slot.id, a_id, "longest match wins");
+        assert_eq!(reuse, 4);
+        pool.release(slot);
+
+        // full-prefix match is capped at prompt_len − 1 (the last prompt
+        // token is always re-fed)
+        let (slot, reuse) = pool.try_acquire_for(&[1, 5, 6, 9]).unwrap();
+        assert_eq!(slot.id, b_id);
+        assert_eq!(reuse, 3);
+        pool.release(slot);
+
+        let stats = pool.cache_stats();
+        assert_eq!(stats.lookups.load(Ordering::Relaxed), 5, "3 anonymous + 2 affinity");
+        assert_eq!(stats.hits.load(Ordering::Relaxed), 2);
+        assert_eq!(stats.cached_tokens.load(Ordering::Relaxed), 7);
+    }
+
+    #[test]
+    fn miss_prefers_unprefixed_slot_and_counts_evictions() {
+        let pool = SlotPool::sim(0.9, 0.05, 2).with_prefix_cache(true);
+        let mut a = pool.try_acquire().unwrap();
+        let b = pool.try_acquire().unwrap();
+        a.record_prefix(&[9, 9, 9], 3);
+        let (a_id, b_id) = (a.id, b.id);
+        pool.release(a);
+        pool.release(b);
+
+        // a miss takes the un-prefixed slot, preserving a's cached prefix
+        let (slot, reuse) = pool.try_acquire_for(&[4, 4]).unwrap();
+        assert_eq!((slot.id, reuse), (b_id, 0));
+        assert_eq!(pool.cache_stats().evictions.load(Ordering::Relaxed), 0);
+        // a second concurrent miss must now evict a's prefix
+        let (slot2, reuse2) = pool.try_acquire_for(&[4, 4]).unwrap();
+        assert_eq!((slot2.id, reuse2), (a_id, 0));
+        assert!(slot2.resident_prefix().is_empty(), "miss checkout resets the record");
+        assert_eq!(pool.cache_stats().evictions.load(Ordering::Relaxed), 1);
+        // and the evicted prefix no longer matches anything
+        pool.release(slot);
+        pool.release(slot2);
+        let (_, reuse3) = pool.try_acquire_for(&[9, 9, 9, 9]).unwrap();
+        assert_eq!(reuse3, 0);
+    }
+
+    #[test]
+    fn cache_off_never_reuses_or_records() {
+        let pool = SlotPool::sim(0.9, 0.05, 1);
+        let mut a = pool.try_acquire().unwrap();
+        a.record_prefix(&[1, 2, 3], 3);
+        pool.release(a);
+        assert_eq!(pool.peek_reuse(&[1, 2, 3, 4]), 0);
+        let (slot, reuse) = pool.try_acquire_for(&[1, 2, 3, 4]).unwrap();
+        assert_eq!(reuse, 0, "disabled cache must never report reuse");
+        assert!(slot.resident_prefix().is_empty(), "release dropped the record");
+        assert_eq!(pool.cache_stats().lookups.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn peek_reuse_matches_subsequent_checkout() {
+        let pool = SlotPool::sim(0.9, 0.05, 1).with_prefix_cache(true);
+        let mut a = pool.try_acquire().unwrap();
+        a.record_prefix(&[3, 4, 5, 6], 4);
+        pool.release(a);
+        let prompt = [3u32, 4, 5, 8, 8];
+        assert_eq!(pool.peek_reuse(&prompt), 3);
+        let (_, reuse) = pool.try_acquire_for(&prompt).unwrap();
+        assert_eq!(reuse, 3);
     }
 }

@@ -82,10 +82,14 @@ struct ActiveSession {
     rounds: Vec<RoundStat>,
     /// mirrored draft-model cursor (the contiguous-cursor protocol,
     /// docs/ARCHITECTURE.md §6, tracked engine-side exactly like
-    /// `BatchedTarget` does for the verify side)
+    /// `BatchedTarget` does for the verify side). Starts at the
+    /// cache-hit reuse length (docs/ARCHITECTURE.md §12), so the first
+    /// catch-up block prefills only the prompt suffix.
     draft_cur: usize,
-    /// mirrored target/verifier cursor
+    /// mirrored target/verifier cursor (same cache-hit starting point)
     target_cur: usize,
+    /// prompt positions skipped via prefix reuse (reply accounting)
+    cached: usize,
     max_seq: usize,
     /// reply fully determined (natural finish or clip window closed)
     done: bool,
@@ -219,12 +223,15 @@ fn finalize(
     let ActiveSession {
         req,
         sink,
-        slot,
+        mut slot,
         committed,
         prompt_len,
         rounds,
         t_decode,
         queue_ns,
+        draft_cur,
+        target_cur,
+        cached,
         ..
     } = s;
     let result = GenResult {
@@ -232,8 +239,21 @@ fn finalize(
         prompt_len,
         rounds,
         wall_ns: t_decode.elapsed().as_nanos() as u64,
+        cached_prefix: cached,
     };
-    shared.q.lock().unwrap().sched.note_done(req.cost());
+    // record the slot's resident prefix for affinity routing
+    // (docs/ARCHITECTURE.md §12): the committed sequence truncated to the
+    // lower mirrored cursor — exactly what the shared executors' resident
+    // worlds for this slot id cover. A failed session leaves that state
+    // untrusted, so the record is cleared and the next tenant resets.
+    // With the cache off nothing records — release would drop it anyway.
+    if shared.pool.prefix_cache_enabled() {
+        match &exit {
+            SessionExit::Failed(_) => slot.clear_prefix(),
+            _ => slot.record_prefix(&result.tokens, draft_cur.min(target_cur)),
+        }
+    }
+    shared.q.lock().unwrap().sched.note_done(req.sched_cost());
     stats.step.retired.fetch_add(1, Ordering::Relaxed);
     stats.workers[0].requests.fetch_add(1, Ordering::Relaxed);
     let resp = match exit {
@@ -307,14 +327,14 @@ fn admit(
         let Some(sink) = sink else {
             // no waiter registered (should not happen) — release the
             // scheduler's in-flight ledger entry
-            shared.q.lock().unwrap().sched.note_done(req.cost());
+            shared.q.lock().unwrap().sched.note_done(req.sched_cost());
             continue;
         };
         // lifecycle checks before occupying a slot (same exits as the
         // worker pool's slot-wait loop)
         let now_ns = req.arrival.elapsed().as_nanos() as u64;
         if req.cancel.is_cancelled() {
-            shared.q.lock().unwrap().sched.note_done(req.cost());
+            shared.q.lock().unwrap().sched.note_done(req.sched_cost());
             note_lifecycle(stats, FinishStatus::Cancelled);
             sink.send_final(Response::terminal(
                 req.id,
@@ -326,7 +346,7 @@ fn admit(
             continue;
         }
         if req.deadline_expired() {
-            shared.q.lock().unwrap().sched.note_done(req.cost());
+            shared.q.lock().unwrap().sched.note_done(req.sched_cost());
             note_lifecycle(stats, FinishStatus::Expired);
             sink.send_final(Response::terminal(
                 req.id,
@@ -342,7 +362,7 @@ fn admit(
         // with the identical message in both execution modes
         if let Err(e) = validate_prompt(&req.prompt, max_seq) {
             let msg = format!("{e:#}");
-            shared.q.lock().unwrap().sched.note_done(req.cost());
+            shared.q.lock().unwrap().sched.note_done(req.sched_cost());
             stats.workers[0].errors.fetch_add(1, Ordering::Relaxed);
             let resp = Response::failure(req.id, now_ns, now_ns, msg);
             {
@@ -352,7 +372,15 @@ fn admit(
             sink.send_final(resp);
             continue;
         }
-        let slot = shared.pool.try_acquire().expect("available slot observed above");
+        // affinity checkout (docs/ARCHITECTURE.md §12): route to the free
+        // slot sharing the longest resident prefix with this prompt. In
+        // continuous mode the resident per-sequence state lives with the
+        // shared batched drafter/verifier keyed by the slot id, so the
+        // reuse length simply seeds both mirrored cursors — the first
+        // catch-up / verification blocks then start at the divergence
+        // point and the executors align their resident worlds to it.
+        let (slot, reuse) =
+            shared.pool.try_acquire_for(&req.prompt).expect("available slot observed above");
         let queue_ns = req.arrival.elapsed().as_nanos() as u64;
         let cfg = GenConfig {
             max_new: req.max_new,
@@ -376,8 +404,9 @@ fn admit(
             committed,
             prompt_len,
             rounds: Vec::new(),
-            draft_cur: 0,
-            target_cur: 0,
+            draft_cur: reuse,
+            target_cur: reuse,
+            cached: reuse,
             max_seq,
             done: false,
             failed: None,

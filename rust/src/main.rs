@@ -5,7 +5,7 @@
 //!             [--stream]  (print tokens as each round commits)
 //!   serve     --port 8077 --pair pair-a --method seq-ucb1 [--sched fcfs|sjf]
 //!             [--workers N] [--slots N] [--backend pjrt|sim] [--continuous]
-//!             [--max-queue N] [--deadline-ms MS]
+//!             [--max-queue N] [--deadline-ms MS] [--prefix-cache]
 //!   exp       --id <table2|table3|table4|table5|fig2|fig3|fig4|fig5|fig6|abl-arms|tune|all>
 //!             [--backend pjrt|sim] [--scale F] [--gamma N]
 //!   selftest  verify the rust engine replays the python golden traces
@@ -137,13 +137,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // --continuous swaps the worker pool for the continuous-batching
         // step loop (docs/ARCHITECTURE.md §11)
         mode: if args.bool("continuous") { EngineMode::Continuous } else { EngineMode::Workers },
+        // --prefix-cache enables cross-request prefix reuse with
+        // slot-affinity routing (docs/ARCHITECTURE.md §12); lossless
+        prefix_cache: args.bool("prefix-cache"),
     };
     let port = args.usize("port", 8077) as u16;
     let engine = Arc::new(Engine::start(cfg).context("starting engine")?);
     let http = HttpServer::start(engine.clone(), port)?;
     println!(
         "tapout serving on http://{}  (POST /generate [stream:true for SSE], GET /health, \
-         GET /metrics)  backend={} mode={} workers={} slots={} max_queue={} deadline_ms={}",
+         GET /metrics)  backend={} mode={} workers={} slots={} max_queue={} deadline_ms={} \
+         prefix_cache={}",
         http.addr,
         engine.config.backend.label(),
         engine.config.mode.label(),
@@ -151,6 +155,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         engine.config.slots,
         engine.config.max_queue,
         engine.config.default_deadline_ms,
+        engine.config.prefix_cache,
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

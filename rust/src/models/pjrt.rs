@@ -189,6 +189,21 @@ impl LanguageModel for PjrtModel {
         self.cur = 0;
     }
 
+    /// Prefix reuse on PJRT (docs/ARCHITECTURE.md §12) — the
+    /// resident-world cursor contract: the device world buffer holds KV
+    /// for every position `< cur`, computed from exactly the token ids
+    /// this instance was fed, and positions `≥ cur` are dead (rewritten
+    /// on the next feed). Retaining is therefore a pure cursor move:
+    /// roll back to `min(cur, keep)` and the world's live region *is*
+    /// the new request's prompt-prefix KV — provided the caller's `keep`
+    /// covers only token-matched positions, which the engine's
+    /// `PrefixIndex` routing guarantees. A never-run instance (no world
+    /// allocated) has `cur == 0` and correctly retains nothing.
+    fn retain_prefix(&mut self, _seed: u64, _category: &str, keep: usize) -> usize {
+        self.cur = self.cur.min(keep);
+        self.cur
+    }
+
     fn block(&mut self, tokens: &[u32], start: usize) -> Result<Vec<TokenSignals>> {
         anyhow::ensure!(start == self.cur, "non-contiguous block: start {start} cur {}", self.cur);
         anyhow::ensure!(!tokens.is_empty(), "empty block");
@@ -285,7 +300,13 @@ impl PjrtBatchVerifier {
     }
 
     /// Roll every item's resident world to its start and check the
-    /// per-sequence contiguity invariant.
+    /// per-sequence contiguity invariant. This `ensure` is also the
+    /// prefix-reuse guard (docs/ARCHITECTURE.md §12): a cache-hit
+    /// session's first block arrives with `start = reuse > 0`, which is
+    /// only reachable if this slot's resident world already covers
+    /// `reuse` positions — a slot whose resident state was lost (fresh
+    /// verifier, cleared seq) fails loudly here instead of silently
+    /// recomputing against garbage KV.
     fn align(&mut self, items: &[BatchItem]) -> Result<()> {
         for it in items {
             self.ensure_seq(it.seq)?;

@@ -254,6 +254,20 @@ impl LanguageModel for SimModel {
         self.set_scenario(Scenario::new(seed, category));
     }
 
+    /// Prefix reuse on the simulator (docs/ARCHITECTURE.md §12): reseat
+    /// the scenario but keep the cursor at `min(cur, keep)` instead of 0.
+    /// Valid because signal rows are a pure function of (scenario,
+    /// position): the skipped positions' rows under the *new* scenario
+    /// are never read by anyone (the engine re-feeds the last prompt
+    /// token, so every row a decode consumes is computed fresh), which is
+    /// exactly the guarantee a real KV cache gives for a matching token
+    /// prefix.
+    fn retain_prefix(&mut self, seed: u64, category: &str, keep: usize) -> usize {
+        self.scenario = Scenario::new(seed, category);
+        self.cur = self.cur.min(keep);
+        self.cur
+    }
+
     fn block(&mut self, tokens: &[u32], start: usize) -> anyhow::Result<Vec<TokenSignals>> {
         anyhow::ensure!(start == self.cur, "non-contiguous block: start {start} cur {}", self.cur);
         anyhow::ensure!(!tokens.is_empty(), "empty block");

@@ -74,6 +74,29 @@ pub trait LanguageModel: Send {
     /// nothing — `generate()` resets the cursor itself.
     fn begin_request(&mut self, _seed: u64, _category: &str) {}
 
+    /// Rebind per-request context while *retaining* the first `keep`
+    /// positions of resident sequence state — the cross-request
+    /// prefix-reuse entry point (docs/ARCHITECTURE.md §12). Returns how
+    /// many positions are actually retained; the cursor ends there, so a
+    /// following [`block`](LanguageModel::block) at that offset prefills
+    /// only the suffix.
+    ///
+    /// **Contract.** The caller guarantees the new request's prompt
+    /// matches the resident sequence token-for-token over the first
+    /// `keep` positions (the engine's `PrefixIndex` routing enforces
+    /// this; reuse is deliberate, never accidental). Backends without
+    /// retainable per-sequence state use this default — a full reset plus
+    /// request rebind, returning 0 — so reuse silently degrades to a
+    /// fresh prefill rather than corrupting outputs. `keep = 0` is
+    /// exactly the reset-on-checkout default every slot checkout applies
+    /// on a cache miss.
+    fn retain_prefix(&mut self, seed: u64, category: &str, keep: usize) -> usize {
+        let _ = keep;
+        self.reset();
+        self.begin_request(seed, category);
+        0
+    }
+
     /// Feed `tokens` at absolute position `start`, which must equal
     /// `cur()` (contiguity invariant). Returns one signal row per token:
     /// row i describes the model's next-token distribution after input

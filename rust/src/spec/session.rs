@@ -75,6 +75,13 @@ pub struct GenResult {
     pub rounds: Vec<RoundStat>,
     /// decode wall time
     pub wall_ns: u64,
+    /// prompt positions whose prefill was skipped via cross-request
+    /// prefix reuse (docs/ARCHITECTURE.md §12); 0 for a fresh decode.
+    /// Purely an accounting field: cached prefill never enters round
+    /// stats, acceptance rates, or bandit rewards — those only ever
+    /// describe drafted/verified positions, which a cache hit leaves
+    /// untouched.
+    pub cached_prefix: usize,
 }
 
 impl GenResult {
@@ -228,6 +235,8 @@ pub struct SpecSession<'a> {
     rounds: Vec<RoundStat>,
     t_start: Instant,
     finished: Option<FinishReason>,
+    /// prompt positions covered by retained (cache-hit) sequence state
+    cached_prefix: usize,
 }
 
 impl<'a> SpecSession<'a> {
@@ -248,11 +257,57 @@ impl<'a> SpecSession<'a> {
         prompt: &[u32],
         cfg: &GenConfig,
     ) -> anyhow::Result<SpecSession<'a>> {
+        draft.reset();
+        target.reset();
+        SpecSession::resume(draft, target, ctrl, rng, prompt, cfg, 0)
+    }
+
+    /// Like [`SpecSession::new`], but *resume* over models whose first
+    /// `resident` positions of sequence state are already valid for this
+    /// prompt — the cross-request prefix-reuse entry point
+    /// (docs/ARCHITECTURE.md §12). The models are **not** reset: both
+    /// cursors are rolled back to `resident` and the first round's
+    /// catch-up blocks prefill only `prompt[resident..]`.
+    ///
+    /// Guards (reuse is deliberate, never accidental):
+    ///   * `resident < prompt.len()` — the last prompt token is always
+    ///     re-fed, because its signal row seeds the first proposal and
+    ///     the first verification block;
+    ///   * after rollback, both cursors must sit exactly at `resident` —
+    ///     a model that cannot cover the claimed prefix (e.g. a fresh
+    ///     instance handed a stale reuse length) is an error here, not a
+    ///     silently wrong decode.
+    ///
+    /// Round structure, acceptance stats, and bandit accounting are
+    /// byte-identical to a fresh session: a cache hit only removes
+    /// redundant prefill rows, which no consumer reads. `resident == 0`
+    /// (with cursors at 0) is exactly a fresh session.
+    pub fn resume(
+        draft: &'a mut dyn LanguageModel,
+        target: &'a mut dyn LanguageModel,
+        ctrl: &'a mut dyn DecodeControl,
+        rng: &'a mut Rng,
+        prompt: &[u32],
+        cfg: &GenConfig,
+        resident: usize,
+    ) -> anyhow::Result<SpecSession<'a>> {
         let t_start = Instant::now();
         let max_seq = draft.max_seq().min(target.max_seq());
         validate_prompt(prompt, max_seq)?;
-        draft.reset();
-        target.reset();
+        anyhow::ensure!(
+            resident < prompt.len(),
+            "resident prefix {resident} must leave ≥1 prompt token to feed ({})",
+            prompt.len()
+        );
+        draft.rollback(resident);
+        target.rollback(resident);
+        anyhow::ensure!(
+            draft.cur() == resident && target.cur() == resident,
+            "resident-prefix contract violated: draft cursor {} / target cursor {} \
+             cannot cover the claimed {resident} cached positions",
+            draft.cur(),
+            target.cur()
+        );
         ctrl.reset_request();
         Ok(SpecSession {
             draft,
@@ -266,6 +321,7 @@ impl<'a> SpecSession<'a> {
             rounds: Vec::new(),
             t_start,
             finished: None,
+            cached_prefix: resident,
         })
     }
 
@@ -387,6 +443,7 @@ impl<'a> SpecSession<'a> {
             prompt_len: self.prompt_len,
             rounds: self.rounds,
             wall_ns: self.t_start.elapsed().as_nanos() as u64,
+            cached_prefix: self.cached_prefix,
         }
     }
 }
@@ -431,5 +488,6 @@ pub fn greedy(
         prompt_len: n0,
         rounds: vec![],
         wall_ns: t_start.elapsed().as_nanos() as u64,
+        cached_prefix: 0,
     })
 }

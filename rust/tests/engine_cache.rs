@@ -1,0 +1,353 @@
+//! Prefix-reuse KV cache integration tests on the simulator backend
+//! (docs/ARCHITECTURE.md §12) — these run everywhere and pin the cache's
+//! contract:
+//!
+//!   * a shared-system-prompt burst is **byte-identical** with the cache
+//!     on, off, and against the target-only greedy oracle, across both
+//!     execution modes (Workers at workers {1, 4}, Continuous at slots
+//!     {1, 4, 8}) and both verification paths (batched + direct) — the
+//!     cache only removes redundant prefill forwards;
+//!   * a request whose prompt diverges mid-prefix rolls the slot back to
+//!     the fork and still reproduces the oracle exactly, as does an
+//!     identical repeated prompt (reuse capped at `prompt_len − 1`);
+//!   * slot reuse never leaks state between unrelated requests in either
+//!     mode, cache on or off (reset-on-checkout is the default, reuse
+//!     the explicit exception — the stale-slot regression);
+//!   * shared-bandit play-count conservation holds under cache hits
+//!     (cached prefill never enters reward accounting);
+//!   * the `engine.cache` gauges (lookups/hits/ratio/evictions/served)
+//!     observe what actually happened, and `SpecSession::resume` is
+//!     byte-identical to a fresh decode at the session level.
+
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+use tapout::engine::{
+    BackendKind, BatchConfig, Engine, EngineConfig, EngineMode, Policy, Request, Response,
+};
+use tapout::models::{sim_encode, LanguageModel, Scenario, SimModel};
+use tapout::spec::{generate, greedy, GenConfig, MethodSpec, SpecSession, StepOutcome, BOS};
+use tapout::util::Rng;
+
+const MAX_NEW: usize = 40;
+const TIMEOUT: Duration = Duration::from_secs(120);
+
+fn config(mode: EngineMode, workers: usize, slots: usize, cache: bool) -> EngineConfig {
+    EngineConfig {
+        method: "seq-ucb1".into(),
+        gamma_max: 64,
+        sched: Policy::Fcfs,
+        slots,
+        workers,
+        backend: BackendKind::sim_default(),
+        prefix_cache: cache,
+        ..EngineConfig::default()
+    }
+}
+
+/// A burst sharing one long system-prompt prefix (the workload the cache
+/// exists for) with a short unique suffix per request.
+fn shared_prefix_prompts(n: usize) -> Vec<String> {
+    let system =
+        "system: you are a terse serving assistant; answer from the shared template and stop. "
+            .repeat(3);
+    (0..n).map(|i| format!("{system}user {i}: question number {i} please")).collect()
+}
+
+/// The target-only greedy continuation the engine must reproduce
+/// (identical to the oracle in engine_concurrent.rs).
+fn oracle_tokens(text: &str, max_new: usize) -> Vec<u32> {
+    let mut prompt = vec![BOS];
+    prompt.extend(sim_encode(text));
+    let mut req = Request::new(0, text, max_new);
+    req.prompt = prompt.clone();
+    let mut target = SimModel::target(Scenario::new(req.scenario_seed(), &req.category));
+    let cfg = GenConfig { max_new, stop_at_eos: true, ..GenConfig::default() };
+    let r = greedy(&mut target, &prompt, &cfg).unwrap();
+    r.new_tokens().to_vec()
+}
+
+fn collect(rxs: Vec<std::sync::mpsc::Receiver<Response>>) -> Vec<Response> {
+    rxs.into_iter()
+        .map(|rx| rx.recv_timeout(TIMEOUT).expect("response must arrive"))
+        .collect()
+}
+
+fn run_burst(cfg: EngineConfig, prompts: &[String]) -> (Vec<Vec<u32>>, Engine) {
+    let eng = Engine::start(cfg).unwrap();
+    let rxs: Vec<_> = prompts.iter().map(|p| eng.submit(p, MAX_NEW)).collect();
+    let out = collect(rxs)
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| {
+            assert!(r.is_ok(), "request {i} failed: {:?}", r.error);
+            r.result.new_tokens().to_vec()
+        })
+        .collect();
+    (out, eng)
+}
+
+/// (lookups, hits, cached_tokens) snapshot of an engine's cache gauges.
+fn cache_counts(eng: &Engine) -> (u64, u64, u64) {
+    let c = eng.cache_stats();
+    (
+        c.lookups.load(Ordering::Relaxed),
+        c.hits.load(Ordering::Relaxed),
+        c.cached_tokens.load(Ordering::Relaxed),
+    )
+}
+
+#[test]
+fn shared_prefix_burst_is_byte_identical_cache_on_off_and_oracle() {
+    let prompts = shared_prefix_prompts(16);
+
+    // reference: cache off, sequential Workers engine
+    let (reference, seq) = run_burst(config(EngineMode::Workers, 1, 1, false), &prompts);
+    seq.shutdown();
+    for (i, out) in reference.iter().enumerate() {
+        assert_eq!(
+            out,
+            &oracle_tokens(&prompts[i], MAX_NEW),
+            "request {i}: cache-off reference diverged from the greedy oracle"
+        );
+    }
+
+    // cache on, Workers mode (batched verification), workers {1, 4}
+    for workers in [1usize, 4] {
+        let (out, eng) = run_burst(config(EngineMode::Workers, workers, workers, true), &prompts);
+        assert_eq!(out, reference, "workers={workers}: cache-on output diverged");
+        let (lookups, hits, cached) = cache_counts(&eng);
+        assert_eq!(lookups, 16, "workers={workers}: one lookup per request");
+        assert!(hits > 0, "workers={workers}: shared prefixes must hit");
+        assert!(cached > 0, "workers={workers}: hits must skip prompt tokens");
+        eng.shutdown();
+    }
+
+    // cache on, Workers mode, direct (batcher-off) verification path
+    {
+        let mut cfg = config(EngineMode::Workers, 2, 2, true);
+        cfg.verify_batch = BatchConfig::off();
+        let (out, eng) = run_burst(cfg, &prompts);
+        assert_eq!(out, reference, "direct-verify cache-on output diverged");
+        assert!(cache_counts(&eng).1 > 0, "direct path must also hit");
+        eng.shutdown();
+    }
+
+    // cache on, Continuous mode, slots {1, 4, 8}
+    for slots in [1usize, 4, 8] {
+        let (out, eng) = run_burst(config(EngineMode::Continuous, 0, slots, true), &prompts);
+        assert_eq!(out, reference, "continuous slots={slots}: cache-on output diverged");
+        let (lookups, hits, cached) = cache_counts(&eng);
+        assert_eq!(lookups, 16, "continuous slots={slots}: one lookup per admission");
+        assert!(hits > 0, "continuous slots={slots}: shared prefixes must hit");
+        assert!(cached > 0, "continuous slots={slots}: hits must skip prompt tokens");
+        eng.shutdown();
+    }
+}
+
+#[test]
+fn divergence_mid_prefix_rolls_back_to_the_fork() {
+    // 1 worker / 1 slot: request B is forced onto the slot request A just
+    // used; their prompts share a long prefix then diverge, so the slot
+    // must roll back to the fork and prefill only B's suffix
+    let common = "the quick brown fox jumps over the lazy dog again and again and again";
+    let a = format!("{common} alpha continuation with extra words");
+    let b = format!("{common} beta branch");
+    for mode in [EngineMode::Workers, EngineMode::Continuous] {
+        let eng = Engine::start(config(mode, 1, 1, true)).unwrap();
+        let ra = eng.submit(&a, MAX_NEW).recv_timeout(TIMEOUT).unwrap();
+        assert!(ra.is_ok(), "{:?}", ra.error);
+        assert_eq!(ra.result.new_tokens(), &oracle_tokens(&a, MAX_NEW)[..], "{mode:?} A");
+        assert_eq!(ra.result.cached_prefix, 0, "{mode:?}: first request cannot hit");
+
+        let rb = eng.submit(&b, MAX_NEW).recv_timeout(TIMEOUT).unwrap();
+        assert!(rb.is_ok(), "{:?}", rb.error);
+        assert_eq!(
+            rb.result.new_tokens(),
+            &oracle_tokens(&b, MAX_NEW)[..],
+            "{mode:?}: post-rollback output diverged from the oracle"
+        );
+        // BOS + the shared text + the shared leading space of the suffix
+        assert!(
+            rb.result.cached_prefix > common.len() / 2
+                && rb.result.cached_prefix <= common.len() + 2,
+            "{mode:?}: B must reuse about the common prefix (got {})",
+            rb.result.cached_prefix
+        );
+
+        // identical repeated prompt: reuse is capped at prompt_len − 1
+        // (the last prompt token is always re-fed), output still exact
+        let rb2 = eng.submit(&b, MAX_NEW).recv_timeout(TIMEOUT).unwrap();
+        assert!(rb2.is_ok(), "{:?}", rb2.error);
+        assert_eq!(rb2.result.new_tokens(), rb.result.new_tokens(), "{mode:?} repeat");
+        let b_tokens = sim_encode(&b).len() + 1; // + BOS
+        assert_eq!(
+            rb2.result.cached_prefix,
+            b_tokens - 1,
+            "{mode:?}: full-prompt reuse must stop one short of the whole prompt"
+        );
+        eng.shutdown();
+    }
+}
+
+#[test]
+fn stale_slot_state_never_leaks_between_requests() {
+    // the stale-slot regression (reset-on-checkout default): back-to-back
+    // unrelated requests through one slot must each match a fresh
+    // engine's output, cache on or off, in both modes
+    let first = "completely unrelated request about databases and indexes";
+    let second = "short poem";
+    for mode in [EngineMode::Workers, EngineMode::Continuous] {
+        for cache in [false, true] {
+            let eng = Engine::start(config(mode, 1, 1, cache)).unwrap();
+            let r1 = eng.submit(first, MAX_NEW).recv_timeout(TIMEOUT).unwrap();
+            assert!(r1.is_ok(), "{:?}", r1.error);
+            let r2 = eng.submit(second, MAX_NEW).recv_timeout(TIMEOUT).unwrap();
+            assert!(r2.is_ok(), "{:?}", r2.error);
+            assert_eq!(
+                r2.result.new_tokens(),
+                &oracle_tokens(second, MAX_NEW)[..],
+                "{mode:?} cache={cache}: second request observed stale slot state"
+            );
+            assert_eq!(
+                r2.result.cached_prefix, 0,
+                "{mode:?} cache={cache}: unrelated prompts must not reuse"
+            );
+            eng.shutdown();
+        }
+    }
+}
+
+#[test]
+fn bandit_play_count_conservation_under_cache_hits() {
+    let prompts = shared_prefix_prompts(12);
+    let eng = Engine::start(config(EngineMode::Workers, 4, 4, true)).unwrap();
+    let rxs: Vec<_> = prompts.iter().map(|p| eng.submit(p, MAX_NEW)).collect();
+    let responses = collect(rxs);
+    let rounds: u64 = responses
+        .iter()
+        .map(|r| {
+            assert!(r.is_ok(), "{:?}", r.error);
+            r.result.rounds.len() as u64
+        })
+        .sum();
+    // one select + one reward per round, cache hits notwithstanding:
+    // cached prefill never enters reward accounting (docs/POLICIES.md)
+    assert_eq!(eng.bandit_sessions(), rounds);
+    assert_eq!(eng.bandit_updates(), rounds);
+    let counts = eng.bandit_counts().expect("seq-ucb1 has a shared bandit");
+    assert_eq!(counts.iter().sum::<u64>(), rounds, "{counts:?}");
+    assert!(cache_counts(&eng).1 > 0, "the burst must actually exercise hits");
+    eng.shutdown();
+}
+
+#[test]
+fn cache_gauges_observe_hits_evictions_and_per_slot_served() {
+    let prompts = shared_prefix_prompts(8);
+    let (_, eng) = run_burst(config(EngineMode::Workers, 2, 2, true), &prompts);
+    let stats = eng.cache_stats();
+    let lookups = stats.lookups.load(Ordering::Relaxed);
+    let hits = stats.hits.load(Ordering::Relaxed);
+    assert_eq!(lookups, 8);
+    assert!(hits >= 1 && hits <= lookups);
+    let ratio = stats.cached_token_ratio();
+    assert!(ratio > 0.0 && ratio < 1.0, "ratio {ratio}");
+    let served: u64 = stats.served.iter().map(|c| c.load(Ordering::Relaxed)).sum();
+    assert_eq!(served, 8, "every request was served by some slot");
+
+    // /metrics surfaces the same gauges under engine.cache
+    let j = eng.metrics_json();
+    let cache = j.get("engine").unwrap().get("cache").expect("engine.cache object");
+    assert!(cache.get("enabled").unwrap().as_bool().unwrap());
+    assert_eq!(cache.get("lookups").unwrap().as_usize().unwrap(), 8);
+    assert!(cache.get("hit_rate").unwrap().as_f64().unwrap() > 0.0);
+    assert!(cache.get("cached_token_ratio").unwrap().as_f64().unwrap() > 0.0);
+    assert!(cache.get("served").is_some());
+    eng.shutdown();
+
+    // alternating unrelated prompts on one slot force evictions (their
+    // only shared token is BOS, below the minimum-reuse threshold)
+    let eng = Engine::start(config(EngineMode::Workers, 1, 1, true)).unwrap();
+    for p in ["first topic entirely", "second topic entirely", "third topic entirely"] {
+        let r = eng.submit(p, 16).recv_timeout(TIMEOUT).unwrap();
+        assert!(r.is_ok(), "{:?}", r.error);
+    }
+    let ev = eng.cache_stats().evictions.load(Ordering::Relaxed);
+    assert!(ev >= 2, "unmatched recorded prefixes must be evicted (got {ev})");
+    eng.shutdown();
+}
+
+#[test]
+fn session_resume_is_byte_identical_to_fresh_decode() {
+    // the session-level contract under the engine integration: resuming
+    // over retained state equals a fresh decode token-for-token, with
+    // identical round structure (drafted/accepted per round)
+    let shared: Vec<u32> =
+        std::iter::once(BOS).chain((0..24).map(|i| 3 + (i % 20) as u32)).collect();
+    let mut p1 = shared.clone();
+    p1.extend([7, 8, 9]);
+    let mut p2 = shared.clone();
+    p2.extend([10, 11]);
+    let cfg = GenConfig { max_new: 32, gamma_max: 32, stop_at_eos: false, collect_signals: false };
+
+    // request 1 leaves resident state on the "slot" models
+    let sc1 = Scenario::new(1, "qa");
+    let mut draft = SimModel::draft(sc1, 0.9, 0.05);
+    let mut target = SimModel::target(sc1);
+    let mut ctrl = MethodSpec::parse("seq-ucb1", "artifacts").unwrap().build(32).unwrap();
+    let mut rng = Rng::new(7);
+    let r1 = generate(&mut draft, &mut target, &mut ctrl, &mut rng, &p1, &cfg).unwrap();
+    assert_eq!(r1.cached_prefix, 0, "a fresh generate never reuses");
+
+    // fresh reference decode of request 2
+    let sc2 = Scenario::new(2, "qa");
+    let mut fdraft = SimModel::draft(sc2, 0.9, 0.05);
+    let mut ftarget = SimModel::target(sc2);
+    let mut fctrl = MethodSpec::parse("seq-ucb1", "artifacts").unwrap().build(32).unwrap();
+    let mut frng = Rng::new(9);
+    let want = generate(&mut fdraft, &mut ftarget, &mut fctrl, &mut frng, &p2, &cfg).unwrap();
+
+    // resume request 2 on the used models, retaining the shared prefix
+    let lcp = shared.len();
+    let resident = draft.retain_prefix(2, "qa", lcp).min(target.retain_prefix(2, "qa", lcp));
+    assert_eq!(resident, lcp, "sim retains the full requested prefix");
+    let mut rctrl = MethodSpec::parse("seq-ucb1", "artifacts").unwrap().build(32).unwrap();
+    let mut rrng = Rng::new(9);
+    let mut sess = SpecSession::resume(
+        &mut draft,
+        &mut target,
+        &mut rctrl,
+        &mut rrng,
+        &p2,
+        &cfg,
+        resident,
+    )
+    .unwrap();
+    while let StepOutcome::Round(_) = sess.step().unwrap() {}
+    let got = sess.finish();
+    assert_eq!(got.tokens, want.tokens, "resumed decode diverged from fresh decode");
+    assert_eq!(got.cached_prefix, lcp);
+    let gr: Vec<_> = got.rounds.iter().map(|r| (r.drafted, r.accepted)).collect();
+    let wr: Vec<_> = want.rounds.iter().map(|r| (r.drafted, r.accepted)).collect();
+    assert_eq!(gr, wr, "cache hits must not change round structure or acceptance stats");
+}
+
+#[test]
+fn session_resume_guards_reject_bad_residency() {
+    let sc = Scenario::new(3, "qa");
+    let mut draft = SimModel::draft(sc, 0.9, 0.05);
+    let mut target = SimModel::target(sc);
+    let mut ctrl = MethodSpec::parse("static-6", "artifacts").unwrap().build(16).unwrap();
+    let mut rng = Rng::new(1);
+    let prompt: Vec<u32> = vec![BOS, 5, 6, 7];
+    let cfg = GenConfig { max_new: 8, ..GenConfig::default() };
+
+    // fresh models cannot cover a claimed resident prefix
+    let err = SpecSession::resume(&mut draft, &mut target, &mut ctrl, &mut rng, &prompt, &cfg, 3);
+    assert!(err.is_err(), "fresh cursors cannot satisfy resident=3");
+    assert!(format!("{:#}", err.err().unwrap()).contains("resident-prefix contract"));
+
+    // the whole prompt can never be resident (the last token is re-fed)
+    let err = SpecSession::resume(&mut draft, &mut target, &mut ctrl, &mut rng, &prompt, &cfg, 4);
+    assert!(err.is_err(), "resident == prompt len must be rejected");
+}

@@ -382,6 +382,100 @@ fn parse_http(raw: &str) -> (u16, String) {
 }
 
 #[test]
+fn http_header_matching_is_case_insensitive_and_missing_length_is_411() {
+    let eng = Arc::new(Engine::start(config(1, 1, BatchConfig::default())).unwrap());
+    let http = HttpServer::start(eng.clone(), 0).unwrap();
+    let addr = http.addr.clone();
+    let body = r#"{"prompt": "header case request", "max_new": 8}"#;
+
+    // RFC 9110 §5.1: header field names are case-insensitive — a
+    // lowercase client must decode exactly like a canonical-case one
+    let reference = {
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        write!(
+            s,
+            "POST /generate HTTP/1.1\r\nhost: x\r\ncontent-length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        let (code, reply) = parse_http(&buf);
+        assert_eq!(code, 200, "lowercase content-length must be honored: {reply}");
+        let j = Json::parse(&reply).unwrap();
+        j.get("text").unwrap().as_str().unwrap().to_string()
+    };
+
+    // mixed-case client (seen from proxies and hand-rolled clients)
+    {
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        write!(
+            s,
+            "POST /generate HTTP/1.1\r\nHost: x\r\nCoNtEnT-LeNgTh: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        let (code, reply) = parse_http(&buf);
+        assert_eq!(code, 200, "mixed-case content-length must be honored: {reply}");
+        let j = Json::parse(&reply).unwrap();
+        assert_eq!(
+            j.get("text").unwrap().as_str().unwrap(),
+            reference,
+            "header casing must not change the decode"
+        );
+    }
+
+    // a POST with no content-length at all is 411 Length Required — not
+    // a misleading "bad json" 400 over an empty body
+    {
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        write!(s, "POST /generate HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        s.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        let (code, reply) = parse_http(&buf);
+        assert_eq!(code, 411, "{reply}");
+        assert!(reply.contains("content-length"), "{reply}");
+    }
+
+    // a present-but-malformed content-length is a 400 framing error —
+    // not the 411 "missing header" diagnostic (the client did send it)
+    {
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        write!(s, "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: 12abc\r\n\r\n").unwrap();
+        s.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        let (code, reply) = parse_http(&buf);
+        assert_eq!(code, 400, "{reply}");
+        assert!(reply.contains("invalid content-length"), "{reply}");
+    }
+
+    // a chunked body (any Transfer-Encoding casing) is an explicit 501,
+    // never parsed as if it were content-length framed
+    {
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        write!(
+            s,
+            "POST /generate HTTP/1.1\r\nHost: x\r\nTrAnSfEr-EnCoDiNg: Chunked\r\n\r\n\
+             5\r\nhello\r\n0\r\n\r\n"
+        )
+        .unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        let (code, reply) = parse_http(&buf);
+        assert_eq!(code, 501, "{reply}");
+        assert!(reply.contains("chunked"), "{reply}");
+    }
+
+    // GET routes carry no body and must stay unaffected by the 411 rule
+    let (code, reply) = http_get(&addr, "/health");
+    assert_eq!(code, 200, "{reply}");
+}
+
+#[test]
 fn http_streaming_split_bodies_and_413() {
     let eng = Arc::new(Engine::start(config(2, 2, BatchConfig::default())).unwrap());
     let http = HttpServer::start(eng.clone(), 0).unwrap();
