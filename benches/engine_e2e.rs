@@ -31,12 +31,24 @@ const BENCH_CONTINUOUS_JSON_PATH: &str = "BENCH_continuous.json";
 /// (`tapout.bench.cache.v1`, schema below in `prefix_cache_bench`).
 const BENCH_CACHE_JSON_PATH: &str = "BENCH_cache.json";
 
+/// Paged-KV busy-slot comparison (cache off vs PR-5 slot-affinity vs
+/// paged sharing) lands here (`tapout.bench.paged.v1`, schema below in
+/// `paged_kv_bench`).
+const BENCH_PAGED_JSON_PATH: &str = "BENCH_paged.json";
+
 fn main() {
     // TAPOUT_BENCH_ONLY=cache runs just the prefix-cache comparison —
     // the CI gate asserting cached prefill < uncached at slots >= 4
     // without paying for the full bench suite
     if std::env::var("TAPOUT_BENCH_ONLY").as_deref() == Ok("cache") {
         run_cache_bench();
+        return;
+    }
+    // TAPOUT_BENCH_ONLY=paged runs just the paged-KV comparison — the CI
+    // gate asserting busy-slot page sharing computes strictly fewer
+    // prefill tokens than slot-affinity when concurrency > slots
+    if std::env::var("TAPOUT_BENCH_ONLY").as_deref() == Ok("paged") {
+        run_paged_bench();
         return;
     }
     sim_tables();
@@ -56,6 +68,7 @@ fn main() {
         Err(e) => eprintln!("\n[failed to write {BENCH_CONTINUOUS_JSON_PATH}: {e}]"),
     }
     run_cache_bench();
+    run_paged_bench();
     pjrt_ladder();
 }
 
@@ -67,6 +80,152 @@ fn run_cache_bench() {
         Ok(()) => println!("\n[wrote {BENCH_CACHE_JSON_PATH}]"),
         Err(e) => eprintln!("\n[failed to write {BENCH_CACHE_JSON_PATH}: {e}]"),
     }
+}
+
+fn run_paged_bench() {
+    let mut report = Json::obj();
+    report.set("schema", "tapout.bench.paged.v1");
+    paged_kv_bench(&mut report);
+    match std::fs::write(BENCH_PAGED_JSON_PATH, report.render()) {
+        Ok(()) => println!("\n[wrote {BENCH_PAGED_JSON_PATH}]"),
+        Err(e) => eprintln!("\n[failed to write {BENCH_PAGED_JSON_PATH}: {e}]"),
+    }
+}
+
+/// Paged KV arena on the busy-slot workload slot-affinity cannot serve
+/// (docs/ARCHITECTURE.md §13): a shared-prefix burst much wider than the
+/// slot count through the Continuous engine at slots 4, under three
+/// configurations — cache off, cache on with page sharing off (the PR 5
+/// slot-affinity baseline: a hit requires the matching slot to be
+/// *free*), and cache on with page sharing (busy slots' prompt pages are
+/// adopted copy-on-write). Outputs are asserted byte-identical across
+/// all three and against the greedy oracle. The headline quantity is
+/// again **prefill tokens computed vs served**: with concurrency > slots
+/// the first wave after a cold start finds every matching slot busy, so
+/// the paged engine must compute strictly fewer prefill tokens than
+/// slot-affinity — the assert CI gates on. Peak pages resident shows the
+/// memory side: shared pages are counted once, not per-session.
+fn paged_kv_bench(report: &mut Json) {
+    use std::sync::atomic::Ordering;
+    let fast = std::env::var("TAPOUT_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let (n_req, max_new) = if fast { (16, 32) } else { (32, 64) };
+    let slots = 4usize;
+    let system =
+        "system: you are a terse serving assistant; answer from the shared template, cite the \
+         shared context, and stop. "
+            .repeat(3);
+    let prompts: Vec<String> =
+        (0..n_req).map(|i| format!("{system}user {i}: question number {i} please")).collect();
+    let served_total: u64 = prompts.iter().map(|p| p.len() as u64 + 1).sum();
+
+    let oracle: Vec<Vec<u32>> = prompts
+        .iter()
+        .map(|text| {
+            let mut prompt = vec![BOS];
+            prompt.extend(sim_encode(text));
+            let mut req = tapout::engine::Request::new(0, text.clone(), max_new);
+            req.prompt = prompt.clone();
+            let mut target =
+                SimModel::target(tapout::models::Scenario::new(req.scenario_seed(), &req.category));
+            let cfg = GenConfig { max_new, stop_at_eos: true, ..GenConfig::default() };
+            greedy(&mut target, &prompt, &cfg).unwrap().new_tokens().to_vec()
+        })
+        .collect();
+
+    group(&format!(
+        "paged KV: {n_req}-request busy-slot burst ({} shared tokens) through {slots} continuous \
+         slots, max_new {max_new} (sim)",
+        system.len() + 1
+    ));
+    let configs =
+        [("cache-off", false, false), ("slot-affinity", true, false), ("paged", true, true)];
+    let mut computed = [0u64; 3];
+    let mut rows: Vec<Json> = Vec::new();
+    for (ci, (label, cache, sharing)) in configs.into_iter().enumerate() {
+        let eng = Engine::start(EngineConfig {
+            method: "seq-ucb1".into(),
+            gamma_max: 128,
+            sched: Policy::Fcfs,
+            slots,
+            workers: 0,
+            backend: BackendKind::sim_default(),
+            mode: EngineMode::Continuous,
+            prefix_cache: cache,
+            page_sharing: sharing,
+            ..EngineConfig::default()
+        })
+        .unwrap();
+        let t0 = Instant::now();
+        let rxs: Vec<_> = prompts.iter().map(|p| eng.submit(p, max_new)).collect();
+        let outputs: Vec<Vec<u32>> = rxs
+            .into_iter()
+            .map(|rx| {
+                let r = rx.recv().unwrap();
+                assert!(r.is_ok(), "{:?}", r.error);
+                r.result.new_tokens().to_vec()
+            })
+            .collect();
+        let elapsed_ns = t0.elapsed().as_nanos() as f64;
+        assert_eq!(outputs, oracle, "{label}: output diverged from the greedy oracle");
+        let cached = eng.cache_stats().cached_tokens.load(Ordering::Relaxed);
+        computed[ci] = served_total - cached;
+        let pg = eng.page_stats();
+        let peak = pg.peak_resident.load(Ordering::Relaxed);
+        let shared_hits = pg.shared_hits.load(Ordering::Relaxed);
+        let (new_tokens, ttft_p50, ttft_p95) = {
+            let mut m = eng.metrics.lock().unwrap();
+            (m.new_tokens, m.ttft_ms.percentile(50.0), m.ttft_ms.percentile(95.0))
+        };
+        let tok_s = new_tokens as f64 / (elapsed_ns / 1e9);
+        println!(
+            "  {label:<13}: {tok_s:>9.0} tok/s  ttft p50 {ttft_p50:.2} ms  prefill computed \
+             {}/{}  peak pages {peak}  shared hits {shared_hits}",
+            computed[ci], served_total,
+        );
+        let mut row = Json::obj();
+        row.set("config", label)
+            .set("throughput_tok_s", tok_s)
+            .set("wall_ms", elapsed_ns / 1e6)
+            .set("ttft_p50_ms", ttft_p50)
+            .set("ttft_p95_ms", ttft_p95)
+            .set("prefill_tokens_served", served_total as usize)
+            .set("prefill_tokens_computed", computed[ci] as usize)
+            .set("cached_tokens", cached as usize)
+            .set("peak_pages_resident", peak as usize)
+            .set("pages_total", pg.total.load(Ordering::Relaxed) as usize)
+            .set("shared_hits", shared_hits as usize)
+            .set("cow_copies", pg.cow_copies.load(Ordering::Relaxed) as usize)
+            .set("evictions", pg.evictions.load(Ordering::Relaxed) as usize);
+        rows.push(row);
+        eng.shutdown();
+    }
+    println!(
+        "    prefill computed: off {} vs affinity {} vs paged {}  (paged {:.2}x fewer than \
+         affinity)",
+        computed[0],
+        computed[1],
+        computed[2],
+        computed[1] as f64 / computed[2].max(1) as f64
+    );
+    assert!(
+        computed[1] < computed[0],
+        "slot-affinity must beat cache-off ({} vs {})",
+        computed[1],
+        computed[0]
+    );
+    assert!(
+        computed[2] < computed[1],
+        "with concurrency > slots the paged engine must compute strictly fewer prefill tokens \
+         than slot-affinity ({} paged vs {} affinity)",
+        computed[2],
+        computed[1]
+    );
+    report
+        .set("requests", n_req)
+        .set("max_new", max_new)
+        .set("shared_prefix_tokens", system.len() + 1)
+        .set("slots", slots)
+        .set("configs", rows);
 }
 
 /// Prefix-reuse KV cache on a shared-system-prompt workload

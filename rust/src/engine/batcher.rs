@@ -42,7 +42,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::models::{BatchItem, LanguageModel, ModelCost};
+use crate::models::{BatchItem, LanguageModel, ModelCost, PageView};
 use crate::signals::TokenSignals;
 
 use super::metrics::EngineStats;
@@ -118,9 +118,19 @@ enum BatchMsg {
 pub struct BatcherHandle {
     tx: Sender<BatchMsg>,
     in_flight: Arc<AtomicUsize>,
+    /// does the backing verifier declare content-addressed (adoptable)
+    /// KV? Probed once at spawn; [`BatchedTarget`] mirrors it so paged
+    /// cross-slot sharing (docs/ARCHITECTURE.md §13) works identically
+    /// through the batcher and the direct path.
+    adoptive: bool,
 }
 
 impl BatcherHandle {
+    /// Can sequences behind this batcher adopt shared KV pages?
+    pub fn adoptive(&self) -> bool {
+        self.adoptive
+    }
+
     /// A request decode is starting: one more session may submit jobs.
     /// The batcher uses the in-flight count to stop waiting early (a lone
     /// session never pays the window).
@@ -172,7 +182,8 @@ impl Batcher {
         anyhow::ensure!(cfg.enabled(), "Batcher::spawn with max_batch 0");
         let (tx, rx) = channel();
         let in_flight = Arc::new(AtomicUsize::new(0));
-        let handle = BatcherHandle { tx, in_flight: in_flight.clone() };
+        let adoptive = verifier.page_view().adoptive;
+        let handle = BatcherHandle { tx, in_flight: in_flight.clone(), adoptive };
         let thread = std::thread::Builder::new()
             .name("tapout-batcher".into())
             .spawn(move || batcher_loop(rx, verifier, cfg, in_flight, stats))?;
@@ -309,6 +320,10 @@ pub struct BatchedTarget {
     rel_cost: f64,
     cost: ModelCost,
     cancel: Option<CancelFlag>,
+    /// mirrored from the handle: the backing verifier's page adoptivity
+    adoptive: bool,
+    /// tokens this handle adopted from shared pages (gauge mirror)
+    adopted: u64,
 }
 
 impl BatchedTarget {
@@ -316,6 +331,7 @@ impl BatchedTarget {
     /// `rel_cost` mirror the backing target model's geometry so session
     /// headroom checks behave identically to the direct path.
     pub fn new(seq: usize, handle: BatcherHandle, max_seq: usize, rel_cost: f64) -> BatchedTarget {
+        let adoptive = handle.adoptive();
         BatchedTarget {
             handle,
             seq,
@@ -326,6 +342,8 @@ impl BatchedTarget {
             rel_cost,
             cost: ModelCost::default(),
             cancel: None,
+            adoptive,
+            adopted: 0,
         }
     }
 
@@ -366,6 +384,30 @@ impl LanguageModel for BatchedTarget {
         self.category = category.to_string();
         self.cur = keep;
         keep
+    }
+
+    fn page_view(&self) -> PageView {
+        PageView { adoptive: self.adoptive, resident: self.cur, adopted_tokens: self.adopted }
+    }
+
+    /// Paged adoption through the batcher (docs/ARCHITECTURE.md §13):
+    /// like `retain_prefix`, this is a cursor mirror — the resident KV
+    /// lives with the batcher's verifier. When that verifier is adoptive
+    /// (content-addressed KV, e.g. the simulator) the cursor jumps to the
+    /// page-vouched `shared` depth even past positions this handle never
+    /// submitted; otherwise it degrades to same-slot retention at
+    /// `local`, exactly the trait's default.
+    fn adopt_pages(&mut self, seed: u64, category: &str, local: usize, shared: usize) -> usize {
+        if self.adoptive {
+            debug_assert!(local <= shared, "shared residency covers the local prefix");
+            self.seed = seed;
+            self.category = category.to_string();
+            self.adopted += shared.saturating_sub(local) as u64;
+            self.cur = shared;
+            shared
+        } else {
+            self.retain_prefix(seed, category, local)
+        }
     }
 
     fn block(&mut self, tokens: &[u32], start: usize) -> Result<Vec<TokenSignals>> {

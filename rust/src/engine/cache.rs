@@ -1,30 +1,44 @@
-//! Cross-request prefix-reuse index (docs/ARCHITECTURE.md §12).
+//! Cross-request prefix-reuse index (docs/ARCHITECTURE.md §12–§13).
 //!
 //! Serving workloads repeat prompt prefixes constantly — system prompts,
 //! few-shot templates, chat history — and every repeat pays prefill twice
 //! (draft + target). The contiguous-cursor slot protocol (slots.rs,
 //! models/traits.rs) already keeps per-sequence KV resident across
 //! requests; the only missing piece is *routing*: when a request arrives,
-//! send it to the free slot whose resident sequence shares the longest
+//! send it to the slot whose resident sequence shares the longest
 //! token-id prefix with the request's prompt, roll the slot's cursors
 //! back to the divergence point, and prefill only the suffix.
 //!
 //! [`PrefixIndex`] is that routing structure: a token-id trie over the
-//! resident prefixes of the *free* slots of a
-//! [`SlotPool`](super::slots::SlotPool). Every slot's prefix is
-//! inserted as a root path and the slot
-//! id is marked on each node along it, so a lookup is one walk down the
-//! query prompt: the deepest reachable node holds exactly the free slots
-//! whose longest common prefix with the prompt equals that depth.
+//! registered resident prefixes of a
+//! [`SlotPool`](super::slots::SlotPool)'s slots. Through PR 5 only *free*
+//! slots were registered (a hit had to seize the matching slot); the
+//! paged allocator (paging.rs) registers busy slots too, because a page
+//! hit copies refcounted page mappings instead of seizing the source
+//! slot — [`PrefixIndex::best_match_where`] lets the pool ask the same
+//! trie both questions ("deepest *free* match" for slot-affinity reuse,
+//! "deepest match at all" for copy-on-write page sharing). Every slot's
+//! prefix is inserted as a root path and the slot id is marked on each
+//! node along it, so a lookup is one walk down the query prompt: the
+//! deepest reachable node holds exactly the slots whose longest common
+//! prefix with the prompt equals that depth.
 //!
 //! The index stores token ids only — whether reuse is *valid* is the
 //! slot pool's contract (a slot's recorded prefix never exceeds its
 //! models' cursor watermark, slots.rs), and whether it is *safe* is the
-//! backend's (`LanguageModel::retain_prefix`). The trie itself is exact:
-//! a match is a literal token-for-token prefix equality, so routing can
-//! never introduce an approximate hit.
+//! backend's (`LanguageModel::retain_prefix` /
+//! `LanguageModel::adopt_pages`). The trie itself is exact: a match is a
+//! literal token-for-token prefix equality, so routing can never
+//! introduce an approximate hit.
 //!
-//! Sizing: one node per distinct (depth, token) pair across free-slot
+//! Each slot's current registration is also kept verbatim (`registered`),
+//! which buys two things: [`PrefixIndex::insert`] short-circuits the
+//! identical-prefix case in O(1) — release-then-reacquire of the same
+//! slot with an unchanged prefix no longer re-walks the full trie — and
+//! re-registration is a single call (insert unlinks the previous path
+//! itself).
+//!
+//! Sizing: one node per distinct (depth, token) pair across registered
 //! prefixes — bounded by Σ prefix lengths ≤ slots × max_seq, a few tens
 //! of thousands of small nodes at the defaults. Nodes are arena-allocated
 //! and recycled on removal, so a long-lived server does not leak trie
@@ -32,24 +46,27 @@
 
 use std::collections::HashMap;
 
-/// One trie node: outgoing token edges plus the ids of the free slots
-/// whose resident prefix passes through this node.
+/// One trie node: outgoing token edges plus the ids of the slots whose
+/// registered prefix passes through this node.
 #[derive(Debug, Default)]
 struct Node {
     children: HashMap<u32, usize>,
     slots: Vec<usize>,
 }
 
-/// A token-id trie over the resident prefixes of free KV slots, answering
-/// "which free slot shares the longest prefix with this prompt?" in one
-/// walk. Maintained by [`SlotPool`](super::slots::SlotPool) under its
-/// checkout mutex: insert at release, remove at checkout.
+/// A token-id trie over the registered resident prefixes of KV slots,
+/// answering "which slot shares the longest prefix with this prompt?"
+/// in one walk. Maintained by [`SlotPool`](super::slots::SlotPool) under
+/// its checkout mutex.
 #[derive(Debug)]
 pub struct PrefixIndex {
     /// arena of nodes; index 0 is the root (never recycled)
     nodes: Vec<Node>,
     /// recycled node indexes (removal prunes emptied paths)
     spare: Vec<usize>,
+    /// each slot's current registration, verbatim — the identical-prefix
+    /// short-circuit and the one-call re-registration both read this
+    registered: HashMap<usize, Vec<u32>>,
 }
 
 impl Default for PrefixIndex {
@@ -61,7 +78,11 @@ impl Default for PrefixIndex {
 impl PrefixIndex {
     /// An empty index.
     pub fn new() -> PrefixIndex {
-        PrefixIndex { nodes: vec![Node::default()], spare: Vec::new() }
+        PrefixIndex {
+            nodes: vec![Node::default()],
+            spare: Vec::new(),
+            registered: HashMap::new(),
+        }
     }
 
     fn alloc(&mut self) -> usize {
@@ -74,9 +95,25 @@ impl PrefixIndex {
         }
     }
 
-    /// Register free slot `slot` as holding resident KV for `prefix`.
-    /// An empty prefix is a no-op (nothing to match against).
-    pub fn insert(&mut self, slot: usize, prefix: &[u32]) {
+    /// Register slot `slot` as holding resident KV for `prefix`,
+    /// replacing any previous registration. Returns whether the index
+    /// changed: re-registering the exact current prefix is an O(1)
+    /// no-op (`false`) — no trie walk, no node churn — so the
+    /// release-then-reacquire hot path stops paying for an unchanged
+    /// prefix. An empty `prefix` clears the registration (nothing to
+    /// match against).
+    pub fn insert(&mut self, slot: usize, prefix: &[u32]) -> bool {
+        if self.registered.get(&slot).map(Vec::as_slice) == Some(prefix) {
+            return false;
+        }
+        if let Some(old) = self.registered.remove(&slot) {
+            self.unlink(slot, &old);
+        } else if prefix.is_empty() {
+            return false; // nothing registered, nothing to register
+        }
+        if prefix.is_empty() {
+            return true;
+        }
         let mut at = 0;
         for &tok in prefix {
             let next = match self.nodes[at].children.get(&tok).copied() {
@@ -90,12 +127,29 @@ impl PrefixIndex {
             self.nodes[next].slots.push(slot);
             at = next;
         }
+        self.registered.insert(slot, prefix.to_vec());
+        true
     }
 
     /// Remove slot `slot`'s registration for `prefix` (the exact prefix
     /// passed to [`PrefixIndex::insert`]), pruning nodes that no longer
     /// carry any slot. Unknown registrations are ignored.
     pub fn remove(&mut self, slot: usize, prefix: &[u32]) {
+        if self.registered.get(&slot).map(Vec::as_slice) == Some(prefix) {
+            self.registered.remove(&slot);
+        }
+        self.unlink(slot, prefix);
+    }
+
+    /// The slot's current registration, if any.
+    pub fn registration(&self, slot: usize) -> Option<&[u32]> {
+        self.registered.get(&slot).map(Vec::as_slice)
+    }
+
+    /// Unmark `slot` along `prefix`'s path and prune emptied nodes. Stops
+    /// early (a no-op for the untraversed tail) if the path does not
+    /// exist — a longer-than-registered prefix never corrupts the trie.
+    fn unlink(&mut self, slot: usize, prefix: &[u32]) {
         let mut at = 0;
         // (parent, token, node) for each step of the path
         let mut path = Vec::with_capacity(prefix.len());
@@ -127,28 +181,42 @@ impl PrefixIndex {
         }
     }
 
-    /// The free slot sharing the longest token-id prefix with `prompt`,
-    /// as `(slot id, common prefix length)`. `None` when no free slot
+    /// The slot sharing the longest token-id prefix with `prompt`, as
+    /// `(slot id, common prefix length)`. `None` when no registered slot
     /// matches even the first token.
     pub fn best_match(&self, prompt: &[u32]) -> Option<(usize, usize)> {
+        self.best_match_where(prompt, |_| true)
+    }
+
+    /// The slot sharing the longest token-id prefix with `prompt` *among
+    /// slots satisfying `pred`*, as `(slot id, common prefix length)`.
+    /// One walk down the prompt, then a deepest-first scan back up: the
+    /// first node holding a `pred` slot wins, and that slot's LCP is
+    /// exactly that node's depth (a longer match would have placed it on
+    /// the deeper node too). The pool uses this to ask for the deepest
+    /// *free* match (slot-affinity reuse) separately from the deepest
+    /// match overall (copy-on-write page sharing).
+    pub fn best_match_where<F>(&self, prompt: &[u32], pred: F) -> Option<(usize, usize)>
+    where
+        F: Fn(usize) -> bool,
+    {
         let mut at = 0;
-        let mut depth = 0;
+        let mut path = Vec::new(); // nodes at depth 1.. along the prompt
         for &tok in prompt {
             match self.nodes[at].children.get(&tok) {
                 Some(&n) => {
                     at = n;
-                    depth += 1;
+                    path.push(n);
                 }
                 None => break,
             }
         }
-        if depth == 0 {
-            return None;
+        for (i, &node) in path.iter().enumerate().rev() {
+            if let Some(&s) = self.nodes[node].slots.iter().find(|&&s| pred(s)) {
+                return Some((s, i + 1));
+            }
         }
-        // every surviving node carries ≥1 slot (remove() prunes), and
-        // every slot here has LCP exactly `depth`: a longer match would
-        // have let the walk descend further
-        self.nodes[at].slots.first().map(|&s| (s, depth))
+        None
     }
 
     /// Number of live (non-root, non-recycled) trie nodes — a leak guard
@@ -222,5 +290,42 @@ mod tests {
         ix.insert(1, &[7]);
         ix.remove(1, &[7, 8]); // longer than the registration
         assert_eq!(ix.best_match(&[7]), Some((1, 1)));
+    }
+
+    #[test]
+    fn identical_reinsert_short_circuits_without_churn() {
+        // the release-then-reacquire hot path: re-registering the exact
+        // current prefix must not re-walk or rebuild the trie
+        let mut ix = PrefixIndex::new();
+        assert!(ix.insert(0, &[1, 2, 3]), "first registration changes the index");
+        let nodes = ix.node_count();
+        assert!(!ix.insert(0, &[1, 2, 3]), "identical re-insert is a no-op");
+        assert_eq!(ix.node_count(), nodes, "no node churn on the short-circuit");
+        assert_eq!(ix.best_match(&[1, 2, 3]), Some((0, 3)));
+
+        // a changed prefix re-registers in one call (old path unlinked)
+        assert!(ix.insert(0, &[1, 2, 7]));
+        assert_eq!(ix.best_match(&[1, 2, 3]), Some((0, 2)), "old tail is gone");
+        assert_eq!(ix.best_match(&[1, 2, 7]), Some((0, 3)));
+        assert_eq!(ix.registration(0), Some(&[1, 2, 7][..]));
+
+        // clearing via an empty prefix unregisters
+        assert!(ix.insert(0, &[]));
+        assert_eq!(ix.node_count(), 0);
+        assert_eq!(ix.registration(0), None);
+        assert!(!ix.insert(0, &[]), "already clear");
+    }
+
+    #[test]
+    fn best_match_where_filters_by_predicate() {
+        let mut ix = PrefixIndex::new();
+        ix.insert(0, &[1, 2, 3, 4]); // think: busy slot, deep match
+        ix.insert(1, &[1, 2]); // think: free slot, shallow match
+        // unrestricted: the deep registration wins
+        assert_eq!(ix.best_match(&[1, 2, 3, 4, 9]), Some((0, 4)));
+        // restricted to slot 1 (the "free set"): the shallow match wins
+        assert_eq!(ix.best_match_where(&[1, 2, 3, 4, 9], |s| s == 1), Some((1, 2)));
+        // no slot satisfies the predicate
+        assert_eq!(ix.best_match_where(&[1, 2, 3], |_| false), None);
     }
 }

@@ -496,6 +496,110 @@ impl CacheStats {
     }
 }
 
+/// Lock-free gauges over the paged KV allocator
+/// (docs/ARCHITECTURE.md §13): how many pages exist, how many are
+/// resident or shared, and how copy-on-write / eviction churn behaves
+/// under load. Owned by the [`SlotPool`](super::slots::SlotPool), which
+/// mirrors the mutex-guarded [`PagePool`](super::paging::PagePool)
+/// bookkeeping into these atomics after every checkout/release so
+/// `/metrics` readers (`engine.pages`, docs/OPERATIONS.md) never take
+/// the checkout lock. All counters stay zero while the prefix cache is
+/// disabled (no paging without reuse to account).
+#[derive(Debug)]
+pub struct PageStats {
+    /// is paged prefix reuse enabled on the owning pool?
+    pub enabled: bool,
+    /// tokens per page
+    pub page_size: AtomicU64,
+    /// pages in the arena (`kv_pages`, or the auto-sized capacity)
+    pub total: AtomicU64,
+    /// pages on the free list right now
+    pub free: AtomicU64,
+    /// pages referenced by more than one slot chain (the sharing win)
+    pub shared: AtomicU64,
+    /// high-water mark of resident (non-free) pages
+    pub peak_resident: AtomicU64,
+    /// copy-on-write page duplications (partial boundary pages)
+    pub cow_copies: AtomicU64,
+    /// pages reclaimed from cached residencies under pressure
+    pub evictions: AtomicU64,
+    /// checkouts that adopted pages from a busy source slot
+    pub shared_hits: AtomicU64,
+    /// prompt tokens adopted via cross-slot page sharing
+    pub adopted_tokens: AtomicU64,
+    /// paged checkouts routed through the index (hit-rate denominator)
+    pub lookups: AtomicU64,
+}
+
+impl PageStats {
+    /// Fresh counters; `enabled` mirrors the pool's cache switch.
+    pub fn new(enabled: bool) -> PageStats {
+        PageStats {
+            enabled,
+            page_size: AtomicU64::new(0),
+            total: AtomicU64::new(0),
+            free: AtomicU64::new(0),
+            shared: AtomicU64::new(0),
+            peak_resident: AtomicU64::new(0),
+            cow_copies: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            shared_hits: AtomicU64::new(0),
+            adopted_tokens: AtomicU64::new(0),
+            lookups: AtomicU64::new(0),
+        }
+    }
+
+    /// Count one paged checkout (the shared-hit-rate denominator).
+    pub fn note_lookup(&self) {
+        self.lookups.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Mirror the allocator's mutex-guarded bookkeeping into the
+    /// lock-free gauges (called under the pool mutex; readers stay
+    /// outside it).
+    pub fn sync(&self, pool: &super::paging::PagePool) {
+        self.page_size.store(pool.page_size() as u64, Ordering::Relaxed);
+        self.total.store(pool.total_pages() as u64, Ordering::Relaxed);
+        self.free.store(pool.free_pages() as u64, Ordering::Relaxed);
+        self.shared.store(pool.shared_pages() as u64, Ordering::Relaxed);
+        self.peak_resident.store(pool.peak_resident as u64, Ordering::Relaxed);
+        self.cow_copies.store(pool.cow_copies, Ordering::Relaxed);
+        self.evictions.store(pool.evicted_pages, Ordering::Relaxed);
+        self.shared_hits.store(pool.shared_hits, Ordering::Relaxed);
+        self.adopted_tokens.store(pool.adopted_tokens, Ordering::Relaxed);
+    }
+
+    /// Fraction of paged checkouts that adopted a busy slot's pages.
+    pub fn shared_hit_rate(&self) -> f64 {
+        let l = self.lookups.load(Ordering::Relaxed);
+        if l == 0 {
+            return 0.0;
+        }
+        self.shared_hits.load(Ordering::Relaxed) as f64 / l as f64
+    }
+
+    /// JSON object for the `/metrics` `engine.pages` field.
+    pub fn to_json(&self) -> Json {
+        let total = self.total.load(Ordering::Relaxed);
+        let free = self.free.load(Ordering::Relaxed);
+        let mut o = Json::obj();
+        o.set("enabled", self.enabled)
+            .set("page_size", self.page_size.load(Ordering::Relaxed) as usize)
+            .set("total", total as usize)
+            .set("free", free as usize)
+            .set("resident", total.saturating_sub(free) as usize)
+            .set("peak_resident", self.peak_resident.load(Ordering::Relaxed) as usize)
+            .set("shared", self.shared.load(Ordering::Relaxed) as usize)
+            .set("cow_copies", self.cow_copies.load(Ordering::Relaxed) as usize)
+            .set("evictions", self.evictions.load(Ordering::Relaxed) as usize)
+            .set("shared_hits", self.shared_hits.load(Ordering::Relaxed) as usize)
+            .set("shared_hit_rate", self.shared_hit_rate())
+            .set("adopted_tokens", self.adopted_tokens.load(Ordering::Relaxed) as usize)
+            .set("lookups", self.lookups.load(Ordering::Relaxed) as usize);
+        o
+    }
+}
+
 /// Lock-free counters for the request lifecycle's non-completion exits
 /// (docs/ARCHITECTURE.md §10): cancelled by the client, expired past the
 /// deadline, shed by the admission controller. Surfaced as the

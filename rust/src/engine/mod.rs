@@ -6,14 +6,17 @@
 //! continuous-batching step loop ([`stepper`]) — serving metrics, and a
 //! minimal HTTP JSON/SSE API. See docs/ARCHITECTURE.md §3–§5 for the
 //! concurrency design, §10 for the request lifecycle, §11 for
-//! continuous batching, and §12 for the cross-request prefix-reuse KV
+//! continuous batching, §12 for the cross-request prefix-reuse KV
 //! cache ([`cache`], slot-affinity checkout in [`slots`]) shared by both
-//! execution modes (DESIGN.md keeps the legacy section map).
+//! execution modes, and §13 for the paged KV allocator with
+//! copy-on-write prefix sharing ([`paging`]) and chunked prefill
+//! (DESIGN.md keeps the legacy section map).
 
 pub mod batcher;
 pub mod cache;
 pub mod http;
 pub mod metrics;
+pub mod paging;
 pub mod request;
 pub mod scheduler;
 pub mod server;
@@ -24,10 +27,11 @@ pub use batcher::{BatchConfig, BatchedTarget, Batcher, BatcherHandle};
 pub use cache::PrefixIndex;
 pub use http::HttpServer;
 pub use metrics::{
-    BatchStats, CacheStats, DraftStats, EngineMetrics, EngineStats, LifecycleStats, StepStats,
-    WorkerStats,
+    BatchStats, CacheStats, DraftStats, EngineMetrics, EngineStats, LifecycleStats, PageStats,
+    StepStats, WorkerStats,
 };
+pub use paging::{PageOp, PagePool};
 pub use request::{CancelFlag, EmitClip, FinishStatus, Request, Response, StreamEvent};
 pub use scheduler::{Policy, Scheduler};
 pub use server::{BackendKind, Engine, EngineConfig, EngineMode};
-pub use slots::{Slot, SlotPool};
+pub use slots::{Lease, Slot, SlotPool, DEFAULT_PAGE_SIZE};

@@ -246,6 +246,18 @@ impl Scheduler {
         self.in_flight = self.in_flight.saturating_sub(1);
     }
 
+    /// An in-flight request's scheduling cost changed between `pop` and
+    /// `note_done`: the checkout re-resolved its advisory `cached_hint`
+    /// against the reuse the slot actually granted (server.rs,
+    /// stepper.rs), so the in-flight ledger — charged with the stale
+    /// `old` cost at pop — must now carry `new` for the matching
+    /// `note_done(new)` to conserve. Queue *order* is untouched (the
+    /// request already popped); only the wait-estimate ledger moves.
+    pub fn reprice(&mut self, old: usize, new: usize) {
+        self.in_flight_cost =
+            self.in_flight_cost.saturating_sub(old as u64).saturating_add(new as u64);
+    }
+
     /// Σ service cost of queued requests.
     pub fn pending_cost(&self) -> u64 {
         self.pending_cost
@@ -451,6 +463,47 @@ mod tests {
         s.note_done(60);
         assert_eq!(s.in_flight_cost(), 0);
         assert_eq!(s.in_flight(), 0);
+    }
+
+    #[test]
+    fn reprice_keeps_the_in_flight_ledger_conserved() {
+        // satellite regression: a request enqueued with a 40-token
+        // placement hint pops carrying sched_cost 20; by checkout the
+        // residency is gone, so the hint re-resolves to 0 and the cost
+        // becomes 60. Without reprice, note_done(60) would underflow the
+        // ledger by 40 (leaving phantom in-flight cost from every other
+        // request, or a saturated zero hiding real load).
+        let mut s = Scheduler::new(Policy::Sjf);
+        let mut hinted = req(1, 50, 10); // cost 60, 40 expected cached
+        hinted.cached_hint = 40;
+        s.push(hinted); // charges sched_cost 20
+        s.push(req(2, 50, 10)); // a bystander, cost 60
+        let mut popped = s.pop().unwrap();
+        assert_eq!(popped.id, 1);
+        assert_eq!(s.in_flight_cost(), 20);
+
+        // checkout finds the residency consumed: hint re-resolves to 0
+        let stale = popped.sched_cost();
+        popped.cached_hint = 0;
+        s.reprice(stale, popped.sched_cost());
+        assert_eq!(s.in_flight_cost(), 60, "ledger now carries the real cost");
+
+        let bystander = s.pop().unwrap();
+        s.note_done(popped.sched_cost()); // releases 60, not 20
+        s.note_done(bystander.sched_cost());
+        assert_eq!(s.in_flight_cost(), 0, "ledger conserves after reprice");
+        assert_eq!(s.in_flight(), 0);
+
+        // repricing in the cheap direction conserves too (a hint that
+        // *appeared* between enqueue and checkout)
+        s.push(req(3, 50, 10));
+        let mut r = s.pop().unwrap();
+        let stale = r.sched_cost();
+        r.cached_hint = 40;
+        s.reprice(stale, r.sched_cost());
+        assert_eq!(s.in_flight_cost(), 20);
+        s.note_done(r.sched_cost());
+        assert_eq!(s.in_flight_cost(), 0);
     }
 
     #[test]

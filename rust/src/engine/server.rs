@@ -174,6 +174,19 @@ pub struct EngineConfig {
     /// on or off; it only removes redundant prefill forwards. Applies to
     /// both execution modes. Off by default (CLI `serve --prefix-cache`).
     pub prefix_cache: bool,
+    /// KV page granularity in tokens (docs/ARCHITECTURE.md §13, CLI
+    /// `serve --page-size`). Only meaningful with the prefix cache on.
+    pub page_size: usize,
+    /// KV arena size in pages; 0 auto-sizes to
+    /// `slots × ceil(max_seq / page_size)`, at which page eviction never
+    /// fires (CLI `serve --kv-pages`).
+    pub kv_pages: usize,
+    /// cross-slot copy-on-write page sharing (docs/ARCHITECTURE.md §13):
+    /// with the prefix cache on and an adoptive backend, a prompt can
+    /// reuse a *busy* slot's prefix pages instead of waiting for the
+    /// matching slot to free. Lossless, on by default; disabling it
+    /// restores PR-5 slot-affinity-only reuse (the bench baseline).
+    pub page_sharing: bool,
 }
 
 impl Default for EngineConfig {
@@ -192,6 +205,9 @@ impl Default for EngineConfig {
             default_deadline_ms: 0,
             mode: EngineMode::Workers,
             prefix_cache: false,
+            page_size: super::slots::DEFAULT_PAGE_SIZE,
+            kv_pages: 0,
+            page_sharing: true,
         }
     }
 }
@@ -382,8 +398,14 @@ impl Engine {
 
         // prefix-reuse routing is a pool property: with it on, checkout
         // is affinity-matched and releases index the recorded resident
-        // prefixes (slots.rs, docs/ARCHITECTURE.md §12)
-        let pool = pool.with_prefix_cache(config.prefix_cache);
+        // prefixes (slots.rs, docs/ARCHITECTURE.md §12). Page geometry
+        // and sharing ride on top (docs/ARCHITECTURE.md §13) — the pool
+        // only activates cross-slot sharing when the backend is adoptive.
+        config.page_size = config.page_size.max(1);
+        let pool = pool
+            .with_paging(config.page_size, config.kv_pages)
+            .with_page_sharing(config.page_sharing)
+            .with_prefix_cache(config.prefix_cache);
 
         // the worker engine coalesces verification through the batcher
         // thread; the step loop keeps the verifier and batches directly
@@ -533,6 +555,12 @@ impl Engine {
         self.shared.pool.cache_stats()
     }
 
+    /// The slot pool's paged-KV gauges (the `/metrics` `engine.pages`
+    /// source — docs/ARCHITECTURE.md §13).
+    pub fn page_stats(&self) -> &super::metrics::PageStats {
+        self.shared.pool.page_stats()
+    }
+
     // --- shared-bandit readouts (the online-learning observability) ----
 
     /// Drafting sessions absorbed by the shared controller since boot —
@@ -572,8 +600,10 @@ impl Engine {
             span_ns = self.shared.started.lock().unwrap().elapsed().as_nanos() as u64;
         }
         let mut eng = self.stats.to_json(span_ns);
-        // the pool owns the prefix-cache gauges (it is the cache)
+        // the pool owns the prefix-cache and paged-KV gauges (it is the
+        // cache and the page table)
         eng.set("cache", self.shared.pool.cache_stats().to_json());
+        eng.set("pages", self.shared.pool.page_stats().to_json());
         o.set("engine", eng);
         {
             // scheduler ledger: queued + in-flight work and the honest
@@ -819,7 +849,7 @@ fn worker_loop(
                 q = shared.cv.wait(q).unwrap();
             }
         };
-        let Some((req, reply)) = job else { return };
+        let Some((mut req, reply)) = job else { return };
         let Some(sink) = reply else {
             // no waiter registered (should not happen) — just release the
             // scheduler's in-flight ledger entry
@@ -862,7 +892,19 @@ fn worker_loop(
             sink.send_final(Response::terminal(req.id, status, now_ns, now_ns, why));
             continue;
         }
-        let (mut slot, reuse) = got.expect("no exit implies a checked-out slot");
+        let (mut slot, lease) = got.expect("no exit implies a checked-out slot");
+
+        // the dispatcher's `cached_hint` was advisory: the residency it
+        // saw at enqueue can be consumed (or appear) before dispatch,
+        // which would leave the SJF in-flight ledger charged for a
+        // different discount than the checkout actually granted.
+        // Re-resolve the hint against the lease and reprice the ledger so
+        // the final `note_done` releases exactly what is now charged.
+        if req.cached_hint != lease.shared {
+            let stale = req.sched_cost();
+            req.cached_hint = lease.shared;
+            shared.q.lock().unwrap().sched.reprice(stale, req.sched_cost());
+        }
 
         // queueing delay = arrival → decode start, *including* the slot
         // wait — under workers > slots contention that wait is real
@@ -871,10 +913,13 @@ fn worker_loop(
 
         let seed = req.scenario_seed();
         let draft_before = slot.draft.cost();
-        // reset-vs-retain (slots.rs): a miss (reuse 0) starts the slot's
-        // sequence state fresh; a hit retains the routed prefix — the
-        // session then resumes at min(draft, target) retained positions
-        let resident_draft = slot.draft.retain_prefix(seed, &req.category, reuse);
+        // reset-vs-adopt (slots.rs): a miss (empty lease) starts the
+        // slot's sequence state fresh; a hit adopts the leased residency —
+        // the full page-vouched `shared` depth on adoptive backends, the
+        // slot's own `local` depth otherwise — and the session resumes at
+        // min(draft, target) adopted positions
+        let resident_draft =
+            slot.draft.adopt_pages(seed, &req.category, lease.local, lease.shared);
         let t_busy = Instant::now();
         let (end, target_cur) = match &shared.batcher {
             Some(handle) => {
@@ -890,7 +935,8 @@ fn worker_loop(
                     slot.target.rel_cost(),
                 )
                 .with_cancel(req.cancel.clone());
-                let resident = resident_draft.min(target.retain_prefix(seed, &req.category, reuse));
+                let resident = resident_draft
+                    .min(target.adopt_pages(seed, &req.category, lease.local, lease.shared));
                 handle.note_decode_start();
                 let r = drive_session(
                     slot.draft.as_mut(),
@@ -906,8 +952,8 @@ fn worker_loop(
                 (r, target.cur())
             }
             None => {
-                let resident =
-                    resident_draft.min(slot.target.retain_prefix(seed, &req.category, reuse));
+                let resident = resident_draft
+                    .min(slot.target.adopt_pages(seed, &req.category, lease.local, lease.shared));
                 let r = drive_session(
                     slot.draft.as_mut(),
                     slot.target.as_mut(),

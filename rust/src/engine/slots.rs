@@ -1,7 +1,8 @@
 //! KV slot pool — per-sequence device state (draft + target worlds) that
-//! survives across requests. A slot owns one model pair; acquiring a slot
-//! is O(1) because the contiguous-cursor protocol never needs the KV cache
-//! cleared (stale entries beyond the cursor are dead by construction).
+//! survives across requests, allocated over a paged KV arena. A slot owns
+//! one model pair; acquiring a slot is O(1) because the contiguous-cursor
+//! protocol never needs the KV cache cleared (stale entries beyond the
+//! cursor are dead by construction).
 //!
 //! The pool is shared by all decode workers (`&self` API behind a
 //! mutex + condvar, DESIGN.md §2): checkout moves the `Slot` out of the
@@ -10,34 +11,51 @@
 //! lets the worker count exceed the slot count without panicking — extra
 //! workers simply queue at the checkout.
 //!
-//! **Prefix-reuse routing (docs/ARCHITECTURE.md §12).** Checkout is no
-//! longer an anonymous pop: each slot carries *resident-prefix metadata*
-//! (the token ids its KV covers below the cursor watermark, recorded by
-//! the engine at release via [`Slot::record_prefix`]), and a
-//! [`PrefixIndex`] over the free slots lives beside the free list. The
-//! affinity checkout ([`SlotPool::try_acquire_for`],
-//! [`SlotPool::acquire_for_timeout`]) routes a request to the free slot
-//! sharing the longest token-id prefix with its prompt and reports how
-//! many positions the caller may retain; reuse is capped at
-//! `prompt_len − 1` so the last prompt token is always re-fed (every
-//! decode round needs its signal row). The reset-vs-retain contract:
+//! **Paged prefix-reuse routing (docs/ARCHITECTURE.md §12–§13).**
+//! Checkout is not an anonymous pop: each slot carries resident-prefix
+//! metadata (the token ids its KV covers below the cursor watermark,
+//! recorded by the engine at release via [`Slot::record_prefix`]), a
+//! [`PrefixIndex`] routes prompts to matching residencies, and a
+//! [`PagePool`] tracks which fixed-size KV pages each slot's residency
+//! maps. The affinity checkout ([`SlotPool::try_acquire_for`],
+//! [`SlotPool::acquire_for_timeout`]) returns a [`Lease`] describing two
+//! reuse depths, both capped at `prompt_len − 1` so the last prompt token
+//! is always re-fed (every decode round needs its signal row):
 //!
-//!   * **miss** (`reuse == 0`) — the caller must start the slot's
-//!     sequence state fresh (`LanguageModel::retain_prefix` with
-//!     `keep = 0`, which is a full reset). The pool discards the slot's
-//!     stale recorded prefix, counting an eviction.
-//!   * **hit** (`reuse > 0`) — the caller may roll both cursors back to
-//!     `reuse` and prefill only the suffix; the pool guarantees the
-//!     slot's recorded prefix matches the prompt token-for-token over
-//!     those positions, and the recorded prefix never exceeds the
-//!     cursor watermark the engine measured at release.
+//!   * `local` — positions of the checked-out slot's *own* resident
+//!     state that match the prompt (PR-5 slot-affinity reuse: valid on
+//!     every backend via the contiguous-cursor contract);
+//!   * `shared ≥ local` — positions covered by token-matching pages,
+//!     possibly computed under a *different, still-busy* slot and mapped
+//!     in copy-on-write. Only offered when the pool is **adoptive** (its
+//!     backends declare content-addressed KV via
+//!     `LanguageModel::page_view`) and page sharing is enabled; on other
+//!     pools `shared == local` always.
 //!
-//! Reuse is therefore deliberate, never accidental: a slot checked out
-//! without an index match always resets, and a cache hit is an explicit
-//! `(slot, reuse)` the engine threads through `retain_prefix` /
-//! `SpecSession::resume`. With the cache disabled the pool behaves
-//! exactly like the anonymous pool (every checkout reports `reuse 0`,
-//! nothing is recorded).
+//! The engine threads the lease through
+//! `LanguageModel::adopt_pages(seed, category, local, shared)`: adoptive
+//! backends take the full `shared` residency, others fall back to
+//! `retain_prefix(local)` — so sharing degrades to slot-affinity reuse,
+//! never to corruption. The reset-vs-retain contract is unchanged from
+//! §12: a miss (`shared == 0`) starts the slot fresh and discards its
+//! stale recorded prefix (counting an eviction); a hit rolls cursors to
+//! the reuse depth and prefills only the suffix.
+//!
+//! **Busy-slot sharing.** With page sharing active, a slot's registration
+//! is *not* dropped at checkout — the checkout re-registers the slot
+//! under its new prompt, so a concurrent request sharing that prompt's
+//! prefix hits immediately (the N-requests-one-system-prompt burst no
+//! longer serializes on slot availability, and the pages are held ~once).
+//! Without sharing (non-adoptive backends, `--no-page-sharing`, or cache
+//! off) registrations exist only while the slot is free — exactly the
+//! PR-5 behavior.
+//!
+//! **Eviction** is page-LRU over *cached* residencies: under arena
+//! pressure the pool reclaims free slots' chains (least recently released
+//! first) and never touches a checked-out slot's pages; with the default
+//! auto-sized arena pressure cannot occur at all. With the cache disabled
+//! the pool behaves exactly like the anonymous pool (every checkout
+//! reports zero reuse, nothing is recorded, page gauges stay zero).
 //!
 //! The continuous engine (docs/ARCHITECTURE.md §11) is the pool's sole
 //! consumer in `Continuous` mode: the step loop admits with the
@@ -58,7 +76,8 @@ use crate::models::sim::Scenario;
 use crate::models::{LanguageModel, ModelAssets, PjrtModel, SimModel};
 
 use super::cache::PrefixIndex;
-use super::metrics::CacheStats;
+use super::metrics::{CacheStats, PageStats};
+use super::paging::PagePool;
 
 /// Smallest prefix match that counts as a cache hit. Every encoded
 /// prompt starts with BOS, so any two prompts trivially share one
@@ -66,6 +85,25 @@ use super::metrics::CacheStats;
 /// "reuse" a slot (never resetting, never evicting) while saving a
 /// single prefill row. Matches shorter than this are misses.
 pub const MIN_REUSE: usize = 2;
+
+/// Default KV page granularity, in tokens (`serve --page-size`).
+pub const DEFAULT_PAGE_SIZE: usize = 16;
+
+/// What an affinity checkout grants the caller
+/// (docs/ARCHITECTURE.md §13): how much of the prompt is already
+/// resident, and on whose authority. `local` positions are vouched by
+/// the checked-out slot's own sequence state (sound on every backend);
+/// `shared ≥ local` positions are vouched by token-matching KV pages —
+/// beyond `local` they were computed under a different slot and are only
+/// taken by adoptive backends (`LanguageModel::adopt_pages`). A miss is
+/// `Lease::default()` (both zero).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Lease {
+    /// prompt positions matching this slot's own resident state
+    pub local: usize,
+    /// prompt positions covered by token-matching pages (≥ `local`)
+    pub shared: usize,
+}
 
 /// One checked-out sequence state: a draft+target model pair whose KV
 /// survives across requests. In the batched engine the slot `id` doubles
@@ -115,24 +153,41 @@ impl Slot {
 struct PoolInner {
     free: Vec<Slot>,
     index: PrefixIndex,
+    pages: PagePool,
 }
 
 /// The shared checkout pool of KV slots (blocking condvar checkout), with
-/// optional prefix-reuse affinity routing over the free slots.
+/// optional paged prefix-reuse routing: same-slot affinity plus
+/// copy-on-write page sharing against busy slots on adoptive backends.
 pub struct SlotPool {
     inner: Mutex<PoolInner>,
     freed: Condvar,
     total: usize,
     cache_on: bool,
+    /// do the slot models declare content-addressed (adoptable) KV?
+    adoptive: bool,
+    /// is cross-slot page sharing allowed? (config switch; only
+    /// effective on adoptive pools)
+    sharing: bool,
+    page_size: usize,
+    kv_pages: usize,
+    max_seq: usize,
     cache: CacheStats,
+    pages: PageStats,
 }
 
 impl SlotPool {
     /// Pool over explicit (draft, target) model pairs (prefix cache off;
-    /// see [`SlotPool::with_prefix_cache`]).
+    /// see [`SlotPool::with_prefix_cache`]). Paged-KV capability is
+    /// probed from the models themselves: the pool is adoptive exactly
+    /// when every slot's draft *and* target declare adoptive page views.
     pub fn from_pairs(pairs: Vec<(Box<dyn LanguageModel>, Box<dyn LanguageModel>)>) -> SlotPool {
         let total = pairs.len();
-        let free = pairs
+        let adoptive = !pairs.is_empty()
+            && pairs.iter().all(|(d, t)| d.page_view().adoptive && t.page_view().adoptive);
+        let max_seq =
+            pairs.iter().map(|(d, t)| d.max_seq().max(t.max_seq())).max().unwrap_or(0);
+        let free: Vec<Slot> = pairs
             .into_iter()
             .enumerate()
             .map(|(id, (draft, target))| Slot {
@@ -144,20 +199,60 @@ impl SlotPool {
             })
             .collect();
         SlotPool {
-            inner: Mutex::new(PoolInner { free, index: PrefixIndex::new() }),
+            inner: Mutex::new(PoolInner {
+                free,
+                index: PrefixIndex::new(),
+                pages: PagePool::new(DEFAULT_PAGE_SIZE, 0, total, max_seq),
+            }),
             freed: Condvar::new(),
             total,
             cache_on: false,
+            adoptive,
+            sharing: true,
+            page_size: DEFAULT_PAGE_SIZE,
+            kv_pages: 0,
+            max_seq,
             cache: CacheStats::new(total, false),
+            pages: PageStats::new(false),
         }
     }
 
     /// Enable (or explicitly disable) cross-request prefix reuse. With
-    /// the cache off every checkout reports `reuse 0` and nothing is
-    /// indexed — byte-identical to the anonymous pool.
+    /// the cache off every checkout reports zero reuse and nothing is
+    /// indexed — byte-identical to the anonymous pool, all cache and
+    /// page gauges zero.
     pub fn with_prefix_cache(mut self, enabled: bool) -> SlotPool {
         self.cache_on = enabled;
         self.cache = CacheStats::new(self.total, enabled);
+        self.pages = PageStats::new(enabled);
+        if enabled {
+            self.pages.sync(&self.inner.get_mut().unwrap().pages);
+        }
+        self
+    }
+
+    /// Set the KV page geometry: `page_size` tokens per page and
+    /// `kv_pages` total pages (0 = auto:
+    /// `slots × ceil(max_seq / page_size)`, at which eviction never
+    /// fires). Rebuilds the arena, so call before serving traffic.
+    pub fn with_paging(mut self, page_size: usize, kv_pages: usize) -> SlotPool {
+        self.page_size = page_size.max(1);
+        self.kv_pages = kv_pages;
+        let inner = self.inner.get_mut().unwrap();
+        inner.pages = PagePool::new(self.page_size, kv_pages, self.total, self.max_seq);
+        if self.cache_on {
+            self.pages = PageStats::new(true);
+            self.pages.sync(&self.inner.get_mut().unwrap().pages);
+        }
+        self
+    }
+
+    /// Allow or forbid cross-slot copy-on-write page sharing (on by
+    /// default; only effective on adoptive pools). With sharing off the
+    /// pool reproduces PR-5 slot-affinity reuse exactly — the bench
+    /// baseline.
+    pub fn with_page_sharing(mut self, enabled: bool) -> SlotPool {
+        self.sharing = enabled;
         self
     }
 
@@ -166,9 +261,32 @@ impl SlotPool {
         self.cache_on
     }
 
+    /// The pool's KV page granularity, in tokens (also the chunked
+    /// prefill alignment unit — stepper.rs).
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    /// Is cross-slot page sharing live (cache on + adoptive backends +
+    /// sharing not disabled)? This is also the engine's signal for
+    /// whether `Lease::shared` can exceed `Lease::local`.
+    pub fn sharing_active(&self) -> bool {
+        self.cache_on && self.adoptive && self.sharing
+    }
+
     /// The pool's cache gauges (the `/metrics` `engine.cache` source).
     pub fn cache_stats(&self) -> &CacheStats {
         &self.cache
+    }
+
+    /// The pool's page gauges (the `/metrics` `engine.pages` source).
+    pub fn page_stats(&self) -> &PageStats {
+        &self.pages
+    }
+
+    /// Pages currently mapped by slot `slot`'s chain (tests/diagnostics).
+    pub fn chain_pages(&self, slot: usize) -> usize {
+        self.inner.lock().unwrap().pages.chain_pages(slot)
     }
 
     /// `n` PJRT slots sharing one set of weights/executables.
@@ -189,7 +307,7 @@ impl SlotPool {
     }
 
     /// `n` simulator slots; each request reseats the scenario via
-    /// `LanguageModel::retain_prefix` / `LanguageModel::begin_request`.
+    /// `LanguageModel::adopt_pages` / `LanguageModel::begin_request`.
     pub fn sim(quality: f32, rel_cost: f64, n: usize) -> SlotPool {
         let placeholder = Scenario::new(0, "qa");
         let pairs = (0..n)
@@ -204,33 +322,106 @@ impl SlotPool {
         SlotPool::from_pairs(pairs)
     }
 
-    /// The checkout core, under the pool mutex: affinity-match `prompt`
-    /// against the free slots' recorded prefixes, fall back to the
-    /// least-recently released un-prefixed slot (preserving other slots'
-    /// cached prefixes) on a miss. Returns `(slot, reuse)`.
-    fn checkout_locked(&self, inner: &mut PoolInner, prompt: &[u32]) -> Option<(Slot, usize)> {
+    /// Reclaim cached (free-slot) page chains, least recently released
+    /// first, until `fresh_pages` can be allocated or only live chains
+    /// remain (then downstream extension saturates — a live session's
+    /// pages are never touched). The bound is conservative: under real
+    /// pressure evicting a cached residency early is the cheap outcome.
+    fn ensure_headroom(&self, inner: &mut PoolInner, fresh_pages: usize) {
+        while inner.pages.free_pages() < fresh_pages {
+            let Some(pos) =
+                (0..inner.free.len()).find(|&i| inner.pages.chain_pages(inner.free[i].id) > 0)
+            else {
+                break;
+            };
+            let sid = inner.free[pos].id;
+            inner.free[pos].prefix.clear();
+            if let Some(reg) = inner.index.registration(sid).map(|r| r.to_vec()) {
+                inner.index.remove(sid, &reg);
+            }
+            inner.pages.evict_chain(sid);
+            self.cache.note_eviction();
+        }
+    }
+
+    /// The checkout core, under the pool mutex. Resolution order:
+    /// deepest *free* match (same-slot reuse — identical result, no page
+    /// copies), else deepest match overall (cross-slot page share, only
+    /// with sharing active — the source is necessarily busy, or the free
+    /// branch would have won), else miss on the least-recently released
+    /// un-prefixed slot. Page chains are re-shaped here so the `engine.
+    /// pages` gauges reflect the checkout before the decode starts.
+    fn checkout_locked(&self, inner: &mut PoolInner, prompt: &[u32]) -> Option<(Slot, Lease)> {
         if inner.free.is_empty() {
             return None;
         }
         if !self.cache_on {
-            return inner.free.pop().map(|s| (s, 0));
+            return inner.free.pop().map(|s| (s, Lease::default()));
         }
-        if let Some((sid, lcp)) = inner.index.best_match(prompt) {
-            // always re-feed the last prompt token: its signal row seeds
-            // the first draft proposal and the first verification block
-            let reuse = lcp.min(prompt.len().saturating_sub(1));
-            if reuse >= MIN_REUSE {
+        self.pages.note_lookup();
+        let cap = prompt.len().saturating_sub(1);
+        let ps = inner.pages.page_size();
+        let free_ids: Vec<usize> = inner.free.iter().map(|s| s.id).collect();
+        let local = inner
+            .index
+            .best_match_where(prompt, |s| free_ids.contains(&s))
+            .map(|(sid, lcp)| (sid, lcp.min(cap)))
+            .filter(|&(_, r)| r >= MIN_REUSE);
+        let shared = if self.sharing_active() {
+            inner
+                .index
+                .best_match(prompt)
+                .map(|(sid, lcp)| (sid, lcp.min(cap)))
+                .filter(|&(_, r)| r >= MIN_REUSE)
+        } else {
+            None
+        };
+
+        // same-slot reuse wins ties: same resident tokens, no page copies
+        if let Some((sid, reuse)) = local {
+            if !shared.is_some_and(|(_, rs)| rs > reuse) {
                 let pos = inner
                     .free
                     .iter()
                     .position(|s| s.id == sid)
-                    .expect("indexed slot is on the free list");
+                    .expect("indexed free slot is on the free list");
                 let slot = inner.free.remove(pos);
-                inner.index.remove(slot.id, &slot.prefix);
+                let fresh = prompt.len().div_ceil(ps).saturating_sub(reuse.div_ceil(ps)) + 1;
+                self.ensure_headroom(inner, fresh);
+                inner.pages.reacquire(sid, reuse, prompt.len());
+                if self.sharing_active() {
+                    // stay registered while busy, under the new content
+                    inner.index.insert(sid, prompt);
+                } else {
+                    inner.index.remove(sid, &slot.prefix);
+                }
                 self.cache.note_lookup(prompt.len(), reuse);
-                return Some((slot, reuse));
+                self.pages.sync(&inner.pages);
+                return Some((slot, Lease { local: reuse, shared: reuse }));
             }
         }
+
+        if let Some((src, reuse)) = shared {
+            // cross-slot page share: the matching residency is busy (a
+            // free match this deep would have won above) — map its
+            // prefix pages copy-on-write onto a victim slot instead of
+            // waiting for the source to free
+            let pick = inner.free.iter().position(|s| s.prefix.is_empty()).unwrap_or(0);
+            let mut slot = inner.free.remove(pick);
+            if !slot.prefix.is_empty() {
+                inner.index.remove(slot.id, &slot.prefix);
+                slot.prefix.clear();
+                self.cache.note_eviction();
+            }
+            let fresh = prompt.len().div_ceil(ps).saturating_sub(reuse / ps) + 1;
+            self.ensure_headroom(inner, fresh);
+            inner.pages.adopt(slot.id, src, reuse, prompt.len());
+            inner.index.insert(slot.id, prompt);
+            self.cache.note_lookup(prompt.len(), reuse);
+            self.pages.sync(&inner.pages);
+            return Some((slot, Lease { local: 0, shared: reuse }));
+        }
+
         // miss: prefer a slot with no cached prefix; otherwise evict the
         // least-recently released one (front of the free list)
         let pick = inner.free.iter().position(|s| s.prefix.is_empty()).unwrap_or(0);
@@ -240,15 +431,24 @@ impl SlotPool {
             slot.prefix.clear();
             self.cache.note_eviction();
         }
+        self.ensure_headroom(inner, prompt.len().div_ceil(ps) + 1);
+        inner.pages.reacquire(slot.id, 0, prompt.len());
+        if self.sharing_active() {
+            // register the prompt immediately: a same-wave request with
+            // this prefix shares pages instead of re-prefilling (the
+            // busy-slot contention win the paged allocator exists for)
+            inner.index.insert(slot.id, prompt);
+        }
         self.cache.note_lookup(prompt.len(), 0);
-        Some((slot, 0))
+        self.pages.sync(&inner.pages);
+        Some((slot, Lease::default()))
     }
 
-    /// Non-blocking affinity checkout: the free slot with the longest
-    /// resident prefix matching `prompt`, plus how many positions the
-    /// caller may retain (0 = start fresh). See the module docs for the
-    /// reset-vs-retain contract.
-    pub fn try_acquire_for(&self, prompt: &[u32]) -> Option<(Slot, usize)> {
+    /// Non-blocking affinity checkout: the slot with the deepest valid
+    /// reuse for `prompt` plus the [`Lease`] describing it (`default()` =
+    /// start fresh). See the module docs for the reset-vs-retain
+    /// contract.
+    pub fn try_acquire_for(&self, prompt: &[u32]) -> Option<(Slot, Lease)> {
         let mut inner = self.inner.lock().unwrap();
         self.checkout_locked(&mut inner, prompt)
     }
@@ -264,11 +464,7 @@ impl SlotPool {
     /// final `wait_timeout` returns — a slot released exactly at the
     /// deadline instant is returned, not dropped for `None` (pinned by
     /// `release_at_deadline_instant_is_still_returned`).
-    pub fn acquire_for_timeout(
-        &self,
-        prompt: &[u32],
-        timeout: Duration,
-    ) -> Option<(Slot, usize)> {
+    pub fn acquire_for_timeout(&self, prompt: &[u32], timeout: Duration) -> Option<(Slot, Lease)> {
         let deadline = Instant::now() + timeout;
         let mut inner = self.inner.lock().unwrap();
         loop {
@@ -315,7 +511,11 @@ impl SlotPool {
     /// Expected reuse (in prompt tokens) if a request with this prompt
     /// checked out right now — the scheduler's affinity placement hint
     /// (scheduler.rs subtracts it from the SJF service-cost estimate).
-    /// Advisory only: the free set can change before the real checkout.
+    /// Advisory only: the resident set can change before the real
+    /// checkout, which is why the dispatcher's hint is re-resolved at
+    /// checkout time and repriced (server.rs, stepper.rs). With page
+    /// sharing active the index covers busy slots too, so the hint sees
+    /// the same residencies a real checkout would.
     pub fn peek_reuse(&self, prompt: &[u32]) -> usize {
         if !self.cache_on {
             return 0;
@@ -331,8 +531,9 @@ impl SlotPool {
 
     /// Return a checked-out slot and wake one blocked `acquire`. With the
     /// prefix cache on, whatever [`Slot::record_prefix`] recorded is
-    /// indexed for affinity routing; with it off the recorded prefix is
-    /// dropped so reuse can never happen accidentally.
+    /// indexed for affinity routing and the slot's page chain is resized
+    /// to exactly the recorded residency; with it off the recorded prefix
+    /// is dropped so reuse can never happen accidentally.
     pub fn release(&self, mut slot: Slot) {
         slot.served += 1;
         if self.cache_on {
@@ -344,8 +545,13 @@ impl SlotPool {
             slot.prefix.clear();
         }
         let mut inner = self.inner.lock().unwrap();
-        if self.cache_on && !slot.prefix.is_empty() {
+        if self.cache_on {
+            inner.pages.resize(slot.id, slot.prefix.len());
+            // re-registration short-circuits in O(1) when the prefix is
+            // unchanged (release-then-reacquire of the same residency),
+            // and clears the registration when the prefix is empty
             inner.index.insert(slot.id, &slot.prefix);
+            self.pages.sync(&inner.pages);
         }
         inner.free.push(slot);
         self.freed.notify_one();
@@ -456,16 +662,16 @@ mod tests {
         pool.release(c); // no prefix recorded
 
         // prompt matching slot a's prefix for 4 tokens, slot b's for 3
-        let (slot, reuse) = pool.try_acquire_for(&[1, 5, 6, 7, 2, 2]).unwrap();
+        let (slot, lease) = pool.try_acquire_for(&[1, 5, 6, 7, 2, 2]).unwrap();
         assert_eq!(slot.id, a_id, "longest match wins");
-        assert_eq!(reuse, 4);
+        assert_eq!(lease, Lease { local: 4, shared: 4 }, "same-slot reuse: local == shared");
         pool.release(slot);
 
         // full-prefix match is capped at prompt_len − 1 (the last prompt
         // token is always re-fed)
-        let (slot, reuse) = pool.try_acquire_for(&[1, 5, 6, 9]).unwrap();
+        let (slot, lease) = pool.try_acquire_for(&[1, 5, 6, 9]).unwrap();
         assert_eq!(slot.id, b_id);
-        assert_eq!(reuse, 3);
+        assert_eq!(lease.shared, 3);
         pool.release(slot);
 
         let stats = pool.cache_stats();
@@ -485,19 +691,19 @@ mod tests {
         pool.release(b);
 
         // a miss takes the un-prefixed slot, preserving a's cached prefix
-        let (slot, reuse) = pool.try_acquire_for(&[4, 4]).unwrap();
-        assert_eq!((slot.id, reuse), (b_id, 0));
+        let (slot, lease) = pool.try_acquire_for(&[4, 4]).unwrap();
+        assert_eq!((slot.id, lease.shared), (b_id, 0));
         assert_eq!(pool.cache_stats().evictions.load(Ordering::Relaxed), 0);
         // a second concurrent miss must now evict a's prefix
-        let (slot2, reuse2) = pool.try_acquire_for(&[4, 4]).unwrap();
-        assert_eq!((slot2.id, reuse2), (a_id, 0));
+        let (slot2, lease2) = pool.try_acquire_for(&[4, 4]).unwrap();
+        assert_eq!((slot2.id, lease2.shared), (a_id, 0));
         assert!(slot2.resident_prefix().is_empty(), "miss checkout resets the record");
         assert_eq!(pool.cache_stats().evictions.load(Ordering::Relaxed), 1);
         // and the evicted prefix no longer matches anything
         pool.release(slot);
         pool.release(slot2);
-        let (_, reuse3) = pool.try_acquire_for(&[9, 9, 9, 9]).unwrap();
-        assert_eq!(reuse3, 0);
+        let (_, lease3) = pool.try_acquire_for(&[9, 9, 9, 9]).unwrap();
+        assert_eq!(lease3.shared, 0);
     }
 
     #[test]
@@ -507,10 +713,12 @@ mod tests {
         a.record_prefix(&[1, 2, 3], 3);
         pool.release(a);
         assert_eq!(pool.peek_reuse(&[1, 2, 3, 4]), 0);
-        let (slot, reuse) = pool.try_acquire_for(&[1, 2, 3, 4]).unwrap();
-        assert_eq!(reuse, 0, "disabled cache must never report reuse");
+        let (slot, lease) = pool.try_acquire_for(&[1, 2, 3, 4]).unwrap();
+        assert_eq!(lease, Lease::default(), "disabled cache must never report reuse");
         assert!(slot.resident_prefix().is_empty(), "release dropped the record");
         assert_eq!(pool.cache_stats().lookups.load(Ordering::Relaxed), 0);
+        assert_eq!(pool.page_stats().lookups.load(Ordering::Relaxed), 0);
+        assert_eq!(pool.page_stats().total.load(Ordering::Relaxed), 0, "page gauges stay zero");
     }
 
     #[test]
@@ -521,7 +729,130 @@ mod tests {
         pool.release(a);
         let prompt = [3u32, 4, 5, 8, 8];
         assert_eq!(pool.peek_reuse(&prompt), 3);
-        let (_, reuse) = pool.try_acquire_for(&prompt).unwrap();
-        assert_eq!(reuse, 3);
+        let (_, lease) = pool.try_acquire_for(&prompt).unwrap();
+        assert_eq!(lease.shared, 3);
+    }
+
+    #[test]
+    fn busy_slot_share_maps_pages_copy_on_write() {
+        // the contention case PR 5 could not serve: the matching
+        // residency is checked out, but the prompt still hits via pages
+        let pool =
+            SlotPool::sim(0.9, 0.05, 2).with_paging(4, 0).with_prefix_cache(true);
+        assert!(pool.sharing_active(), "sim pools are adoptive");
+        let prompt_a: Vec<u32> = vec![1, 2, 3, 4, 5, 6, 7, 8, 9, 10];
+        let (slot_a, lease_a) = pool.try_acquire_for(&prompt_a).unwrap();
+        assert_eq!(lease_a, Lease::default(), "first checkout is a miss");
+
+        // while slot A is busy, a prompt sharing its first 9 tokens hits
+        let prompt_b: Vec<u32> = vec![1, 2, 3, 4, 5, 6, 7, 8, 9, 20, 21];
+        let (slot_b, lease_b) = pool.try_acquire_for(&prompt_b).unwrap();
+        assert_ne!(slot_b.id, slot_a.id);
+        assert_eq!(lease_b, Lease { local: 0, shared: 9 }, "busy-slot page share");
+
+        let st = pool.page_stats();
+        assert_eq!(st.shared_hits.load(Ordering::Relaxed), 1);
+        assert_eq!(st.adopted_tokens.load(Ordering::Relaxed), 9);
+        // 9 shared tokens at page_size 4 = 2 full pages shared + 1 cow
+        assert_eq!(st.shared.load(Ordering::Relaxed), 2);
+        assert_eq!(st.cow_copies.load(Ordering::Relaxed), 1);
+        // A holds ceil(10/4) = 3 pages; B's chain is 2 shared + 1 cow
+        // boundary page covering tokens 8..11 -> 4 distinct resident pages
+        assert_eq!(st.total.load(Ordering::Relaxed) - st.free.load(Ordering::Relaxed), 4);
+
+        let served_total: u64 = prompt_a.len() as u64 + prompt_b.len() as u64;
+        let cached = pool.cache_stats().cached_tokens.load(Ordering::Relaxed);
+        assert_eq!(cached, 9, "the share skips 9 of {served_total} prompt tokens");
+        pool.release(slot_a);
+        pool.release(slot_b);
+    }
+
+    #[test]
+    fn page_refcounts_conserve_through_the_pool_lifecycle() {
+        // every cow/clone/release nets to zero leaked pages
+        let pool =
+            SlotPool::sim(0.9, 0.05, 3).with_paging(4, 0).with_prefix_cache(true);
+        let shared: Vec<u32> = (1..=10).collect();
+        let mut held = Vec::new();
+        for i in 0..3u32 {
+            let mut p = shared.clone();
+            p.extend([40 + i, 50 + i]);
+            held.push((pool.try_acquire_for(&p).unwrap().0, p));
+        }
+        assert!(pool.page_stats().shared.load(Ordering::Relaxed) > 0, "burst shares pages");
+        for (mut slot, p) in held {
+            slot.record_prefix(&p, p.len());
+            pool.release(slot);
+        }
+        // all residencies are cached now; drain them via miss evictions —
+        // hold all three slots at once so every cached chain is reclaimed
+        // (a released empty slot would otherwise soak up further misses)
+        let total = pool.page_stats().total.load(Ordering::Relaxed);
+        let mut drained = Vec::new();
+        for _ in 0..3 {
+            let (mut s, _) = pool.try_acquire_for(&[29, 28, 27]).unwrap();
+            s.clear_prefix();
+            drained.push(s);
+        }
+        for s in drained {
+            pool.release(s);
+        }
+        let st = pool.page_stats();
+        assert_eq!(
+            st.free.load(Ordering::Relaxed),
+            total,
+            "all pages returned to the free list — nothing leaked"
+        );
+    }
+
+    #[test]
+    fn eviction_under_pressure_never_reclaims_live_pages() {
+        // 3 slots, tiny explicit arena (8 pages of 4 tokens): a live
+        // checkout's chain survives while cached chains are reclaimed
+        let pool =
+            SlotPool::sim(0.9, 0.05, 3).with_paging(4, 8).with_prefix_cache(true);
+        // A: live (checked out), 16 tokens = 4 pages
+        let prompt_a: Vec<u32> = (101..=116).collect();
+        let (slot_a, _) = pool.try_acquire_for(&prompt_a).unwrap();
+        let live_pages = pool.chain_pages(slot_a.id);
+        assert_eq!(live_pages, 4);
+        // B: cached residency, 12 tokens = 3 pages, then released
+        let prompt_b: Vec<u32> = (201..=212).collect();
+        let (mut slot_b, _) = pool.try_acquire_for(&prompt_b).unwrap();
+        let b_id = slot_b.id;
+        slot_b.record_prefix(&prompt_b, prompt_b.len());
+        pool.release(slot_b);
+        assert_eq!(pool.page_stats().free.load(Ordering::Relaxed), 1);
+
+        // C needs 4 pages: only B's cached chain can yield them
+        let prompt_c: Vec<u32> = (301..=316).collect();
+        let (slot_c, _) = pool.try_acquire_for(&prompt_c).unwrap();
+        assert_eq!(pool.chain_pages(slot_a.id), 4, "live chain untouched");
+        assert_eq!(pool.chain_pages(b_id), 0, "cached chain reclaimed");
+        assert_eq!(pool.chain_pages(slot_c.id), 4);
+        assert!(pool.page_stats().evictions.load(Ordering::Relaxed) >= 3);
+        // B's registration is gone with its pages
+        assert_eq!(pool.peek_reuse(&prompt_b), 0);
+        pool.release(slot_a);
+        pool.release(slot_c);
+    }
+
+    #[test]
+    fn page_sharing_off_reproduces_slot_affinity_reuse() {
+        // the PR-5 baseline the bench compares against: busy residencies
+        // are invisible, only free slots can hit
+        let pool = SlotPool::sim(0.9, 0.05, 2)
+            .with_page_sharing(false)
+            .with_prefix_cache(true);
+        assert!(!pool.sharing_active());
+        let prompt: Vec<u32> = (1..=10).collect();
+        let (slot_a, lease_a) = pool.try_acquire_for(&prompt).unwrap();
+        assert_eq!(lease_a, Lease::default());
+        // identical prompt while the only residency is busy: guaranteed miss
+        let (slot_b, lease_b) = pool.try_acquire_for(&prompt).unwrap();
+        assert_eq!(lease_b, Lease::default(), "no busy-slot sharing without paging");
+        assert_eq!(pool.page_stats().shared_hits.load(Ordering::Relaxed), 0);
+        pool.release(slot_a);
+        pool.release(slot_b);
     }
 }

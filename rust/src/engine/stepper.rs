@@ -60,6 +60,16 @@ use super::request::{EmitClip, FinishStatus, Request, Response};
 use super::server::{finish_response, note_lifecycle, EngineShared, ResponseSink};
 use super::slots::Slot;
 
+/// Pages per chunked-prefill feed (docs/ARCHITECTURE.md §13): a session
+/// whose remaining catch-up exceeds this many pages streams one
+/// page-aligned chunk through the batched executors per iteration
+/// instead of joining a decode round, so one long prompt never stalls
+/// every other session behind a monolithic prefill. The fed rows are
+/// discarded (prefill only populates KV), so outputs are byte-identical
+/// to the monolithic catch-up; chunked iterations are *not* speculation
+/// rounds — no bandit select or reward fires (play-count conservation).
+const PREFILL_CHUNK_PAGES: usize = 8;
+
 /// One in-flight decode held by the step loop: the request, its KV slot,
 /// and the session state [`SpecSession`](crate::spec::SpecSession) would
 /// keep — plus the per-round scratch the phased (draft-batch / verify)
@@ -323,7 +333,7 @@ fn admit(
                 None => None,
             }
         };
-        let Some((req, sink)) = popped else { break };
+        let Some((mut req, sink)) = popped else { break };
         let Some(sink) = sink else {
             // no waiter registered (should not happen) — release the
             // scheduler's in-flight ledger entry
@@ -372,15 +382,29 @@ fn admit(
             sink.send_final(resp);
             continue;
         }
-        // affinity checkout (docs/ARCHITECTURE.md §12): route to the free
-        // slot sharing the longest resident prefix with this prompt. In
-        // continuous mode the resident per-sequence state lives with the
-        // shared batched drafter/verifier keyed by the slot id, so the
-        // reuse length simply seeds both mirrored cursors — the first
-        // catch-up / verification blocks then start at the divergence
-        // point and the executors align their resident worlds to it.
-        let (slot, reuse) =
+        // affinity checkout (docs/ARCHITECTURE.md §12–§13): route to the
+        // slot with the deepest leased residency for this prompt — the
+        // slot's own resident prefix, or (page sharing) another, still
+        // busy slot's prefix pages mapped copy-on-write. In continuous
+        // mode the resident per-sequence state lives with the shared
+        // batched drafter/verifier keyed by the slot id, so the leased
+        // depth simply seeds both mirrored cursors — the first catch-up /
+        // verification blocks then start at the divergence point and the
+        // executors align their resident worlds to it. `lease.shared`
+        // exceeds `lease.local` only when the pool probed the backend as
+        // adoptive (content-addressed KV), exactly when the shared
+        // executors can resume at positions another sequence computed.
+        let (slot, lease) =
             shared.pool.try_acquire_for(&req.prompt).expect("available slot observed above");
+        let resident = lease.shared;
+        // the dispatcher's `cached_hint` was advisory — re-resolve it
+        // against the granted lease and reprice the SJF in-flight ledger
+        // so the retire-time `note_done` releases exactly what is charged
+        if req.cached_hint != resident {
+            let stale = req.sched_cost();
+            req.cached_hint = resident;
+            shared.q.lock().unwrap().sched.reprice(stale, req.sched_cost());
+        }
         let queue_ns = req.arrival.elapsed().as_nanos() as u64;
         let cfg = GenConfig {
             max_new: req.max_new,
@@ -404,9 +428,9 @@ fn admit(
             committed,
             prompt_len,
             rounds: Vec::new(),
-            draft_cur: reuse,
-            target_cur: reuse,
-            cached: reuse,
+            draft_cur: resident,
+            target_cur: resident,
+            cached: resident,
             max_seq,
             done: false,
             failed: None,
@@ -454,9 +478,17 @@ fn run_round(
     shared: &EngineShared,
     stats: &EngineStats,
 ) -> usize {
+    // --- chunked prefill (docs/ARCHITECTURE.md §13): stream one
+    // page-aligned prompt chunk per iteration for sessions still far
+    // from caught up; they skip this iteration's decode round ----------
+    let in_prefill = chunked_prefill(sessions, drafter, verifier, verify_cap, shared, stats);
+
     // --- round begin: termination check + bandit select per session ----
     let mut live: Vec<usize> = Vec::new();
     for (i, s) in sessions.iter_mut().enumerate() {
+        if in_prefill[i] {
+            continue; // still streaming its prompt — no round, no bandit
+        }
         if s.done || s.failed.is_some() {
             continue; // retires next iteration
         }
@@ -486,8 +518,9 @@ fn run_round(
         controllers[s.slot.id].session_start(rng);
         live.push(i);
     }
+    let prefilled = in_prefill.iter().filter(|&&p| p).count();
     if live.is_empty() {
-        return 0;
+        return prefilled;
     }
 
     // --- draft micro-round 0: every session's committed catch-up (the
@@ -674,5 +707,127 @@ fn run_round(
             }
         }
     }
-    live.len()
+    live.len() + prefilled
+}
+
+/// Advance every far-from-caught-up session by one page-aligned prompt
+/// chunk through the batched drafter and verifier, returning a
+/// per-session flag for who prefilled (those sessions skip this
+/// iteration's round). Both mirrored cursors advance together; the
+/// remainder left for the real round's catch-up always keeps the final
+/// committed token (whose signal row seeds the first proposal), so the
+/// round code is untouched and outputs stay byte-identical.
+fn chunked_prefill(
+    sessions: &mut [ActiveSession],
+    drafter: &mut dyn LanguageModel,
+    verifier: &mut dyn LanguageModel,
+    verify_cap: usize,
+    shared: &EngineShared,
+    stats: &EngineStats,
+) -> Vec<bool> {
+    let mut in_prefill = vec![false; sessions.len()];
+    let ps = shared.pool.page_size().max(1);
+    let chunk_tokens = PREFILL_CHUNK_PAGES * ps;
+    // end of one chunk from `cur`: the next page boundary
+    // PREFILL_CHUNK_PAGES pages out (callers clamp to len − 1 so the
+    // final committed token is never consumed by a prefill chunk)
+    let chunk_end = |cur: usize| ((cur / ps) + PREFILL_CHUNK_PAGES) * ps;
+    let chunking: Vec<usize> = sessions
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| {
+            s.failed.is_none()
+                && !s.done
+                && !s.req.cancel.is_cancelled()
+                && !s.req.deadline_expired()
+                && s.committed.len().saturating_sub(1).saturating_sub(s.draft_cur) > chunk_tokens
+        })
+        .map(|(i, _)| i)
+        .collect();
+    if chunking.is_empty() {
+        return in_prefill;
+    }
+    for &i in &chunking {
+        in_prefill[i] = true;
+        debug_assert_eq!(
+            sessions[i].draft_cur, sessions[i].target_cur,
+            "cursors diverge only inside rounds, where catch-up is small"
+        );
+    }
+
+    // one batched draft feed over every chunking session (rows discarded
+    // — this only advances the drafter's resident KV)
+    let t0 = Instant::now();
+    let items: Vec<BatchItem> = chunking
+        .iter()
+        .map(|&i| {
+            let s = &sessions[i];
+            let end = chunk_end(s.draft_cur).min(s.committed.len() - 1);
+            BatchItem {
+                seq: s.slot.id,
+                seed: s.seed,
+                category: s.req.category.clone(),
+                tokens: s.committed[s.draft_cur..end].to_vec(),
+                start: s.draft_cur,
+            }
+        })
+        .collect();
+    let before = drafter.cost();
+    match drafter.draft_batch(&items) {
+        Ok(_) => {}
+        Err(e) => {
+            fail_all(sessions, &chunking, &format!("chunked prefill (draft) failed: {e:#}"));
+            return in_prefill;
+        }
+    }
+    note_draft(stats, drafter.cost(), before, items.len());
+    let dt = t0.elapsed().as_nanos() as u64;
+
+    // the matching verifier feed, in verify-cap slices like a round
+    let cap = if verify_cap == 0 { 1 } else { verify_cap };
+    for chunk in chunking.chunks(cap) {
+        let t = Instant::now();
+        let items: Vec<BatchItem> = chunk
+            .iter()
+            .map(|&i| {
+                let s = &sessions[i];
+                let end = chunk_end(s.target_cur).min(s.committed.len() - 1);
+                BatchItem {
+                    seq: s.slot.id,
+                    seed: s.seed,
+                    category: s.req.category.clone(),
+                    tokens: s.committed[s.target_cur..end].to_vec(),
+                    start: s.target_cur,
+                }
+            })
+            .collect();
+        let before = verifier.cost();
+        match verifier.block_batch(&items) {
+            Ok(_) => {}
+            Err(e) => {
+                fail_all(sessions, chunk, &format!("chunked prefill (verify) failed: {e:#}"));
+                continue;
+            }
+        }
+        let after = verifier.cost();
+        stats.batch.note(
+            chunk.len(),
+            after.rows.saturating_sub(before.rows),
+            after.padded_rows.saturating_sub(before.padded_rows),
+            0,
+        );
+        let vt = t.elapsed().as_nanos() as u64;
+        for &i in chunk {
+            let s = &mut sessions[i];
+            if s.failed.is_some() {
+                continue;
+            }
+            let end = chunk_end(s.draft_cur).min(s.committed.len() - 1);
+            s.draft_cur = end;
+            s.target_cur = end;
+            s.draft_ns += dt;
+            s.verify_ns += vt;
+        }
+    }
+    in_prefill
 }

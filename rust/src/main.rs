@@ -6,6 +6,7 @@
 //!   serve     --port 8077 --pair pair-a --method seq-ucb1 [--sched fcfs|sjf]
 //!             [--workers N] [--slots N] [--backend pjrt|sim] [--continuous]
 //!             [--max-queue N] [--deadline-ms MS] [--prefix-cache]
+//!             [--page-size TOK] [--kv-pages N] [--no-page-sharing]
 //!   exp       --id <table2|table3|table4|table5|fig2|fig3|fig4|fig5|fig6|abl-arms|tune|all>
 //!             [--backend pjrt|sim] [--scale F] [--gamma N]
 //!   selftest  verify the rust engine replays the python golden traces
@@ -140,6 +141,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // --prefix-cache enables cross-request prefix reuse with
         // slot-affinity routing (docs/ARCHITECTURE.md §12); lossless
         prefix_cache: args.bool("prefix-cache"),
+        // paged KV arena knobs (docs/ARCHITECTURE.md §13): --page-size sets
+        // the page granularity in tokens; --kv-pages 0 auto-sizes the arena
+        // so eviction never fires; --no-page-sharing falls back to PR-5
+        // slot-affinity routing (busy-slot residency invisible). All lossless.
+        page_size: args.usize("page-size", tapout::engine::DEFAULT_PAGE_SIZE),
+        kv_pages: args.usize("kv-pages", 0),
+        page_sharing: !args.bool("no-page-sharing"),
     };
     let port = args.usize("port", 8077) as u16;
     let engine = Arc::new(Engine::start(cfg).context("starting engine")?);
@@ -147,7 +155,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!(
         "tapout serving on http://{}  (POST /generate [stream:true for SSE], GET /health, \
          GET /metrics)  backend={} mode={} workers={} slots={} max_queue={} deadline_ms={} \
-         prefix_cache={}",
+         prefix_cache={} page_size={} kv_pages={} page_sharing={}",
         http.addr,
         engine.config.backend.label(),
         engine.config.mode.label(),
@@ -156,6 +164,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         engine.config.max_queue,
         engine.config.default_deadline_ms,
         engine.config.prefix_cache,
+        engine.config.page_size,
+        engine.config.kv_pages,
+        engine.config.page_sharing,
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

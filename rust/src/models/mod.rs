@@ -10,4 +10,4 @@ pub mod traits;
 pub use manifest::{Manifest, ModelSpec, PromptEntry};
 pub use pjrt::{ModelAssets, PjrtBatchVerifier, PjrtModel};
 pub use sim::{sim_bucket, sim_decode, sim_encode, sim_pair, Scenario, SimModel};
-pub use traits::{BatchItem, LanguageModel, ModelCost};
+pub use traits::{BatchItem, LanguageModel, ModelCost, PageView};

@@ -204,6 +204,23 @@ impl LanguageModel for PjrtModel {
         self.cur
     }
 
+    /// Paged-KV capability (docs/ARCHITECTURE.md §13): **non-adoptive**.
+    /// A PJRT world is one opaque device buffer per model instance —
+    /// position `p`'s KV physically lives in *this* instance's buffer
+    /// and cannot alias a page another slot's instance computed, so the
+    /// engine's page index never offers a PJRT slot a cross-slot hit.
+    /// The pool's page bookkeeping still tracks residency (the gauges
+    /// describe what a paged device layout *would* hold), but reuse
+    /// falls back to the same-slot contiguous-cursor path above:
+    /// `adopt_pages`'s default ignores `shared` and retains `local`.
+    fn page_view(&self) -> crate::models::traits::PageView {
+        crate::models::traits::PageView {
+            adoptive: false,
+            resident: self.cur,
+            adopted_tokens: 0,
+        }
+    }
+
     fn block(&mut self, tokens: &[u32], start: usize) -> Result<Vec<TokenSignals>> {
         anyhow::ensure!(start == self.cur, "non-contiguous block: start {start} cur {}", self.cur);
         anyhow::ensure!(!tokens.is_empty(), "empty block");

@@ -19,7 +19,7 @@
 //! 32-way distribution so every invariant (top1 ≥ top2, margin, entropy
 //! consistency) holds exactly.
 
-use crate::models::traits::{BatchItem, LanguageModel, ModelCost};
+use crate::models::traits::{BatchItem, LanguageModel, ModelCost, PageView};
 use crate::signals::TokenSignals;
 
 /// Size of the simulator's synthetic vocabulary (ids 0..SIM_VOCAB; 0-2 are
@@ -132,6 +132,9 @@ pub struct SimModel {
     cost: ModelCost,
     rel_cost: f64,
     name: String,
+    /// cumulative prompt tokens adopted via shared KV pages
+    /// (`LanguageModel::adopt_pages`, docs/ARCHITECTURE.md §13)
+    adopted: u64,
 }
 
 impl SimModel {
@@ -144,6 +147,7 @@ impl SimModel {
             cost: ModelCost::default(),
             rel_cost: 1.0,
             name: "sim-target".into(),
+            adopted: 0,
         }
     }
 
@@ -157,6 +161,7 @@ impl SimModel {
             cost: ModelCost::default(),
             rel_cost,
             name: format!("sim-draft(q={quality})"),
+            adopted: 0,
         }
     }
 
@@ -265,6 +270,34 @@ impl LanguageModel for SimModel {
     fn retain_prefix(&mut self, seed: u64, category: &str, keep: usize) -> usize {
         self.scenario = Scenario::new(seed, category);
         self.cur = self.cur.min(keep);
+        self.cur
+    }
+
+    /// The simulator is adoptive (docs/ARCHITECTURE.md §13): its rows
+    /// are pure functions of (scenario, position), so KV is
+    /// content-addressed and a token-matching prefix computed under a
+    /// *different* slot is exactly as valid as one this model computed
+    /// itself.
+    fn page_view(&self) -> PageView {
+        PageView { adoptive: true, resident: self.cur, adopted_tokens: self.adopted }
+    }
+
+    /// Adopt shared pages on the simulator: reseat the scenario and set
+    /// the cursor to the full `shared` residency — which may move the
+    /// cursor *forward* past positions this model never computed. Valid
+    /// for the same reason `retain_prefix` is: validity is token-content
+    /// equality, not compute history, and every row a decode consumes is
+    /// computed fresh (the engine re-feeds the last prompt token, so
+    /// `shared < prompt_len` always leaves the seeding row to be
+    /// produced under the new scenario).
+    fn adopt_pages(&mut self, seed: u64, category: &str, local: usize, shared: usize) -> usize {
+        debug_assert!(local <= shared, "shared residency covers the local prefix");
+        self.scenario = Scenario::new(seed, category);
+        // positions beyond `local` are vouched by shared pages, not by
+        // anything this model computed — that difference is what the
+        // adopted-tokens gauge measures
+        self.adopted += shared.saturating_sub(local) as u64;
+        self.cur = shared;
         self.cur
     }
 

@@ -17,6 +17,33 @@
 
 use crate::signals::TokenSignals;
 
+/// A backend's view of its paged-KV capabilities
+/// (docs/ARCHITECTURE.md §13), read by the engine's
+/// [`SlotPool`](../engine/struct.SlotPool.html) when deciding whether a
+/// checkout may adopt *another* slot's resident pages.
+///
+/// The page table itself (chains, refcounts, copy-on-write) lives in the
+/// engine's `PagePool`; what a backend declares here is whether its
+/// sequence state is **content-addressed** — i.e. whether position `p`'s
+/// KV depends only on the token ids at positions `≤ p` (then mapping a
+/// matching prefix computed under a different slot id is exact) — or
+/// **slot-resident** (per-slot device worlds that cannot alias, so only
+/// same-slot contiguous-cursor reuse is sound).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PageView {
+    /// can this model adopt a token-matching prefix that a *different*
+    /// slot computed? The simulator can (its signal rows are pure
+    /// functions of (scenario, position), so validity is token-content
+    /// equality, not compute history); PJRT models cannot (per-slot
+    /// resident worlds) and fall back to their contiguous cursor.
+    pub adoptive: bool,
+    /// resident positions (== the cursor for contiguous backends)
+    pub resident: usize,
+    /// cumulative prompt tokens adopted from shared pages (0 for
+    /// non-adoptive backends)
+    pub adopted_tokens: u64,
+}
+
 /// Cumulative compute counters (the analytic cost model of DESIGN.md §3).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct ModelCost {
@@ -95,6 +122,35 @@ pub trait LanguageModel: Send {
         self.reset();
         self.begin_request(seed, category);
         0
+    }
+
+    /// This backend's paged-KV capability view (docs/ARCHITECTURE.md
+    /// §13). The default declares a non-adoptive contiguous-cursor
+    /// backend: only same-slot prefix reuse is sound.
+    fn page_view(&self) -> PageView {
+        PageView { adoptive: false, resident: self.cur(), adopted_tokens: 0 }
+    }
+
+    /// Rebind per-request context adopting shared KV pages: `local`
+    /// positions of *this slot's own* resident state match the new
+    /// prompt (the same guarantee as
+    /// [`retain_prefix`](LanguageModel::retain_prefix)), and `shared ≥
+    /// local` positions are covered by token-matching pages the engine's
+    /// page index mapped in — possibly computed under a different slot.
+    /// Returns the positions actually resident afterwards.
+    ///
+    /// **Contract.** The caller guarantees the prompt matches the shared
+    /// pages token-for-token over the first `shared` positions and this
+    /// slot's own state over the first `local` positions, with
+    /// `shared < prompt_len` (the last prompt token is always re-fed).
+    /// Adoptive backends ([`PageView::adoptive`]) take the full `shared`
+    /// residency; the default falls back to the same-slot
+    /// contiguous-cursor amount — `retain_prefix(seed, category,
+    /// local)` — so cross-slot sharing silently degrades to PR-5
+    /// slot-affinity reuse rather than corrupting outputs.
+    fn adopt_pages(&mut self, seed: u64, category: &str, local: usize, shared: usize) -> usize {
+        let _ = shared;
+        self.retain_prefix(seed, category, local)
     }
 
     /// Feed `tokens` at absolute position `start`, which must equal

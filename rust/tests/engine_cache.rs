@@ -17,7 +17,12 @@
 //!     (cached prefill never enters reward accounting);
 //!   * the `engine.cache` gauges (lookups/hits/ratio/evictions/served)
 //!     observe what actually happened, and `SpecSession::resume` is
-//!     byte-identical to a fresh decode at the session level.
+//!     byte-identical to a fresh decode at the session level;
+//!   * the paged KV arena (docs/ARCHITECTURE.md §13) shares prompt pages
+//!     across **busy** slots copy-on-write — a shared-prefix burst wider
+//!     than the slot count still hits, the `engine.pages` gauges observe
+//!     the sharing, and outputs stay byte-identical with page sharing
+//!     on, off, and under an explicit (tight) arena in both modes.
 
 use std::sync::atomic::Ordering;
 use std::time::Duration;
@@ -274,6 +279,103 @@ fn cache_gauges_observe_hits_evictions_and_per_slot_served() {
     }
     let ev = eng.cache_stats().evictions.load(Ordering::Relaxed);
     assert!(ev >= 2, "unmatched recorded prefixes must be evicted (got {ev})");
+    eng.shutdown();
+}
+
+#[test]
+fn busy_slot_burst_shares_pages_and_reports_engine_pages_gauges() {
+    // 16 shared-prefix requests through 2 continuous slots: at any moment
+    // at most 2 sessions are live, so most admissions find the matching
+    // registration on a *busy* slot — under slot-affinity (PR 5) those
+    // were misses; under the paged arena they adopt the shared pages
+    // copy-on-write. Outputs must not move by a byte.
+    let prompts = shared_prefix_prompts(16);
+    let (reference, seq) = run_burst(config(EngineMode::Workers, 1, 1, false), &prompts);
+    seq.shutdown();
+
+    let (out, eng) = run_burst(config(EngineMode::Continuous, 0, 2, true), &prompts);
+    assert_eq!(out, reference, "busy-slot page sharing changed the output");
+    for (i, o) in out.iter().enumerate() {
+        assert_eq!(o, &oracle_tokens(&prompts[i], MAX_NEW), "request {i} vs oracle");
+    }
+
+    let p = eng.page_stats();
+    assert!(p.enabled, "paging gauges ride the prefix-cache switch");
+    let shared_hits = p.shared_hits.load(Ordering::Relaxed);
+    let adopted = p.adopted_tokens.load(Ordering::Relaxed);
+    assert!(
+        shared_hits > 0,
+        "a burst wider than the slot count must hit busy-slot registrations"
+    );
+    assert!(adopted > 0, "shared hits must adopt prompt tokens");
+    assert!(
+        p.cow_copies.load(Ordering::Relaxed) > 0,
+        "unaligned prefix boundaries must be copied, not shared"
+    );
+    let total = p.total.load(Ordering::Relaxed);
+    let free = p.free.load(Ordering::Relaxed);
+    assert!(total > 0 && free <= total, "arena gauges must be coherent");
+    assert!(p.peak_resident.load(Ordering::Relaxed) <= total);
+    // shared hits are regular cache hits too: the tokens they skip are
+    // accounted once, in the same cached_tokens gauge
+    let (lookups, hits, cached) = cache_counts(&eng);
+    assert_eq!(lookups, 16);
+    assert!(hits >= shared_hits, "every shared hit is a cache hit");
+    assert!(cached >= adopted, "adopted tokens are cached tokens");
+
+    // /metrics surfaces the same gauges under engine.pages
+    let j = eng.metrics_json();
+    let pages = j.get("engine").unwrap().get("pages").expect("engine.pages object");
+    assert!(pages.get("enabled").unwrap().as_bool().unwrap());
+    assert_eq!(pages.get("total").unwrap().as_usize().unwrap() as u64, total);
+    assert_eq!(pages.get("shared_hits").unwrap().as_usize().unwrap() as u64, shared_hits);
+    assert!(pages.get("shared_hit_rate").unwrap().as_f64().unwrap() > 0.0);
+    assert!(pages.get("cow_copies").is_some() && pages.get("evictions").is_some());
+    eng.shutdown();
+}
+
+#[test]
+fn page_sharing_on_off_and_tight_arena_are_byte_identical_in_both_modes() {
+    // the paging knobs are performance-only: page sharing off (the PR-5
+    // slot-affinity baseline), a non-default page size, and an explicit
+    // arena small enough to force page-LRU eviction all reproduce the
+    // cache-off reference exactly, in both execution modes
+    let prompts = shared_prefix_prompts(12);
+    let (reference, seq) = run_burst(config(EngineMode::Workers, 1, 1, false), &prompts);
+    seq.shutdown();
+
+    for mode in [EngineMode::Workers, EngineMode::Continuous] {
+        let workers = if mode == EngineMode::Workers { 4 } else { 0 };
+        for sharing in [false, true] {
+            let mut cfg = config(mode, workers, 4, true);
+            cfg.page_size = 8;
+            cfg.page_sharing = sharing;
+            let (out, eng) = run_burst(cfg, &prompts);
+            assert_eq!(out, reference, "{mode:?} sharing={sharing}: output diverged");
+            if !sharing {
+                assert_eq!(
+                    eng.page_stats().shared_hits.load(Ordering::Relaxed),
+                    0,
+                    "{mode:?}: sharing off must never adopt busy-slot pages"
+                );
+            }
+            eng.shutdown();
+        }
+    }
+
+    // tight arena: ~42 pages per live chain at page_size 8, so 96 pages
+    // across 2 slots leaves little slack — cached chains get evicted
+    // under pressure and the bookkeeping saturates, never the decode
+    let mut cfg = config(EngineMode::Continuous, 0, 2, true);
+    cfg.page_size = 8;
+    cfg.kv_pages = 96;
+    let (out, eng) = run_burst(cfg, &prompts);
+    assert_eq!(out, reference, "tight-arena output diverged");
+    assert_eq!(
+        eng.page_stats().total.load(Ordering::Relaxed),
+        96,
+        "an explicit --kv-pages arena must be honored, not auto-sized"
+    );
     eng.shutdown();
 }
 

@@ -13,7 +13,10 @@
 //!   * shared-bandit play-count conservation holds across execution
 //!     modes: one select + one update per round in both engines;
 //!   * the `engine.step` and `engine.draft` gauges observe the batching
-//!     that happened (draft occupancy > 1 at slots ≥ 4 under load).
+//!     that happened (draft occupancy > 1 at slots ≥ 4 under load);
+//!   * a long prompt streams through prefill in page-aligned chunks
+//!     (docs/ARCHITECTURE.md §13) without stalling a concurrent short
+//!     request, and its output stays byte-identical to the oracle.
 
 use std::time::Duration;
 
@@ -234,6 +237,47 @@ fn play_count_conservation_matches_across_modes() {
             "request {i}: Workers and Continuous outputs diverged"
         );
     }
+}
+
+#[test]
+fn long_prompt_streams_prefill_in_chunks_and_stays_byte_identical() {
+    // a ~640-token prompt exceeds the chunked-prefill threshold
+    // (PREFILL_CHUNK_PAGES × page_size = 128 tokens of catch-up), so its
+    // prefill is spread over several iterations of the step loop instead
+    // of one monolithic forward — the short request admitted alongside
+    // it keeps decoding in those iterations, and both outputs must match
+    // the oracle byte-for-byte (discarded prefill rows only populate KV)
+    let long = format!(
+        "{} now summarize the whole document in one line",
+        "a long background document sentence with filler. ".repeat(12)
+    );
+    assert!(sim_encode(&long).len() > 512, "prompt must exceed several chunks");
+    let short = "short concurrent request while the long one prefills";
+
+    let eng = Engine::start(config(EngineMode::Continuous, 0, 2)).unwrap();
+    let rx_long = eng.submit(&long, MAX_NEW);
+    let rx_short = eng.submit(short, MAX_NEW);
+    let rl = rx_long.recv_timeout(TIMEOUT).unwrap();
+    let rs = rx_short.recv_timeout(TIMEOUT).unwrap();
+    assert!(rl.is_ok(), "{:?}", rl.error);
+    assert!(rs.is_ok(), "{:?}", rs.error);
+    assert_eq!(
+        rl.result.new_tokens(),
+        &oracle_tokens(&long, MAX_NEW)[..],
+        "chunked prefill changed the long request's output"
+    );
+    assert_eq!(
+        rs.result.new_tokens(),
+        &oracle_tokens(short, MAX_NEW)[..],
+        "a concurrent chunked prefill perturbed the short request"
+    );
+
+    // chunk iterations are not speculative rounds: play-count
+    // conservation still holds (no select/reward during prefill)
+    let rounds = rl.result.rounds.len() as u64 + rs.result.rounds.len() as u64;
+    assert_eq!(eng.bandit_sessions(), rounds);
+    assert_eq!(eng.bandit_updates(), rounds);
+    eng.shutdown();
 }
 
 #[test]
