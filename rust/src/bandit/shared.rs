@@ -296,6 +296,26 @@ impl DecodeControl for SessionController {
         self.updates.fetch_add(1, Ordering::Relaxed);
     }
 
+    fn on_abort(&mut self) {
+        match &mut self.mode {
+            Mode::Local(_) => {}
+            Mode::Seq { shared, current, .. } => {
+                // the aborted round accepted nothing: a zero reward keeps
+                // Σ arm counts == updates == sessions conserved under
+                // faults, and UCB/TS remain sound over bounded rewards
+                shared.bandit.lock().unwrap().update(*current, 0.0);
+            }
+            Mode::Token { shared, chosen, .. } => {
+                let mut bandits = shared.bandits.lock().unwrap();
+                for (i, &arm) in chosen.iter().enumerate() {
+                    bandits[i].update(arm, 0.0);
+                }
+                chosen.clear();
+            }
+        }
+        self.updates.fetch_add(1, Ordering::Relaxed);
+    }
+
     fn reset_request(&mut self) {
         match &mut self.mode {
             Mode::Local(c) => c.reset_request(),
@@ -410,6 +430,47 @@ mod tests {
         session.on_verify(2, 3);
         assert_eq!(ctrl.sessions(), 1);
         assert_eq!(ctrl.updates(), 1);
+    }
+
+    #[test]
+    fn aborted_rounds_keep_counts_conserved() {
+        // a round that errors after session_start but before on_verify is
+        // absorbed as a zero-reward play (DecodeControl::on_abort) — the
+        // conservation invariant sessions == updates == Σ counts survives
+        let ctrl = SharedController::new(&spec("seq-ucb1"), 128);
+        let mut session = ctrl.session().unwrap();
+        let mut rng = Rng::new(9);
+        for i in 0..20 {
+            session.session_start(&mut rng);
+            if i % 3 == 0 {
+                session.on_abort();
+            } else {
+                session.on_verify(3, 6);
+            }
+        }
+        assert_eq!(ctrl.sessions(), 20);
+        assert_eq!(ctrl.updates(), 20);
+        assert_eq!(ctrl.arm_counts().unwrap().iter().sum::<u64>(), 20);
+
+        // token granularity: every chosen position's play lands exactly once
+        let ctrl = SharedController::new(&spec("token-ucb1"), 8);
+        let mut session = ctrl.session().unwrap();
+        let sig = TokenSignals::from_logits(&[5.0, 0.0, 0.0, 0.0]);
+        let mut plays = 0u64;
+        for i in 0..10 {
+            session.session_start(&mut rng);
+            for idx in 0..3 {
+                let _ = session.should_stop(&sig, idx, &mut rng);
+            }
+            plays += 3;
+            if i % 2 == 0 {
+                session.on_abort();
+            } else {
+                session.on_verify(1, 3);
+            }
+        }
+        assert_eq!(ctrl.arm_counts().unwrap().iter().sum::<u64>(), plays);
+        assert_eq!(ctrl.sessions(), ctrl.updates());
     }
 
     #[test]

@@ -286,6 +286,12 @@ fn batcher_loop(
                 }
             }
             Err(e) => {
+                // reseat the verifier before the next batch: a failed
+                // forward may leave the device wedged (sticky-broken in
+                // fault injection); batch rows are a pure function of the
+                // items, so dropping verifier-local state is safe — one
+                // bad forward must cost one batch, not the whole engine
+                verifier.reset();
                 let msg = format!("batched verification failed: {e:#}");
                 for job in jobs {
                     let _ = job.reply.send(Err(msg.clone()));

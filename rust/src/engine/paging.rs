@@ -269,14 +269,49 @@ impl PagePool {
     }
 
     /// Σ refcounts == Σ chain lengths and free list complements resident
-    /// pages — the conservation invariant the refcount tests pin.
-    #[cfg(test)]
-    fn check_conservation(&self) {
+    /// pages — the conservation invariant the refcount tests and the sim
+    /// harness's shadow oracle check after every event. `None` = healthy;
+    /// `Some(msg)` describes the first violated equality.
+    pub fn conservation_error(&self) -> Option<String> {
         let total_refs: u64 = self.refs.iter().map(|&r| r as u64).sum();
         let total_chain: u64 = self.chains.iter().map(|c| c.len() as u64).sum();
-        assert_eq!(total_refs, total_chain, "every ref is a chain membership");
+        if total_refs != total_chain {
+            return Some(format!(
+                "page refcount leak: Σ refs {total_refs} != Σ chain memberships {total_chain}"
+            ));
+        }
         let free_by_refs = self.refs.iter().filter(|&&r| r == 0).count();
-        assert_eq!(free_by_refs, self.free.len(), "free list matches refcounts");
+        if free_by_refs != self.free.len() {
+            return Some(format!(
+                "free-list drift: {} zero-ref pages but {} free-listed",
+                free_by_refs,
+                self.free.len()
+            ));
+        }
+        if self.peak_resident > self.total_pages() {
+            return Some(format!(
+                "peak_resident {} exceeds the arena ({} pages)",
+                self.peak_resident,
+                self.total_pages()
+            ));
+        }
+        None
+    }
+
+    #[cfg(test)]
+    fn check_conservation(&self) {
+        if let Some(e) = self.conservation_error() {
+            panic!("{e}");
+        }
+    }
+
+    /// Test-only sabotage hook for the sim harness (docs/TESTING.md): leak
+    /// one free page from the accounting so [`PagePool::conservation_error`]
+    /// trips. Exists so the oracle+shrinker pipeline itself is testable —
+    /// never called outside deliberate violation-injection runs.
+    #[doc(hidden)]
+    pub fn debug_leak_page(&mut self) {
+        self.free.pop();
     }
 }
 

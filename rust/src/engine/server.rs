@@ -54,8 +54,8 @@ use anyhow::{Context, Result};
 
 use crate::bandit::{SessionController, SharedController};
 use crate::models::{
-    sim_decode, sim_encode, LanguageModel, Manifest, ModelAssets, PjrtBatchVerifier, Scenario,
-    SimModel,
+    sim_decode, sim_encode, FaultyModel, LanguageModel, Manifest, ModelAssets, PjrtBatchVerifier,
+    Scenario, SimModel,
 };
 use crate::runtime::Runtime;
 use crate::spec::{GenConfig, MethodSpec, SpecSession, StepOutcome, BOS};
@@ -187,6 +187,12 @@ pub struct EngineConfig {
     /// matching slot to free. Lossless, on by default; disabling it
     /// restores PR-5 slot-affinity-only reuse (the bench baseline).
     pub page_sharing: bool,
+    /// fault injection at the `LanguageModel` boundary (sim backend only;
+    /// docs/TESTING.md): when active, every slot model plus the batcher's
+    /// verifier and the stepper's drafter are wrapped in
+    /// `models::FaultyModel` with decorrelated fault streams. Default:
+    /// inactive (zero rates) — production configs are untouched.
+    pub faults: crate::models::FaultPlan,
 }
 
 impl Default for EngineConfig {
@@ -208,6 +214,7 @@ impl Default for EngineConfig {
             page_size: super::slots::DEFAULT_PAGE_SIZE,
             kv_pages: 0,
             page_sharing: true,
+            faults: crate::models::FaultPlan::default(),
         }
     }
 }
@@ -385,15 +392,39 @@ impl Engine {
                     drafter,
                 )
             }
-            BackendKind::Sim { quality, rel_cost } => (
-                SlotPool::sim(quality, rel_cost, n_slots),
-                Codec::Sim,
-                None,
+            BackendKind::Sim { quality, rel_cost } => {
+                let sc = Scenario::new(0, "qa");
                 // the sim models are stateless per position, so one
                 // verifier/drafter serves every sequence's batch items
-                Box::new(SimModel::target(Scenario::new(0, "qa"))),
-                Box::new(SimModel::draft(Scenario::new(0, "qa"), quality, rel_cost)),
-            ),
+                let mut verifier: Box<dyn LanguageModel> = Box::new(SimModel::target(sc));
+                let mut drafter: Box<dyn LanguageModel> =
+                    Box::new(SimModel::draft(sc, quality, rel_cost));
+                let pool = if config.faults.is_active() {
+                    // fault injection (docs/TESTING.md): wrap every model
+                    // that crosses the LanguageModel boundary, each with a
+                    // decorrelated fault stream forked off the plan seed
+                    let pairs = (0..n_slots)
+                        .map(|i| {
+                            (
+                                FaultyModel::wrap(
+                                    Box::new(SimModel::draft(sc, quality, rel_cost)),
+                                    config.faults.fork(2 * i as u64),
+                                ),
+                                FaultyModel::wrap(
+                                    Box::new(SimModel::target(sc)),
+                                    config.faults.fork(2 * i as u64 + 1),
+                                ),
+                            )
+                        })
+                        .collect();
+                    verifier = FaultyModel::wrap(verifier, config.faults.fork(0x7E51F));
+                    drafter = FaultyModel::wrap(drafter, config.faults.fork(0xD2AF7));
+                    SlotPool::from_pairs(pairs)
+                } else {
+                    SlotPool::sim(quality, rel_cost, n_slots)
+                };
+                (pool, Codec::Sim, None, verifier, drafter)
+            }
         };
 
         // prefix-reuse routing is a pool property: with it on, checkout

@@ -284,6 +284,20 @@ impl SlotPool {
         &self.pages
     }
 
+    /// Passthrough to [`PagePool::conservation_error`] on the pool's page
+    /// arena — the sim harness's shadow oracle polls this after every event.
+    pub fn page_conservation_error(&self) -> Option<String> {
+        self.inner.lock().unwrap().pages.conservation_error()
+    }
+
+    /// Run `f` against the page arena. Test-only escape hatch so the sim
+    /// harness can reach [`PagePool::debug_leak_page`] for deliberate
+    /// violation-injection runs.
+    #[doc(hidden)]
+    pub fn with_pages_mut<R>(&self, f: impl FnOnce(&mut PagePool) -> R) -> R {
+        f(&mut self.inner.lock().unwrap().pages)
+    }
+
     /// Pages currently mapped by slot `slot`'s chain (tests/diagnostics).
     pub fn chain_pages(&self, slot: usize) -> usize {
         self.inner.lock().unwrap().pages.chain_pages(slot)

@@ -546,6 +546,15 @@ fn run_round(
     let rows = match drafter.draft_batch(&items) {
         Ok(r) => r,
         Err(e) => {
+            // every live session's play was opened by session_start above
+            // and will never see on_verify — absorb the aborts so bandit
+            // counts stay conserved (DecodeControl::on_abort). Reseat the
+            // shared drafter so a wedged device (sticky-broken under
+            // fault injection) costs one iteration, not the engine.
+            drafter.reset();
+            for &i in &live {
+                controllers[sessions[i].slot.id].on_abort();
+            }
             fail_all(sessions, &live, &format!("batched draft failed: {e:#}"));
             return live.len();
         }
@@ -591,7 +600,12 @@ fn run_round(
             Ok(r) => r,
             Err(e) => {
                 // only this micro-round's participants fail; sessions
-                // that already stopped drafting still verify
+                // that already stopped drafting still verify. Reseat the
+                // shared drafter (see the catch-up error arm above).
+                drafter.reset();
+                for &i in &drafting {
+                    controllers[sessions[i].slot.id].on_abort();
+                }
                 fail_all(sessions, &drafting, &format!("batched draft failed: {e:#}"));
                 break;
             }
@@ -651,6 +665,13 @@ fn run_round(
         let vrows = match verifier.block_batch(&items) {
             Ok(r) => r,
             Err(e) => {
+                // these sessions' plays never see on_verify — conserve.
+                // Reseat the shared verifier so a wedged device fails one
+                // chunk, not every future iteration.
+                verifier.reset();
+                for &i in chunk {
+                    controllers[sessions[i].slot.id].on_abort();
+                }
                 fail_all(sessions, chunk, &format!("batched verification failed: {e:#}"));
                 continue;
             }
@@ -776,6 +797,9 @@ fn chunked_prefill(
     match drafter.draft_batch(&items) {
         Ok(_) => {}
         Err(e) => {
+            // no bandit play is open during prefill (rounds start later),
+            // so only reseat the shared drafter and fail the chunkers
+            drafter.reset();
             fail_all(sessions, &chunking, &format!("chunked prefill (draft) failed: {e:#}"));
             return in_prefill;
         }
@@ -805,6 +829,7 @@ fn chunked_prefill(
         match verifier.block_batch(&items) {
             Ok(_) => {}
             Err(e) => {
+                verifier.reset();
                 fail_all(sessions, chunk, &format!("chunked prefill (verify) failed: {e:#}"));
                 continue;
             }

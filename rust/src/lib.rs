@@ -35,6 +35,7 @@ pub mod policies;
 #[allow(missing_docs)]
 pub mod runtime;
 pub mod signals;
+pub mod sim_harness;
 pub mod spec;
 #[allow(missing_docs)]
 pub mod util;

@@ -9,6 +9,10 @@
 //!             [--page-size TOK] [--kv-pages N] [--no-page-sharing]
 //!   exp       --id <table2|table3|table4|table5|fig2|fig3|fig4|fig5|fig6|abl-arms|tune|all>
 //!             [--backend pjrt|sim] [--scale F] [--gamma N]
+//!   simulate  --seed N --steps M [--faults] [--sabotage] [--mode workers|continuous]
+//!             [--trace] [--replay plan.json] [--out shrunk.json]
+//!             deterministic engine simulation against the shadow-state oracle;
+//!             on violation the plan is shrunk and written as a replay fixture
 //!   selftest  verify the rust engine replays the python golden traces
 //!             token-for-token (artifacts/golden/pair-a.json)
 
@@ -33,10 +37,11 @@ fn main() {
         Some("generate") => cmd_generate(&args),
         Some("serve") => cmd_serve(&args),
         Some("exp") => cmd_exp(&args),
+        Some("simulate") => cmd_simulate(&args),
         Some("selftest") => cmd_selftest(&args),
         _ => {
             eprintln!(
-                "usage: tapout <generate|serve|exp|selftest> [flags]\n\
+                "usage: tapout <generate|serve|exp|simulate|selftest> [flags]\n\
                  see rust/src/main.rs header for flags"
             );
             std::process::exit(2);
@@ -183,6 +188,85 @@ fn cmd_exp(args: &Args) -> Result<()> {
     };
     let id = args.str("id", "all");
     run_experiment(&id, opts)
+}
+
+/// Deterministic engine simulation (docs/TESTING.md): generate (or replay)
+/// a seeded workload plan, run it through the single-threaded simulator
+/// against the shadow-state oracle, and on violation shrink the plan to a
+/// 1-minimal replay fixture. Exit is nonzero iff the oracle fired, so CI
+/// can fan out over fresh seeds and keep the shrunk trace as an artifact.
+fn cmd_simulate(args: &Args) -> Result<()> {
+    use tapout::engine::FinishStatus;
+    use tapout::sim_harness::{run_plan, shrink, SimPlan};
+
+    let mut plan = match args.opt("replay") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading plan {path}"))?;
+            let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("plan json: {e}"))?;
+            SimPlan::from_json(&j).map_err(|e| anyhow::anyhow!(e))?
+        }
+        None => SimPlan::generate(args.usize("seed", 0) as u64, args.usize("steps", 60)),
+    };
+    if args.bool("faults") {
+        plan.faults = true;
+    }
+    if args.bool("sabotage") {
+        plan.sabotage = true;
+    }
+    if let Some(mode) = args.opt("mode") {
+        anyhow::ensure!(
+            mode == "workers" || mode == "continuous",
+            "--mode must be workers or continuous"
+        );
+        plan.mode = mode.to_string();
+    }
+
+    let report = run_plan(&plan);
+    if args.bool("trace") {
+        for line in &report.trace {
+            println!("{line}");
+        }
+    }
+    println!(
+        "sim seed={} mode={} method={} slots={} cache={} pages={} faults={} ops={} \
+         events={} clock={}ns hash={:016x}",
+        plan.seed,
+        plan.mode,
+        plan.method,
+        plan.slots,
+        plan.cache,
+        plan.kv_pages,
+        plan.faults,
+        plan.ops.len(),
+        report.trace.len(),
+        report.clock_ns,
+        report.trace_hash,
+    );
+    println!(
+        "replies: {} done, {} failed, {} cancelled, {} expired, {} rejected",
+        report.count(FinishStatus::Done),
+        report.count(FinishStatus::Failed),
+        report.count(FinishStatus::Cancelled),
+        report.count(FinishStatus::Expired),
+        report.count(FinishStatus::Rejected),
+    );
+    match report.violation {
+        None => {
+            println!("oracle: all invariants held");
+            Ok(())
+        }
+        Some(v) => {
+            eprintln!("oracle violation at event {}: {}", v.event, v.what);
+            let min = shrink(&plan);
+            eprintln!("shrunk {} ops -> {} ops", plan.ops.len(), min.ops.len());
+            let out = args.str("out", "sim-shrunk-plan.json");
+            std::fs::write(&out, min.to_json().render())
+                .with_context(|| format!("writing {out}"))?;
+            eprintln!("replay fixture written: tapout simulate --replay {out}");
+            anyhow::bail!("simulator oracle violation (seed {})", plan.seed)
+        }
+    }
 }
 
 /// Replays the python reference decoder's golden traces through the rust

@@ -1,0 +1,370 @@
+//! Fault injection at the [`LanguageModel`] boundary.
+//!
+//! [`FaultyModel`] wraps any backend and injects three failure shapes the
+//! serving engine must survive (docs/TESTING.md):
+//!
+//!   * **errors** — a forward (`block` / `block_batch` / `draft_batch`)
+//!     returns `Err` instead of rows, exactly like a device fault or an
+//!     executor OOM;
+//!   * **slow steps** — a forward reports extra virtual latency through
+//!     [`FaultStats::delay_ns`] (the deterministic simulator's fake clock
+//!     consumes it; real time is never slept, so tests stay fast);
+//!   * **crashes** — a panic-equivalent: the model goes *sticky-broken*
+//!     and every forward fails until the engine reseats it for a new
+//!     request (`begin_request` / `reset` / `retain_prefix` /
+//!     `adopt_pages` clear the condition, mirroring a process restart
+//!     that reloads weights but loses sequence state).
+//!
+//! Reuse-path faults (`retain_prefix` / `adopt_pages`) degrade to a fresh
+//! start — the wrapper reseats the inner model and reports zero resident
+//! positions. That is always *lossless*: the engine takes the min of the
+//! draft/target residencies and rolls cursors back, so a lost lease only
+//! costs recomputed prefill rows, never wrong tokens.
+//!
+//! All fault decisions come from the plan's own deterministic RNG stream
+//! (`util::Rng`), keyed per call — two runs over the same call sequence
+//! inject byte-identical faults, which is what lets the sim harness
+//! replay and shrink failing seeds (sim_harness/).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::signals::TokenSignals;
+use crate::util::Rng;
+
+use super::traits::{BatchItem, LanguageModel, ModelCost, PageView};
+
+/// Deterministic fault-injection plan for one [`FaultyModel`] (and, via
+/// `EngineConfig::faults`, for every sim-backend model an engine boots).
+/// `Default` is fault-free; [`FaultPlan::is_active`] gates all wrapping.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// RNG seed for the fault stream (forked per wrapped model)
+    pub seed: u64,
+    /// probability a forward returns `Err` (transient device fault)
+    pub error_rate: f64,
+    /// probability a forward is slow (virtual delay, no real sleep)
+    pub slow_rate: f64,
+    /// virtual latency a slow forward adds, in nanoseconds
+    pub slow_ns: u64,
+    /// probability a forward *crashes* the model (sticky-broken until the
+    /// next request reseats it — the panic-equivalent failure)
+    pub crash_rate: f64,
+    /// probability a `retain_prefix`/`adopt_pages` lease is lost (the
+    /// wrapper degrades to a fresh start; lossless by construction)
+    pub reuse_loss_rate: f64,
+    /// hard cap on injected errors + crashes (0 = unlimited); bounds how
+    /// much of a workload a fault plan can kill so liveness stays testable
+    pub max_faults: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0,
+            error_rate: 0.0,
+            slow_rate: 0.0,
+            slow_ns: 50_000,
+            crash_rate: 0.0,
+            reuse_loss_rate: 0.0,
+            max_faults: 0,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// A moderate all-shapes plan for tests: ~5% errors, ~10% slow steps,
+    /// ~1% crashes, ~10% lost leases, capped at `max_faults` kills.
+    pub fn moderate(seed: u64, max_faults: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            error_rate: 0.05,
+            slow_rate: 0.10,
+            slow_ns: 50_000,
+            crash_rate: 0.01,
+            reuse_loss_rate: 0.10,
+            max_faults,
+        }
+    }
+
+    /// Does this plan inject anything at all?
+    pub fn is_active(&self) -> bool {
+        self.error_rate > 0.0
+            || self.slow_rate > 0.0
+            || self.crash_rate > 0.0
+            || self.reuse_loss_rate > 0.0
+    }
+
+    /// The same plan with a decorrelated seed — one stream per wrapped
+    /// model so slot models, the batcher's verifier, and the stepper's
+    /// drafter each draw independent fault sequences.
+    pub fn fork(&self, salt: u64) -> FaultPlan {
+        let mut p = *self;
+        p.seed = Rng::new(self.seed).fork(salt).next_u64();
+        p
+    }
+}
+
+/// Shared fault counters — the observability the engine-fault tests and
+/// the sim harness assert against. Cloned handles read one tally.
+#[derive(Default)]
+pub struct FaultStats {
+    /// forwards answered with `Err`
+    pub errors: AtomicU64,
+    /// forwards that went sticky-broken (panic-equivalent)
+    pub crashes: AtomicU64,
+    /// slow forwards injected
+    pub slow: AtomicU64,
+    /// reuse leases dropped on `retain_prefix`/`adopt_pages`
+    pub lost_leases: AtomicU64,
+    /// accumulated virtual latency, in nanoseconds (fake-clock fuel)
+    pub delay_ns: AtomicU64,
+}
+
+impl FaultStats {
+    /// errors + crashes so far (the `max_faults` ledger).
+    pub fn kills(&self) -> u64 {
+        self.errors.load(Ordering::Relaxed) + self.crashes.load(Ordering::Relaxed)
+    }
+}
+
+/// A [`LanguageModel`] that forwards to an inner backend, injecting the
+/// faults its [`FaultPlan`] prescribes (module docs). Wrap with
+/// [`FaultyModel::wrap`]; read outcomes via [`FaultyModel::stats`].
+pub struct FaultyModel {
+    inner: Box<dyn LanguageModel>,
+    plan: FaultPlan,
+    rng: Rng,
+    stats: Arc<FaultStats>,
+    /// sticky-broken flag: a crash fault poisons every forward until the
+    /// next request reseats the model
+    broken: bool,
+}
+
+impl FaultyModel {
+    /// Wrap `inner` under `plan` (fault stream forked off `plan.seed`).
+    pub fn new(inner: Box<dyn LanguageModel>, plan: FaultPlan) -> FaultyModel {
+        FaultyModel {
+            inner,
+            rng: Rng::new(plan.seed ^ 0xFA17),
+            plan,
+            stats: Arc::new(FaultStats::default()),
+            broken: false,
+        }
+    }
+
+    /// Like [`FaultyModel::new`], boxed for `SlotPool::from_pairs`.
+    pub fn wrap(inner: Box<dyn LanguageModel>, plan: FaultPlan) -> Box<dyn LanguageModel> {
+        Box::new(FaultyModel::new(inner, plan))
+    }
+
+    /// Handle to this wrapper's fault tally.
+    pub fn stats(&self) -> Arc<FaultStats> {
+        self.stats.clone()
+    }
+
+    /// Are further kills (errors/crashes) allowed under `max_faults`?
+    fn kills_left(&self) -> bool {
+        self.plan.max_faults == 0 || self.stats.kills() < self.plan.max_faults
+    }
+
+    /// The per-forward fault gate shared by `block`/`block_batch`/
+    /// `draft_batch`: slow first (orthogonal to failure), then crash,
+    /// then transient error.
+    fn forward_gate(&mut self, what: &str) -> anyhow::Result<()> {
+        if self.broken {
+            anyhow::bail!("injected crash: model is down until reseated");
+        }
+        if self.rng.bool(self.plan.slow_rate) {
+            self.stats.slow.fetch_add(1, Ordering::Relaxed);
+            self.stats.delay_ns.fetch_add(self.plan.slow_ns, Ordering::Relaxed);
+        }
+        if self.kills_left() && self.rng.bool(self.plan.crash_rate) {
+            self.broken = true;
+            self.stats.crashes.fetch_add(1, Ordering::Relaxed);
+            anyhow::bail!("injected crash during {what}");
+        }
+        if self.kills_left() && self.rng.bool(self.plan.error_rate) {
+            self.stats.errors.fetch_add(1, Ordering::Relaxed);
+            anyhow::bail!("injected fault during {what}");
+        }
+        Ok(())
+    }
+}
+
+impl LanguageModel for FaultyModel {
+    fn name(&self) -> String {
+        format!("faulty({})", self.inner.name())
+    }
+
+    fn reset(&mut self) {
+        self.broken = false;
+        self.inner.reset();
+    }
+
+    fn begin_request(&mut self, seed: u64, category: &str) {
+        self.broken = false;
+        self.inner.begin_request(seed, category);
+    }
+
+    fn retain_prefix(&mut self, seed: u64, category: &str, keep: usize) -> usize {
+        self.broken = false;
+        if self.rng.bool(self.plan.reuse_loss_rate) {
+            // lost lease: degrade to a fresh start (lossless — only
+            // recomputed prefill rows, never wrong tokens)
+            self.stats.lost_leases.fetch_add(1, Ordering::Relaxed);
+            self.inner.begin_request(seed, category);
+            self.inner.reset();
+            return 0;
+        }
+        self.inner.retain_prefix(seed, category, keep)
+    }
+
+    fn page_view(&self) -> PageView {
+        self.inner.page_view()
+    }
+
+    fn adopt_pages(&mut self, seed: u64, category: &str, local: usize, shared: usize) -> usize {
+        self.broken = false;
+        if self.rng.bool(self.plan.reuse_loss_rate) {
+            self.stats.lost_leases.fetch_add(1, Ordering::Relaxed);
+            self.inner.begin_request(seed, category);
+            self.inner.reset();
+            return 0;
+        }
+        self.inner.adopt_pages(seed, category, local, shared)
+    }
+
+    fn block(&mut self, tokens: &[u32], start: usize) -> anyhow::Result<Vec<TokenSignals>> {
+        self.forward_gate("block")?;
+        self.inner.block(tokens, start)
+    }
+
+    fn block_batch(&mut self, seqs: &[BatchItem]) -> anyhow::Result<Vec<Vec<TokenSignals>>> {
+        self.forward_gate("block_batch")?;
+        self.inner.block_batch(seqs)
+    }
+
+    fn draft_batch(&mut self, seqs: &[BatchItem]) -> anyhow::Result<Vec<Vec<TokenSignals>>> {
+        self.forward_gate("draft_batch")?;
+        self.inner.draft_batch(seqs)
+    }
+
+    fn cur(&self) -> usize {
+        self.inner.cur()
+    }
+
+    fn rollback(&mut self, to: usize) {
+        self.inner.rollback(to)
+    }
+
+    fn max_seq(&self) -> usize {
+        self.inner.max_seq()
+    }
+
+    fn cost(&self) -> ModelCost {
+        self.inner.cost()
+    }
+
+    fn rel_cost(&self) -> f64 {
+        self.inner.rel_cost()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::sim::{sim_pair, Scenario, SimModel};
+
+    fn noisy(seed: u64) -> FaultPlan {
+        FaultPlan { seed, error_rate: 0.3, crash_rate: 0.1, ..FaultPlan::default() }
+    }
+
+    #[test]
+    fn inactive_plan_is_transparent() {
+        let (_, t) = sim_pair(7, "qa", 0.9);
+        let mut plain = SimModel::target(Scenario::new(7, "qa"));
+        let mut wrapped = FaultyModel::new(Box::new(t), FaultPlan::default());
+        assert!(!FaultPlan::default().is_active());
+        let a = plain.block(&[3, 4, 5], 0).unwrap();
+        let b = wrapped.block(&[3, 4, 5], 0).unwrap();
+        assert_eq!(a, b, "fault-free wrapper must be byte-transparent");
+        assert!(wrapped.page_view().adoptive);
+    }
+
+    #[test]
+    fn faults_are_deterministic_per_seed() {
+        let run = |seed: u64| -> Vec<bool> {
+            let (_, t) = sim_pair(1, "qa", 0.9);
+            let mut m = FaultyModel::new(Box::new(t), noisy(seed));
+            (0..50)
+                .map(|_| {
+                    let start = m.cur();
+                    let ok = m.block(&[3], start).is_ok();
+                    if !ok {
+                        m.begin_request(1, "qa"); // reseat after any fault
+                        m.reset();
+                    }
+                    ok
+                })
+                .collect()
+        };
+        assert_eq!(run(5), run(5), "same seed ⇒ identical fault sequence");
+        assert_ne!(run(5), run(6), "different seeds decorrelate");
+        assert!(run(5).iter().any(|&ok| !ok), "faults actually fire");
+    }
+
+    #[test]
+    fn crash_is_sticky_until_reseated() {
+        let (_, t) = sim_pair(2, "qa", 0.9);
+        let plan = FaultPlan { seed: 3, crash_rate: 1.0, ..FaultPlan::default() };
+        let mut m = FaultyModel::new(Box::new(t), plan);
+        assert!(m.block(&[3], 0).is_err(), "crash fires");
+        assert!(m.block(&[3], 0).is_err(), "still down: panic-equivalent");
+        assert_eq!(m.stats().crashes.load(Ordering::Relaxed), 1, "sticky, not re-counted");
+        m.begin_request(2, "qa");
+        m.reset();
+        // crash_rate 1.0 re-crashes immediately, but the *broken* flag was
+        // cleared — the next failure is a fresh crash, proving the reseat
+        assert!(m.block(&[3], 0).is_err());
+        assert_eq!(m.stats().crashes.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn max_faults_caps_kills_and_reuse_loss_is_lossless() {
+        let (_, t) = sim_pair(4, "qa", 0.9);
+        let plan = FaultPlan { seed: 9, error_rate: 1.0, max_faults: 2, ..FaultPlan::default() };
+        let mut m = FaultyModel::new(Box::new(t), plan);
+        assert!(m.block(&[3], 0).is_err());
+        assert!(m.block(&[3], 0).is_err());
+        // cap reached: forwards succeed from here on
+        assert!(m.block(&[3], 0).is_ok());
+        assert_eq!(m.stats().errors.load(Ordering::Relaxed), 2);
+
+        // a lost lease reports zero residency and resets the inner cursor —
+        // exactly the fresh-start contract the engine already handles
+        let (_, t) = sim_pair(4, "qa", 0.9);
+        let mut m = FaultyModel::new(
+            Box::new(t),
+            FaultPlan { seed: 9, reuse_loss_rate: 1.0, ..FaultPlan::default() },
+        );
+        m.block(&[3, 4, 5], 0).unwrap();
+        assert_eq!(m.retain_prefix(4, "qa", 2), 0, "lease lost");
+        assert_eq!(m.cur(), 0, "inner model reseated fresh");
+        assert_eq!(m.stats().lost_leases.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn slow_steps_accumulate_virtual_delay_only() {
+        let (_, t) = sim_pair(5, "qa", 0.9);
+        let plan = FaultPlan { seed: 1, slow_rate: 1.0, slow_ns: 1000, ..FaultPlan::default() };
+        let mut m = FaultyModel::new(Box::new(t), plan);
+        let t0 = std::time::Instant::now();
+        for i in 0..10 {
+            m.block(&[3], i).unwrap();
+        }
+        assert_eq!(m.stats().delay_ns.load(Ordering::Relaxed), 10_000);
+        assert_eq!(m.stats().slow.load(Ordering::Relaxed), 10);
+        assert!(t0.elapsed().as_millis() < 500, "virtual delay never sleeps");
+    }
+}

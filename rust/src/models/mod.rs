@@ -2,11 +2,13 @@
 //! plus the batched-verification entry point ([`BatchItem`],
 //! [`LanguageModel::block_batch`]) the serving engine's batcher drives.
 
+pub mod faulty;
 pub mod manifest;
 pub mod pjrt;
 pub mod sim;
 pub mod traits;
 
+pub use faulty::{FaultPlan, FaultStats, FaultyModel};
 pub use manifest::{Manifest, ModelSpec, PromptEntry};
 pub use pjrt::{ModelAssets, PjrtBatchVerifier, PjrtModel};
 pub use sim::{sim_bucket, sim_decode, sim_encode, sim_pair, Scenario, SimModel};

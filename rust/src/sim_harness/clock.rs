@@ -1,0 +1,46 @@
+//! The simulator's fake clock: virtual nanoseconds, never a real sleep.
+//!
+//! All time the simulator reasons about — deadline races, fault-injected
+//! slow steps, per-round decode cost — is *virtual*: the runner advances
+//! this counter by analytic amounts and by the latency the fault layer
+//! banked in [`crate::models::FaultStats::delay_ns`]. Trace lines embed
+//! the virtual timestamp, so a plan replays to an identical trace no
+//! matter how fast the host is.
+
+/// Virtual-time clock for the deterministic simulator.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimClock {
+    now_ns: u64,
+}
+
+impl SimClock {
+    /// A clock at t = 0.
+    pub fn new() -> SimClock {
+        SimClock::default()
+    }
+
+    /// Current virtual time in nanoseconds.
+    pub fn now_ns(&self) -> u64 {
+        self.now_ns
+    }
+
+    /// Advance virtual time by `ns`.
+    pub fn advance(&mut self, ns: u64) {
+        self.now_ns += ns;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advances_monotonically() {
+        let mut c = SimClock::new();
+        assert_eq!(c.now_ns(), 0);
+        c.advance(5);
+        c.advance(0);
+        c.advance(7);
+        assert_eq!(c.now_ns(), 12);
+    }
+}

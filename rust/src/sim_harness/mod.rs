@@ -1,0 +1,49 @@
+//! Deterministic engine simulator (docs/TESTING.md).
+//!
+//! A single-threaded, virtually-clocked harness that drives the engine's
+//! *real* components — [`crate::engine::SlotPool`] (prefix cache + paged
+//! KV arena), [`crate::engine::Scheduler`], the shared bandit
+//! ([`crate::bandit::SharedController`]) and the Algorithm-1 round logic
+//! (`spec/session.rs`) — under seeded workload plans with fault injection
+//! at the [`crate::models::LanguageModel`] boundary
+//! ([`crate::models::FaultyModel`]), while a shadow-state oracle checks
+//! serving invariants after every event.
+//!
+//! The pieces:
+//!
+//! * [`clock`] — the fake nanosecond clock. Virtual time advances by
+//!   analytic per-round costs plus whatever latency the fault layer
+//!   injected ([`crate::models::FaultStats::delay_ns`]); nothing ever
+//!   sleeps, so thousands of simulated requests run in milliseconds.
+//! * [`plan`] — seeded workload plans: a tiny op vocabulary (submit /
+//!   cancel / disconnect / step) that the generator composes into request
+//!   bursts, cancels mid-prefill and mid-decode, deadline races,
+//!   shared-prefix floods, oversize prompts, slot starvation and stream
+//!   disconnects. Plans serialize to JSON, so any seed replays
+//!   byte-for-byte and a failing seed becomes a checked-in fixture.
+//! * [`runner`] — the deterministic scheduler: one event at a time, with
+//!   the plan's RNG choosing which ready session runs next (workers mode)
+//!   or stepping every live session in lockstep (continuous mode).
+//! * [`oracle`] — the shadow state: slot-checkout conservation, page
+//!   refcount conservation, scheduler in-flight ledger balance, bandit
+//!   play-count conservation, byte-equality of every reply against a
+//!   fault-free target-only greedy decode, and terminal-status
+//!   correctness under faults.
+//! * [`shrink`] — greedy op-deletion: a violating plan is re-run with one
+//!   op removed at a time until no single deletion preserves the
+//!   violation, yielding a minimal replayable trace
+//!   (`rust/tests/sim_regressions/`).
+//!
+//! CLI face: `tapout simulate --seed N --steps M` (src/main.rs).
+
+pub mod clock;
+pub mod oracle;
+pub mod plan;
+pub mod runner;
+pub mod shrink;
+
+pub use clock::SimClock;
+pub use oracle::Oracle;
+pub use plan::{SimOp, SimPlan};
+pub use runner::{run_plan, SimReport, Violation};
+pub use shrink::shrink;

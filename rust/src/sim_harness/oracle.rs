@@ -1,0 +1,244 @@
+//! The simulator's shadow-state oracle (docs/TESTING.md).
+//!
+//! The oracle never mutates the engine — it mirrors just enough state to
+//! assert, after **every** event, that the serving invariants hold:
+//!
+//! * **slot conservation** — live sessions + free slots == pool size, so
+//!   a slot can neither be double-checked-out nor leaked;
+//! * **page conservation** — [`crate::engine::PagePool`]'s refcount /
+//!   chain-membership / free-list equalities, plus `peak_resident ≤
+//!   total` ([`crate::engine::SlotPool::page_conservation_error`]);
+//! * **scheduler ledger balance** — the in-flight ledger equals the live
+//!   session count (a leak here silently skews SJF queue-wait
+//!   estimates);
+//! * **bandit play conservation** — every `session_start` is answered by
+//!   exactly one `on_verify`/`on_abort` (sessions == updates), and for
+//!   sequence-level bandits the per-arm counts sum to the same total;
+//! * **greedy byte-equality** — every reply (after the serving clip:
+//!   ≤ `max_new`, nothing past the first EOS) must be a prefix of a
+//!   fault-free target-only greedy decode of the same request, and a
+//!   `Done` reply must equal it exactly. This is the lossless-ness
+//!   guarantee, checked per request under every cache / paging / mode /
+//!   fault combination;
+//! * **terminal-status correctness** — `Failed` may only appear under
+//!   fault injection (or for an oversize prompt), `Done` never carries a
+//!   short reply, cancels/expiries carry a clean prefix.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::bandit::SharedController;
+use crate::engine::{FinishStatus, Scheduler, SlotPool};
+use crate::models::{Scenario, SimModel};
+use crate::spec::{greedy, GenConfig, EOS};
+
+/// The serving reply contract applied in one shot: truncate to `max_new`
+/// generated tokens, then to (and including) the first EOS.
+pub fn clip_reply(new_tokens: &[u32], max_new: usize) -> Vec<u32> {
+    let mut v = new_tokens[..new_tokens.len().min(max_new)].to_vec();
+    if let Some(p) = v.iter().position(|&t| t == EOS) {
+        v.truncate(p + 1);
+    }
+    v
+}
+
+/// Shadow-state oracle for one simulator run. See the module docs for
+/// the invariant catalog.
+pub struct Oracle {
+    faults_on: bool,
+    seq_bandit: bool,
+    /// req id → expected clipped reply (fault-free greedy decode)
+    expected: BTreeMap<u64, Vec<u32>>,
+    /// requests whose prompt exceeds the KV geometry (never decodable)
+    oversize: BTreeSet<u64>,
+}
+
+impl Oracle {
+    /// A fresh oracle. `faults_on` relaxes the `Failed`-status rule;
+    /// `seq_bandit` enables the per-arm count-sum check (sequence-level
+    /// bandits only — token ladders legitimately take many plays per
+    /// session).
+    pub fn new(faults_on: bool, seq_bandit: bool) -> Oracle {
+        Oracle { faults_on, seq_bandit, expected: BTreeMap::new(), oversize: BTreeSet::new() }
+    }
+
+    /// Register a submitted request and precompute its expected reply by
+    /// running a *fault-free* target-only greedy decode of the same
+    /// scenario. `max_seq` is the engine's KV geometry; prompts that do
+    /// not fit are recorded as oversize (their only legal end is a
+    /// validation failure).
+    #[allow(clippy::too_many_arguments)]
+    pub fn expect_request(
+        &mut self,
+        id: u64,
+        prompt: &[u32],
+        seed: u64,
+        category: &str,
+        max_new: usize,
+        gamma_max: usize,
+        max_seq: usize,
+    ) {
+        if crate::spec::validate_prompt(prompt, max_seq).is_err() {
+            self.oversize.insert(id);
+            return;
+        }
+        let mut target = SimModel::target(Scenario::new(seed, category));
+        // budget past max_new: the final speculative round may overshoot
+        // (verification is atomic) — the clip makes both sides comparable
+        let cfg = GenConfig {
+            max_new: max_new + gamma_max + 2,
+            stop_at_eos: true,
+            ..GenConfig::default()
+        };
+        let r = greedy(&mut target, prompt, &cfg).expect("sim greedy decode is infallible");
+        self.expected.insert(id, clip_reply(r.new_tokens(), max_new));
+    }
+
+    /// Is this request's prompt oversize (undecodable by construction)?
+    pub fn is_oversize(&self, id: u64) -> bool {
+        self.oversize.contains(&id)
+    }
+
+    /// The expected clipped reply for a request, if it was decodable.
+    pub fn expected(&self, id: u64) -> Option<&Vec<u32>> {
+        self.expected.get(&id)
+    }
+
+    /// Mid-stream check: the emitted (clipped) tokens so far must be a
+    /// prefix of the expected reply.
+    pub fn check_stream(&self, id: u64, emitted: &[u32]) -> Option<String> {
+        match self.expected.get(&id) {
+            None => (!emitted.is_empty())
+                .then(|| format!("req {id}: oversize/unknown request emitted tokens")),
+            Some(want) => {
+                if emitted.len() > want.len() || emitted != &want[..emitted.len()] {
+                    return Some(format!(
+                        "req {id}: emitted stream diverged from greedy oracle\n  \
+                         got {emitted:?}\n want {want:?}"
+                    ));
+                }
+                None
+            }
+        }
+    }
+
+    /// Terminal check: status legality plus the byte-equality rule.
+    pub fn check_terminal(
+        &self,
+        id: u64,
+        status: FinishStatus,
+        emitted: &[u32],
+    ) -> Option<String> {
+        if let Some(v) = self.check_stream(id, emitted) {
+            return Some(v);
+        }
+        match status {
+            FinishStatus::Done => {
+                let want = match self.expected.get(&id) {
+                    Some(w) => w,
+                    None => return Some(format!("req {id}: oversize request finished Done")),
+                };
+                (emitted != &want[..]).then(|| {
+                    format!(
+                        "req {id}: Done reply != greedy oracle\n  got {emitted:?}\n want {want:?}"
+                    )
+                })
+            }
+            FinishStatus::Failed => (!self.faults_on && !self.oversize.contains(&id)).then(|| {
+                format!("req {id}: Failed without fault injection or an oversize prompt")
+            }),
+            // prefix rule (already checked) is all that cancels, expiries
+            // and queue-shed rejections must satisfy
+            FinishStatus::Cancelled | FinishStatus::Expired | FinishStatus::Rejected => None,
+        }
+    }
+
+    /// Engine-wide conservation checks, run after every event.
+    pub fn check_engine(
+        &self,
+        pool: &SlotPool,
+        sched: &Scheduler,
+        live_sessions: usize,
+        shared: &SharedController,
+    ) -> Option<String> {
+        if let Some(e) = pool.page_conservation_error() {
+            return Some(e);
+        }
+        if live_sessions + pool.available() != pool.total() {
+            return Some(format!(
+                "slot conservation broken: {live_sessions} live + {} free != {} total",
+                pool.available(),
+                pool.total()
+            ));
+        }
+        if sched.in_flight() != live_sessions {
+            return Some(format!(
+                "scheduler ledger drift: in_flight {} != live sessions {live_sessions}",
+                sched.in_flight()
+            ));
+        }
+        let (sessions, updates) = (shared.sessions(), shared.updates());
+        if sessions != updates {
+            return Some(format!(
+                "bandit play leak: {sessions} session_starts vs {updates} verify/abort updates"
+            ));
+        }
+        if self.seq_bandit {
+            if let Some(counts) = shared.arm_counts() {
+                let total: u64 = counts.iter().sum();
+                if total != updates {
+                    return Some(format!(
+                        "bandit count drift: Σ arm counts {total} != {updates} updates"
+                    ));
+                }
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::BOS;
+
+    #[test]
+    fn clip_truncates_to_budget_then_eos() {
+        assert_eq!(clip_reply(&[5, 6, 7, 8], 2), vec![5, 6]);
+        assert_eq!(clip_reply(&[5, EOS, 7], 8), vec![5, EOS]);
+        assert_eq!(clip_reply(&[5, 6, EOS], 2), vec![5, 6], "EOS beyond budget doesn't count");
+    }
+
+    #[test]
+    fn stream_prefix_and_terminal_rules() {
+        let mut o = Oracle::new(false, true);
+        let prompt = [BOS, 5, 6, 7];
+        o.expect_request(1, &prompt, 42, "qa", 6, 4, 4096);
+        let want = o.expected(1).unwrap().clone();
+        assert!(!want.is_empty());
+        assert!(o.check_stream(1, &want[..1]).is_none(), "prefix ok");
+        assert!(o.check_stream(1, &[99]).is_some(), "divergence caught");
+        assert!(o.check_terminal(1, FinishStatus::Done, &want).is_none());
+        assert!(
+            o.check_terminal(1, FinishStatus::Done, &want[..1]).is_some(),
+            "short Done caught"
+        );
+        assert!(
+            o.check_terminal(1, FinishStatus::Cancelled, &want[..1]).is_none(),
+            "cancel keeps prefix"
+        );
+        assert!(
+            o.check_terminal(1, FinishStatus::Failed, &[]).is_some(),
+            "Failed without faults is a violation"
+        );
+    }
+
+    #[test]
+    fn oversize_requests_may_only_fail() {
+        let mut o = Oracle::new(false, false);
+        let prompt: Vec<u32> = (0..5000).map(|i| 3 + (i % 20) as u32).collect();
+        o.expect_request(7, &prompt, 1, "qa", 8, 4, 4096);
+        assert!(o.is_oversize(7));
+        assert!(o.check_terminal(7, FinishStatus::Failed, &[]).is_none());
+        assert!(o.check_terminal(7, FinishStatus::Done, &[]).is_some());
+    }
+}

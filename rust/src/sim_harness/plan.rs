@@ -1,0 +1,361 @@
+//! Seeded workload plans: the op vocabulary, the seeded generator, and
+//! byte-stable JSON (de)serialization.
+//!
+//! A plan is a complete, self-contained description of one simulator run:
+//! engine knobs (mode, slots, cache/paging, bandit method, fault
+//! injection) plus an ordered op list. The op vocabulary is deliberately
+//! tiny — submit / cancel / disconnect / step — and the *generator*
+//! composes the interesting scenarios out of it: request bursts are
+//! adjacent submits, shared-prefix floods are submits sharing a prompt
+//! prefix, deadline races are submits with tight virtual deadlines,
+//! starvation is a burst against a 1-slot pool, and cancels land
+//! mid-prefill (right after the submit) or mid-decode (after steps).
+//! Small vocabulary + explicit request ids is also what makes shrinking
+//! trivial: deleting any op leaves a well-formed plan (cancels aimed at a
+//! deleted request become no-ops).
+//!
+//! `SimPlan::generate(seed, steps)` is a pure function of its arguments,
+//! and `to_json`/`from_json` round-trip exactly — so a failing seed can
+//! be replayed byte-for-byte from either the seed or the serialized plan
+//! (`rust/tests/sim_regressions/`).
+
+use crate::util::{Json, Rng};
+
+/// One event in a simulator plan.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SimOp {
+    /// Submit one generation request. `req` is the plan-scoped request id
+    /// (stable under shrinking); `deadline_ns` is a *virtual* deadline
+    /// relative to submission time, `None` for no deadline.
+    Submit {
+        /// plan-scoped request id (referenced by cancel/disconnect ops)
+        req: u64,
+        /// raw prompt text (sim-encoded by the runner, BOS included)
+        prompt: String,
+        /// workload category (drives the simulator's difficulty profile)
+        category: String,
+        /// decode budget
+        max_new: usize,
+        /// virtual deadline in ns after submission; `None` = none
+        deadline_ns: Option<u64>,
+    },
+    /// Flip the request's cancel flag (client-initiated cancellation).
+    Cancel {
+        /// plan-scoped id of the request to cancel
+        req: u64,
+    },
+    /// Stream disconnect: same engine-visible effect as a cancel (the
+    /// HTTP layer flips the cancel flag on a dropped connection), kept as
+    /// a distinct op so traces say what the client did.
+    Disconnect {
+        /// plan-scoped id of the request whose stream dropped
+        req: u64,
+    },
+    /// Run `n` scheduler/decode micro-steps.
+    Step {
+        /// micro-steps to run
+        n: usize,
+    },
+}
+
+impl SimOp {
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        match self {
+            SimOp::Submit { req, prompt, category, max_new, deadline_ns } => {
+                j.set("op", "submit")
+                    .set("req", *req as f64)
+                    .set("prompt", prompt.as_str())
+                    .set("category", category.as_str())
+                    .set("max_new", *max_new);
+                if let Some(d) = deadline_ns {
+                    j.set("deadline_ns", *d as f64);
+                }
+            }
+            SimOp::Cancel { req } => {
+                j.set("op", "cancel").set("req", *req as f64);
+            }
+            SimOp::Disconnect { req } => {
+                j.set("op", "disconnect").set("req", *req as f64);
+            }
+            SimOp::Step { n } => {
+                j.set("op", "step").set("n", *n);
+            }
+        }
+        j
+    }
+
+    fn from_json(j: &Json) -> Result<SimOp, String> {
+        let kind = j.get("op").and_then(|x| x.as_str()).ok_or("op without kind")?;
+        let req = || -> Result<u64, String> {
+            Ok(j.get("req").and_then(|x| x.as_f64()).ok_or("op without req")? as u64)
+        };
+        Ok(match kind {
+            "submit" => SimOp::Submit {
+                req: req()?,
+                prompt: j
+                    .get("prompt")
+                    .and_then(|x| x.as_str())
+                    .ok_or("submit without prompt")?
+                    .to_string(),
+                category: j
+                    .get("category")
+                    .and_then(|x| x.as_str())
+                    .unwrap_or("qa")
+                    .to_string(),
+                max_new: j.get("max_new").and_then(|x| x.as_usize()).unwrap_or(8),
+                deadline_ns: j.get("deadline_ns").and_then(|x| x.as_f64()).map(|d| d as u64),
+            },
+            "cancel" => SimOp::Cancel { req: req()? },
+            "disconnect" => SimOp::Disconnect { req: req()? },
+            "step" => SimOp::Step { n: j.get("n").and_then(|x| x.as_usize()).unwrap_or(1) },
+            other => return Err(format!("unknown op kind: {other}")),
+        })
+    }
+}
+
+/// A complete simulator run description: engine knobs + ordered ops.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimPlan {
+    /// root seed: drives op generation, the runner's task-choice RNG, and
+    /// (when `faults` is on) every fault stream
+    pub seed: u64,
+    /// execution-core flavor: `"workers"` (one random ready session per
+    /// micro-step) or `"continuous"` (every live session each micro-step)
+    pub mode: String,
+    /// KV slots in the pool
+    pub slots: usize,
+    /// concurrent decodes admitted (workers mode; ≤ `slots`)
+    pub workers: usize,
+    /// max draft length γ
+    pub gamma_max: usize,
+    /// stop-rule / bandit method name (`spec::MethodSpec::parse`)
+    pub method: String,
+    /// cross-request prefix cache on?
+    pub cache: bool,
+    /// cross-slot page sharing on (needs `cache`)?
+    pub sharing: bool,
+    /// KV page granularity in tokens
+    pub page_size: usize,
+    /// page arena size (0 = auto-size so eviction never fires)
+    pub kv_pages: usize,
+    /// inject faults ([`crate::models::FaultPlan::moderate`])?
+    pub faults: bool,
+    /// fault kill cap (errors + crashes) per wrapped model
+    pub max_faults: u64,
+    /// deliberately corrupt page accounting mid-run (test-only hook for
+    /// the oracle/shrinker pipeline itself — never set by the generator)
+    pub sabotage: bool,
+    /// the ordered op list
+    pub ops: Vec<SimOp>,
+}
+
+impl SimPlan {
+    /// Generate a seeded random plan with `steps` ops. Pure function of
+    /// `(seed, steps)`: the same pair always yields the identical plan.
+    pub fn generate(seed: u64, steps: usize) -> SimPlan {
+        let mut rng = Rng::new(seed).fork(0x51AB);
+        let slots = 1 + rng.below(3);
+        let methods = ["static-4", "seq-ucb1", "seq-ts", "token-ucb1"];
+        let mut plan = SimPlan {
+            seed,
+            mode: if rng.bool(0.5) { "workers" } else { "continuous" }.to_string(),
+            slots,
+            workers: 1 + rng.below(slots),
+            gamma_max: 2 + rng.below(7),
+            method: methods[rng.below(methods.len())].to_string(),
+            cache: rng.bool(0.6),
+            sharing: rng.bool(0.7),
+            page_size: [4, 8, 16][rng.below(3)],
+            kv_pages: if rng.bool(0.8) { 0 } else { 64 + rng.below(64) },
+            faults: false,
+            max_faults: 1 + rng.below(8) as u64,
+            sabotage: false,
+            ops: Vec::new(),
+        };
+        let mut next_req: u64 = 0;
+        let mut word = |rng: &mut Rng| -> String {
+            (0..4 + rng.below(10)).map(|_| char::from(b'a' + rng.below(26) as u8)).collect()
+        };
+        let categories = ["qa", "coding", "math", "summarization"];
+        while plan.ops.len() < steps {
+            let mut submit = |rng: &mut Rng,
+                              ops: &mut Vec<SimOp>,
+                              next_req: &mut u64,
+                              prompt: String,
+                              deadline_ns: Option<u64>| {
+                let req = *next_req;
+                *next_req += 1;
+                ops.push(SimOp::Submit {
+                    req,
+                    prompt,
+                    category: categories[rng.below(categories.len())].to_string(),
+                    max_new: 3 + rng.below(14),
+                    deadline_ns,
+                });
+                req
+            };
+            match rng.weighted(&[3.0, 1.5, 1.0, 0.4, 0.8, 1.0, 1.0, 0.5, 3.0]) {
+                // lone request
+                0 => {
+                    let p = format!("ask {} {}", next_req, word(&mut rng));
+                    submit(&mut rng, &mut plan.ops, &mut next_req, p, None);
+                }
+                // burst: back-to-back submits (slot starvation on 1-slot
+                // pools falls out of this + the tiny pool sizes above)
+                1 => {
+                    for _ in 0..2 + rng.below(3) {
+                        let p = format!("burst {} {}", next_req, word(&mut rng));
+                        submit(&mut rng, &mut plan.ops, &mut next_req, p, None);
+                    }
+                }
+                // shared-prefix flood: exercises slot-affinity routing,
+                // page sharing and copy-on-write under churn
+                2 => {
+                    let common = format!("shared {} context block", word(&mut rng));
+                    for _ in 0..3 + rng.below(3) {
+                        let p = format!("{common} {}", word(&mut rng));
+                        submit(&mut rng, &mut plan.ops, &mut next_req, p, None);
+                    }
+                }
+                // oversize prompt: must be rejected by prompt validation,
+                // never decoded and never leaking its slot
+                3 => {
+                    let p = "x".repeat(4200);
+                    submit(&mut rng, &mut plan.ops, &mut next_req, p, None);
+                }
+                // cancel mid-prefill: flag flips before any step runs
+                4 => {
+                    let p = format!("early-cancel {}", word(&mut rng));
+                    let req = submit(&mut rng, &mut plan.ops, &mut next_req, p, None);
+                    plan.ops.push(SimOp::Cancel { req });
+                }
+                // deadline race: tight virtual deadline vs decode time
+                5 => {
+                    let p = format!("deadline {}", word(&mut rng));
+                    let d = 5_000 + rng.below(200_000) as u64;
+                    submit(&mut rng, &mut plan.ops, &mut next_req, p, Some(d));
+                }
+                // cancel mid-decode: aimed at a random earlier request
+                6 if next_req > 0 => {
+                    plan.ops.push(SimOp::Cancel { req: rng.below(next_req as usize) as u64 });
+                }
+                // stream disconnect on a random earlier request
+                7 if next_req > 0 => {
+                    plan.ops.push(SimOp::Disconnect { req: rng.below(next_req as usize) as u64 });
+                }
+                // let the engine run
+                _ => plan.ops.push(SimOp::Step { n: 1 + rng.below(4) }),
+            }
+        }
+        plan.ops.truncate(steps);
+        plan
+    }
+
+    /// Total submit ops in the plan.
+    pub fn submits(&self) -> usize {
+        self.ops.iter().filter(|o| matches!(o, SimOp::Submit { .. })).count()
+    }
+
+    /// Serialize to JSON (round-trips exactly through
+    /// [`SimPlan::from_json`]; seeds are stored as JSON numbers, so they
+    /// must stay below 2^53 — generator and CLI seeds always do).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("seed", self.seed as f64)
+            .set("mode", self.mode.as_str())
+            .set("slots", self.slots)
+            .set("workers", self.workers)
+            .set("gamma_max", self.gamma_max)
+            .set("method", self.method.as_str())
+            .set("cache", self.cache)
+            .set("sharing", self.sharing)
+            .set("page_size", self.page_size)
+            .set("kv_pages", self.kv_pages)
+            .set("faults", self.faults)
+            .set("max_faults", self.max_faults as f64)
+            .set("sabotage", self.sabotage)
+            .set("ops", self.ops.iter().map(|o| o.to_json()).collect::<Vec<Json>>());
+        j
+    }
+
+    /// Parse a serialized plan ([`SimPlan::to_json`]).
+    pub fn from_json(j: &Json) -> Result<SimPlan, String> {
+        let num = |k: &str| j.get(k).and_then(|x| x.as_f64());
+        let ops = j
+            .get("ops")
+            .and_then(|x| x.as_arr())
+            .ok_or("plan without ops")?
+            .iter()
+            .map(SimOp::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(SimPlan {
+            seed: num("seed").ok_or("plan without seed")? as u64,
+            mode: j.get("mode").and_then(|x| x.as_str()).unwrap_or("workers").to_string(),
+            slots: num("slots").unwrap_or(2.0) as usize,
+            workers: num("workers").unwrap_or(2.0) as usize,
+            gamma_max: num("gamma_max").unwrap_or(4.0) as usize,
+            method: j.get("method").and_then(|x| x.as_str()).unwrap_or("static-4").to_string(),
+            cache: j.get("cache").and_then(|x| x.as_bool()).unwrap_or(false),
+            sharing: j.get("sharing").and_then(|x| x.as_bool()).unwrap_or(true),
+            page_size: num("page_size").unwrap_or(16.0) as usize,
+            kv_pages: num("kv_pages").unwrap_or(0.0) as usize,
+            faults: j.get("faults").and_then(|x| x.as_bool()).unwrap_or(false),
+            max_faults: num("max_faults").unwrap_or(4.0) as u64,
+            sabotage: j.get("sabotage").and_then(|x| x.as_bool()).unwrap_or(false),
+            ops,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_is_a_pure_function_of_seed() {
+        let a = SimPlan::generate(11, 60);
+        let b = SimPlan::generate(11, 60);
+        assert_eq!(a, b, "same seed ⇒ identical plan");
+        assert_ne!(a, SimPlan::generate(12, 60), "seeds decorrelate");
+        assert_eq!(a.ops.len(), 60);
+        assert!(a.submits() > 0, "plans contain work");
+    }
+
+    #[test]
+    fn json_round_trip_is_exact() {
+        for seed in 0..8 {
+            let plan = SimPlan::generate(seed, 40);
+            let text = plan.to_json().render();
+            let back = SimPlan::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(plan, back, "seed {seed}");
+            // and the serialized form itself is stable (BTreeMap keys)
+            assert_eq!(text, back.to_json().render(), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn generator_covers_the_scenario_mix() {
+        // over a handful of seeds the generator must exercise every op
+        // kind and the scripted scenario flavors
+        let mut saw = (false, false, false, false); // cancel, disconnect, oversize, deadline
+        for seed in 0..20 {
+            for op in &SimPlan::generate(seed, 80).ops {
+                match op {
+                    SimOp::Cancel { .. } => saw.0 = true,
+                    SimOp::Disconnect { .. } => saw.1 = true,
+                    SimOp::Submit { prompt, deadline_ns, .. } => {
+                        if prompt.len() > 4000 {
+                            saw.2 = true;
+                        }
+                        if deadline_ns.is_some() {
+                            saw.3 = true;
+                        }
+                    }
+                    SimOp::Step { .. } => {}
+                }
+            }
+        }
+        assert!(saw.0 && saw.1 && saw.2 && saw.3, "scenario coverage: {saw:?}");
+    }
+}

@@ -1,0 +1,703 @@
+//! The deterministic scheduler: executes a [`SimPlan`] event by event
+//! against the engine's real components, checking the shadow oracle
+//! after every event.
+//!
+//! Everything is single-threaded and virtually clocked, so a plan always
+//! replays to the identical trace: the plan's RNG decides which ready
+//! session runs next (workers mode) or every live session steps in
+//! lockstep (continuous mode); fault-injected latency advances the fake
+//! clock instead of sleeping; and trace lines embed only virtual time.
+//!
+//! The per-session decode is the Algorithm-1 round of `spec/session.rs`
+//! ([`sim_round`] mirrors `SpecSession::step` — the session type itself
+//! holds model borrows for its whole lifetime, which a round-interleaved
+//! simulator cannot, so the round is restated here over explicit state
+//! and kept in sync with the invariants both share: commit-or-nothing
+//! verification, cursors ≤ committed length, `on_abort` on any error
+//! between `session_start` and `on_verify`).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::bandit::{SessionController, SharedController};
+use crate::engine::{
+    CancelFlag, EmitClip, FinishStatus, Lease, Request, Scheduler, Slot, SlotPool,
+};
+use crate::models::{
+    sim_encode, FaultPlan, FaultStats, FaultyModel, LanguageModel, Scenario, SimModel,
+};
+use crate::spec::{
+    accept_greedy, finish_check, validate_prompt, DecodeControl, GenConfig, MethodSpec,
+    StepCommit, StepOutcome, BOS,
+};
+use crate::util::{fnv1a, Rng};
+
+use super::clock::SimClock;
+use super::oracle::Oracle;
+use super::plan::{SimOp, SimPlan};
+
+/// Virtual cost of one drafted token (fake-clock fuel per round).
+const DRAFT_TOKEN_NS: u64 = 500;
+/// Virtual cost of one verification block.
+const VERIFY_NS: u64 = 2_000;
+/// Virtual cost of an idle micro-step (nothing live to run).
+const IDLE_NS: u64 = 1_000;
+/// Micro-step budget for the post-plan drain: if the engine cannot reach
+/// quiescence within this many steps, something is starved or livelocked.
+const DRAIN_BUDGET: usize = 100_000;
+
+/// First invariant violation of a run: the event index (into
+/// [`SimReport::trace`]) where it was detected, plus a description.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Violation {
+    /// trace position at detection time
+    pub event: usize,
+    /// what broke
+    pub what: String,
+}
+
+/// One request's terminal record.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Reply {
+    /// terminal lifecycle stage
+    pub status: FinishStatus,
+    /// clipped reply tokens emitted before the end
+    pub emitted: Vec<u32>,
+}
+
+/// Everything one simulator run produced.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    /// the full deterministic event trace (one line per event)
+    pub trace: Vec<String>,
+    /// first invariant violation, if any
+    pub violation: Option<Violation>,
+    /// req id → terminal record, for every request that reached an end
+    pub replies: BTreeMap<u64, Reply>,
+    /// virtual time at the end of the run
+    pub clock_ns: u64,
+    /// FNV-1a hash of the trace (the replay-equality fingerprint)
+    pub trace_hash: u64,
+}
+
+impl SimReport {
+    /// Count of replies with the given terminal status.
+    pub fn count(&self, status: FinishStatus) -> usize {
+        self.replies.values().filter(|r| r.status == status).count()
+    }
+}
+
+/// One live decode: a checked-out slot plus the explicit session state
+/// [`sim_round`] advances.
+struct Live {
+    req: Request,
+    slot: Slot,
+    committed: Vec<u32>,
+    prompt_len: usize,
+    clip: EmitClip,
+    emitted: Vec<u32>,
+    rng: Rng,
+    max_seq: usize,
+}
+
+struct Runner {
+    plan: SimPlan,
+    pool: SlotPool,
+    sched: Scheduler,
+    shared: SharedController,
+    ctrls: Vec<SessionController>,
+    live: Vec<Live>,
+    clock: SimClock,
+    rng: Rng,
+    oracle: Oracle,
+    trace: Vec<String>,
+    replies: BTreeMap<u64, Reply>,
+    flags: BTreeMap<u64, CancelFlag>,
+    deadlines: BTreeMap<u64, u64>,
+    fault_stats: Vec<Arc<FaultStats>>,
+    drained_delay_ns: u64,
+    violation: Option<Violation>,
+    sabotaged: bool,
+    max_seq: usize,
+}
+
+/// Execute a plan to completion (all ops, then a drain phase until every
+/// request reaches a terminal state) and report the trace, the replies
+/// and the first oracle violation, if any.
+pub fn run_plan(plan: &SimPlan) -> SimReport {
+    let mut r = Runner::build(plan.clone());
+    for i in 0..r.plan.ops.len() {
+        if r.violation.is_some() {
+            break;
+        }
+        let op = r.plan.ops[i].clone();
+        r.apply(&op);
+    }
+    let mut spent = 0usize;
+    while r.violation.is_none() && !(r.live.is_empty() && r.sched.is_empty()) {
+        if spent >= DRAIN_BUDGET {
+            r.fail(format!(
+                "quiescence not reached within {DRAIN_BUDGET} micro-steps: \
+                 {} live, {} queued (scheduler starvation?)",
+                r.live.len(),
+                r.sched.len()
+            ));
+            break;
+        }
+        r.micro_step();
+        spent += 1;
+    }
+    let trace_hash = fnv1a(r.trace.iter().flat_map(|l| l.bytes().map(u64::from).chain([10u64])));
+    SimReport {
+        violation: r.violation,
+        replies: r.replies,
+        clock_ns: r.clock.now_ns(),
+        trace_hash,
+        trace: r.trace,
+    }
+}
+
+impl Runner {
+    fn build(plan: SimPlan) -> Runner {
+        let quality = 0.9f32;
+        let rel_cost = 1.0 / 20.0;
+        let sc = Scenario::new(0, "qa");
+        let faults = FaultPlan::moderate(plan.seed, plan.max_faults);
+        let mut fault_stats = Vec::new();
+        let pairs: Vec<(Box<dyn LanguageModel>, Box<dyn LanguageModel>)> = (0..plan.slots)
+            .map(|i| {
+                let d = SimModel::draft(sc, quality, rel_cost);
+                let t = SimModel::target(sc);
+                if plan.faults {
+                    let fd = FaultyModel::new(Box::new(d), faults.fork(2 * i as u64));
+                    let ft = FaultyModel::new(Box::new(t), faults.fork(2 * i as u64 + 1));
+                    fault_stats.push(fd.stats());
+                    fault_stats.push(ft.stats());
+                    (Box::new(fd) as Box<dyn LanguageModel>, Box::new(ft) as Box<dyn LanguageModel>)
+                } else {
+                    (Box::new(d) as Box<dyn LanguageModel>, Box::new(t) as Box<dyn LanguageModel>)
+                }
+            })
+            .collect();
+        let max_seq = pairs
+            .iter()
+            .map(|(d, t)| d.max_seq().min(t.max_seq()))
+            .min()
+            .unwrap_or(4096);
+        // mirror the engine's boot order (server.rs): paging, sharing,
+        // then the prefix cache
+        let pool = SlotPool::from_pairs(pairs)
+            .with_paging(plan.page_size.max(1), plan.kv_pages)
+            .with_page_sharing(plan.sharing)
+            .with_prefix_cache(plan.cache);
+        let method = MethodSpec::parse(&plan.method, "artifacts").expect("plan method parses");
+        let shared = SharedController::new(&method, plan.gamma_max);
+        let ctrls = (0..plan.slots)
+            .map(|_| shared.session().expect("sim methods need no artifacts"))
+            .collect();
+        let seq_bandit = plan.method.starts_with("seq-");
+        let mut rng = Rng::new(plan.seed).fork(0xD0_5EED);
+        let oracle = Oracle::new(plan.faults, seq_bandit);
+        let task_rng = rng.fork(1);
+        Runner {
+            plan,
+            pool,
+            sched: Scheduler::new(crate::engine::Policy::Fcfs),
+            shared,
+            ctrls,
+            live: Vec::new(),
+            clock: SimClock::new(),
+            rng: task_rng,
+            oracle,
+            trace: Vec::new(),
+            replies: BTreeMap::new(),
+            flags: BTreeMap::new(),
+            deadlines: BTreeMap::new(),
+            fault_stats,
+            drained_delay_ns: 0,
+            violation: None,
+            sabotaged: false,
+            max_seq,
+        }
+    }
+
+    fn log(&mut self, line: String) {
+        self.trace.push(format!("t={} {line}", self.clock.now_ns()));
+    }
+
+    fn fail(&mut self, what: String) {
+        if self.violation.is_none() {
+            let event = self.trace.len();
+            self.trace.push(format!("t={} VIOLATION {what}", self.clock.now_ns()));
+            self.violation = Some(Violation { event, what });
+        }
+    }
+
+    /// Run the engine-wide oracle checks; record the first violation.
+    fn check_engine(&mut self) {
+        if self.violation.is_some() {
+            return;
+        }
+        if let Some(what) =
+            self.oracle.check_engine(&self.pool, &self.sched, self.live.len(), &self.shared)
+        {
+            self.fail(what);
+        }
+    }
+
+    fn apply(&mut self, op: &SimOp) {
+        match op {
+            SimOp::Submit { req, prompt, category, max_new, deadline_ns } => {
+                let mut r = Request::new(*req, prompt.clone(), *max_new);
+                r.category = category.clone();
+                r.prompt = std::iter::once(BOS).chain(sim_encode(prompt)).collect();
+                r.cached_hint = self.pool.peek_reuse(&r.prompt);
+                self.flags.insert(*req, r.cancel_flag());
+                if let Some(d) = deadline_ns {
+                    self.deadlines.insert(*req, self.clock.now_ns() + d);
+                }
+                self.oracle.expect_request(
+                    *req,
+                    &r.prompt,
+                    r.scenario_seed(),
+                    category,
+                    *max_new,
+                    self.plan.gamma_max,
+                    self.max_seq,
+                );
+                self.log(format!(
+                    "submit id={req} len={} cat={category} max_new={max_new} hint={} deadline={}",
+                    r.prompt.len(),
+                    r.cached_hint,
+                    deadline_ns.map(|d| d.to_string()).unwrap_or_else(|| "-".into()),
+                ));
+                self.sched.push(r);
+            }
+            SimOp::Cancel { req } => {
+                let known = self.flags.contains_key(req);
+                if let Some(f) = self.flags.get(req) {
+                    f.cancel();
+                }
+                self.log(format!("cancel id={req} known={known}"));
+            }
+            SimOp::Disconnect { req } => {
+                // the HTTP layer turns a dropped stream into a cancel —
+                // same engine-visible effect, distinct trace label
+                let known = self.flags.contains_key(req);
+                if let Some(f) = self.flags.get(req) {
+                    f.cancel();
+                }
+                self.log(format!("disconnect id={req} known={known}"));
+            }
+            SimOp::Step { n } => {
+                for _ in 0..*n {
+                    if self.violation.is_some() {
+                        return;
+                    }
+                    self.micro_step();
+                }
+            }
+        }
+        self.check_engine();
+    }
+
+    /// One deterministic scheduler tick: reap dead queue entries, admit
+    /// while capacity allows, run one (workers) or all (continuous)
+    /// ready sessions for one round, bank fault latency into the clock,
+    /// then run the oracle.
+    fn micro_step(&mut self) {
+        for r in self.sched.drain_dead() {
+            let status = if r.cancel.is_cancelled() {
+                FinishStatus::Cancelled
+            } else {
+                FinishStatus::Expired
+            };
+            self.finish_queued(r, status, "reaped in queue", false);
+        }
+        self.admit();
+        if self.live.is_empty() {
+            self.clock.advance(IDLE_NS);
+        } else if self.plan.mode == "continuous" {
+            // lockstep: every live session advances one round per tick,
+            // the iteration-level interleave of the continuous engine
+            let mut i = 0;
+            while i < self.live.len() && self.violation.is_none() {
+                if self.run_one(i) {
+                    i += 1;
+                }
+            }
+        } else {
+            // workers interleave: the seeded RNG picks which ready
+            // session runs next
+            let i = self.rng.below(self.live.len());
+            self.run_one(i);
+        }
+        let injected: u64 = self
+            .fault_stats
+            .iter()
+            .map(|s| s.delay_ns.load(std::sync::atomic::Ordering::Relaxed))
+            .sum();
+        self.clock.advance(injected - self.drained_delay_ns);
+        self.drained_delay_ns = injected;
+        self.check_engine();
+    }
+
+    /// Admission: pop while a slot and a concurrency seat are free.
+    fn admit(&mut self) {
+        let cap = if self.plan.mode == "continuous" {
+            self.plan.slots
+        } else {
+            self.plan.workers.min(self.plan.slots)
+        };
+        while self.live.len() < cap && self.violation.is_none() {
+            if self.pool.available() == 0 {
+                return;
+            }
+            let req = match self.sched.pop() {
+                Some(r) => r,
+                None => return,
+            };
+            if req.cancel.is_cancelled() {
+                self.finish_queued(req, FinishStatus::Cancelled, "cancelled at admission", true);
+                continue;
+            }
+            if self.deadline_passed(req.id) {
+                self.finish_queued(req, FinishStatus::Expired, "expired at admission", true);
+                continue;
+            }
+            if let Err(e) = validate_prompt(&req.prompt, self.max_seq) {
+                self.finish_queued(req, FinishStatus::Failed, &format!("{e}"), true);
+                continue;
+            }
+            let (slot, lease) = match self.pool.try_acquire_for(&req.prompt) {
+                Some(x) => x,
+                None => {
+                    // free count raced with paging pressure: requeue and
+                    // keep the ledger balanced
+                    self.sched.note_done(req.sched_cost());
+                    self.sched.push(req);
+                    return;
+                }
+            };
+            self.start_decode(req, slot, lease);
+            if self.plan.sabotage && !self.sabotaged {
+                self.sabotaged = true;
+                self.pool.with_pages_mut(|p| p.debug_leak_page());
+                self.log("sabotage: leaked one page from the free-list accounting".to_string());
+            }
+        }
+    }
+
+    /// Checkout → adopt leased residency → resume-style guards → live.
+    /// Mirrors the worker path (server.rs): residency is the min of what
+    /// draft and target actually adopted, and a model that cannot cover
+    /// the claimed prefix is a Failed decode, never a wrong one.
+    fn start_decode(&mut self, req: Request, mut slot: Slot, lease: Lease) {
+        let seed = req.scenario_seed();
+        let rd = slot.draft.adopt_pages(seed, &req.category, lease.local, lease.shared);
+        let rt = slot.target.adopt_pages(seed, &req.category, lease.local, lease.shared);
+        let resident = rd.min(rt).min(req.prompt.len().saturating_sub(1));
+        slot.draft.rollback(resident);
+        slot.target.rollback(resident);
+        if slot.draft.cur() != resident || slot.target.cur() != resident {
+            slot.clear_prefix();
+            let why = format!(
+                "resident-prefix contract violated: draft {} / target {} vs {resident}",
+                slot.draft.cur(),
+                slot.target.cur()
+            );
+            self.pool.release(slot);
+            self.finish_queued(req, FinishStatus::Failed, &why, true);
+            return;
+        }
+        self.ctrls[slot.id].reset_request();
+        let max_seq = slot.draft.max_seq().min(slot.target.max_seq());
+        let rng = Rng::new(self.plan.seed).fork(0xAC71F ^ req.id);
+        self.log(format!(
+            "admit id={} slot={} lease={}/{} resident={resident}",
+            req.id, slot.id, lease.local, lease.shared
+        ));
+        self.live.push(Live {
+            committed: req.prompt.clone(),
+            prompt_len: req.prompt.len(),
+            clip: EmitClip::new(req.max_new),
+            emitted: Vec::new(),
+            rng,
+            max_seq,
+            req,
+            slot,
+        });
+    }
+
+    fn deadline_passed(&self, id: u64) -> bool {
+        self.deadlines.get(&id).is_some_and(|&d| self.clock.now_ns() >= d)
+    }
+
+    /// Advance session `i` by one lifecycle check + decode round.
+    /// Returns false when the session reached a terminal state (and was
+    /// removed from the live set).
+    fn run_one(&mut self, i: usize) -> bool {
+        if self.live[i].req.cancel.is_cancelled() {
+            self.finish_live(i, FinishStatus::Cancelled, "cancelled mid-decode");
+            return false;
+        }
+        if self.deadline_passed(self.live[i].req.id) {
+            self.finish_live(i, FinishStatus::Expired, "deadline mid-decode");
+            return false;
+        }
+        let sess = &mut self.live[i];
+        let ctrl = &mut self.ctrls[sess.slot.id];
+        let outcome = sim_round(
+            sess.slot.draft.as_mut(),
+            sess.slot.target.as_mut(),
+            ctrl,
+            &mut sess.rng,
+            &mut sess.committed,
+            sess.prompt_len,
+            sess.req.max_new,
+            self.plan.gamma_max,
+            sess.max_seq,
+        );
+        match outcome {
+            Err(e) => {
+                self.finish_live(i, FinishStatus::Failed, &format!("{e:#}"));
+                false
+            }
+            Ok(StepOutcome::Finished(reason)) => {
+                self.finish_live(i, FinishStatus::Done, &format!("{reason:?}"));
+                false
+            }
+            Ok(StepOutcome::Round(commit)) => {
+                self.clock.advance(VERIFY_NS + DRAFT_TOKEN_NS * commit.drafted as u64);
+                let (emit, determined) = {
+                    let sess = &mut self.live[i];
+                    let (emit, determined) = sess.clip.clip(&commit.new_tokens);
+                    sess.emitted.extend_from_slice(emit);
+                    (emit.len(), determined)
+                };
+                let (id, drafted, accepted) =
+                    (self.live[i].req.id, commit.drafted, commit.accepted);
+                self.log(format!(
+                    "round id={id} drafted={drafted} accepted={accepted} emitted={emit}"
+                ));
+                if let Some(what) = self.oracle.check_stream(id, &self.live[i].emitted) {
+                    self.fail(what);
+                    return true;
+                }
+                if determined {
+                    // reply fully determined (budget or EOS inside the
+                    // clip window) — same early stop as drive_session
+                    self.finish_live(i, FinishStatus::Done, "reply determined");
+                    return false;
+                }
+                true
+            }
+        }
+    }
+
+    /// Terminal handling for a live session: prefix-cache bookkeeping,
+    /// slot release, scheduler ledger release, oracle terminal check.
+    fn finish_live(&mut self, i: usize, status: FinishStatus, why: &str) {
+        let mut sess = self.live.swap_remove(i);
+        if self.pool.prefix_cache_enabled() {
+            let watermark = sess.slot.draft.cur().min(sess.slot.target.cur());
+            if status == FinishStatus::Failed {
+                sess.slot.clear_prefix();
+            } else {
+                let tokens = sess.committed.clone();
+                sess.slot.record_prefix(&tokens, watermark);
+            }
+        }
+        self.pool.release(sess.slot);
+        self.sched.note_done(sess.req.sched_cost());
+        self.log(format!(
+            "end id={} status={} emitted={} ({why})",
+            sess.req.id,
+            status.label(),
+            sess.emitted.len()
+        ));
+        if let Some(what) = self.oracle.check_terminal(sess.req.id, status, &sess.emitted) {
+            self.fail(what);
+        }
+        self.replies.insert(sess.req.id, Reply { status, emitted: sess.emitted });
+    }
+
+    /// Terminal handling for a request that never started decoding.
+    /// `popped` says whether it went through `Scheduler::pop` (and thus
+    /// holds an in-flight ledger seat to release).
+    fn finish_queued(&mut self, req: Request, status: FinishStatus, why: &str, popped: bool) {
+        if popped {
+            self.sched.note_done(req.sched_cost());
+        }
+        self.log(format!("end id={} status={} emitted=0 ({why})", req.id, status.label()));
+        if let Some(what) = self.oracle.check_terminal(req.id, status, &[]) {
+            self.fail(what);
+        }
+        self.replies.insert(req.id, Reply { status, emitted: Vec::new() });
+    }
+}
+
+/// One draft→verify→accept round over explicit session state — the
+/// simulator's restatement of `SpecSession::step` (see the module docs
+/// for why the session type itself cannot be held across interleaved
+/// rounds). Invariants kept in lockstep with spec/session.rs:
+///
+/// * models only ever receive contiguous blocks at their cursor;
+/// * verification is atomic — a round either commits fully or not at
+///   all, so an `Err` leaves `committed` untouched;
+/// * a model error between `session_start` and `on_verify` routes
+///   through [`DecodeControl::on_abort`], keeping bandit play counts
+///   conserved;
+/// * termination uses the shared [`finish_check`] / [`accept_greedy`]
+///   helpers, so the stop boundary and accept rule *cannot* drift.
+#[allow(clippy::too_many_arguments)]
+pub fn sim_round(
+    draft: &mut dyn LanguageModel,
+    target: &mut dyn LanguageModel,
+    ctrl: &mut dyn DecodeControl,
+    rng: &mut Rng,
+    committed: &mut Vec<u32>,
+    prompt_len: usize,
+    max_new: usize,
+    gamma_max: usize,
+    max_seq: usize,
+) -> anyhow::Result<StepOutcome> {
+    let cfg = GenConfig { max_new, gamma_max, stop_at_eos: true, collect_signals: false };
+    let last = committed.last().copied();
+    if let Some(r) = finish_check(committed.len(), prompt_len, last, &cfg, max_seq) {
+        return Ok(StepOutcome::Finished(r));
+    }
+    let c = committed.len();
+    let gamma = gamma_max.min(max_seq.saturating_sub(c + 2)).max(1);
+    ctrl.session_start(rng);
+    let fallible = |draft: &mut dyn LanguageModel,
+                    target: &mut dyn LanguageModel,
+                    ctrl: &mut dyn DecodeControl,
+                    rng: &mut Rng|
+     -> anyhow::Result<(Vec<u32>, Vec<crate::signals::TokenSignals>, usize)> {
+        let dc = draft.cur();
+        let mut sig = draft.block(&committed[dc..], dc)?;
+        let mut proposals: Vec<u32> = Vec::with_capacity(gamma);
+        loop {
+            let last = *sig.last().expect("block returns >=1 row");
+            proposals.push(last.argmax);
+            let idx = proposals.len() - 1;
+            if proposals.len() >= gamma || ctrl.should_stop(&last, idx, rng) {
+                break;
+            }
+            sig = draft.block(&[last.argmax], c + proposals.len() - 1)?;
+        }
+        let tc = target.cur();
+        let mut inputs: Vec<u32> = committed[tc..].to_vec();
+        inputs.extend_from_slice(&proposals);
+        let vsig = target.block(&inputs, tc)?;
+        Ok((proposals, vsig, tc))
+    };
+    let (proposals, vsig, tc) = match fallible(draft, target, ctrl, rng) {
+        Ok(x) => x,
+        Err(e) => {
+            ctrl.on_abort();
+            return Err(e);
+        }
+    };
+    let (m, bonus) = accept_greedy(&vsig, tc, c, &proposals);
+    committed.extend_from_slice(&proposals[..m]);
+    committed.push(bonus);
+    target.rollback(c + m);
+    draft.rollback(c + m);
+    ctrl.on_verify(m, proposals.len());
+    Ok(StepOutcome::Round(StepCommit {
+        new_tokens: committed[c..].to_vec(),
+        drafted: proposals.len(),
+        accepted: m,
+        arm: ctrl.current_arm(),
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::sim_pair;
+    use crate::spec::{generate, StopController};
+
+    /// The restated round must decode byte-identically to the canonical
+    /// `SpecSession` loop — the sync contract in the `sim_round` docs.
+    #[test]
+    fn sim_round_matches_spec_session() {
+        for seed in [1u64, 9, 77] {
+            let prompt: Vec<u32> = [BOS, 5, 9, 4, 8, 11].to_vec();
+            let cfg = GenConfig { max_new: 24, gamma_max: 5, ..GenConfig::default() };
+            let (mut d, mut t) = sim_pair(seed, "qa", 0.9);
+            let mut ctrl = StopController::always_continue();
+            let mut rng = Rng::new(0);
+            let want = generate(&mut d, &mut t, &mut ctrl, &mut rng, &prompt, &cfg).unwrap();
+
+            let (mut d, mut t) = sim_pair(seed, "qa", 0.9);
+            d.reset();
+            t.reset();
+            let mut ctrl = StopController::always_continue();
+            let mut rng = Rng::new(0);
+            let mut committed = prompt.clone();
+            loop {
+                let out = sim_round(
+                    &mut d,
+                    &mut t,
+                    &mut ctrl,
+                    &mut rng,
+                    &mut committed,
+                    prompt.len(),
+                    24,
+                    5,
+                    4096,
+                )
+                .unwrap();
+                if matches!(out, StepOutcome::Finished(_)) {
+                    break;
+                }
+            }
+            assert_eq!(committed, want.tokens, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn trivial_plan_runs_clean_and_deterministically() {
+        let plan = SimPlan {
+            seed: 3,
+            mode: "workers".into(),
+            slots: 2,
+            workers: 2,
+            gamma_max: 4,
+            method: "seq-ucb1".into(),
+            cache: true,
+            sharing: true,
+            page_size: 8,
+            kv_pages: 0,
+            faults: false,
+            max_faults: 0,
+            sabotage: false,
+            ops: vec![
+                SimOp::Submit {
+                    req: 0,
+                    prompt: "hello world".into(),
+                    category: "qa".into(),
+                    max_new: 6,
+                    deadline_ns: None,
+                },
+                SimOp::Step { n: 3 },
+                SimOp::Submit {
+                    req: 1,
+                    prompt: "hello world again".into(),
+                    category: "qa".into(),
+                    max_new: 5,
+                    deadline_ns: None,
+                },
+            ],
+        };
+        let a = run_plan(&plan);
+        let b = run_plan(&plan);
+        assert_eq!(a.violation, None, "trace:\n{}", a.trace.join("\n"));
+        assert_eq!(a.trace, b.trace, "same plan ⇒ identical trace");
+        assert_eq!(a.trace_hash, b.trace_hash);
+        assert_eq!(a.count(FinishStatus::Done), 2);
+    }
+}

@@ -376,6 +376,59 @@ impl<'a> SpecSession<'a> {
 
         self.ctrl.session_start(self.rng);
 
+        // the fallible middle of the round: a model error here means the
+        // play opened by session_start never sees a verification outcome —
+        // route it through on_abort so bandit counts stay conserved
+        // (rust/tests/engine_faults.rs pins this under fault injection)
+        let (proposals, sig_rows, vsig, tc, draft_ns, verify_ns) =
+            match self.draft_and_verify(c, gamma) {
+                Ok(x) => x,
+                Err(e) => {
+                    self.ctrl.on_abort();
+                    return Err(e);
+                }
+            };
+        let (m, bonus) = accept_greedy(&vsig, tc, c, &proposals);
+
+        self.committed.extend_from_slice(&proposals[..m]);
+        self.committed.push(bonus);
+        self.target.rollback(c + m);
+        self.draft.rollback(c + m);
+
+        self.ctrl.on_verify(m, proposals.len());
+        let arm = self.ctrl.current_arm();
+        self.rounds.push(RoundStat {
+            drafted: proposals.len(),
+            accepted: m,
+            arm,
+            draft_ns,
+            verify_ns,
+            signals: if self.cfg.collect_signals { sig_rows } else { Vec::new() },
+        });
+
+        // an EOS bonus is picked up by check_done on the next call — same
+        // endpoint as the classic loop's eager break, one state fewer
+        Ok(StepOutcome::Round(StepCommit {
+            new_tokens: self.committed[c..].to_vec(),
+            drafted: proposals.len(),
+            accepted: m,
+            arm,
+        }))
+    }
+
+    /// The fallible middle of a round: the draft's catch-up block plus
+    /// stop-ruled proposal blocks, then the target's single verification
+    /// block. Split out of [`SpecSession::step`] so an error between
+    /// `session_start` and `on_verify` can be absorbed via
+    /// [`DecodeControl::on_abort`] (play-count conservation). Returns
+    /// `(proposals, signal rows, verify rows, target cursor, draft ns,
+    /// verify ns)`.
+    #[allow(clippy::type_complexity)]
+    fn draft_and_verify(
+        &mut self,
+        c: usize,
+        gamma: usize,
+    ) -> anyhow::Result<(Vec<u32>, Vec<TokenSignals>, Vec<TokenSignals>, usize, u64, u64)> {
         // --- draft session: catch up on committed suffix, then propose
         let t_draft = Instant::now();
         let dc = self.draft.cur();
@@ -402,33 +455,8 @@ impl<'a> SpecSession<'a> {
         let mut inputs: Vec<u32> = self.committed[tc..].to_vec();
         inputs.extend_from_slice(&proposals);
         let vsig = self.target.block(&inputs, tc)?;
-        let (m, bonus) = accept_greedy(&vsig, tc, c, &proposals);
         let verify_ns = t_verify.elapsed().as_nanos() as u64;
-
-        self.committed.extend_from_slice(&proposals[..m]);
-        self.committed.push(bonus);
-        self.target.rollback(c + m);
-        self.draft.rollback(c + m);
-
-        self.ctrl.on_verify(m, proposals.len());
-        let arm = self.ctrl.current_arm();
-        self.rounds.push(RoundStat {
-            drafted: proposals.len(),
-            accepted: m,
-            arm,
-            draft_ns,
-            verify_ns,
-            signals: if self.cfg.collect_signals { sig_rows } else { Vec::new() },
-        });
-
-        // an EOS bonus is picked up by check_done on the next call — same
-        // endpoint as the classic loop's eager break, one state fewer
-        Ok(StepOutcome::Round(StepCommit {
-            new_tokens: self.committed[c..].to_vec(),
-            drafted: proposals.len(),
-            accepted: m,
-            arm,
-        }))
+        Ok((proposals, sig_rows, vsig, tc, draft_ns, verify_ns))
     }
 
     /// Close the session and return the accumulated result. Valid at any

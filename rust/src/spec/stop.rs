@@ -40,6 +40,15 @@ pub trait DecodeControl: Send {
     /// Verification outcome for the session: `accepted` of `drafted`.
     fn on_verify(&mut self, accepted: usize, drafted: usize);
 
+    /// The session that [`DecodeControl::session_start`] opened will never
+    /// see a verification outcome — a model error or a dropped batch seat
+    /// killed the round before the target's rows came back. Implementations
+    /// with play-count accounting must absorb the abort so counts stay
+    /// conserved (the aborted round accepted nothing, so a zero-reward
+    /// observation is the honest outcome). Default: no-op, for stateless
+    /// controllers.
+    fn on_abort(&mut self) {}
+
     /// A new request begins (per-request policy state resets; bandit
     /// memory persists — the whole point of an *online* method).
     fn reset_request(&mut self);

@@ -1,0 +1,136 @@
+//! Shared scaffolding for the `engine_*` integration suites: the
+//! sim-backend config base, the greedy oracle, burst/collect/stream
+//! helpers, and a minimal raw-TCP HTTP client (docs/TESTING.md).
+//!
+//! Every suite uses a subset, so the helpers carry `#[allow(dead_code)]`
+//! — each integration-test binary compiles this module independently.
+
+use std::io::{Read, Write};
+use std::time::Duration;
+
+use tapout::engine::{
+    BackendKind, EngineConfig, Policy, Request, Response, StreamEvent,
+};
+use tapout::models::{sim_encode, Scenario, SimModel};
+use tapout::spec::{greedy, GenConfig, BOS};
+use tapout::util::Json;
+
+/// Default decode budget the suites share.
+#[allow(dead_code)]
+pub const MAX_NEW: usize = 48;
+
+/// Generous wall-clock bound for any single reply (CI machines vary).
+#[allow(dead_code)]
+pub const TIMEOUT: Duration = Duration::from_secs(120);
+
+/// The common simulator-backend engine config: suites override mode,
+/// batching, cache and paging knobs on the returned value.
+#[allow(dead_code)]
+pub fn sim_config(workers: usize, slots: usize) -> EngineConfig {
+    EngineConfig {
+        method: "seq-ucb1".into(),
+        gamma_max: 64,
+        sched: Policy::Fcfs,
+        slots,
+        workers,
+        backend: BackendKind::sim_default(),
+        ..EngineConfig::default()
+    }
+}
+
+/// `n` distinct prompts labeled per suite (distinct text ⇒ distinct sim
+/// scenarios, so cross-suite replies never collide by accident).
+#[allow(dead_code)]
+pub fn burst_prompts(n: usize, label: &str) -> Vec<String> {
+    (0..n).map(|i| format!("{label} request number {i}: summarize the findings")).collect()
+}
+
+/// The target-only greedy continuation the engine must reproduce for a
+/// text submission — the scenario seed is a pure function of the prompt,
+/// exactly as the engine derives it internally.
+#[allow(dead_code)]
+pub fn oracle_tokens(text: &str, max_new: usize) -> Vec<u32> {
+    let mut prompt = vec![BOS];
+    prompt.extend(sim_encode(text));
+    let mut req = Request::new(0, text, max_new);
+    req.prompt = prompt.clone();
+    let mut target = SimModel::target(Scenario::new(req.scenario_seed(), &req.category));
+    let cfg = GenConfig { max_new, stop_at_eos: true, ..GenConfig::default() };
+    let r = greedy(&mut target, &prompt, &cfg).unwrap();
+    r.new_tokens().to_vec()
+}
+
+/// Await every response of a burst, in submission order.
+#[allow(dead_code)]
+pub fn collect(rxs: Vec<std::sync::mpsc::Receiver<Response>>) -> Vec<Response> {
+    rxs.into_iter()
+        .map(|rx| rx.recv_timeout(TIMEOUT).expect("response must arrive"))
+        .collect()
+}
+
+/// Drain one streaming reply: (concatenated ids, concatenated text,
+/// terminal response).
+#[allow(dead_code)]
+pub fn drain_stream(rx: std::sync::mpsc::Receiver<StreamEvent>) -> (Vec<u32>, String, Response) {
+    let mut ids = Vec::new();
+    let mut text = String::new();
+    loop {
+        match rx.recv_timeout(TIMEOUT).expect("stream must terminate") {
+            StreamEvent::Tokens { ids: i, text: t, .. } => {
+                ids.extend(i);
+                text.push_str(&t);
+            }
+            StreamEvent::Done(resp) => return (ids, text, *resp),
+        }
+    }
+}
+
+/// Raw-TCP GET against a test server (always bound to port 0); returns
+/// (status code, raw body).
+#[allow(dead_code)]
+pub fn http_get(addr: &str, path: &str) -> (u16, String) {
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).unwrap();
+    parse_http(&buf)
+}
+
+/// Raw-TCP POST with a content-length framed body; returns (status code,
+/// raw body).
+#[allow(dead_code)]
+pub fn http_post(addr: &str, path: &str, body: &str) -> (u16, String) {
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    write!(
+        s,
+        "POST {path} HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).unwrap();
+    parse_http(&buf)
+}
+
+/// Split a raw HTTP/1.1 response into (status code, body text).
+#[allow(dead_code)]
+pub fn parse_http(raw: &str) -> (u16, String) {
+    let code: u16 = raw.split_whitespace().nth(1).and_then(|c| c.parse().ok()).unwrap_or(0);
+    let body = raw.split("\r\n\r\n").skip(1).collect::<Vec<_>>().join("\r\n\r\n");
+    (code, body)
+}
+
+/// Like [`http_get`], with the body parsed as JSON (`Json::Null` when
+/// unparseable — asserting on a field then fails with context).
+#[allow(dead_code)]
+pub fn http_get_json(addr: &str, path: &str) -> (u16, Json) {
+    let (code, body) = http_get(addr, path);
+    (code, Json::parse(&body).unwrap_or(Json::Null))
+}
+
+/// Like [`http_post`], with the body parsed as JSON.
+#[allow(dead_code)]
+pub fn http_post_json(addr: &str, path: &str, body: &str) -> (u16, Json) {
+    let (code, reply) = http_post(addr, path, body);
+    (code, Json::parse(&reply).unwrap_or(Json::Null))
+}

@@ -12,51 +12,21 @@
 //!   * the occupancy/pad-waste gauges observe the batching that happened;
 //!   * decode failures still produce explicit error responses.
 
-use std::time::Duration;
+mod common;
 
-use tapout::engine::{BackendKind, BatchConfig, Engine, EngineConfig, Policy, Request, Response};
-use tapout::models::{sim_encode, Scenario, SimModel};
-use tapout::spec::{greedy, GenConfig, BOS};
-
-const MAX_NEW: usize = 48;
-const TIMEOUT: Duration = Duration::from_secs(120);
+use common::{collect, MAX_NEW, TIMEOUT};
+use tapout::engine::{BatchConfig, Engine, EngineConfig};
 
 fn config(workers: usize, slots: usize, batch: BatchConfig) -> EngineConfig {
-    EngineConfig {
-        method: "seq-ucb1".into(),
-        gamma_max: 64,
-        sched: Policy::Fcfs,
-        slots,
-        workers,
-        backend: BackendKind::sim_default(),
-        verify_batch: batch,
-        ..EngineConfig::default()
-    }
+    EngineConfig { verify_batch: batch, ..common::sim_config(workers, slots) }
 }
 
 fn burst_prompts(n: usize) -> Vec<String> {
-    (0..n)
-        .map(|i| format!("batched serving request number {i}: explain the result"))
-        .collect()
+    common::burst_prompts(n, "batched serving")
 }
 
-/// The target-only greedy continuation the engine must reproduce
-/// (identical to the oracle in engine_concurrent.rs).
 fn oracle_tokens(text: &str) -> Vec<u32> {
-    let mut prompt = vec![BOS];
-    prompt.extend(sim_encode(text));
-    let mut req = Request::new(0, text, MAX_NEW);
-    req.prompt = prompt.clone();
-    let mut target = SimModel::target(Scenario::new(req.scenario_seed(), &req.category));
-    let cfg = GenConfig { max_new: MAX_NEW, stop_at_eos: true, ..GenConfig::default() };
-    let r = greedy(&mut target, &prompt, &cfg).unwrap();
-    r.new_tokens().to_vec()
-}
-
-fn collect(rxs: Vec<std::sync::mpsc::Receiver<Response>>) -> Vec<Response> {
-    rxs.into_iter()
-        .map(|rx| rx.recv_timeout(TIMEOUT).expect("response must arrive"))
-        .collect()
+    common::oracle_tokens(text, MAX_NEW)
 }
 
 #[test]

@@ -24,30 +24,22 @@
 //!     the sharing, and outputs stay byte-identical with page sharing
 //!     on, off, and under an explicit (tight) arena in both modes.
 
-use std::sync::atomic::Ordering;
-use std::time::Duration;
+mod common;
 
-use tapout::engine::{
-    BackendKind, BatchConfig, Engine, EngineConfig, EngineMode, Policy, Request, Response,
-};
+use std::sync::atomic::Ordering;
+
+use common::{collect, oracle_tokens, TIMEOUT};
+use tapout::engine::{BatchConfig, Engine, EngineConfig, EngineMode};
 use tapout::models::{sim_encode, LanguageModel, Scenario, SimModel};
-use tapout::spec::{generate, greedy, GenConfig, MethodSpec, SpecSession, StepOutcome, BOS};
+use tapout::spec::{generate, GenConfig, MethodSpec, SpecSession, StepOutcome, BOS};
 use tapout::util::Rng;
 
+/// This suite uses a slightly tighter decode budget than the shared
+/// [`common::MAX_NEW`]: cache tests repeat every burst several times.
 const MAX_NEW: usize = 40;
-const TIMEOUT: Duration = Duration::from_secs(120);
 
 fn config(mode: EngineMode, workers: usize, slots: usize, cache: bool) -> EngineConfig {
-    EngineConfig {
-        method: "seq-ucb1".into(),
-        gamma_max: 64,
-        sched: Policy::Fcfs,
-        slots,
-        workers,
-        backend: BackendKind::sim_default(),
-        prefix_cache: cache,
-        ..EngineConfig::default()
-    }
+    EngineConfig { mode, prefix_cache: cache, ..common::sim_config(workers, slots) }
 }
 
 /// A burst sharing one long system-prompt prefix (the workload the cache
@@ -57,25 +49,6 @@ fn shared_prefix_prompts(n: usize) -> Vec<String> {
         "system: you are a terse serving assistant; answer from the shared template and stop. "
             .repeat(3);
     (0..n).map(|i| format!("{system}user {i}: question number {i} please")).collect()
-}
-
-/// The target-only greedy continuation the engine must reproduce
-/// (identical to the oracle in engine_concurrent.rs).
-fn oracle_tokens(text: &str, max_new: usize) -> Vec<u32> {
-    let mut prompt = vec![BOS];
-    prompt.extend(sim_encode(text));
-    let mut req = Request::new(0, text, max_new);
-    req.prompt = prompt.clone();
-    let mut target = SimModel::target(Scenario::new(req.scenario_seed(), &req.category));
-    let cfg = GenConfig { max_new, stop_at_eos: true, ..GenConfig::default() };
-    let r = greedy(&mut target, &prompt, &cfg).unwrap();
-    r.new_tokens().to_vec()
-}
-
-fn collect(rxs: Vec<std::sync::mpsc::Receiver<Response>>) -> Vec<Response> {
-    rxs.into_iter()
-        .map(|rx| rx.recv_timeout(TIMEOUT).expect("response must arrive"))
-        .collect()
 }
 
 fn run_burst(cfg: EngineConfig, prompts: &[String]) -> (Vec<Vec<u32>>, Engine) {

@@ -12,50 +12,13 @@
 //!     panicking);
 //!   * decode failures produce explicit error responses, not hangs.
 
-use std::time::Duration;
+mod common;
 
-use tapout::engine::{BackendKind, Engine, EngineConfig, Policy, Request, Response};
-use tapout::models::{sim_encode, Scenario, SimModel};
-use tapout::spec::{greedy, GenConfig, BOS};
-
-const MAX_NEW: usize = 48;
-const TIMEOUT: Duration = Duration::from_secs(120);
-
-fn sim_config(workers: usize, slots: usize) -> EngineConfig {
-    EngineConfig {
-        method: "seq-ucb1".into(),
-        gamma_max: 64,
-        sched: Policy::Fcfs,
-        slots,
-        workers,
-        backend: BackendKind::sim_default(),
-        ..EngineConfig::default()
-    }
-}
+use common::{collect, oracle_tokens, sim_config, MAX_NEW, TIMEOUT};
+use tapout::engine::{Engine, Policy};
 
 fn burst_prompts(n: usize) -> Vec<String> {
-    (0..n)
-        .map(|i| format!("concurrent serving request number {i}: summarize the findings"))
-        .collect()
-}
-
-/// What the engine computes internally for a text submission: the
-/// scenario seed is a pure function of the prompt.
-fn oracle_tokens(text: &str) -> Vec<u32> {
-    let mut prompt = vec![BOS];
-    prompt.extend(sim_encode(text));
-    let mut req = Request::new(0, text, MAX_NEW);
-    req.prompt = prompt.clone();
-    let mut target = SimModel::target(Scenario::new(req.scenario_seed(), &req.category));
-    let cfg = GenConfig { max_new: MAX_NEW, stop_at_eos: true, ..GenConfig::default() };
-    let r = greedy(&mut target, &prompt, &cfg).unwrap();
-    r.new_tokens().to_vec()
-}
-
-fn collect(rxs: Vec<std::sync::mpsc::Receiver<Response>>) -> Vec<Response> {
-    rxs.into_iter()
-        .map(|rx| rx.recv_timeout(TIMEOUT).expect("response must arrive"))
-        .collect()
+    common::burst_prompts(n, "concurrent serving")
 }
 
 #[test]
@@ -90,7 +53,7 @@ fn multi_worker_burst_matches_sequential_engine_and_greedy_oracle() {
         );
         assert_eq!(
             r.result.new_tokens(),
-            &oracle_tokens(&prompts[i])[..],
+            &oracle_tokens(&prompts[i], MAX_NEW)[..],
             "request {i}: output diverged from the greedy oracle"
         );
         total_sessions += r.result.rounds.len() as u64;
@@ -125,7 +88,7 @@ fn workers_may_exceed_slots_without_panicking() {
     let rxs: Vec<_> = prompts.iter().map(|p| eng.submit(p, MAX_NEW)).collect();
     for (i, r) in collect(rxs).iter().enumerate() {
         assert!(r.is_ok(), "request {i} failed: {:?}", r.error);
-        assert_eq!(r.result.new_tokens(), &oracle_tokens(&prompts[i])[..]);
+        assert_eq!(r.result.new_tokens(), &oracle_tokens(&prompts[i], MAX_NEW)[..]);
     }
     assert_eq!(eng.metrics.lock().unwrap().completed, 16);
     eng.shutdown();

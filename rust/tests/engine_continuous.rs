@@ -18,54 +18,20 @@
 //!     (docs/ARCHITECTURE.md §13) without stalling a concurrent short
 //!     request, and its output stays byte-identical to the oracle.
 
+mod common;
+
 use std::time::Duration;
 
-use tapout::engine::{
-    BackendKind, Engine, EngineConfig, EngineMode, FinishStatus, Policy, Request, Response,
-    StreamEvent,
-};
-use tapout::models::{sim_encode, Scenario, SimModel};
-use tapout::spec::{greedy, GenConfig, BOS};
-
-const MAX_NEW: usize = 48;
-const TIMEOUT: Duration = Duration::from_secs(120);
+use common::{collect, oracle_tokens, MAX_NEW, TIMEOUT};
+use tapout::engine::{Engine, EngineConfig, EngineMode, FinishStatus, Request, StreamEvent};
+use tapout::models::sim_encode;
 
 fn config(mode: EngineMode, workers: usize, slots: usize) -> EngineConfig {
-    EngineConfig {
-        method: "seq-ucb1".into(),
-        gamma_max: 64,
-        sched: Policy::Fcfs,
-        slots,
-        workers,
-        backend: BackendKind::sim_default(),
-        mode,
-        ..EngineConfig::default()
-    }
+    EngineConfig { mode, ..common::sim_config(workers, slots) }
 }
 
 fn burst_prompts(n: usize) -> Vec<String> {
-    (0..n)
-        .map(|i| format!("continuous batching request number {i}: lay out the plan"))
-        .collect()
-}
-
-/// The target-only greedy continuation the engine must reproduce
-/// (identical to the oracle in engine_concurrent.rs).
-fn oracle_tokens(text: &str, max_new: usize) -> Vec<u32> {
-    let mut prompt = vec![BOS];
-    prompt.extend(sim_encode(text));
-    let mut req = Request::new(0, text, max_new);
-    req.prompt = prompt.clone();
-    let mut target = SimModel::target(Scenario::new(req.scenario_seed(), &req.category));
-    let cfg = GenConfig { max_new, stop_at_eos: true, ..GenConfig::default() };
-    let r = greedy(&mut target, &prompt, &cfg).unwrap();
-    r.new_tokens().to_vec()
-}
-
-fn collect(rxs: Vec<std::sync::mpsc::Receiver<Response>>) -> Vec<Response> {
-    rxs.into_iter()
-        .map(|rx| rx.recv_timeout(TIMEOUT).expect("response must arrive"))
-        .collect()
+    common::burst_prompts(n, "continuous batching")
 }
 
 #[test]

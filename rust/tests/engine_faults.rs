@@ -1,0 +1,230 @@
+//! Fault-path integration tests: the serving engine under injected
+//! `LanguageModel` failures (`models::FaultyModel`, docs/TESTING.md), in
+//! both execution modes:
+//!
+//!   * an injected forward error fails exactly the victim request
+//!     (`FinishStatus::Failed`, explicit error text) — never a hang, and
+//!     never a wrong token;
+//!   * the victim's KV slot is released: follow-up requests on the same
+//!     1-slot engine keep completing, and once the `max_faults` kill
+//!     budget is exhausted replies are byte-identical to the greedy
+//!     oracle again;
+//!   * a *crash* (sticky-broken model, the panic-equivalent) is healed by
+//!     the next request's reseat — the engine never needs a restart;
+//!   * lost reuse leases (`retain_prefix`/`adopt_pages` faults) degrade
+//!     to fresh prefill and stay lossless with the prefix cache on;
+//!   * shared-bandit play-count conservation survives aborted rounds:
+//!     sessions == updates == Σ arm counts even when forwards die between
+//!     a bandit select and its reward.
+
+mod common;
+
+use common::{collect, oracle_tokens, sim_config, TIMEOUT};
+use tapout::engine::{Engine, EngineConfig, EngineMode, FinishStatus};
+use tapout::models::FaultPlan;
+
+/// Fault tests use short decodes: the interesting part is the failure
+/// handling, not the decode length.
+const MAX_NEW: usize = 16;
+
+fn faulty_config(
+    mode: EngineMode,
+    workers: usize,
+    slots: usize,
+    faults: FaultPlan,
+) -> EngineConfig {
+    EngineConfig { mode, faults, ..sim_config(workers, slots) }
+}
+
+/// Σ arm counts == updates == sessions: every bandit select got exactly
+/// one reward (or an explicit abort settlement), no plays were minted or
+/// lost — the conservation law the sim-harness oracle also enforces.
+fn assert_play_conservation(eng: &Engine, ctx: &str) {
+    let sessions = eng.bandit_sessions();
+    let updates = eng.bandit_updates();
+    assert_eq!(sessions, updates, "{ctx}: aborted rounds must settle their bandit plays");
+    let counts = eng.bandit_counts().expect("seq-ucb1 has a shared bandit");
+    assert_eq!(counts.iter().sum::<u64>(), updates, "{ctx}: {counts:?}");
+}
+
+#[test]
+fn injected_errors_fail_requests_then_engine_heals_in_both_modes() {
+    for mode in [EngineMode::Workers, EngineMode::Continuous] {
+        // error_rate 1.0: every forward errors while kills remain, so the
+        // first request provably fails; the kill budget (max_faults per
+        // wrapped model) provably exhausts within 8 failures, so the tail
+        // of the burst provably succeeds
+        let plan = FaultPlan { seed: 11, error_rate: 1.0, max_faults: 2, ..FaultPlan::default() };
+        let eng = Engine::start(faulty_config(mode, 1, 1, plan)).unwrap();
+
+        let mut failed = 0usize;
+        let mut done = 0usize;
+        let mut last_ok = false;
+        for i in 0..12 {
+            let text = format!("fault probe number {i}");
+            let r = eng
+                .submit(&text, MAX_NEW)
+                .recv_timeout(TIMEOUT)
+                .unwrap_or_else(|_| panic!("{mode:?} request {i}: fault must not hang the engine"));
+            match r.status {
+                FinishStatus::Failed => {
+                    failed += 1;
+                    last_ok = false;
+                    let msg = r.error.as_deref().unwrap_or("");
+                    assert!(msg.contains("injected"), "{mode:?} request {i}: {msg}");
+                    if i == 0 {
+                        // the very first forward errors: mid-request failure
+                        assert!(r.result.new_tokens().is_empty() || !msg.is_empty());
+                    }
+                }
+                FinishStatus::Done => {
+                    done += 1;
+                    last_ok = true;
+                    assert_eq!(
+                        r.result.new_tokens(),
+                        &oracle_tokens(&text, MAX_NEW)[..],
+                        "{mode:?} request {i}: post-fault decode must be byte-exact"
+                    );
+                }
+                other => panic!("{mode:?} request {i}: unexpected status {other:?}"),
+            }
+            if i == 0 {
+                assert_eq!(failed, 1, "{mode:?}: the first forward must error under rate 1.0");
+            }
+        }
+        assert!(last_ok, "{mode:?}: the kill budget must exhaust before the burst ends");
+        assert!((1..=8).contains(&failed), "{mode:?}: {failed} failures, budget is 8");
+        assert_eq!(failed + done, 12, "{mode:?}");
+        {
+            let m = eng.metrics.lock().unwrap();
+            assert_eq!(m.failed as usize, failed, "{mode:?}");
+            assert_eq!(m.completed as usize, done, "{mode:?}");
+        }
+        assert_play_conservation(&eng, &format!("{mode:?} errors"));
+        eng.shutdown();
+    }
+}
+
+#[test]
+fn crash_is_failed_once_and_the_next_request_reseats_the_model() {
+    for mode in [EngineMode::Workers, EngineMode::Continuous] {
+        // a crash leaves the model sticky-broken; the engine's per-request
+        // reseat (begin_request / retain_prefix / adopt_pages) must heal
+        // it without restarting anything
+        let plan = FaultPlan { seed: 7, crash_rate: 1.0, max_faults: 1, ..FaultPlan::default() };
+        let eng = Engine::start(faulty_config(mode, 1, 1, plan)).unwrap();
+
+        let mut crashed = 0usize;
+        let mut last_ok = false;
+        for i in 0..8 {
+            let text = format!("crash probe number {i}");
+            let r = eng
+                .submit(&text, MAX_NEW)
+                .recv_timeout(TIMEOUT)
+                .unwrap_or_else(|_| panic!("{mode:?} request {i}: crash must not hang the engine"));
+            if r.status == FinishStatus::Failed {
+                crashed += 1;
+                last_ok = false;
+                assert!(
+                    r.error.as_deref().unwrap_or("").contains("crash"),
+                    "{mode:?} request {i}: {:?}",
+                    r.error
+                );
+            } else {
+                last_ok = true;
+                assert_eq!(r.status, FinishStatus::Done, "{mode:?} request {i}");
+                assert_eq!(r.result.new_tokens(), &oracle_tokens(&text, MAX_NEW)[..]);
+            }
+        }
+        // each wrapped model crashes at most once (max_faults 1), so at
+        // most 4 victims; request 0 provably crashes, the tail heals
+        assert!((1..=4).contains(&crashed), "{mode:?}: {crashed} crashes");
+        assert!(last_ok, "{mode:?}: the engine must fully heal after the crash budget");
+        assert_play_conservation(&eng, &format!("{mode:?} crashes"));
+        eng.shutdown();
+    }
+}
+
+#[test]
+fn lost_reuse_leases_never_corrupt_output() {
+    // every retain_prefix/adopt_pages lease is dropped: the cache can
+    // never serve a hit, but outputs must not move by a byte and nothing
+    // may fail — the lost lease degrades to fresh prefill (lossless)
+    let system = "system prompt shared across the whole burst for reuse. ".repeat(3);
+    let prompts: Vec<String> = (0..12).map(|i| format!("{system}user {i}: go")).collect();
+    for mode in [EngineMode::Workers, EngineMode::Continuous] {
+        let plan = FaultPlan { seed: 3, reuse_loss_rate: 1.0, ..FaultPlan::default() };
+        let mut cfg = faulty_config(mode, 2, 2, plan);
+        cfg.prefix_cache = true;
+        let eng = Engine::start(cfg).unwrap();
+        let rxs: Vec<_> = prompts.iter().map(|p| eng.submit(p, MAX_NEW)).collect();
+        for (i, r) in collect(rxs).iter().enumerate() {
+            assert!(r.is_ok(), "{mode:?} request {i}: lease loss is lossless: {:?}", r.error);
+            assert_eq!(
+                r.result.new_tokens(),
+                &oracle_tokens(&prompts[i], MAX_NEW)[..],
+                "{mode:?} request {i}: lost lease corrupted the decode"
+            );
+        }
+        assert_eq!(eng.metrics.lock().unwrap().failed, 0, "{mode:?}");
+        assert_play_conservation(&eng, &format!("{mode:?} lost leases"));
+        eng.shutdown();
+    }
+}
+
+#[test]
+fn moderate_fault_storm_terminates_conserves_and_recovers() {
+    // all fault shapes at once (errors, crashes, slow steps, lost leases)
+    // against a concurrent burst: every request reaches a terminal state,
+    // successes stay byte-exact, accounting balances, and the engine is
+    // provably serviceable again once the kill budgets drain
+    let prompts = common::burst_prompts(16, "fault storm");
+    for (seed, mode) in [(21u64, EngineMode::Workers), (22, EngineMode::Continuous)] {
+        let mut plan = FaultPlan::moderate(seed, 6);
+        plan.error_rate = 0.25; // hot enough to fire mid-decode, capped by max_faults
+        let mut cfg = faulty_config(mode, 2, 2, plan);
+        cfg.prefix_cache = true;
+        let eng = Engine::start(cfg).unwrap();
+
+        let rxs: Vec<_> = prompts.iter().map(|p| eng.submit(p, MAX_NEW)).collect();
+        let responses = collect(rxs);
+        let mut failed = 0usize;
+        for (i, r) in responses.iter().enumerate() {
+            match r.status {
+                FinishStatus::Done => assert_eq!(
+                    r.result.new_tokens(),
+                    &oracle_tokens(&prompts[i], MAX_NEW)[..],
+                    "{mode:?} request {i}: a surviving decode must be byte-exact"
+                ),
+                FinishStatus::Failed => {
+                    failed += 1;
+                    assert!(r.error.is_some(), "{mode:?} request {i}: failures carry a reason");
+                }
+                other => panic!("{mode:?} request {i}: unexpected status {other:?}"),
+            }
+        }
+        {
+            let m = eng.metrics.lock().unwrap();
+            assert_eq!(m.failed as usize + m.completed as usize, 16, "{mode:?}");
+            assert_eq!(m.failed as usize, failed, "{mode:?}");
+        }
+        assert_play_conservation(&eng, &format!("{mode:?} storm"));
+
+        // liveness: each failure burns one kill from a finite budget
+        // (max_faults per wrapped model), so bounded retries must succeed
+        let mut recovered = false;
+        for attempt in 0..40 {
+            let r = eng
+                .submit(&format!("recovery probe {attempt}"), MAX_NEW)
+                .recv_timeout(TIMEOUT)
+                .unwrap();
+            if r.is_ok() {
+                recovered = true;
+                break;
+            }
+            assert_eq!(r.status, FinishStatus::Failed, "{mode:?} attempt {attempt}");
+        }
+        assert!(recovered, "{mode:?}: kill budget exhausted yet no request succeeds");
+        eng.shutdown();
+    }
+}

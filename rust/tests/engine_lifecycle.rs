@@ -15,61 +15,21 @@
 //!     HTTP layer enforces the 413 body bound, reassembles split bodies,
 //!     and streams SSE events that concatenate to the unary reply.
 
+mod common;
+
 use std::io::{Read, Write};
 use std::sync::Arc;
 use std::time::Duration;
 
+use common::{drain_stream, http_get, http_post, oracle_tokens, parse_http, MAX_NEW, TIMEOUT};
 use tapout::engine::{
-    BackendKind, BatchConfig, Engine, EngineConfig, FinishStatus, HttpServer, Policy, Request,
-    Response, StreamEvent,
+    BatchConfig, Engine, EngineConfig, FinishStatus, HttpServer, Policy, Request, Response,
+    StreamEvent,
 };
-use tapout::models::{sim_encode, Scenario, SimModel};
-use tapout::spec::{greedy, GenConfig, BOS};
 use tapout::util::Json;
 
-const MAX_NEW: usize = 48;
-const TIMEOUT: Duration = Duration::from_secs(120);
-
 fn config(workers: usize, slots: usize, batch: BatchConfig) -> EngineConfig {
-    EngineConfig {
-        method: "seq-ucb1".into(),
-        gamma_max: 64,
-        sched: Policy::Fcfs,
-        slots,
-        workers,
-        backend: BackendKind::sim_default(),
-        verify_batch: batch,
-        ..EngineConfig::default()
-    }
-}
-
-/// The target-only greedy continuation the engine must reproduce
-/// (identical to the oracle in engine_concurrent.rs).
-fn oracle_tokens(text: &str, max_new: usize) -> Vec<u32> {
-    let mut prompt = vec![BOS];
-    prompt.extend(sim_encode(text));
-    let mut req = Request::new(0, text, max_new);
-    req.prompt = prompt.clone();
-    let mut target = SimModel::target(Scenario::new(req.scenario_seed(), &req.category));
-    let cfg = GenConfig { max_new, stop_at_eos: true, ..GenConfig::default() };
-    let r = greedy(&mut target, &prompt, &cfg).unwrap();
-    r.new_tokens().to_vec()
-}
-
-/// Drain one streaming reply: (concatenated ids, concatenated text,
-/// terminal response).
-fn drain_stream(rx: std::sync::mpsc::Receiver<StreamEvent>) -> (Vec<u32>, String, Response) {
-    let mut ids = Vec::new();
-    let mut text = String::new();
-    loop {
-        match rx.recv_timeout(TIMEOUT).expect("stream must terminate") {
-            StreamEvent::Tokens { ids: i, text: t, .. } => {
-                ids.extend(i);
-                text.push_str(&t);
-            }
-            StreamEvent::Done(resp) => return (ids, text, *resp),
-        }
-    }
+    EngineConfig { verify_batch: batch, ..common::sim_config(workers, slots) }
 }
 
 #[test]
@@ -352,34 +312,6 @@ fn long_job_is_not_starved_under_short_job_flood() {
 }
 
 // ---------------------------------------------------------------- HTTP --
-
-fn http_get(addr: &str, path: &str) -> (u16, String) {
-    let mut s = std::net::TcpStream::connect(addr).unwrap();
-    write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
-    let mut buf = String::new();
-    s.read_to_string(&mut buf).unwrap();
-    parse_http(&buf)
-}
-
-fn http_post(addr: &str, path: &str, body: &str) -> (u16, String) {
-    let mut s = std::net::TcpStream::connect(addr).unwrap();
-    write!(
-        s,
-        "POST {path} HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
-        body.len()
-    )
-    .unwrap();
-    let mut buf = String::new();
-    s.read_to_string(&mut buf).unwrap();
-    parse_http(&buf)
-}
-
-fn parse_http(raw: &str) -> (u16, String) {
-    let code: u16 =
-        raw.split_whitespace().nth(1).and_then(|c| c.parse().ok()).unwrap_or(0);
-    let body = raw.split("\r\n\r\n").skip(1).collect::<Vec<_>>().join("\r\n\r\n");
-    (code, body)
-}
 
 #[test]
 fn http_header_matching_is_case_insensitive_and_missing_length_is_411() {

@@ -2,12 +2,13 @@
 //! `make artifacts` has not been run (CI smoke without artifacts), so the
 //! suite is green in both states.
 
+mod common;
+
 use std::path::Path;
 use std::sync::Arc;
-use std::time::Duration;
 
+use common::{http_get_json, http_post_json, TIMEOUT};
 use tapout::engine::{Engine, EngineConfig, HttpServer, Policy};
-use tapout::util::Json;
 
 fn artifacts_ready() -> bool {
     Path::new("artifacts/manifest.json").exists()
@@ -34,8 +35,8 @@ fn engine_serves_requests_and_records_metrics() {
     let eng = engine();
     let rx1 = eng.submit("q: where is alice? a:", 32);
     let rx2 = eng.submit("translate: red cat -> ", 24);
-    let r1 = rx1.recv_timeout(Duration::from_secs(120)).unwrap();
-    let r2 = rx2.recv_timeout(Duration::from_secs(120)).unwrap();
+    let r1 = rx1.recv_timeout(TIMEOUT).unwrap();
+    let r2 = rx2.recv_timeout(TIMEOUT).unwrap();
     assert!(!r1.result.new_tokens().is_empty());
     assert!(!r2.result.new_tokens().is_empty());
     assert!(!r1.text.is_empty());
@@ -57,27 +58,8 @@ fn http_api_round_trip() {
     let http = HttpServer::start(eng.clone(), 0).unwrap();
     let addr = http.addr.clone();
 
-    let get = |path: &str| -> (u16, Json) {
-        use std::io::{Read, Write};
-        let mut s = std::net::TcpStream::connect(&addr).unwrap();
-        write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
-        let mut buf = String::new();
-        s.read_to_string(&mut buf).unwrap();
-        parse_http(&buf)
-    };
-    let post = |path: &str, body: &str| -> (u16, Json) {
-        use std::io::{Read, Write};
-        let mut s = std::net::TcpStream::connect(&addr).unwrap();
-        write!(
-            s,
-            "POST {path} HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
-            body.len()
-        )
-        .unwrap();
-        let mut buf = String::new();
-        s.read_to_string(&mut buf).unwrap();
-        parse_http(&buf)
-    };
+    let get = |path: &str| http_get_json(&addr, path);
+    let post = |path: &str, body: &str| http_post_json(&addr, path, body);
 
     let (code, health) = get("/health");
     assert_eq!(code, 200);
@@ -97,16 +79,6 @@ fn http_api_round_trip() {
     let (code, metrics) = get("/metrics");
     assert_eq!(code, 200);
     assert!(metrics.get("completed").unwrap().as_usize().unwrap() >= 1);
-}
-
-fn parse_http(raw: &str) -> (u16, Json) {
-    let code: u16 = raw
-        .split_whitespace()
-        .nth(1)
-        .and_then(|c| c.parse().ok())
-        .unwrap_or(0);
-    let body = raw.split("\r\n\r\n").nth(1).unwrap_or("{}");
-    (code, Json::parse(body).unwrap_or(Json::Null))
 }
 
 #[test]

@@ -1,0 +1,189 @@
+//! End-to-end tests for the deterministic engine simulator
+//! (`sim_harness/`, docs/TESTING.md): seed-matrix determinism, fault
+//! injection across both execution modes, cache/paging reply equality,
+//! the sabotage → oracle → shrink → replay pipeline, and replay of every
+//! checked-in regression fixture in `rust/tests/sim_regressions/`.
+
+use tapout::engine::FinishStatus;
+use tapout::sim_harness::{run_plan, shrink, SimOp, SimPlan};
+use tapout::util::Json;
+
+fn submit(req: u64, prompt: &str, max_new: usize) -> SimOp {
+    SimOp::Submit {
+        req,
+        prompt: prompt.to_string(),
+        category: "qa".to_string(),
+        max_new,
+        deadline_ns: None,
+    }
+}
+
+/// A handcrafted fault-free plan: shared-prefix flood + steps, no
+/// cancels/deadlines, so replies must be identical under every
+/// cache / sharing / paging configuration.
+fn flood_plan() -> SimPlan {
+    SimPlan {
+        seed: 40,
+        mode: "workers".to_string(),
+        slots: 2,
+        workers: 2,
+        gamma_max: 4,
+        method: "static-4".to_string(),
+        cache: false,
+        sharing: false,
+        page_size: 8,
+        kv_pages: 0,
+        faults: false,
+        max_faults: 0,
+        sabotage: false,
+        ops: vec![
+            submit(0, "shared context block alpha", 8),
+            SimOp::Step { n: 4 },
+            submit(1, "shared context block beta", 8),
+            submit(2, "shared context block gamma", 7),
+            SimOp::Step { n: 6 },
+            submit(3, "shared context block delta", 6),
+        ],
+    }
+}
+
+/// ISSUE acceptance: same seed ⇒ identical event trace and oracle
+/// outcome. Run a seed matrix twice and compare fingerprints.
+#[test]
+fn seed_matrix_replays_byte_identically() {
+    for seed in 0..6u64 {
+        let plan = SimPlan::generate(seed, 50);
+        let a = run_plan(&plan);
+        let b = run_plan(&plan);
+        assert_eq!(a.violation, None, "seed {seed} trace:\n{}", a.trace.join("\n"));
+        assert_eq!(a.trace, b.trace, "seed {seed}: trace must replay exactly");
+        assert_eq!(a.trace_hash, b.trace_hash, "seed {seed}");
+        assert_eq!(a.replies, b.replies, "seed {seed}");
+        assert_eq!(a.clock_ns, b.clock_ns, "seed {seed}: virtual time is part of the trace");
+    }
+}
+
+/// Fault injection across both execution cores: the oracle must hold
+/// (losslessness, conservation, legal statuses) with errors, crashes,
+/// slow steps and lost leases all firing.
+#[test]
+fn fault_injection_holds_invariants_in_both_modes() {
+    for seed in 0..4u64 {
+        for mode in ["workers", "continuous"] {
+            let mut plan = SimPlan::generate(seed, 50);
+            plan.faults = true;
+            plan.mode = mode.to_string();
+            let r = run_plan(&plan);
+            assert_eq!(
+                r.violation,
+                None,
+                "seed {seed} mode {mode} trace:\n{}",
+                r.trace.join("\n")
+            );
+            // every submitted request reached a terminal state
+            assert_eq!(r.replies.len(), plan.submits(), "seed {seed} mode {mode}");
+        }
+    }
+}
+
+/// Deterministic fault streams: the same faulted plan replays to the
+/// identical trace, fault timing included.
+#[test]
+fn faulted_runs_are_deterministic_too() {
+    let mut plan = SimPlan::generate(2, 40);
+    plan.faults = true;
+    let a = run_plan(&plan);
+    let b = run_plan(&plan);
+    assert_eq!(a.trace, b.trace);
+    assert_eq!(a.replies, b.replies);
+}
+
+/// Losslessness across engine configurations: cache on/off, page sharing
+/// on/off, auto-sized vs bounded arena — same plan, byte-identical
+/// replies (the oracle already pins each run against target-only greedy;
+/// this pins the runs against each other).
+#[test]
+fn cache_and_paging_config_never_changes_replies() {
+    let base = flood_plan();
+    let mut cached = base.clone();
+    cached.cache = true;
+    let mut shared_pages = base.clone();
+    shared_pages.cache = true;
+    shared_pages.sharing = true;
+    let mut bounded = base.clone();
+    bounded.cache = true;
+    bounded.sharing = true;
+    bounded.kv_pages = 96;
+    let mut continuous = base.clone();
+    continuous.mode = "continuous".to_string();
+
+    let want = run_plan(&base);
+    assert_eq!(want.violation, None, "trace:\n{}", want.trace.join("\n"));
+    assert_eq!(want.count(FinishStatus::Done), 4);
+    for (label, plan) in [
+        ("prefix cache", cached),
+        ("cache + page sharing", shared_pages),
+        ("bounded arena", bounded),
+        ("continuous core", continuous),
+    ] {
+        let got = run_plan(&plan);
+        assert_eq!(got.violation, None, "{label} trace:\n{}", got.trace.join("\n"));
+        assert_eq!(got.replies, want.replies, "{label}: replies must be config-invariant");
+    }
+}
+
+/// ISSUE acceptance: an intentionally injected invariant violation (the
+/// test-only sabotage hook) is caught by the oracle, shrinks to a ≤20-op
+/// trace, and the shrunk plan still reproduces after a JSON round-trip —
+/// the exact pipeline that produces `rust/tests/sim_regressions/`.
+#[test]
+fn sabotage_is_caught_shrunk_and_replayable() {
+    let mut plan = SimPlan::generate(5, 40);
+    plan.sabotage = true;
+    let report = run_plan(&plan);
+    let v = report.violation.expect("sabotaged page accounting must be caught");
+    assert!(v.what.contains("free-list drift"), "got: {}", v.what);
+
+    let min = shrink(&plan);
+    assert!(min.ops.len() <= 20, "shrunk to {} ops", min.ops.len());
+    assert!(run_plan(&min).violation.is_some());
+
+    let text = min.to_json().render();
+    let back = SimPlan::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back, min, "fixture serialization round-trips");
+    assert!(run_plan(&back).violation.is_some(), "violation survives the round-trip");
+}
+
+/// Replay every checked-in regression fixture: sabotage fixtures must
+/// still trip the oracle (pinning the detection + replay pipeline),
+/// all others must run clean (pinning fixed bugs closed).
+#[test]
+fn regression_fixtures_replay_as_recorded() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/sim_regressions");
+    let mut seen = 0;
+    for entry in std::fs::read_dir(dir).expect("sim_regressions/ exists") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        let name = path.file_name().unwrap().to_string_lossy().to_string();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let plan = SimPlan::from_json(&Json::parse(&text).unwrap_or_else(|e| {
+            panic!("{name}: bad json: {e}");
+        }))
+        .unwrap_or_else(|e| panic!("{name}: bad plan: {e}"));
+        let r = run_plan(&plan);
+        if plan.sabotage {
+            assert!(r.violation.is_some(), "{name}: sabotage fixture no longer trips the oracle");
+        } else {
+            assert_eq!(
+                r.violation,
+                None,
+                "{name}: regression resurfaced; trace:\n{}",
+                r.trace.join("\n")
+            );
+        }
+        seen += 1;
+    }
+    assert!(seen >= 2, "expected the checked-in fixtures, found {seen}");
+}

@@ -6,11 +6,13 @@
 //! target-only greedy continuation. Every method is run through that check
 //! under randomized scenarios (mini-proptest, util::prop).
 
+use tapout::engine::{PagePool, PrefixIndex};
 use tapout::models::sim::{Scenario, SimModel};
 use tapout::models::LanguageModel;
+use tapout::signals::TokenSignals;
 use tapout::spec::{
-    generate, greedy, FinishReason, GenConfig, MethodSpec, SpecSession, StepOutcome,
-    StopController,
+    accept_greedy, finish_check, generate, greedy, FinishReason, GenConfig, MethodSpec,
+    SpecSession, StepOutcome, StopController, EOS,
 };
 use tapout::util::prop::forall;
 use tapout::util::Rng;
@@ -243,4 +245,246 @@ fn weak_draft_yields_lower_acceptance() {
     let strong = acc(0.95);
     let weak = acc(0.4);
     assert!(strong > weak + 0.1, "strong {strong:.2} vs weak {weak:.2}");
+}
+
+// -- unit-level property tests over the shared decode primitives --------
+
+/// A signal row whose argmax is `tok` (tiny 8-token vocab).
+fn row(tok: u32) -> TokenSignals {
+    let mut logits = vec![0.0f32; 8];
+    logits[tok as usize] = 9.0;
+    TokenSignals::from_logits(&logits)
+}
+
+#[test]
+fn prop_accept_greedy_stops_at_the_first_mismatch() {
+    // accept_greedy must accept exactly the agreeing proposal prefix and
+    // hand back the verifier's own token at the first disagreement (or
+    // the bonus row when everything agrees) — under a randomized window
+    // offset (tc < c - 1 simulates a catch-up block)
+    forall(
+        19,
+        150,
+        |r, size| {
+            let gamma = 1 + (10.0 * size) as usize;
+            let tc = r.below(12);
+            let c = tc + 1 + r.below(8);
+            let proposals: Vec<u32> = (0..gamma).map(|_| r.below(6) as u32).collect();
+            // verifier rows mostly agree so long accept prefixes occur
+            let verify: Vec<u32> = proposals
+                .iter()
+                .map(|&t| if r.f64() < 0.75 { t } else { r.below(6) as u32 })
+                .collect();
+            let bonus = r.below(6) as u32;
+            (tc, c, proposals, verify, bonus)
+        },
+        |(tc, c, proposals, verify, bonus)| {
+            let off = c - 1 - tc;
+            // rows below the offset belong to the catch-up region and must
+            // never be consulted — fill them with an arbitrary token
+            let mut vsig = vec![row(0); off];
+            vsig.extend(verify.iter().map(|&t| row(t)));
+            vsig.push(row(*bonus));
+            let (accepted, got_bonus) = accept_greedy(&vsig, *tc, *c, proposals);
+            if accepted > proposals.len() {
+                return Err(format!("accepted {accepted} > drafted {}", proposals.len()));
+            }
+            for m in 0..accepted {
+                if verify[m] != proposals[m] {
+                    return Err(format!("accepted through a mismatch at {m}"));
+                }
+            }
+            if accepted < proposals.len() && verify[accepted] == proposals[accepted] {
+                return Err(format!("stopped at {accepted} although the verifier agreed"));
+            }
+            let want_bonus = if accepted < verify.len() { verify[accepted] } else { *bonus };
+            if got_bonus != want_bonus {
+                return Err(format!("bonus {got_bonus} != verifier token {want_bonus}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_finish_check_stops_in_priority_order() {
+    // budget beats EOS beats KV headroom, and nothing else ever stops a
+    // decode — the same rule in both the session and the engine stepper
+    forall(
+        57,
+        200,
+        |r, _| {
+            let prompt_len = 1 + r.below(24);
+            let new = r.below(40);
+            let max_new = 1 + r.below(32);
+            let slack = r.below(5); // KV headroom beyond the +2 safety margin
+            let stop_at_eos = r.below(2) == 0;
+            let last = match r.below(3) {
+                0 => None,
+                1 => Some(EOS),
+                _ => Some(7u32),
+            };
+            (prompt_len, new, max_new, slack, stop_at_eos, last)
+        },
+        |&(prompt_len, new, max_new, slack, stop_at_eos, last)| {
+            let committed = prompt_len + new;
+            let max_seq = committed + 2 + slack;
+            let cfg = GenConfig { max_new, gamma_max: 8, stop_at_eos, collect_signals: false };
+            let got = finish_check(committed, prompt_len, last, &cfg, max_seq);
+            let want = if new >= max_new {
+                Some(FinishReason::MaxNew)
+            } else if stop_at_eos && last == Some(EOS) {
+                Some(FinishReason::Eos)
+            } else if slack == 0 {
+                Some(FinishReason::KvExhausted)
+            } else {
+                None
+            };
+            if got != want {
+                return Err(format!(
+                    "new {new}/{max_new}, eos {stop_at_eos}/{last:?}, slack {slack}: \
+                     got {got:?}, want {want:?}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_page_pool_conserves_under_random_ops() {
+    // any interleaving of checkout-path page ops keeps Σ refcounts == Σ
+    // chain memberships and the free list exact — including deliberately
+    // undersized arenas where extension saturates
+    forall(
+        23,
+        80,
+        |r, size| {
+            let ops = 10 + (50.0 * size) as usize;
+            (r.next_u64(), 1 + r.below(7), r.below(2) == 0, 2 + r.below(3), ops)
+        },
+        |&(seed, page_size, tight, slots, ops)| {
+            let max_seq = 64usize;
+            // a tight arena holds roughly half the zero-sharing demand
+            let kv_pages = if tight { 1 + slots * max_seq.div_ceil(page_size) / 2 } else { 0 };
+            let mut p = PagePool::new(page_size, kv_pages, slots, max_seq);
+            let mut rng = Rng::new(seed);
+            for step in 0..ops {
+                let slot = rng.below(slots);
+                match rng.below(5) {
+                    0 => {
+                        p.drop_chain(slot);
+                    }
+                    1 => {
+                        p.evict_chain(slot);
+                    }
+                    2 => {
+                        p.resize(slot, rng.below(max_seq + 1));
+                    }
+                    3 => {
+                        // keep must stay within the resident chain
+                        let keep = rng.below(p.chain_pages(slot) * page_size + 1);
+                        p.reacquire(slot, keep, rng.below(max_seq + 1));
+                    }
+                    _ => {
+                        let src = rng.below(slots);
+                        if src != slot {
+                            let shared = rng.below(p.chain_pages(src) * page_size + 1);
+                            p.adopt(slot, src, shared, rng.below(max_seq + 1));
+                        }
+                    }
+                }
+                if let Some(e) = p.conservation_error() {
+                    return Err(format!("step {step}: {e}"));
+                }
+                if p.shared_pages() > p.resident_pages() {
+                    return Err(format!("step {step}: more shared than resident pages"));
+                }
+            }
+            for s in 0..slots {
+                p.drop_chain(s);
+            }
+            if p.resident_pages() != 0 || p.free_pages() != p.total_pages() {
+                return Err(format!(
+                    "dropping every chain must drain the arena: {} resident, {}/{} free",
+                    p.resident_pages(),
+                    p.free_pages(),
+                    p.total_pages()
+                ));
+            }
+            match p.conservation_error() {
+                Some(e) => Err(e),
+                None => Ok(()),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_prefix_index_tracks_registrations_and_finds_deepest_match() {
+    // under random insert/remove churn the trie always reports the
+    // verbatim registration per slot, best_match returns the true
+    // maximum common prefix, and removing everything frees every node
+    forall(
+        31,
+        80,
+        |r, size| (r.next_u64(), 2 + r.below(4), 12 + (60.0 * size) as usize),
+        |&(seed, slots, ops)| {
+            let mut ix = PrefixIndex::new();
+            let mut mirror: Vec<Option<Vec<u32>>> = vec![None; slots];
+            let mut rng = Rng::new(seed);
+            // a 3-token alphabet forces heavy prefix overlap between slots
+            fn tok(rng: &mut Rng) -> u32 {
+                1 + rng.below(3) as u32
+            }
+            fn lcp(a: &[u32], b: &[u32]) -> usize {
+                a.iter().zip(b).take_while(|(x, y)| x == y).count()
+            }
+            for step in 0..ops {
+                let slot = rng.below(slots);
+                if rng.below(4) == 0 {
+                    if let Some(pre) = mirror[slot].take() {
+                        ix.remove(slot, &pre);
+                    }
+                } else {
+                    let pre: Vec<u32> = (0..rng.below(8)).map(|_| tok(&mut rng)).collect();
+                    ix.insert(slot, &pre);
+                    mirror[slot] = if pre.is_empty() { None } else { Some(pre) };
+                }
+                for s in 0..slots {
+                    if ix.registration(s) != mirror[s].as_deref() {
+                        return Err(format!("step {step}: slot {s} registration drift"));
+                    }
+                }
+                let probe: Vec<u32> = (0..rng.below(10)).map(|_| tok(&mut rng)).collect();
+                let want = mirror.iter().flatten().map(|p| lcp(p, &probe)).max().unwrap_or(0);
+                match ix.best_match(&probe) {
+                    Some((s, n)) => {
+                        if n != want {
+                            return Err(format!("step {step}: match depth {n}, true LCP {want}"));
+                        }
+                        let Some(reg) = mirror[s].as_deref() else {
+                            return Err(format!("step {step}: matched unregistered slot {s}"));
+                        };
+                        if lcp(reg, &probe) != n {
+                            return Err(format!("step {step}: slot {s} does not share {n} tokens"));
+                        }
+                    }
+                    None if want != 0 => {
+                        return Err(format!("step {step}: no match, true LCP {want}"));
+                    }
+                    None => {}
+                }
+            }
+            for s in 0..slots {
+                if let Some(pre) = mirror[s].take() {
+                    ix.remove(s, &pre);
+                }
+            }
+            if ix.node_count() != 0 {
+                return Err(format!("trie leaked {} nodes after full removal", ix.node_count()));
+            }
+            Ok(())
+        },
+    );
 }
