@@ -5,14 +5,20 @@
 //! (skipped otherwise so `cargo bench` works pre-`make artifacts`).
 //! `TAPOUT_BENCH_FAST=1` shrinks everything for CI smoke.
 
+use std::io::{Read, Write};
+use std::net::TcpStream;
 use std::path::Path;
-use std::time::Instant;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use tapout::engine::{
-    BackendKind, BatchConfig, Engine, EngineConfig, EngineMode, FinishStatus, Policy,
+    BackendKind, BatchConfig, Engine, EngineConfig, EngineMode, FinishStatus, HttpConfig,
+    HttpServer, Policy, Router, RouterConfig,
 };
 use tapout::harness::{run_method, run_probe, sim_suite, Backend};
-use tapout::models::{sim_encode, LanguageModel, Manifest, ModelAssets, PjrtModel, SimModel};
+use tapout::models::{
+    sim_decode, sim_encode, LanguageModel, Manifest, ModelAssets, PjrtModel, SimModel,
+};
 use tapout::runtime::Runtime;
 use tapout::spec::{greedy, GenConfig, MethodSpec, BOS};
 use tapout::util::bench::{bench, fmt_ns, group};
@@ -36,6 +42,11 @@ const BENCH_CACHE_JSON_PATH: &str = "BENCH_cache.json";
 /// `paged_kv_bench`).
 const BENCH_PAGED_JSON_PATH: &str = "BENCH_paged.json";
 
+/// Multi-replica router-tier comparison (affinity vs round-robin, 1 vs 2
+/// replicas, held concurrent streams) lands here
+/// (`tapout.bench.router.v1`, schema below in `router_bench`).
+const BENCH_ROUTER_JSON_PATH: &str = "BENCH_router.json";
+
 fn main() {
     // TAPOUT_BENCH_ONLY=cache runs just the prefix-cache comparison —
     // the CI gate asserting cached prefill < uncached at slots >= 4
@@ -49,6 +60,13 @@ fn main() {
     // prefill tokens than slot-affinity when concurrency > slots
     if std::env::var("TAPOUT_BENCH_ONLY").as_deref() == Ok("paged") {
         run_paged_bench();
+        return;
+    }
+    // TAPOUT_BENCH_ONLY=router runs just the multi-replica router
+    // comparison — the CI gate asserting prefix-affinity placement
+    // aggregates strictly more fleet cache hits than round-robin
+    if std::env::var("TAPOUT_BENCH_ONLY").as_deref() == Ok("router") {
+        run_router_bench();
         return;
     }
     sim_tables();
@@ -69,6 +87,7 @@ fn main() {
     }
     run_cache_bench();
     run_paged_bench();
+    run_router_bench();
     pjrt_ladder();
 }
 
@@ -89,6 +108,16 @@ fn run_paged_bench() {
     match std::fs::write(BENCH_PAGED_JSON_PATH, report.render()) {
         Ok(()) => println!("\n[wrote {BENCH_PAGED_JSON_PATH}]"),
         Err(e) => eprintln!("\n[failed to write {BENCH_PAGED_JSON_PATH}: {e}]"),
+    }
+}
+
+fn run_router_bench() {
+    let mut report = Json::obj();
+    report.set("schema", "tapout.bench.router.v1");
+    router_bench(&mut report);
+    match std::fs::write(BENCH_ROUTER_JSON_PATH, report.render()) {
+        Ok(()) => println!("\n[wrote {BENCH_ROUTER_JSON_PATH}]"),
+        Err(e) => eprintln!("\n[failed to write {BENCH_ROUTER_JSON_PATH}: {e}]"),
     }
 }
 
@@ -728,4 +757,302 @@ fn pjrt_ladder() {
             );
         }
     }
+}
+
+/// Boot one sim-backend replica (prefix cache + page sharing on) behind
+/// its own reactor front end, for the router-tier comparison.
+fn bench_replica() -> (Arc<Engine>, HttpServer) {
+    let eng = Engine::start(EngineConfig {
+        method: "seq-ucb1".into(),
+        gamma_max: 64,
+        sched: Policy::Fcfs,
+        slots: 2,
+        workers: 2,
+        backend: BackendKind::sim_default(),
+        prefix_cache: true,
+        page_sharing: true,
+        ..EngineConfig::default()
+    })
+    .unwrap();
+    let eng = Arc::new(eng);
+    let http = HttpServer::start_with(
+        eng.clone(),
+        0,
+        HttpConfig { io_threads: 2, ..HttpConfig::default() },
+    )
+    .unwrap();
+    (eng, http)
+}
+
+/// A router over the replicas, waited on until every one probes alive.
+fn bench_router(reps: &[(Arc<Engine>, HttpServer)], affinity: bool) -> Router {
+    let cfg = RouterConfig {
+        replicas: reps.iter().map(|(_, h)| h.addr.clone()).collect(),
+        affinity,
+        page_size: 16,
+        probe_ms: 50,
+        io_threads: 2,
+        ..RouterConfig::default()
+    };
+    let router = Router::start(cfg, 0).unwrap();
+    for _ in 0..2400 {
+        if (0..reps.len()).all(|i| router.replica_alive(i)) {
+            return router;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    panic!("replicas never probed alive");
+}
+
+/// Target-only greedy text a routed request must reproduce byte-for-byte.
+fn bench_oracle_text(text: &str, max_new: usize) -> String {
+    let mut prompt = vec![BOS];
+    prompt.extend(sim_encode(text));
+    let mut req = tapout::engine::Request::new(0, text, max_new);
+    req.prompt = prompt.clone();
+    let mut target =
+        SimModel::target(tapout::models::Scenario::new(req.scenario_seed(), &req.category));
+    let cfg = GenConfig { max_new, stop_at_eos: true, ..GenConfig::default() };
+    sim_decode(greedy(&mut target, &prompt, &cfg).unwrap().new_tokens())
+}
+
+/// Raw-TCP unary generate; panics unless the reply is HTTP 200.
+fn bench_unary(addr: &str, prompt: &str, max_new: usize) -> Json {
+    let mut s = TcpStream::connect(addr).unwrap();
+    let body = format!("{{\"prompt\": \"{prompt}\", \"max_new\": {max_new}}}");
+    write!(s, "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}", body.len())
+        .unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).unwrap();
+    assert!(raw.starts_with("HTTP/1.1 200 "), "unary generate failed:\n{raw}");
+    let reply = raw.split_once("\r\n\r\n").map(|x| x.1).unwrap_or("");
+    Json::parse(reply).unwrap()
+}
+
+/// De-chunk a raw SSE response and concatenate its token-event text.
+fn bench_sse_text(raw: &str) -> String {
+    let body = raw.split_once("\r\n\r\n").map(|x| x.1).unwrap_or("");
+    let mut data = String::new();
+    let mut rest = body;
+    while let Some((size_str, after)) = rest.split_once("\r\n") {
+        let Ok(size) = usize::from_str_radix(size_str.trim(), 16) else { break };
+        if size == 0 || after.len() < size + 2 {
+            break;
+        }
+        data.push_str(&after[..size]);
+        rest = &after[size + 2..];
+    }
+    data.split("\n\n")
+        .filter_map(|ev| ev.trim_end().strip_prefix("data: "))
+        .filter_map(|p| Json::parse(p).ok())
+        .filter(|j| j.get("done").and_then(|d| d.as_bool()) != Some(true))
+        .filter_map(|j| j.get("text").and_then(|t| t.as_str()).map(str::to_string))
+        .collect()
+}
+
+/// One streaming generate over raw TCP. Returns (client-observed TTFT in
+/// ms — first sighting of an SSE data frame — and the concatenated
+/// stream text).
+fn bench_stream(addr: &str, prompt: &str, max_new: usize) -> (f64, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    let body = format!("{{\"prompt\": \"{prompt}\", \"max_new\": {max_new}, \"stream\": true}}");
+    let t0 = Instant::now();
+    write!(s, "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}", body.len())
+        .unwrap();
+    let mut raw = String::new();
+    let mut buf = [0u8; 4096];
+    let mut ttft_ms = 0.0;
+    loop {
+        match s.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => {
+                raw.push_str(&String::from_utf8_lossy(&buf[..n]));
+                if ttft_ms == 0.0 && raw.contains("data: ") {
+                    ttft_ms = t0.elapsed().as_nanos() as f64 / 1e6;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => panic!("stream read: {e}"),
+        }
+    }
+    (ttft_ms, bench_sse_text(&raw))
+}
+
+/// Multi-replica router tier (docs/ARCHITECTURE.md §15): the same
+/// grouped same-prefix workload through two replicas under
+/// prefix-affinity placement and under round-robin. Outputs are asserted
+/// byte-identical to the greedy oracle under both placements (routing is
+/// policy, never correctness). The headline quantity is the aggregate
+/// fleet prefix-cache hit count: consistent hashing on the first prompt
+/// page keeps each group on one replica so its cache concentrates, and
+/// the CI gate asserts affinity aggregates strictly more hits than
+/// round-robin. Also reported: throughput + client-observed TTFT at 1 vs
+/// 2 replicas under concurrent streaming clients, and a held
+/// concurrent-stream row on a single reactor front end.
+fn router_bench(report: &mut Json) {
+    use std::sync::atomic::Ordering;
+    let fast = std::env::var("TAPOUT_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let (groups, per_group, max_new) = if fast { (4usize, 4usize, 16usize) } else { (8, 6, 32) };
+    // the group tag sits inside the first-page routing window (BOS + 15
+    // prompt bytes at page size 16); the request index lands outside it
+    let gp = |g: usize, i: usize| format!("g{g} router bench head :: request {i} summarize");
+
+    group(&format!(
+        "router tier: {groups}x{per_group}-request same-prefix groups through 2 replicas, \
+         affinity vs round-robin (sim)"
+    ));
+    let mut agg_hits = [0u64; 2];
+    let mut placement_rows: Vec<Json> = Vec::new();
+    for (ci, (label, affinity)) in
+        [("affinity", true), ("round-robin", false)].into_iter().enumerate()
+    {
+        let reps: Vec<(Arc<Engine>, HttpServer)> = (0..2).map(|_| bench_replica()).collect();
+        let router = bench_router(&reps, affinity);
+        let t0 = Instant::now();
+        for g in 0..groups {
+            for i in 0..per_group {
+                let p = gp(g, i);
+                let j = bench_unary(&router.addr, &p, max_new);
+                assert_eq!(j.get("status").and_then(|x| x.as_str()), Some("done"));
+                let want = bench_oracle_text(&p, max_new);
+                assert_eq!(
+                    j.get("text").and_then(|x| x.as_str()),
+                    Some(want.as_str()),
+                    "{label}: routed output diverged from the greedy oracle"
+                );
+            }
+        }
+        let elapsed_ns = t0.elapsed().as_nanos() as f64;
+        let mut hits = 0u64;
+        let mut lookups = 0u64;
+        let mut new_tokens = 0u64;
+        for (eng, _) in &reps {
+            hits += eng.cache_stats().hits.load(Ordering::Relaxed);
+            lookups += eng.cache_stats().lookups.load(Ordering::Relaxed);
+            new_tokens += eng.metrics.lock().unwrap().new_tokens;
+        }
+        agg_hits[ci] = hits;
+        let rate = hits as f64 / lookups.max(1) as f64;
+        let tok_s = new_tokens as f64 / (elapsed_ns / 1e9);
+        println!(
+            "  {label:<12}: {tok_s:>9.0} tok/s  fleet cache {hits}/{lookups} (hit rate {rate:.2})"
+        );
+        let mut row = Json::obj();
+        row.set("placement", label)
+            .set("replicas", 2usize)
+            .set("requests", groups * per_group)
+            .set("throughput_tok_s", tok_s)
+            .set("wall_ms", elapsed_ns / 1e6)
+            .set("cache_hits", hits as usize)
+            .set("cache_lookups", lookups as usize)
+            .set("hit_rate", rate);
+        placement_rows.push(row);
+    }
+    // CI gate: prefix affinity must concentrate same-prefix groups well
+    // enough that the fleet prefix cache beats round-robin placement
+    assert!(
+        agg_hits[0] > agg_hits[1],
+        "prefix-affinity placement must aggregate strictly more fleet cache hits than \
+         round-robin ({} vs {})",
+        agg_hits[0],
+        agg_hits[1]
+    );
+
+    // 1 vs 2 replicas under concurrent streaming clients: throughput and
+    // client-observed TTFT through the router front end
+    let (n_clients, per_client) = if fast { (8usize, 2usize) } else { (16, 3) };
+    group(&format!(
+        "router scaling: {n_clients} concurrent streaming clients x {per_client} requests, \
+         1 vs 2 replicas (sim)"
+    ));
+    let mut scale_rows: Vec<Json> = Vec::new();
+    for n_replicas in [1usize, 2] {
+        let reps: Vec<(Arc<Engine>, HttpServer)> =
+            (0..n_replicas).map(|_| bench_replica()).collect();
+        let router = bench_router(&reps, true);
+        let addr = router.addr.clone();
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..n_clients)
+            .map(|c| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let mut ttfts = Vec::new();
+                    for r in 0..per_client {
+                        let p = format!("c{c:02} scale head :: streamed request {r}");
+                        let (ttft_ms, text) = bench_stream(&addr, &p, max_new);
+                        assert_eq!(text, bench_oracle_text(&p, max_new), "stream diverged");
+                        ttfts.push(ttft_ms);
+                    }
+                    ttfts
+                })
+            })
+            .collect();
+        let mut ttfts: Vec<f64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        let elapsed_ns = t0.elapsed().as_nanos() as f64;
+        ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| ttfts[((ttfts.len() - 1) as f64 * p / 100.0).round() as usize];
+        let new_tokens: u64 = reps.iter().map(|(e, _)| e.metrics.lock().unwrap().new_tokens).sum();
+        let tok_s = new_tokens as f64 / (elapsed_ns / 1e9);
+        println!(
+            "  replicas={n_replicas}: {tok_s:>9.0} tok/s  ttft p50 {:.2} ms  p95 {:.2} ms",
+            pct(50.0),
+            pct(95.0)
+        );
+        let mut row = Json::obj();
+        row.set("replicas", n_replicas)
+            .set("clients", n_clients)
+            .set("streams", ttfts.len())
+            .set("throughput_tok_s", tok_s)
+            .set("wall_ms", elapsed_ns / 1e6)
+            .set("ttft_p50_ms", pct(50.0))
+            .set("ttft_p95_ms", pct(95.0));
+        scale_rows.push(row);
+    }
+
+    // held concurrent streams against one reactor front end: every
+    // stream is submitted before any is drained, so all are in flight
+    // at once on a 2-thread I/O pool
+    let held = if fast { 32usize } else { 64 };
+    group(&format!("router front end: {held} held concurrent SSE streams, 2 I/O threads (sim)"));
+    let (eng, http) = bench_replica();
+    let t0 = Instant::now();
+    let mut socks: Vec<(TcpStream, String)> = Vec::new();
+    for i in 0..held {
+        let p = format!("s{i:02} held head :: concurrent stream body");
+        let mut s = TcpStream::connect(&http.addr).unwrap();
+        let body = format!("{{\"prompt\": \"{p}\", \"max_new\": {max_new}, \"stream\": true}}");
+        write!(
+            s,
+            "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        socks.push((s, p));
+    }
+    for (mut s, p) in socks {
+        let mut raw = String::new();
+        s.read_to_string(&mut raw).unwrap();
+        assert_eq!(bench_sse_text(&raw), bench_oracle_text(&p, max_new), "held stream diverged");
+    }
+    let elapsed_ns = t0.elapsed().as_nanos() as f64;
+    let peak_open = http.stats.peak_open.load(Ordering::Relaxed);
+    let new_tokens = eng.metrics.lock().unwrap().new_tokens;
+    let tok_s = new_tokens as f64 / (elapsed_ns / 1e9);
+    println!(
+        "  {held} held streams on one reactor (2 I/O threads): {tok_s:>9.0} tok/s  \
+         peak open {peak_open}"
+    );
+    let mut held_row = Json::obj();
+    held_row
+        .set("streams", held)
+        .set("io_threads", 2usize)
+        .set("throughput_tok_s", tok_s)
+        .set("wall_ms", elapsed_ns / 1e6)
+        .set("peak_open_connections", peak_open as usize);
+    report
+        .set("requests_per_placement", groups * per_group)
+        .set("max_new", max_new)
+        .set("placement", placement_rows)
+        .set("replica_scaling", scale_rows)
+        .set("held_streams", held_row);
 }

@@ -4,181 +4,268 @@
 //!   GET  /health              -> {"ok": true, ...}
 //!   GET  /metrics             -> serving metrics + per-worker stats +
 //!                                lifecycle counters + shared-bandit state
+//!                                + front-end I/O gauges
 //!   POST /generate            -> {"prompt": "...", "max_new": 64,
 //!                                 "stream": false, "deadline_ms": 0}
 //!
-//! One thread per connection; decoding parallelism comes from the
-//! engine's worker pool (server.rs). Error contract (docs/OPERATIONS.md):
-//! decode failures are a 500 with an error body, an over-size body is a
-//! 413, a POST without a `Content-Length` header is a 411 (header names
-//! match case-insensitively per RFC 9110), a chunked request body is a
-//! 501 (not implemented here), a shed request (admission control) is a
-//! 429 carrying the queue-wait estimate, and a request that outlives its
-//! deadline is a 504.
+//! Two front ends share every renderer in this module byte for byte
+//! (docs/ARCHITECTURE.md §15):
+//!
+//! * **reactor** (default): the nonblocking readiness loop in
+//!   reactor.rs — a fixed pool of `io_threads` I/O threads multiplexes
+//!   every connection, so thousands of concurrent SSE streams cost no
+//!   threads beyond the pool.
+//! * **blocking** (`HttpConfig::io_threads == 0`): the legacy
+//!   thread-per-connection loop, kept as the parity baseline.
+//!
+//! Decoding parallelism comes from the engine's worker pool (server.rs)
+//! either way. Error contract (docs/OPERATIONS.md): decode failures are
+//! a 500 with an error body, an over-size body is a 413, a POST without
+//! a `Content-Length` header is a 411 (header names match
+//! case-insensitively per RFC 9110), a chunked request body is a 501
+//! (not implemented here), a shed request (admission control) is a 429
+//! carrying the queue-wait estimate, a request that outlives its
+//! deadline is a 504, and a client that has not delivered its complete
+//! request within `header_timeout_ms` (slow loris) is a 408.
 //!
 //! With `"stream": true` the reply is a chunked `text/event-stream`: one
 //! `data:` event per committed decode round (ids + text) and a final
-//! `data:` event with `"done": true` and the request summary. A client
-//! that disconnects mid-stream cancels the request at the next round
-//! boundary — its KV slot, batch seat, and queue entry are released
+//! `data:` event with `"done": true` and the request summary; streams
+//! silent for `sse_keepalive_ms` carry an SSE comment (`: ping`) so
+//! intermediaries don't reap the connection. A client that disconnects
+//! mid-stream cancels the request at the next round boundary — its KV
+//! slot, batch seat, and queue entry are released
 //! (docs/ARCHITECTURE.md §10).
 
-use std::io::{BufRead, BufReader, Read, Write};
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, TryRecvError};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::util::Json;
 
-use super::request::{FinishStatus, Request, StreamEvent};
+use super::metrics::IoStats;
+use super::reactor::{EventSource, Gateway, GenerateStart, Reactor, ReactorConfig, SourceEvent};
+use super::request::{CancelFlag, FinishStatus, Request, Response, StreamEvent};
 use super::server::Engine;
 
 /// Largest request body accepted before answering 413 (the JSON body of
 /// a generate call is tiny; anything near this is a client bug).
 pub const MAX_BODY_BYTES: usize = 1 << 20;
 
-/// The background HTTP listener (one thread per connection).
+/// How long a unary generate may run before the front end gives up,
+/// cancels the decode, and answers 500.
+const UNARY_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Front-end tuning: which I/O model serves connections and the
+/// slow-loris / keep-alive clocks.
+#[derive(Clone, Debug)]
+pub struct HttpConfig {
+    /// I/O threads for the reactor front end; `0` selects the legacy
+    /// blocking thread-per-connection loop
+    pub io_threads: usize,
+    /// slow-loris bound: a connection that has not delivered its full
+    /// request within this window is answered 408 and freed
+    pub header_timeout_ms: u64,
+    /// SSE comment (`: ping`) interval on streams with no events
+    pub sse_keepalive_ms: u64,
+}
+
+impl Default for HttpConfig {
+    fn default() -> HttpConfig {
+        HttpConfig { io_threads: 4, header_timeout_ms: 10_000, sse_keepalive_ms: 15_000 }
+    }
+}
+
+enum Inner {
+    Blocking { stop: Arc<AtomicBool>, handle: Option<std::thread::JoinHandle<()>> },
+    Reactor(Reactor),
+}
+
+/// The background HTTP listener: a reactor I/O pool by default, the
+/// legacy blocking loop when `io_threads == 0`.
 pub struct HttpServer {
     /// bound address, e.g. `127.0.0.1:8077`
     pub addr: String,
-    handle: Option<std::thread::JoinHandle<()>>,
+    /// front-end I/O gauges (also surfaced under `io` in `/metrics`)
+    pub stats: Arc<IoStats>,
+    inner: Inner,
 }
 
 impl HttpServer {
-    /// Bind and serve in background threads. Port 0 picks a free port.
+    /// Bind and serve with the default front end (reactor, 4 I/O
+    /// threads). Port 0 picks a free port.
     pub fn start(engine: Arc<Engine>, port: u16) -> Result<HttpServer> {
+        HttpServer::start_with(engine, port, HttpConfig::default())
+    }
+
+    /// Bind and serve with explicit front-end tuning.
+    pub fn start_with(engine: Arc<Engine>, port: u16, cfg: HttpConfig) -> Result<HttpServer> {
+        if cfg.io_threads == 0 {
+            return HttpServer::start_blocking(engine, port, cfg);
+        }
+        let stats = Arc::new(IoStats::new("reactor", cfg.io_threads));
+        let gateway: Arc<dyn Gateway> =
+            Arc::new(EngineGateway { engine, stats: stats.clone() });
+        let rcfg = ReactorConfig {
+            io_threads: cfg.io_threads,
+            header_timeout: Duration::from_millis(cfg.header_timeout_ms.max(1)),
+            sse_keepalive: Duration::from_millis(cfg.sse_keepalive_ms.max(1)),
+        };
+        let reactor = Reactor::start(gateway, port, rcfg, stats.clone())?;
+        Ok(HttpServer { addr: reactor.addr.clone(), stats, inner: Inner::Reactor(reactor) })
+    }
+
+    fn start_blocking(engine: Arc<Engine>, port: u16, cfg: HttpConfig) -> Result<HttpServer> {
         let listener = TcpListener::bind(("127.0.0.1", port))?;
         let addr = listener.local_addr()?.to_string();
+        let stats = Arc::new(IoStats::new("blocking", 0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let st = stats.clone();
+        let sp = stop.clone();
         let handle = std::thread::Builder::new()
             .name("tapout-http".into())
             .spawn(move || {
                 for stream in listener.incoming() {
+                    if sp.load(Ordering::Relaxed) {
+                        break;
+                    }
                     let Ok(stream) = stream else { continue };
+                    st.accepted.fetch_add(1, Ordering::Relaxed);
                     let eng = engine.clone();
+                    let cst = st.clone();
+                    let c = cfg.clone();
                     std::thread::spawn(move || {
-                        let _ = handle_conn(stream, &eng);
+                        cst.conn_opened();
+                        let _ = handle_conn(stream, &eng, &cst, &c);
+                        cst.conn_closed();
                     });
                 }
             })?;
-        Ok(HttpServer { addr, handle: Some(handle) })
+        Ok(HttpServer {
+            addr,
+            stats,
+            inner: Inner::Blocking { stop, handle: Some(handle) },
+        })
+    }
+
+    /// Stop serving: close the listener and (reactor mode) sever every
+    /// open connection, then join the I/O threads. Idempotent. In-flight
+    /// decodes keep running in the engine; only their reply paths die.
+    pub fn stop(&mut self) {
+        match &mut self.inner {
+            Inner::Reactor(r) => r.stop(),
+            Inner::Blocking { stop, handle } => {
+                stop.store(true, Ordering::SeqCst);
+                // unblock the accept loop so it observes the flag
+                let woke = TcpStream::connect(&self.addr).is_ok();
+                if let Some(h) = handle.take() {
+                    if woke {
+                        let _ = h.join();
+                    }
+                    // if the wake-up connect failed the listener thread
+                    // stays parked on accept; detaching it is the legacy
+                    // behavior and it exits with the process
+                }
+            }
+        }
     }
 }
 
 impl Drop for HttpServer {
     fn drop(&mut self) {
-        // listener thread exits with the process; detach
-        if let Some(h) = self.handle.take() {
-            drop(h);
-        }
+        self.stop();
     }
 }
 
-fn handle_conn(stream: TcpStream, engine: &Engine) -> Result<()> {
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
-    let mut parts = line.split_whitespace();
-    let method = parts.next().unwrap_or("").to_string();
-    let path = parts.next().unwrap_or("/").to_string();
+// ---------------------------------------------------------------------------
+// shared renderers — the blocking loop, the reactor gateway, and the
+// router (router.rs) all emit these exact bytes
+// ---------------------------------------------------------------------------
 
-    // headers — field names are matched case-insensitively per RFC 9110
-    // §5.1 (clients legitimately send `content-length`, `Content-Length`,
-    // or any mix; an exact-case match silently drops their body length)
-    let mut content_length: Option<usize> = None;
-    let mut bad_length: Option<String> = None;
-    let mut chunked = false;
-    loop {
-        let mut h = String::new();
-        reader.read_line(&mut h)?;
-        let h = h.trim();
-        if h.is_empty() {
-            break;
-        }
-        if let Some((name, value)) = h.split_once(':') {
-            let (name, value) = (name.trim(), value.trim());
-            if name.eq_ignore_ascii_case("content-length") {
-                match value.parse() {
-                    Ok(n) => content_length = Some(n),
-                    // present but unparseable is a framing error (400),
-                    // distinct from the header being absent (411)
-                    Err(_) => bad_length = Some(value.to_string()),
-                }
-            } else if name.eq_ignore_ascii_case("transfer-encoding") {
-                chunked = value.to_ascii_lowercase().contains("chunked");
-            }
-        }
+/// Standard reason phrase for the status codes this stack emits.
+pub(crate) fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        408 => "Request Timeout",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        501 => "Not Implemented",
+        502 => "Bad Gateway",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Internal Server Error",
     }
-
-    // body-framing contract for routes that need a body (RFC 9110):
-    // chunked transfer coding is not implemented here — a chunked body
-    // read as `content-length` bytes would be garbage, so refuse it
-    // explicitly with 501; a POST with no length at all is 411 Length
-    // Required, not a misleading "bad json" 400 over an empty body
-    if method == "POST" && path == "/generate" {
-        if chunked {
-            let mut o = Json::obj();
-            o.set("error", "chunked transfer-encoding not supported: send content-length");
-            return respond(stream, 501, &o.render());
-        }
-        if let Some(bad) = bad_length {
-            let mut o = Json::obj();
-            o.set("error", format!("invalid content-length header: {bad:?}"));
-            return respond(stream, 400, &o.render());
-        }
-        if content_length.is_none() {
-            let mut o = Json::obj();
-            o.set("error", "missing content-length header (chunked bodies unsupported)");
-            return respond(stream, 411, &o.render());
-        }
-    }
-    let content_length = content_length.unwrap_or(0);
-
-    // over-size bodies are refused up front — never silently truncated
-    // into confusing JSON decode errors (docs/OPERATIONS.md)
-    if content_length > MAX_BODY_BYTES {
-        let mut o = Json::obj();
-        o.set(
-            "error",
-            format!("body too large: {content_length} bytes (max {MAX_BODY_BYTES})"),
-        );
-        return respond(stream, 413, &o.render());
-    }
-
-    // read the full declared body; read_exact loops over short reads, so
-    // a body split across TCP segments reassembles correctly, and a
-    // connection that closes early is an explicit 400 instead of a
-    // truncated-JSON decode error
-    let mut body = vec![0u8; content_length];
-    if content_length > 0 {
-        if let Err(e) = reader.read_exact(&mut body) {
-            let mut o = Json::obj();
-            o.set("error", format!("body ended before content-length ({content_length}): {e}"));
-            return respond(stream, 400, &o.render());
-        }
-    }
-    let body = String::from_utf8_lossy(&body).to_string();
-
-    // streaming generate owns the raw stream (chunked SSE writes)
-    if method == "POST" && path == "/generate" {
-        match parse_generate(&body) {
-            Ok((req, stream_mode)) => {
-                return if stream_mode {
-                    stream_generate(stream, engine, req)
-                } else {
-                    let (status, payload) = unary_generate(engine, req);
-                    respond(stream, status, &payload.render())
-                };
-            }
-            Err((status, payload)) => return respond(stream, status, &payload.render()),
-        }
-    }
-
-    let (status, payload) = route(engine, &method, &path);
-    respond(stream, status, &payload.render())
 }
 
-fn route(engine: &Engine, method: &str, path: &str) -> (u16, Json) {
+/// Render a complete plain HTTP response (status line, JSON headers,
+/// content-length framed body).
+pub(crate) fn plain_response(status: u16, body: &str) -> String {
+    format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        reason(status),
+        body.len()
+    )
+}
+
+/// The SSE response preamble (status line + chunked headers).
+pub(crate) const SSE_HEADERS: &str = "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n";
+
+/// Frame one SSE event (`data: <json>\n\n`) as a single HTTP chunk.
+pub(crate) fn sse_frame(payload: &str) -> String {
+    let data = format!("data: {payload}\n\n");
+    format!("{:X}\r\n{}\r\n", data.len(), data)
+}
+
+/// Frame an SSE comment (`: <note>\n\n`) as a single HTTP chunk —
+/// ignored by SSE clients, resets intermediaries' idle timers.
+pub(crate) fn sse_comment_frame(note: &str) -> String {
+    let data = format!(": {note}\n\n");
+    format!("{:X}\r\n{}\r\n", data.len(), data)
+}
+
+/// Render `{"error": msg}`.
+pub(crate) fn err_body(msg: impl Into<Json>) -> String {
+    let mut o = Json::obj();
+    o.set("error", msg);
+    o.render()
+}
+
+/// 501 for a chunked generate body (chunked transfer coding is not
+/// implemented here; reading it as content-length bytes would be
+/// garbage).
+pub(crate) fn framing_chunked() -> (u16, String) {
+    (501, err_body("chunked transfer-encoding not supported: send content-length"))
+}
+
+/// 400 for a present-but-unparseable content-length header (distinct
+/// from the header being absent, which is 411).
+pub(crate) fn framing_bad_length(bad: &str) -> (u16, String) {
+    (400, err_body(format!("invalid content-length header: {bad:?}")))
+}
+
+/// 411 for a generate POST with no content-length at all.
+pub(crate) fn framing_length_required() -> (u16, String) {
+    (411, err_body("missing content-length header (chunked bodies unsupported)"))
+}
+
+/// 413 for a declared body size over [`MAX_BODY_BYTES`] — refused up
+/// front, never silently truncated into confusing JSON decode errors.
+pub(crate) fn framing_too_large(declared: usize) -> (u16, String) {
+    (413, err_body(format!("body too large: {declared} bytes (max {MAX_BODY_BYTES})")))
+}
+
+/// Route a non-generate request; `io` carries the serving front end's
+/// gauges into `/metrics`.
+pub(crate) fn route(engine: &Engine, method: &str, path: &str, io: Option<&IoStats>) -> (u16, Json) {
     match (method, path) {
         ("GET", "/health") => {
             let mut o = Json::obj();
@@ -194,7 +281,13 @@ fn route(engine: &Engine, method: &str, path: &str) -> (u16, Json) {
                 .set("prefix_cache", engine.config.prefix_cache);
             (200, o)
         }
-        ("GET", "/metrics") => (200, engine.metrics_json()),
+        ("GET", "/metrics") => {
+            let mut m = engine.metrics_json();
+            if let Some(io) = io {
+                m.set("io", io.to_json());
+            }
+            (200, m)
+        }
         _ => {
             let mut o = Json::obj();
             o.set("error", "not found");
@@ -205,7 +298,7 @@ fn route(engine: &Engine, method: &str, path: &str) -> (u16, Json) {
 
 /// Parse a /generate body into a ready-to-submit request plus the
 /// client's streaming preference.
-fn parse_generate(body: &str) -> std::result::Result<(Request, bool), (u16, Json)> {
+pub(crate) fn parse_generate(body: &str) -> std::result::Result<(Request, bool), (u16, Json)> {
     let j = Json::parse(body).map_err(|e| {
         let mut o = Json::obj();
         o.set("error", format!("bad json: {e}"));
@@ -237,31 +330,388 @@ fn status_code(status: FinishStatus) -> u16 {
     }
 }
 
+/// The successful-unary reply body.
+fn unary_reply(resp: &Response) -> (u16, Json) {
+    if resp.is_ok() {
+        let mut o = Json::obj();
+        o.set("id", resp.id as usize)
+            .set("status", resp.status.label())
+            .set("text", resp.text.as_str())
+            .set("new_tokens", resp.result.new_tokens().len())
+            .set("mean_accepted", resp.result.mean_accepted())
+            .set("acceptance_rate", resp.result.acceptance_rate())
+            .set("decode_ms", resp.result.wall_ns as f64 / 1e6)
+            .set("tokens_per_sec", resp.tokens_per_sec());
+        (200, o)
+    } else {
+        // explicit terminal state: rejected/expired/failed replies carry
+        // their reason instead of dropping the waiter
+        let mut o = Json::obj();
+        o.set("id", resp.id as usize)
+            .set("status", resp.status.label())
+            .set("error", resp.error.as_deref().unwrap_or("decode failed"));
+        (status_code(resp.status), o)
+    }
+}
+
+/// One streaming tokens event body.
+fn tokens_payload(ids: &[u32], text: &str) -> Json {
+    let mut o = Json::obj();
+    o.set("ids", ids.iter().map(|&t| Json::from(t)).collect::<Vec<Json>>()).set("text", text);
+    o
+}
+
+/// The terminal streaming event body (`"done": true` + summary).
+fn done_payload(resp: &Response) -> Json {
+    let mut o = Json::obj();
+    o.set("done", true)
+        .set("id", resp.id as usize)
+        .set("status", resp.status.label())
+        .set("new_tokens", resp.result.new_tokens().len())
+        .set("mean_accepted", resp.result.mean_accepted())
+        .set("acceptance_rate", resp.result.acceptance_rate())
+        .set("decode_ms", resp.result.wall_ns as f64 / 1e6);
+    if let Some(e) = resp.error.as_deref() {
+        o.set("error", e);
+    }
+    o
+}
+
+/// The plain-JSON reply for a stream that terminated before any tokens
+/// (shed, expired in queue, failed) — sent instead of a 200 SSE stream.
+fn pre_stream_reply(resp: &Response) -> Json {
+    let mut o = Json::obj();
+    o.set("id", resp.id as usize)
+        .set("status", resp.status.label())
+        .set("error", resp.error.as_deref().unwrap_or("request did not complete"));
+    o
+}
+
+// ---------------------------------------------------------------------------
+// reactor gateway — the engine behind the readiness loop
+// ---------------------------------------------------------------------------
+
+/// [`Gateway`] impl serving one engine (reactor front end).
+struct EngineGateway {
+    engine: Arc<Engine>,
+    stats: Arc<IoStats>,
+}
+
+impl Gateway for EngineGateway {
+    fn route(&self, method: &str, path: &str, _body: &str) -> (u16, String) {
+        let (code, j) = route(&self.engine, method, path, Some(&self.stats));
+        (code, j.render())
+    }
+
+    fn generate(&self, body: &str) -> GenerateStart {
+        match parse_generate(body) {
+            Err((code, j)) => GenerateStart::Immediate { code, body: j.render() },
+            Ok((req, stream_mode)) => {
+                let cancel = req.cancel_flag();
+                if stream_mode {
+                    let rx = self.engine.submit_request_streaming(req);
+                    GenerateStart::Source(Box::new(StreamSource {
+                        rx,
+                        cancel,
+                        started: false,
+                        finished: false,
+                        queued: VecDeque::new(),
+                    }))
+                } else {
+                    let rx = self.engine.submit_request(req);
+                    GenerateStart::Source(Box::new(UnarySource {
+                        rx,
+                        cancel,
+                        deadline: Instant::now() + UNARY_TIMEOUT,
+                        finished: false,
+                    }))
+                }
+            }
+        }
+    }
+}
+
+/// Non-blocking view of a unary reply channel: one `Reply` event when
+/// the response (or the front-end timeout) arrives.
+struct UnarySource {
+    rx: Receiver<Response>,
+    cancel: CancelFlag,
+    deadline: Instant,
+    finished: bool,
+}
+
+impl EventSource for UnarySource {
+    fn poll_event(&mut self) -> Option<SourceEvent> {
+        if self.finished {
+            return None;
+        }
+        match self.rx.try_recv() {
+            Ok(resp) => {
+                self.finished = true;
+                let (code, j) = unary_reply(&resp);
+                Some(SourceEvent::Reply { code, body: j.render() })
+            }
+            Err(TryRecvError::Empty) => {
+                if Instant::now() < self.deadline {
+                    return None;
+                }
+                // give up on the decode, not just the reply: without the
+                // cancel the worker would keep burning its KV slot on a
+                // request nobody is waiting for
+                self.finished = true;
+                self.cancel.cancel();
+                Some(SourceEvent::Reply {
+                    code: 500,
+                    body: err_body("generation timed out or failed"),
+                })
+            }
+            Err(TryRecvError::Disconnected) => {
+                // same reply the blocking path's recv_timeout Err arm gives
+                self.finished = true;
+                self.cancel.cancel();
+                Some(SourceEvent::Reply {
+                    code: 500,
+                    body: err_body("generation timed out or failed"),
+                })
+            }
+        }
+    }
+
+    fn cancel(&mut self) {
+        self.cancel.cancel();
+    }
+}
+
+/// Non-blocking view of a streaming reply channel. The status line is
+/// held back until the first engine event: a request that terminates
+/// before any tokens (shed, expired in queue, failed) yields a plain
+/// `Reply` (429/504/500) instead of a 200 SSE stream — exactly the
+/// blocking path's contract.
+struct StreamSource {
+    rx: Receiver<StreamEvent>,
+    cancel: CancelFlag,
+    started: bool,
+    finished: bool,
+    queued: VecDeque<SourceEvent>,
+}
+
+impl StreamSource {
+    fn push_event(&mut self, ev: StreamEvent) {
+        match ev {
+            StreamEvent::Tokens { ids, text, .. } => {
+                self.queued.push_back(SourceEvent::Data(tokens_payload(&ids, &text).render()));
+            }
+            StreamEvent::Done(resp) => {
+                self.queued.push_back(SourceEvent::Data(done_payload(&resp).render()));
+                self.queued.push_back(SourceEvent::End);
+                self.finished = true;
+            }
+        }
+    }
+}
+
+impl EventSource for StreamSource {
+    fn poll_event(&mut self) -> Option<SourceEvent> {
+        if let Some(ev) = self.queued.pop_front() {
+            return Some(ev);
+        }
+        if self.finished {
+            return None;
+        }
+        match self.rx.try_recv() {
+            Ok(ev) => {
+                if !self.started {
+                    if let StreamEvent::Done(resp) = &ev {
+                        if resp.status != FinishStatus::Done {
+                            self.finished = true;
+                            return Some(SourceEvent::Reply {
+                                code: status_code(resp.status),
+                                body: pre_stream_reply(resp).render(),
+                            });
+                        }
+                    }
+                    self.started = true;
+                    self.push_event(ev);
+                    return Some(SourceEvent::StreamStart);
+                }
+                self.push_event(ev);
+                self.queued.pop_front()
+            }
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => {
+                self.finished = true;
+                if self.started {
+                    // engine side hung up without a Done event (shutdown)
+                    Some(SourceEvent::End)
+                } else {
+                    Some(SourceEvent::Reply { code: 500, body: err_body("engine unavailable") })
+                }
+            }
+        }
+    }
+
+    fn cancel(&mut self) {
+        self.cancel.cancel();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// blocking front end (parity baseline)
+// ---------------------------------------------------------------------------
+
+/// Is this read error a socket read-timeout (slow-loris deadline on the
+/// blocking path, relay tick on the router's proxy path)?
+pub(crate) fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+}
+
+/// Arm the socket's read timeout with the time left until `deadline`;
+/// false when the window is already spent.
+fn arm_deadline(stream: &TcpStream, deadline: Instant) -> bool {
+    let rem = deadline.saturating_duration_since(Instant::now());
+    !rem.is_zero() && stream.set_read_timeout(Some(rem)).is_ok()
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    engine: &Engine,
+    stats: &IoStats,
+    cfg: &HttpConfig,
+) -> Result<()> {
+    // slow-loris bound: the whole request (headers + body) must arrive
+    // within header_timeout_ms, enforced via the socket read timeout
+    let deadline = Instant::now() + Duration::from_millis(cfg.header_timeout_ms.max(1));
+    let timed_out = |stats: &IoStats, stream: TcpStream| {
+        stats.read_timeouts.fetch_add(1, Ordering::Relaxed);
+        respond(stream, 408, &err_body("request read timed out"))
+    };
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    if !arm_deadline(&stream, deadline) {
+        return timed_out(stats, stream);
+    }
+    match reader.read_line(&mut line) {
+        Ok(_) => {}
+        Err(e) if is_timeout(&e) => return timed_out(stats, stream),
+        Err(e) => return Err(e.into()),
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("/").to_string();
+
+    // headers — field names are matched case-insensitively per RFC 9110
+    // §5.1 (clients legitimately send `content-length`, `Content-Length`,
+    // or any mix; an exact-case match silently drops their body length)
+    let mut content_length: Option<usize> = None;
+    let mut bad_length: Option<String> = None;
+    let mut chunked = false;
+    loop {
+        let mut h = String::new();
+        if !arm_deadline(&stream, deadline) {
+            return timed_out(stats, stream);
+        }
+        match reader.read_line(&mut h) {
+            Ok(_) => {}
+            Err(e) if is_timeout(&e) => return timed_out(stats, stream),
+            Err(e) => return Err(e.into()),
+        }
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = h.split_once(':') {
+            let (name, value) = (name.trim(), value.trim());
+            if name.eq_ignore_ascii_case("content-length") {
+                match value.parse() {
+                    Ok(n) => content_length = Some(n),
+                    // present but unparseable is a framing error (400),
+                    // distinct from the header being absent (411)
+                    Err(_) => bad_length = Some(value.to_string()),
+                }
+            } else if name.eq_ignore_ascii_case("transfer-encoding") {
+                chunked = value.to_ascii_lowercase().contains("chunked");
+            }
+        }
+    }
+
+    // body-framing contract for routes that need a body (RFC 9110):
+    // chunked transfer coding is not implemented here — a chunked body
+    // read as `content-length` bytes would be garbage, so refuse it
+    // explicitly with 501; a POST with no length at all is 411 Length
+    // Required, not a misleading "bad json" 400 over an empty body
+    if method == "POST" && path == "/generate" {
+        if chunked {
+            let (code, body) = framing_chunked();
+            return respond(stream, code, &body);
+        }
+        if let Some(bad) = bad_length {
+            let (code, body) = framing_bad_length(&bad);
+            return respond(stream, code, &body);
+        }
+        if content_length.is_none() {
+            let (code, body) = framing_length_required();
+            return respond(stream, code, &body);
+        }
+    }
+    let content_length = content_length.unwrap_or(0);
+
+    // over-size bodies are refused up front — never silently truncated
+    // into confusing JSON decode errors (docs/OPERATIONS.md)
+    if content_length > MAX_BODY_BYTES {
+        let (code, body) = framing_too_large(content_length);
+        return respond(stream, code, &body);
+    }
+
+    // read the full declared body; read_exact loops over short reads, so
+    // a body split across TCP segments reassembles correctly, and a
+    // connection that closes early is an explicit 400 instead of a
+    // truncated-JSON decode error
+    let mut body = vec![0u8; content_length];
+    if content_length > 0 {
+        if !arm_deadline(&stream, deadline) {
+            return timed_out(stats, stream);
+        }
+        match reader.read_exact(&mut body) {
+            Ok(()) => {}
+            Err(e) if is_timeout(&e) => return timed_out(stats, stream),
+            Err(e) => {
+                let mut o = Json::obj();
+                o.set(
+                    "error",
+                    format!("body ended before content-length ({content_length}): {e}"),
+                );
+                return respond(stream, 400, &o.render());
+            }
+        }
+    }
+    let _ = stream.set_read_timeout(None);
+    let body = String::from_utf8_lossy(&body).to_string();
+    stats.requests.fetch_add(1, Ordering::Relaxed);
+
+    // streaming generate owns the raw stream (chunked SSE writes)
+    if method == "POST" && path == "/generate" {
+        match parse_generate(&body) {
+            Ok((req, stream_mode)) => {
+                return if stream_mode {
+                    stream_generate(stream, engine, req, stats, cfg)
+                } else {
+                    let (status, payload) = unary_generate(engine, req);
+                    respond(stream, status, &payload.render())
+                };
+            }
+            Err((status, payload)) => return respond(stream, status, &payload.render()),
+        }
+    }
+
+    let (status, payload) = route(engine, &method, &path, Some(stats));
+    respond(stream, status, &payload.render())
+}
+
 fn unary_generate(engine: &Engine, req: Request) -> (u16, Json) {
     let cancel = req.cancel_flag();
     let rx = engine.submit_request(req);
-    match rx.recv_timeout(std::time::Duration::from_secs(120)) {
-        Ok(resp) if resp.is_ok() => {
-            let mut o = Json::obj();
-            o.set("id", resp.id as usize)
-                .set("status", resp.status.label())
-                .set("text", resp.text.as_str())
-                .set("new_tokens", resp.result.new_tokens().len())
-                .set("mean_accepted", resp.result.mean_accepted())
-                .set("acceptance_rate", resp.result.acceptance_rate())
-                .set("decode_ms", resp.result.wall_ns as f64 / 1e6)
-                .set("tokens_per_sec", resp.tokens_per_sec());
-            (200, o)
-        }
-        Ok(resp) => {
-            // explicit terminal state: rejected/expired/failed replies
-            // carry their reason instead of dropping the waiter
-            let mut o = Json::obj();
-            o.set("id", resp.id as usize)
-                .set("status", resp.status.label())
-                .set("error", resp.error.as_deref().unwrap_or("decode failed"));
-            (status_code(resp.status), o)
-        }
+    match rx.recv_timeout(UNARY_TIMEOUT) {
+        Ok(resp) => unary_reply(&resp),
         Err(_) => {
             // give up on the decode, not just the reply: without the
             // cancel the worker would keep burning its KV slot on a
@@ -283,68 +733,68 @@ fn unary_generate(engine: &Engine, req: Request) -> (u16, Json) {
 /// gets the documented plain-JSON error reply (429/504/500) instead of
 /// a 200 SSE stream. Once tokens have flowed, the terminal status
 /// arrives in-band in the final `data:` event.
-fn stream_generate(mut stream: TcpStream, engine: &Engine, req: Request) -> Result<()> {
+fn stream_generate(
+    mut stream: TcpStream,
+    engine: &Engine,
+    req: Request,
+    stats: &IoStats,
+    cfg: &HttpConfig,
+) -> Result<()> {
     let cancel = req.cancel_flag();
     let rx = engine.submit_request_streaming(req);
     let first = match rx.recv() {
         Ok(ev) => ev,
         Err(_) => {
-            let mut o = Json::obj();
-            o.set("error", "engine unavailable");
-            return respond(stream, 500, &o.render());
+            return respond(stream, 500, &err_body("engine unavailable"));
         }
     };
     if let StreamEvent::Done(resp) = &first {
         if resp.status != FinishStatus::Done {
-            let mut o = Json::obj();
-            o.set("id", resp.id as usize)
-                .set("status", resp.status.label())
-                .set("error", resp.error.as_deref().unwrap_or("request did not complete"));
-            return respond(stream, status_code(resp.status), &o.render());
+            return respond(stream, status_code(resp.status), &pre_stream_reply(resp).render());
         }
     }
-    write!(
-        stream,
-        "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\n\
-         Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
-    )?;
+    stream.write_all(SSE_HEADERS.as_bytes())?;
+    let keepalive = Duration::from_millis(cfg.sse_keepalive_ms.max(1));
     let mut pending = Some(first);
     loop {
         let event = match pending.take() {
             Some(ev) => Ok(ev),
-            None => rx.recv(),
+            None => match rx.recv_timeout(keepalive) {
+                Ok(ev) => Ok(ev),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                    // long-silent stream: SSE comment so intermediaries
+                    // don't reap the connection
+                    stats.keepalives.fetch_add(1, Ordering::Relaxed);
+                    if write_chunk(&mut stream, &sse_comment_frame("ping")).is_err() {
+                        cancel.cancel();
+                        stats.write_cancels.fetch_add(1, Ordering::Relaxed);
+                        return Ok(());
+                    }
+                    continue;
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => Err(()),
+            },
         };
         match event {
             Ok(StreamEvent::Tokens { ids, text, .. }) => {
-                let mut o = Json::obj();
-                o.set("ids", ids.iter().map(|&t| Json::from(t)).collect::<Vec<Json>>())
-                    .set("text", text);
-                if write_sse_chunk(&mut stream, &o.render()).is_err() {
+                let frame = sse_frame(&tokens_payload(&ids, &text).render());
+                if write_chunk(&mut stream, &frame).is_err() {
                     // client disconnected: cancel and stop reading; the
                     // worker sees the flag at the next round boundary
                     cancel.cancel();
+                    stats.write_cancels.fetch_add(1, Ordering::Relaxed);
                     return Ok(());
                 }
             }
             Ok(StreamEvent::Done(resp)) => {
-                let mut o = Json::obj();
-                o.set("done", true)
-                    .set("id", resp.id as usize)
-                    .set("status", resp.status.label())
-                    .set("new_tokens", resp.result.new_tokens().len())
-                    .set("mean_accepted", resp.result.mean_accepted())
-                    .set("acceptance_rate", resp.result.acceptance_rate())
-                    .set("decode_ms", resp.result.wall_ns as f64 / 1e6);
-                if let Some(e) = resp.error.as_deref() {
-                    o.set("error", e);
-                }
-                let _ = write_sse_chunk(&mut stream, &o.render());
+                let frame = sse_frame(&done_payload(&resp).render());
+                let _ = write_chunk(&mut stream, &frame);
                 // terminating zero-length chunk ends the response
                 let _ = stream.write_all(b"0\r\n\r\n");
                 let _ = stream.flush();
                 return Ok(());
             }
-            Err(_) => {
+            Err(()) => {
                 // engine side hung up without a Done event (shutdown)
                 let _ = stream.write_all(b"0\r\n\r\n");
                 return Ok(());
@@ -353,30 +803,14 @@ fn stream_generate(mut stream: TcpStream, engine: &Engine, req: Request) -> Resu
     }
 }
 
-/// Write one SSE event (`data: <json>\n\n`) as a single HTTP chunk.
-fn write_sse_chunk(stream: &mut TcpStream, payload: &str) -> std::io::Result<()> {
-    let data = format!("data: {payload}\n\n");
-    write!(stream, "{:X}\r\n{}\r\n", data.len(), data)?;
+/// Write one pre-framed HTTP chunk and flush it.
+fn write_chunk(stream: &mut TcpStream, frame: &str) -> std::io::Result<()> {
+    stream.write_all(frame.as_bytes())?;
     stream.flush()
 }
 
 fn respond(mut stream: TcpStream, status: u16, body: &str) -> Result<()> {
-    let reason = match status {
-        200 => "OK",
-        400 => "Bad Request",
-        404 => "Not Found",
-        411 => "Length Required",
-        413 => "Payload Too Large",
-        429 => "Too Many Requests",
-        501 => "Not Implemented",
-        504 => "Gateway Timeout",
-        _ => "Internal Server Error",
-    };
-    write!(
-        stream,
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
-        body.len()
-    )?;
+    stream.write_all(plain_response(status, body).as_bytes())?;
     stream.flush()?;
     Ok(())
 }

@@ -626,6 +626,79 @@ impl LifecycleStats {
     }
 }
 
+/// Front-end I/O gauges (reactor or blocking HTTP loop, and the router
+/// data plane): connection and request counts, slow-loris timeouts,
+/// SSE keep-alives, disconnect/write-failure cancellations. All
+/// atomics; surfaced under `io` in `/metrics`.
+#[derive(Debug)]
+pub struct IoStats {
+    /// which front end is serving: `"reactor"`, `"blocking"`, `"router"`
+    pub mode: &'static str,
+    /// I/O threads in the pool (0 = thread-per-connection)
+    pub io_threads: usize,
+    /// connections accepted since boot
+    pub accepted: AtomicU64,
+    /// connections currently open
+    pub open: AtomicU64,
+    /// high-water mark of open connections
+    pub peak_open: AtomicU64,
+    /// complete requests parsed off connections
+    pub requests: AtomicU64,
+    /// connections answered 408 (slow-loris read deadline)
+    pub read_timeouts: AtomicU64,
+    /// SSE keep-alive comments written on long-silent streams
+    pub keepalives: AtomicU64,
+    /// decodes cancelled because a response write failed (client gone)
+    pub write_cancels: AtomicU64,
+    /// decodes cancelled because the client disconnected mid-stream
+    pub disconnects: AtomicU64,
+}
+
+impl IoStats {
+    /// Fresh gauges for a front end of the given mode / pool size.
+    pub fn new(mode: &'static str, io_threads: usize) -> IoStats {
+        IoStats {
+            mode,
+            io_threads,
+            accepted: AtomicU64::new(0),
+            open: AtomicU64::new(0),
+            peak_open: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+            read_timeouts: AtomicU64::new(0),
+            keepalives: AtomicU64::new(0),
+            write_cancels: AtomicU64::new(0),
+            disconnects: AtomicU64::new(0),
+        }
+    }
+
+    /// A connection opened: bump the open gauge and its high-water mark.
+    pub fn conn_opened(&self) {
+        let now = self.open.fetch_add(1, Ordering::Relaxed) + 1;
+        self.peak_open.fetch_max(now, Ordering::Relaxed);
+    }
+
+    /// A connection closed.
+    pub fn conn_closed(&self) {
+        self.open.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// JSON object for the `/metrics` `io` field.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("mode", self.mode)
+            .set("io_threads", self.io_threads)
+            .set("accepted", self.accepted.load(Ordering::Relaxed) as usize)
+            .set("open", self.open.load(Ordering::Relaxed) as usize)
+            .set("peak_open", self.peak_open.load(Ordering::Relaxed) as usize)
+            .set("requests", self.requests.load(Ordering::Relaxed) as usize)
+            .set("read_timeouts", self.read_timeouts.load(Ordering::Relaxed) as usize)
+            .set("keepalives", self.keepalives.load(Ordering::Relaxed) as usize)
+            .set("write_cancels", self.write_cancels.load(Ordering::Relaxed) as usize)
+            .set("disconnects", self.disconnects.load(Ordering::Relaxed) as usize);
+        o
+    }
+}
+
 /// Engine-wide atomics: updated by the dispatcher and every worker with
 /// no shared lock; snapshot by readers at any time.
 #[derive(Debug)]

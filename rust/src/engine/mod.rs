@@ -8,8 +8,10 @@
 //! concurrency design, §10 for the request lifecycle, §11 for
 //! continuous batching, §12 for the cross-request prefix-reuse KV
 //! cache ([`cache`], slot-affinity checkout in [`slots`]) shared by both
-//! execution modes, and §13 for the paged KV allocator with
-//! copy-on-write prefix sharing ([`paging`]) and chunked prefill
+//! execution modes, §13 for the paged KV allocator with
+//! copy-on-write prefix sharing ([`paging`]) and chunked prefill, and
+//! §15 for the nonblocking readiness-loop front end ([`reactor`]) and
+//! the prefix-affinity multi-replica router ([`router`])
 //! (DESIGN.md keeps the legacy section map).
 
 pub mod batcher;
@@ -17,7 +19,9 @@ pub mod cache;
 pub mod http;
 pub mod metrics;
 pub mod paging;
+pub mod reactor;
 pub mod request;
+pub mod router;
 pub mod scheduler;
 pub mod server;
 pub mod slots;
@@ -25,11 +29,13 @@ pub mod stepper;
 
 pub use batcher::{BatchConfig, BatchedTarget, Batcher, BatcherHandle};
 pub use cache::PrefixIndex;
-pub use http::HttpServer;
+pub use http::{HttpConfig, HttpServer};
 pub use metrics::{
-    BatchStats, CacheStats, DraftStats, EngineMetrics, EngineStats, LifecycleStats, PageStats,
-    StepStats, WorkerStats,
+    BatchStats, CacheStats, DraftStats, EngineMetrics, EngineStats, IoStats, LifecycleStats,
+    PageStats, StepStats, WorkerStats,
 };
+pub use reactor::{EventSource, Gateway, GenerateStart, Reactor, ReactorConfig, SourceEvent};
+pub use router::{HashRing, ReplicaView, Router, RouterConfig, RouterCore};
 pub use paging::{PageOp, PagePool};
 pub use request::{CancelFlag, EmitClip, FinishStatus, Request, Response, StreamEvent};
 pub use scheduler::{Policy, Scheduler};

@@ -1,0 +1,856 @@
+//! Nonblocking readiness-loop front end (docs/ARCHITECTURE.md §15).
+//!
+//! The blocking server (http.rs) pins one OS thread per connection — a
+//! thread per idle SSE stream. This module multiplexes every connection
+//! over a fixed pool of I/O threads instead: each thread runs a
+//! [`sys::Poller`] (epoll on Linux via hand-declared FFI — the sealed
+//! build image has no mio/tokio; elsewhere a portable `WouldBlock`-polling
+//! fallback) and drives per-connection state machines:
+//!
+//! ```text
+//! Read ──parse──▶ Generating ──Reply/End──▶ Closing ──flush──▶ closed
+//!   │ header/body deadline → 408              │
+//!   └── framing error → Closing               └ write error / read-0
+//!                                               → EventSource::cancel
+//! ```
+//!
+//! * **Read** accumulates the request until the headers + declared body
+//!   are complete, enforcing the slow-loris bound: a client that trickles
+//!   bytes past `header_timeout` gets a 408 and the connection back.
+//! * **Generating** polls a [`EventSource`] (a non-blocking view of the
+//!   engine's reply channel) every tick, queues rendered bytes on the
+//!   connection's outbound buffer, and flushes on writability. Client
+//!   disconnect (read-0 / EPOLLHUP) and write failure both map to
+//!   [`EventSource::cancel`] — the engine sees the same `CancelFlag` the
+//!   blocking path would have flipped. Streams silent for
+//!   `sse_keepalive` get an SSE comment (`: ping`) so intermediaries
+//!   don't reap the connection.
+//! * **Closing** drains the outbound buffer, then shuts the socket down.
+//!
+//! What gets served is behind the [`Gateway`] trait, so the engine front
+//! end (http.rs) and the multi-replica router (router.rs) share one
+//! event loop. Responses are rendered by the same helpers as the
+//! blocking path, byte for byte.
+
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::http::{self, MAX_BODY_BYTES};
+use super::metrics::IoStats;
+
+/// Largest header section accepted before the connection is refused
+/// (the blocking path reads lines unbounded; the reactor must cap its
+/// accumulation buffer).
+pub const MAX_HEADER_BYTES: usize = 64 * 1024;
+
+/// Outbound-buffer high-water mark: above this many queued bytes the
+/// source is not polled (backpressure on a slow client) until the
+/// socket drains.
+const HIGH_WATER: usize = 256 * 1024;
+
+/// Max source events rendered per connection per tick (fairness bound).
+const EVENTS_PER_TICK: usize = 64;
+
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKER: u64 = 1;
+const TOKEN_CONN_BASE: u64 = 2;
+
+/// One event from an [`EventSource`] — the non-blocking reply stream a
+/// connection in the `Generating` phase consumes.
+pub enum SourceEvent {
+    /// A complete plain (non-SSE) HTTP reply: status code + JSON body.
+    Reply {
+        /// HTTP status code
+        code: u16,
+        /// rendered JSON body
+        body: String,
+    },
+    /// Begin the SSE response (status line + chunked headers).
+    StreamStart,
+    /// One SSE `data:` payload (rendered JSON, unframed).
+    Data(String),
+    /// Terminal chunk: end the SSE stream and close.
+    End,
+}
+
+/// A non-blocking reply source for one in-flight request. `poll_event`
+/// must never block: `None` means "nothing yet, poll again next tick".
+/// After `Reply` or `End` the reactor stops polling.
+pub trait EventSource: Send {
+    /// Next event, if one is ready.
+    fn poll_event(&mut self) -> Option<SourceEvent>;
+    /// The client is gone (disconnect or write failure): release the
+    /// decode promptly (flip the request's `CancelFlag` or equivalent).
+    fn cancel(&mut self);
+}
+
+/// What `Gateway::generate` produced for a parsed request.
+pub enum GenerateStart {
+    /// Reply immediately (parse error, admission error, …).
+    Immediate {
+        /// HTTP status code
+        code: u16,
+        /// rendered JSON body
+        body: String,
+    },
+    /// A live request: poll this source until `Reply` or `End`.
+    Source(Box<dyn EventSource>),
+}
+
+/// The application behind the reactor: routes plain requests and starts
+/// generate requests. Implemented by the engine front end (http.rs) and
+/// the multi-replica router (router.rs). Handlers run on I/O threads and
+/// must not block.
+pub trait Gateway: Send + Sync {
+    /// Handle a non-generate request; returns (status, rendered body).
+    fn route(&self, method: &str, path: &str, body: &str) -> (u16, String);
+    /// Start a generate request from its raw body.
+    fn generate(&self, body: &str) -> GenerateStart;
+    /// Does this (method, path) take the generate path (and its
+    /// body-framing contract: 501/400/411 before the body arrives)?
+    fn is_generate(&self, method: &str, path: &str) -> bool {
+        method == "POST" && path == "/generate"
+    }
+}
+
+/// Reactor tuning knobs (`HttpConfig` maps onto these).
+#[derive(Clone, Debug)]
+pub struct ReactorConfig {
+    /// I/O threads in the pool (≥ 1); connection count is unbounded by it
+    pub io_threads: usize,
+    /// slow-loris bound: total time allowed to deliver headers + body
+    pub header_timeout: Duration,
+    /// SSE comment (`: ping`) interval on silent streams
+    pub sse_keepalive: Duration,
+}
+
+impl Default for ReactorConfig {
+    fn default() -> ReactorConfig {
+        ReactorConfig {
+            io_threads: 4,
+            header_timeout: Duration::from_millis(10_000),
+            sse_keepalive: Duration::from_millis(15_000),
+        }
+    }
+}
+
+/// The running event loop: a bound listener plus `io_threads` poller
+/// threads. Dropping (or [`Reactor::stop`]) closes every connection and
+/// joins the pool.
+pub struct Reactor {
+    /// bound address, e.g. `127.0.0.1:8077`
+    pub addr: String,
+    stop: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+    wakers: Vec<waker::WakerTx>,
+}
+
+impl Reactor {
+    /// Bind `port` (0 picks a free port) and serve `gateway` from a pool
+    /// of `cfg.io_threads` poller threads. `stats` receives the
+    /// connection/timeout/keepalive gauges (surfaced in `/metrics`).
+    pub fn start(
+        gateway: Arc<dyn Gateway>,
+        port: u16,
+        cfg: ReactorConfig,
+        stats: Arc<IoStats>,
+    ) -> Result<Reactor> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?.to_string();
+        let n = cfg.io_threads.max(1);
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let mut inboxes = Vec::with_capacity(n);
+        let mut rx_side = Vec::with_capacity(n);
+        let mut wakers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = waker::pair()?;
+            inboxes.push(Arc::new(Mutex::new(Vec::<TcpStream>::new())));
+            wakers.push(tx);
+            rx_side.push(rx);
+        }
+        // the accept thread (index 0) dispatches round-robin to every
+        // thread's inbox, its own included
+        let injectors: Vec<Injector> = inboxes
+            .iter()
+            .zip(wakers.iter())
+            .map(|(inbox, w)| {
+                Ok(Injector { inbox: inbox.clone(), waker: w.try_clone()? })
+            })
+            .collect::<std::io::Result<_>>()?;
+
+        let mut threads = Vec::with_capacity(n);
+        let mut listener = Some(listener);
+        for (t, rx) in rx_side.into_iter().enumerate() {
+            let gw = gateway.clone();
+            let c = cfg.clone();
+            let st = stats.clone();
+            let sp = stop.clone();
+            let inbox = inboxes[t].clone();
+            let l = listener.take();
+            let peers = if t == 0 { injectors.clone() } else { Vec::new() };
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("tapout-io-{t}"))
+                    .spawn(move || io_loop(gw, c, st, sp, l, inbox, rx, peers))?,
+            );
+        }
+        Ok(Reactor { addr, stop, threads, wakers })
+    }
+
+    /// Stop the loop: close the listener and every connection, then join
+    /// the I/O threads. Idempotent.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for w in &self.wakers {
+            w.wake();
+        }
+        for h in self.threads.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Reactor {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[derive(Clone)]
+struct Injector {
+    inbox: Arc<Mutex<Vec<TcpStream>>>,
+    waker: waker::WakerTx,
+}
+
+enum Phase {
+    Read { deadline: Instant },
+    Generating { source: Box<dyn EventSource>, sse: bool, last_event: Instant },
+    Closing,
+}
+
+struct Conn {
+    stream: TcpStream,
+    buf: Vec<u8>,
+    out: VecDeque<u8>,
+    phase: Phase,
+    wants_out: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, deadline: Instant) -> Conn {
+        Conn {
+            stream,
+            buf: Vec::new(),
+            out: VecDeque::new(),
+            phase: Phase::Read { deadline },
+            wants_out: false,
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn io_loop(
+    gateway: Arc<dyn Gateway>,
+    cfg: ReactorConfig,
+    stats: Arc<IoStats>,
+    stop: Arc<AtomicBool>,
+    listener: Option<TcpListener>,
+    inbox: Arc<Mutex<Vec<TcpStream>>>,
+    waker_rx: waker::WakerRx,
+    peers: Vec<Injector>,
+) {
+    let Ok(mut poller) = sys::Poller::new() else { return };
+    if let Some(l) = &listener {
+        let _ = poller.add(listener_fd(l), TOKEN_LISTENER, false);
+    }
+    let _ = poller.add(waker_rx.fd(), TOKEN_WAKER, false);
+    let mut conns: Vec<Option<Conn>> = Vec::new();
+    let mut free: Vec<usize> = Vec::new();
+    let mut rr = 0usize;
+    let mut events: Vec<u64> = Vec::new();
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            // dropping the listener and the conns closes every socket
+            return;
+        }
+        poller.wait(tick_timeout(&conns), &mut events);
+        waker_rx.drain();
+
+        // accept burst (thread 0 only): hand new connections round-robin
+        // to the pool; the waker write cuts the target thread's sleep
+        if let Some(l) = &listener {
+            loop {
+                match l.accept() {
+                    Ok((s, _)) => {
+                        let _ = s.set_nonblocking(true);
+                        stats.accepted.fetch_add(1, Ordering::Relaxed);
+                        let target = &peers[rr % peers.len()];
+                        rr += 1;
+                        target.inbox.lock().unwrap().push(s);
+                        target.waker.wake();
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => break,
+                }
+            }
+        }
+
+        // adopt connections handed to this thread
+        for s in std::mem::take(&mut *inbox.lock().unwrap()) {
+            let idx = free.pop().unwrap_or_else(|| {
+                conns.push(None);
+                conns.len() - 1
+            });
+            let token = TOKEN_CONN_BASE + idx as u64;
+            if poller.add(fd_of(&s), token, false).is_err() {
+                free.push(idx);
+                continue;
+            }
+            stats.conn_opened();
+            conns[idx] = Some(Conn::new(s, Instant::now() + cfg.header_timeout));
+        }
+
+        // pump every connection: readiness events only cut the sleep
+        // short — handlers use nonblocking I/O and tolerate WouldBlock,
+        // so a uniform pump is correct on both poller backends
+        for idx in 0..conns.len() {
+            let Some(conn) = conns[idx].as_mut() else { continue };
+            let keep = pump(conn, gateway.as_ref(), &cfg, &stats);
+            if !keep {
+                poller.del(fd_of(&conn.stream));
+                stats.conn_closed();
+                conns[idx] = None;
+                free.push(idx);
+                continue;
+            }
+            let want = !conn.out.is_empty();
+            if want != conn.wants_out {
+                let token = TOKEN_CONN_BASE + idx as u64;
+                poller.modify(fd_of(&conn.stream), token, want);
+                conn.wants_out = want;
+            }
+        }
+    }
+}
+
+/// Poll timeout in ms: tight while any stream is generating (its events
+/// arrive over an mpsc channel the poller cannot watch), relaxed while
+/// connections are only reading (socket readiness wakes us), long idle.
+fn tick_timeout(conns: &[Option<Conn>]) -> i32 {
+    let mut any = false;
+    for c in conns.iter().flatten() {
+        match c.phase {
+            Phase::Generating { .. } => return 2,
+            _ => any = true,
+        }
+    }
+    if any {
+        25
+    } else {
+        200
+    }
+}
+
+/// Advance one connection's state machine. Returns false when the
+/// connection is finished (or dead) and must be dropped.
+fn pump(conn: &mut Conn, gw: &dyn Gateway, cfg: &ReactorConfig, stats: &IoStats) -> bool {
+    let now = Instant::now();
+    let mut next_phase: Option<Phase> = None;
+    match &mut conn.phase {
+        Phase::Read { deadline } => {
+            let mut eof = false;
+            let mut tmp = [0u8; 16 * 1024];
+            loop {
+                match conn.stream.read(&mut tmp) {
+                    Ok(0) => {
+                        eof = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.buf.extend_from_slice(&tmp[..n]);
+                        if conn.buf.len() > MAX_BODY_BYTES + MAX_HEADER_BYTES {
+                            enqueue_plain(
+                                &mut conn.out,
+                                400,
+                                &http::err_body("request exceeds the accepted size"),
+                            );
+                            next_phase = Some(Phase::Closing);
+                            break;
+                        }
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => return false,
+                }
+            }
+            if next_phase.is_none() {
+                match try_parse(&conn.buf, gw) {
+                    ParseStep::Respond { code, body } => {
+                        enqueue_plain(&mut conn.out, code, &body);
+                        next_phase = Some(Phase::Closing);
+                    }
+                    ParseStep::Ready { method, path, body } => {
+                        stats.requests.fetch_add(1, Ordering::Relaxed);
+                        conn.buf.clear();
+                        if gw.is_generate(&method, &path) {
+                            match gw.generate(&body) {
+                                GenerateStart::Immediate { code, body } => {
+                                    enqueue_plain(&mut conn.out, code, &body);
+                                    next_phase = Some(Phase::Closing);
+                                }
+                                GenerateStart::Source(source) => {
+                                    next_phase = Some(Phase::Generating {
+                                        source,
+                                        sse: false,
+                                        last_event: now,
+                                    });
+                                }
+                            }
+                        } else {
+                            let (code, body) = gw.route(&method, &path, &body);
+                            enqueue_plain(&mut conn.out, code, &body);
+                            next_phase = Some(Phase::Closing);
+                        }
+                    }
+                    ParseStep::Incomplete => {
+                        if eof {
+                            if conn.buf.is_empty() {
+                                return false; // probe connection; nothing to answer
+                            }
+                            enqueue_plain(
+                                &mut conn.out,
+                                400,
+                                &http::err_body("connection closed before the request completed"),
+                            );
+                            next_phase = Some(Phase::Closing);
+                        } else if now >= *deadline {
+                            // slow loris: the client had header_timeout to
+                            // deliver the request; free the connection
+                            stats.read_timeouts.fetch_add(1, Ordering::Relaxed);
+                            enqueue_plain(
+                                &mut conn.out,
+                                408,
+                                &http::err_body("request read timed out"),
+                            );
+                            next_phase = Some(Phase::Closing);
+                        }
+                    }
+                }
+            }
+        }
+        Phase::Generating { source, sse, last_event } => {
+            // disconnect probe: a generating client sends nothing more,
+            // so read-0 (or a hard error) means it hung up — cancel the
+            // decode instead of streaming into the void
+            let mut tmp = [0u8; 1024];
+            loop {
+                match conn.stream.read(&mut tmp) {
+                    Ok(0) => {
+                        source.cancel();
+                        stats.disconnects.fetch_add(1, Ordering::Relaxed);
+                        return false;
+                    }
+                    Ok(_) => continue, // pipelined bytes: ignored (Connection: close)
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        source.cancel();
+                        stats.disconnects.fetch_add(1, Ordering::Relaxed);
+                        return false;
+                    }
+                }
+            }
+            // render pending events while the outbound buffer has room
+            // (backpressure: a slow client pauses the poll, not a thread)
+            if conn.out.len() < HIGH_WATER {
+                for _ in 0..EVENTS_PER_TICK {
+                    match source.poll_event() {
+                        None => break,
+                        Some(SourceEvent::Reply { code, body }) => {
+                            enqueue_plain(&mut conn.out, code, &body);
+                            next_phase = Some(Phase::Closing);
+                            break;
+                        }
+                        Some(SourceEvent::StreamStart) => {
+                            conn.out.extend(http::SSE_HEADERS.bytes());
+                            *sse = true;
+                            *last_event = now;
+                        }
+                        Some(SourceEvent::Data(payload)) => {
+                            conn.out.extend(http::sse_frame(&payload).into_bytes());
+                            *last_event = now;
+                        }
+                        Some(SourceEvent::End) => {
+                            conn.out.extend(b"0\r\n\r\n");
+                            next_phase = Some(Phase::Closing);
+                            break;
+                        }
+                    }
+                }
+            }
+            if next_phase.is_none()
+                && *sse
+                && now.duration_since(*last_event) >= cfg.sse_keepalive
+            {
+                // SSE comment chunk: ignored by clients, resets idle
+                // timers in intermediaries
+                conn.out.extend(http::sse_comment_frame("ping").into_bytes());
+                *last_event = now;
+                stats.keepalives.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        Phase::Closing => {}
+    }
+    if let Some(p) = next_phase {
+        conn.phase = p;
+    }
+
+    // flush the outbound buffer until the socket pushes back
+    while !conn.out.is_empty() {
+        let (head, _) = conn.out.as_slices();
+        match conn.stream.write(head) {
+            Ok(0) => return flush_failed(conn, stats),
+            Ok(n) => {
+                conn.out.drain(..n);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return flush_failed(conn, stats),
+        }
+    }
+    if matches!(conn.phase, Phase::Closing) && conn.out.is_empty() {
+        let _ = conn.stream.shutdown(std::net::Shutdown::Both);
+        return false;
+    }
+    true
+}
+
+/// A write failed mid-response: if a decode is attached, cancel it
+/// promptly so the engine frees the slot. Always drops the connection.
+fn flush_failed(conn: &mut Conn, stats: &IoStats) -> bool {
+    if let Phase::Generating { source, .. } = &mut conn.phase {
+        source.cancel();
+        stats.write_cancels.fetch_add(1, Ordering::Relaxed);
+    }
+    false
+}
+
+fn enqueue_plain(out: &mut VecDeque<u8>, code: u16, body: &str) {
+    out.extend(http::plain_response(code, body).into_bytes());
+}
+
+enum ParseStep {
+    Incomplete,
+    Ready { method: String, path: String, body: String },
+    Respond { code: u16, body: String },
+}
+
+/// Find the end of the header section: offset of the terminator and the
+/// body start. Accepts `\r\n\r\n` and bare `\n\n` (the blocking path's
+/// `read_line` + `trim` accepts both).
+fn find_header_end(buf: &[u8]) -> Option<(usize, usize)> {
+    for i in 0..buf.len() {
+        if buf[i..].starts_with(b"\r\n\r\n") {
+            return Some((i, i + 4));
+        }
+        if buf[i..].starts_with(b"\n\n") {
+            return Some((i, i + 2));
+        }
+    }
+    None
+}
+
+/// Incremental request parse over the accumulation buffer, mirroring the
+/// blocking path's framing contract exactly (same checks, same order,
+/// same error bodies): chunked generate → 501, unparseable
+/// content-length → 400, generate without content-length → 411,
+/// over-size body → 413.
+fn try_parse(buf: &[u8], gw: &dyn Gateway) -> ParseStep {
+    let Some((head_end, body_start)) = find_header_end(buf) else {
+        if buf.len() > MAX_HEADER_BYTES {
+            return ParseStep::Respond { code: 400, body: http::err_body("headers too large") };
+        }
+        return ParseStep::Incomplete;
+    };
+    let head = String::from_utf8_lossy(&buf[..head_end]).to_string();
+    let mut lines = head.split('\n').map(|l| l.trim_end_matches('\r'));
+    let mut first = lines.next().unwrap_or("").split_whitespace();
+    let method = first.next().unwrap_or("").to_string();
+    let path = first.next().unwrap_or("/").to_string();
+    let mut content_length: Option<usize> = None;
+    let mut bad_length: Option<String> = None;
+    let mut chunked = false;
+    for h in lines {
+        let h = h.trim();
+        if let Some((name, value)) = h.split_once(':') {
+            let (name, value) = (name.trim(), value.trim());
+            if name.eq_ignore_ascii_case("content-length") {
+                match value.parse() {
+                    Ok(n) => content_length = Some(n),
+                    Err(_) => bad_length = Some(value.to_string()),
+                }
+            } else if name.eq_ignore_ascii_case("transfer-encoding") {
+                chunked = value.to_ascii_lowercase().contains("chunked");
+            }
+        }
+    }
+    if gw.is_generate(&method, &path) {
+        if chunked {
+            let (code, body) = http::framing_chunked();
+            return ParseStep::Respond { code, body };
+        }
+        if let Some(bad) = bad_length {
+            let (code, body) = http::framing_bad_length(&bad);
+            return ParseStep::Respond { code, body };
+        }
+        if content_length.is_none() {
+            let (code, body) = http::framing_length_required();
+            return ParseStep::Respond { code, body };
+        }
+    }
+    let len = content_length.unwrap_or(0);
+    if len > MAX_BODY_BYTES {
+        let (code, body) = http::framing_too_large(len);
+        return ParseStep::Respond { code, body };
+    }
+    if buf.len() < body_start + len {
+        return ParseStep::Incomplete;
+    }
+    let body = String::from_utf8_lossy(&buf[body_start..body_start + len]).to_string();
+    ParseStep::Ready { method, path, body }
+}
+
+#[cfg(unix)]
+fn fd_of(stream: &TcpStream) -> i64 {
+    use std::os::unix::io::AsRawFd;
+    stream.as_raw_fd() as i64
+}
+#[cfg(not(unix))]
+fn fd_of(_stream: &TcpStream) -> i64 {
+    -1
+}
+
+#[cfg(unix)]
+fn listener_fd(l: &TcpListener) -> i64 {
+    use std::os::unix::io::AsRawFd;
+    l.as_raw_fd() as i64
+}
+#[cfg(not(unix))]
+fn listener_fd(_l: &TcpListener) -> i64 {
+    -1
+}
+
+/// Cross-thread wakeup: a nonblocking socketpair whose read end sits in
+/// the poller. Writing one byte cuts the target thread's sleep short
+/// (new connection handed over, or stop requested). On non-unix targets
+/// the fallback poller's bounded sleep makes the waker unnecessary.
+#[cfg(unix)]
+mod waker {
+    use std::io::{Read, Write};
+    use std::os::unix::net::UnixStream;
+
+    pub struct WakerTx(UnixStream);
+    pub struct WakerRx(UnixStream);
+
+    pub fn pair() -> std::io::Result<(WakerTx, WakerRx)> {
+        let (a, b) = UnixStream::pair()?;
+        a.set_nonblocking(true)?;
+        b.set_nonblocking(true)?;
+        Ok((WakerTx(a), WakerRx(b)))
+    }
+
+    impl WakerTx {
+        pub fn wake(&self) {
+            // a full pipe already means a wakeup is pending
+            let _ = (&self.0).write(&[1u8]);
+        }
+        pub fn try_clone(&self) -> std::io::Result<WakerTx> {
+            Ok(WakerTx(self.0.try_clone()?))
+        }
+    }
+
+    impl WakerRx {
+        pub fn drain(&self) {
+            let mut buf = [0u8; 64];
+            loop {
+                match (&self.0).read(&mut buf) {
+                    Ok(0) | Err(_) => break,
+                    Ok(_) => continue,
+                }
+            }
+        }
+        pub fn fd(&self) -> i64 {
+            use std::os::unix::io::AsRawFd;
+            self.0.as_raw_fd() as i64
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod waker {
+    pub struct WakerTx;
+    pub struct WakerRx;
+
+    pub fn pair() -> std::io::Result<(WakerTx, WakerRx)> {
+        Ok((WakerTx, WakerRx))
+    }
+
+    impl WakerTx {
+        pub fn wake(&self) {}
+        pub fn try_clone(&self) -> std::io::Result<WakerTx> {
+            Ok(WakerTx)
+        }
+    }
+
+    impl WakerRx {
+        pub fn drain(&self) {}
+        pub fn fd(&self) -> i64 {
+            -1
+        }
+    }
+}
+
+/// Readiness poller. On Linux this is epoll over hand-declared FFI (std
+/// already links libc, so the symbols resolve without any crate); the
+/// `epoll_event` layout is packed on x86_64 per the kernel ABI.
+/// Everywhere else a portable fallback sleeps a bounded tick and reports
+/// every registered token ready — correct because every handler uses
+/// nonblocking I/O and treats `WouldBlock` as "not actually ready".
+#[cfg(target_os = "linux")]
+mod sys {
+    use std::io;
+
+    #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+    #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLRDHUP: u32 = 0x2000;
+    const EPOLL_CLOEXEC: i32 = 0o2000000;
+
+    pub struct Poller {
+        ep: i32,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            let ep = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if ep < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Poller { ep })
+        }
+
+        fn ctl(&mut self, op: i32, fd: i64, token: u64, writable: bool) {
+            let mut ev = EpollEvent {
+                events: EPOLLIN | EPOLLRDHUP | if writable { EPOLLOUT } else { 0 },
+                data: token,
+            };
+            unsafe {
+                epoll_ctl(self.ep, op, fd as i32, &mut ev);
+            }
+        }
+
+        pub fn add(&mut self, fd: i64, token: u64, writable: bool) -> io::Result<()> {
+            let mut ev = EpollEvent {
+                events: EPOLLIN | EPOLLRDHUP | if writable { EPOLLOUT } else { 0 },
+                data: token,
+            };
+            let r = unsafe { epoll_ctl(self.ep, EPOLL_CTL_ADD, fd as i32, &mut ev) };
+            if r < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub fn modify(&mut self, fd: i64, token: u64, writable: bool) {
+            self.ctl(EPOLL_CTL_MOD, fd, token, writable);
+        }
+
+        pub fn del(&mut self, fd: i64) {
+            self.ctl(EPOLL_CTL_DEL, fd, 0, false);
+        }
+
+        pub fn wait(&mut self, timeout_ms: i32, out: &mut Vec<u64>) {
+            out.clear();
+            let mut evs = [EpollEvent { events: 0, data: 0 }; 64];
+            let n = unsafe { epoll_wait(self.ep, evs.as_mut_ptr(), evs.len() as i32, timeout_ms) };
+            if n <= 0 {
+                // n < 0: EINTR or a real failure — either way the caller's
+                // uniform pump recovers next tick
+                return;
+            }
+            for ev in evs.iter().take(n as usize) {
+                out.push(ev.data);
+            }
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.ep);
+            }
+        }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod sys {
+    use std::collections::BTreeSet;
+    use std::io;
+    use std::time::Duration;
+
+    /// Portable `WouldBlock`-polling fallback: no readiness facility at
+    /// all — wait() sleeps a bounded tick and reports every registered
+    /// token, and the nonblocking handlers discover actual readiness by
+    /// attempting I/O.
+    pub struct Poller {
+        tokens: BTreeSet<u64>,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            Ok(Poller { tokens: BTreeSet::new() })
+        }
+
+        pub fn add(&mut self, _fd: i64, token: u64, _writable: bool) -> io::Result<()> {
+            self.tokens.insert(token);
+            Ok(())
+        }
+
+        pub fn modify(&mut self, _fd: i64, _token: u64, _writable: bool) {}
+
+        pub fn del(&mut self, _fd: i64) {}
+
+        pub fn wait(&mut self, timeout_ms: i32, out: &mut Vec<u64>) {
+            out.clear();
+            std::thread::sleep(Duration::from_millis(timeout_ms.clamp(1, 5) as u64));
+            out.extend(self.tokens.iter().copied());
+        }
+    }
+}

@@ -1,0 +1,986 @@
+//! Prefix-affinity multi-replica router (docs/ARCHITECTURE.md §15).
+//!
+//! Fronts N engine replicas behind one address. Placement is pure
+//! policy, never correctness:
+//!
+//! * **Prefix affinity** — the routing key is the first KV *page* of the
+//!   tokenized prompt (BOS + `sim_encode`, [`DEFAULT_PAGE_SIZE`]-token
+//!   granularity, matching `PagePool`), consistent-hashed onto a vnode
+//!   ring. Same-prefix bursts land on the replica that already holds
+//!   the prefix in its PR 5/6 prefix cache and COW page arena, so cache
+//!   hit-rates concentrate instead of diluting 1/N.
+//! * **Shed-aware balancing** — each replica's SJF `queue_wait_estimate`
+//!   (already exported under `sched.queue_wait_est_cost` in `/metrics`)
+//!   is probed periodically; when the affinity target's queue is far
+//!   above the fleet minimum, the request overflows to the least-loaded
+//!   replica (locality is worthless if the hot replica is the
+//!   bottleneck).
+//! * **Health + draining + failover** — a prober thread polls each
+//!   replica's `/health`; dead replicas leave the ring until they come
+//!   back, draining replicas accept no new work but keep their in-flight
+//!   streams. Requests not yet delivered upstream retry the next
+//!   replica; once a request has been delivered, an upstream death is
+//!   answered honestly (plain 502, or a synthesized terminal
+//!   `status: "failed"` SSE event mid-stream) — never silently retried,
+//!   because the decode may already be running.
+//!
+//! The decision logic lives in [`RouterCore`] with no I/O so the
+//! deterministic sim harness (sim_harness/) drives the *same* routing
+//! code under replica kill/drain fault plans. The live data plane runs
+//! behind the same [`Reactor`](super::reactor::Reactor) event loop as
+//! the engine front end; each routed generate gets a proxy thread that
+//! relays upstream bytes into the connection's event queue.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::models::sim_encode;
+use crate::spec::BOS;
+use crate::util::{fnv1a, Json};
+
+use super::http;
+use super::metrics::IoStats;
+use super::reactor::{EventSource, Gateway, GenerateStart, Reactor, ReactorConfig, SourceEvent};
+use super::request::FinishStatus;
+use super::slots::DEFAULT_PAGE_SIZE;
+
+/// Virtual nodes per replica on the consistent-hash ring: enough that
+/// key ranges split evenly across a handful of replicas.
+const VNODES: usize = 64;
+
+/// Shed rule: overflow away from the affinity target when its probed
+/// queue-wait exceeds `SHED_SLACK + SHED_FACTOR ×` the fleet minimum.
+const SHED_FACTOR: f64 = 2.0;
+/// Absolute queue-wait slack (scheduler cost units) below which affinity
+/// always wins — small queues never trigger overflow.
+const SHED_SLACK: f64 = 256.0;
+
+/// Routing key: FNV-1a over the first page of the tokenized prompt
+/// (BOS + `sim_encode`, `page_size`-token granularity). Two prompts
+/// sharing their first KV page share their key — exactly the prefix the
+/// replica's page arena can serve from cache.
+pub fn prefix_key(prompt: &str, page_size: usize) -> u64 {
+    let mut toks = vec![BOS];
+    toks.extend(sim_encode(prompt));
+    fnv1a(toks.into_iter().take(page_size.max(1)).map(u64::from))
+}
+
+/// Consistent-hash ring over replica *indices* ([`VNODES`] points each).
+/// Index-keyed (not address-keyed) so the deterministic sim shares the
+/// exact placement function with the live router.
+pub struct HashRing {
+    points: Vec<(u64, usize)>,
+}
+
+impl HashRing {
+    /// Ring over `replicas` indices.
+    pub fn new(replicas: usize) -> HashRing {
+        let mut points = Vec::with_capacity(replicas * VNODES);
+        for r in 0..replicas {
+            for v in 0..VNODES {
+                points.push((fnv1a([0x5EED, r as u64, v as u64]), r));
+            }
+        }
+        points.sort_unstable();
+        HashRing { points }
+    }
+
+    /// First usable replica at or clockwise of `key` — the stable owner,
+    /// or its ring successor when the owner is dead/draining (so a
+    /// replica outage moves only that replica's keys).
+    pub fn lookup(&self, key: u64, usable: impl Fn(usize) -> bool) -> Option<usize> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let start = self.points.partition_point(|&(p, _)| p < key);
+        for i in 0..self.points.len() {
+            let (_, r) = self.points[(start + i) % self.points.len()];
+            if usable(r) {
+                return Some(r);
+            }
+        }
+        None
+    }
+}
+
+/// One replica's routable state, as the decision logic sees it (the
+/// live router fills these from probes; the sim fills them from its
+/// in-process replicas).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ReplicaView {
+    /// is the replica answering `/health` (sim: not killed)?
+    pub alive: bool,
+    /// draining: finish in-flight work, accept nothing new
+    pub draining: bool,
+    /// probed SJF queue-wait estimate (scheduler cost units)
+    pub queue_wait: f64,
+}
+
+/// Where one request goes and why.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RouteDecision {
+    /// chosen replica index
+    pub replica: usize,
+    /// true when consistent hashing placed it (prefix locality)
+    pub affinity: bool,
+    /// true when the shed rule overrode the affinity target
+    pub shed: bool,
+}
+
+/// Pure routing policy: consistent-hash prefix affinity with shed-aware
+/// overflow, or plain round-robin when affinity is off. No I/O — shared
+/// verbatim by the live router and the deterministic sim harness.
+pub struct RouterCore {
+    ring: HashRing,
+    /// prefix-key granularity in tokens (the pool's KV page size)
+    pub page_size: usize,
+    /// consistent-hash prefix affinity (true) vs round-robin (false)
+    pub affinity: bool,
+    rr: AtomicUsize,
+}
+
+impl RouterCore {
+    /// Policy over `replicas` indices at `page_size`-token granularity.
+    pub fn new(replicas: usize, page_size: usize, affinity: bool) -> RouterCore {
+        RouterCore {
+            ring: HashRing::new(replicas),
+            page_size: page_size.max(1),
+            affinity,
+            rr: AtomicUsize::new(0),
+        }
+    }
+
+    /// Place one prompt. `None` when no replica is alive and accepting
+    /// (the caller answers 503 / `Rejected`).
+    pub fn route(&self, prompt: &str, views: &[ReplicaView]) -> Option<RouteDecision> {
+        let routable: Vec<usize> =
+            (0..views.len()).filter(|&r| views[r].alive && !views[r].draining).collect();
+        if routable.is_empty() {
+            return None;
+        }
+        if !self.affinity {
+            let i = self.rr.fetch_add(1, Ordering::Relaxed) % routable.len();
+            return Some(RouteDecision { replica: routable[i], affinity: false, shed: false });
+        }
+        let key = prefix_key(prompt, self.page_size);
+        let chosen = self.ring.lookup(key, |r| views[r].alive && !views[r].draining)?;
+        let min_wait = routable
+            .iter()
+            .map(|&r| views[r].queue_wait)
+            .fold(f64::INFINITY, f64::min)
+            .max(0.0);
+        if views[chosen].queue_wait > SHED_SLACK + SHED_FACTOR * min_wait {
+            // the affinity target is the bottleneck: overflow to the
+            // least-loaded routable replica (cold prefill beats queueing)
+            let best = routable.into_iter().min_by(|&a, &b| {
+                views[a]
+                    .queue_wait
+                    .partial_cmp(&views[b].queue_wait)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })?;
+            if best != chosen {
+                return Some(RouteDecision { replica: best, affinity: false, shed: true });
+            }
+        }
+        Some(RouteDecision { replica: chosen, affinity: true, shed: false })
+    }
+}
+
+/// Router data-plane counters (`router` object in the fleet `/metrics`).
+#[derive(Debug, Default)]
+pub struct RouterStats {
+    /// generate requests placed on a replica
+    pub routed: AtomicU64,
+    /// placements made by the consistent-hash prefix key
+    pub affinity_hits: AtomicU64,
+    /// placements where the shed rule overrode the affinity target
+    pub shed_reroutes: AtomicU64,
+    /// undelivered requests retried on the next replica
+    pub failovers: AtomicU64,
+    /// upstream deaths after delivery (502 / synthesized failed stream)
+    pub upstream_errors: AtomicU64,
+}
+
+impl RouterStats {
+    /// JSON object for the fleet `/metrics` `router` field.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("routed", self.routed.load(Ordering::Relaxed) as usize)
+            .set("affinity_hits", self.affinity_hits.load(Ordering::Relaxed) as usize)
+            .set("shed_reroutes", self.shed_reroutes.load(Ordering::Relaxed) as usize)
+            .set("failovers", self.failovers.load(Ordering::Relaxed) as usize)
+            .set("upstream_errors", self.upstream_errors.load(Ordering::Relaxed) as usize);
+        o
+    }
+}
+
+/// Router construction knobs (`tapout route` maps its flags onto this).
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// replica addresses (`host:port`), index order fixes ring identity
+    pub replicas: Vec<String>,
+    /// prefix affinity on (consistent hashing) or off (round-robin)
+    pub affinity: bool,
+    /// prefix-key granularity in tokens; match the replicas' page size
+    pub page_size: usize,
+    /// health/metrics probe interval
+    pub probe_ms: u64,
+    /// reactor I/O threads for the client-facing front end
+    pub io_threads: usize,
+    /// slow-loris bound for client connections
+    pub header_timeout_ms: u64,
+    /// SSE keep-alive interval for client streams
+    pub sse_keepalive_ms: u64,
+    /// replica addresses that boot in the draining state
+    pub drain: Vec<String>,
+}
+
+impl Default for RouterConfig {
+    fn default() -> RouterConfig {
+        RouterConfig {
+            replicas: Vec::new(),
+            affinity: true,
+            page_size: DEFAULT_PAGE_SIZE,
+            probe_ms: 200,
+            io_threads: 4,
+            header_timeout_ms: 10_000,
+            sse_keepalive_ms: 15_000,
+            drain: Vec::new(),
+        }
+    }
+}
+
+struct ReplicaState {
+    addr: String,
+    alive: AtomicBool,
+    draining: AtomicBool,
+    queue_wait_bits: AtomicU64,
+    snapshot: Mutex<Option<Json>>,
+}
+
+fn views(states: &[ReplicaState]) -> Vec<ReplicaView> {
+    states
+        .iter()
+        .map(|s| ReplicaView {
+            alive: s.alive.load(Ordering::SeqCst),
+            draining: s.draining.load(Ordering::SeqCst),
+            queue_wait: f64::from_bits(s.queue_wait_bits.load(Ordering::Relaxed)),
+        })
+        .collect()
+}
+
+/// The running router: reactor front end + health prober + per-request
+/// proxy data plane over N replicas.
+pub struct Router {
+    /// bound client-facing address
+    pub addr: String,
+    states: Arc<Vec<ReplicaState>>,
+    reactor: Reactor,
+    stop_probe: Arc<AtomicBool>,
+    probe: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Router {
+    /// Bind `port` (0 picks a free port) and front `cfg.replicas`.
+    pub fn start(cfg: RouterConfig, port: u16) -> Result<Router> {
+        if cfg.replicas.is_empty() {
+            anyhow::bail!("router needs at least one replica address");
+        }
+        let states: Arc<Vec<ReplicaState>> = Arc::new(
+            cfg.replicas
+                .iter()
+                .map(|a| ReplicaState {
+                    addr: a.clone(),
+                    alive: AtomicBool::new(false),
+                    draining: AtomicBool::new(cfg.drain.contains(a)),
+                    queue_wait_bits: AtomicU64::new(0f64.to_bits()),
+                    snapshot: Mutex::new(None),
+                })
+                .collect(),
+        );
+        let stats = Arc::new(RouterStats::default());
+        let io = Arc::new(IoStats::new("router", cfg.io_threads.max(1)));
+        let gateway: Arc<dyn Gateway> = Arc::new(RouterGateway {
+            core: RouterCore::new(states.len(), cfg.page_size, cfg.affinity),
+            states: states.clone(),
+            stats,
+            io: io.clone(),
+        });
+        let rcfg = ReactorConfig {
+            io_threads: cfg.io_threads.max(1),
+            header_timeout: Duration::from_millis(cfg.header_timeout_ms.max(1)),
+            sse_keepalive: Duration::from_millis(cfg.sse_keepalive_ms.max(1)),
+        };
+        let reactor = Reactor::start(gateway, port, rcfg, io)?;
+        let stop_probe = Arc::new(AtomicBool::new(false));
+        let st = states.clone();
+        let sp = stop_probe.clone();
+        let probe_ms = cfg.probe_ms.max(10);
+        let probe = std::thread::Builder::new()
+            .name("tapout-probe".into())
+            .spawn(move || probe_loop(&st, &sp, probe_ms))?;
+        Ok(Router { addr: reactor.addr.clone(), states, reactor, stop_probe, probe: Some(probe) })
+    }
+
+    /// Mark replica `idx` draining (true) or accepting (false); in-flight
+    /// work is untouched either way.
+    pub fn drain(&self, idx: usize, on: bool) {
+        if let Some(s) = self.states.get(idx) {
+            s.draining.store(on, Ordering::SeqCst);
+        }
+    }
+
+    /// Last probed liveness of replica `idx`.
+    pub fn replica_alive(&self, idx: usize) -> bool {
+        self.states.get(idx).map(|s| s.alive.load(Ordering::SeqCst)).unwrap_or(false)
+    }
+
+    /// Stop serving: sever client connections, join the I/O pool and the
+    /// prober. In-flight proxy threads finish with their upstreams.
+    pub fn stop(&mut self) {
+        self.reactor.stop();
+        self.stop_probe.store(true, Ordering::SeqCst);
+        if let Some(h) = self.probe.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn probe_loop(states: &[ReplicaState], stop: &AtomicBool, probe_ms: u64) {
+    let timeout = Duration::from_millis(250);
+    loop {
+        for st in states {
+            if stop.load(Ordering::Relaxed) {
+                return;
+            }
+            let ok = blocking_get(&st.addr, "/health", timeout)
+                .map(|(code, j)| {
+                    code == 200 && j.get("ok").and_then(|b| b.as_bool()).unwrap_or(false)
+                })
+                .unwrap_or(false);
+            st.alive.store(ok, Ordering::SeqCst);
+            if !ok {
+                continue;
+            }
+            if let Some((200, m)) = blocking_get(&st.addr, "/metrics", timeout) {
+                let qw = m
+                    .get("sched")
+                    .and_then(|s| s.get("queue_wait_est_cost"))
+                    .and_then(|x| x.as_f64())
+                    .unwrap_or(0.0);
+                st.queue_wait_bits.store(qw.to_bits(), Ordering::Relaxed);
+                *st.snapshot.lock().unwrap() = Some(m);
+            }
+        }
+        // sleep in short slices so stop() returns promptly
+        let mut left = probe_ms;
+        while left > 0 && !stop.load(Ordering::Relaxed) {
+            let step = left.min(25);
+            std::thread::sleep(Duration::from_millis(step));
+            left -= step;
+        }
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+    }
+}
+
+/// One-shot blocking GET with bounded connect/read time (prober only —
+/// never runs on an I/O thread). Returns (status, parsed JSON body).
+fn blocking_get(addr: &str, path: &str, timeout: Duration) -> Option<(u16, Json)> {
+    let sa: std::net::SocketAddr = addr.parse().ok()?;
+    let mut s = TcpStream::connect_timeout(&sa, timeout).ok()?;
+    s.set_read_timeout(Some(timeout)).ok()?;
+    s.set_write_timeout(Some(timeout)).ok()?;
+    write!(s, "GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n").ok()?;
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).ok()?;
+    let code: u16 = buf.split_whitespace().nth(1)?.parse().ok()?;
+    let body = buf.split_once("\r\n\r\n").map(|x| x.1).unwrap_or("");
+    Some((code, Json::parse(body).ok()?))
+}
+
+// ---------------------------------------------------------------------------
+// gateway (control plane)
+// ---------------------------------------------------------------------------
+
+struct RouterGateway {
+    core: RouterCore,
+    states: Arc<Vec<ReplicaState>>,
+    stats: Arc<RouterStats>,
+    io: Arc<IoStats>,
+}
+
+impl Gateway for RouterGateway {
+    fn route(&self, method: &str, path: &str, body: &str) -> (u16, String) {
+        match (method, path) {
+            ("GET", "/health") => (200, self.fleet_health().render()),
+            ("GET", "/metrics") => (200, self.fleet_metrics().render()),
+            ("POST", "/admin/drain") => self.set_drain(body, true),
+            ("POST", "/admin/undrain") => self.set_drain(body, false),
+            _ => (404, http::err_body("not found")),
+        }
+    }
+
+    fn generate(&self, body: &str) -> GenerateStart {
+        // identical client-error contract to a replica's own front end
+        if let Err((code, j)) = http::parse_generate(body) {
+            return GenerateStart::Immediate { code, body: j.render() };
+        }
+        let j = Json::parse(body).unwrap_or(Json::Null);
+        let prompt = j.get("prompt").and_then(|x| x.as_str()).unwrap_or("");
+        let vs = views(&self.states);
+        let Some(d) = self.core.route(prompt, &vs) else {
+            return GenerateStart::Immediate { code: 503, body: http::err_body("no healthy replica") };
+        };
+        self.stats.routed.fetch_add(1, Ordering::Relaxed);
+        if d.affinity {
+            self.stats.affinity_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        if d.shed {
+            self.stats.shed_reroutes.fetch_add(1, Ordering::Relaxed);
+        }
+        // failover order: the decision, then the remaining routable
+        // replicas by ascending probed queue-wait
+        let mut order = vec![d.replica];
+        let mut rest: Vec<usize> = (0..vs.len())
+            .filter(|&r| r != d.replica && vs[r].alive && !vs[r].draining)
+            .collect();
+        rest.sort_by(|&a, &b| {
+            vs[a].queue_wait.partial_cmp(&vs[b].queue_wait).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        order.extend(rest);
+
+        let (tx, rx) = std::sync::mpsc::channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let states = self.states.clone();
+        let stats = self.stats.clone();
+        let c2 = cancel.clone();
+        let body = body.to_string();
+        // one relay thread per routed request; if the spawn fails the
+        // dropped tx makes the source answer 502
+        let _ = std::thread::Builder::new()
+            .name("tapout-proxy".into())
+            .spawn(move || proxy_request(&states, &order, &body, &tx, &c2, &stats));
+        GenerateStart::Source(Box::new(ChannelSource { rx, cancel, started: false, finished: false }))
+    }
+}
+
+impl RouterGateway {
+    fn fleet_health(&self) -> Json {
+        let vs = views(&self.states);
+        let alive = vs.iter().filter(|v| v.alive).count();
+        let mut o = Json::obj();
+        o.set("ok", alive > 0)
+            .set("role", "router")
+            .set("replicas", self.states.len())
+            .set("alive", alive)
+            .set("affinity", self.core.affinity)
+            .set("page_size", self.core.page_size);
+        let fleet: Vec<Json> = self
+            .states
+            .iter()
+            .zip(&vs)
+            .map(|(s, v)| {
+                let mut r = Json::obj();
+                r.set("addr", s.addr.as_str())
+                    .set("alive", v.alive)
+                    .set("draining", v.draining)
+                    .set("queue_wait", v.queue_wait);
+                r
+            })
+            .collect();
+        o.set("fleet", fleet);
+        o
+    }
+
+    fn fleet_metrics(&self) -> Json {
+        let vs = views(&self.states);
+        let mut completed = 0usize;
+        let mut new_tokens = 0usize;
+        let mut cache_hits = 0usize;
+        let mut cache_lookups = 0usize;
+        let mut shared_hits = 0usize;
+        let mut page_lookups = 0usize;
+        let grab = |j: &Json, k: &str| j.get(k).and_then(|x| x.as_usize()).unwrap_or(0);
+        let replicas: Vec<Json> = self
+            .states
+            .iter()
+            .zip(&vs)
+            .map(|(s, v)| {
+                let mut r = Json::obj();
+                r.set("addr", s.addr.as_str())
+                    .set("alive", v.alive)
+                    .set("draining", v.draining)
+                    .set("queue_wait", v.queue_wait);
+                if let Some(m) = s.snapshot.lock().unwrap().clone() {
+                    completed += grab(&m, "completed");
+                    new_tokens += grab(&m, "new_tokens");
+                    if let Some(c) = m.get("engine").and_then(|e| e.get("cache")) {
+                        cache_hits += grab(c, "hits");
+                        cache_lookups += grab(c, "lookups");
+                    }
+                    if let Some(p) = m.get("engine").and_then(|e| e.get("pages")) {
+                        shared_hits += grab(p, "shared_hits");
+                        page_lookups += grab(p, "lookups");
+                    }
+                    r.set("metrics", m);
+                }
+                r
+            })
+            .collect();
+        let rate = |h: usize, l: usize| if l == 0 { 0.0 } else { h as f64 / l as f64 };
+        let mut cache = Json::obj();
+        cache
+            .set("hits", cache_hits)
+            .set("lookups", cache_lookups)
+            .set("hit_rate", rate(cache_hits, cache_lookups));
+        let mut pages = Json::obj();
+        pages
+            .set("shared_hits", shared_hits)
+            .set("lookups", page_lookups)
+            .set("shared_hit_rate", rate(shared_hits, page_lookups));
+        let mut fleet = Json::obj();
+        fleet.set("completed", completed).set("new_tokens", new_tokens);
+        fleet.set("cache", cache).set("pages", pages);
+        let mut o = Json::obj();
+        o.set("role", "router")
+            .set("router", self.stats.to_json())
+            .set("io", self.io.to_json())
+            .set("fleet", fleet)
+            .set("replicas", replicas);
+        o
+    }
+
+    fn set_drain(&self, body: &str, on: bool) -> (u16, String) {
+        let j = Json::parse(body).unwrap_or(Json::Null);
+        let idx = j.get("replica").and_then(|sel| {
+            sel.as_usize().or_else(|| {
+                sel.as_str().and_then(|a| self.states.iter().position(|st| st.addr == a))
+            })
+        });
+        let Some(i) = idx.filter(|&i| i < self.states.len()) else {
+            return (400, http::err_body("missing or unknown replica"));
+        };
+        self.states[i].draining.store(on, Ordering::SeqCst);
+        let mut o = Json::obj();
+        o.set("ok", true).set("replica", i).set("draining", on);
+        (200, o.render())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// data plane (per-request proxy)
+// ---------------------------------------------------------------------------
+
+/// Reply-channel view of a proxy thread, polled by the reactor.
+struct ChannelSource {
+    rx: Receiver<SourceEvent>,
+    cancel: Arc<AtomicBool>,
+    started: bool,
+    finished: bool,
+}
+
+impl EventSource for ChannelSource {
+    fn poll_event(&mut self) -> Option<SourceEvent> {
+        if self.finished {
+            return None;
+        }
+        match self.rx.try_recv() {
+            Ok(ev) => {
+                match &ev {
+                    SourceEvent::StreamStart => self.started = true,
+                    SourceEvent::Reply { .. } | SourceEvent::End => self.finished = true,
+                    SourceEvent::Data(_) => {}
+                }
+                Some(ev)
+            }
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => {
+                // relay thread died without a terminal event
+                self.finished = true;
+                if self.started {
+                    Some(SourceEvent::End)
+                } else {
+                    Some(SourceEvent::Reply { code: 502, body: http::err_body("upstream replica failed") })
+                }
+            }
+        }
+    }
+
+    fn cancel(&mut self) {
+        // the proxy thread observes this within its read-timeout tick and
+        // drops its upstream connection, which cancels the decode there
+        self.cancel.store(true, Ordering::SeqCst);
+    }
+}
+
+fn proxy_request(
+    states: &[ReplicaState],
+    order: &[usize],
+    body: &str,
+    tx: &Sender<SourceEvent>,
+    cancel: &AtomicBool,
+    stats: &RouterStats,
+) {
+    for (attempt, &idx) in order.iter().enumerate() {
+        if cancel.load(Ordering::SeqCst) {
+            return;
+        }
+        let st = &states[idx];
+        if attempt > 0 {
+            stats.failovers.fetch_add(1, Ordering::Relaxed);
+        }
+        let Some(conn) = open_upstream(&st.addr, body) else {
+            // the request never reached this replica: dead, try the next
+            st.alive.store(false, Ordering::SeqCst);
+            continue;
+        };
+        // delivered: from here every failure is answered, never retried
+        // (the decode may already be running on the replica)
+        relay_upstream(conn, st, tx, cancel, stats);
+        return;
+    }
+    let _ = tx.send(SourceEvent::Reply { code: 503, body: http::err_body("no healthy replica") });
+}
+
+/// Connect and deliver the generate request; `None` before full
+/// delivery means the replica never saw it (safe to retry elsewhere).
+fn open_upstream(addr: &str, body: &str) -> Option<TcpStream> {
+    let sa: std::net::SocketAddr = addr.parse().ok()?;
+    let mut s = TcpStream::connect_timeout(&sa, Duration::from_millis(500)).ok()?;
+    let _ = s.set_nodelay(true);
+    let req = format!(
+        "POST /generate HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).ok()?;
+    s.flush().ok()?;
+    Some(s)
+}
+
+/// Relay one upstream response into the reply channel: plain replies
+/// pass through (status + body), SSE streams are de-chunked and
+/// re-emitted event by event. An upstream death mid-way is answered with
+/// 502 (no response yet) or a synthesized terminal `failed` event
+/// (stream already started), and the replica is marked dead for the
+/// prober to re-admit.
+fn relay_upstream(
+    mut s: TcpStream,
+    st: &ReplicaState,
+    tx: &Sender<SourceEvent>,
+    cancel: &AtomicBool,
+    stats: &RouterStats,
+) {
+    let _ = s.set_read_timeout(Some(Duration::from_millis(100)));
+    let died = |stats: &RouterStats| {
+        st.alive.store(false, Ordering::SeqCst);
+        stats.upstream_errors.fetch_add(1, Ordering::Relaxed);
+    };
+    let mut raw: Vec<u8> = Vec::new();
+    let mut tmp = [0u8; 16 * 1024];
+    // response head
+    let head_end = loop {
+        if let Some(p) = raw.windows(4).position(|w| w == b"\r\n\r\n") {
+            break p;
+        }
+        if cancel.load(Ordering::SeqCst) {
+            return; // dropping s disconnects the replica → its cancel path
+        }
+        match s.read(&mut tmp) {
+            Ok(0) => {
+                died(stats);
+                let _ = tx.send(SourceEvent::Reply {
+                    code: 502,
+                    body: http::err_body("upstream replica failed"),
+                });
+                return;
+            }
+            Ok(n) => raw.extend_from_slice(&tmp[..n]),
+            Err(e) if http::is_timeout(&e) => continue,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                died(stats);
+                let _ = tx.send(SourceEvent::Reply {
+                    code: 502,
+                    body: http::err_body("upstream replica failed"),
+                });
+                return;
+            }
+        }
+    };
+    let head = String::from_utf8_lossy(&raw[..head_end]).to_string();
+    let rest: Vec<u8> = raw.split_off(head_end + 4);
+    let code: u16 =
+        head.split_whitespace().nth(1).and_then(|c| c.parse().ok()).unwrap_or(502);
+    let mut content_length = 0usize;
+    let mut sse = false;
+    for line in head.lines().skip(1) {
+        if let Some((name, value)) = line.split_once(':') {
+            let (name, value) = (name.trim(), value.trim());
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.parse().unwrap_or(0);
+            } else if name.eq_ignore_ascii_case("content-type") {
+                sse = value.eq_ignore_ascii_case("text/event-stream");
+            }
+        }
+    }
+
+    if !sse {
+        // plain reply (unary result, pre-stream error, framing error):
+        // pass it through verbatim
+        let mut body = rest;
+        while body.len() < content_length {
+            if cancel.load(Ordering::SeqCst) {
+                return;
+            }
+            match s.read(&mut tmp) {
+                Ok(0) => {
+                    died(stats);
+                    let _ = tx.send(SourceEvent::Reply {
+                        code: 502,
+                        body: http::err_body("upstream replica failed"),
+                    });
+                    return;
+                }
+                Ok(n) => body.extend_from_slice(&tmp[..n]),
+                Err(e) if http::is_timeout(&e) => continue,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    died(stats);
+                    let _ = tx.send(SourceEvent::Reply {
+                        code: 502,
+                        body: http::err_body("upstream replica failed"),
+                    });
+                    return;
+                }
+            }
+        }
+        body.truncate(content_length);
+        let _ = tx.send(SourceEvent::Reply {
+            code,
+            body: String::from_utf8_lossy(&body).to_string(),
+        });
+        return;
+    }
+
+    // SSE stream: de-chunk, split events, re-emit
+    if tx.send(SourceEvent::StreamStart).is_err() {
+        return; // client gone; dropping s cancels the upstream decode
+    }
+    let mut dec = ChunkDecoder::default();
+    let mut saw_done = false;
+    if dec.feed(&rest).is_err() {
+        stream_died(st, tx, stats, saw_done);
+        return;
+    }
+    loop {
+        for payload in dec.events() {
+            saw_done |= Json::parse(&payload)
+                .ok()
+                .and_then(|j| j.get("done").and_then(|d| d.as_bool()))
+                .unwrap_or(false);
+            if tx.send(SourceEvent::Data(payload)).is_err() {
+                return;
+            }
+        }
+        if dec.terminal {
+            let _ = tx.send(SourceEvent::End);
+            return;
+        }
+        if cancel.load(Ordering::SeqCst) {
+            return;
+        }
+        match s.read(&mut tmp) {
+            Ok(0) => {
+                stream_died(st, tx, stats, saw_done);
+                return;
+            }
+            Ok(n) => {
+                if dec.feed(&tmp[..n]).is_err() {
+                    stream_died(st, tx, stats, saw_done);
+                    return;
+                }
+            }
+            Err(e) if http::is_timeout(&e) => continue,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                stream_died(st, tx, stats, saw_done);
+                return;
+            }
+        }
+    }
+}
+
+/// Upstream connection died mid-stream. If its terminal event already
+/// went out, just end the chunking cleanly; otherwise synthesize the
+/// honest terminal: `{"done": true, "status": "failed", ...}` so the
+/// client sees a correct terminal status instead of a silent hangup.
+fn stream_died(st: &ReplicaState, tx: &Sender<SourceEvent>, stats: &RouterStats, saw_done: bool) {
+    st.alive.store(false, Ordering::SeqCst);
+    stats.upstream_errors.fetch_add(1, Ordering::Relaxed);
+    if !saw_done {
+        let mut o = Json::obj();
+        o.set("done", true)
+            .set("id", 0usize)
+            .set("status", FinishStatus::Failed.label())
+            .set("error", "upstream replica failed mid-stream");
+        let _ = tx.send(SourceEvent::Data(o.render()));
+    }
+    let _ = tx.send(SourceEvent::End);
+}
+
+/// Incremental HTTP-chunk decoder + SSE event splitter for the relay
+/// path: wire bytes in, complete `data:` payloads out. Upstream SSE
+/// comments (keep-alive pings) are dropped — the router's own front end
+/// keeps the client connection warm.
+#[derive(Default)]
+struct ChunkDecoder {
+    buf: Vec<u8>,
+    data: String,
+    terminal: bool,
+}
+
+impl ChunkDecoder {
+    fn feed(&mut self, bytes: &[u8]) -> Result<(), ()> {
+        self.buf.extend_from_slice(bytes);
+        loop {
+            if self.terminal {
+                return Ok(());
+            }
+            let Some(pos) = self.buf.windows(2).position(|w| w == b"\r\n") else {
+                return Ok(());
+            };
+            let size_str = std::str::from_utf8(&self.buf[..pos]).map_err(|_| ())?;
+            let size = usize::from_str_radix(size_str.trim(), 16).map_err(|_| ())?;
+            let need = pos + 2 + size + 2;
+            if size == 0 {
+                self.terminal = true;
+                self.buf.clear();
+                return Ok(());
+            }
+            if self.buf.len() < need {
+                return Ok(());
+            }
+            self.data.push_str(&String::from_utf8_lossy(&self.buf[pos + 2..pos + 2 + size]));
+            self.buf.drain(..need);
+        }
+    }
+
+    fn events(&mut self) -> Vec<String> {
+        let mut out = Vec::new();
+        while let Some(p) = self.data.find("\n\n") {
+            let ev: String = self.data.drain(..p + 2).collect();
+            if let Some(payload) = ev.trim_end().strip_prefix("data: ") {
+                out.push(payload.to_string());
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn live(n: usize) -> Vec<ReplicaView> {
+        vec![ReplicaView { alive: true, draining: false, queue_wait: 0.0 }; n]
+    }
+
+    #[test]
+    fn ring_lookup_is_deterministic_and_prefers_the_owner() {
+        let ring = HashRing::new(3);
+        let a = ring.lookup(42, |_| true).unwrap();
+        let b = ring.lookup(42, |_| true).unwrap();
+        assert_eq!(a, b);
+        // with the owner dead, the key moves to a live successor
+        let c = ring.lookup(42, |r| r != a).unwrap();
+        assert_ne!(c, a);
+        assert!(ring.lookup(42, |_| false).is_none());
+    }
+
+    #[test]
+    fn same_prefix_page_routes_to_one_replica() {
+        let core = RouterCore::new(3, 16, true);
+        let head = "shared prefix head with plenty of tokens to fill one whole page of context";
+        let views = live(3);
+        let d1 = core.route(&format!("{head} tail one"), &views).unwrap();
+        let d2 = core.route(&format!("{head} tail two"), &views).unwrap();
+        assert_eq!(d1.replica, d2.replica);
+        assert!(d1.affinity && d2.affinity);
+        assert!(!d1.shed);
+        // the prefix key really is page-granular
+        assert_eq!(prefix_key(&format!("{head} tail one"), 16), prefix_key(&format!("{head} tail two"), 16));
+    }
+
+    #[test]
+    fn round_robin_cycles_when_affinity_is_off() {
+        let core = RouterCore::new(2, 16, false);
+        let views = live(2);
+        let picks: Vec<usize> =
+            (0..4).map(|_| core.route("same prompt", &views).unwrap().replica).collect();
+        assert_eq!(picks, vec![0, 1, 0, 1]);
+        assert!(!core.route("same prompt", &views).unwrap().affinity);
+    }
+
+    #[test]
+    fn shed_rule_overflows_a_hot_affinity_target() {
+        let core = RouterCore::new(2, 16, true);
+        let prompt = "a prompt whose page hashes somewhere fixed";
+        let owner = core.route(prompt, &live(2)).unwrap().replica;
+        let mut views = live(2);
+        views[owner].queue_wait = 100_000.0;
+        let d = core.route(prompt, &views).unwrap();
+        assert_ne!(d.replica, owner);
+        assert!(d.shed);
+        assert!(!d.affinity);
+        // below the slack threshold affinity wins even when non-zero
+        views[owner].queue_wait = SHED_SLACK / 2.0;
+        assert_eq!(core.route(prompt, &views).unwrap().replica, owner);
+    }
+
+    #[test]
+    fn dead_and_draining_replicas_never_receive_work() {
+        let core = RouterCore::new(3, 16, true);
+        let mut views = live(3);
+        views[0].alive = false;
+        views[1].draining = true;
+        for i in 0..10 {
+            let d = core.route(&format!("prompt {i}"), &views).unwrap();
+            assert_eq!(d.replica, 2);
+        }
+        views[2].alive = false;
+        assert!(core.route("anything", &views).is_none());
+    }
+
+    #[test]
+    fn chunk_decoder_reassembles_sse_events() {
+        let mut dec = ChunkDecoder::default();
+        let ev1 = "data: {\"ids\":[1,2]}\n\n";
+        let frame1 = format!("{:X}\r\n{}\r\n", ev1.len(), ev1);
+        // split the wire bytes at an awkward boundary
+        let (a, b) = frame1.as_bytes().split_at(7);
+        dec.feed(a).unwrap();
+        assert!(dec.events().is_empty());
+        dec.feed(b).unwrap();
+        assert_eq!(dec.events(), vec!["{\"ids\":[1,2]}".to_string()]);
+        // keep-alive comments are swallowed, terminal chunk is flagged
+        let ping = ": ping\n\n";
+        dec.feed(format!("{:X}\r\n{}\r\n", ping.len(), ping).as_bytes()).unwrap();
+        assert!(dec.events().is_empty());
+        dec.feed(b"0\r\n\r\n").unwrap();
+        assert!(dec.terminal);
+    }
+}

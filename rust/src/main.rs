@@ -7,12 +7,22 @@
 //!             [--workers N] [--slots N] [--backend pjrt|sim] [--continuous]
 //!             [--max-queue N] [--deadline-ms MS] [--prefix-cache]
 //!             [--page-size TOK] [--kv-pages N] [--no-page-sharing]
+//!             [--io-threads N] (0 = legacy blocking front end)
+//!             [--header-timeout-ms MS] [--sse-keepalive-ms MS]
+//!   route     --port 8080 --replicas host:p1,host:p2,... [--no-affinity]
+//!             [--probe-ms MS] [--page-size TOK] [--io-threads N]
+//!             [--header-timeout-ms MS] [--sse-keepalive-ms MS]
+//!             [--drain host:p1,...]
+//!             prefix-affinity router fronting N engine replicas: fleet
+//!             /health + /metrics, POST /admin/drain|undrain
 //!   exp       --id <table2|table3|table4|table5|fig2|fig3|fig4|fig5|fig6|abl-arms|tune|all>
 //!             [--backend pjrt|sim] [--scale F] [--gamma N]
 //!   simulate  --seed N --steps M [--faults] [--sabotage] [--mode workers|continuous]
-//!             [--trace] [--replay plan.json] [--out shrunk.json]
-//!             deterministic engine simulation against the shadow-state oracle;
-//!             on violation the plan is shrunk and written as a replay fixture
+//!             [--replicas N] [--no-affinity] [--trace] [--replay plan.json]
+//!             [--out shrunk.json]
+//!             deterministic engine simulation against the shadow-state oracle
+//!             (N>1 adds the router tier with kill/drain fault ops); on
+//!             violation the plan is shrunk and written as a replay fixture
 //!   selftest  verify the rust engine replays the python golden traces
 //!             token-for-token (artifacts/golden/pair-a.json)
 
@@ -22,7 +32,8 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use tapout::engine::{
-    BackendKind, BatchConfig, Engine, EngineConfig, EngineMode, HttpServer, Policy,
+    BackendKind, BatchConfig, Engine, EngineConfig, EngineMode, HttpConfig, HttpServer, Policy,
+    Router, RouterConfig,
 };
 use tapout::harness::{run_experiment, ExpOpts};
 use tapout::models::{Manifest, ModelAssets, PjrtModel};
@@ -36,12 +47,13 @@ fn main() {
     let r = match args.subcommand.as_deref() {
         Some("generate") => cmd_generate(&args),
         Some("serve") => cmd_serve(&args),
+        Some("route") => cmd_route(&args),
         Some("exp") => cmd_exp(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("selftest") => cmd_selftest(&args),
         _ => {
             eprintln!(
-                "usage: tapout <generate|serve|exp|simulate|selftest> [flags]\n\
+                "usage: tapout <generate|serve|route|exp|simulate|selftest> [flags]\n\
                  see rust/src/main.rs header for flags"
             );
             std::process::exit(2);
@@ -155,13 +167,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         page_sharing: !args.bool("no-page-sharing"),
     };
     let port = args.usize("port", 8077) as u16;
+    // --io-threads 0 restores the legacy blocking thread-per-connection
+    // front end; the reactor (docs/ARCHITECTURE.md §15) is the default
+    let http_cfg = HttpConfig {
+        io_threads: args.usize("io-threads", HttpConfig::default().io_threads),
+        header_timeout_ms: args.usize("header-timeout-ms", 10_000) as u64,
+        sse_keepalive_ms: args.usize("sse-keepalive-ms", 15_000) as u64,
+    };
     let engine = Arc::new(Engine::start(cfg).context("starting engine")?);
-    let http = HttpServer::start(engine.clone(), port)?;
+    let http = HttpServer::start_with(engine.clone(), port, http_cfg)?;
     println!(
         "tapout serving on http://{}  (POST /generate [stream:true for SSE], GET /health, \
-         GET /metrics)  backend={} mode={} workers={} slots={} max_queue={} deadline_ms={} \
-         prefix_cache={} page_size={} kv_pages={} page_sharing={}",
+         GET /metrics)  io={}x{} backend={} mode={} workers={} slots={} max_queue={} \
+         deadline_ms={} prefix_cache={} page_size={} kv_pages={} page_sharing={}",
         http.addr,
+        http.stats.mode,
+        http.stats.io_threads,
         engine.config.backend.label(),
         engine.config.mode.label(),
         engine.config.workers,
@@ -172,6 +193,44 @@ fn cmd_serve(args: &Args) -> Result<()> {
         engine.config.page_size,
         engine.config.kv_pages,
         engine.config.page_sharing,
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// Prefix-affinity router fronting N engine replicas
+/// (docs/ARCHITECTURE.md §15, docs/OPERATIONS.md): consistent hashing on
+/// the first KV page of the tokenized prompt, shed-aware overflow on the
+/// probed SJF queue-wait estimates, health-probed failover/draining, and
+/// aggregated fleet `/health` + `/metrics`.
+fn cmd_route(args: &Args) -> Result<()> {
+    let split = |s: &str| -> Vec<String> {
+        s.split(',').map(str::trim).filter(|a| !a.is_empty()).map(String::from).collect()
+    };
+    let replicas = split(&args.str("replicas", ""));
+    anyhow::ensure!(
+        !replicas.is_empty(),
+        "route needs --replicas host:port[,host:port...]"
+    );
+    let cfg = RouterConfig {
+        replicas,
+        affinity: !args.bool("no-affinity"),
+        page_size: args.usize("page-size", tapout::engine::DEFAULT_PAGE_SIZE),
+        probe_ms: args.usize("probe-ms", 200) as u64,
+        io_threads: args.usize("io-threads", RouterConfig::default().io_threads),
+        header_timeout_ms: args.usize("header-timeout-ms", 10_000) as u64,
+        sse_keepalive_ms: args.usize("sse-keepalive-ms", 15_000) as u64,
+        drain: args.opt("drain").map(split).unwrap_or_default(),
+    };
+    let n = cfg.replicas.len();
+    let affinity = cfg.affinity;
+    let port = args.usize("port", 8080) as u16;
+    let router = Router::start(cfg, port).context("starting router")?;
+    println!(
+        "tapout routing on http://{}  (POST /generate, GET /health, GET /metrics, \
+         POST /admin/drain|undrain)  replicas={n} affinity={affinity}",
+        router.addr,
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -206,13 +265,20 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("plan json: {e}"))?;
             SimPlan::from_json(&j).map_err(|e| anyhow::anyhow!(e))?
         }
-        None => SimPlan::generate(args.usize("seed", 0) as u64, args.usize("steps", 60)),
+        None => SimPlan::generate_fleet(
+            args.usize("seed", 0) as u64,
+            args.usize("steps", 60),
+            args.usize("replicas", 1),
+        ),
     };
     if args.bool("faults") {
         plan.faults = true;
     }
     if args.bool("sabotage") {
         plan.sabotage = true;
+    }
+    if args.bool("no-affinity") {
+        plan.affinity = false;
     }
     if let Some(mode) = args.opt("mode") {
         anyhow::ensure!(
@@ -229,7 +295,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         }
     }
     println!(
-        "sim seed={} mode={} method={} slots={} cache={} pages={} faults={} ops={} \
+        "sim seed={} mode={} method={} slots={} cache={} pages={} faults={} replicas={} ops={} \
          events={} clock={}ns hash={:016x}",
         plan.seed,
         plan.mode,
@@ -238,6 +304,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         plan.cache,
         plan.kv_pages,
         plan.faults,
+        plan.replicas,
         plan.ops.len(),
         report.trace.len(),
         report.clock_ns,

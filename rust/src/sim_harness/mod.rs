@@ -16,14 +16,18 @@
 //!   injected ([`crate::models::FaultStats::delay_ns`]); nothing ever
 //!   sleeps, so thousands of simulated requests run in milliseconds.
 //! * [`plan`] — seeded workload plans: a tiny op vocabulary (submit /
-//!   cancel / disconnect / step) that the generator composes into request
-//!   bursts, cancels mid-prefill and mid-decode, deadline races,
-//!   shared-prefix floods, oversize prompts, slot starvation and stream
-//!   disconnects. Plans serialize to JSON, so any seed replays
+//!   cancel / disconnect / step / kill-replica / drain-replica) that the
+//!   generator composes into request bursts, cancels mid-prefill and
+//!   mid-decode, deadline races, shared-prefix floods, oversize prompts,
+//!   slot starvation and stream disconnects;
+//!   [`SimPlan::generate_fleet`] adds replica kill/drain faults for
+//!   router-mode runs. Plans serialize to JSON, so any seed replays
 //!   byte-for-byte and a failing seed becomes a checked-in fixture.
 //! * [`runner`] — the deterministic scheduler: one event at a time, with
 //!   the plan's RNG choosing which ready session runs next (workers mode)
-//!   or stepping every live session in lockstep (continuous mode).
+//!   or stepping every live session in lockstep (continuous mode). Plans
+//!   with `replicas > 1` drive a simulated fleet through the live
+//!   router's own [`crate::engine::RouterCore`] placement policy.
 //! * [`oracle`] — the shadow state: slot-checkout conservation, page
 //!   refcount conservation, scheduler in-flight ledger balance, bandit
 //!   play-count conservation, byte-equality of every reply against a
@@ -34,7 +38,8 @@
 //!   violation, yielding a minimal replayable trace
 //!   (`rust/tests/sim_regressions/`).
 //!
-//! CLI face: `tapout simulate --seed N --steps M` (src/main.rs).
+//! CLI face: `tapout simulate --seed N --steps M [--replicas R]`
+//! (src/main.rs).
 
 pub mod clock;
 pub mod oracle;

@@ -21,8 +21,9 @@
 //!   guarantee, checked per request under every cache / paging / mode /
 //!   fault combination;
 //! * **terminal-status correctness** — `Failed` may only appear under
-//!   fault injection (or for an oversize prompt), `Done` never carries a
-//!   short reply, cancels/expiries carry a clean prefix.
+//!   fault injection, for an oversize prompt, or for a request whose
+//!   replica was killed ([`Oracle::note_killed`]); `Done` never carries
+//!   a short reply, cancels/expiries carry a clean prefix.
 
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -50,6 +51,9 @@ pub struct Oracle {
     expected: BTreeMap<u64, Vec<u32>>,
     /// requests whose prompt exceeds the KV geometry (never decodable)
     oversize: BTreeSet<u64>,
+    /// requests whose replica was killed mid-run (a `Failed` terminal is
+    /// their legal outcome even without fault injection)
+    killed: BTreeSet<u64>,
 }
 
 impl Oracle {
@@ -58,7 +62,20 @@ impl Oracle {
     /// bandits only — token ladders legitimately take many plays per
     /// session).
     pub fn new(faults_on: bool, seq_bandit: bool) -> Oracle {
-        Oracle { faults_on, seq_bandit, expected: BTreeMap::new(), oversize: BTreeSet::new() }
+        Oracle {
+            faults_on,
+            seq_bandit,
+            expected: BTreeMap::new(),
+            oversize: BTreeSet::new(),
+            killed: BTreeSet::new(),
+        }
+    }
+
+    /// Record that this request was live (or queued) on a replica that a
+    /// [`crate::sim_harness::SimOp::KillReplica`] op took down, so a
+    /// `Failed` terminal is legal for it.
+    pub fn note_killed(&mut self, id: u64) {
+        self.killed.insert(id);
     }
 
     /// Register a submitted request and precompute its expected reply by
@@ -143,9 +160,16 @@ impl Oracle {
                     )
                 })
             }
-            FinishStatus::Failed => (!self.faults_on && !self.oversize.contains(&id)).then(|| {
-                format!("req {id}: Failed without fault injection or an oversize prompt")
-            }),
+            FinishStatus::Failed => {
+                let legal =
+                    self.faults_on || self.oversize.contains(&id) || self.killed.contains(&id);
+                (!legal).then(|| {
+                    format!(
+                        "req {id}: Failed without fault injection, an oversize prompt, or a \
+                         replica kill"
+                    )
+                })
+            }
             // prefix rule (already checked) is all that cancels, expiries
             // and queue-shed rejections must satisfy
             FinishStatus::Cancelled | FinishStatus::Expired | FinishStatus::Rejected => None,
@@ -229,6 +253,19 @@ mod tests {
         assert!(
             o.check_terminal(1, FinishStatus::Failed, &[]).is_some(),
             "Failed without faults is a violation"
+        );
+    }
+
+    #[test]
+    fn killed_replicas_legalize_failed_terminals() {
+        let mut o = Oracle::new(false, false);
+        o.expect_request(3, &[BOS, 5, 6], 7, "qa", 4, 4, 4096);
+        assert!(o.check_terminal(3, FinishStatus::Failed, &[]).is_some());
+        o.note_killed(3);
+        assert!(o.check_terminal(3, FinishStatus::Failed, &[]).is_none());
+        assert!(
+            o.check_terminal(3, FinishStatus::Done, &[]).is_some(),
+            "a kill does not excuse a short Done"
         );
     }
 

@@ -56,6 +56,19 @@ pub enum SimOp {
         /// micro-steps to run
         n: usize,
     },
+    /// Kill a replica: every session live on it fails, queued work
+    /// re-routes, and the replica accepts nothing afterwards. The
+    /// generator never kills the last alive replica.
+    KillReplica {
+        /// replica index to kill
+        replica: usize,
+    },
+    /// Drain a replica: it finishes in-flight work but the router stops
+    /// sending it new requests.
+    DrainReplica {
+        /// replica index to drain
+        replica: usize,
+    },
 }
 
 impl SimOp {
@@ -80,6 +93,12 @@ impl SimOp {
             }
             SimOp::Step { n } => {
                 j.set("op", "step").set("n", *n);
+            }
+            SimOp::KillReplica { replica } => {
+                j.set("op", "kill_replica").set("replica", *replica);
+            }
+            SimOp::DrainReplica { replica } => {
+                j.set("op", "drain_replica").set("replica", *replica);
             }
         }
         j
@@ -109,6 +128,12 @@ impl SimOp {
             "cancel" => SimOp::Cancel { req: req()? },
             "disconnect" => SimOp::Disconnect { req: req()? },
             "step" => SimOp::Step { n: j.get("n").and_then(|x| x.as_usize()).unwrap_or(1) },
+            "kill_replica" => SimOp::KillReplica {
+                replica: j.get("replica").and_then(|x| x.as_usize()).unwrap_or(0),
+            },
+            "drain_replica" => SimOp::DrainReplica {
+                replica: j.get("replica").and_then(|x| x.as_usize()).unwrap_or(0),
+            },
             other => return Err(format!("unknown op kind: {other}")),
         })
     }
@@ -146,6 +171,13 @@ pub struct SimPlan {
     /// deliberately corrupt page accounting mid-run (test-only hook for
     /// the oracle/shrinker pipeline itself — never set by the generator)
     pub sabotage: bool,
+    /// simulated replica count behind the router tier (1 = the classic
+    /// single-engine run; >1 routes submits through
+    /// [`crate::engine::RouterCore`])
+    pub replicas: usize,
+    /// route by prefix-affinity hashing (`false` = round-robin); only
+    /// meaningful when `replicas > 1`
+    pub affinity: bool,
     /// the ordered op list
     pub ops: Vec<SimOp>,
 }
@@ -171,6 +203,8 @@ impl SimPlan {
             faults: false,
             max_faults: 1 + rng.below(8) as u64,
             sabotage: false,
+            replicas: 1,
+            affinity: true,
             ops: Vec::new(),
         };
         let mut next_req: u64 = 0;
@@ -252,6 +286,40 @@ impl SimPlan {
         plan
     }
 
+    /// Generate a seeded multi-replica plan: [`SimPlan::generate`] plus
+    /// spliced-in [`SimOp::KillReplica`]/[`SimOp::DrainReplica`] faults.
+    /// Pure function of `(seed, steps, replicas)`; never kills the last
+    /// alive replica (the fleet always retains a routable target unless
+    /// every survivor is draining). `replicas <= 1` degenerates to the
+    /// classic single-engine plan.
+    pub fn generate_fleet(seed: u64, steps: usize, replicas: usize) -> SimPlan {
+        let mut plan = SimPlan::generate(seed, steps);
+        if replicas <= 1 {
+            return plan;
+        }
+        plan.replicas = replicas;
+        let mut rng = Rng::new(seed).fork(0xF1EE7);
+        plan.affinity = rng.bool(0.8);
+        let mut alive: Vec<bool> = vec![true; replicas];
+        for _ in 0..1 + rng.below(replicas) {
+            let at = rng.below(plan.ops.len() + 1);
+            if rng.bool(0.6) {
+                // kill: pick among alive replicas, but only if at least
+                // two are still standing
+                let standing: Vec<usize> = (0..replicas).filter(|&r| alive[r]).collect();
+                if standing.len() < 2 {
+                    continue;
+                }
+                let r = standing[rng.below(standing.len())];
+                alive[r] = false;
+                plan.ops.insert(at, SimOp::KillReplica { replica: r });
+            } else {
+                plan.ops.insert(at, SimOp::DrainReplica { replica: rng.below(replicas) });
+            }
+        }
+        plan
+    }
+
     /// Total submit ops in the plan.
     pub fn submits(&self) -> usize {
         self.ops.iter().filter(|o| matches!(o, SimOp::Submit { .. })).count()
@@ -275,6 +343,8 @@ impl SimPlan {
             .set("faults", self.faults)
             .set("max_faults", self.max_faults as f64)
             .set("sabotage", self.sabotage)
+            .set("replicas", self.replicas)
+            .set("affinity", self.affinity)
             .set("ops", self.ops.iter().map(|o| o.to_json()).collect::<Vec<Json>>());
         j
     }
@@ -303,6 +373,8 @@ impl SimPlan {
             faults: j.get("faults").and_then(|x| x.as_bool()).unwrap_or(false),
             max_faults: num("max_faults").unwrap_or(4.0) as u64,
             sabotage: j.get("sabotage").and_then(|x| x.as_bool()).unwrap_or(false),
+            replicas: num("replicas").unwrap_or(1.0) as usize,
+            affinity: j.get("affinity").and_then(|x| x.as_bool()).unwrap_or(true),
             ops,
         })
     }
@@ -352,10 +424,45 @@ mod tests {
                             saw.3 = true;
                         }
                     }
-                    SimOp::Step { .. } => {}
+                    SimOp::Step { .. }
+                    | SimOp::KillReplica { .. }
+                    | SimOp::DrainReplica { .. } => {}
                 }
             }
         }
         assert!(saw.0 && saw.1 && saw.2 && saw.3, "scenario coverage: {saw:?}");
+    }
+
+    #[test]
+    fn fleet_plans_round_trip_and_never_kill_the_last_replica() {
+        let mut saw_kill = false;
+        let mut saw_drain = false;
+        for seed in 0..24 {
+            let plan = SimPlan::generate_fleet(seed, 60, 3);
+            assert_eq!(plan, SimPlan::generate_fleet(seed, 60, 3), "pure in seed");
+            assert_eq!(plan.replicas, 3);
+            let text = plan.to_json().render();
+            let back = SimPlan::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(plan, back, "seed {seed}");
+            let mut alive = plan.replicas;
+            for op in &plan.ops {
+                match op {
+                    SimOp::KillReplica { replica } => {
+                        saw_kill = true;
+                        assert!(*replica < plan.replicas);
+                        alive -= 1;
+                        assert!(alive >= 1, "seed {seed}: killed the last replica");
+                    }
+                    SimOp::DrainReplica { replica } => {
+                        saw_drain = true;
+                        assert!(*replica < plan.replicas);
+                    }
+                    _ => {}
+                }
+            }
+            // single-replica fleet degenerates to the classic plan
+            assert_eq!(SimPlan::generate_fleet(seed, 60, 1), SimPlan::generate(seed, 60));
+        }
+        assert!(saw_kill && saw_drain, "fleet fault coverage");
     }
 }

@@ -8,6 +8,13 @@
 //! lockstep (continuous mode); fault-injected latency advances the fake
 //! clock instead of sleeping; and trace lines embed only virtual time.
 //!
+//! Plans with `replicas > 1` run a simulated fleet: each replica owns
+//! its own pool/scheduler/bandit (exactly what one live `Engine` owns)
+//! and submits route through the *same* [`RouterCore`] policy the live
+//! `tapout route` tier uses, so replica kills and drains are replayable
+//! and shrinkable like every other fault. Single-replica plans take the
+//! identical code path and keep their legacy traces byte-for-byte.
+//!
 //! The per-session decode is the Algorithm-1 round of `spec/session.rs`
 //! ([`sim_round`] mirrors `SpecSession::step` — the session type itself
 //! holds model borrows for its whole lifetime, which a round-interleaved
@@ -21,7 +28,8 @@ use std::sync::Arc;
 
 use crate::bandit::{SessionController, SharedController};
 use crate::engine::{
-    CancelFlag, EmitClip, FinishStatus, Lease, Request, Scheduler, Slot, SlotPool,
+    CancelFlag, EmitClip, FinishStatus, Lease, ReplicaView, Request, RouterCore, Scheduler, Slot,
+    SlotPool,
 };
 use crate::models::{
     sim_encode, FaultPlan, FaultStats, FaultyModel, LanguageModel, Scenario, SimModel,
@@ -100,13 +108,25 @@ struct Live {
     max_seq: usize,
 }
 
-struct Runner {
-    plan: SimPlan,
+/// Engine state for one simulated replica — exactly what one live
+/// `Engine` owns: its slot pool, admission scheduler, shared bandit,
+/// per-slot session controllers, live decodes and fault counters, plus
+/// the router-visible lifecycle bits (alive / draining).
+struct ReplicaSim {
     pool: SlotPool,
     sched: Scheduler,
     shared: SharedController,
     ctrls: Vec<SessionController>,
     live: Vec<Live>,
+    fault_stats: Vec<Arc<FaultStats>>,
+    alive: bool,
+    draining: bool,
+}
+
+struct Runner {
+    plan: SimPlan,
+    replicas: Vec<ReplicaSim>,
+    core: RouterCore,
     clock: SimClock,
     rng: Rng,
     oracle: Oracle,
@@ -114,7 +134,6 @@ struct Runner {
     replies: BTreeMap<u64, Reply>,
     flags: BTreeMap<u64, CancelFlag>,
     deadlines: BTreeMap<u64, u64>,
-    fault_stats: Vec<Arc<FaultStats>>,
     drained_delay_ns: u64,
     violation: Option<Violation>,
     sabotaged: bool,
@@ -134,13 +153,13 @@ pub fn run_plan(plan: &SimPlan) -> SimReport {
         r.apply(&op);
     }
     let mut spent = 0usize;
-    while r.violation.is_none() && !(r.live.is_empty() && r.sched.is_empty()) {
+    while r.violation.is_none() && !r.quiescent() {
         if spent >= DRAIN_BUDGET {
             r.fail(format!(
                 "quiescence not reached within {DRAIN_BUDGET} micro-steps: \
                  {} live, {} queued (scheduler starvation?)",
-                r.live.len(),
-                r.sched.len()
+                r.replicas.iter().map(|x| x.live.len()).sum::<usize>(),
+                r.replicas.iter().map(|x| x.sched.len()).sum::<usize>()
             ));
             break;
         }
@@ -163,49 +182,74 @@ impl Runner {
         let rel_cost = 1.0 / 20.0;
         let sc = Scenario::new(0, "qa");
         let faults = FaultPlan::moderate(plan.seed, plan.max_faults);
-        let mut fault_stats = Vec::new();
-        let pairs: Vec<(Box<dyn LanguageModel>, Box<dyn LanguageModel>)> = (0..plan.slots)
-            .map(|i| {
-                let d = SimModel::draft(sc, quality, rel_cost);
-                let t = SimModel::target(sc);
-                if plan.faults {
-                    let fd = FaultyModel::new(Box::new(d), faults.fork(2 * i as u64));
-                    let ft = FaultyModel::new(Box::new(t), faults.fork(2 * i as u64 + 1));
-                    fault_stats.push(fd.stats());
-                    fault_stats.push(ft.stats());
-                    (Box::new(fd) as Box<dyn LanguageModel>, Box::new(ft) as Box<dyn LanguageModel>)
-                } else {
-                    (Box::new(d) as Box<dyn LanguageModel>, Box::new(t) as Box<dyn LanguageModel>)
+        let n_replicas = plan.replicas.max(1);
+        let mut max_seq = 4096usize;
+        let replicas: Vec<ReplicaSim> = (0..n_replicas)
+            .map(|rep| {
+                let mut fault_stats = Vec::new();
+                let pairs: Vec<(Box<dyn LanguageModel>, Box<dyn LanguageModel>)> = (0..plan.slots)
+                    .map(|i| {
+                        // fault streams fork by *global* slot index so
+                        // replica 0 replays the legacy single-engine
+                        // streams byte-for-byte
+                        let slot = (rep * plan.slots + i) as u64;
+                        let d = SimModel::draft(sc, quality, rel_cost);
+                        let t = SimModel::target(sc);
+                        if plan.faults {
+                            let fd = FaultyModel::new(Box::new(d), faults.fork(2 * slot));
+                            let ft = FaultyModel::new(Box::new(t), faults.fork(2 * slot + 1));
+                            fault_stats.push(fd.stats());
+                            fault_stats.push(ft.stats());
+                            (
+                                Box::new(fd) as Box<dyn LanguageModel>,
+                                Box::new(ft) as Box<dyn LanguageModel>,
+                            )
+                        } else {
+                            (
+                                Box::new(d) as Box<dyn LanguageModel>,
+                                Box::new(t) as Box<dyn LanguageModel>,
+                            )
+                        }
+                    })
+                    .collect();
+                max_seq = pairs
+                    .iter()
+                    .map(|(d, t)| d.max_seq().min(t.max_seq()))
+                    .min()
+                    .unwrap_or(4096);
+                // mirror the engine's boot order (server.rs): paging,
+                // sharing, then the prefix cache
+                let pool = SlotPool::from_pairs(pairs)
+                    .with_paging(plan.page_size.max(1), plan.kv_pages)
+                    .with_page_sharing(plan.sharing)
+                    .with_prefix_cache(plan.cache);
+                let method =
+                    MethodSpec::parse(&plan.method, "artifacts").expect("plan method parses");
+                let shared = SharedController::new(&method, plan.gamma_max);
+                let ctrls = (0..plan.slots)
+                    .map(|_| shared.session().expect("sim methods need no artifacts"))
+                    .collect();
+                ReplicaSim {
+                    pool,
+                    sched: Scheduler::new(crate::engine::Policy::Fcfs),
+                    shared,
+                    ctrls,
+                    live: Vec::new(),
+                    fault_stats,
+                    alive: true,
+                    draining: false,
                 }
             })
-            .collect();
-        let max_seq = pairs
-            .iter()
-            .map(|(d, t)| d.max_seq().min(t.max_seq()))
-            .min()
-            .unwrap_or(4096);
-        // mirror the engine's boot order (server.rs): paging, sharing,
-        // then the prefix cache
-        let pool = SlotPool::from_pairs(pairs)
-            .with_paging(plan.page_size.max(1), plan.kv_pages)
-            .with_page_sharing(plan.sharing)
-            .with_prefix_cache(plan.cache);
-        let method = MethodSpec::parse(&plan.method, "artifacts").expect("plan method parses");
-        let shared = SharedController::new(&method, plan.gamma_max);
-        let ctrls = (0..plan.slots)
-            .map(|_| shared.session().expect("sim methods need no artifacts"))
             .collect();
         let seq_bandit = plan.method.starts_with("seq-");
         let mut rng = Rng::new(plan.seed).fork(0xD0_5EED);
         let oracle = Oracle::new(plan.faults, seq_bandit);
         let task_rng = rng.fork(1);
+        let core = RouterCore::new(n_replicas, plan.page_size.max(1), plan.affinity);
         Runner {
             plan,
-            pool,
-            sched: Scheduler::new(crate::engine::Policy::Fcfs),
-            shared,
-            ctrls,
-            live: Vec::new(),
+            replicas,
+            core,
             clock: SimClock::new(),
             rng: task_rng,
             oracle,
@@ -213,12 +257,41 @@ impl Runner {
             replies: BTreeMap::new(),
             flags: BTreeMap::new(),
             deadlines: BTreeMap::new(),
-            fault_stats,
             drained_delay_ns: 0,
             violation: None,
             sabotaged: false,
             max_seq,
         }
+    }
+
+    /// Every replica idle and every queue empty?
+    fn quiescent(&self) -> bool {
+        self.replicas.iter().all(|r| r.live.is_empty() && r.sched.is_empty())
+    }
+
+    /// Replica tag appended to trace lines — empty in single-replica
+    /// runs so legacy traces (and their hashes) stay byte-identical.
+    fn rtag(&self, rep: usize) -> String {
+        if self.replicas.len() > 1 {
+            format!(" replica={rep}")
+        } else {
+            String::new()
+        }
+    }
+
+    /// Route one request through the shared [`RouterCore`] policy using
+    /// each replica's live scheduler state as its probed view.
+    fn route_of(&self, req: &Request) -> Option<usize> {
+        let views: Vec<ReplicaView> = self
+            .replicas
+            .iter()
+            .map(|r| ReplicaView {
+                alive: r.alive,
+                draining: r.draining,
+                queue_wait: r.sched.queue_wait_estimate(self.plan.workers),
+            })
+            .collect();
+        self.core.route(&req.prompt_text, &views).map(|d| d.replica)
     }
 
     fn log(&mut self, line: String) {
@@ -233,15 +306,25 @@ impl Runner {
         }
     }
 
-    /// Run the engine-wide oracle checks; record the first violation.
+    /// Run the engine-wide oracle checks on every replica (dead ones
+    /// included — a kill must leave conserved state behind); record the
+    /// first violation.
     fn check_engine(&mut self) {
         if self.violation.is_some() {
             return;
         }
-        if let Some(what) =
-            self.oracle.check_engine(&self.pool, &self.sched, self.live.len(), &self.shared)
-        {
-            self.fail(what);
+        for rep in 0..self.replicas.len() {
+            let rs = &self.replicas[rep];
+            if let Some(what) =
+                self.oracle.check_engine(&rs.pool, &rs.sched, rs.live.len(), &rs.shared)
+            {
+                if self.replicas.len() > 1 {
+                    self.fail(format!("replica {rep}: {what}"));
+                } else {
+                    self.fail(what);
+                }
+                return;
+            }
         }
     }
 
@@ -251,7 +334,6 @@ impl Runner {
                 let mut r = Request::new(*req, prompt.clone(), *max_new);
                 r.category = category.clone();
                 r.prompt = std::iter::once(BOS).chain(sim_encode(prompt)).collect();
-                r.cached_hint = self.pool.peek_reuse(&r.prompt);
                 self.flags.insert(*req, r.cancel_flag());
                 if let Some(d) = deadline_ns {
                     self.deadlines.insert(*req, self.clock.now_ns() + d);
@@ -265,13 +347,28 @@ impl Runner {
                     self.plan.gamma_max,
                     self.max_seq,
                 );
-                self.log(format!(
-                    "submit id={req} len={} cat={category} max_new={max_new} hint={} deadline={}",
-                    r.prompt.len(),
-                    r.cached_hint,
-                    deadline_ns.map(|d| d.to_string()).unwrap_or_else(|| "-".into()),
-                ));
-                self.sched.push(r);
+                match self.route_of(&r) {
+                    None => {
+                        self.log(format!(
+                            "submit id={req} len={} cat={category} max_new={max_new} \
+                             rejected (no routable replica)",
+                            r.prompt.len(),
+                        ));
+                        let why = "no routable replica";
+                        self.finish_queued(0, r, FinishStatus::Rejected, why, false);
+                    }
+                    Some(dest) => {
+                        r.cached_hint = self.replicas[dest].pool.peek_reuse(&r.prompt);
+                        self.log(format!(
+                            "submit id={req} len={} cat={category} max_new={max_new} hint={} deadline={}{}",
+                            r.prompt.len(),
+                            r.cached_hint,
+                            deadline_ns.map(|d| d.to_string()).unwrap_or_else(|| "-".into()),
+                            self.rtag(dest),
+                        ));
+                        self.replicas[dest].sched.push(r);
+                    }
+                }
             }
             SimOp::Cancel { req } => {
                 let known = self.flags.contains_key(req);
@@ -297,8 +394,58 @@ impl Runner {
                     self.micro_step();
                 }
             }
+            SimOp::KillReplica { replica } => self.kill_replica(*replica),
+            SimOp::DrainReplica { replica } => {
+                let r = *replica;
+                match self.replicas.get_mut(r) {
+                    Some(rs) => {
+                        rs.draining = true;
+                        self.log(format!("drain replica={r}"));
+                    }
+                    None => self.log(format!("drain replica={r} (no-op: unknown)")),
+                }
+            }
         }
         self.check_engine();
+    }
+
+    /// Take a replica down: every live decode on it fails (the live
+    /// router answers their streams with a `Failed` terminal), its
+    /// queued work re-routes through the surviving replicas, and it
+    /// never admits again. Idempotent on an already-dead replica.
+    fn kill_replica(&mut self, r: usize) {
+        if r >= self.replicas.len() || !self.replicas[r].alive {
+            self.log(format!("kill replica={r} (no-op)"));
+            return;
+        }
+        self.replicas[r].alive = false;
+        self.log(format!(
+            "kill replica={r} failing={} rerouting={}",
+            self.replicas[r].live.len(),
+            self.replicas[r].sched.len()
+        ));
+        while !self.replicas[r].live.is_empty() {
+            let id = self.replicas[r].live[0].req.id;
+            self.oracle.note_killed(id);
+            self.finish_live(r, 0, FinishStatus::Failed, "replica killed");
+        }
+        let mut queued = Vec::new();
+        while let Some(req) = self.replicas[r].sched.pop() {
+            self.replicas[r].sched.note_done(req.sched_cost());
+            queued.push(req);
+        }
+        for mut req in queued {
+            match self.route_of(&req) {
+                Some(dest) => {
+                    req.cached_hint = self.replicas[dest].pool.peek_reuse(&req.prompt);
+                    self.log(format!("reroute id={} replica={dest}", req.id));
+                    self.replicas[dest].sched.push(req);
+                }
+                None => {
+                    self.finish_queued(0, req, FinishStatus::Rejected, "no routable replica", false)
+                }
+            }
+        }
     }
 
     /// One deterministic scheduler tick: reap dead queue entries, admit
@@ -306,35 +453,52 @@ impl Runner {
     /// ready sessions for one round, bank fault latency into the clock,
     /// then run the oracle.
     fn micro_step(&mut self) {
-        for r in self.sched.drain_dead() {
-            let status = if r.cancel.is_cancelled() {
-                FinishStatus::Cancelled
-            } else {
-                FinishStatus::Expired
-            };
-            self.finish_queued(r, status, "reaped in queue", false);
+        for rep in 0..self.replicas.len() {
+            if !self.replicas[rep].alive {
+                continue;
+            }
+            for r in self.replicas[rep].sched.drain_dead() {
+                let status = if r.cancel.is_cancelled() {
+                    FinishStatus::Cancelled
+                } else {
+                    FinishStatus::Expired
+                };
+                self.finish_queued(rep, r, status, "reaped in queue", false);
+            }
+            self.admit(rep);
         }
-        self.admit();
-        if self.live.is_empty() {
+        if self.replicas.iter().all(|r| r.live.is_empty()) {
             self.clock.advance(IDLE_NS);
-        } else if self.plan.mode == "continuous" {
-            // lockstep: every live session advances one round per tick,
-            // the iteration-level interleave of the continuous engine
-            let mut i = 0;
-            while i < self.live.len() && self.violation.is_none() {
-                if self.run_one(i) {
-                    i += 1;
+        } else {
+            for rep in 0..self.replicas.len() {
+                if self.violation.is_some() {
+                    break;
+                }
+                if self.replicas[rep].live.is_empty() {
+                    continue;
+                }
+                if self.plan.mode == "continuous" {
+                    // lockstep: every live session advances one round per
+                    // tick, the iteration-level interleave of the
+                    // continuous engine
+                    let mut i = 0;
+                    while i < self.replicas[rep].live.len() && self.violation.is_none() {
+                        if self.run_one(rep, i) {
+                            i += 1;
+                        }
+                    }
+                } else {
+                    // workers interleave: the seeded RNG picks which
+                    // ready session runs next
+                    let i = self.rng.below(self.replicas[rep].live.len());
+                    self.run_one(rep, i);
                 }
             }
-        } else {
-            // workers interleave: the seeded RNG picks which ready
-            // session runs next
-            let i = self.rng.below(self.live.len());
-            self.run_one(i);
         }
         let injected: u64 = self
-            .fault_stats
+            .replicas
             .iter()
+            .flat_map(|r| r.fault_stats.iter())
             .map(|s| s.delay_ns.load(std::sync::atomic::Ordering::Relaxed))
             .sum();
         self.clock.advance(injected - self.drained_delay_ns);
@@ -342,47 +506,50 @@ impl Runner {
         self.check_engine();
     }
 
-    /// Admission: pop while a slot and a concurrency seat are free.
-    fn admit(&mut self) {
+    /// Admission on one replica: pop while a slot and a concurrency seat
+    /// are free. Draining replicas still admit — their queue was
+    /// accepted before the drain; only the *router* stops feeding them.
+    fn admit(&mut self, rep: usize) {
         let cap = if self.plan.mode == "continuous" {
             self.plan.slots
         } else {
             self.plan.workers.min(self.plan.slots)
         };
-        while self.live.len() < cap && self.violation.is_none() {
-            if self.pool.available() == 0 {
+        while self.replicas[rep].live.len() < cap && self.violation.is_none() {
+            if self.replicas[rep].pool.available() == 0 {
                 return;
             }
-            let req = match self.sched.pop() {
+            let req = match self.replicas[rep].sched.pop() {
                 Some(r) => r,
                 None => return,
             };
             if req.cancel.is_cancelled() {
-                self.finish_queued(req, FinishStatus::Cancelled, "cancelled at admission", true);
+                let why = "cancelled at admission";
+                self.finish_queued(rep, req, FinishStatus::Cancelled, why, true);
                 continue;
             }
             if self.deadline_passed(req.id) {
-                self.finish_queued(req, FinishStatus::Expired, "expired at admission", true);
+                self.finish_queued(rep, req, FinishStatus::Expired, "expired at admission", true);
                 continue;
             }
             if let Err(e) = validate_prompt(&req.prompt, self.max_seq) {
-                self.finish_queued(req, FinishStatus::Failed, &format!("{e}"), true);
+                self.finish_queued(rep, req, FinishStatus::Failed, &format!("{e}"), true);
                 continue;
             }
-            let (slot, lease) = match self.pool.try_acquire_for(&req.prompt) {
+            let (slot, lease) = match self.replicas[rep].pool.try_acquire_for(&req.prompt) {
                 Some(x) => x,
                 None => {
                     // free count raced with paging pressure: requeue and
                     // keep the ledger balanced
-                    self.sched.note_done(req.sched_cost());
-                    self.sched.push(req);
+                    self.replicas[rep].sched.note_done(req.sched_cost());
+                    self.replicas[rep].sched.push(req);
                     return;
                 }
             };
-            self.start_decode(req, slot, lease);
+            self.start_decode(rep, req, slot, lease);
             if self.plan.sabotage && !self.sabotaged {
                 self.sabotaged = true;
-                self.pool.with_pages_mut(|p| p.debug_leak_page());
+                self.replicas[rep].pool.with_pages_mut(|p| p.debug_leak_page());
                 self.log("sabotage: leaked one page from the free-list accounting".to_string());
             }
         }
@@ -392,7 +559,7 @@ impl Runner {
     /// Mirrors the worker path (server.rs): residency is the min of what
     /// draft and target actually adopted, and a model that cannot cover
     /// the claimed prefix is a Failed decode, never a wrong one.
-    fn start_decode(&mut self, req: Request, mut slot: Slot, lease: Lease) {
+    fn start_decode(&mut self, rep: usize, req: Request, mut slot: Slot, lease: Lease) {
         let seed = req.scenario_seed();
         let rd = slot.draft.adopt_pages(seed, &req.category, lease.local, lease.shared);
         let rt = slot.target.adopt_pages(seed, &req.category, lease.local, lease.shared);
@@ -406,18 +573,22 @@ impl Runner {
                 slot.draft.cur(),
                 slot.target.cur()
             );
-            self.pool.release(slot);
-            self.finish_queued(req, FinishStatus::Failed, &why, true);
+            self.replicas[rep].pool.release(slot);
+            self.finish_queued(rep, req, FinishStatus::Failed, &why, true);
             return;
         }
-        self.ctrls[slot.id].reset_request();
+        self.replicas[rep].ctrls[slot.id].reset_request();
         let max_seq = slot.draft.max_seq().min(slot.target.max_seq());
         let rng = Rng::new(self.plan.seed).fork(0xAC71F ^ req.id);
         self.log(format!(
-            "admit id={} slot={} lease={}/{} resident={resident}",
-            req.id, slot.id, lease.local, lease.shared
+            "admit id={} slot={} lease={}/{} resident={resident}{}",
+            req.id,
+            slot.id,
+            lease.local,
+            lease.shared,
+            self.rtag(rep)
         ));
-        self.live.push(Live {
+        self.replicas[rep].live.push(Live {
             committed: req.prompt.clone(),
             prompt_len: req.prompt.len(),
             clip: EmitClip::new(req.max_new),
@@ -436,58 +607,63 @@ impl Runner {
     /// Advance session `i` by one lifecycle check + decode round.
     /// Returns false when the session reached a terminal state (and was
     /// removed from the live set).
-    fn run_one(&mut self, i: usize) -> bool {
-        if self.live[i].req.cancel.is_cancelled() {
-            self.finish_live(i, FinishStatus::Cancelled, "cancelled mid-decode");
+    fn run_one(&mut self, rep: usize, i: usize) -> bool {
+        if self.replicas[rep].live[i].req.cancel.is_cancelled() {
+            self.finish_live(rep, i, FinishStatus::Cancelled, "cancelled mid-decode");
             return false;
         }
-        if self.deadline_passed(self.live[i].req.id) {
-            self.finish_live(i, FinishStatus::Expired, "deadline mid-decode");
+        if self.deadline_passed(self.replicas[rep].live[i].req.id) {
+            self.finish_live(rep, i, FinishStatus::Expired, "deadline mid-decode");
             return false;
         }
-        let sess = &mut self.live[i];
-        let ctrl = &mut self.ctrls[sess.slot.id];
-        let outcome = sim_round(
-            sess.slot.draft.as_mut(),
-            sess.slot.target.as_mut(),
-            ctrl,
-            &mut sess.rng,
-            &mut sess.committed,
-            sess.prompt_len,
-            sess.req.max_new,
-            self.plan.gamma_max,
-            sess.max_seq,
-        );
+        let gamma_max = self.plan.gamma_max;
+        let outcome = {
+            let ReplicaSim { live, ctrls, .. } = &mut self.replicas[rep];
+            let sess = &mut live[i];
+            let ctrl = &mut ctrls[sess.slot.id];
+            sim_round(
+                sess.slot.draft.as_mut(),
+                sess.slot.target.as_mut(),
+                ctrl,
+                &mut sess.rng,
+                &mut sess.committed,
+                sess.prompt_len,
+                sess.req.max_new,
+                gamma_max,
+                sess.max_seq,
+            )
+        };
         match outcome {
             Err(e) => {
-                self.finish_live(i, FinishStatus::Failed, &format!("{e:#}"));
+                self.finish_live(rep, i, FinishStatus::Failed, &format!("{e:#}"));
                 false
             }
             Ok(StepOutcome::Finished(reason)) => {
-                self.finish_live(i, FinishStatus::Done, &format!("{reason:?}"));
+                self.finish_live(rep, i, FinishStatus::Done, &format!("{reason:?}"));
                 false
             }
             Ok(StepOutcome::Round(commit)) => {
                 self.clock.advance(VERIFY_NS + DRAFT_TOKEN_NS * commit.drafted as u64);
                 let (emit, determined) = {
-                    let sess = &mut self.live[i];
+                    let sess = &mut self.replicas[rep].live[i];
                     let (emit, determined) = sess.clip.clip(&commit.new_tokens);
                     sess.emitted.extend_from_slice(emit);
                     (emit.len(), determined)
                 };
                 let (id, drafted, accepted) =
-                    (self.live[i].req.id, commit.drafted, commit.accepted);
+                    (self.replicas[rep].live[i].req.id, commit.drafted, commit.accepted);
                 self.log(format!(
                     "round id={id} drafted={drafted} accepted={accepted} emitted={emit}"
                 ));
-                if let Some(what) = self.oracle.check_stream(id, &self.live[i].emitted) {
+                if let Some(what) = self.oracle.check_stream(id, &self.replicas[rep].live[i].emitted)
+                {
                     self.fail(what);
                     return true;
                 }
                 if determined {
                     // reply fully determined (budget or EOS inside the
                     // clip window) — same early stop as drive_session
-                    self.finish_live(i, FinishStatus::Done, "reply determined");
+                    self.finish_live(rep, i, FinishStatus::Done, "reply determined");
                     return false;
                 }
                 true
@@ -497,9 +673,9 @@ impl Runner {
 
     /// Terminal handling for a live session: prefix-cache bookkeeping,
     /// slot release, scheduler ledger release, oracle terminal check.
-    fn finish_live(&mut self, i: usize, status: FinishStatus, why: &str) {
-        let mut sess = self.live.swap_remove(i);
-        if self.pool.prefix_cache_enabled() {
+    fn finish_live(&mut self, rep: usize, i: usize, status: FinishStatus, why: &str) {
+        let mut sess = self.replicas[rep].live.swap_remove(i);
+        if self.replicas[rep].pool.prefix_cache_enabled() {
             let watermark = sess.slot.draft.cur().min(sess.slot.target.cur());
             if status == FinishStatus::Failed {
                 sess.slot.clear_prefix();
@@ -508,8 +684,8 @@ impl Runner {
                 sess.slot.record_prefix(&tokens, watermark);
             }
         }
-        self.pool.release(sess.slot);
-        self.sched.note_done(sess.req.sched_cost());
+        self.replicas[rep].pool.release(sess.slot);
+        self.replicas[rep].sched.note_done(sess.req.sched_cost());
         self.log(format!(
             "end id={} status={} emitted={} ({why})",
             sess.req.id,
@@ -525,9 +701,16 @@ impl Runner {
     /// Terminal handling for a request that never started decoding.
     /// `popped` says whether it went through `Scheduler::pop` (and thus
     /// holds an in-flight ledger seat to release).
-    fn finish_queued(&mut self, req: Request, status: FinishStatus, why: &str, popped: bool) {
+    fn finish_queued(
+        &mut self,
+        rep: usize,
+        req: Request,
+        status: FinishStatus,
+        why: &str,
+        popped: bool,
+    ) {
         if popped {
-            self.sched.note_done(req.sched_cost());
+            self.replicas[rep].sched.note_done(req.sched_cost());
         }
         self.log(format!("end id={} status={} emitted=0 ({why})", req.id, status.label()));
         if let Some(what) = self.oracle.check_terminal(req.id, status, &[]) {
@@ -675,6 +858,8 @@ mod tests {
             faults: false,
             max_faults: 0,
             sabotage: false,
+            replicas: 1,
+            affinity: true,
             ops: vec![
                 SimOp::Submit {
                     req: 0,
@@ -699,5 +884,89 @@ mod tests {
         assert_eq!(a.trace, b.trace, "same plan ⇒ identical trace");
         assert_eq!(a.trace_hash, b.trace_hash);
         assert_eq!(a.count(FinishStatus::Done), 2);
+    }
+
+    fn fleet_plan(replicas: usize, ops: Vec<SimOp>) -> SimPlan {
+        SimPlan {
+            seed: 9,
+            mode: "workers".into(),
+            slots: 1,
+            workers: 1,
+            gamma_max: 4,
+            method: "static-4".into(),
+            cache: true,
+            sharing: true,
+            page_size: 16,
+            kv_pages: 0,
+            faults: false,
+            max_faults: 0,
+            sabotage: false,
+            replicas,
+            affinity: true,
+            ops,
+        }
+    }
+
+    fn fleet_submit(req: u64, prompt: &str) -> SimOp {
+        SimOp::Submit {
+            req,
+            prompt: prompt.into(),
+            category: "qa".into(),
+            max_new: 4,
+            deadline_ns: None,
+        }
+    }
+
+    #[test]
+    fn replica_kill_fails_live_work_and_reroutes_the_queue() {
+        let plan = fleet_plan(
+            2,
+            vec![
+                fleet_submit(0, "alpha prompt one"),
+                fleet_submit(1, "bravo prompt two"),
+                fleet_submit(2, "charlie prompt three"),
+                fleet_submit(3, "delta prompt four"),
+                SimOp::Step { n: 2 },
+                SimOp::KillReplica { replica: 0 },
+                SimOp::Step { n: 4 },
+            ],
+        );
+        let a = run_plan(&plan);
+        assert_eq!(a.violation, None, "trace:\n{}", a.trace.join("\n"));
+        assert_eq!(a.replies.len(), 4, "every request reached a terminal state");
+        for (id, reply) in &a.replies {
+            assert!(
+                matches!(reply.status, FinishStatus::Done | FinishStatus::Failed),
+                "req {id} ended {:?}",
+                reply.status
+            );
+        }
+        assert_eq!(run_plan(&plan).trace_hash, a.trace_hash, "kill plans replay");
+    }
+
+    #[test]
+    fn draining_every_replica_rejects_new_submits() {
+        let plan = fleet_plan(
+            2,
+            vec![
+                SimOp::DrainReplica { replica: 0 },
+                SimOp::DrainReplica { replica: 1 },
+                fleet_submit(0, "late arrival"),
+                SimOp::Step { n: 2 },
+            ],
+        );
+        let a = run_plan(&plan);
+        assert_eq!(a.violation, None, "trace:\n{}", a.trace.join("\n"));
+        assert_eq!(a.replies[&0].status, FinishStatus::Rejected, "no routable replica");
+    }
+
+    #[test]
+    fn generated_fleet_plans_replay_deterministically() {
+        for seed in 0..6u64 {
+            let plan = SimPlan::generate_fleet(seed, 60, 3);
+            let a = run_plan(&plan);
+            assert_eq!(a.violation, None, "seed {seed} trace:\n{}", a.trace.join("\n"));
+            assert_eq!(run_plan(&plan).trace_hash, a.trace_hash, "seed {seed}");
+        }
     }
 }

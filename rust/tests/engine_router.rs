@@ -1,0 +1,620 @@
+//! Multi-replica router-tier integration tests (docs/ARCHITECTURE.md
+//! §15): fleet health/metrics aggregation, prefix-affinity placement and
+//! its cache-hit-rate edge over round-robin, replica kill mid-stream →
+//! honest terminal + failover, draining semantics, slow-loris 408 in
+//! both I/O modes, SSE keep-alives, reactor-vs-blocking reply parity,
+//! and connection scaling on a fixed I/O-thread pool.
+
+mod common;
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use common::{http_get_json, http_post_json, oracle_tokens, sim_config, TIMEOUT};
+use tapout::engine::{
+    Engine, EngineMode, EventSource, Gateway, GenerateStart, HttpConfig, HttpServer, IoStats,
+    Reactor, ReactorConfig, ReplicaView, Router, RouterConfig, RouterCore, SourceEvent,
+};
+use tapout::models::sim_decode;
+use tapout::util::Json;
+
+// ---------------------------------------------------------------------------
+// scaffolding
+// ---------------------------------------------------------------------------
+
+/// One sim-backend replica (prefix cache + COW page sharing on) behind
+/// its own reactor front end.
+fn replica() -> (Arc<Engine>, HttpServer) {
+    let mut cfg = sim_config(2, 2);
+    cfg.prefix_cache = true;
+    cfg.page_sharing = true;
+    let eng = Arc::new(Engine::start(cfg).unwrap());
+    let http = HttpServer::start_with(
+        eng.clone(),
+        0,
+        HttpConfig { io_threads: 2, ..HttpConfig::default() },
+    )
+    .unwrap();
+    (eng, http)
+}
+
+/// A router over the given replica addresses, probed until every
+/// replica has been seen alive (so tests never race the first probe).
+fn router_over(replicas: Vec<String>, affinity: bool) -> Router {
+    let n = replicas.len();
+    let cfg = RouterConfig {
+        replicas,
+        affinity,
+        page_size: 16,
+        probe_ms: 50,
+        io_threads: 2,
+        ..RouterConfig::default()
+    };
+    let router = Router::start(cfg, 0).unwrap();
+    let deadline = Instant::now() + TIMEOUT;
+    while !(0..n).all(|i| router.replica_alive(i)) {
+        assert!(Instant::now() < deadline, "replicas never probed alive");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    router
+}
+
+/// `n` in-process replicas behind one router.
+fn fleet(n: usize, affinity: bool) -> (Vec<(Arc<Engine>, HttpServer)>, Router) {
+    let reps: Vec<(Arc<Engine>, HttpServer)> = (0..n).map(|_| replica()).collect();
+    let addrs = reps.iter().map(|(_, h)| h.addr.clone()).collect();
+    (reps, router_over(addrs, affinity))
+}
+
+/// The replica index the affinity policy owns `prompt` to — computed
+/// with the live router's own [`RouterCore`], so tests predict
+/// placements instead of discovering them.
+fn owner_of(prompt: &str, n: usize) -> usize {
+    let views = vec![ReplicaView { alive: true, draining: false, queue_wait: 0.0 }; n];
+    RouterCore::new(n, 16, true).route(prompt, &views).unwrap().replica
+}
+
+/// The target-only greedy text every placement must reproduce.
+fn oracle_text(prompt: &str, max_new: usize) -> String {
+    sim_decode(&oracle_tokens(prompt, max_new))
+}
+
+/// Unary generate via `addr`, asserting 200/done and byte-exact oracle
+/// text — placement must never change bytes.
+fn generate_ok(addr: &str, prompt: &str, max_new: usize) -> Json {
+    let body = format!("{{\"prompt\": \"{prompt}\", \"max_new\": {max_new}}}");
+    let (code, j) = http_post_json(addr, "/generate", &body);
+    assert_eq!(code, 200, "{j:?}");
+    assert_eq!(j.get("status").and_then(|s| s.as_str()), Some("done"), "{j:?}");
+    let want = oracle_text(prompt, max_new);
+    assert_eq!(j.get("text").and_then(|t| t.as_str()), Some(want.as_str()), "for {prompt:?}");
+    j
+}
+
+/// Poll the router's fleet `/metrics` until `pred` holds (replica
+/// snapshots refresh on the probe cadence, not synchronously).
+fn wait_metrics(addr: &str, pred: impl Fn(&Json) -> bool) -> Json {
+    let deadline = Instant::now() + TIMEOUT;
+    loop {
+        let (code, m) = http_get_json(addr, "/metrics");
+        if code == 200 && pred(&m) {
+            return m;
+        }
+        assert!(Instant::now() < deadline, "fleet metrics never converged: {}", m.render());
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+/// Open a streaming generate and return the raw socket (response not
+/// yet read).
+fn open_stream(addr: &str, prompt: &str, max_new: usize) -> TcpStream {
+    let mut s = TcpStream::connect(addr).unwrap();
+    let body = format!("{{\"prompt\": \"{prompt}\", \"max_new\": {max_new}, \"stream\": true}}");
+    write!(s, "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}", body.len())
+        .unwrap();
+    s
+}
+
+/// Read from `s` into `raw` until `marker` appears (or the peer closes).
+fn read_until(s: &mut TcpStream, marker: &str, raw: &mut String) {
+    s.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+    let deadline = Instant::now() + TIMEOUT;
+    let mut buf = [0u8; 4096];
+    while !raw.contains(marker) {
+        assert!(Instant::now() < deadline, "timed out waiting for {marker:?}; got:\n{raw}");
+        match s.read(&mut buf) {
+            Ok(0) => return,
+            Ok(n) => raw.push_str(&String::from_utf8_lossy(&buf[..n])),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
+            Err(e) if e.kind() == std::io::ErrorKind::TimedOut => {}
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => panic!("stream read: {e}"),
+        }
+    }
+}
+
+/// Drain the rest of a response (until close) into `raw`; a reset
+/// during server teardown counts as a close.
+fn read_to_close(s: &mut TcpStream, raw: &mut String) {
+    s.set_read_timeout(Some(TIMEOUT)).unwrap();
+    let mut buf = [0u8; 4096];
+    loop {
+        match s.read(&mut buf) {
+            Ok(0) => return,
+            Ok(n) => raw.push_str(&String::from_utf8_lossy(&buf[..n])),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return,
+        }
+    }
+}
+
+/// De-chunk a raw SSE response and parse its `data:` payloads in order
+/// (keep-alive comments are not data events and are skipped).
+fn sse_events(raw: &str) -> Vec<Json> {
+    let body = raw.split_once("\r\n\r\n").map(|x| x.1).unwrap_or("");
+    let mut data = String::new();
+    let mut rest = body;
+    loop {
+        let Some((size_str, after)) = rest.split_once("\r\n") else { break };
+        let Ok(size) = usize::from_str_radix(size_str.trim(), 16) else { break };
+        if size == 0 || after.len() < size + 2 {
+            break;
+        }
+        data.push_str(&after[..size]);
+        rest = &after[size + 2..];
+    }
+    data.split("\n\n")
+        .filter_map(|ev| ev.trim_end().strip_prefix("data: "))
+        .filter_map(|p| Json::parse(p).ok())
+        .collect()
+}
+
+/// Concatenated (ids, text) of a stream's token events plus its
+/// terminal `done` event.
+fn stream_summary(events: &[Json]) -> (Vec<usize>, String, Json) {
+    let mut ids = Vec::new();
+    let mut text = String::new();
+    let mut done = Json::Null;
+    for ev in events {
+        if ev.get("done").and_then(|d| d.as_bool()) == Some(true) {
+            done = ev.clone();
+        } else if let Some(arr) = ev.get("ids").and_then(|i| i.as_arr()) {
+            ids.extend(arr.iter().filter_map(|x| x.as_usize()));
+            text.push_str(ev.get("text").and_then(|t| t.as_str()).unwrap_or(""));
+        }
+    }
+    (ids, text, done)
+}
+
+/// Send raw wire bytes, return the complete raw response.
+fn raw_exchange(addr: &str, wire: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(wire.as_bytes()).unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).unwrap();
+    raw
+}
+
+// ---------------------------------------------------------------------------
+// fleet health + metrics aggregation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fleet_health_and_metrics_aggregate_across_replicas() {
+    let (_reps, router) = fleet(2, true);
+
+    let (code, h) = http_get_json(&router.addr, "/health");
+    assert_eq!(code, 200);
+    assert_eq!(h.get("ok").and_then(|x| x.as_bool()), Some(true));
+    assert_eq!(h.get("role").and_then(|x| x.as_str()), Some("router"));
+    assert_eq!(h.get("replicas").and_then(|x| x.as_usize()), Some(2));
+    assert_eq!(h.get("alive").and_then(|x| x.as_usize()), Some(2));
+    let members = h.get("fleet").and_then(|f| f.as_arr()).expect("fleet array");
+    assert_eq!(members.len(), 2);
+    for m in members {
+        assert_eq!(m.get("alive").and_then(|x| x.as_bool()), Some(true));
+        assert_eq!(m.get("draining").and_then(|x| x.as_bool()), Some(false));
+    }
+
+    for i in 0..4 {
+        generate_ok(&router.addr, &format!("fleet metrics probe {i} tell me a story"), 8);
+    }
+    let m = wait_metrics(&router.addr, |m| {
+        m.get("fleet").and_then(|f| f.get("completed")).and_then(|x| x.as_usize()) == Some(4)
+    });
+    assert_eq!(m.get("role").and_then(|x| x.as_str()), Some("router"));
+    let r = m.get("router").expect("router stats");
+    assert_eq!(r.get("routed").and_then(|x| x.as_usize()), Some(4));
+    assert_eq!(r.get("affinity_hits").and_then(|x| x.as_usize()), Some(4));
+    assert_eq!(r.get("upstream_errors").and_then(|x| x.as_usize()), Some(0));
+    let io = m.get("io").expect("io gauges");
+    assert_eq!(io.get("mode").and_then(|x| x.as_str()), Some("router"));
+    let fl = m.get("fleet").unwrap();
+    assert!(fl.get("new_tokens").and_then(|x| x.as_usize()).unwrap() > 0);
+    assert!(fl.get("cache").and_then(|c| c.get("lookups")).is_some());
+    assert!(fl.get("pages").and_then(|p| p.get("lookups")).is_some());
+    assert_eq!(m.get("replicas").and_then(|x| x.as_arr()).map(|a| a.len()), Some(2));
+}
+
+// ---------------------------------------------------------------------------
+// prefix affinity vs round-robin
+// ---------------------------------------------------------------------------
+
+/// Group prompts share their first KV page (the sim tokenizer is
+/// byte-level, so the first 15 bytes + BOS fill a 16-token page); the
+/// group tag sits inside that window, the request index outside it.
+fn group_prompt(g: usize, i: usize) -> String {
+    format!("g{g} affinity shared head :: request {i} summarize the findings")
+}
+
+const GROUPS: usize = 3;
+const PER_GROUP: usize = 6;
+
+/// Drive the same grouped same-prefix traffic through a fleet; returns
+/// the aggregated (cache hits, cache lookups) across its replicas.
+fn run_groups(reps: &[(Arc<Engine>, HttpServer)], router_addr: &str) -> (usize, usize) {
+    for g in 0..GROUPS {
+        for i in 0..PER_GROUP {
+            generate_ok(router_addr, &group_prompt(g, i), 8);
+        }
+    }
+    let mut hits = 0;
+    let mut lookups = 0;
+    for (_, http) in reps {
+        let (code, m) = http_get_json(&http.addr, "/metrics");
+        assert_eq!(code, 200);
+        let cache = m.get("engine").and_then(|e| e.get("cache")).expect("cache gauges");
+        hits += cache.get("hits").and_then(|x| x.as_usize()).unwrap();
+        lookups += cache.get("lookups").and_then(|x| x.as_usize()).unwrap();
+    }
+    (hits, lookups)
+}
+
+#[test]
+fn same_prefix_bursts_concentrate_and_beat_round_robin_hit_rate() {
+    let (aff_reps, aff_router) = fleet(2, true);
+    let (aff_hits, aff_lookups) = run_groups(&aff_reps, &aff_router.addr);
+
+    // placement really concentrated: each group's replies all completed
+    // on the replica the shared RouterCore policy owns that prefix to
+    let mut expect = [0u64; 2];
+    for g in 0..GROUPS {
+        expect[owner_of(&group_prompt(g, 0), 2)] += PER_GROUP as u64;
+    }
+    for (r, (eng, _)) in aff_reps.iter().enumerate() {
+        let done = eng.metrics.lock().unwrap().completed;
+        assert_eq!(done, expect[r], "replica {r}: affinity placement drifted");
+    }
+
+    // identical traffic, round-robin placement: prefix locality dilutes
+    let (rr_reps, rr_router) = fleet(2, false);
+    let (rr_hits, rr_lookups) = run_groups(&rr_reps, &rr_router.addr);
+    assert_eq!(aff_lookups, rr_lookups, "both fleets saw identical traffic");
+    assert!(
+        aff_hits > rr_hits,
+        "affinity must beat round-robin on cache hits: {aff_hits} vs {rr_hits}"
+    );
+
+    // the router's own ledger agrees about how placements were made
+    let (_, am) = http_get_json(&aff_router.addr, "/metrics");
+    let hits = am.get("router").and_then(|r| r.get("affinity_hits")).and_then(|x| x.as_usize());
+    assert_eq!(hits, Some(GROUPS * PER_GROUP));
+    let (_, rm) = http_get_json(&rr_router.addr, "/metrics");
+    let hits = rm.get("router").and_then(|r| r.get("affinity_hits")).and_then(|x| x.as_usize());
+    assert_eq!(hits, Some(0));
+}
+
+// ---------------------------------------------------------------------------
+// replica kill mid-stream → honest terminal + failover
+// ---------------------------------------------------------------------------
+
+/// A replica stand-in whose generate streams one token event and then
+/// holds the stream open until the test tears the replica down — the
+/// deterministic way to catch a kill exactly mid-stream.
+struct HoldingGateway;
+
+struct HoldingSource {
+    stage: usize,
+}
+
+impl EventSource for HoldingSource {
+    fn poll_event(&mut self) -> Option<SourceEvent> {
+        match self.stage {
+            0 => {
+                self.stage = 1;
+                Some(SourceEvent::StreamStart)
+            }
+            1 => {
+                self.stage = 2;
+                Some(SourceEvent::Data("{\"ids\": [7], \"text\": \"e\"}".to_string()))
+            }
+            _ => None, // hold the stream open forever
+        }
+    }
+
+    fn cancel(&mut self) {}
+}
+
+impl Gateway for HoldingGateway {
+    fn route(&self, method: &str, path: &str, _body: &str) -> (u16, String) {
+        match (method, path) {
+            ("GET", "/health") => {
+                let mut o = Json::obj();
+                o.set("ok", true);
+                (200, o.render())
+            }
+            ("GET", "/metrics") => {
+                let mut sched = Json::obj();
+                sched.set("queue_wait_est_cost", 0.0);
+                let mut o = Json::obj();
+                o.set("completed", 0usize).set("new_tokens", 0usize).set("sched", sched);
+                (200, o.render())
+            }
+            _ => (404, "{\"error\": \"not found\"}".to_string()),
+        }
+    }
+
+    fn generate(&self, _body: &str) -> GenerateStart {
+        GenerateStart::Source(Box::new(HoldingSource { stage: 0 }))
+    }
+}
+
+#[test]
+fn replica_kill_mid_stream_synthesizes_failed_terminal_and_fails_over() {
+    // replica 0: a real engine; replica 1: the holding stand-in
+    let (_eng0, http0) = replica();
+    let io = Arc::new(IoStats::new("reactor", 1));
+    let rcfg = ReactorConfig {
+        io_threads: 1,
+        header_timeout: Duration::from_secs(10),
+        sse_keepalive: Duration::from_secs(10),
+    };
+    let mut stub = Reactor::start(Arc::new(HoldingGateway), 0, rcfg, io).unwrap();
+    let router = router_over(vec![http0.addr.clone(), stub.addr.clone()], true);
+
+    // a prompt the affinity policy owns to the doomed replica (the tag
+    // sits inside the first-page routing window, so we can search)
+    let prompt = (0..64)
+        .map(|i| format!("kill-{i:02} target head :: stream this request please"))
+        .find(|p| owner_of(p, 2) == 1)
+        .expect("some prompt hashes to replica 1");
+
+    // stream through the router until the first relayed token arrives
+    let mut s = open_stream(&router.addr, &prompt, 8);
+    let mut raw = String::new();
+    read_until(&mut s, "data: ", &mut raw);
+    assert!(raw.contains("text/event-stream"), "stream must have started:\n{raw}");
+
+    // kill the replica mid-stream: the router must answer with an honest
+    // synthesized terminal, never a silent hangup or a silent retry
+    stub.stop();
+    read_to_close(&mut s, &mut raw);
+    let (_, _, done) = stream_summary(&sse_events(&raw));
+    assert_eq!(done.get("done").and_then(|x| x.as_bool()), Some(true), "raw:\n{raw}");
+    assert_eq!(done.get("status").and_then(|x| x.as_str()), Some("failed"), "raw:\n{raw}");
+    assert_eq!(
+        done.get("error").and_then(|x| x.as_str()),
+        Some("upstream replica failed mid-stream")
+    );
+
+    // new work owned by the dead replica fails over to the survivor and
+    // still produces oracle-exact bytes
+    generate_ok(&router.addr, &prompt, 8);
+    let deadline = Instant::now() + TIMEOUT;
+    while router.replica_alive(1) {
+        assert!(Instant::now() < deadline, "prober never noticed the dead replica");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let (_, h) = http_get_json(&router.addr, "/health");
+    assert_eq!(h.get("ok").and_then(|x| x.as_bool()), Some(true), "fleet stays serving");
+    assert_eq!(h.get("alive").and_then(|x| x.as_usize()), Some(1));
+    let (_, m) = http_get_json(&router.addr, "/metrics");
+    let errs = m.get("router").and_then(|r| r.get("upstream_errors")).and_then(|x| x.as_usize());
+    assert!(errs >= Some(1), "the mid-stream death must be on the ledger: {m:?}");
+}
+
+// ---------------------------------------------------------------------------
+// draining
+// ---------------------------------------------------------------------------
+
+#[test]
+fn draining_rejects_new_work_routes_around_and_undrains() {
+    let (reps, router) = fleet(2, true);
+    let prompt = (0..64)
+        .map(|i| format!("drain-{i:02} routing head :: request goes here"))
+        .find(|p| owner_of(p, 2) == 0)
+        .expect("some prompt hashes to replica 0");
+
+    // drain replica 0 over the admin API; the fleet view reflects it
+    let (code, d) = http_post_json(&router.addr, "/admin/drain", "{\"replica\": 0}");
+    assert_eq!(code, 200, "{d:?}");
+    assert_eq!(d.get("draining").and_then(|x| x.as_bool()), Some(true));
+    let (_, h) = http_get_json(&router.addr, "/health");
+    let members = h.get("fleet").and_then(|f| f.as_arr()).unwrap();
+    assert_eq!(members[0].get("draining").and_then(|x| x.as_bool()), Some(true));
+
+    // new work owned by the draining replica routes to its ring
+    // successor — and the bytes don't change
+    for i in 0..3 {
+        generate_ok(&router.addr, &format!("{prompt} variant {i}"), 8);
+    }
+    assert_eq!(reps[0].0.metrics.lock().unwrap().completed, 0, "draining replica got new work");
+    assert_eq!(reps[1].0.metrics.lock().unwrap().completed, 3);
+
+    // draining is a router-side valve: the replica itself still serves
+    // the work it already accepted (here: submitted directly)
+    generate_ok(&reps[0].1.addr, &prompt, 8);
+    assert_eq!(reps[0].0.metrics.lock().unwrap().completed, 1);
+
+    // with every replica draining there is nowhere to place new work
+    router.drain(1, true);
+    let body = format!("{{\"prompt\": \"{prompt}\", \"max_new\": 8}}");
+    let (code, j) = http_post_json(&router.addr, "/generate", &body);
+    assert_eq!(code, 503, "{j:?}");
+    assert_eq!(j.get("error").and_then(|x| x.as_str()), Some("no healthy replica"));
+
+    // undrain restores the owner
+    let (code, u) = http_post_json(&router.addr, "/admin/undrain", "{\"replica\": 0}");
+    assert_eq!(code, 200, "{u:?}");
+    generate_ok(&router.addr, &prompt, 8);
+    assert_eq!(reps[0].0.metrics.lock().unwrap().completed, 2);
+}
+
+// ---------------------------------------------------------------------------
+// slow-loris guard (both I/O modes)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn slow_loris_connections_get_408_in_both_io_modes() {
+    for io_threads in [2usize, 0] {
+        let eng = Arc::new(Engine::start(sim_config(1, 1)).unwrap());
+        let cfg = HttpConfig { io_threads, header_timeout_ms: 150, ..HttpConfig::default() };
+        let http = HttpServer::start_with(eng, 0, cfg).unwrap();
+
+        // deliver half a request and stall: the read deadline must
+        // answer 408 instead of pinning the connection forever
+        let mut s = TcpStream::connect(&http.addr).unwrap();
+        write!(s, "POST /generate HTTP/1.1\r\nHost: x\r\nContent-").unwrap();
+        let mut raw = String::new();
+        s.read_to_string(&mut raw).unwrap();
+        assert!(raw.starts_with("HTTP/1.1 408 "), "io_threads={io_threads}: got:\n{raw}");
+        assert!(raw.contains("request read timed out"), "io_threads={io_threads}");
+        assert_eq!(http.stats.read_timeouts.load(Ordering::Relaxed), 1, "io={io_threads}");
+
+        // a well-formed request on a fresh connection still serves
+        generate_ok(&http.addr, "slow loris survivor checks the service", 8);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// reactor vs blocking parity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn reactor_and_blocking_front_ends_serve_identical_replies() {
+    for mode in [EngineMode::Workers, EngineMode::Continuous] {
+        let mk = || {
+            let mut cfg = sim_config(2, 2);
+            cfg.mode = mode;
+            cfg.prefix_cache = true;
+            cfg.page_sharing = true;
+            Arc::new(Engine::start(cfg).unwrap())
+        };
+        let reactor =
+            HttpServer::start_with(mk(), 0, HttpConfig { io_threads: 2, ..HttpConfig::default() })
+                .unwrap();
+        let blocking =
+            HttpServer::start_with(mk(), 0, HttpConfig { io_threads: 0, ..HttpConfig::default() })
+                .unwrap();
+
+        // framing and routing errors are timing-free: byte-identical
+        let b = "{\"prompt\": \"x\", \"max_new\": 4}";
+        let no_prompt = "{\"max_new\": 4}";
+        let errors = [
+            "GET /nope HTTP/1.1\r\nHost: x\r\n\r\n".to_string(),
+            format!(
+                "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{no_prompt}",
+                no_prompt.len()
+            ),
+            "POST /generate HTTP/1.1\r\nHost: x\r\n\r\n".to_string(),
+            "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: banana\r\n\r\n".to_string(),
+            "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: 9999999\r\n\r\n".to_string(),
+            format!(
+                "POST /generate HTTP/1.1\r\nHost: x\r\nTransfer-Encoding: chunked\r\n\
+                 Content-Length: {}\r\n\r\n{b}",
+                b.len()
+            ),
+        ];
+        for wire in &errors {
+            let a = raw_exchange(&reactor.addr, wire);
+            let bl = raw_exchange(&blocking.addr, wire);
+            assert_eq!(a, bl, "mode {mode:?}: raw replies diverged for:\n{wire}");
+            assert!(!a.starts_with("HTTP/1.1 200"), "these are all error requests");
+        }
+
+        // unary and streaming token output: identical across front ends
+        // and byte-exact against the greedy oracle
+        for (i, max_new) in [(0usize, 8usize), (1, 16)] {
+            let prompt = format!("parity check {i} for mode {mode:?} front ends");
+            let want = oracle_text(&prompt, max_new);
+            let ja = generate_ok(&reactor.addr, &prompt, max_new);
+            let jb = generate_ok(&blocking.addr, &prompt, max_new);
+            assert_eq!(
+                ja.get("new_tokens").and_then(|x| x.as_usize()),
+                jb.get("new_tokens").and_then(|x| x.as_usize())
+            );
+
+            let mut raws = Vec::new();
+            for addr in [&reactor.addr, &blocking.addr] {
+                let mut s = open_stream(addr, &prompt, max_new);
+                let mut raw = String::new();
+                read_to_close(&mut s, &mut raw);
+                assert!(raw.contains("text/event-stream"), "{raw}");
+                let (ids, text, done) = stream_summary(&sse_events(&raw));
+                assert_eq!(text, want, "stream text must match the oracle");
+                assert_eq!(done.get("status").and_then(|x| x.as_str()), Some("done"));
+                raws.push((ids, text));
+            }
+            assert_eq!(raws[0], raws[1], "mode {mode:?}: streams diverged across front ends");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// connection scaling + keep-alives on a fixed I/O pool
+// ---------------------------------------------------------------------------
+
+/// Threads in this process right now (`/proc/self/task`); 0 when the
+/// platform has no procfs (the scaling assertion is then skipped).
+fn task_count() -> usize {
+    std::fs::read_dir("/proc/self/task").map(|d| d.count()).unwrap_or(0)
+}
+
+#[test]
+fn reactor_holds_256_idle_sse_streams_on_a_fixed_pool_with_keepalives() {
+    const STREAMS: usize = 256;
+    let io = Arc::new(IoStats::new("reactor", 2));
+    let rcfg = ReactorConfig {
+        io_threads: 2,
+        header_timeout: Duration::from_secs(30),
+        sse_keepalive: Duration::from_millis(100),
+    };
+    let mut reactor = Reactor::start(Arc::new(HoldingGateway), 0, rcfg, io.clone()).unwrap();
+
+    let before = task_count();
+    let mut conns = Vec::with_capacity(STREAMS);
+    for i in 0..STREAMS {
+        let mut s = open_stream(&reactor.addr, &format!("idle stream {i}"), 8);
+        // wait for the first token event so the stream is truly open
+        let mut raw = String::new();
+        read_until(&mut s, "data: ", &mut raw);
+        conns.push((s, raw));
+    }
+    let after = task_count();
+    if before > 0 {
+        // thread-per-connection would add ~256 threads here; the
+        // reactor adds none (generous slack because sibling tests in
+        // this binary spawn engines concurrently)
+        assert!(
+            after <= before + 64,
+            "I/O pool is not fixed: {before} threads before, {after} after {STREAMS} streams"
+        );
+    }
+    assert!(io.accepted.load(Ordering::Relaxed) >= STREAMS as u64);
+    assert!(io.peak_open.load(Ordering::Relaxed) >= STREAMS as u64);
+
+    // idle long enough for at least one keep-alive interval to pass
+    std::thread::sleep(Duration::from_millis(300));
+    // tearing the server down ends every held stream; each client must
+    // have seen its token event and at least one `: ping` comment
+    reactor.stop();
+    for (mut s, mut raw) in conns {
+        read_to_close(&mut s, &mut raw);
+        assert!(raw.contains("data: "), "stream never started:\n{raw}");
+        assert!(raw.contains(": ping"), "no keep-alive observed:\n{raw}");
+    }
+    assert!(io.keepalives.load(Ordering::Relaxed) >= STREAMS as u64);
+}

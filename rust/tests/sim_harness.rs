@@ -36,6 +36,8 @@ fn flood_plan() -> SimPlan {
         faults: false,
         max_faults: 0,
         sabotage: false,
+        replicas: 1,
+        affinity: true,
         ops: vec![
             submit(0, "shared context block alpha", 8),
             SimOp::Step { n: 4 },
@@ -60,6 +62,32 @@ fn seed_matrix_replays_byte_identically() {
         assert_eq!(a.trace_hash, b.trace_hash, "seed {seed}");
         assert_eq!(a.replies, b.replies, "seed {seed}");
         assert_eq!(a.clock_ns, b.clock_ns, "seed {seed}: virtual time is part of the trace");
+    }
+}
+
+/// Router mode: multi-replica fleet plans (replica kills and drains
+/// spliced in) replay byte-identically and keep every invariant, with
+/// and without model-level fault injection on top.
+#[test]
+fn fleet_seed_matrix_replays_byte_identically() {
+    for seed in 0..5u64 {
+        for faults in [false, true] {
+            let mut plan = SimPlan::generate_fleet(seed, 50, 3);
+            plan.faults = faults;
+            let a = run_plan(&plan);
+            let b = run_plan(&plan);
+            assert_eq!(
+                a.violation,
+                None,
+                "seed {seed} faults {faults} trace:\n{}",
+                a.trace.join("\n")
+            );
+            assert_eq!(a.trace, b.trace, "seed {seed} faults {faults}");
+            assert_eq!(a.replies, b.replies, "seed {seed} faults {faults}");
+            // every submitted request still reaches a terminal state,
+            // replica faults notwithstanding
+            assert_eq!(a.replies.len(), plan.submits(), "seed {seed} faults {faults}");
+        }
     }
 }
 
