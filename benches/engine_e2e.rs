@@ -47,6 +47,11 @@ const BENCH_PAGED_JSON_PATH: &str = "BENCH_paged.json";
 /// (`tapout.bench.router.v1`, schema below in `router_bench`).
 const BENCH_ROUTER_JSON_PATH: &str = "BENCH_router.json";
 
+/// Serialized vs pipelined step-loop comparison on the sim harness's
+/// two-lane virtual clock lands here (`tapout.bench.pipeline.v1`,
+/// schema below in `pipeline_bench`).
+const BENCH_PIPELINE_JSON_PATH: &str = "BENCH_pipeline.json";
+
 fn main() {
     // TAPOUT_BENCH_ONLY=cache runs just the prefix-cache comparison —
     // the CI gate asserting cached prefill < uncached at slots >= 4
@@ -69,6 +74,13 @@ fn main() {
         run_router_bench();
         return;
     }
+    // TAPOUT_BENCH_ONLY=pipeline runs just the serialized-vs-pipelined
+    // comparison — the CI gate asserting the two-stage pipeline strictly
+    // shortens virtual wall-clock at slots >= 4 with identical replies
+    if std::env::var("TAPOUT_BENCH_ONLY").as_deref() == Ok("pipeline") {
+        run_pipeline_bench();
+        return;
+    }
     sim_tables();
     let mut report = Json::obj();
     report.set("schema", "tapout.bench.serving.v1");
@@ -88,6 +100,7 @@ fn main() {
     run_cache_bench();
     run_paged_bench();
     run_router_bench();
+    run_pipeline_bench();
     pjrt_ladder();
 }
 
@@ -119,6 +132,181 @@ fn run_router_bench() {
         Ok(()) => println!("\n[wrote {BENCH_ROUTER_JSON_PATH}]"),
         Err(e) => eprintln!("\n[failed to write {BENCH_ROUTER_JSON_PATH}: {e}]"),
     }
+}
+
+fn run_pipeline_bench() {
+    let mut report = Json::obj();
+    report.set("schema", "tapout.bench.pipeline.v1");
+    pipeline_bench(&mut report);
+    match std::fs::write(BENCH_PIPELINE_JSON_PATH, report.render()) {
+        Ok(()) => println!("\n[wrote {BENCH_PIPELINE_JSON_PATH}]"),
+        Err(e) => eprintln!("\n[failed to write {BENCH_PIPELINE_JSON_PATH}: {e}]"),
+    }
+}
+
+/// Two-stage pipeline (docs/ARCHITECTURE.md §16) measured on the sim
+/// harness's two-lane *virtual* clock, so the numbers are exact and
+/// replayable instead of host-noise-bound: the same seeded
+/// continuous-mode plans at slots {4, 8}, serialized and pipelined.
+/// Replies are asserted byte-identical (the pipeline is lossless), and
+/// the CI gate asserts pipelined virtual wall-clock strictly beats
+/// serialized at both slot counts. Deadlines are stripped from the
+/// generated plans first: deadline races resolve against absolute
+/// virtual time, so compressing the critical path legitimately flips
+/// them — reply equality is only meaningful deadline-free. Reported per
+/// slot count: virtual wall-clock both ways, virtual tok/s, the overlap
+/// ratio (share of draft-lane work hidden under the verify shadow) and
+/// the discarded-pre-draft rate.
+///
+/// Also asserted here (the allocation-churn sweep): a warm pipelined
+/// continuous engine's `step.scratch_allocs` counter stays flat across
+/// a second identical burst — row buffers and token scratch are reused
+/// once the high-water mark is reached, never reallocated per
+/// iteration.
+fn pipeline_bench(report: &mut Json) {
+    use std::sync::atomic::Ordering;
+    use tapout::sim_harness::{run_plan, SimOp, SimPlan};
+    let fast = std::env::var("TAPOUT_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    // seeds shared with the runner's own equality test: known to adopt
+    // pre-drafts (full-acceptance rounds) within the matrix
+    let (seeds, steps): (&[u64], usize) = if fast {
+        (&[0, 5, 11, 23], 60)
+    } else {
+        (&[0, 5, 11, 23, 31, 47], 120)
+    };
+
+    group(&format!(
+        "pipeline: serialized vs pipelined continuous step loop, {} seeds x {steps} steps \
+         (virtual clock, sim harness)",
+        seeds.len()
+    ));
+    let mut rows: Vec<Json> = Vec::new();
+    for slots in [4usize, 8] {
+        let mut serial_ns = 0u64;
+        let mut piped_ns = 0u64;
+        let mut draft_busy = 0u64;
+        let mut overlap = 0u64;
+        let mut attempted = 0u64;
+        let mut adopted = 0u64;
+        let mut discarded = 0u64;
+        let mut tokens = 0u64;
+        for &seed in seeds {
+            let mut plan = SimPlan::generate(seed, steps);
+            plan.mode = "continuous".to_string();
+            plan.slots = slots;
+            for op in &mut plan.ops {
+                if let SimOp::Submit { deadline_ns, .. } = op {
+                    *deadline_ns = None;
+                }
+            }
+            let base = run_plan(&plan);
+            plan.pipeline = true;
+            let piped = run_plan(&plan);
+            assert_eq!(base.violation, None, "seed {seed} slots {slots} (serialized)");
+            assert_eq!(piped.violation, None, "seed {seed} slots {slots} (pipelined)");
+            assert_eq!(
+                piped.replies, base.replies,
+                "seed {seed} slots {slots}: pipelining moved a byte"
+            );
+            serial_ns += base.clock_ns;
+            piped_ns += piped.clock_ns;
+            draft_busy += piped.draft_busy_ns;
+            overlap += piped.overlap_ns;
+            attempted += piped.spec_attempted;
+            adopted += piped.spec_adopted;
+            discarded += piped.spec_discarded;
+            tokens += base.replies.values().map(|r| r.emitted.len() as u64).sum::<u64>();
+        }
+        assert!(attempted > 0, "slots {slots}: the pipelined runs must speculate");
+        // CI gate: at slots >= 4 the two-stage pipeline must strictly
+        // shorten the virtual critical path, with nonzero overlap
+        assert!(overlap > 0, "slots {slots}: adopted pre-drafts must hide draft time");
+        assert!(
+            piped_ns < serial_ns,
+            "slots {slots}: pipelined virtual wall-clock must strictly beat serialized \
+             ({piped_ns} vs {serial_ns} ns)"
+        );
+        let serial_tok_s = tokens as f64 / (serial_ns as f64 / 1e9);
+        let piped_tok_s = tokens as f64 / (piped_ns as f64 / 1e9);
+        let overlap_ratio = overlap as f64 / draft_busy.max(1) as f64;
+        let discard_rate = discarded as f64 / attempted.max(1) as f64;
+        println!(
+            "  slots={slots}: serialized {:.2} ms vs pipelined {:.2} ms virtual  \
+             ({:.2}x, {serial_tok_s:.0} -> {piped_tok_s:.0} tok/s)  overlap {overlap_ratio:.2}  \
+             discard rate {discard_rate:.2}",
+            serial_ns as f64 / 1e6,
+            piped_ns as f64 / 1e6,
+            serial_ns as f64 / piped_ns as f64,
+        );
+        let mut row = Json::obj();
+        row.set("slots", slots)
+            .set("seeds", seeds.len())
+            .set("serialized_clock_ms", serial_ns as f64 / 1e6)
+            .set("pipelined_clock_ms", piped_ns as f64 / 1e6)
+            .set("speedup", serial_ns as f64 / piped_ns as f64)
+            .set("serialized_tok_s", serial_tok_s)
+            .set("pipelined_tok_s", piped_tok_s)
+            .set("overlap_ns", overlap as usize)
+            .set("overlap_ratio", overlap_ratio)
+            .set("spec_attempted", attempted as usize)
+            .set("spec_adopted", adopted as usize)
+            .set("spec_discarded", discarded as usize)
+            .set("discard_rate", discard_rate);
+        rows.push(row);
+    }
+    report.set("steps", steps).set("slot_rows", rows);
+
+    // --- allocation-churn sweep: warm scratch stays flat ---------------
+    // static gamma keeps every round's row shapes identical across
+    // bursts, so the second burst's growth events are provably bounded
+    // by chunk-width timing (at most one high-water bump per slot), not
+    // proportional to iterations
+    let slots = 4usize;
+    let eng = Engine::start(EngineConfig {
+        method: "static-4".into(),
+        gamma_max: 8,
+        sched: Policy::Fcfs,
+        slots,
+        workers: 0,
+        backend: BackendKind::sim_default(),
+        mode: EngineMode::Continuous,
+        pipeline: true,
+        ..EngineConfig::default()
+    })
+    .unwrap();
+    let burst = || {
+        let rxs: Vec<_> =
+            (0..8).map(|i| eng.submit(&format!("scratch reuse probe {i}"), 32)).collect();
+        for rx in rxs {
+            let r = rx.recv().unwrap();
+            assert!(r.is_ok(), "{:?}", r.error);
+        }
+        std::thread::sleep(Duration::from_millis(50)); // let the last flush land
+        (
+            eng.stats.step.scratch_allocs.load(Ordering::Relaxed),
+            eng.stats.step.steps.load(Ordering::Relaxed),
+        )
+    };
+    let (cold_allocs, cold_steps) = burst();
+    let (warm_allocs, warm_steps) = burst();
+    let grew = warm_allocs - cold_allocs;
+    let iters = warm_steps - cold_steps;
+    println!(
+        "  scratch churn: cold burst {cold_allocs} growths, warm burst +{grew} over {iters} \
+         iterations (reuse must hold the high-water mark)"
+    );
+    assert!(cold_allocs > 0, "the cold burst must have grown the scratch from empty");
+    assert!(
+        grew <= slots as u64,
+        "warm-burst scratch growth must be flat, not per-iteration: +{grew} over {iters} iters"
+    );
+    eng.shutdown();
+    let mut churn = Json::obj();
+    churn
+        .set("cold_allocs", cold_allocs as usize)
+        .set("warm_growth", grew as usize)
+        .set("warm_iterations", iters as usize);
+    report.set("scratch_churn", churn);
 }
 
 /// Paged KV arena on the busy-slot workload slot-affinity cannot serve

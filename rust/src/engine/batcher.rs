@@ -34,6 +34,15 @@
 //! and the fill wait is sliced so a session that stops submitting after
 //! cancellation can only stall the window by one slice, not the whole
 //! `window_us`.
+//!
+//! Relation to the §16 pipeline: this submit/await shape is the
+//! *thread-level* analogue of the trait-level split the continuous
+//! stepper uses ([`LanguageModel::submit_batch`] →
+//! `PendingBatch::wait`). The batcher overlaps *sessions* across worker
+//! threads behind one blocking forward; the pipelined stepper overlaps
+//! *stages* (next-round pre-draft under the in-flight verify) on a
+//! single thread. Workers mode keeps using the batcher unchanged — the
+//! `--pipeline` flag is a no-op here.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};

@@ -321,6 +321,10 @@ pub struct StepStats {
     pub inflight_hist: Vec<AtomicU64>,
     /// largest in-flight count any iteration stepped
     pub peak_inflight: AtomicUsize,
+    /// hot-path scratch-buffer growths (row/index buffers reallocating
+    /// instead of being refilled in place) — the allocation-churn gauge
+    /// the bench asserts flat across warm identical bursts
+    pub scratch_allocs: AtomicU64,
 }
 
 impl Default for StepStats {
@@ -331,6 +335,7 @@ impl Default for StepStats {
             retired: AtomicU64::new(0),
             inflight_hist: (0..STEP_HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
             peak_inflight: AtomicUsize::new(0),
+            scratch_allocs: AtomicU64::new(0),
         }
     }
 }
@@ -387,7 +392,88 @@ impl StepStats {
             .set("peak_in_flight", self.peak_inflight.load(Ordering::Relaxed))
             .set("in_flight_hist", hist[..keep].iter().map(|&c| c as f64).collect::<Vec<f64>>())
             .set("draft_occupancy", draft.mean_occupancy())
-            .set("draft_pad_waste_frac", draft.pad_waste_frac());
+            .set("draft_pad_waste_frac", draft.pad_waste_frac())
+            .set("scratch_allocs", self.scratch_allocs.load(Ordering::Relaxed) as usize);
+        o
+    }
+}
+
+/// Lock-free gauges for the overlapped draft/verify pipeline
+/// (docs/ARCHITECTURE.md §16): while a verify forward is in flight the
+/// stepper speculatively pre-drafts the next micro-round, then either
+/// adopts the rows (full acceptance) or discards them. Updated once per
+/// pipelined verify round by the stepper thread; all zero while
+/// `--pipeline` is off or in Workers mode (the `engine.pipeline` object
+/// is only rendered once a pipelined round has run). Discarded work is
+/// *observability only* — it never touches bandit plays, rewards, the
+/// SJF ledger, or page refcounts.
+#[derive(Debug, Default)]
+pub struct PipelineStats {
+    /// pipelined verify rounds driven (submit → speculate → wait)
+    pub rounds: AtomicU64,
+    /// speculative pre-draft forwards issued under an in-flight verify
+    pub spec_forwards: AtomicU64,
+    /// pre-drafted rows adopted on commit (session accepted everything)
+    pub rows_adopted: AtomicU64,
+    /// pre-drafted rows discarded on commit (partial acceptance, verify
+    /// failure, or session retired before the rows were needed)
+    pub rows_discarded: AtomicU64,
+    /// next-round draft forwards that had to re-cover discarded rows
+    pub redraft_forwards: AtomicU64,
+    /// wall time the stepper spent blocked in `PendingBatch::wait`
+    /// *after* speculation returned (the un-hidden verify tail)
+    pub verify_stall_ns: AtomicU64,
+    /// wall time spent pre-drafting between submit and wait (the verify
+    /// latency actually hidden behind draft work)
+    pub overlap_ns: AtomicU64,
+}
+
+impl PipelineStats {
+    /// Record one pipelined verify round: whether a speculative forward
+    /// ran, how long it overlapped the verify, and how long the stepper
+    /// still stalled in `wait` afterwards.
+    pub fn note_round(&self, speculated: bool, overlap_ns: u64, stall_ns: u64) {
+        self.rounds.fetch_add(1, Ordering::Relaxed);
+        if speculated {
+            self.spec_forwards.fetch_add(1, Ordering::Relaxed);
+        }
+        self.overlap_ns.fetch_add(overlap_ns, Ordering::Relaxed);
+        self.verify_stall_ns.fetch_add(stall_ns, Ordering::Relaxed);
+    }
+
+    /// Fraction of the verify-shadow wall time actually covered by
+    /// speculative draft work: `overlap / (overlap + stall)`.
+    pub fn overlap_ratio(&self) -> f64 {
+        let overlap = self.overlap_ns.load(Ordering::Relaxed) as f64;
+        let stall = self.verify_stall_ns.load(Ordering::Relaxed) as f64;
+        if overlap + stall == 0.0 {
+            return 0.0;
+        }
+        overlap / (overlap + stall)
+    }
+
+    /// Fraction of speculative rows thrown away on commit.
+    pub fn discard_rate(&self) -> f64 {
+        let a = self.rows_adopted.load(Ordering::Relaxed);
+        let d = self.rows_discarded.load(Ordering::Relaxed);
+        if a + d == 0 {
+            return 0.0;
+        }
+        d as f64 / (a + d) as f64
+    }
+
+    /// JSON object for the `/metrics` `engine.pipeline` field.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("rounds", self.rounds.load(Ordering::Relaxed) as usize)
+            .set("spec_forwards", self.spec_forwards.load(Ordering::Relaxed) as usize)
+            .set("rows_adopted", self.rows_adopted.load(Ordering::Relaxed) as usize)
+            .set("rows_discarded", self.rows_discarded.load(Ordering::Relaxed) as usize)
+            .set("discard_rate", self.discard_rate())
+            .set("redraft_forwards", self.redraft_forwards.load(Ordering::Relaxed) as usize)
+            .set("verify_stall_ms", self.verify_stall_ns.load(Ordering::Relaxed) as f64 / 1e6)
+            .set("overlap_ms", self.overlap_ns.load(Ordering::Relaxed) as f64 / 1e6)
+            .set("overlap_ratio", self.overlap_ratio());
         o
     }
 }
@@ -717,6 +803,8 @@ pub struct EngineStats {
     pub draft: DraftStats,
     /// continuous step-loop gauges (Continuous mode only)
     pub step: StepStats,
+    /// overlapped draft/verify pipeline gauges (`--pipeline` only)
+    pub pipeline: PipelineStats,
     /// cancelled / expired / rejected lifecycle exits
     pub lifecycle: LifecycleStats,
 }
@@ -732,6 +820,7 @@ impl EngineStats {
             batch: BatchStats::default(),
             draft: DraftStats::default(),
             step: StepStats::default(),
+            pipeline: PipelineStats::default(),
             lifecycle: LifecycleStats::default(),
         }
     }
@@ -773,6 +862,9 @@ impl EngineStats {
         if self.step.steps.load(Ordering::Relaxed) > 0 {
             o.set("step", self.step.to_json(&self.draft));
         }
+        if self.pipeline.rounds.load(Ordering::Relaxed) > 0 {
+            o.set("pipeline", self.pipeline.to_json());
+        }
         let per_worker: Vec<Json> = self.workers.iter().map(|w| w.to_json()).collect();
         o.set("per_worker", per_worker);
         o
@@ -804,6 +896,16 @@ impl EngineStats {
                 self.step.peak_inflight.load(Ordering::Relaxed),
                 self.step.admissions_per_step(),
                 self.draft.mean_occupancy(),
+            ));
+        }
+        if self.pipeline.rounds.load(Ordering::Relaxed) > 0 {
+            s.push_str(&format!(
+                "pipeline: {} rounds  overlap {:.0}%  adopted {}  discarded {}  redrafts {}\n",
+                self.pipeline.rounds.load(Ordering::Relaxed),
+                self.pipeline.overlap_ratio() * 100.0,
+                self.pipeline.rows_adopted.load(Ordering::Relaxed),
+                self.pipeline.rows_discarded.load(Ordering::Relaxed),
+                self.pipeline.redraft_forwards.load(Ordering::Relaxed),
             ));
         }
         for (i, w) in self.workers.iter().enumerate() {
@@ -947,6 +1049,27 @@ mod tests {
         assert!(j.get("step").is_none(), "no iterations ran");
         assert!(j.get("draft").is_some());
         assert!((s.draft.mean_occupancy() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pipeline_stats_rates_and_json_gating() {
+        let s = EngineStats::new(1);
+        assert!(s.to_json(1_000).get("pipeline").is_none(), "absent until a round runs");
+        s.pipeline.note_round(true, 600, 400);
+        s.pipeline.note_round(false, 0, 1_000);
+        s.pipeline.rows_adopted.fetch_add(3, Ordering::Relaxed);
+        s.pipeline.rows_discarded.fetch_add(1, Ordering::Relaxed);
+        s.pipeline.redraft_forwards.fetch_add(1, Ordering::Relaxed);
+        assert!((s.pipeline.overlap_ratio() - 0.3).abs() < 1e-12);
+        assert!((s.pipeline.discard_rate() - 0.25).abs() < 1e-12);
+        let j = s.to_json(1_000);
+        let p = j.get("pipeline").expect("pipeline object once rounds ran");
+        assert_eq!(p.get("rounds").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(p.get("spec_forwards").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(p.get("rows_adopted").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(p.get("rows_discarded").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(p.get("redraft_forwards").unwrap().as_usize().unwrap(), 1);
+        assert!(s.report(1_000).contains("pipeline: 2 rounds"));
     }
 
     #[test]

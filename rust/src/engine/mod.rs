@@ -11,7 +11,8 @@
 //! execution modes, §13 for the paged KV allocator with
 //! copy-on-write prefix sharing ([`paging`]) and chunked prefill, and
 //! §15 for the nonblocking readiness-loop front end ([`reactor`]) and
-//! the prefix-affinity multi-replica router ([`router`])
+//! the prefix-affinity multi-replica router ([`router`]), and §16 for
+//! the overlapped draft/verify pipeline in the continuous stepper
 //! (DESIGN.md keeps the legacy section map).
 
 pub mod batcher;
@@ -32,7 +33,7 @@ pub use cache::PrefixIndex;
 pub use http::{HttpConfig, HttpServer};
 pub use metrics::{
     BatchStats, CacheStats, DraftStats, EngineMetrics, EngineStats, IoStats, LifecycleStats,
-    PageStats, StepStats, WorkerStats,
+    PageStats, PipelineStats, StepStats, WorkerStats,
 };
 pub use reactor::{EventSource, Gateway, GenerateStart, Reactor, ReactorConfig, SourceEvent};
 pub use router::{HashRing, ReplicaView, Router, RouterConfig, RouterCore};

@@ -203,6 +203,11 @@ pub struct RouterStats {
     pub shed_reroutes: AtomicU64,
     /// undelivered requests retried on the next replica
     pub failovers: AtomicU64,
+    /// undelivered retries whose body was already *partially* written
+    /// when the owning replica died — the chunked-delivery path proved
+    /// the body incomplete (the replica cannot have parsed a short
+    /// `Content-Length` body), so the re-dispatch is known safe
+    pub partial_redispatches: AtomicU64,
     /// upstream deaths after delivery (502 / synthesized failed stream)
     pub upstream_errors: AtomicU64,
 }
@@ -215,6 +220,10 @@ impl RouterStats {
             .set("affinity_hits", self.affinity_hits.load(Ordering::Relaxed) as usize)
             .set("shed_reroutes", self.shed_reroutes.load(Ordering::Relaxed) as usize)
             .set("failovers", self.failovers.load(Ordering::Relaxed) as usize)
+            .set(
+                "partial_redispatches",
+                self.partial_redispatches.load(Ordering::Relaxed) as usize,
+            )
             .set("upstream_errors", self.upstream_errors.load(Ordering::Relaxed) as usize);
         o
     }
@@ -627,6 +636,28 @@ impl EventSource for ChannelSource {
     }
 }
 
+/// Re-dispatch budget for *undelivered* requests: a replica death before
+/// the body fully flushes may be retried on at most this many further
+/// replicas beyond the routing decision, bounding worst-case client
+/// latency (and duplicate connection attempts) under a cascade of dead
+/// replicas. Delivered work is never retried, whatever the budget.
+const REDISPATCH_BUDGET: usize = 2;
+
+/// Upstream body chunk size: bodies larger than one write stream out in
+/// slices, so a replica death mid-body is observed *mid-body* — the
+/// request stays provably undelivered (a partial `Content-Length` body
+/// never reaches the replica's parser) and therefore retryable.
+const BODY_CHUNK: usize = 8 * 1024;
+
+/// Outcome of one upstream delivery attempt.
+enum Delivery {
+    /// connected and the full body flushed — never retried from here
+    Sent(TcpStream),
+    /// the replica died before the body completed; `wrote` body bytes
+    /// had gone out (0 = the connection or header write already failed)
+    Undelivered { wrote: usize },
+}
+
 fn proxy_request(
     states: &[ReplicaState],
     order: &[usize],
@@ -635,7 +666,7 @@ fn proxy_request(
     cancel: &AtomicBool,
     stats: &RouterStats,
 ) {
-    for (attempt, &idx) in order.iter().enumerate() {
+    for (attempt, &idx) in order.iter().take(1 + REDISPATCH_BUDGET).enumerate() {
         if cancel.load(Ordering::SeqCst) {
             return;
         }
@@ -643,32 +674,59 @@ fn proxy_request(
         if attempt > 0 {
             stats.failovers.fetch_add(1, Ordering::Relaxed);
         }
-        let Some(conn) = open_upstream(&st.addr, body) else {
-            // the request never reached this replica: dead, try the next
-            st.alive.store(false, Ordering::SeqCst);
-            continue;
-        };
-        // delivered: from here every failure is answered, never retried
-        // (the decode may already be running on the replica)
-        relay_upstream(conn, st, tx, cancel, stats);
-        return;
+        match open_upstream(&st.addr, body) {
+            // delivered: from here every failure is answered, never
+            // retried (the decode may already be running on the replica)
+            Delivery::Sent(conn) => {
+                relay_upstream(conn, st, tx, cancel, stats);
+                return;
+            }
+            // the request never reached this replica as a complete body:
+            // mark it dead and re-dispatch to the next-best pick
+            Delivery::Undelivered { wrote } => {
+                if wrote > 0 {
+                    stats.partial_redispatches.fetch_add(1, Ordering::Relaxed);
+                }
+                st.alive.store(false, Ordering::SeqCst);
+            }
+        }
     }
     let _ = tx.send(SourceEvent::Reply { code: 503, body: http::err_body("no healthy replica") });
 }
 
-/// Connect and deliver the generate request; `None` before full
-/// delivery means the replica never saw it (safe to retry elsewhere).
-fn open_upstream(addr: &str, body: &str) -> Option<TcpStream> {
-    let sa: std::net::SocketAddr = addr.parse().ok()?;
-    let mut s = TcpStream::connect_timeout(&sa, Duration::from_millis(500)).ok()?;
+/// Connect and deliver the generate request, streaming the body in
+/// [`BODY_CHUNK`] slices. [`Delivery::Undelivered`] means the replica
+/// never saw a complete request (safe to retry elsewhere); once the last
+/// body byte is handed to the socket the attempt counts as delivered —
+/// `TcpStream::flush` is a no-op, so there is no later failure point
+/// that could leave delivery ambiguous.
+fn open_upstream(addr: &str, body: &str) -> Delivery {
+    let fresh = Delivery::Undelivered { wrote: 0 };
+    let Ok(sa) = addr.parse::<std::net::SocketAddr>() else {
+        return fresh;
+    };
+    let Ok(mut s) = TcpStream::connect_timeout(&sa, Duration::from_millis(500)) else {
+        return fresh;
+    };
     let _ = s.set_nodelay(true);
-    let req = format!(
-        "POST /generate HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+    let head = format!(
+        "POST /generate HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
         body.len()
     );
-    s.write_all(req.as_bytes()).ok()?;
-    s.flush().ok()?;
-    Some(s)
+    if s.write_all(head.as_bytes()).is_err() {
+        return fresh;
+    }
+    let bytes = body.as_bytes();
+    let mut wrote = 0usize;
+    while wrote < bytes.len() {
+        let end = (wrote + BODY_CHUNK).min(bytes.len());
+        if s.write_all(&bytes[wrote..end]).is_err() {
+            return Delivery::Undelivered { wrote };
+        }
+        wrote = end;
+    }
+    let _ = s.flush();
+    Delivery::Sent(s)
 }
 
 /// Relay one upstream response into the reply channel: plain replies

@@ -187,6 +187,14 @@ pub struct EngineConfig {
     /// matching slot to free. Lossless, on by default; disabling it
     /// restores PR-5 slot-affinity-only reuse (the bench baseline).
     pub page_sharing: bool,
+    /// overlapped draft/verify pipeline in the continuous stepper
+    /// (docs/ARCHITECTURE.md §16, CLI `serve --pipeline`): each verify
+    /// chunk is submitted asynchronously and the next round's first
+    /// micro-round is speculatively pre-drafted under it, adopted on
+    /// full acceptance. Lossless — outputs, bandit plays, and page
+    /// refcounts are byte-identical pipeline on or off. No-op in
+    /// Workers mode. Off by default.
+    pub pipeline: bool,
     /// fault injection at the `LanguageModel` boundary (sim backend only;
     /// docs/TESTING.md): when active, every slot model plus the batcher's
     /// verifier and the stepper's drafter are wrapped in
@@ -214,6 +222,7 @@ impl Default for EngineConfig {
             page_size: super::slots::DEFAULT_PAGE_SIZE,
             kv_pages: 0,
             page_sharing: true,
+            pipeline: false,
             faults: crate::models::FaultPlan::default(),
         }
     }
@@ -477,13 +486,14 @@ impl Engine {
             let m = metrics.clone();
             let st = stats.clone();
             let verify_cap = config.verify_batch.max_batch;
+            let pipeline = config.pipeline;
             let verifier = verifier.expect("continuous mode keeps its verifier");
             workers.push(
                 std::thread::Builder::new()
                     .name("tapout-stepper".into())
                     .spawn(move || {
                         super::stepper::step_loop(
-                            sh, drafter, verifier, sessions, verify_cap, m, st,
+                            sh, drafter, verifier, sessions, verify_cap, pipeline, m, st,
                         )
                     })?,
             );
@@ -590,6 +600,13 @@ impl Engine {
     /// source — docs/ARCHITECTURE.md §13).
     pub fn page_stats(&self) -> &super::metrics::PageStats {
         self.shared.pool.page_stats()
+    }
+
+    /// Passthrough to [`super::SlotPool::page_conservation_error`] so
+    /// integration suites can assert refcount / free-list balance on a
+    /// live engine (the sim harness's oracle polls the same check).
+    pub fn page_conservation_error(&self) -> Option<String> {
+        self.shared.pool.page_conservation_error()
     }
 
     // --- shared-bandit readouts (the online-learning observability) ----

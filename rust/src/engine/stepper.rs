@@ -43,6 +43,22 @@
 //! receivers are observed at iteration boundaries — the same round
 //! granularity the Workers engine polls at — and a retiring session
 //! frees its KV slot within one iteration.
+//!
+//! **Pipelining (docs/ARCHITECTURE.md §16).** With `--pipeline`, each
+//! verify chunk is *submitted* ([`LanguageModel::submit_batch`]) and,
+//! while the forward is in flight, the stepper speculatively pre-drafts
+//! every chunk session's next catch-up position under the
+//! full-acceptance assumption ([`LanguageModel::speculate_batch`], one
+//! row per session: the last proposal fed at the draft cursor). On
+//! commit the pre-draft is *adopted* — the draft cursor advances to
+//! `c+k`, so the next round's catch-up feeds one fewer token — exactly
+//! when verification accepted every proposal (`m == k`); otherwise it is
+//! *discarded* and the normal cursor rollback makes the next catch-up
+//! re-draft the position. The speculative rows' values are never read
+//! (the serialized loop ignores that row too: only the catch-up's final
+//! row seeds a proposal), so outputs are byte-identical pipeline on or
+//! off, and discarded work never touches bandit plays, rewards, the SJF
+//! ledger, or page refcounts — it is visible only in `engine.pipeline`.
 
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
@@ -147,18 +163,22 @@ fn exit_of(s: &ActiveSession) -> Option<SessionExit> {
 /// The continuous-batching step loop: runs on one dedicated thread
 /// (`tapout-stepper`) for the life of the engine. `controllers` is
 /// indexed by slot id; `verify_cap` caps one verify `block_batch` (0 =
-/// per-session verification, the batching-off oracle).
+/// per-session verification, the batching-off oracle); `pipeline`
+/// enables the overlapped draft/verify path (docs/ARCHITECTURE.md §16).
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn step_loop(
     shared: Arc<EngineShared>,
     mut drafter: Box<dyn LanguageModel>,
     mut verifier: Box<dyn LanguageModel>,
     mut controllers: Vec<SessionController>,
     verify_cap: usize,
+    pipeline: bool,
     metrics: Arc<Mutex<EngineMetrics>>,
     stats: Arc<EngineStats>,
 ) {
     let mut rng = Rng::new(0xE46C0DE ^ 0x57E9);
     let mut sessions: Vec<ActiveSession> = Vec::new();
+    let mut scratch = RoundScratch::default();
     let max_seq = drafter.max_seq().min(verifier.max_seq());
 
     loop {
@@ -188,13 +208,19 @@ pub(crate) fn step_loop(
             drafter.as_mut(),
             verifier.as_mut(),
             verify_cap,
+            pipeline,
             &mut rng,
             &shared,
             &stats,
+            &mut scratch,
         );
         stats.workers[0]
             .busy_ns
             .fetch_add(t_busy.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        if scratch.allocs > 0 {
+            stats.step.scratch_allocs.fetch_add(scratch.allocs, Ordering::Relaxed);
+            scratch.allocs = 0;
+        }
         if stepped > 0 || admitted > 0 {
             stats.step.note_step(stepped, admitted);
         }
@@ -464,9 +490,84 @@ fn note_draft(stats: &EngineStats, after: ModelCost, before: ModelCost, n_sessio
     );
 }
 
+/// Reusable hot-path buffers for [`run_round`], living across iterations
+/// in [`step_loop`] so a steady-state engine refills rather than
+/// reallocates: `BatchItem` rows keep their token `Vec`s and `category`
+/// `String`s, index vectors keep their capacity. `allocs` counts actual
+/// buffer growths (the churn gauge flushed into
+/// `StepStats::scratch_allocs`, asserted flat across warm identical
+/// bursts by the bench).
+#[derive(Default)]
+struct RoundScratch {
+    /// batch rows for catch-up / micro-round / prefill / verify feeds
+    items: Vec<BatchItem>,
+    /// batch rows for the speculative pre-draft (built while `items`
+    /// still holds the submitted verify chunk)
+    spec_items: Vec<BatchItem>,
+    /// sessions in this round (index into `sessions`)
+    live: Vec<usize>,
+    /// sessions still drafting this micro-round
+    drafting: Vec<usize>,
+    /// next micro-round's `drafting` (double buffer)
+    still: Vec<usize>,
+    /// non-failed round participants headed into verify
+    verifying: Vec<usize>,
+    /// sessions streaming a chunked-prefill feed this iteration
+    chunking: Vec<usize>,
+    /// per-session flag: prefilled this iteration, skips the round
+    in_prefill: Vec<bool>,
+    /// buffer growths since the last flush into `StepStats`
+    allocs: u64,
+}
+
+/// Make `buf[..n]` valid reusable rows, growing (and counting the
+/// growth) only when this iteration needs more rows than any before.
+fn ensure_items(buf: &mut Vec<BatchItem>, n: usize, allocs: &mut u64) {
+    if n > buf.len() {
+        *allocs += 1;
+        buf.resize_with(n, || BatchItem {
+            seq: 0,
+            seed: 0,
+            category: String::new(),
+            tokens: Vec::new(),
+            start: 0,
+        });
+    }
+}
+
+/// Refill one reusable row in place: scalar fields overwritten, the
+/// token buffer cleared and refilled from `blocks` (growths counted),
+/// the category `String` reused byte-for-byte when unchanged.
+fn fill_item(
+    item: &mut BatchItem,
+    s: &ActiveSession,
+    start: usize,
+    blocks: &[&[u32]],
+    allocs: &mut u64,
+) {
+    item.seq = s.slot.id;
+    item.seed = s.seed;
+    item.start = start;
+    if item.category != s.req.category {
+        item.category.clear();
+        item.category.push_str(&s.req.category);
+    }
+    let cap = item.tokens.capacity();
+    item.tokens.clear();
+    for b in blocks {
+        item.tokens.extend_from_slice(b);
+    }
+    if item.tokens.capacity() != cap {
+        *allocs += 1;
+    }
+}
+
 /// Run one speculation round for every live session: batched drafting
-/// micro-rounds, then window-free batched verification, then per-session
-/// commit/stream/reward. Returns how many sessions stepped.
+/// micro-rounds, then window-free batched verification — pipelined when
+/// enabled: each chunk's verify is *submitted*, the next round's
+/// micro-round 0 is speculatively pre-drafted under it, then the commit
+/// adopts or discards the pre-draft (docs/ARCHITECTURE.md §16) — then
+/// per-session commit/stream/reward. Returns how many sessions stepped.
 #[allow(clippy::too_many_arguments)]
 fn run_round(
     sessions: &mut [ActiveSession],
@@ -474,17 +575,30 @@ fn run_round(
     drafter: &mut dyn LanguageModel,
     verifier: &mut dyn LanguageModel,
     verify_cap: usize,
+    pipeline: bool,
     rng: &mut Rng,
     shared: &EngineShared,
     stats: &EngineStats,
+    scratch: &mut RoundScratch,
 ) -> usize {
     // --- chunked prefill (docs/ARCHITECTURE.md §13): stream one
     // page-aligned prompt chunk per iteration for sessions still far
     // from caught up; they skip this iteration's decode round ----------
-    let in_prefill = chunked_prefill(sessions, drafter, verifier, verify_cap, shared, stats);
+    chunked_prefill(sessions, drafter, verifier, verify_cap, shared, stats, scratch);
+    let RoundScratch {
+        items,
+        spec_items,
+        live,
+        drafting,
+        still,
+        verifying,
+        in_prefill,
+        allocs,
+        ..
+    } = scratch;
 
     // --- round begin: termination check + bandit select per session ----
-    let mut live: Vec<usize> = Vec::new();
+    live.clear();
     for (i, s) in sessions.iter_mut().enumerate() {
         if in_prefill[i] {
             continue; // still streaming its prompt — no round, no bandit
@@ -524,26 +638,19 @@ fn run_round(
     }
 
     // --- draft micro-round 0: every session's committed catch-up (the
-    // ragged one — prefills mix with 1–2 token decode catch-ups).
-    // BatchItems are rebuilt per micro-round (tokens/start change every
-    // position); the small per-item category clone is noise next to the
-    // model forward each batch pays -----------------------------------
+    // ragged one — prefills mix with 1–2 token decode catch-ups). Rows
+    // are refilled in place from the iteration-persistent scratch, so
+    // the steady-state hot path allocates only when a batch outgrows
+    // every prior one (`StepStats::scratch_allocs`) --------------------
     let t0 = Instant::now();
-    let items: Vec<BatchItem> = live
-        .iter()
-        .map(|&i| {
-            let s = &sessions[i];
-            BatchItem {
-                seq: s.slot.id,
-                seed: s.seed,
-                category: s.req.category.clone(),
-                tokens: s.committed[s.draft_cur..].to_vec(),
-                start: s.draft_cur,
-            }
-        })
-        .collect();
+    let n0 = live.len();
+    ensure_items(items, n0, allocs);
+    for (item, &i) in items.iter_mut().zip(live.iter()) {
+        let s = &sessions[i];
+        fill_item(item, s, s.draft_cur, &[&s.committed[s.draft_cur..]], allocs);
+    }
     let before = drafter.cost();
-    let rows = match drafter.draft_batch(&items) {
+    let rows = match drafter.draft_batch(&items[..n0]) {
         Ok(r) => r,
         Err(e) => {
             // every live session's play was opened by session_start above
@@ -552,17 +659,17 @@ fn run_round(
             // shared drafter so a wedged device (sticky-broken under
             // fault injection) costs one iteration, not the engine.
             drafter.reset();
-            for &i in &live {
+            for &i in live.iter() {
                 controllers[sessions[i].slot.id].on_abort();
             }
-            fail_all(sessions, &live, &format!("batched draft failed: {e:#}"));
+            fail_all(sessions, live, &format!("batched draft failed: {e:#}"));
             return live.len();
         }
     };
-    note_draft(stats, drafter.cost(), before, items.len());
+    note_draft(stats, drafter.cost(), before, n0);
     let dt = t0.elapsed().as_nanos() as u64;
-    let mut drafting: Vec<usize> = Vec::new();
-    for (r, &i) in rows.iter().zip(&live) {
+    drafting.clear();
+    for (r, &i) in rows.iter().zip(live.iter()) {
         let s = &mut sessions[i];
         let sid = s.slot.id;
         s.draft_ns += dt;
@@ -582,38 +689,32 @@ fn run_round(
     // the batch shrinks as per-arm stop rules fire (γ raggedness) ------
     while !drafting.is_empty() {
         let t = Instant::now();
-        let items: Vec<BatchItem> = drafting
-            .iter()
-            .map(|&i| {
-                let s = &sessions[i];
-                BatchItem {
-                    seq: s.slot.id,
-                    seed: s.seed,
-                    category: s.req.category.clone(),
-                    tokens: vec![s.last_tok],
-                    start: s.round_c + s.proposals.len() - 1,
-                }
-            })
-            .collect();
+        let n = drafting.len();
+        ensure_items(items, n, allocs);
+        for (item, &i) in items.iter_mut().zip(drafting.iter()) {
+            let s = &sessions[i];
+            let start = s.round_c + s.proposals.len() - 1;
+            fill_item(item, s, start, &[std::slice::from_ref(&s.last_tok)], allocs);
+        }
         let before = drafter.cost();
-        let rows = match drafter.draft_batch(&items) {
+        let rows = match drafter.draft_batch(&items[..n]) {
             Ok(r) => r,
             Err(e) => {
                 // only this micro-round's participants fail; sessions
                 // that already stopped drafting still verify. Reseat the
                 // shared drafter (see the catch-up error arm above).
                 drafter.reset();
-                for &i in &drafting {
+                for &i in drafting.iter() {
                     controllers[sessions[i].slot.id].on_abort();
                 }
-                fail_all(sessions, &drafting, &format!("batched draft failed: {e:#}"));
+                fail_all(sessions, drafting, &format!("batched draft failed: {e:#}"));
                 break;
             }
         };
-        note_draft(stats, drafter.cost(), before, items.len());
+        note_draft(stats, drafter.cost(), before, n);
         let dt = t.elapsed().as_nanos() as u64;
-        let mut still: Vec<usize> = Vec::new();
-        for (r, &i) in rows.iter().zip(&drafting) {
+        still.clear();
+        for (r, &i) in rows.iter().zip(drafting.iter()) {
             let s = &mut sessions[i];
             let sid = s.slot.id;
             s.draft_ns += dt;
@@ -627,11 +728,11 @@ fn run_round(
                 still.push(i);
             }
         }
-        drafting = still;
+        std::mem::swap(drafting, still);
     }
     // the draft cursor after k proposals: catch-up left it at c, then
     // k−1 single-token feeds — mirror of the sequential session
-    for &i in &live {
+    for &i in live.iter() {
         let s = &mut sessions[i];
         if s.failed.is_none() {
             s.draft_cur = s.round_c + s.proposals.len() - 1;
@@ -640,42 +741,73 @@ fn run_round(
 
     // --- verify: the step loop is the window — every live session's
     // target block coalesces into one block_batch (capped by the
-    // configured max_batch; 0 = per-session, the batching-off oracle) --
-    let verifying: Vec<usize> =
-        live.iter().copied().filter(|&i| sessions[i].failed.is_none()).collect();
+    // configured max_batch; 0 = per-session, the batching-off oracle).
+    // Pipelined: the chunk's verify is submitted, the next round's
+    // micro-round 0 is speculatively pre-drafted while it is in flight,
+    // and the commit adopts or discards the pre-draft per session ------
+    verifying.clear();
+    verifying.extend(live.iter().copied().filter(|&i| sessions[i].failed.is_none()));
     let cap = if verify_cap == 0 { 1 } else { verify_cap };
     for chunk in verifying.chunks(cap) {
         let t = Instant::now();
-        let items: Vec<BatchItem> = chunk
-            .iter()
-            .map(|&i| {
-                let s = &sessions[i];
-                let mut tokens = s.committed[s.target_cur..].to_vec();
-                tokens.extend_from_slice(&s.proposals);
-                BatchItem {
-                    seq: s.slot.id,
-                    seed: s.seed,
-                    category: s.req.category.clone(),
-                    tokens,
-                    start: s.target_cur,
-                }
-            })
-            .collect();
+        let n = chunk.len();
+        ensure_items(items, n, allocs);
+        for (item, &i) in items.iter_mut().zip(chunk.iter()) {
+            let s = &sessions[i];
+            let blocks = [&s.committed[s.target_cur..], s.proposals.as_slice()];
+            fill_item(item, s, s.target_cur, &blocks, allocs);
+        }
         let before = verifier.cost();
-        let vrows = match verifier.block_batch(&items) {
+        let pending = verifier.submit_batch(&items[..n]);
+        // --- speculative pre-draft under the verify shadow (§16): one
+        // row per chunk session — the last proposal fed at the draft
+        // cursor, i.e. next round's catch-up under full acceptance. The
+        // forward is bracketed with its own cost reads and reported to
+        // PipelineStats only: speculative work never reaches note_draft,
+        // the bandit, or the SJF ledger, whether adopted or discarded --
+        let mut spec_ok = false;
+        let mut overlap_ns = 0u64;
+        if pipeline {
+            let t_spec = Instant::now();
+            ensure_items(spec_items, n, allocs);
+            for (item, &i) in spec_items.iter_mut().zip(chunk.iter()) {
+                let s = &sessions[i];
+                fill_item(item, s, s.draft_cur, &[std::slice::from_ref(&s.last_tok)], allocs);
+            }
+            // an Err here is absorbed: the round proceeds exactly as if
+            // speculation never ran (no drafter reset — speculate_batch
+            // draws no fault randomness, so there is nothing to heal)
+            spec_ok = drafter.speculate_batch(&spec_items[..n]).is_ok();
+            overlap_ns = t_spec.elapsed().as_nanos() as u64;
+        }
+        let t_wait = Instant::now();
+        let vrows = match pending.wait() {
             Ok(r) => r,
             Err(e) => {
                 // these sessions' plays never see on_verify — conserve.
                 // Reseat the shared verifier so a wedged device fails one
-                // chunk, not every future iteration.
+                // chunk, not every future iteration. The pre-draft dies
+                // with the verify: its rows are discarded, and the aborts
+                // above settle each session's play exactly once.
                 verifier.reset();
                 for &i in chunk {
                     controllers[sessions[i].slot.id].on_abort();
+                }
+                if pipeline {
+                    let stall = t_wait.elapsed().as_nanos() as u64;
+                    stats.pipeline.note_round(spec_ok, overlap_ns, stall);
+                    if spec_ok {
+                        stats.pipeline.rows_discarded.fetch_add(n as u64, Ordering::Relaxed);
+                    }
                 }
                 fail_all(sessions, chunk, &format!("batched verification failed: {e:#}"));
                 continue;
             }
         };
+        if pipeline {
+            let stall = t_wait.elapsed().as_nanos() as u64;
+            stats.pipeline.note_round(spec_ok, overlap_ns, stall);
+        }
         let after = verifier.cost();
         stats.batch.note(
             chunk.len(),
@@ -726,18 +858,42 @@ fn run_round(
                 // post-EOS / post-budget rounds are never run
                 s.done = true;
             }
+            // --- adopt or discard the speculative pre-draft (§16) -------
+            // Adopted exactly when this session accepted every proposal:
+            // the speculative row fed `proposals[k-1]` at `c+k-1`, which
+            // is committed content iff m == k, so the drafter's resident
+            // world validly extends to c+k and the next catch-up feeds
+            // one fewer token (just the bonus). The row's VALUE is never
+            // read — the serialized loop discards that row too — so
+            // outputs are byte-identical either way. On a partial accept
+            // the cursor rollback above already re-drafts the position.
+            if pipeline && spec_ok {
+                if m == k {
+                    s.draft_cur = s.round_c + k;
+                    stats.pipeline.rows_adopted.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    stats.pipeline.rows_discarded.fetch_add(1, Ordering::Relaxed);
+                    if !s.done && !s.req.cancel.is_cancelled() {
+                        // the next round's catch-up re-covers the position
+                        stats.pipeline.redraft_forwards.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
         }
     }
     live.len() + prefilled
 }
 
 /// Advance every far-from-caught-up session by one page-aligned prompt
-/// chunk through the batched drafter and verifier, returning a
-/// per-session flag for who prefilled (those sessions skip this
-/// iteration's round). Both mirrored cursors advance together; the
-/// remainder left for the real round's catch-up always keeps the final
-/// committed token (whose signal row seeds the first proposal), so the
-/// round code is untouched and outputs stay byte-identical.
+/// chunk through the batched drafter and verifier, filling
+/// `scratch.in_prefill` with a per-session flag for who prefilled (those
+/// sessions skip this iteration's round). Both mirrored cursors advance
+/// together; the remainder left for the real round's catch-up always
+/// keeps the final committed token (whose signal row seeds the first
+/// proposal), so the round code is untouched and outputs stay
+/// byte-identical. After an *adopted* speculative pre-draft the cursors
+/// are equal too (`draft_cur == target_cur == c+k`), so the
+/// cursor-agreement invariant below holds with pipelining on or off.
 fn chunked_prefill(
     sessions: &mut [ActiveSession],
     drafter: &mut dyn LanguageModel,
@@ -745,30 +901,36 @@ fn chunked_prefill(
     verify_cap: usize,
     shared: &EngineShared,
     stats: &EngineStats,
-) -> Vec<bool> {
-    let mut in_prefill = vec![false; sessions.len()];
+    scratch: &mut RoundScratch,
+) {
+    let RoundScratch { items, chunking, in_prefill, allocs, .. } = scratch;
+    in_prefill.clear();
+    in_prefill.resize(sessions.len(), false);
     let ps = shared.pool.page_size().max(1);
     let chunk_tokens = PREFILL_CHUNK_PAGES * ps;
     // end of one chunk from `cur`: the next page boundary
     // PREFILL_CHUNK_PAGES pages out (callers clamp to len − 1 so the
     // final committed token is never consumed by a prefill chunk)
     let chunk_end = |cur: usize| ((cur / ps) + PREFILL_CHUNK_PAGES) * ps;
-    let chunking: Vec<usize> = sessions
-        .iter()
-        .enumerate()
-        .filter(|(_, s)| {
-            s.failed.is_none()
-                && !s.done
-                && !s.req.cancel.is_cancelled()
-                && !s.req.deadline_expired()
-                && s.committed.len().saturating_sub(1).saturating_sub(s.draft_cur) > chunk_tokens
-        })
-        .map(|(i, _)| i)
-        .collect();
+    chunking.clear();
+    chunking.extend(
+        sessions
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| {
+                s.failed.is_none()
+                    && !s.done
+                    && !s.req.cancel.is_cancelled()
+                    && !s.req.deadline_expired()
+                    && s.committed.len().saturating_sub(1).saturating_sub(s.draft_cur)
+                        > chunk_tokens
+            })
+            .map(|(i, _)| i),
+    );
     if chunking.is_empty() {
-        return in_prefill;
+        return;
     }
-    for &i in &chunking {
+    for &i in chunking.iter() {
         in_prefill[i] = true;
         debug_assert_eq!(
             sessions[i].draft_cur, sessions[i].target_cur,
@@ -779,54 +941,40 @@ fn chunked_prefill(
     // one batched draft feed over every chunking session (rows discarded
     // — this only advances the drafter's resident KV)
     let t0 = Instant::now();
-    let items: Vec<BatchItem> = chunking
-        .iter()
-        .map(|&i| {
-            let s = &sessions[i];
-            let end = chunk_end(s.draft_cur).min(s.committed.len() - 1);
-            BatchItem {
-                seq: s.slot.id,
-                seed: s.seed,
-                category: s.req.category.clone(),
-                tokens: s.committed[s.draft_cur..end].to_vec(),
-                start: s.draft_cur,
-            }
-        })
-        .collect();
+    let n0 = chunking.len();
+    ensure_items(items, n0, allocs);
+    for (item, &i) in items.iter_mut().zip(chunking.iter()) {
+        let s = &sessions[i];
+        let end = chunk_end(s.draft_cur).min(s.committed.len() - 1);
+        fill_item(item, s, s.draft_cur, &[&s.committed[s.draft_cur..end]], allocs);
+    }
     let before = drafter.cost();
-    match drafter.draft_batch(&items) {
+    match drafter.draft_batch(&items[..n0]) {
         Ok(_) => {}
         Err(e) => {
             // no bandit play is open during prefill (rounds start later),
             // so only reseat the shared drafter and fail the chunkers
             drafter.reset();
-            fail_all(sessions, &chunking, &format!("chunked prefill (draft) failed: {e:#}"));
-            return in_prefill;
+            fail_all(sessions, chunking, &format!("chunked prefill (draft) failed: {e:#}"));
+            return;
         }
     }
-    note_draft(stats, drafter.cost(), before, items.len());
+    note_draft(stats, drafter.cost(), before, n0);
     let dt = t0.elapsed().as_nanos() as u64;
 
     // the matching verifier feed, in verify-cap slices like a round
     let cap = if verify_cap == 0 { 1 } else { verify_cap };
     for chunk in chunking.chunks(cap) {
         let t = Instant::now();
-        let items: Vec<BatchItem> = chunk
-            .iter()
-            .map(|&i| {
-                let s = &sessions[i];
-                let end = chunk_end(s.target_cur).min(s.committed.len() - 1);
-                BatchItem {
-                    seq: s.slot.id,
-                    seed: s.seed,
-                    category: s.req.category.clone(),
-                    tokens: s.committed[s.target_cur..end].to_vec(),
-                    start: s.target_cur,
-                }
-            })
-            .collect();
+        let n = chunk.len();
+        ensure_items(items, n, allocs);
+        for (item, &i) in items.iter_mut().zip(chunk.iter()) {
+            let s = &sessions[i];
+            let end = chunk_end(s.target_cur).min(s.committed.len() - 1);
+            fill_item(item, s, s.target_cur, &[&s.committed[s.target_cur..end]], allocs);
+        }
         let before = verifier.cost();
-        match verifier.block_batch(&items) {
+        match verifier.block_batch(&items[..n]) {
             Ok(_) => {}
             Err(e) => {
                 verifier.reset();
@@ -854,5 +1002,4 @@ fn chunked_prefill(
             s.verify_ns += vt;
         }
     }
-    in_prefill
 }

@@ -7,6 +7,7 @@
 //!             [--workers N] [--slots N] [--backend pjrt|sim] [--continuous]
 //!             [--max-queue N] [--deadline-ms MS] [--prefix-cache]
 //!             [--page-size TOK] [--kv-pages N] [--no-page-sharing]
+//!             [--pipeline] (continuous mode: overlap draft and verify)
 //!             [--io-threads N] (0 = legacy blocking front end)
 //!             [--header-timeout-ms MS] [--sse-keepalive-ms MS]
 //!   route     --port 8080 --replicas host:p1,host:p2,... [--no-affinity]
@@ -18,7 +19,7 @@
 //!   exp       --id <table2|table3|table4|table5|fig2|fig3|fig4|fig5|fig6|abl-arms|tune|all>
 //!             [--backend pjrt|sim] [--scale F] [--gamma N]
 //!   simulate  --seed N --steps M [--faults] [--sabotage] [--mode workers|continuous]
-//!             [--replicas N] [--no-affinity] [--trace] [--replay plan.json]
+//!             [--pipeline] [--replicas N] [--no-affinity] [--trace] [--replay plan.json]
 //!             [--out shrunk.json]
 //!             deterministic engine simulation against the shadow-state oracle
 //!             (N>1 adds the router tier with kill/drain fault ops); on
@@ -165,6 +166,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         page_size: args.usize("page-size", tapout::engine::DEFAULT_PAGE_SIZE),
         kv_pages: args.usize("kv-pages", 0),
         page_sharing: !args.bool("no-page-sharing"),
+        // --pipeline overlaps each verify with the next round's first
+        // speculative draft feed (docs/ARCHITECTURE.md §16); continuous
+        // mode only, lossless, off by default
+        pipeline: args.bool("pipeline"),
+        ..EngineConfig::default()
     };
     let port = args.usize("port", 8077) as u16;
     // --io-threads 0 restores the legacy blocking thread-per-connection
@@ -179,7 +185,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!(
         "tapout serving on http://{}  (POST /generate [stream:true for SSE], GET /health, \
          GET /metrics)  io={}x{} backend={} mode={} workers={} slots={} max_queue={} \
-         deadline_ms={} prefix_cache={} page_size={} kv_pages={} page_sharing={}",
+         deadline_ms={} prefix_cache={} page_size={} kv_pages={} page_sharing={} pipeline={}",
         http.addr,
         http.stats.mode,
         http.stats.io_threads,
@@ -193,6 +199,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         engine.config.page_size,
         engine.config.kv_pages,
         engine.config.page_sharing,
+        engine.config.pipeline,
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -286,6 +293,12 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             "--mode must be workers or continuous"
         );
         plan.mode = mode.to_string();
+    }
+    // --pipeline turns on the overlapped draft/verify stepper path and the
+    // simulator's two-lane virtual clock; decode outputs are identical, so
+    // replayed fixtures stay valid either way (docs/ARCHITECTURE.md §16)
+    if args.bool("pipeline") {
+        plan.pipeline = true;
     }
 
     let report = run_plan(&plan);

@@ -24,7 +24,10 @@
 //! All fault decisions come from the plan's own deterministic RNG stream
 //! (`util::Rng`), keyed per call — two runs over the same call sequence
 //! inject byte-identical faults, which is what lets the sim harness
-//! replay and shrink failing seeds (sim_harness/).
+//! replay and shrink failing seeds (sim_harness/). Speculative forwards
+//! (`speculate_batch`, docs/ARCHITECTURE.md §16) deliberately bypass the
+//! RNG so enabling pipelining never shifts the fault stream; only the
+//! sticky crash condition applies to them.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -250,6 +253,18 @@ impl LanguageModel for FaultyModel {
         self.inner.draft_batch(seqs)
     }
 
+    fn speculate_batch(&mut self, seqs: &[BatchItem]) -> anyhow::Result<Vec<Vec<TokenSignals>>> {
+        // Speculative forwards draw NO fault randomness: the fault stream
+        // is keyed to the authoritative forward sequence so the same plan
+        // replays byte-identically whether or not the stepper pipelines.
+        // A fault during speculation would be indistinguishable from a
+        // discard, so only the sticky crash condition applies.
+        if self.broken {
+            anyhow::bail!("injected crash: model is down until reseated");
+        }
+        self.inner.speculate_batch(seqs)
+    }
+
     fn cur(&self) -> usize {
         self.inner.cur()
     }
@@ -312,6 +327,52 @@ mod tests {
         assert_eq!(run(5), run(5), "same seed ⇒ identical fault sequence");
         assert_ne!(run(5), run(6), "different seeds decorrelate");
         assert!(run(5).iter().any(|&ok| !ok), "faults actually fire");
+    }
+
+    #[test]
+    fn speculation_never_shifts_the_fault_stream() {
+        // The same fault plan must inject the identical fault sequence on
+        // the authoritative forwards whether or not speculative forwards
+        // are interleaved — the invariant that keeps sim plans replaying
+        // byte-identically with pipelining on or off.
+        let run = |speculate: bool| -> Vec<bool> {
+            let (_, t) = sim_pair(1, "qa", 0.9);
+            let mut m = FaultyModel::new(Box::new(t), noisy(5));
+            (0..40)
+                .map(|_| {
+                    if speculate {
+                        let item = BatchItem {
+                            seq: 0,
+                            seed: 1,
+                            category: "qa".to_string(),
+                            tokens: vec![3],
+                            start: m.cur(),
+                        };
+                        let _ = m.speculate_batch(&[item]);
+                    }
+                    let start = m.cur();
+                    let ok = m.block(&[3], start).is_ok();
+                    if !ok {
+                        m.begin_request(1, "qa");
+                        m.reset();
+                    }
+                    ok
+                })
+                .collect()
+        };
+        assert_eq!(run(false), run(true), "speculation must not consume fault randomness");
+    }
+
+    #[test]
+    fn speculation_respects_sticky_crash() {
+        let (_, t) = sim_pair(2, "qa", 0.9);
+        let plan = FaultPlan { seed: 3, crash_rate: 1.0, ..FaultPlan::default() };
+        let mut m = FaultyModel::new(Box::new(t), plan);
+        assert!(m.block(&[3], 0).is_err(), "crash fires");
+        let item =
+            BatchItem { seq: 0, seed: 2, category: "qa".to_string(), tokens: vec![3], start: 0 };
+        assert!(m.speculate_batch(&[item]).is_err(), "broken model can't speculate either");
+        assert_eq!(m.stats().crashes.load(Ordering::Relaxed), 1, "no new fault drawn");
     }
 
     #[test]

@@ -19,6 +19,16 @@
 //!   executables (`hlo_batch`), whole batches run as one stacked forward
 //!   padded to the manifest's batch buckets; otherwise it degrades to
 //!   per-sequence forwards that still amortize weight residency.
+//!
+//! Both types inherit the trait's blocking `submit_batch` /
+//! `speculate_batch` defaults (docs/ARCHITECTURE.md §16): under
+//! `--pipeline` the stepper's pre-draft still runs correctly — it just
+//! overlaps nothing, because the default `submit_batch` completes the
+//! forward eagerly. Genuine overlap needs an override that returns a
+//! `PendingBatch` wrapping an in-flight `execute_b` dispatch (PJRT
+//! execution is async-capable; the synchronous `to_literal_sync`
+//! readback is the part to defer into `wait`), which slots in here
+//! without touching the stepper.
 
 use std::collections::HashMap;
 use std::sync::Arc;

@@ -135,6 +135,12 @@ pub struct SimModel {
     /// cumulative prompt tokens adopted via shared KV pages
     /// (`LanguageModel::adopt_pages`, docs/ARCHITECTURE.md §13)
     adopted: u64,
+    /// reusable logit row for `row_at` — cleared and refilled per row so
+    /// the padded-pass ladder stops allocating one `Vec` per signal row
+    /// in the step-loop hot path (the churn the engine's
+    /// `scratch_allocs` gauge watches); fixed at `SIM_VOCAB` entries, so
+    /// it allocates exactly once per model
+    logits: Vec<f32>,
 }
 
 impl SimModel {
@@ -148,6 +154,7 @@ impl SimModel {
             rel_cost: 1.0,
             name: "sim-target".into(),
             adopted: 0,
+            logits: Vec::new(),
         }
     }
 
@@ -162,6 +169,7 @@ impl SimModel {
             rel_cost,
             name: format!("sim-draft(q={quality})"),
             adopted: 0,
+            logits: Vec::new(),
         }
     }
 
@@ -173,7 +181,7 @@ impl SimModel {
 
     /// Signals for the prediction of position `p` (i.e. after processing
     /// the input at p-1) under this model's *current* scenario.
-    fn row_for(&self, p: usize) -> TokenSignals {
+    fn row_for(&mut self, p: usize) -> TokenSignals {
         let s = self.scenario;
         self.row_at(&s, p)
     }
@@ -183,7 +191,7 @@ impl SimModel {
     /// the batched verification path (rows are a pure function of
     /// (scenario, quality, position), which is what makes batched and
     /// sequential verification byte-identical).
-    fn row_at(&self, s: &Scenario, p: usize) -> TokenSignals {
+    fn row_at(&mut self, s: &Scenario, p: usize) -> TokenSignals {
         let tau = s.profile.tau(s.seed, p);
         let script_tok = s.script(p);
         let (agree, conf) = match self.quality {
@@ -208,16 +216,19 @@ impl SimModel {
             let alt = 3 + (unit(s.seed, p as u64, 0xBAD) * (SIM_VOCAB - 3) as f64) as u32;
             if alt == script_tok { (alt - 3 + 1) % (SIM_VOCAB - 3) + 3 } else { alt }
         };
-        // synthesize an actual logit row: peak `conf`, runner-up, uniform tail
+        // synthesize an actual logit row: peak `conf`, runner-up, uniform
+        // tail — refilled into the reusable scratch row, byte-identical
+        // to building a fresh Vec (clear + resize writes every entry)
         let v = SIM_VOCAB as usize;
         let conf = conf as f32;
         let p2 = (1.0 - conf) * 0.5;
         let tail = (1.0 - conf - p2).max(1e-6) / (v - 2) as f32;
-        let mut logits = vec![tail.ln(); v];
+        self.logits.clear();
+        self.logits.resize(v, tail.ln());
         let runner = (argmax as usize + 1 - 3) % (v - 3) + 3;
-        logits[argmax as usize] = conf.ln();
-        logits[runner] = p2.max(1e-6).ln();
-        TokenSignals::from_logits(&logits)
+        self.logits[argmax as usize] = conf.ln();
+        self.logits[runner] = p2.max(1e-6).ln();
+        TokenSignals::from_logits(&self.logits)
     }
 
     /// The shared batched-pass core behind `block_batch` and
@@ -234,15 +245,23 @@ impl SimModel {
         self.cost.calls += 1;
         self.cost.rows += seqs.iter().map(|s| s.tokens.len() as u64).sum::<u64>();
         self.cost.padded_rows += (bb * kb) as u64;
-        Ok(seqs
-            .iter()
-            .map(|item| {
-                let sc = Scenario::new(item.seed, &item.category);
-                (0..item.tokens.len())
-                    .map(|i| self.row_at(&sc, item.start + i + 1))
-                    .collect()
-            })
-            .collect())
+        let mut out = Vec::with_capacity(seqs.len());
+        for item in seqs {
+            let sc = Scenario::new(item.seed, &item.category);
+            let mut rows = Vec::with_capacity(item.tokens.len());
+            for i in 0..item.tokens.len() {
+                rows.push(self.row_at(&sc, item.start + i + 1));
+            }
+            out.push(rows);
+        }
+        Ok(out)
+    }
+
+    /// Capacity of the reusable logit scratch row — the bench's
+    /// churn probe: after the first row it must pin at `SIM_VOCAB` and
+    /// never grow again, however many padded passes run.
+    pub fn scratch_capacity(&self) -> usize {
+        self.logits.capacity()
     }
 }
 
@@ -485,6 +504,33 @@ mod tests {
             }
             let want = solo.block(&item.tokens, item.start).unwrap();
             assert_eq!(rows, &want, "seq {} diverged", item.seq);
+        }
+    }
+
+    #[test]
+    fn logit_scratch_allocates_once_and_stays_flat() {
+        let mut m = SimModel::draft(Scenario::new(5, "qa"), 0.9, 0.05);
+        assert_eq!(m.scratch_capacity(), 0, "lazy: nothing until the first row");
+        m.block(&[3, 4, 5], 0).unwrap();
+        let cap = m.scratch_capacity();
+        assert_eq!(cap, SIM_VOCAB as usize);
+        // hammer the padded-pass ladder: batched + sequential rows, many
+        // iterations — the scratch must never grow again
+        for round in 0..50usize {
+            let items: Vec<BatchItem> = (0..4)
+                .map(|i| BatchItem {
+                    seq: i,
+                    seed: i as u64,
+                    category: "qa".into(),
+                    tokens: vec![3; 1 + (round + i) % 7],
+                    start: 0,
+                })
+                .collect();
+            let mut fresh = SimModel::target(Scenario::new(round as u64, "qa"));
+            fresh.block_batch(&items).unwrap();
+            assert_eq!(fresh.scratch_capacity(), cap, "round {round}");
+            m.block(&[6], 3 + round).unwrap();
+            assert_eq!(m.scratch_capacity(), cap, "round {round}");
         }
     }
 

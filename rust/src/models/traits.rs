@@ -14,6 +14,12 @@
 //!   implementation (the simulator, the PJRT batch verifier) override it;
 //!   the default loops [`block`](LanguageModel::block) so single-sequence
 //!   backends keep working unchanged.
+//!
+//! The batched path additionally splits into submit/await halves
+//! ([`LanguageModel::submit_batch`] → [`PendingBatch::wait`],
+//! docs/ARCHITECTURE.md §16) so the continuous stepper can overlap the
+//! next micro-round's drafting with an in-flight verify; the default
+//! degrades to the blocking call so every existing backend keeps working.
 
 use crate::signals::TokenSignals;
 
@@ -79,6 +85,35 @@ pub struct BatchItem {
     pub tokens: Vec<u32>,
     /// absolute position of `tokens[0]` — must equal the sequence cursor
     pub start: usize,
+}
+
+/// A batched forward that has been *submitted* but not yet awaited — the
+/// result half of the [`LanguageModel::submit_batch`] split
+/// (docs/ARCHITECTURE.md §16).
+///
+/// `PendingBatch` is a concrete struct rather than an associated type so
+/// the trait stays object-safe (`Box<dyn LanguageModel>` is how every
+/// engine path holds its models). Backends without a truly asynchronous
+/// execution path construct it eagerly via [`PendingBatch::ready`] — the
+/// forward runs at submit time and `wait` just hands the rows over. That
+/// is still the correct *contract*: errors surface at `wait`, and the
+/// caller may do unrelated work (speculative pre-drafting) between submit
+/// and wait.
+pub struct PendingBatch {
+    rows: anyhow::Result<Vec<Vec<TokenSignals>>>,
+}
+
+impl PendingBatch {
+    /// An already-completed batch: `wait` returns `rows` immediately.
+    pub fn ready(rows: anyhow::Result<Vec<Vec<TokenSignals>>>) -> PendingBatch {
+        PendingBatch { rows }
+    }
+
+    /// Block until the forward completes and return its rows (or the
+    /// forward's error — failures always surface here, never at submit).
+    pub fn wait(self) -> anyhow::Result<Vec<Vec<TokenSignals>>> {
+        self.rows
+    }
 }
 
 /// The model interface the speculative-decoding session loop drives.
@@ -208,6 +243,39 @@ pub trait LanguageModel: Send {
             out.push(self.block(&item.tokens, item.start)?);
         }
         Ok(out)
+    }
+
+    /// Submit a batched verification forward without waiting for it — the
+    /// submit half of the pipelined verify path (docs/ARCHITECTURE.md
+    /// §16). The caller gets a [`PendingBatch`] immediately and may run
+    /// other work (the stepper speculatively pre-drafts the next
+    /// micro-round) before calling [`PendingBatch::wait`].
+    ///
+    /// The default degrades to the existing blocking
+    /// [`block_batch`](LanguageModel::block_batch): the forward runs
+    /// eagerly at submit time and `wait` returns the stored result.
+    /// Backends keep working unchanged — `FaultyModel`, the PJRT paths
+    /// and `BatchedTarget` all inherit this default — because the
+    /// observable contract (row values, error surfacing at `wait`, cursor
+    /// state after the call) is identical; only the *caller's* freedom to
+    /// overlap work in between is new.
+    fn submit_batch(&mut self, seqs: &[BatchItem]) -> PendingBatch {
+        PendingBatch::ready(self.block_batch(seqs))
+    }
+
+    /// Run a *speculative* draft forward — rows the caller may throw away
+    /// (docs/ARCHITECTURE.md §16). Semantically identical to
+    /// [`draft_batch`](LanguageModel::draft_batch), and the default simply
+    /// delegates to it; the separate entry point exists for fault
+    /// determinism. Fault-injecting wrappers key their deterministic
+    /// fault streams to the *authoritative* forward sequence, so a
+    /// speculative forward must not consume fault randomness — otherwise
+    /// enabling pipelining would shift every subsequent fault and break
+    /// the byte-identical replay contract. `FaultyModel` overrides this
+    /// to pass through without drawing from its RNG (a fault during
+    /// speculation is indistinguishable from a discard anyway).
+    fn speculate_batch(&mut self, seqs: &[BatchItem]) -> anyhow::Result<Vec<Vec<TokenSignals>>> {
+        self.draft_batch(seqs)
     }
 
     /// Number of tokens processed as inputs so far (== next input position).

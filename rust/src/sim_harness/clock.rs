@@ -6,27 +6,70 @@
 //! banked in [`crate::models::FaultStats::delay_ns`]. Trace lines embed
 //! the virtual timestamp, so a plan replays to an identical trace no
 //! matter how fast the host is.
+//!
+//! **Per-model lanes (docs/ARCHITECTURE.md §16).** A pipelined round
+//! overlaps draft work with an in-flight verify, so wall-clock is the
+//! *critical path*, not the sum. [`SimClock::advance_round`] models this:
+//! the draft and verify lanes each accumulate their own busy time, and
+//! the wall clock advances by `draft + verify − hidden`, where `hidden`
+//! is the overlap the round actually achieved (clamped to both lane
+//! costs). `advance_round(d, v, 0)` degenerates to `advance(d + v)`, so
+//! serialized plans — and every checked-in regression fixture — replay to
+//! byte-identical clocks.
 
-/// Virtual-time clock for the deterministic simulator.
+/// Virtual-time clock for the deterministic simulator, with independent
+/// draft/verify lane accounting for pipelined rounds.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SimClock {
     now_ns: u64,
+    draft_busy_ns: u64,
+    verify_busy_ns: u64,
+    overlap_ns: u64,
 }
 
 impl SimClock {
-    /// A clock at t = 0.
+    /// A clock at t = 0 with idle lanes.
     pub fn new() -> SimClock {
         SimClock::default()
     }
 
-    /// Current virtual time in nanoseconds.
+    /// Current virtual time in nanoseconds (the critical path).
     pub fn now_ns(&self) -> u64 {
         self.now_ns
     }
 
-    /// Advance virtual time by `ns`.
+    /// Total virtual time the draft lane spent busy.
+    pub fn draft_busy_ns(&self) -> u64 {
+        self.draft_busy_ns
+    }
+
+    /// Total virtual time the verify lane spent busy.
+    pub fn verify_busy_ns(&self) -> u64 {
+        self.verify_busy_ns
+    }
+
+    /// Total verify latency hidden behind overlapped draft work.
+    pub fn overlap_ns(&self) -> u64 {
+        self.overlap_ns
+    }
+
+    /// Advance virtual time by `ns` (lane-agnostic: queue waits, fault
+    /// delays, idle ticks — anything that stalls the whole engine).
     pub fn advance(&mut self, ns: u64) {
         self.now_ns += ns;
+    }
+
+    /// Advance one decode round: the draft lane works `draft_ns`, the
+    /// verify lane `verify_ns`, and up to `overlap_ns` of the shorter
+    /// lane ran under the other's shadow. Wall time advances by the
+    /// critical path `draft + verify − hidden`; `hidden` is clamped so a
+    /// claimed overlap can never exceed either lane's actual work.
+    pub fn advance_round(&mut self, draft_ns: u64, verify_ns: u64, overlap_ns: u64) {
+        let hidden = overlap_ns.min(draft_ns).min(verify_ns);
+        self.draft_busy_ns += draft_ns;
+        self.verify_busy_ns += verify_ns;
+        self.overlap_ns += hidden;
+        self.now_ns += draft_ns + verify_ns - hidden;
     }
 }
 
@@ -42,5 +85,38 @@ mod tests {
         c.advance(0);
         c.advance(7);
         assert_eq!(c.now_ns(), 12);
+    }
+
+    #[test]
+    fn zero_overlap_round_matches_flat_advance() {
+        let mut flat = SimClock::new();
+        let mut lanes = SimClock::new();
+        flat.advance(2500);
+        lanes.advance_round(500, 2000, 0);
+        assert_eq!(lanes.now_ns(), flat.now_ns());
+        assert_eq!(lanes.draft_busy_ns(), 500);
+        assert_eq!(lanes.verify_busy_ns(), 2000);
+        assert_eq!(lanes.overlap_ns(), 0);
+    }
+
+    #[test]
+    fn overlap_shortens_wall_clock_by_hidden_time() {
+        let mut c = SimClock::new();
+        c.advance_round(500, 2000, 500);
+        assert_eq!(c.now_ns(), 2000);
+        assert_eq!(c.overlap_ns(), 500);
+    }
+
+    #[test]
+    fn overlap_clamps_to_both_lanes() {
+        let mut c = SimClock::new();
+        // claimed overlap exceeds the draft lane's work: only 300 hides
+        c.advance_round(300, 2000, 1000);
+        assert_eq!(c.now_ns(), 2000);
+        assert_eq!(c.overlap_ns(), 300);
+        // and it can never exceed the verify lane either
+        c.advance_round(800, 100, 1000);
+        assert_eq!(c.now_ns(), 2000 + 800);
+        assert_eq!(c.overlap_ns(), 300 + 100);
     }
 }

@@ -15,6 +15,9 @@
 //!   analytic per-round costs plus whatever latency the fault layer
 //!   injected ([`crate::models::FaultStats::delay_ns`]); nothing ever
 //!   sleeps, so thousands of simulated requests run in milliseconds.
+//!   Per-model *lanes* (draft / verify busy time) let pipelined rounds
+//!   advance wall-clock by the critical path instead of the sum
+//!   (docs/ARCHITECTURE.md §16).
 //! * [`plan`] — seeded workload plans: a tiny op vocabulary (submit /
 //!   cancel / disconnect / step / kill-replica / drain-replica) that the
 //!   generator composes into request bursts, cancels mid-prefill and
@@ -38,8 +41,8 @@
 //!   violation, yielding a minimal replayable trace
 //!   (`rust/tests/sim_regressions/`).
 //!
-//! CLI face: `tapout simulate --seed N --steps M [--replicas R]`
-//! (src/main.rs).
+//! CLI face: `tapout simulate --seed N --steps M [--replicas R]
+//! [--pipeline]` (src/main.rs).
 
 pub mod clock;
 pub mod oracle;

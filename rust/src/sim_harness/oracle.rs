@@ -78,6 +78,24 @@ impl Oracle {
         self.killed.insert(id);
     }
 
+    /// **Speculation conservation** (docs/ARCHITECTURE.md §16): once a
+    /// run is quiescent, every speculative pre-draft the pipelined
+    /// stepper issued must have resolved exactly once — adopted by the
+    /// following round or discarded (partial acceptance, or the session
+    /// ended first). An imbalance means discarded work leaked into (or
+    /// vanished from) the accounting, the same class of bug the bandit
+    /// play-count check catches for rewards. All-zero serialized runs
+    /// pass trivially.
+    pub fn check_spec_conservation(attempted: u64, adopted: u64, discarded: u64) -> Option<String> {
+        if attempted != adopted + discarded {
+            return Some(format!(
+                "speculation conservation violated: {attempted} pre-drafts attempted \
+                 but {adopted} adopted + {discarded} discarded"
+            ));
+        }
+        None
+    }
+
     /// Register a submitted request and precompute its expected reply by
     /// running a *fault-free* target-only greedy decode of the same
     /// scenario. `max_seq` is the engine's KV geometry; prompts that do
@@ -224,6 +242,14 @@ impl Oracle {
 mod tests {
     use super::*;
     use crate::spec::BOS;
+
+    #[test]
+    fn spec_conservation_balances() {
+        assert!(Oracle::check_spec_conservation(0, 0, 0).is_none(), "serialized runs");
+        assert!(Oracle::check_spec_conservation(7, 4, 3).is_none());
+        assert!(Oracle::check_spec_conservation(7, 4, 2).is_some(), "leaked speculation");
+        assert!(Oracle::check_spec_conservation(3, 2, 2).is_some(), "double-resolved");
+    }
 
     #[test]
     fn clip_truncates_to_budget_then_eos() {

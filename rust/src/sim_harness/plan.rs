@@ -178,6 +178,14 @@ pub struct SimPlan {
     /// route by prefix-affinity hashing (`false` = round-robin); only
     /// meaningful when `replicas > 1`
     pub affinity: bool,
+    /// run continuous-mode rounds through the overlapped draft/verify
+    /// pipeline (docs/ARCHITECTURE.md §16) and account wall time on the
+    /// simulator's two-lane clock. Decode outputs are identical pipeline
+    /// on or off; only the virtual clock and lane gauges move. The
+    /// generator always leaves this `false` (it is a CLI/CI overlay, not
+    /// a random knob — flipping it draws no RNG, so every existing seed
+    /// still generates the identical plan).
+    pub pipeline: bool,
     /// the ordered op list
     pub ops: Vec<SimOp>,
 }
@@ -205,6 +213,7 @@ impl SimPlan {
             sabotage: false,
             replicas: 1,
             affinity: true,
+            pipeline: false,
             ops: Vec::new(),
         };
         let mut next_req: u64 = 0;
@@ -345,6 +354,7 @@ impl SimPlan {
             .set("sabotage", self.sabotage)
             .set("replicas", self.replicas)
             .set("affinity", self.affinity)
+            .set("pipeline", self.pipeline)
             .set("ops", self.ops.iter().map(|o| o.to_json()).collect::<Vec<Json>>());
         j
     }
@@ -375,6 +385,9 @@ impl SimPlan {
             sabotage: j.get("sabotage").and_then(|x| x.as_bool()).unwrap_or(false),
             replicas: num("replicas").unwrap_or(1.0) as usize,
             affinity: j.get("affinity").and_then(|x| x.as_bool()).unwrap_or(true),
+            // absent in fixtures checked in before the pipeline existed:
+            // they replay serialized, exactly as they were recorded
+            pipeline: j.get("pipeline").and_then(|x| x.as_bool()).unwrap_or(false),
             ops,
         })
     }
@@ -404,6 +417,19 @@ mod tests {
             // and the serialized form itself is stable (BTreeMap keys)
             assert_eq!(text, back.to_json().render(), "seed {seed}");
         }
+    }
+
+    #[test]
+    fn pipeline_defaults_off_for_legacy_plans() {
+        // fixtures checked in before the pipeline field existed carry no
+        // "pipeline" key: they must parse (to a serialized run) and
+        // re-serialize with the key made explicit
+        let text = r#"{"seed":1,"ops":[{"op":"step","n":2}]}"#;
+        let plan = SimPlan::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert!(!plan.pipeline);
+        assert!(plan.to_json().render().contains("\"pipeline\""));
+        // and the generator never flips it on (no RNG draw for the field)
+        assert!(!SimPlan::generate(9, 40).pipeline);
     }
 
     #[test]

@@ -1,0 +1,261 @@
+//! Two-stage pipeline integration tests (docs/ARCHITECTURE.md §16): the
+//! continuous stepper with `pipeline` on overlaps each verify forward
+//! with a speculative pre-draft of the next round's catch-up row, and
+//! none of it may be observable in the output bytes or the accounting:
+//!
+//!   * a staggered burst with pipelining on is byte-identical to the
+//!     serialized continuous engine and the greedy oracle at slots
+//!     {1, 4, 8}, while the `engine.pipeline` gauges observe the
+//!     speculation that happened (and stay silent when it is off);
+//!   * the flag is a no-op in Workers mode — identical bytes, zero
+//!     pipeline rounds;
+//!   * injected verify faults (errors and sticky crashes) discard the
+//!     in-flight pre-draft with the chunk: every request still reaches
+//!     an honest terminal, the engine heals, bandit plays settle exactly
+//!     once, and at one row per chunk the adopt/discard ledger balances
+//!     to the speculated-forward count even across the fault path;
+//!   * page-refcount conservation holds with prefix cache + COW sharing
+//!     on and a mid-decode cancel — discarded speculation never touches
+//!     page refcounts.
+
+mod common;
+
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+use common::{collect, oracle_tokens, MAX_NEW, TIMEOUT};
+use tapout::engine::{Engine, EngineConfig, EngineMode, FinishStatus, Request, StreamEvent};
+use tapout::models::FaultPlan;
+
+/// Fault scenarios use short decodes: the interesting part is the
+/// discard path, not the decode length.
+const FAULT_MAX_NEW: usize = 16;
+
+fn config(mode: EngineMode, workers: usize, slots: usize, pipeline: bool) -> EngineConfig {
+    EngineConfig { mode, pipeline, ..common::sim_config(workers, slots) }
+}
+
+fn burst_prompts(n: usize) -> Vec<String> {
+    common::burst_prompts(n, "pipelined decode")
+}
+
+#[test]
+fn pipelined_continuous_is_byte_identical_to_serialized_and_oracle() {
+    let prompts = burst_prompts(16);
+    let mut saw_adopted = false;
+    for slots in [1usize, 4, 8] {
+        // the same staggered three-wave burst through a serialized and a
+        // pipelined continuous engine (admissions land mid-flight)
+        let run = |pipeline: bool| {
+            let eng = Engine::start(config(EngineMode::Continuous, 0, slots, pipeline)).unwrap();
+            let mut rxs = Vec::new();
+            for wave in prompts.chunks(8) {
+                for p in wave {
+                    rxs.push(eng.submit(p, MAX_NEW));
+                }
+                std::thread::sleep(Duration::from_millis(3));
+            }
+            let out = collect(rxs);
+            (eng, out)
+        };
+        let (base_eng, base) = run(false);
+        let (pipe_eng, piped) = run(true);
+
+        let mut rounds = 0u64;
+        for (i, (b, p)) in base.iter().zip(&piped).enumerate() {
+            assert!(b.is_ok(), "slots {slots} request {i} (serialized): {:?}", b.error);
+            assert!(p.is_ok(), "slots {slots} request {i} (pipelined): {:?}", p.error);
+            assert_eq!(
+                p.result.new_tokens(),
+                b.result.new_tokens(),
+                "slots {slots} request {i}: pipelining moved a byte"
+            );
+            assert_eq!(
+                p.result.new_tokens(),
+                &oracle_tokens(&prompts[i], MAX_NEW)[..],
+                "slots {slots} request {i}: pipelined output diverged from the greedy oracle"
+            );
+            rounds += p.result.rounds.len() as u64;
+        }
+
+        // serialized engines never touch the pipeline ledger, and the
+        // metrics block stays absent (gated on rounds > 0)
+        assert_eq!(base_eng.stats.pipeline.rounds.load(Ordering::Relaxed), 0, "slots {slots}");
+        let bj = base_eng.metrics_json();
+        assert!(
+            bj.get("engine").and_then(|e| e.get("pipeline")).is_none(),
+            "slots {slots}: pipeline gauges must be gated off when serialized"
+        );
+
+        // discarded speculation is reward-invisible: play conservation
+        // holds exactly as in the serialized engine
+        assert_eq!(pipe_eng.bandit_sessions(), rounds, "slots {slots}");
+        assert_eq!(pipe_eng.bandit_updates(), rounds, "slots {slots}");
+        let counts = pipe_eng.bandit_counts().expect("seq-ucb1 has a shared bandit");
+        assert_eq!(counts.iter().sum::<u64>(), rounds, "slots {slots}: {counts:?}");
+
+        // the pipeline observed its own execution
+        let p = &pipe_eng.stats.pipeline;
+        assert!(p.rounds.load(Ordering::Relaxed) > 0, "slots {slots}");
+        let spec = p.spec_forwards.load(Ordering::Relaxed);
+        let adopted = p.rows_adopted.load(Ordering::Relaxed);
+        let discarded = p.rows_discarded.load(Ordering::Relaxed);
+        assert!(spec > 0, "slots {slots}: the shadow pre-draft must actually run");
+        if slots == 1 {
+            // one row per chunk: every speculated row resolves exactly once
+            assert_eq!(adopted + discarded, spec, "slots {slots}: pre-draft ledger imbalance");
+        } else {
+            assert!(adopted + discarded >= spec, "slots {slots}: rows can't under-resolve");
+        }
+        saw_adopted |= adopted > 0;
+        let pj = pipe_eng.metrics_json();
+        let gauges = pj
+            .get("engine")
+            .and_then(|e| e.get("pipeline"))
+            .expect("pipeline gauges present after pipelined rounds");
+        assert!(gauges.get("overlap_ratio").is_some());
+        assert!(gauges.get("discard_rate").is_some());
+
+        base_eng.shutdown();
+        pipe_eng.shutdown();
+    }
+    assert!(saw_adopted, "full acceptance must adopt at least one pre-draft across slot counts");
+}
+
+#[test]
+fn workers_mode_ignores_the_pipeline_flag() {
+    let prompts = burst_prompts(8);
+    let mut outs = Vec::new();
+    for pipeline in [false, true] {
+        let eng = Engine::start(config(EngineMode::Workers, 2, 2, pipeline)).unwrap();
+        let out = collect(prompts.iter().map(|p| eng.submit(p, MAX_NEW)).collect());
+        assert_eq!(
+            eng.stats.pipeline.rounds.load(Ordering::Relaxed),
+            0,
+            "pipeline={pipeline}: Workers mode has no step loop to pipeline"
+        );
+        outs.push(out);
+        eng.shutdown();
+    }
+    for (i, (a, b)) in outs[0].iter().zip(&outs[1]).enumerate() {
+        assert!(a.is_ok() && b.is_ok(), "request {i}");
+        assert_eq!(a.result.new_tokens(), b.result.new_tokens(), "request {i}: flag moved bytes");
+        assert_eq!(a.result.new_tokens(), &oracle_tokens(&prompts[i], MAX_NEW)[..], "request {i}");
+    }
+}
+
+#[test]
+fn mid_verify_faults_discard_predrafts_and_settle_plays_once() {
+    // error faults (forward dies under a live pre-draft) and sticky
+    // crashes (the panic-equivalent) against a pipelined 1-slot engine
+    let plans = [
+        FaultPlan { seed: 11, error_rate: 1.0, max_faults: 2, ..FaultPlan::default() },
+        FaultPlan { seed: 7, crash_rate: 1.0, max_faults: 1, ..FaultPlan::default() },
+    ];
+    for plan in plans {
+        let mut cfg = config(EngineMode::Continuous, 0, 1, true);
+        cfg.faults = plan;
+        let eng = Engine::start(cfg).unwrap();
+
+        let mut failed = 0usize;
+        let mut last_ok = false;
+        for i in 0..12 {
+            let text = format!("pipelined fault probe {i}");
+            let r = eng
+                .submit(&text, FAULT_MAX_NEW)
+                .recv_timeout(TIMEOUT)
+                .unwrap_or_else(|_| panic!("request {i}: a fault must not hang the pipeline"));
+            match r.status {
+                FinishStatus::Failed => {
+                    failed += 1;
+                    last_ok = false;
+                    assert!(r.error.is_some(), "request {i}: failures carry a reason");
+                }
+                FinishStatus::Done => {
+                    last_ok = true;
+                    assert_eq!(
+                        r.result.new_tokens(),
+                        &oracle_tokens(&text, FAULT_MAX_NEW)[..],
+                        "request {i}: post-fault pipelined decode must stay byte-exact"
+                    );
+                }
+                other => panic!("request {i}: unexpected status {other:?}"),
+            }
+        }
+        assert!(failed >= 1, "rate-1.0 faults must fire at least once");
+        assert!(last_ok, "the kill budget must exhaust and the pipelined engine heal");
+
+        // a verify that dies mid-flight settles each chunk session's play
+        // via on_abort exactly once — never zero (leak) or twice (mint)
+        assert_eq!(
+            eng.bandit_sessions(),
+            eng.bandit_updates(),
+            "aborted pipelined rounds must settle their bandit plays"
+        );
+        let counts = eng.bandit_counts().expect("seq-ucb1 has a shared bandit");
+        assert_eq!(counts.iter().sum::<u64>(), eng.bandit_updates(), "{counts:?}");
+
+        // 1 slot ⇒ one row per speculated chunk: adopt/discard balances
+        // to the speculated-forward count even across the fault path
+        // (a crashed verify discards its pre-draft, never drops it)
+        let p = &eng.stats.pipeline;
+        let spec = p.spec_forwards.load(Ordering::Relaxed);
+        assert!(spec > 0, "healed decodes must have speculated");
+        assert_eq!(
+            p.rows_adopted.load(Ordering::Relaxed) + p.rows_discarded.load(Ordering::Relaxed),
+            spec,
+            "pre-draft ledger imbalance under faults"
+        );
+        eng.shutdown();
+    }
+}
+
+#[test]
+fn pipelined_decode_conserves_page_refcounts_under_sharing_and_cancel() {
+    // COW page sharing + prefix cache on, a shared-prefix burst, and a
+    // mid-decode cancel: adopted and discarded pre-drafts alike must
+    // leave the page arena balanced (speculation never touches refcounts)
+    let system = "shared system preamble for page sharing across the burst. ".repeat(3);
+    let prompts: Vec<String> = (0..12).map(|i| format!("{system}user {i}: go")).collect();
+    let mut cfg = config(EngineMode::Continuous, 0, 4, true);
+    cfg.prefix_cache = true;
+    cfg.page_sharing = true;
+    let eng = Engine::start(cfg).unwrap();
+
+    let req = Request::new(0, "pipelined decode to cancel midway", 3800);
+    let flag = req.cancel_flag();
+    let rx = eng.submit_request_streaming(req);
+    let burst: Vec<_> = prompts.iter().map(|p| eng.submit(p, MAX_NEW)).collect();
+    match rx.recv_timeout(TIMEOUT).expect("first stream event") {
+        StreamEvent::Tokens { .. } => flag.cancel(),
+        StreamEvent::Done(r) => panic!("cancel target finished early: {:?}", r.status),
+    }
+    loop {
+        match rx.recv_timeout(TIMEOUT).expect("stream must terminate") {
+            StreamEvent::Tokens { .. } => {}
+            StreamEvent::Done(r) => {
+                assert_eq!(r.status, FinishStatus::Cancelled);
+                break;
+            }
+        }
+    }
+    for (i, r) in collect(burst).iter().enumerate() {
+        assert!(r.is_ok(), "request {i}: {:?}", r.error);
+        assert_eq!(
+            r.result.new_tokens(),
+            &oracle_tokens(&prompts[i], MAX_NEW)[..],
+            "request {i}: sharing + pipelining moved a byte"
+        );
+    }
+
+    assert_eq!(
+        eng.page_conservation_error(),
+        None,
+        "discarded speculation must never touch page refcounts"
+    );
+    // at most the cancelled session's final aborted round is reward-less
+    let counts = eng.bandit_counts().expect("seq-ucb1 has a shared bandit");
+    assert_eq!(counts.iter().sum::<u64>(), eng.bandit_updates());
+    assert!(eng.bandit_sessions() - eng.bandit_updates() <= 1);
+    eng.shutdown();
+}

@@ -417,6 +417,136 @@ fn replica_kill_mid_stream_synthesizes_failed_terminal_and_fails_over() {
 }
 
 // ---------------------------------------------------------------------------
+// undelivered-body re-dispatch
+// ---------------------------------------------------------------------------
+
+/// A replica stand-in that answers health/metrics probes like a healthy
+/// engine but dies mid-request-body on every `/generate`: it reads just
+/// the request line, then drops the socket while body bytes are still
+/// in flight. The unread data turns the close into a hard TCP reset, so
+/// the router's next body-chunk write fails with the request provably
+/// undelivered — exactly the "owner died before the body finished"
+/// shape the bounded re-dispatch path handles.
+struct BodyEater {
+    addr: String,
+    stop: Arc<std::sync::atomic::AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl BodyEater {
+    fn start() -> BodyEater {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        listener.set_nonblocking(true).unwrap();
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let stp = stop.clone();
+        let handle = std::thread::spawn(move || {
+            while !stp.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((s, _)) => eater_conn(s),
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        BodyEater { addr, stop, handle: Some(handle) }
+    }
+}
+
+impl Drop for BodyEater {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Serve one [`BodyEater`] connection: probes get healthy canned JSON,
+/// generates get eaten mid-body (see the struct docs).
+fn eater_conn(mut s: TcpStream) {
+    let _ = s.set_read_timeout(Some(Duration::from_millis(200)));
+    let mut raw = String::new();
+    let mut buf = [0u8; 2048];
+    while !raw.contains("\r\n") && raw.len() < 2048 {
+        match s.read(&mut buf) {
+            Ok(0) => return,
+            Ok(n) => raw.push_str(&String::from_utf8_lossy(&buf[..n])),
+            Err(_) => return,
+        }
+    }
+    if raw.starts_with("POST /generate") {
+        // linger long enough for more body chunks to land unread, then
+        // drop: the reset fails the router's in-flight delivery
+        std::thread::sleep(Duration::from_millis(30));
+        return;
+    }
+    while !raw.contains("\r\n\r\n") {
+        match s.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => raw.push_str(&String::from_utf8_lossy(&buf[..n])),
+            Err(_) => break,
+        }
+    }
+    let body = if raw.starts_with("GET /metrics") {
+        "{\"completed\": 0, \"new_tokens\": 0, \"sched\": {\"queue_wait_est_cost\": 0.0}}"
+    } else {
+        "{\"ok\": true}"
+    };
+    let reply = format!(
+        "HTTP/1.1 200 OK\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let _ = s.write_all(reply.as_bytes());
+}
+
+#[test]
+fn undelivered_body_redispatches_to_next_replica_within_budget() {
+    let (_eng, http) = replica();
+    let eater = BodyEater::start();
+    let router = router_over(vec![eater.addr.clone(), http.addr.clone()], true);
+
+    // a routing head owned by the doomed stand-in; the bulk of the body
+    // rides in a padding field the replicas ignore, so it overflows
+    // every socket buffer on the wire (forcing a genuinely chunked
+    // upstream delivery) while the prompt stays small enough to decode
+    // after the re-dispatch
+    let head = (0..64)
+        .map(|i| format!("redis-{i:02} eater head :: request body"))
+        .find(|p| owner_of(p, 2) == 0)
+        .expect("some head hashes to replica 0");
+    let pad = "x".repeat(1_000_000); // ≫ socket buffering, < MAX_BODY_BYTES
+    let body = format!("{{\"prompt\": \"{head}\", \"pad\": \"{pad}\", \"max_new\": 8}}");
+    let (code, j) = http_post_json(&router.addr, "/generate", &body);
+
+    // the reply is the survivor's, byte-exact — and since a truncated
+    // body could never have parsed as JSON, a 200 done also proves the
+    // re-dispatched body arrived complete
+    assert_eq!(code, 200, "{j:?}");
+    assert_eq!(j.get("status").and_then(|s| s.as_str()), Some("done"), "{j:?}");
+    let want = oracle_text(&head, 8);
+    assert_eq!(j.get("text").and_then(|t| t.as_str()), Some(want.as_str()));
+
+    // exactly one bounded re-dispatch, of the partial-body kind; the
+    // undelivered attempt is not an upstream *error* — the replica never
+    // saw a complete request, so nothing was answered on its behalf
+    let (_, m) = http_get_json(&router.addr, "/metrics");
+    let r = m.get("router").expect("router stats");
+    assert_eq!(r.get("routed").and_then(|x| x.as_usize()), Some(1));
+    assert_eq!(r.get("failovers").and_then(|x| x.as_usize()), Some(1));
+    assert_eq!(r.get("partial_redispatches").and_then(|x| x.as_usize()), Some(1));
+    assert_eq!(r.get("upstream_errors").and_then(|x| x.as_usize()), Some(0));
+
+    // the fleet keeps serving follow-up work (the eater may well be
+    // probed alive again — every fresh delivery failure just re-runs
+    // the same bounded re-dispatch)
+    generate_ok(&router.addr, &head, 8);
+}
+
+// ---------------------------------------------------------------------------
 // draining
 // ---------------------------------------------------------------------------
 

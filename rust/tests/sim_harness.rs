@@ -38,6 +38,7 @@ fn flood_plan() -> SimPlan {
         sabotage: false,
         replicas: 1,
         affinity: true,
+        pipeline: false,
         ops: vec![
             submit(0, "shared context block alpha", 8),
             SimOp::Step { n: 4 },
@@ -144,6 +145,9 @@ fn cache_and_paging_config_never_changes_replies() {
     bounded.kv_pages = 96;
     let mut continuous = base.clone();
     continuous.mode = "continuous".to_string();
+    let mut pipelined = base.clone();
+    pipelined.mode = "continuous".to_string();
+    pipelined.pipeline = true;
 
     let want = run_plan(&base);
     assert_eq!(want.violation, None, "trace:\n{}", want.trace.join("\n"));
@@ -153,6 +157,7 @@ fn cache_and_paging_config_never_changes_replies() {
         ("cache + page sharing", shared_pages),
         ("bounded arena", bounded),
         ("continuous core", continuous),
+        ("pipelined continuous core", pipelined),
     ] {
         let got = run_plan(&plan);
         assert_eq!(got.violation, None, "{label} trace:\n{}", got.trace.join("\n"));
@@ -201,6 +206,13 @@ fn regression_fixtures_replay_as_recorded() {
         }))
         .unwrap_or_else(|e| panic!("{name}: bad plan: {e}"));
         let r = run_plan(&plan);
+        // fixtures predating the two-lane clock carry no `pipeline` key:
+        // they must replay with the second lane silent (zero overlap —
+        // `advance_round(d, v, 0)` is exactly the old flat `advance`)
+        if !plan.pipeline {
+            assert_eq!(r.overlap_ns, 0, "{name}: a serialized fixture hid wall-clock time");
+            assert_eq!(r.spec_attempted, 0, "{name}: a serialized fixture speculated");
+        }
         if plan.sabotage {
             assert!(r.violation.is_some(), "{name}: sabotage fixture no longer trips the oracle");
         } else {
