@@ -52,6 +52,11 @@ const BENCH_ROUTER_JSON_PATH: &str = "BENCH_router.json";
 /// schema below in `pipeline_bench`).
 const BENCH_PIPELINE_JSON_PATH: &str = "BENCH_pipeline.json";
 
+/// Hierarchical drafter-pool comparison (outer-bandit selection vs each
+/// fixed single drafter on a two-tenant mixed workload) lands here
+/// (`tapout.bench.drafters.v1`, schema below in `drafters_bench`).
+const BENCH_DRAFTERS_JSON_PATH: &str = "BENCH_drafters.json";
+
 fn main() {
     // TAPOUT_BENCH_ONLY=cache runs just the prefix-cache comparison —
     // the CI gate asserting cached prefill < uncached at slots >= 4
@@ -81,6 +86,15 @@ fn main() {
         run_pipeline_bench();
         return;
     }
+    // TAPOUT_BENCH_ONLY=drafters runs just the drafter-pool comparison —
+    // the CI gate asserting outer-bandit selection strictly beats the
+    // best fixed single drafter on a two-tenant mixed workload, with the
+    // tenants converging to different modal drafters and every run
+    // oracle-exact
+    if std::env::var("TAPOUT_BENCH_ONLY").as_deref() == Ok("drafters") {
+        run_drafters_bench();
+        return;
+    }
     sim_tables();
     let mut report = Json::obj();
     report.set("schema", "tapout.bench.serving.v1");
@@ -101,6 +115,7 @@ fn main() {
     run_paged_bench();
     run_router_bench();
     run_pipeline_bench();
+    run_drafters_bench();
     pjrt_ladder();
 }
 
@@ -141,6 +156,16 @@ fn run_pipeline_bench() {
     match std::fs::write(BENCH_PIPELINE_JSON_PATH, report.render()) {
         Ok(()) => println!("\n[wrote {BENCH_PIPELINE_JSON_PATH}]"),
         Err(e) => eprintln!("\n[failed to write {BENCH_PIPELINE_JSON_PATH}: {e}]"),
+    }
+}
+
+fn run_drafters_bench() {
+    let mut report = Json::obj();
+    report.set("schema", "tapout.bench.drafters.v1");
+    drafters_bench(&mut report);
+    match std::fs::write(BENCH_DRAFTERS_JSON_PATH, report.render()) {
+        Ok(()) => println!("\n[wrote {BENCH_DRAFTERS_JSON_PATH}]"),
+        Err(e) => eprintln!("\n[failed to write {BENCH_DRAFTERS_JSON_PATH}: {e}]"),
     }
 }
 
@@ -307,6 +332,143 @@ fn pipeline_bench(report: &mut Json) {
         .set("warm_growth", grew as usize)
         .set("warm_iterations", iters as usize);
     report.set("scratch_churn", churn);
+}
+
+/// Hierarchical drafter-pool bandit (docs/ARCHITECTURE.md §17) measured
+/// on the sim harness's virtual clock: a two-tenant mixed workload over
+/// a pool of two drafters with *opposite* per-tenant acceptance
+/// profiles. The runner shards tenants by request-id parity (`t0` =
+/// even ids, `t1` = odd), so alternating the category with the parity
+/// gives each tenant a pure stream — `t0` sends `coding` requests
+/// (pooled preference maps to drafter 0 at n = 2) and `t1` sends `qa`
+/// requests (drafter 1). The identical plan runs three ways: hierarchical
+/// selection (no pin) and pinned to each fixed single drafter
+/// (`run_plan_pinned`), all on the same deterministic virtual clock.
+///
+/// CI gates, asserted inline:
+///   * every run is oracle-exact (violation-free ⇒ each reply
+///     byte-equals a fault-free target-only greedy decode) and all
+///     requests finish `Done`;
+///   * replies are byte-identical across all three runs — drafter
+///     selection routes *work*, never output bytes;
+///   * the two tenants converge to **different** modal drafters under
+///     bandit selection (full-information scoring separates them);
+///   * bandit virtual tok/s strictly beats the best fixed single
+///     drafter — either pin serves half the workload with the wrong
+///     drafter's low acceptance, paying many extra verify rounds.
+fn drafters_bench(report: &mut Json) {
+    use tapout::sim_harness::{run_plan, run_plan_pinned, SimOp, SimPlan};
+    let fast = std::env::var("TAPOUT_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+    let (n_reqs, max_new) = if fast { (16u64, 16usize) } else { (40, 24) };
+
+    group(&format!(
+        "drafter pool: two-tenant bandit vs fixed single drafters, {n_reqs} reqs x {max_new} \
+         tokens (virtual clock, sim harness)"
+    ));
+    let mut ops = Vec::new();
+    for i in 0..n_reqs {
+        let category = if i % 2 == 0 { "coding" } else { "qa" };
+        ops.push(SimOp::Submit {
+            req: i,
+            prompt: format!("pooled tenant workload request {i}"),
+            category: category.to_string(),
+            max_new,
+            deadline_ns: None,
+        });
+        if i % 4 == 3 {
+            ops.push(SimOp::Step { n: 8 });
+        }
+    }
+    let plan = SimPlan {
+        seed: 71,
+        mode: "continuous".to_string(),
+        slots: 4,
+        workers: 4,
+        gamma_max: 6,
+        method: "seq-ucb1".to_string(),
+        cache: true,
+        sharing: true,
+        page_size: 8,
+        kv_pages: 0,
+        faults: false,
+        max_faults: 0,
+        sabotage: false,
+        replicas: 1,
+        affinity: true,
+        pipeline: false,
+        drafters: 2,
+        tenants: 2,
+        ops,
+    };
+
+    let runs = [
+        ("bandit", run_plan(&plan)),
+        ("pin0", run_plan_pinned(&plan, Some(0))),
+        ("pin1", run_plan_pinned(&plan, Some(1))),
+    ];
+    let mut rows: Vec<Json> = Vec::new();
+    let mut tok_s = [0f64; 3];
+    for (k, (label, r)) in runs.iter().enumerate() {
+        assert_eq!(r.violation, None, "{label}: drafter run tripped the oracle");
+        assert_eq!(r.replies.len(), n_reqs as usize, "{label}: a request never terminated");
+        for (req, reply) in &r.replies {
+            assert_eq!(
+                reply.status,
+                FinishStatus::Done,
+                "{label} req {req}: fault-free run must finish Done"
+            );
+        }
+        assert_eq!(
+            r.replies, runs[0].1.replies,
+            "{label}: drafter selection moved an output byte"
+        );
+        let tokens: u64 = r.replies.values().map(|x| x.emitted.len() as u64).sum();
+        tok_s[k] = tokens as f64 / (r.clock_ns as f64 / 1e9);
+        println!(
+            "  {label:>6}: {:.2} ms virtual  {:.0} tok/s  modes {:?}",
+            r.clock_ns as f64 / 1e6,
+            tok_s[k],
+            r.drafter_modes
+        );
+        let mut row = Json::obj();
+        row.set("selection", *label)
+            .set("clock_ms", r.clock_ns as f64 / 1e6)
+            .set("tok_s", tok_s[k])
+            .set("tokens", tokens as usize);
+        let mut modes = Json::obj();
+        for (tenant, d) in &r.drafter_modes {
+            modes.set(tenant, *d);
+        }
+        row.set("tenant_modal_drafters", modes);
+        rows.push(row);
+    }
+    // gate: the two pure tenant streams must settle on different modal
+    // drafters — full-information scoring separates opposite profiles
+    let modes = &runs[0].1.drafter_modes;
+    let (t0, t1) = (modes.get("t0"), modes.get("t1"));
+    assert!(
+        t0.is_some() && t1.is_some() && t0 != t1,
+        "tenants must converge to different modal drafters, got {modes:?}"
+    );
+    // gate: adaptive selection strictly beats the best fixed pin — each
+    // pin serves half the tenants with the wrong drafter's acceptance
+    let best_fixed = tok_s[1].max(tok_s[2]);
+    assert!(
+        tok_s[0] > best_fixed,
+        "bandit {:.0} tok/s must strictly beat the best fixed drafter {best_fixed:.0} tok/s",
+        tok_s[0]
+    );
+    println!(
+        "  bandit beats best fixed single drafter {:.2}x on the virtual clock",
+        tok_s[0] / best_fixed
+    );
+    report
+        .set("requests", n_reqs as usize)
+        .set("max_new", max_new)
+        .set("drafters", 2usize)
+        .set("tenants", 2usize)
+        .set("bandit_speedup_vs_best_fixed", tok_s[0] / best_fixed)
+        .set("rows", rows);
 }
 
 /// Paged KV arena on the busy-slot workload slot-affinity cannot serve

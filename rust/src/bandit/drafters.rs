@@ -1,0 +1,483 @@
+//! Drafter-selection layer — the outer bandit of the hierarchical
+//! controller (docs/ARCHITECTURE.md §17).
+//!
+//! Where the TapOut policy bandit picks a *stop policy* per round, this
+//! layer picks *which pooled draft model* proposes the round's tokens.
+//! Two properties make it cheaper than a stochastic bandit:
+//!
+//!   * **Full information** (Not-a-Bandit, PAPERS.md): the verify forward
+//!     commits target tokens regardless of which drafter proposed, so
+//!     every round can score *all* pooled drafters' hypothetical
+//!     proposals against the committed tokens
+//!     ([`LanguageModel::score_drafters`](crate::models::LanguageModel::score_drafters)).
+//!     Selection is therefore a deterministic argmax over posterior
+//!     means — no exploration bonus, **no RNG draw** — which is exactly
+//!     what keeps a pool of one byte-identical to the pre-pool engine.
+//!   * **Tenant keying with hierarchical priors**: state is kept per
+//!     tenant (the request's `tenant` field; `""` is the global tenant)
+//!     on top of a global aggregate. An unseen tenant's posterior *is*
+//!     the global posterior (the tenant term contributes nothing), so
+//!     cold tenants inherit fleet-wide knowledge and warm tenants drift
+//!     to their own modal drafter.
+//!
+//! **Conservation contract** (checked by the sim oracle and
+//! `engine_drafters.rs`): every [`SharedDrafters::begin`] is settled by
+//! exactly one [`SharedDrafters::settle_verify`] or
+//! [`SharedDrafters::settle_abort`], so
+//! `sessions == updates == Σ global plays == Σ per-tenant plays`
+//! at every quiescent point — the same ledger discipline the policy
+//! layer's `SharedController` is pinned on, generalized per layer.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Weight of the global posterior in the blended per-tenant mean: the
+/// global mean counts as this many pseudo-observations, so a tenant
+/// needs a few rounds of its own evidence before it can leave the prior.
+const PRIOR_W: f64 = 2.0;
+
+/// Full-information posterior for one (tenant or global) scope: per-arm
+/// play counts plus per-arm score sums over a shared observation count
+/// (every verify scores *all* arms, so `obs` is scalar).
+#[derive(Clone, Debug)]
+struct ArmStats {
+    /// rounds this scope actually routed through each drafter
+    plays: Vec<u64>,
+    /// full-information observations (verify settles; aborts don't score)
+    obs: u64,
+    /// Σ agreement-fraction per drafter over those observations
+    score_sum: Vec<f64>,
+}
+
+impl ArmStats {
+    fn new(n: usize) -> ArmStats {
+        ArmStats { plays: vec![0; n], obs: 0, score_sum: vec![0.0; n] }
+    }
+}
+
+/// Per-tenant state: posterior plus the last selection (switch counting).
+#[derive(Clone, Debug)]
+struct TenantState {
+    stats: ArmStats,
+    last: Option<usize>,
+}
+
+/// One tenant's readout for `/metrics` (`engine.drafters.tenants`).
+#[derive(Clone, Debug)]
+pub struct DrafterTenantSnapshot {
+    /// tenant key (`""` = the global/default tenant)
+    pub tenant: String,
+    /// rounds routed through each drafter
+    pub plays: Vec<u64>,
+    /// posterior mean agreement per drafter (0 observations ⇒ 1.0)
+    pub means: Vec<f64>,
+    /// full-information observations backing those means
+    pub obs: u64,
+}
+
+/// Shared drafter-selection controller — one per engine, used by every
+/// worker/stepper session concurrently (module docs for the contract).
+pub struct SharedDrafters {
+    /// pool size (1 keeps the whole layer inert)
+    n: usize,
+    /// selections handed out ([`SharedDrafters::begin`] calls)
+    sessions: AtomicU64,
+    /// settles received (verify + abort)
+    updates: AtomicU64,
+    /// times a tenant's selection changed between consecutive rounds
+    switches: AtomicU64,
+    /// bench/debug override: ≥ 0 forces that drafter (plays still ledger)
+    pin: AtomicI64,
+    state: Mutex<DrafterStateInner>,
+}
+
+struct DrafterStateInner {
+    global: ArmStats,
+    tenants: HashMap<String, TenantState>,
+}
+
+impl SharedDrafters {
+    /// Controller over a pool of `n.max(1)` drafters.
+    pub fn new(n: usize) -> Arc<SharedDrafters> {
+        let n = n.max(1);
+        Arc::new(SharedDrafters {
+            n,
+            sessions: AtomicU64::new(0),
+            updates: AtomicU64::new(0),
+            switches: AtomicU64::new(0),
+            pin: AtomicI64::new(-1),
+            state: Mutex::new(DrafterStateInner {
+                global: ArmStats::new(n),
+                tenants: HashMap::new(),
+            }),
+        })
+    }
+
+    /// Pool size.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Force every selection to drafter `d` (benchmark baselines); `None`
+    /// restores bandit selection. Settles are ledgered either way, so the
+    /// conservation invariant holds for pinned runs too.
+    pub fn set_pin(&self, d: Option<usize>) {
+        self.pin.store(d.map(|x| x as i64).unwrap_or(-1), Ordering::Relaxed);
+    }
+
+    /// Select the drafter for one round of `tenant`'s session: the
+    /// deterministic argmax (ties → lowest index, **no RNG**) of the
+    /// blended mean `(PRIOR_W·global_mean + tenant_sum) / (PRIOR_W +
+    /// tenant_obs)` — exactly the global posterior for an unseen tenant.
+    /// Counts one session; the caller owes exactly one settle.
+    pub fn begin(&self, tenant: &str) -> usize {
+        self.sessions.fetch_add(1, Ordering::Relaxed);
+        let mut st = self.state.lock().unwrap();
+        let pin = self.pin.load(Ordering::Relaxed);
+        let d = if pin >= 0 {
+            (pin as usize).min(self.n - 1)
+        } else if self.n == 1 {
+            0
+        } else {
+            let mut best = 0usize;
+            let mut best_v = f64::NEG_INFINITY;
+            for a in 0..self.n {
+                let g = &st.global;
+                let gmean = if g.obs == 0 { 1.0 } else { g.score_sum[a] / g.obs as f64 };
+                let (tobs, tsum) = st
+                    .tenants
+                    .get(tenant)
+                    .map(|t| (t.stats.obs, t.stats.score_sum[a]))
+                    .unwrap_or((0, 0.0));
+                let v = (PRIOR_W * gmean + tsum) / (PRIOR_W + tobs as f64);
+                if v > best_v {
+                    best = a;
+                    best_v = v;
+                }
+            }
+            best
+        };
+        let n = self.n;
+        let entry = st
+            .tenants
+            .entry(tenant.to_string())
+            .or_insert_with(|| TenantState { stats: ArmStats::new(n), last: None });
+        if let Some(last) = entry.last {
+            if last != d {
+                self.switches.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        entry.last = Some(d);
+        d
+    }
+
+    /// Settle one round that reached verify: ledger the played drafter
+    /// `d` and feed the full-information `scores` (one agreement fraction
+    /// per pooled drafter, from `score_drafters`) into **all** arms of
+    /// both the tenant posterior and the global aggregate.
+    pub fn settle_verify(&self, tenant: &str, d: usize, scores: &[f64]) {
+        self.updates.fetch_add(1, Ordering::Relaxed);
+        let n = self.n;
+        let d = d.min(n - 1);
+        let sc = |a: usize| scores.get(a).copied().unwrap_or(0.0).clamp(0.0, 1.0);
+        let mut st = self.state.lock().unwrap();
+        st.global.obs += 1;
+        st.global.plays[d] += 1;
+        for a in 0..n {
+            st.global.score_sum[a] += sc(a);
+        }
+        let t = st
+            .tenants
+            .entry(tenant.to_string())
+            .or_insert_with(|| TenantState { stats: ArmStats::new(n), last: None });
+        t.stats.obs += 1;
+        t.stats.plays[d] += 1;
+        for a in 0..n {
+            t.stats.score_sum[a] += sc(a);
+        }
+    }
+
+    /// Settle one round that aborted before verify (draft/verify fault):
+    /// the play is ledgered in both scopes — conservation — but no
+    /// posterior moves, since no tokens were committed to score against.
+    pub fn settle_abort(&self, tenant: &str, d: usize) {
+        self.updates.fetch_add(1, Ordering::Relaxed);
+        let n = self.n;
+        let d = d.min(n - 1);
+        let mut st = self.state.lock().unwrap();
+        st.global.plays[d] += 1;
+        let t = st
+            .tenants
+            .entry(tenant.to_string())
+            .or_insert_with(|| TenantState { stats: ArmStats::new(n), last: None });
+        t.stats.plays[d] += 1;
+    }
+
+    /// Selections handed out so far.
+    pub fn sessions(&self) -> u64 {
+        self.sessions.load(Ordering::Relaxed)
+    }
+
+    /// Settles received so far (verify + abort).
+    pub fn updates(&self) -> u64 {
+        self.updates.load(Ordering::Relaxed)
+    }
+
+    /// Times any tenant's selection changed between consecutive rounds.
+    pub fn switches(&self) -> u64 {
+        self.switches.load(Ordering::Relaxed)
+    }
+
+    /// Global per-drafter play counts (Σ equals [`updates`](Self::updates)
+    /// at quiescence).
+    pub fn plays(&self) -> Vec<u64> {
+        self.state.lock().unwrap().global.plays.clone()
+    }
+
+    /// Global posterior mean agreement per drafter (0 obs ⇒ 1.0).
+    pub fn means(&self) -> Vec<f64> {
+        let st = self.state.lock().unwrap();
+        let g = &st.global;
+        (0..self.n)
+            .map(|a| if g.obs == 0 { 1.0 } else { g.score_sum[a] / g.obs as f64 })
+            .collect()
+    }
+
+    /// Σ over tenants of Σ per-drafter plays (the oracle cross-checks
+    /// this against the global ledger).
+    pub fn tenant_plays_total(&self) -> u64 {
+        let st = self.state.lock().unwrap();
+        st.tenants.values().map(|t| t.stats.plays.iter().sum::<u64>()).sum()
+    }
+
+    /// Per-tenant readout, sorted by tenant key so `/metrics` renders
+    /// deterministically.
+    pub fn tenant_snapshot(&self) -> Vec<DrafterTenantSnapshot> {
+        let st = self.state.lock().unwrap();
+        let mut out: Vec<DrafterTenantSnapshot> = st
+            .tenants
+            .iter()
+            .map(|(k, t)| DrafterTenantSnapshot {
+                tenant: k.clone(),
+                plays: t.stats.plays.clone(),
+                means: (0..self.n)
+                    .map(|a| {
+                        if t.stats.obs == 0 {
+                            1.0
+                        } else {
+                            t.stats.score_sum[a] / t.stats.obs as f64
+                        }
+                    })
+                    .collect(),
+                obs: t.stats.obs,
+            })
+            .collect();
+        out.sort_by(|a, b| a.tenant.cmp(&b.tenant));
+        out
+    }
+
+    /// The drafter `tenant` has played most (ties → lowest index); `None`
+    /// for an unseen tenant. The bench gate asserts two tenants with
+    /// opposite acceptance profiles end up with different modes.
+    pub fn modal_drafter(&self, tenant: &str) -> Option<usize> {
+        let st = self.state.lock().unwrap();
+        st.tenants.get(tenant).map(|t| {
+            let mut best = 0;
+            for a in 1..self.n {
+                if t.stats.plays[a] > t.stats.plays[best] {
+                    best = a;
+                }
+            }
+            best
+        })
+    }
+}
+
+/// Per-session handle binding a [`SharedDrafters`] to one request's
+/// (tenant, seed, category): the spec session / stepper calls
+/// [`begin_round`](DrafterHook::begin_round) before drafting and exactly
+/// one settle per round after verify or abort.
+pub struct DrafterHook {
+    shared: Arc<SharedDrafters>,
+    tenant: String,
+    seed: u64,
+    category: String,
+    drafter: usize,
+}
+
+impl DrafterHook {
+    /// Hook for one request (`seed`/`category` key the scenario for
+    /// `score_drafters`; `tenant` keys the posterior).
+    pub fn new(shared: Arc<SharedDrafters>, tenant: String, seed: u64, category: String) -> DrafterHook {
+        DrafterHook { shared, tenant, seed, category, drafter: 0 }
+    }
+
+    /// Select this round's drafter (counts one session; owe one settle).
+    pub fn begin_round(&mut self) -> usize {
+        self.drafter = self.shared.begin(&self.tenant);
+        self.drafter
+    }
+
+    /// The drafter selected by the last [`begin_round`](Self::begin_round).
+    pub fn drafter(&self) -> usize {
+        self.drafter
+    }
+
+    /// Tenant key this hook settles under.
+    pub fn tenant(&self) -> &str {
+        &self.tenant
+    }
+
+    /// Scenario seed for `score_drafters`.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Scenario category for `score_drafters`.
+    pub fn category(&self) -> &str {
+        &self.category
+    }
+
+    /// Settle the round with full-information `scores` (verify reached).
+    pub fn settle_verify(&self, scores: &[f64]) {
+        self.shared.settle_verify(&self.tenant, self.drafter, scores);
+    }
+
+    /// Settle the round as aborted (fault before commit).
+    pub fn settle_abort(&self) {
+        self.shared.settle_abort(&self.tenant, self.drafter);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_of_one_always_selects_zero_and_conserves() {
+        let s = SharedDrafters::new(1);
+        for i in 0..10 {
+            let d = s.begin("");
+            assert_eq!(d, 0);
+            if i % 3 == 0 {
+                s.settle_abort("", d);
+            } else {
+                s.settle_verify("", d, &[0.5]);
+            }
+        }
+        assert_eq!(s.sessions(), 10);
+        assert_eq!(s.updates(), 10);
+        assert_eq!(s.plays().iter().sum::<u64>(), 10);
+        assert_eq!(s.tenant_plays_total(), 10);
+    }
+
+    #[test]
+    fn tenants_with_opposite_scores_diverge_and_unseen_falls_back() {
+        let s = SharedDrafters::new(2);
+        // tenant "code" sees drafter 1 agree, tenant "chat" sees drafter 0
+        for _ in 0..30 {
+            let d = s.begin("code");
+            s.settle_verify("code", d, &[0.1, 0.9]);
+            let d = s.begin("chat");
+            s.settle_verify("chat", d, &[0.9, 0.1]);
+        }
+        assert_eq!(s.modal_drafter("code"), Some(1), "code tenant converges to drafter 1");
+        assert_eq!(s.modal_drafter("chat"), Some(0), "chat tenant converges to drafter 0");
+        // global aggregate is balanced (0.5 each), so an unseen tenant's
+        // first pick is the global argmax — deterministic, lowest index
+        // on ties, and critically identical across runs (no RNG)
+        let first = s.begin("fresh");
+        s.settle_abort("fresh", first);
+        let s2_first = {
+            let s2 = SharedDrafters::new(2);
+            for _ in 0..30 {
+                let d = s2.begin("code");
+                s2.settle_verify("code", d, &[0.1, 0.9]);
+                let d = s2.begin("chat");
+                s2.settle_verify("chat", d, &[0.9, 0.1]);
+            }
+            let f = s2.begin("fresh");
+            s2.settle_abort("fresh", f);
+            f
+        };
+        assert_eq!(first, s2_first, "selection is a pure function of observed history");
+    }
+
+    #[test]
+    fn conservation_holds_across_tenants_and_aborts() {
+        let s = SharedDrafters::new(3);
+        let tenants = ["", "a", "b"];
+        let mut rounds = 0u64;
+        for i in 0..60u64 {
+            let t = tenants[(i % 3) as usize];
+            let d = s.begin(t);
+            if i % 5 == 0 {
+                s.settle_abort(t, d);
+            } else {
+                s.settle_verify(t, d, &[0.2, 0.5, 0.8]);
+            }
+            rounds += 1;
+        }
+        assert_eq!(s.sessions(), rounds);
+        assert_eq!(s.updates(), rounds);
+        assert_eq!(s.plays().iter().sum::<u64>(), rounds, "global ledger conserves");
+        assert_eq!(s.tenant_plays_total(), rounds, "per-tenant ledgers sum to global");
+        let snap = s.tenant_snapshot();
+        assert_eq!(snap.len(), 3);
+        assert!(snap.windows(2).all(|w| w[0].tenant < w[1].tenant), "sorted readout");
+    }
+
+    #[test]
+    fn pin_overrides_selection_but_still_ledgers() {
+        let s = SharedDrafters::new(2);
+        s.set_pin(Some(1));
+        for _ in 0..5 {
+            let d = s.begin("t");
+            assert_eq!(d, 1);
+            s.settle_verify("t", d, &[0.9, 0.1]);
+        }
+        s.set_pin(None);
+        // with the pin lifted the posterior (which saw drafter 0 agree
+        // more) takes over
+        assert_eq!(s.begin("t"), 0);
+        s.settle_abort("t", 0);
+        assert_eq!(s.sessions(), s.updates());
+        assert_eq!(s.plays(), vec![1, 5]);
+    }
+
+    #[test]
+    fn switches_count_selection_changes() {
+        let s = SharedDrafters::new(2);
+        s.set_pin(Some(0));
+        let d = s.begin("t");
+        s.settle_verify("t", d, &[0.0, 1.0]);
+        assert_eq!(s.switches(), 0, "first selection is not a switch");
+        s.set_pin(Some(1));
+        let d = s.begin("t");
+        s.settle_verify("t", d, &[0.0, 1.0]);
+        assert_eq!(s.switches(), 1);
+        let d = s.begin("t");
+        s.settle_verify("t", d, &[0.0, 1.0]);
+        assert_eq!(s.switches(), 1, "repeat selection is not a switch");
+    }
+
+    #[test]
+    fn hook_routes_settles_to_its_tenant() {
+        let s = SharedDrafters::new(2);
+        let mut h = DrafterHook::new(s.clone(), "code".into(), 7, "coding".into());
+        assert_eq!(h.tenant(), "code");
+        assert_eq!(h.seed(), 7);
+        assert_eq!(h.category(), "coding");
+        let d = h.begin_round();
+        assert_eq!(d, h.drafter());
+        h.settle_verify(&[0.1, 0.9]);
+        h.begin_round();
+        h.settle_abort();
+        let snap = s.tenant_snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].tenant, "code");
+        assert_eq!(snap[0].plays.iter().sum::<u64>(), 2);
+        assert_eq!(snap[0].obs, 1, "abort does not move the posterior");
+    }
+}

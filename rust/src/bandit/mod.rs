@@ -3,12 +3,14 @@
 //! arm-policy pool.
 
 pub mod controller;
+pub mod drafters;
 pub mod shared;
 pub mod thompson;
 pub mod ucb1;
 pub mod ucb_tuned;
 
 pub use controller::{Reward, SeqBandit, TokenBandit};
+pub use drafters::{DrafterHook, DrafterTenantSnapshot, SharedDrafters};
 pub use shared::{SessionController, SharedController};
 pub use thompson::{BetaTs, GaussianTs};
 pub use ucb1::Ucb1;

@@ -38,6 +38,7 @@
 //! shift is invisible to the learner; play-count conservation across
 //! batch windows is pinned by `rust/tests/engine_batched.rs`.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -51,10 +52,55 @@ use crate::util::Rng;
 
 use super::{make_bandit, BoxedBandit, Reward};
 
-/// Sequence-granularity shared state: one bandit over the arm pool.
+/// Sequence-granularity shared state: the global bandit over the arm
+/// pool, plus lazily created per-`"{tenant}#{drafter}"` bandits for
+/// tenant-keyed sessions (docs/ARCHITECTURE.md §17). The global/default
+/// context (`tenant == "", drafter == 0`) uses exactly the pre-pool code
+/// path — same bandit, same single RNG draw — so default traffic stays
+/// byte-identical to main.
 struct SeqShared {
     bandit: Mutex<BoxedBandit>,
     reward: Reward,
+    kind: String,
+    n_arms: usize,
+    tenants: Mutex<HashMap<String, BoxedBandit>>,
+}
+
+impl SeqShared {
+    /// Select from the `"{tenant}#{drafter}"` bandit, creating it on
+    /// first sight seeded with one pseudo-observation per arm at the
+    /// global posterior mean — the hierarchical prior: an unseen tenant's
+    /// first selection is the global best arm, and its own evidence takes
+    /// over from there. Lock order is tenants → global everywhere.
+    fn select_keyed(&self, tenant: &str, drafter: usize, rng: &mut Rng) -> usize {
+        let key = format!("{tenant}#{drafter}");
+        let mut tenants = self.tenants.lock().unwrap();
+        let b = tenants.entry(key).or_insert_with(|| {
+            let mut b = make_bandit(&self.kind, self.n_arms);
+            let g = self.bandit.lock().unwrap();
+            if g.counts().iter().sum::<u64>() > 0 {
+                for (a, v) in g.values().iter().enumerate() {
+                    b.update(a, v.clamp(0.0, 1.0));
+                }
+            }
+            b
+        });
+        b.select(rng)
+    }
+
+    /// Land a keyed session's reward in **both** the keyed bandit and the
+    /// global aggregate — the global ledger keeps Σ counts == updates for
+    /// the conservation oracle, and keeps the prior for future tenants
+    /// current.
+    fn update_keyed(&self, tenant: &str, drafter: usize, arm: usize, r: f64) {
+        let key = format!("{tenant}#{drafter}");
+        let mut tenants = self.tenants.lock().unwrap();
+        let b = tenants
+            .entry(key)
+            .or_insert_with(|| make_bandit(&self.kind, self.n_arms));
+        b.update(arm, r);
+        self.bandit.lock().unwrap().update(arm, r);
+    }
 }
 
 /// Token-granularity shared state: an independent bandit per draft
@@ -110,6 +156,9 @@ impl SharedController {
                 let shared = SeqShared {
                     bandit: Mutex::new(make_bandit(kind, n)),
                     reward: *reward,
+                    kind: kind.clone(),
+                    n_arms: n,
+                    tenants: Mutex::new(HashMap::new()),
                 };
                 (Some(Arc::new(shared)), None)
             }
@@ -156,6 +205,8 @@ impl SharedController {
             gamma_max: self.gamma_max,
             sessions: self.sessions.clone(),
             updates: self.updates.clone(),
+            tenant: String::new(),
+            drafter: 0,
         })
     }
 
@@ -216,6 +267,20 @@ impl SharedController {
             _ => None,
         }
     }
+
+    /// Per-key policy-bandit readout for `/metrics` (`"{tenant}#{drafter}"`
+    /// → per-arm counts/values), sorted for deterministic rendering.
+    /// Empty for token/stateless methods or before any keyed session ran;
+    /// the legacy flat fields stay the global-tenant view
+    /// (docs/OPERATIONS.md).
+    pub fn tenant_arm_snapshot(&self) -> Vec<(String, Vec<u64>, Vec<f64>)> {
+        let Some(seq) = &self.seq else { return Vec::new() };
+        let tenants = seq.tenants.lock().unwrap();
+        let mut out: Vec<(String, Vec<u64>, Vec<f64>)> =
+            tenants.iter().map(|(k, b)| (k.clone(), b.counts(), b.values())).collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
 }
 
 enum Mode {
@@ -236,6 +301,10 @@ pub struct SessionController {
     gamma_max: usize,
     sessions: Arc<AtomicU64>,
     updates: Arc<AtomicU64>,
+    /// tenant key of the request being decoded (`""` = global tenant)
+    tenant: String,
+    /// pooled drafter the current round routes through (0 = pool head)
+    drafter: usize,
 }
 
 impl DecodeControl for SessionController {
@@ -244,8 +313,15 @@ impl DecodeControl for SessionController {
             Mode::Local(c) => c.session_start(rng),
             Mode::Seq { shared, arms, current } => {
                 // atomic select: the chosen arm is recorded locally, so a
-                // concurrent session can never redirect this one's reward
-                *current = shared.bandit.lock().unwrap().select(rng);
+                // concurrent session can never redirect this one's reward.
+                // The global/default context takes exactly the pre-pool
+                // path (same bandit, same single RNG draw); keyed contexts
+                // select from their own posterior seeded off the global.
+                *current = if self.tenant.is_empty() && self.drafter == 0 {
+                    shared.bandit.lock().unwrap().select(rng)
+                } else {
+                    shared.select_keyed(&self.tenant, self.drafter, rng)
+                };
                 arms[*current].on_session_start();
             }
             Mode::Token { arms, chosen, .. } => {
@@ -276,7 +352,11 @@ impl DecodeControl for SessionController {
             Mode::Local(c) => c.on_verify(accepted, drafted),
             Mode::Seq { shared, arms, current } => {
                 let r = shared.reward.compute(accepted, drafted, self.gamma_max);
-                shared.bandit.lock().unwrap().update(*current, r);
+                if self.tenant.is_empty() && self.drafter == 0 {
+                    shared.bandit.lock().unwrap().update(*current, r);
+                } else {
+                    shared.update_keyed(&self.tenant, self.drafter, *current, r);
+                }
                 // only the arm that drove the session sees the outcome
                 arms[*current].on_verify(accepted, drafted);
             }
@@ -303,7 +383,11 @@ impl DecodeControl for SessionController {
                 // the aborted round accepted nothing: a zero reward keeps
                 // Σ arm counts == updates == sessions conserved under
                 // faults, and UCB/TS remain sound over bounded rewards
-                shared.bandit.lock().unwrap().update(*current, 0.0);
+                if self.tenant.is_empty() && self.drafter == 0 {
+                    shared.bandit.lock().unwrap().update(*current, 0.0);
+                } else {
+                    shared.update_keyed(&self.tenant, self.drafter, *current, 0.0);
+                }
             }
             Mode::Token { shared, chosen, .. } => {
                 let mut bandits = shared.bandits.lock().unwrap();
@@ -341,6 +425,18 @@ impl DecodeControl for SessionController {
             Mode::Seq { current, .. } => Some(*current),
             Mode::Token { .. } => None,
         }
+    }
+
+    fn set_context(&mut self, tenant: &str, drafter: usize) {
+        // Token granularity stays global-only: its per-position ladder is
+        // already high-variance, and splitting it per tenant would starve
+        // every cell — the drafter layer above still adapts per tenant.
+        // Seq sessions route through the keyed posterior from the next
+        // session_start on.
+        if tenant != self.tenant {
+            self.tenant = tenant.to_string();
+        }
+        self.drafter = drafter;
     }
 }
 
@@ -471,6 +567,86 @@ mod tests {
         }
         assert_eq!(ctrl.arm_counts().unwrap().iter().sum::<u64>(), plays);
         assert_eq!(ctrl.sessions(), ctrl.updates());
+    }
+
+    #[test]
+    fn keyed_sessions_conserve_the_global_ledger_and_diverge() {
+        // two tenants whose rewarding arms differ: each keyed posterior
+        // concentrates on its own arm while the global ledger still
+        // absorbs every update (Σ global counts == updates == sessions)
+        let ctrl = SharedController::new(&spec("seq-ucb1"), 128);
+        let mut session = ctrl.session().unwrap();
+        let mut rng = Rng::new(11);
+        let rounds = 400;
+        for i in 0..rounds {
+            let (tenant, good_arm) = if i % 2 == 0 { ("code", 1) } else { ("chat", 2) };
+            session.set_context(tenant, 0);
+            session.session_start(&mut rng);
+            let (acc, dr) =
+                if session.current_arm() == Some(good_arm) { (5, 6) } else { (1, 6) };
+            if i % 17 == 0 {
+                session.on_abort();
+            } else {
+                session.on_verify(acc, dr);
+            }
+        }
+        assert_eq!(ctrl.sessions(), rounds);
+        assert_eq!(ctrl.updates(), rounds);
+        assert_eq!(
+            ctrl.arm_counts().unwrap().iter().sum::<u64>(),
+            rounds,
+            "keyed updates still land in the global ledger"
+        );
+        let snap = ctrl.tenant_arm_snapshot();
+        let keys: Vec<&str> = snap.iter().map(|(k, _, _)| k.as_str()).collect();
+        assert_eq!(keys, vec!["chat#0", "code#0"], "sorted keyed readout");
+        let code = &snap[1];
+        let chat = &snap[0];
+        let modal = |c: &[u64]| c.iter().enumerate().max_by_key(|(_, &n)| n).unwrap().0;
+        assert_eq!(modal(&code.1), 1, "code tenant concentrates on arm 1: {:?}", code.1);
+        assert_eq!(modal(&chat.1), 2, "chat tenant concentrates on arm 2: {:?}", chat.1);
+    }
+
+    #[test]
+    fn unseen_tenant_inherits_the_global_posterior() {
+        // warm up the global tenant on arm 1, then a fresh tenant's very
+        // first selection must already be arm 1 (hierarchical prior)
+        let ctrl = SharedController::new(&spec("seq-ucb1"), 128);
+        let mut session = ctrl.session().unwrap();
+        let mut rng = Rng::new(4);
+        for _ in 0..300 {
+            session.session_start(&mut rng);
+            let (acc, dr) = if session.current_arm() == Some(1) { (6, 6) } else { (0, 6) };
+            session.on_verify(acc, dr);
+        }
+        session.set_context("fresh-tenant", 0);
+        session.session_start(&mut rng);
+        assert_eq!(session.current_arm(), Some(1), "cold tenant starts at the global best");
+        session.on_verify(6, 6);
+    }
+
+    #[test]
+    fn default_context_is_the_legacy_global_path() {
+        // set_context("", 0) must be indistinguishable from never calling
+        // it: same bandit, same RNG draws, so default traffic replays
+        // byte-identically to the pre-pool engine
+        let run = |touch: bool| -> Vec<Option<usize>> {
+            let ctrl = SharedController::new(&spec("seq-ucb1"), 128);
+            let mut session = ctrl.session().unwrap();
+            let mut rng = Rng::new(21);
+            (0..50)
+                .map(|_| {
+                    if touch {
+                        session.set_context("", 0);
+                    }
+                    session.session_start(&mut rng);
+                    let arm = session.current_arm();
+                    session.on_verify(3, 6);
+                    arm
+                })
+                .collect()
+        };
+        assert_eq!(run(false), run(true));
     }
 
     #[test]

@@ -441,6 +441,9 @@ impl LanguageModel for BatchedTarget {
                 category: self.category.clone(),
                 tokens: tokens.to_vec(),
                 start,
+                // verification rows always run on the target model,
+                // which never pools drafters
+                drafter: 0,
             },
             self.cancel.clone(),
         )?;

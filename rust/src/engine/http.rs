@@ -298,7 +298,16 @@ pub(crate) fn route(engine: &Engine, method: &str, path: &str, io: Option<&IoSta
 
 /// Parse a /generate body into a ready-to-submit request plus the
 /// client's streaming preference.
-pub(crate) fn parse_generate(body: &str) -> std::result::Result<(Request, bool), (u16, Json)> {
+///
+/// `header_tenant` is the `X-Tapout-Tenant` request header, the
+/// out-of-band way to key the drafter/policy bandits per tenant
+/// (docs/OPERATIONS.md). A `"tenant"` field in the JSON body wins over
+/// the header; absent both, the request decodes under the global tenant
+/// (the empty string — the exact pre-tenant path).
+pub(crate) fn parse_generate(
+    body: &str,
+    header_tenant: Option<&str>,
+) -> std::result::Result<(Request, bool), (u16, Json)> {
     let j = Json::parse(body).map_err(|e| {
         let mut o = Json::obj();
         o.set("error", format!("bad json: {e}"));
@@ -312,6 +321,14 @@ pub(crate) fn parse_generate(body: &str) -> std::result::Result<(Request, bool),
     }
     let max_new = j.get("max_new").and_then(|x| x.as_usize()).unwrap_or(96);
     let mut req = Request::new(0, prompt, max_new.min(256));
+    let tenant = j
+        .get("tenant")
+        .and_then(|x| x.as_str())
+        .or(header_tenant)
+        .unwrap_or("");
+    if !tenant.is_empty() {
+        req = req.with_tenant(tenant);
+    }
     let deadline_ms = j.get("deadline_ms").and_then(|x| x.as_usize()).filter(|&ms| ms > 0);
     if let Some(ms) = deadline_ms {
         req = req.with_deadline_ms(ms as u64);
@@ -403,8 +420,8 @@ impl Gateway for EngineGateway {
         (code, j.render())
     }
 
-    fn generate(&self, body: &str) -> GenerateStart {
-        match parse_generate(body) {
+    fn generate(&self, body: &str, tenant: Option<&str>) -> GenerateStart {
+        match parse_generate(body, tenant) {
             Err((code, j)) => GenerateStart::Immediate { code, body: j.render() },
             Ok((req, stream_mode)) => {
                 let cancel = req.cancel_flag();
@@ -605,6 +622,7 @@ fn handle_conn(
     let mut content_length: Option<usize> = None;
     let mut bad_length: Option<String> = None;
     let mut chunked = false;
+    let mut header_tenant: Option<String> = None;
     loop {
         let mut h = String::new();
         if !arm_deadline(&stream, deadline) {
@@ -630,6 +648,8 @@ fn handle_conn(
                 }
             } else if name.eq_ignore_ascii_case("transfer-encoding") {
                 chunked = value.to_ascii_lowercase().contains("chunked");
+            } else if name.eq_ignore_ascii_case("x-tapout-tenant") {
+                header_tenant = Some(value.to_string());
             }
         }
     }
@@ -690,7 +710,7 @@ fn handle_conn(
 
     // streaming generate owns the raw stream (chunked SSE writes)
     if method == "POST" && path == "/generate" {
-        match parse_generate(&body) {
+        match parse_generate(&body, header_tenant.as_deref()) {
             Ok((req, stream_mode)) => {
                 return if stream_mode {
                     stream_generate(stream, engine, req, stats, cfg)

@@ -110,8 +110,10 @@ pub enum GenerateStart {
 pub trait Gateway: Send + Sync {
     /// Handle a non-generate request; returns (status, rendered body).
     fn route(&self, method: &str, path: &str, body: &str) -> (u16, String);
-    /// Start a generate request from its raw body.
-    fn generate(&self, body: &str) -> GenerateStart;
+    /// Start a generate request from its raw body. `tenant` is the
+    /// `X-Tapout-Tenant` request header when present — a `"tenant"`
+    /// field inside the body wins over it (docs/OPERATIONS.md).
+    fn generate(&self, body: &str, tenant: Option<&str>) -> GenerateStart;
     /// Does this (method, path) take the generate path (and its
     /// body-framing contract: 501/400/411 before the body arrives)?
     fn is_generate(&self, method: &str, path: &str) -> bool {
@@ -398,11 +400,11 @@ fn pump(conn: &mut Conn, gw: &dyn Gateway, cfg: &ReactorConfig, stats: &IoStats)
                         enqueue_plain(&mut conn.out, code, &body);
                         next_phase = Some(Phase::Closing);
                     }
-                    ParseStep::Ready { method, path, body } => {
+                    ParseStep::Ready { method, path, body, tenant } => {
                         stats.requests.fetch_add(1, Ordering::Relaxed);
                         conn.buf.clear();
                         if gw.is_generate(&method, &path) {
-                            match gw.generate(&body) {
+                            match gw.generate(&body, tenant.as_deref()) {
                                 GenerateStart::Immediate { code, body } => {
                                     enqueue_plain(&mut conn.out, code, &body);
                                     next_phase = Some(Phase::Closing);
@@ -550,7 +552,7 @@ fn enqueue_plain(out: &mut VecDeque<u8>, code: u16, body: &str) {
 
 enum ParseStep {
     Incomplete,
-    Ready { method: String, path: String, body: String },
+    Ready { method: String, path: String, body: String, tenant: Option<String> },
     Respond { code: u16, body: String },
 }
 
@@ -589,6 +591,7 @@ fn try_parse(buf: &[u8], gw: &dyn Gateway) -> ParseStep {
     let mut content_length: Option<usize> = None;
     let mut bad_length: Option<String> = None;
     let mut chunked = false;
+    let mut tenant: Option<String> = None;
     for h in lines {
         let h = h.trim();
         if let Some((name, value)) = h.split_once(':') {
@@ -600,6 +603,8 @@ fn try_parse(buf: &[u8], gw: &dyn Gateway) -> ParseStep {
                 }
             } else if name.eq_ignore_ascii_case("transfer-encoding") {
                 chunked = value.to_ascii_lowercase().contains("chunked");
+            } else if name.eq_ignore_ascii_case("x-tapout-tenant") {
+                tenant = Some(value.to_string());
             }
         }
     }
@@ -626,7 +631,7 @@ fn try_parse(buf: &[u8], gw: &dyn Gateway) -> ParseStep {
         return ParseStep::Incomplete;
     }
     let body = String::from_utf8_lossy(&buf[body_start..body_start + len]).to_string();
-    ParseStep::Ready { method, path, body }
+    ParseStep::Ready { method, path, body, tenant }
 }
 
 #[cfg(unix)]

@@ -82,6 +82,11 @@ pub struct Request {
     pub prompt: Vec<u32>,
     /// workload category ("coding", "qa", ...; drives the simulator)
     pub category: String,
+    /// tenant/domain key for the hierarchical bandit layers
+    /// (docs/ARCHITECTURE.md §17); `""` is the global/default tenant.
+    /// Never part of [`Request::scenario_seed`] — the tenant changes what
+    /// the bandits *learn*, never what a prompt *decodes to*.
+    pub tenant: String,
     /// decode budget
     pub max_new: usize,
     /// submission timestamp (queue/TTFT base)
@@ -109,6 +114,7 @@ impl Request {
             prompt_text: prompt_text.into(),
             prompt: Vec::new(),
             category: String::new(),
+            tenant: String::new(),
             max_new,
             arrival: Instant::now(),
             deadline: None,
@@ -120,6 +126,12 @@ impl Request {
     /// Set an absolute deadline `ms` milliseconds after arrival.
     pub fn with_deadline_ms(mut self, ms: u64) -> Request {
         self.deadline = Some(self.arrival + Duration::from_millis(ms));
+        self
+    }
+
+    /// Key this request to a tenant (`""` keeps the global tenant).
+    pub fn with_tenant(mut self, tenant: impl Into<String>) -> Request {
+        self.tenant = tenant.into();
         self
     }
 
@@ -356,6 +368,15 @@ mod tests {
         assert!(req.cancel.is_cancelled());
         let clone = req.clone();
         assert!(clone.cancel.is_cancelled(), "clones share the flag");
+    }
+
+    #[test]
+    fn tenant_never_changes_the_scenario_seed() {
+        let a = Request::new(1, "same prompt", 8);
+        let b = Request::new(2, "same prompt", 8).with_tenant("code");
+        assert_eq!(a.scenario_seed(), b.scenario_seed());
+        assert_eq!(a.tenant, "");
+        assert_eq!(b.tenant, "code");
     }
 
     #[test]

@@ -443,12 +443,25 @@ impl Gateway for RouterGateway {
         }
     }
 
-    fn generate(&self, body: &str) -> GenerateStart {
+    fn generate(&self, body: &str, tenant: Option<&str>) -> GenerateStart {
         // identical client-error contract to a replica's own front end
-        if let Err((code, j)) = http::parse_generate(body) {
+        if let Err((code, j)) = http::parse_generate(body, tenant) {
             return GenerateStart::Immediate { code, body: j.render() };
         }
-        let j = Json::parse(body).unwrap_or(Json::Null);
+        let mut j = Json::parse(body).unwrap_or(Json::Null);
+        // a header-borne tenant must survive the hop to the replica: the
+        // relayed request carries only the body, so fold it in as the
+        // `"tenant"` field (an existing body field wins, same precedence
+        // as parse_generate)
+        let forwarded;
+        let body = match tenant {
+            Some(t) if !t.is_empty() && j.get("tenant").and_then(|x| x.as_str()).is_none() => {
+                j.set("tenant", t);
+                forwarded = j.render();
+                forwarded.as_str()
+            }
+            _ => body,
+        };
         let prompt = j.get("prompt").and_then(|x| x.as_str()).unwrap_or("");
         let vs = views(&self.states);
         let Some(d) = self.core.route(prompt, &vs) else {

@@ -52,7 +52,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::bandit::{SessionController, SharedController};
+use crate::bandit::{DrafterHook, SessionController, SharedController, SharedDrafters};
 use crate::models::{
     sim_decode, sim_encode, FaultyModel, LanguageModel, Manifest, ModelAssets, PjrtBatchVerifier,
     Scenario, SimModel,
@@ -201,6 +201,14 @@ pub struct EngineConfig {
     /// `models::FaultyModel` with decorrelated fault streams. Default:
     /// inactive (zero rates) — production configs are untouched.
     pub faults: crate::models::FaultPlan,
+    /// drafter pool size (docs/ARCHITECTURE.md §17, CLI `serve
+    /// --drafters`): the engine hosts this many pooled draft models per
+    /// target and an online full-information bandit selects one per
+    /// round, keyed by the request's tenant. 1 (the default) keeps the
+    /// selection layer inert and every output byte-identical to the
+    /// pre-pool engine. Currently sim-backend only for > 1 — the PJRT
+    /// path loads exactly one draft executor per pair.
+    pub drafters: usize,
 }
 
 impl Default for EngineConfig {
@@ -224,6 +232,7 @@ impl Default for EngineConfig {
             page_sharing: true,
             pipeline: false,
             faults: crate::models::FaultPlan::default(),
+            drafters: 1,
         }
     }
 }
@@ -326,6 +335,11 @@ pub(crate) struct EngineShared {
     /// the dispatcher once warmup finishes so XLA compile time never
     /// deflates the reported throughput
     pub(crate) started: Mutex<Instant>,
+    /// drafter-pool selection layer (docs/ARCHITECTURE.md §17): one
+    /// engine-wide ledger shared by every decode driver; pool-of-one
+    /// engines carry it too (it always selects 0) so the conservation
+    /// accounting is mode-independent
+    pub(crate) drafters: Arc<SharedDrafters>,
 }
 
 /// The serving engine handle: submit requests, read metrics, shut down.
@@ -363,6 +377,13 @@ impl Engine {
             EngineMode::Continuous => config.slots,
         };
         let continuous = config.mode == EngineMode::Continuous;
+        config.drafters = config.drafters.max(1);
+        if config.drafters > 1 && matches!(config.backend, BackendKind::Pjrt) {
+            // per-drafter PJRT executors are a documented follow-up
+            // (docs/ARCHITECTURE.md §17); the manifest already validates
+            // `pools`, but the runtime loads one draft executor per pair
+            anyhow::bail!("--drafters > 1 requires the sim backend");
+        }
         let n_workers = config.workers;
         let n_slots = config.slots;
         let metrics = Arc::new(Mutex::new(EngineMetrics::default()));
@@ -403,11 +424,19 @@ impl Engine {
             }
             BackendKind::Sim { quality, rel_cost } => {
                 let sc = Scenario::new(0, "qa");
+                let n_drafters = config.drafters;
+                // drafter pools (docs/ARCHITECTURE.md §17): every draft
+                // model carries the same pool so round-level selection is
+                // a pure index switch; n_drafters == 1 builds the exact
+                // pre-pool models (byte-identical engine outputs)
+                let mk_draft = || -> Box<dyn LanguageModel> {
+                    let m = SimModel::draft(sc, quality, rel_cost);
+                    if n_drafters > 1 { Box::new(m.with_drafters(n_drafters)) } else { Box::new(m) }
+                };
                 // the sim models are stateless per position, so one
                 // verifier/drafter serves every sequence's batch items
                 let mut verifier: Box<dyn LanguageModel> = Box::new(SimModel::target(sc));
-                let mut drafter: Box<dyn LanguageModel> =
-                    Box::new(SimModel::draft(sc, quality, rel_cost));
+                let mut drafter: Box<dyn LanguageModel> = mk_draft();
                 let pool = if config.faults.is_active() {
                     // fault injection (docs/TESTING.md): wrap every model
                     // that crosses the LanguageModel boundary, each with a
@@ -415,10 +444,7 @@ impl Engine {
                     let pairs = (0..n_slots)
                         .map(|i| {
                             (
-                                FaultyModel::wrap(
-                                    Box::new(SimModel::draft(sc, quality, rel_cost)),
-                                    config.faults.fork(2 * i as u64),
-                                ),
+                                FaultyModel::wrap(mk_draft(), config.faults.fork(2 * i as u64)),
                                 FaultyModel::wrap(
                                     Box::new(SimModel::target(sc)),
                                     config.faults.fork(2 * i as u64 + 1),
@@ -428,6 +454,13 @@ impl Engine {
                         .collect();
                     verifier = FaultyModel::wrap(verifier, config.faults.fork(0x7E51F));
                     drafter = FaultyModel::wrap(drafter, config.faults.fork(0xD2AF7));
+                    SlotPool::from_pairs(pairs)
+                } else if n_drafters > 1 {
+                    // SlotPool::sim builds single-drafter models; pooled
+                    // slots are assembled pairwise like the fault path
+                    let pairs = (0..n_slots)
+                        .map(|_| (mk_draft(), Box::new(SimModel::target(sc)) as Box<dyn LanguageModel>))
+                        .collect();
                     SlotPool::from_pairs(pairs)
                 } else {
                     SlotPool::sim(quality, rel_cost, n_slots)
@@ -470,6 +503,7 @@ impl Engine {
             max_queue: config.max_queue,
             batcher: batcher.as_ref().map(|b| b.handle()),
             started: Mutex::new(Instant::now()),
+            drafters: SharedDrafters::new(config.drafters),
         });
 
         // mint every per-thread (Workers) / per-slot (Continuous) session
@@ -634,6 +668,14 @@ impl Engine {
         self.controller.arm_values()
     }
 
+    /// Drafter-pool selection ledger (docs/ARCHITECTURE.md §17): the
+    /// engine-wide outer-layer bandit state. Always present — pool-of-one
+    /// engines report n == 1 with every play on drafter 0. Tests and the
+    /// bench harness also use this handle to pin a drafter.
+    pub fn drafters(&self) -> Arc<SharedDrafters> {
+        self.shared.drafters.clone()
+    }
+
     /// Combined serving report: request samples + worker/queue stats +
     /// shared-bandit state.
     pub fn metrics_json(&self) -> Json {
@@ -678,7 +720,46 @@ impl Engine {
             if let Some(names) = self.controller.arm_names() {
                 b.set("arm_names", names.iter().map(|n| Json::from(n.as_str())).collect::<Vec<Json>>());
             }
+            // per-tenant policy posteriors (docs/OPERATIONS.md): nested
+            // under the legacy flat fields, which keep reporting the
+            // global-tenant view unchanged
+            let tenants = self.controller.tenant_arm_snapshot();
+            if !tenants.is_empty() {
+                let mut tj = Json::obj();
+                for (key, counts, values) in tenants {
+                    let mut e = Json::obj();
+                    e.set("arm_counts", counts.iter().map(|&c| c as f64).collect::<Vec<f64>>())
+                        .set("arm_values", values);
+                    tj.set(&key, e);
+                }
+                b.set("tenants", tj);
+            }
             o.set("bandit", b);
+        }
+        {
+            // drafter-layer gauges (docs/OPERATIONS.md `engine.drafters`):
+            // outer-bandit ledger, always present
+            let d = &self.shared.drafters;
+            let mut dj = Json::obj();
+            dj.set("n", d.n())
+                .set("sessions", d.sessions() as usize)
+                .set("updates", d.updates() as usize)
+                .set("switches", d.switches() as usize)
+                .set("plays", d.plays().iter().map(|&c| c as f64).collect::<Vec<f64>>())
+                .set("means", d.means());
+            let mut tj = Json::obj();
+            for t in d.tenant_snapshot() {
+                let mut e = Json::obj();
+                e.set("plays", t.plays.iter().map(|&c| c as f64).collect::<Vec<f64>>())
+                    .set("means", t.means)
+                    .set("obs", t.obs as usize);
+                // the global tenant's key is the empty string; render it
+                // under a printable name
+                let key = if t.tenant.is_empty() { "_global" } else { t.tenant.as_str() };
+                tj.set(key, e);
+            }
+            dj.set("tenants", tj);
+            o.set("drafters", dj);
         }
         o
     }
@@ -830,6 +911,16 @@ fn drive_session(
             Ok(s) => s,
             Err(e) => return DecodeEnd::Failed(e),
         };
+    // drafter-pool routing (docs/ARCHITECTURE.md §17): every round picks
+    // a drafter for this request's tenant and every verify settles the
+    // full-information reward — byte-identical pass-through for a pool
+    // of one
+    sess.set_drafter_hook(DrafterHook::new(
+        shared.drafters.clone(),
+        req.tenant.clone(),
+        req.scenario_seed(),
+        req.category.clone(),
+    ));
     let mut clip = EmitClip::new(req.max_new);
     loop {
         // lifecycle checks sit at the step boundary — the decode core

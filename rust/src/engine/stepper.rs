@@ -37,7 +37,12 @@
 //! `on_verify` (reward) per session per round, exactly as in Workers
 //! mode, so shared-bandit play-count conservation holds across execution
 //! modes. Controllers are per *slot* here (one decode thread), not per
-//! worker.
+//! worker. The drafter-pool layer (docs/ARCHITECTURE.md §17) rides the
+//! same cadence: one `DrafterHook::begin_round` right before each
+//! policy select, one `settle_verify` (full-information scores over the
+//! round's accepted tokens) right after each policy reward, and a
+//! `settle_abort` wherever the policy layer absorbs an abort — so
+//! rounds == policy plays == drafter plays in every configuration.
 //!
 //! **Lifecycle.** Cancellation flags, deadlines, and gone stream
 //! receivers are observed at iteration boundaries — the same round
@@ -64,7 +69,7 @@ use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::bandit::SessionController;
+use crate::bandit::{DrafterHook, SessionController};
 use crate::models::{BatchItem, LanguageModel, ModelCost};
 use crate::spec::{
     accept_greedy, finish_check, validate_prompt, DecodeControl, GenConfig, GenResult, RoundStat,
@@ -99,6 +104,12 @@ struct ActiveSession {
     /// cached `Request::scenario_seed` (a prompt hash — computed once,
     /// stamped on every `BatchItem`)
     seed: u64,
+    /// drafter-pool selection handle (docs/ARCHITECTURE.md §17), bound
+    /// to this request's tenant; settles exactly one play per round
+    hook: DrafterHook,
+    /// the drafter `hook.begin_round` selected for the current round —
+    /// stamped on every draft `BatchItem` (verify rows ignore it)
+    drafter: usize,
     /// arrival → decode start (admission), the reply's queue_ns
     queue_ns: u64,
     /// decode start (wall_ns base)
@@ -442,6 +453,12 @@ fn admit(
         let committed = req.prompt.clone();
         let prompt_len = committed.len();
         let seed = req.scenario_seed();
+        let hook = DrafterHook::new(
+            shared.drafters.clone(),
+            req.tenant.clone(),
+            seed,
+            req.category.clone(),
+        );
         sessions.push(ActiveSession {
             req,
             sink,
@@ -449,6 +466,8 @@ fn admit(
             cfg,
             clip,
             seed,
+            hook,
+            drafter: 0,
             queue_ns,
             t_decode: Instant::now(),
             committed,
@@ -531,6 +550,7 @@ fn ensure_items(buf: &mut Vec<BatchItem>, n: usize, allocs: &mut u64) {
             category: String::new(),
             tokens: Vec::new(),
             start: 0,
+            drafter: 0,
         });
     }
 }
@@ -548,6 +568,7 @@ fn fill_item(
     item.seq = s.slot.id;
     item.seed = s.seed;
     item.start = start;
+    item.drafter = s.drafter;
     if item.category != s.req.category {
         item.category.clear();
         item.category.push_str(&s.req.category);
@@ -627,6 +648,11 @@ fn run_round(
         s.proposals.clear();
         s.draft_ns = 0;
         s.verify_ns = 0;
+        // drafter-pool selection first (docs/ARCHITECTURE.md §17): one
+        // begin per round, and the policy select below runs against the
+        // (tenant, drafter) posterior the round actually decodes under
+        s.drafter = s.hook.begin_round();
+        controllers[s.slot.id].set_context(s.hook.tenant(), s.drafter);
         // one select per session per round — the bandit atomicity
         // contract of bandit/shared.rs, unchanged by the re-sequencing
         controllers[s.slot.id].session_start(rng);
@@ -661,6 +687,7 @@ fn run_round(
             drafter.reset();
             for &i in live.iter() {
                 controllers[sessions[i].slot.id].on_abort();
+                sessions[i].hook.settle_abort();
             }
             fail_all(sessions, live, &format!("batched draft failed: {e:#}"));
             return live.len();
@@ -706,6 +733,7 @@ fn run_round(
                 drafter.reset();
                 for &i in drafting.iter() {
                     controllers[sessions[i].slot.id].on_abort();
+                    sessions[i].hook.settle_abort();
                 }
                 fail_all(sessions, drafting, &format!("batched draft failed: {e:#}"));
                 break;
@@ -792,6 +820,7 @@ fn run_round(
                 verifier.reset();
                 for &i in chunk {
                     controllers[sessions[i].slot.id].on_abort();
+                    sessions[i].hook.settle_abort();
                 }
                 if pipeline {
                     let stall = t_wait.elapsed().as_nanos() as u64;
@@ -831,6 +860,18 @@ fn run_round(
             s.draft_cur = s.draft_cur.min(s.round_c + m);
             // one reward per session per round (conservation)
             controllers[sid].on_verify(m, k);
+            // full-information drafter reward (docs/ARCHITECTURE.md
+            // §17): score EVERY pooled drafter against this round's
+            // accepted tokens (proposals[..m] + bonus) — pure
+            // bookkeeping on the shared drafter, no cursor/cost/fault
+            // effects, so outputs and fault schedules are untouched
+            let scores = drafter.score_drafters(
+                s.seed,
+                &s.req.category,
+                &s.committed[s.round_c..],
+                s.round_c,
+            );
+            s.hook.settle_verify(&scores);
             let arm = controllers[sid].current_arm();
             s.rounds.push(RoundStat {
                 drafted: k,

@@ -8,6 +8,8 @@
 //!             [--max-queue N] [--deadline-ms MS] [--prefix-cache]
 //!             [--page-size TOK] [--kv-pages N] [--no-page-sharing]
 //!             [--pipeline] (continuous mode: overlap draft and verify)
+//!             [--drafters N] (sim backend: pool N drafters per target,
+//!             tenant-keyed bandit selection; docs/ARCHITECTURE.md §17)
 //!             [--io-threads N] (0 = legacy blocking front end)
 //!             [--header-timeout-ms MS] [--sse-keepalive-ms MS]
 //!   route     --port 8080 --replicas host:p1,host:p2,... [--no-affinity]
@@ -19,8 +21,8 @@
 //!   exp       --id <table2|table3|table4|table5|fig2|fig3|fig4|fig5|fig6|abl-arms|tune|all>
 //!             [--backend pjrt|sim] [--scale F] [--gamma N]
 //!   simulate  --seed N --steps M [--faults] [--sabotage] [--mode workers|continuous]
-//!             [--pipeline] [--replicas N] [--no-affinity] [--trace] [--replay plan.json]
-//!             [--out shrunk.json]
+//!             [--pipeline] [--replicas N] [--drafters N] [--tenants N]
+//!             [--no-affinity] [--trace] [--replay plan.json] [--out shrunk.json]
 //!             deterministic engine simulation against the shadow-state oracle
 //!             (N>1 adds the router tier with kill/drain fault ops); on
 //!             violation the plan is shrunk and written as a replay fixture
@@ -170,6 +172,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // speculative draft feed (docs/ARCHITECTURE.md §16); continuous
         // mode only, lossless, off by default
         pipeline: args.bool("pipeline"),
+        // --drafters N pools N draft models per target and lets the
+        // tenant-keyed full-information bandit pick one per round
+        // (docs/ARCHITECTURE.md §17); 1 = the plain single-drafter engine
+        drafters: args.usize("drafters", 1),
         ..EngineConfig::default()
     };
     let port = args.usize("port", 8077) as u16;
@@ -185,7 +191,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!(
         "tapout serving on http://{}  (POST /generate [stream:true for SSE], GET /health, \
          GET /metrics)  io={}x{} backend={} mode={} workers={} slots={} max_queue={} \
-         deadline_ms={} prefix_cache={} page_size={} kv_pages={} page_sharing={} pipeline={}",
+         deadline_ms={} prefix_cache={} page_size={} kv_pages={} page_sharing={} pipeline={} \
+         drafters={}",
         http.addr,
         http.stats.mode,
         http.stats.io_threads,
@@ -200,6 +207,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         engine.config.kv_pages,
         engine.config.page_sharing,
         engine.config.pipeline,
+        engine.config.drafters,
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -299,6 +307,15 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     // replayed fixtures stay valid either way (docs/ARCHITECTURE.md §16)
     if args.bool("pipeline") {
         plan.pipeline = true;
+    }
+    // --drafters / --tenants overlay the drafter-pool size and the
+    // number of synthetic tenant streams (docs/ARCHITECTURE.md §17); the
+    // oracle then also checks two-layer play-count conservation
+    if let Some(n) = args.opt("drafters") {
+        plan.drafters = n.parse().map_err(|_| anyhow::anyhow!("--drafters wants a number"))?;
+    }
+    if let Some(n) = args.opt("tenants") {
+        plan.tenants = n.parse().map_err(|_| anyhow::anyhow!("--tenants wants a number"))?;
     }
 
     let report = run_plan(&plan);

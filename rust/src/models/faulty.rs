@@ -142,6 +142,14 @@ pub struct FaultyModel {
     /// sticky-broken flag: a crash fault poisons every forward until the
     /// next request reseats the model
     broken: bool,
+    /// currently routed pooled drafter (docs/ARCHITECTURE.md §17);
+    /// forwards routed through drafter `d > 0` draw their fault decisions
+    /// from `alt_rngs[d-1]` so each drafter's schedule replays
+    /// independently of how often the selection layer plays the others
+    drafter: usize,
+    /// lazily grown per-drafter fault streams (index `d-1`), forked off
+    /// the same seed as the authoritative drafter-0 stream
+    alt_rngs: Vec<Rng>,
 }
 
 impl FaultyModel {
@@ -153,6 +161,8 @@ impl FaultyModel {
             plan,
             stats: Arc::new(FaultStats::default()),
             broken: false,
+            drafter: 0,
+            alt_rngs: Vec::new(),
         }
     }
 
@@ -171,6 +181,24 @@ impl FaultyModel {
         self.plan.max_faults == 0 || self.stats.kills() < self.plan.max_faults
     }
 
+    /// Draw one fault decision from the stream owned by the currently
+    /// routed drafter. Drafter 0 draws from the authoritative stream
+    /// (`self.rng`) so a pool of one is byte-identical to the pre-pool
+    /// wrapper; drafter `d > 0` draws from a lazily forked side stream so
+    /// its fault schedule replays independently of how often the
+    /// selection layer routes through the other drafters.
+    fn draw(&mut self, p: f64) -> bool {
+        let d = self.drafter;
+        if d == 0 {
+            return self.rng.bool(p);
+        }
+        while self.alt_rngs.len() < d {
+            let i = self.alt_rngs.len() as u64 + 1;
+            self.alt_rngs.push(Rng::new(self.plan.seed ^ 0xFA17).fork(0xD8AF ^ i));
+        }
+        self.alt_rngs[d - 1].bool(p)
+    }
+
     /// The per-forward fault gate shared by `block`/`block_batch`/
     /// `draft_batch`: slow first (orthogonal to failure), then crash,
     /// then transient error.
@@ -178,16 +206,16 @@ impl FaultyModel {
         if self.broken {
             anyhow::bail!("injected crash: model is down until reseated");
         }
-        if self.rng.bool(self.plan.slow_rate) {
+        if self.draw(self.plan.slow_rate) {
             self.stats.slow.fetch_add(1, Ordering::Relaxed);
             self.stats.delay_ns.fetch_add(self.plan.slow_ns, Ordering::Relaxed);
         }
-        if self.kills_left() && self.rng.bool(self.plan.crash_rate) {
+        if self.kills_left() && self.draw(self.plan.crash_rate) {
             self.broken = true;
             self.stats.crashes.fetch_add(1, Ordering::Relaxed);
             anyhow::bail!("injected crash during {what}");
         }
-        if self.kills_left() && self.rng.bool(self.plan.error_rate) {
+        if self.kills_left() && self.draw(self.plan.error_rate) {
             self.stats.errors.fetch_add(1, Ordering::Relaxed);
             anyhow::bail!("injected fault during {what}");
         }
@@ -263,6 +291,30 @@ impl LanguageModel for FaultyModel {
             anyhow::bail!("injected crash: model is down until reseated");
         }
         self.inner.speculate_batch(seqs)
+    }
+
+    fn n_drafters(&self) -> usize {
+        self.inner.n_drafters()
+    }
+
+    fn set_drafter(&mut self, d: usize) {
+        // routing is pure bookkeeping: no fault randomness is consumed, so
+        // switching drafters never shifts anyone's schedule
+        self.drafter = d;
+        self.inner.set_drafter(d);
+    }
+
+    fn score_drafters(
+        &mut self,
+        seed: u64,
+        category: &str,
+        tokens: &[u32],
+        start: usize,
+    ) -> Vec<f64> {
+        // Full-information scoring draws NO fault randomness, exactly like
+        // `speculate_batch`: it rides the already-verified tokens and a
+        // fault here would be indistinguishable from a discard.
+        self.inner.score_drafters(seed, category, tokens, start)
     }
 
     fn cur(&self) -> usize {
@@ -347,6 +399,7 @@ mod tests {
                             category: "qa".to_string(),
                             tokens: vec![3],
                             start: m.cur(),
+                            drafter: 0,
                         };
                         let _ = m.speculate_batch(&[item]);
                     }
@@ -369,10 +422,50 @@ mod tests {
         let plan = FaultPlan { seed: 3, crash_rate: 1.0, ..FaultPlan::default() };
         let mut m = FaultyModel::new(Box::new(t), plan);
         assert!(m.block(&[3], 0).is_err(), "crash fires");
-        let item =
-            BatchItem { seq: 0, seed: 2, category: "qa".to_string(), tokens: vec![3], start: 0 };
+        let item = BatchItem {
+            seq: 0,
+            seed: 2,
+            category: "qa".to_string(),
+            tokens: vec![3],
+            start: 0,
+            drafter: 0,
+        };
         assert!(m.speculate_batch(&[item]).is_err(), "broken model can't speculate either");
         assert_eq!(m.stats().crashes.load(Ordering::Relaxed), 1, "no new fault drawn");
+    }
+
+    #[test]
+    fn per_drafter_fault_streams_are_independent() {
+        // Drafter 0's fault schedule must be byte-identical whether or not
+        // forwards routed through drafter 1 are interleaved — each pooled
+        // drafter owns its own fault stream, so the selection layer's
+        // routing choices never shift anyone else's schedule.
+        let run = |interleave: bool| -> Vec<bool> {
+            let (d, _) = sim_pair(1, "qa", 0.9);
+            let mut m = FaultyModel::new(Box::new(d.with_drafters(2)), noisy(5));
+            (0..40)
+                .map(|_| {
+                    if interleave {
+                        m.set_drafter(1);
+                        let start = m.cur();
+                        if m.block(&[3], start).is_err() {
+                            m.begin_request(1, "qa");
+                            m.reset();
+                        }
+                    }
+                    m.set_drafter(0);
+                    let start = m.cur();
+                    let ok = m.block(&[3], start).is_ok();
+                    if !ok {
+                        m.begin_request(1, "qa");
+                        m.reset();
+                    }
+                    ok
+                })
+                .collect()
+        };
+        assert_eq!(run(false), run(true), "drafter-1 routing must not shift drafter 0's stream");
+        assert!(run(false).iter().any(|&ok| !ok), "faults actually fire");
     }
 
     #[test]

@@ -80,6 +80,11 @@ pub struct Manifest {
     pub models: HashMap<String, ModelSpec>,
     /// paper-analog pairs: name -> (draft, target)
     pub pairs: Vec<(String, (String, String))>,
+    /// optional drafter pools (docs/ARCHITECTURE.md §17): pair name ->
+    /// ordered draft-model keys the selection layer chooses among. Absent
+    /// pairs fall back to a pool of one (the pair's own draft model), so
+    /// every pre-pool manifest stays valid unchanged.
+    pub pools: HashMap<String, Vec<String>>,
 }
 
 impl Manifest {
@@ -183,6 +188,29 @@ impl Manifest {
         }
         pairs.sort();
 
+        // optional drafter pools: {"pair-a": ["draft-base", "draft-tiny"]};
+        // every listed model must exist so a bad manifest fails at load,
+        // not at first route
+        let mut pools = HashMap::new();
+        if let Some(Json::Obj(p)) = j.get("pools").or_else(|| j.get("drafter_pools")) {
+            for (pair, v) in p {
+                let names: Vec<String> = v
+                    .as_arr()
+                    .map(|a| {
+                        a.iter()
+                            .filter_map(|x| x.as_str())
+                            .map(|s| s.to_string())
+                            .collect()
+                    })
+                    .unwrap_or_default();
+                anyhow::ensure!(!names.is_empty(), "pool for {pair} is empty");
+                for n in &names {
+                    anyhow::ensure!(models.contains_key(n), "pool for {pair} names unknown model {n}");
+                }
+                pools.insert(pair.clone(), names);
+            }
+        }
+
         Ok(Manifest {
             root: dir.to_path_buf(),
             vocab: need("vocab")?.as_usize().unwrap_or(96),
@@ -191,6 +219,7 @@ impl Manifest {
             alphabet: need("alphabet")?.as_str().unwrap_or_default().to_string(),
             models,
             pairs,
+            pools,
         })
     }
 
@@ -210,6 +239,18 @@ impl Manifest {
             .map(|(_, p)| p)
             .ok_or_else(|| anyhow::anyhow!("pair {name} not in manifest"))?;
         Ok((self.model(d)?, self.model(t)?))
+    }
+
+    /// Ordered drafter pool for a named pair (docs/ARCHITECTURE.md §17):
+    /// the manifest's `pools` entry when present, otherwise a pool of one
+    /// holding the pair's own draft model — index 0 is always the drafter
+    /// the pre-pool engine would have used.
+    pub fn drafter_pool(&self, name: &str) -> Result<Vec<&ModelSpec>> {
+        if let Some(names) = self.pools.get(name) {
+            return names.iter().map(|n| self.model(n)).collect();
+        }
+        let (d, _) = self.pair(name)?;
+        Ok(vec![d])
     }
 
     /// Flat little-endian f32 weight file.
@@ -287,12 +328,61 @@ mod tests {
             alphabet: "abc 123".into(),
             models: HashMap::new(),
             pairs: vec![],
+            pools: HashMap::new(),
         };
         let ids = m.encode("cab 31");
         assert_eq!(ids, vec![5, 3, 4, 6, 9, 7]);
         assert_eq!(m.decode(&ids), "cab 31");
         // unknown chars are dropped
         assert_eq!(m.encode("a!b"), vec![3, 4]);
+    }
+
+    #[test]
+    fn drafter_pool_defaults_to_the_pair_draft() {
+        let spec = |name: &str| ModelSpec {
+            name: name.into(),
+            d_model: 8,
+            n_layers: 1,
+            n_heads: 1,
+            vocab: 96,
+            max_seq: 64,
+            param_count: 0,
+            kv_elems: 0,
+            out_elems: 0,
+            world_elems: 0,
+            weights_path: PathBuf::new(),
+            ladder: vec![1],
+            hlo_files: HashMap::new(),
+            extract_files: HashMap::new(),
+            batch_ladder: vec![],
+            batch_files: HashMap::new(),
+        };
+        let mut models = HashMap::new();
+        for n in ["draft-base", "draft-tiny", "target-base"] {
+            models.insert(n.to_string(), spec(n));
+        }
+        let mut m = Manifest {
+            root: PathBuf::new(),
+            vocab: 96,
+            max_seq: 384,
+            sig_width: 8,
+            alphabet: "abc".into(),
+            models,
+            pairs: vec![("pair-a".into(), ("draft-base".into(), "target-base".into()))],
+            pools: HashMap::new(),
+        };
+        // no pools entry: pool of one, the pair's own draft
+        let pool = m.drafter_pool("pair-a").unwrap();
+        assert_eq!(pool.len(), 1);
+        assert_eq!(pool[0].name, "draft-base");
+        // with a pools entry, order is preserved
+        m.pools.insert("pair-a".into(), vec!["draft-base".into(), "draft-tiny".into()]);
+        let pool = m.drafter_pool("pair-a").unwrap();
+        assert_eq!(pool.iter().map(|s| s.name.as_str()).collect::<Vec<_>>(), vec![
+            "draft-base",
+            "draft-tiny"
+        ]);
+        assert!(m.drafter_pool("pair-z").is_err(), "unknown pair still errors");
     }
 
     #[test]

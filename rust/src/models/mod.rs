@@ -11,5 +11,5 @@ pub mod traits;
 pub use faulty::{FaultPlan, FaultStats, FaultyModel};
 pub use manifest::{Manifest, ModelSpec, PromptEntry};
 pub use pjrt::{ModelAssets, PjrtBatchVerifier, PjrtModel};
-pub use sim::{sim_bucket, sim_decode, sim_encode, sim_pair, Scenario, SimModel};
+pub use sim::{preferred_drafter, sim_bucket, sim_decode, sim_encode, sim_pair, Scenario, SimModel};
 pub use traits::{BatchItem, LanguageModel, ModelCost, PageView};

@@ -91,6 +91,44 @@ impl CategoryProfile {
     }
 }
 
+/// Deterministic rank of a category's difficulty base in the profile
+/// table (coding 0 … open-ended prose 4) — the stable key per-drafter
+/// acceptance profiles hang off.
+fn base_rank(base: f32) -> usize {
+    if base < 0.08 {
+        0
+    } else if base < 0.12 {
+        1
+    } else if base < 0.20 {
+        2
+    } else if base < 0.30 {
+        3
+    } else {
+        4
+    }
+}
+
+/// Which pooled drafter a category's acceptance profile favors
+/// (docs/ARCHITECTURE.md §17): the drafter whose proposals the simulated
+/// verify accepts most often on that category. Deterministic in
+/// (category, pool size); `n <= 1` always answers 0. Benches and tests
+/// use this to construct workloads where tenants provably prefer
+/// *different* drafters.
+pub fn preferred_drafter(category: &str, n: usize) -> usize {
+    if n <= 1 {
+        0
+    } else {
+        base_rank(CategoryProfile::for_category(category).base) % n
+    }
+}
+
+/// Salt mixed into a drafter's agreement/confidence hashes so pooled
+/// drafters propose decorrelated streams; drafter 0 salts to 0, keeping
+/// it bit-for-bit the legacy single-drafter stream.
+fn drafter_salt(d: usize) -> u64 {
+    (d as u64).wrapping_mul(0xD097_A57C_3D9E_3779)
+}
+
 /// Deterministic unit-interval hash of (seed, position, salt).
 fn unit(seed: u64, p: u64, salt: u64) -> f64 {
     let mut z = seed
@@ -135,6 +173,12 @@ pub struct SimModel {
     /// cumulative prompt tokens adopted via shared KV pages
     /// (`LanguageModel::adopt_pages`, docs/ARCHITECTURE.md §13)
     adopted: u64,
+    /// pooled drafter count (docs/ARCHITECTURE.md §17); 1 = the legacy
+    /// single-drafter model, whose rows this pool reproduces exactly
+    pool: usize,
+    /// currently routed drafter for the single-sequence path
+    /// ([`LanguageModel::set_drafter`]); batched items carry their own
+    drafter: usize,
     /// reusable logit row for `row_at` — cleared and refilled per row so
     /// the padded-pass ladder stops allocating one `Vec` per signal row
     /// in the step-loop hot path (the churn the engine's
@@ -154,6 +198,8 @@ impl SimModel {
             rel_cost: 1.0,
             name: "sim-target".into(),
             adopted: 0,
+            pool: 1,
+            drafter: 0,
             logits: Vec::new(),
         }
     }
@@ -169,8 +215,25 @@ impl SimModel {
             rel_cost,
             name: format!("sim-draft(q={quality})"),
             adopted: 0,
+            pool: 1,
+            drafter: 0,
             logits: Vec::new(),
         }
+    }
+
+    /// Host a pool of `n` seeded per-drafter acceptance profiles on this
+    /// draft model (docs/ARCHITECTURE.md §17). Each category favors one
+    /// drafter ([`preferred_drafter`]): the favored drafter's agreement
+    /// quality rises, every other drafter's collapses, and each drafter's
+    /// agreement/confidence hashes are salted apart so their proposal
+    /// streams decorrelate. A pool of one (`n <= 1`) produces rows
+    /// bit-for-bit identical to the plain draft model.
+    pub fn with_drafters(mut self, n: usize) -> SimModel {
+        self.pool = n.max(1);
+        if self.pool > 1 {
+            self.name = format!("{}[pool={n}]", self.name);
+        }
+        self
     }
 
     /// Reseat on a new request scenario (keeps cost counters).
@@ -179,19 +242,55 @@ impl SimModel {
         self.cur = 0;
     }
 
-    /// Signals for the prediction of position `p` (i.e. after processing
-    /// the input at p-1) under this model's *current* scenario.
-    fn row_for(&mut self, p: usize) -> TokenSignals {
-        let s = self.scenario;
-        self.row_at(&s, p)
+    /// Effective agreement quality of pooled drafter `d` on scenario `s`:
+    /// the base quality for a pool of one, boosted for the category's
+    /// preferred drafter and collapsed otherwise.
+    fn pool_quality(&self, q: f32, s: &Scenario, d: usize) -> f32 {
+        if self.pool <= 1 {
+            return q;
+        }
+        if d == base_rank(s.profile.base) % self.pool {
+            (q + 0.08).min(0.98)
+        } else {
+            (q * 0.35).max(0.02)
+        }
     }
 
-    /// Signals for position `p` under an explicit scenario — the
-    /// scenario-parametric core shared by the single-sequence path and
-    /// the batched verification path (rows are a pure function of
-    /// (scenario, quality, position), which is what makes batched and
-    /// sequential verification byte-identical).
-    fn row_at(&mut self, s: &Scenario, p: usize) -> TokenSignals {
+    /// (agrees-with-script, agreement probability) of drafter `d` at
+    /// position `p` — the pure core shared by [`row_at`](Self::row_at)
+    /// and [`LanguageModel::score_drafters`], so scoring can never drift
+    /// from what the rows actually proposed.
+    fn draft_agreement(&self, s: &Scenario, p: usize, d: usize, q: f32) -> (bool, f64) {
+        let tau = s.profile.tau(s.seed, p);
+        let q = self.pool_quality(q, s, d);
+        let a = (q as f64 * (1.0 - tau as f64)).clamp(0.0, 1.0);
+        (unit(s.seed, p as u64, 0xA6EE ^ drafter_salt(d)) < a, a)
+    }
+
+    /// The deterministic wrong token (≠ script) drafter `d` proposes at a
+    /// disagreeing position.
+    fn wrong_token(s: &Scenario, p: usize, d: usize) -> u32 {
+        let script_tok = s.script(p);
+        let alt = 3
+            + (unit(s.seed, p as u64, 0xBAD ^ drafter_salt(d)) * (SIM_VOCAB - 3) as f64) as u32;
+        if alt == script_tok { (alt - 3 + 1) % (SIM_VOCAB - 3) + 3 } else { alt }
+    }
+
+    /// Signals for the prediction of position `p` (i.e. after processing
+    /// the input at p-1) under this model's *current* scenario and
+    /// currently routed drafter.
+    fn row_for(&mut self, p: usize) -> TokenSignals {
+        let s = self.scenario;
+        let d = self.drafter;
+        self.row_at(&s, p, d)
+    }
+
+    /// Signals for position `p` under an explicit scenario, proposed by
+    /// pooled drafter `d` — the scenario-parametric core shared by the
+    /// single-sequence path and the batched verification path (rows are
+    /// a pure function of (scenario, quality, drafter, position), which
+    /// is what makes batched and sequential verification byte-identical).
+    fn row_at(&mut self, s: &Scenario, p: usize, d: usize) -> TokenSignals {
         let tau = s.profile.tau(s.seed, p);
         let script_tok = s.script(p);
         let (agree, conf) = match self.quality {
@@ -201,21 +300,14 @@ impl SimModel {
             }
             Some(q) => {
                 // agreement probability falls with difficulty
-                let a = (q as f64 * (1.0 - tau as f64)).clamp(0.0, 1.0);
-                let agrees = unit(s.seed, p as u64, 0xA6EE) < a;
+                let (agrees, a) = self.draft_agreement(s, p, d, q);
                 // confidence noisily tracks the agreement probability —
                 // this is what makes entropy *informative* for stopping
-                let noise = (unit(s.seed, p as u64, 0xC0F) - 0.5) * 0.12;
+                let noise = (unit(s.seed, p as u64, 0xC0F ^ drafter_salt(d)) - 0.5) * 0.12;
                 (agrees, (0.18 + 0.80 * a + noise).clamp(0.05, 0.995))
             }
         };
-        let argmax = if agree {
-            script_tok
-        } else {
-            // a deterministic wrong token ≠ script
-            let alt = 3 + (unit(s.seed, p as u64, 0xBAD) * (SIM_VOCAB - 3) as f64) as u32;
-            if alt == script_tok { (alt - 3 + 1) % (SIM_VOCAB - 3) + 3 } else { alt }
-        };
+        let argmax = if agree { script_tok } else { Self::wrong_token(s, p, d) };
         // synthesize an actual logit row: peak `conf`, runner-up, uniform
         // tail — refilled into the reusable scratch row, byte-identical
         // to building a fresh Vec (clear + resize writes every entry)
@@ -250,7 +342,7 @@ impl SimModel {
             let sc = Scenario::new(item.seed, &item.category);
             let mut rows = Vec::with_capacity(item.tokens.len());
             for i in 0..item.tokens.len() {
-                rows.push(self.row_at(&sc, item.start + i + 1));
+                rows.push(self.row_at(&sc, item.start + i + 1, item.drafter));
             }
             out.push(rows);
         }
@@ -346,6 +438,49 @@ impl LanguageModel for SimModel {
     /// a draft-side model the rows carry the draft distribution.
     fn draft_batch(&mut self, seqs: &[BatchItem]) -> anyhow::Result<Vec<Vec<TokenSignals>>> {
         self.batched_rows(seqs)
+    }
+
+    fn n_drafters(&self) -> usize {
+        self.pool
+    }
+
+    fn set_drafter(&mut self, d: usize) {
+        self.drafter = d.min(self.pool.saturating_sub(1));
+    }
+
+    /// Full-information scoring (docs/ARCHITECTURE.md §17): for each
+    /// pooled drafter, the exact fraction of the committed `tokens` whose
+    /// argmax that drafter's rows propose. Pure bookkeeping over the same
+    /// `draft_agreement`/`wrong_token` core the rows are built from — no
+    /// cursor movement, no cost counting, no randomness beyond the
+    /// position hashes the rows themselves use.
+    fn score_drafters(
+        &mut self,
+        seed: u64,
+        category: &str,
+        tokens: &[u32],
+        start: usize,
+    ) -> Vec<f64> {
+        let n = self.pool;
+        if tokens.is_empty() {
+            return vec![1.0; n];
+        }
+        let q = self.quality.unwrap_or(1.0);
+        let s = Scenario::new(seed, category);
+        let mut out = Vec::with_capacity(n);
+        for d in 0..n {
+            let mut hits = 0usize;
+            for (i, &tok) in tokens.iter().enumerate() {
+                let p = start + i;
+                let (agrees, _) = self.draft_agreement(&s, p, d, q);
+                let proposed = if agrees { s.script(p) } else { Self::wrong_token(&s, p, d) };
+                if proposed == tok {
+                    hits += 1;
+                }
+            }
+            out.push(hits as f64 / tokens.len() as f64);
+        }
+        out
     }
 
     fn cur(&self) -> usize {
@@ -492,6 +627,7 @@ mod tests {
                 category: ["coding", "qa", "writing"][i].into(),
                 tokens: vec![3 + i as u32; 4 + i],
                 start: 2 * i,
+                drafter: 0,
             })
             .collect();
         let mut verifier = SimModel::target(Scenario::new(0, "qa"));
@@ -524,6 +660,7 @@ mod tests {
                     category: "qa".into(),
                     tokens: vec![3; 1 + (round + i) % 7],
                     start: 0,
+                    drafter: 0,
                 })
                 .collect();
             let mut fresh = SimModel::target(Scenario::new(round as u64, "qa"));
@@ -543,6 +680,7 @@ mod tests {
                 category: "qa".into(),
                 tokens: vec![3; 5],
                 start: 0,
+                drafter: 0,
             })
             .collect();
         let mut verifier = SimModel::target(Scenario::new(0, "qa"));
@@ -561,6 +699,81 @@ mod tests {
         assert_eq!(sim_bucket(3), 4);
         assert_eq!(sim_bucket(16), 16);
         assert_eq!(sim_bucket(17), 32);
+    }
+
+    #[test]
+    fn pool_of_one_is_byte_identical_to_the_plain_draft() {
+        // the whole drafter layer must be inert at pool size 1: same
+        // rows, same cost, same everything (docs §17 byte-identity)
+        let sc = Scenario::new(99, "qa");
+        let mut plain = SimModel::draft(sc, 0.9, 0.05);
+        let mut pooled = SimModel::draft(sc, 0.9, 0.05).with_drafters(1);
+        pooled.set_drafter(0);
+        let a = plain.block(&[3, 4, 5, 6, 7], 0).unwrap();
+        let b = pooled.block(&[3, 4, 5, 6, 7], 0).unwrap();
+        assert_eq!(a, b);
+        // and drafter 0 of a *multi* pool still draws the legacy salts:
+        // its agreement stream is the legacy one, quality-shifted only
+        assert_eq!(plain.score_drafters(99, "qa", &[3, 4], 1).len(), 1);
+    }
+
+    #[test]
+    fn categories_favor_different_drafters_and_profiles_separate() {
+        // with a pool of 2, coding and qa land on different preferred
+        // drafters (base ranks 0 and 3), and each category accepts its
+        // preferred drafter's proposals far more often
+        assert_ne!(preferred_drafter("coding", 2), preferred_drafter("qa", 2));
+        assert_eq!(preferred_drafter("anything", 1), 0);
+        for cat in ["coding", "qa"] {
+            let fav = preferred_drafter(cat, 2);
+            let mut agree = [0u32; 2];
+            let m = SimModel::draft(Scenario::new(0, cat), 0.9, 0.05).with_drafters(2);
+            for seed in 0..800u64 {
+                let s = Scenario::new(seed, cat);
+                for d in 0..2 {
+                    if m.draft_agreement(&s, 1, d, 0.9).0 {
+                        agree[d] += 1;
+                    }
+                }
+            }
+            assert!(
+                agree[fav] > agree[1 - fav] + 200,
+                "{cat}: preferred {fav} must dominate ({agree:?})"
+            );
+        }
+    }
+
+    #[test]
+    fn score_drafters_is_pure_and_matches_the_rows() {
+        // the score must be exactly the argmax-agreement fraction of the
+        // same rows block() produces, and scoring must not perturb the
+        // model (cursor, cost) at all
+        let seed = 1234u64;
+        let cat = "math";
+        let mut m = SimModel::draft(Scenario::new(seed, cat), 0.85, 0.05).with_drafters(3);
+        let committed: Vec<u32> = {
+            let s = Scenario::new(seed, cat);
+            (1..=12).map(|p| s.script(p)).collect()
+        };
+        let cur0 = m.cur();
+        let cost0 = m.cost();
+        let scores = m.score_drafters(seed, cat, &committed, 1);
+        assert_eq!(m.cur(), cur0, "scoring must not move the cursor");
+        assert_eq!(m.cost(), cost0, "scoring must not count model cost");
+        assert_eq!(scores.len(), 3);
+        for (d, &sc) in scores.iter().enumerate() {
+            assert!((0.0..=1.0).contains(&sc), "drafter {d}: {sc}");
+            // recompute from the actual rows that drafter would emit
+            let mut solo = SimModel::draft(Scenario::new(seed, cat), 0.85, 0.05).with_drafters(3);
+            solo.set_drafter(d);
+            let rows = solo.block(&vec![3; 12], 0).unwrap();
+            let hits = rows
+                .iter()
+                .zip(&committed)
+                .filter(|(r, &tok)| r.argmax == tok)
+                .count();
+            assert_eq!(sc, hits as f64 / 12.0, "drafter {d} score != row agreement");
+        }
     }
 
     #[test]

@@ -85,6 +85,9 @@ pub struct BatchItem {
     pub tokens: Vec<u32>,
     /// absolute position of `tokens[0]` — must equal the sequence cursor
     pub start: usize,
+    /// which pooled draft model proposes this item (docs/ARCHITECTURE.md
+    /// §17); always 0 for verify items and single-drafter backends
+    pub drafter: usize,
 }
 
 /// A batched forward that has been *submitted* but not yet awaited — the
@@ -295,5 +298,44 @@ pub trait LanguageModel: Send {
     /// cost model; ≈ param ratio).
     fn rel_cost(&self) -> f64 {
         1.0
+    }
+
+    /// Number of pooled draft models this backend hosts
+    /// (docs/ARCHITECTURE.md §17). Verifiers and single-drafter backends
+    /// report 1, which keeps the whole drafter-selection layer a no-op —
+    /// a pool of one is byte-identical to the pre-pool engine.
+    fn n_drafters(&self) -> usize {
+        1
+    }
+
+    /// Route subsequent single-sequence draft forwards
+    /// ([`block`](LanguageModel::block)) through pooled drafter `d`.
+    /// Batched paths carry the drafter per item ([`BatchItem::drafter`])
+    /// instead. Backends without a pool ignore it.
+    fn set_drafter(&mut self, _d: usize) {}
+
+    /// Full-information drafter scoring (Not-a-Bandit, docs §17): given
+    /// the `tokens` a verify round just committed at absolute position
+    /// `start`, return each pooled drafter's agreement fraction — the
+    /// share of those tokens drafter `d` *would have proposed* — in
+    /// `[0, 1]`, one entry per drafter.
+    ///
+    /// **Contract.** Scoring is pure bookkeeping over already-known
+    /// rows: it must not move the cursor, must not count model cost, and
+    /// must not consume fault randomness (fault wrappers pass through
+    /// without drawing from their RNG, exactly like
+    /// [`speculate_batch`](LanguageModel::speculate_batch)) — otherwise
+    /// enabling a second drafter would shift every replayed fault
+    /// schedule. The default credits every drafter fully, which makes
+    /// the selection layer inert for pool-of-one backends.
+    fn score_drafters(
+        &mut self,
+        _seed: u64,
+        _category: &str,
+        tokens: &[u32],
+        _start: usize,
+    ) -> Vec<f64> {
+        let _ = tokens;
+        vec![1.0; self.n_drafters()]
     }
 }

@@ -53,5 +53,5 @@ pub mod shrink;
 pub use clock::SimClock;
 pub use oracle::Oracle;
 pub use plan::{SimOp, SimPlan};
-pub use runner::{run_plan, SimReport, Violation};
+pub use runner::{run_plan, run_plan_pinned, SimReport, Violation};
 pub use shrink::shrink;

@@ -14,6 +14,11 @@
 //! * **bandit play conservation** — every `session_start` is answered by
 //!   exactly one `on_verify`/`on_abort` (sessions == updates), and for
 //!   sequence-level bandits the per-arm counts sum to the same total;
+//! * **drafter-layer conservation** — the hierarchical drafter bandit
+//!   plays at the same cadence: every `begin` is answered by exactly one
+//!   settle, the global per-drafter plays sum to the settle count, and
+//!   the per-tenant ledgers sum to the identical total (no play may land
+//!   in one scope but not the other);
 //! * **greedy byte-equality** — every reply (after the serving clip:
 //!   ≤ `max_new`, nothing past the first EOS) must be a prefix of a
 //!   fault-free target-only greedy decode of the same request, and a
@@ -27,7 +32,7 @@
 
 use std::collections::{BTreeMap, BTreeSet};
 
-use crate::bandit::SharedController;
+use crate::bandit::{SharedController, SharedDrafters};
 use crate::engine::{FinishStatus, Scheduler, SlotPool};
 use crate::models::{Scenario, SimModel};
 use crate::spec::{greedy, GenConfig, EOS};
@@ -194,6 +199,32 @@ impl Oracle {
         }
     }
 
+    /// **Drafter-layer conservation** (hierarchical bandit, both scopes):
+    /// sessions == settles, Σ global per-drafter plays == settles, and the
+    /// per-tenant ledgers sum to the same total. Checked after every
+    /// event, so a leak is caught at the round that caused it.
+    pub fn check_drafters(drafters: &SharedDrafters) -> Option<String> {
+        let (sessions, updates) = (drafters.sessions(), drafters.updates());
+        if sessions != updates {
+            return Some(format!(
+                "drafter play leak: {sessions} begins vs {updates} settles"
+            ));
+        }
+        let global: u64 = drafters.plays().iter().sum();
+        if global != updates {
+            return Some(format!(
+                "drafter count drift: Σ global plays {global} != {updates} settles"
+            ));
+        }
+        let per_tenant = drafters.tenant_plays_total();
+        if per_tenant != updates {
+            return Some(format!(
+                "drafter tenant drift: Σ per-tenant plays {per_tenant} != {updates} settles"
+            ));
+        }
+        None
+    }
+
     /// Engine-wide conservation checks, run after every event.
     pub fn check_engine(
         &self,
@@ -201,6 +232,7 @@ impl Oracle {
         sched: &Scheduler,
         live_sessions: usize,
         shared: &SharedController,
+        drafters: &SharedDrafters,
     ) -> Option<String> {
         if let Some(e) = pool.page_conservation_error() {
             return Some(e);
@@ -234,7 +266,7 @@ impl Oracle {
                 }
             }
         }
-        None
+        Self::check_drafters(drafters)
     }
 }
 
@@ -249,6 +281,22 @@ mod tests {
         assert!(Oracle::check_spec_conservation(7, 4, 3).is_none());
         assert!(Oracle::check_spec_conservation(7, 4, 2).is_some(), "leaked speculation");
         assert!(Oracle::check_spec_conservation(3, 2, 2).is_some(), "double-resolved");
+    }
+
+    #[test]
+    fn drafter_conservation_catches_leaks_in_either_scope() {
+        let d = SharedDrafters::new(2);
+        assert!(Oracle::check_drafters(&d).is_none(), "fresh controller balances");
+        let played = d.begin("t0");
+        assert!(Oracle::check_drafters(&d).is_some(), "unsettled begin is a leak");
+        d.settle_verify("t0", played, &[0.5, 0.9]);
+        assert!(Oracle::check_drafters(&d).is_none(), "verify settles the play");
+        let played = d.begin("t1");
+        d.settle_abort("t1", played);
+        assert!(Oracle::check_drafters(&d).is_none(), "abort settles too");
+        // a settle that never had a begin is the opposite leak
+        d.settle_abort("t1", 0);
+        assert!(Oracle::check_drafters(&d).is_some());
     }
 
     #[test]

@@ -186,6 +186,18 @@ pub struct SimPlan {
     /// a random knob — flipping it draws no RNG, so every existing seed
     /// still generates the identical plan).
     pub pipeline: bool,
+    /// drafter pool size (docs/ARCHITECTURE.md §17): every sim slot's
+    /// draft model carries this many pooled drafters and the outer
+    /// bandit selects one per round. 1 = the classic single-drafter run.
+    /// A CLI/CI overlay like `pipeline` — the generator never randomizes
+    /// it (no RNG draw), so every existing seed generates the identical
+    /// plan.
+    pub drafters: usize,
+    /// synthetic tenant streams: submit ops are mapped round-robin onto
+    /// `t0..t{n-1}` tenant keys by the runner (`<= 1` = every request on
+    /// the global tenant, the exact pre-tenant path). Same overlay
+    /// contract as `drafters`.
+    pub tenants: usize,
     /// the ordered op list
     pub ops: Vec<SimOp>,
 }
@@ -214,6 +226,8 @@ impl SimPlan {
             replicas: 1,
             affinity: true,
             pipeline: false,
+            drafters: 1,
+            tenants: 1,
             ops: Vec::new(),
         };
         let mut next_req: u64 = 0;
@@ -355,6 +369,8 @@ impl SimPlan {
             .set("replicas", self.replicas)
             .set("affinity", self.affinity)
             .set("pipeline", self.pipeline)
+            .set("drafters", self.drafters)
+            .set("tenants", self.tenants)
             .set("ops", self.ops.iter().map(|o| o.to_json()).collect::<Vec<Json>>());
         j
     }
@@ -388,6 +404,9 @@ impl SimPlan {
             // absent in fixtures checked in before the pipeline existed:
             // they replay serialized, exactly as they were recorded
             pipeline: j.get("pipeline").and_then(|x| x.as_bool()).unwrap_or(false),
+            // same legacy-fixture contract for the drafter-pool fields
+            drafters: num("drafters").unwrap_or(1.0) as usize,
+            tenants: num("tenants").unwrap_or(1.0) as usize,
             ops,
         })
     }
@@ -430,6 +449,22 @@ mod tests {
         assert!(plan.to_json().render().contains("\"pipeline\""));
         // and the generator never flips it on (no RNG draw for the field)
         assert!(!SimPlan::generate(9, 40).pipeline);
+    }
+
+    #[test]
+    fn drafter_fields_default_to_one_for_legacy_plans() {
+        // pre-pool fixtures carry neither key: they must parse to the
+        // exact single-drafter global-tenant run and re-serialize with
+        // the keys made explicit
+        let text = r#"{"seed":1,"ops":[{"op":"step","n":2}]}"#;
+        let plan = SimPlan::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(plan.drafters, 1);
+        assert_eq!(plan.tenants, 1);
+        let out = plan.to_json().render();
+        assert!(out.contains("\"drafters\"") && out.contains("\"tenants\""));
+        // overlay contract: the generator draws no RNG for either field
+        let g = SimPlan::generate(9, 40);
+        assert_eq!((g.drafters, g.tenants), (1, 1));
     }
 
     #[test]

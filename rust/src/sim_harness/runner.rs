@@ -26,7 +26,7 @@
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use crate::bandit::{SessionController, SharedController};
+use crate::bandit::{DrafterHook, SessionController, SharedController, SharedDrafters};
 use crate::engine::{
     CancelFlag, EmitClip, FinishStatus, Lease, ReplicaView, Request, RouterCore, Scheduler, Slot,
     SlotPool,
@@ -100,6 +100,9 @@ pub struct SimReport {
     pub spec_discarded: u64,
     /// FNV-1a hash of the trace (the replay-equality fingerprint)
     pub trace_hash: u64,
+    /// tenant → modal drafter (argmax of per-tenant plays summed across
+    /// replicas); empty for runs that never settled a drafter round
+    pub drafter_modes: BTreeMap<String, usize>,
 }
 
 impl SimReport {
@@ -124,6 +127,8 @@ struct Live {
     /// speculative pre-draft issued under its verify is adoptable — this
     /// round's draft lane hides one token under the verify shadow
     primed: bool,
+    /// drafter-layer handle for this session's (tenant, seed, category)
+    hook: DrafterHook,
 }
 
 /// Engine state for one simulated replica — exactly what one live
@@ -134,6 +139,9 @@ struct ReplicaSim {
     pool: SlotPool,
     sched: Scheduler,
     shared: SharedController,
+    /// drafter-layer controller (pool-of-one and fully inert for legacy
+    /// plans: no RNG, selection always 0, counters still conserved)
+    drafters: Arc<SharedDrafters>,
     ctrls: Vec<SessionController>,
     live: Vec<Live>,
     fault_stats: Vec<Arc<FaultStats>>,
@@ -165,7 +173,15 @@ struct Runner {
 /// request reaches a terminal state) and report the trace, the replies
 /// and the first oracle violation, if any.
 pub fn run_plan(plan: &SimPlan) -> SimReport {
-    let mut r = Runner::build(plan.clone());
+    run_plan_pinned(plan, None)
+}
+
+/// [`run_plan`] with the drafter-layer selection pinned to a fixed pool
+/// index on every replica ([`SharedDrafters::set_pin`]) — the bench /
+/// debugging entry point for fixed-single-drafter baselines. `None` is
+/// exactly `run_plan`; out-of-range pins clamp to the last drafter.
+pub fn run_plan_pinned(plan: &SimPlan, pin: Option<usize>) -> SimReport {
+    let mut r = Runner::build(plan.clone(), pin);
     for i in 0..r.plan.ops.len() {
         if r.violation.is_some() {
             break;
@@ -197,6 +213,27 @@ pub fn run_plan(plan: &SimPlan) -> SimReport {
         }
     }
     let trace_hash = fnv1a(r.trace.iter().flat_map(|l| l.bytes().map(u64::from).chain([10u64])));
+    // per-tenant modal drafter: plays summed across replicas, argmax by
+    // lowest index on ties (mirrors the selector's own tie rule)
+    let mut tenant_plays: BTreeMap<String, Vec<u64>> = BTreeMap::new();
+    for rs in &r.replicas {
+        for t in rs.drafters.tenant_snapshot() {
+            let acc =
+                tenant_plays.entry(t.tenant.clone()).or_insert_with(|| vec![0; t.plays.len()]);
+            for (d, p) in t.plays.iter().enumerate() {
+                if d < acc.len() {
+                    acc[d] += p;
+                }
+            }
+        }
+    }
+    let drafter_modes = tenant_plays
+        .into_iter()
+        .filter_map(|(tenant, plays)| {
+            let best = (0..plays.len()).max_by_key(|&d| (plays[d], std::cmp::Reverse(d)))?;
+            (plays[best] > 0).then_some((tenant, best))
+        })
+        .collect();
     SimReport {
         violation: r.violation,
         replies: r.replies,
@@ -208,12 +245,13 @@ pub fn run_plan(plan: &SimPlan) -> SimReport {
         spec_adopted: r.spec_adopted,
         spec_discarded: r.spec_discarded,
         trace_hash,
+        drafter_modes,
         trace: r.trace,
     }
 }
 
 impl Runner {
-    fn build(plan: SimPlan) -> Runner {
+    fn build(plan: SimPlan, pin: Option<usize>) -> Runner {
         let quality = 0.9f32;
         let rel_cost = 1.0 / 20.0;
         let sc = Scenario::new(0, "qa");
@@ -229,7 +267,10 @@ impl Runner {
                         // replica 0 replays the legacy single-engine
                         // streams byte-for-byte
                         let slot = (rep * plan.slots + i) as u64;
-                        let d = SimModel::draft(sc, quality, rel_cost);
+                        let mut d = SimModel::draft(sc, quality, rel_cost);
+                        if plan.drafters > 1 {
+                            d = d.with_drafters(plan.drafters);
+                        }
                         let t = SimModel::target(sc);
                         if plan.faults {
                             let fd = FaultyModel::new(Box::new(d), faults.fork(2 * slot));
@@ -265,10 +306,13 @@ impl Runner {
                 let ctrls = (0..plan.slots)
                     .map(|_| shared.session().expect("sim methods need no artifacts"))
                     .collect();
+                let drafters = SharedDrafters::new(plan.drafters);
+                drafters.set_pin(pin);
                 ReplicaSim {
                     pool,
                     sched: Scheduler::new(crate::engine::Policy::Fcfs),
                     shared,
+                    drafters,
                     ctrls,
                     live: Vec::new(),
                     fault_stats,
@@ -361,9 +405,13 @@ impl Runner {
         }
         for rep in 0..self.replicas.len() {
             let rs = &self.replicas[rep];
-            if let Some(what) =
-                self.oracle.check_engine(&rs.pool, &rs.sched, rs.live.len(), &rs.shared)
-            {
+            if let Some(what) = self.oracle.check_engine(
+                &rs.pool,
+                &rs.sched,
+                rs.live.len(),
+                &rs.shared,
+                &rs.drafters,
+            ) {
                 if self.replicas.len() > 1 {
                     self.fail(format!("replica {rep}: {what}"));
                 } else {
@@ -380,6 +428,12 @@ impl Runner {
                 let mut r = Request::new(*req, prompt.clone(), *max_new);
                 r.category = category.clone();
                 r.prompt = std::iter::once(BOS).chain(sim_encode(prompt)).collect();
+                // tenants > 1 shards submits round-robin onto t0..t{n-1};
+                // the default keeps the legacy global ("") tenant so every
+                // checked-in trace replays byte-for-byte
+                if self.plan.tenants > 1 {
+                    r.tenant = format!("t{}", *req % self.plan.tenants as u64);
+                }
                 self.flags.insert(*req, r.cancel_flag());
                 if let Some(d) = deadline_ns {
                     self.deadlines.insert(*req, self.clock.now_ns() + d);
@@ -634,6 +688,12 @@ impl Runner {
             lease.shared,
             self.rtag(rep)
         ));
+        let hook = DrafterHook::new(
+            self.replicas[rep].drafters.clone(),
+            req.tenant.clone(),
+            seed,
+            req.category.clone(),
+        );
         self.replicas[rep].live.push(Live {
             committed: req.prompt.clone(),
             prompt_len: req.prompt.len(),
@@ -642,6 +702,7 @@ impl Runner {
             rng,
             max_seq,
             primed: false,
+            hook,
             req,
             slot,
         });
@@ -678,6 +739,7 @@ impl Runner {
                 sess.req.max_new,
                 gamma_max,
                 sess.max_seq,
+                Some(&mut sess.hook),
             )
         };
         match outcome {
@@ -726,8 +788,15 @@ impl Runner {
                 };
                 let (id, drafted, accepted) =
                     (self.replicas[rep].live[i].req.id, commit.drafted, commit.accepted);
+                // drafter tag only when a pool is configured, so legacy
+                // single-drafter traces (and their hashes) never move
+                let dtag = if self.plan.drafters > 1 {
+                    format!(" drafter={}", self.replicas[rep].live[i].hook.drafter())
+                } else {
+                    String::new()
+                };
                 self.log(format!(
-                    "round id={id} drafted={drafted} accepted={accepted} emitted={emit}"
+                    "round id={id} drafted={drafted} accepted={accepted} emitted={emit}{dtag}"
                 ));
                 if let Some(what) = self.oracle.check_stream(id, &self.replicas[rep].live[i].emitted)
                 {
@@ -811,6 +880,10 @@ impl Runner {
 /// * a model error between `session_start` and `on_verify` routes
 ///   through [`DecodeControl::on_abort`], keeping bandit play counts
 ///   conserved;
+/// * the drafter layer (when a `hook` is supplied) plays at exactly the
+///   policy bandit's cadence — one `begin_round` before `session_start`,
+///   one settle after `on_verify` / `on_abort` — so rounds == policy
+///   plays == drafter plays holds per layer;
 /// * termination uses the shared [`finish_check`] / [`accept_greedy`]
 ///   helpers, so the stop boundary and accept rule *cannot* drift.
 #[allow(clippy::too_many_arguments)]
@@ -824,6 +897,7 @@ pub fn sim_round(
     max_new: usize,
     gamma_max: usize,
     max_seq: usize,
+    mut hook: Option<&mut DrafterHook>,
 ) -> anyhow::Result<StepOutcome> {
     let cfg = GenConfig { max_new, gamma_max, stop_at_eos: true, collect_signals: false };
     let last = committed.last().copied();
@@ -832,6 +906,11 @@ pub fn sim_round(
     }
     let c = committed.len();
     let gamma = gamma_max.min(max_seq.saturating_sub(c + 2)).max(1);
+    if let Some(h) = hook.as_deref_mut() {
+        let d = h.begin_round();
+        draft.set_drafter(d);
+        ctrl.set_context(h.tenant(), d);
+    }
     ctrl.session_start(rng);
     let fallible = |draft: &mut dyn LanguageModel,
                     target: &mut dyn LanguageModel,
@@ -860,6 +939,9 @@ pub fn sim_round(
         Ok(x) => x,
         Err(e) => {
             ctrl.on_abort();
+            if let Some(h) = hook.as_deref() {
+                h.settle_abort();
+            }
             return Err(e);
         }
     };
@@ -869,6 +951,13 @@ pub fn sim_round(
     target.rollback(c + m);
     draft.rollback(c + m);
     ctrl.on_verify(m, proposals.len());
+    if let Some(h) = hook.as_deref() {
+        // full information: score every pooled drafter against the tokens
+        // this verify committed (bonus included); rewards never touch the
+        // emitted stream
+        let scores = draft.score_drafters(h.seed(), h.category(), &committed[c..], c);
+        h.settle_verify(&scores);
+    }
     Ok(StepOutcome::Round(StepCommit {
         new_tokens: committed[c..].to_vec(),
         drafted: proposals.len(),
@@ -912,6 +1001,7 @@ mod tests {
                     24,
                     5,
                     4096,
+                    None,
                 )
                 .unwrap();
                 if matches!(out, StepOutcome::Finished(_)) {
@@ -941,6 +1031,8 @@ mod tests {
             replicas: 1,
             affinity: true,
             pipeline: false,
+            drafters: 1,
+            tenants: 1,
             ops: vec![
                 SimOp::Submit {
                     req: 0,
@@ -985,6 +1077,8 @@ mod tests {
             replicas,
             affinity: true,
             pipeline: false,
+            drafters: 1,
+            tenants: 1,
             ops,
         }
     }
@@ -1093,6 +1187,99 @@ mod tests {
         assert_eq!(p.trace_hash, base.trace_hash, "workers traces are byte-identical");
         assert_eq!(p.spec_attempted, 0);
         assert_eq!(p.overlap_ns, 0);
+    }
+
+    #[test]
+    fn multi_drafter_multi_tenant_plans_run_clean_and_replay() {
+        for seed in [0u64, 4, 9] {
+            let mut plan = SimPlan::generate(seed, 50);
+            plan.drafters = 3;
+            plan.tenants = 2;
+            let a = run_plan(&plan);
+            assert_eq!(a.violation, None, "seed {seed} trace:\n{}", a.trace.join("\n"));
+            assert_eq!(run_plan(&plan).trace_hash, a.trace_hash, "seed {seed}");
+            // pooled rounds tag the chosen drafter so regressions pin it
+            assert!(
+                a.trace.iter().any(|l| l.contains(" drafter=")),
+                "seed {seed}: pooled rounds carry the drafter tag"
+            );
+        }
+    }
+
+    #[test]
+    fn pool_of_one_plans_keep_legacy_traces_byte_identical() {
+        // the drafter layer is live (begin/settle every round) but a pool
+        // of one must not perturb a single trace byte vs the same plan
+        // before the layer existed: no RNG draws, no extra trace lines
+        for seed in [2u64, 13] {
+            let plan = SimPlan::generate(seed, 40);
+            assert_eq!(plan.drafters, 1, "generator never randomizes the pool");
+            assert_eq!(plan.tenants, 1);
+            let a = run_plan(&plan);
+            assert_eq!(a.violation, None, "seed {seed}");
+            assert!(
+                a.trace.iter().all(|l| !l.contains("drafter=")),
+                "seed {seed}: legacy traces carry no drafter tag"
+            );
+        }
+    }
+
+    #[test]
+    fn multi_drafter_fault_plans_conserve_both_layers() {
+        // faults force abort paths; the oracle (run after every event)
+        // asserts begin == settle and per-tenant == global on each one
+        let mut found = 0;
+        for seed in 0..12u64 {
+            let mut plan = SimPlan::generate(seed, 60);
+            plan.faults = true;
+            plan.max_faults = 4;
+            plan.drafters = 2;
+            plan.tenants = 2;
+            let a = run_plan(&plan);
+            assert_eq!(a.violation, None, "seed {seed} trace:\n{}", a.trace.join("\n"));
+            if a.count(FinishStatus::Failed) > 0 {
+                found += 1;
+            }
+        }
+        assert!(found > 0, "at least one seed exercised a fault-aborted round");
+    }
+
+    #[test]
+    fn pinned_runs_select_only_the_pin_and_stay_lossless() {
+        // deadlines resolve against absolute virtual time, which a pin
+        // legitimately shifts — strip them so reply comparison is
+        // meaningful (same contract as the pipeline bench)
+        let mut plan = SimPlan::generate(0, 50);
+        plan.drafters = 3;
+        plan.tenants = 2;
+        for op in &mut plan.ops {
+            if let SimOp::Submit { deadline_ns, .. } = op {
+                *deadline_ns = None;
+            }
+        }
+        let pinned = run_plan_pinned(&plan, Some(2));
+        assert_eq!(pinned.violation, None, "trace:\n{}", pinned.trace.join("\n"));
+        assert!(!pinned.drafter_modes.is_empty(), "pinned rounds still ledger plays");
+        for d in pinned.drafter_modes.values() {
+            assert_eq!(*d, 2, "a pinned run may only ever play the pin");
+        }
+        // selection routes work, never bytes: decodes completed under
+        // both runs are byte-identical. (Cancel/deadline races resolve
+        // against round progress, which a pin legitimately shifts, so
+        // terminal *statuses* may differ — byte-equality of completed
+        // output is the invariant.)
+        let free = run_plan(&plan);
+        assert_eq!(free.violation, None);
+        assert_eq!(pinned.replies.len(), free.replies.len(), "every request still terminates");
+        let mut compared = 0;
+        for (req, a) in &pinned.replies {
+            let b = &free.replies[req];
+            if a.status == FinishStatus::Done && b.status == FinishStatus::Done {
+                assert_eq!(a.emitted, b.emitted, "req {req}: pin moved an output byte");
+                compared += 1;
+            }
+        }
+        assert!(compared > 0, "the plan must complete at least one decode both ways");
     }
 
     #[test]

@@ -16,6 +16,7 @@
 
 use std::time::Instant;
 
+use crate::bandit::DrafterHook;
 use crate::models::traits::LanguageModel;
 use crate::signals::TokenSignals;
 use crate::util::Rng;
@@ -237,6 +238,12 @@ pub struct SpecSession<'a> {
     finished: Option<FinishReason>,
     /// prompt positions covered by retained (cache-hit) sequence state
     cached_prefix: usize,
+    /// drafter-selection hook (docs/ARCHITECTURE.md §17): when set, every
+    /// round selects a pooled drafter before `session_start` and settles
+    /// the drafter layer exactly once after verify or abort — the same
+    /// per-round ledger discipline as the policy bandit, one layer up.
+    /// `None` (harness/CLI) keeps the pre-pool behavior exactly.
+    hook: Option<DrafterHook>,
 }
 
 impl<'a> SpecSession<'a> {
@@ -322,7 +329,15 @@ impl<'a> SpecSession<'a> {
             t_start,
             finished: None,
             cached_prefix: resident,
+            hook: None,
         })
+    }
+
+    /// Attach the drafter-selection hook (serving engine only). With a
+    /// pool of one the hook selects drafter 0 without drawing RNG, so
+    /// attaching it never changes emitted tokens.
+    pub fn set_drafter_hook(&mut self, hook: DrafterHook) {
+        self.hook = Some(hook);
     }
 
     /// The full committed sequence so far (prompt + generation).
@@ -374,17 +389,30 @@ impl<'a> SpecSession<'a> {
         let headroom = self.max_seq.saturating_sub(c + 2);
         let gamma = self.cfg.gamma_max.min(headroom);
 
+        // drafter layer first (docs §17): pick which pooled drafter
+        // proposes this round and bind the policy bandit to the request's
+        // (tenant, drafter) context before its own arm selection
+        if let Some(h) = self.hook.as_mut() {
+            let d = h.begin_round();
+            self.draft.set_drafter(d);
+            self.ctrl.set_context(h.tenant(), d);
+        }
+
         self.ctrl.session_start(self.rng);
 
         // the fallible middle of the round: a model error here means the
         // play opened by session_start never sees a verification outcome —
         // route it through on_abort so bandit counts stay conserved
-        // (rust/tests/engine_faults.rs pins this under fault injection)
+        // (rust/tests/engine_faults.rs pins this under fault injection);
+        // the drafter layer settles its play the same way, one layer up
         let (proposals, sig_rows, vsig, tc, draft_ns, verify_ns) =
             match self.draft_and_verify(c, gamma) {
                 Ok(x) => x,
                 Err(e) => {
                     self.ctrl.on_abort();
+                    if let Some(h) = &self.hook {
+                        h.settle_abort();
+                    }
                     return Err(e);
                 }
             };
@@ -396,6 +424,14 @@ impl<'a> SpecSession<'a> {
         self.draft.rollback(c + m);
 
         self.ctrl.on_verify(m, proposals.len());
+        // full-information drafter reward (Not-a-Bandit): score every
+        // pooled drafter against the tokens this round actually committed.
+        // Pure bookkeeping over known rows — emitted tokens are already
+        // fixed above, so the sweep can never alter them.
+        if let Some(h) = self.hook.as_mut() {
+            let scores = self.draft.score_drafters(h.seed(), h.category(), &self.committed[c..], c);
+            h.settle_verify(&scores);
+        }
         let arm = self.ctrl.current_arm();
         self.rounds.push(RoundStat {
             drafted: proposals.len(),

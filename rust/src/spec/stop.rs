@@ -53,6 +53,14 @@ pub trait DecodeControl: Send {
     /// memory persists — the whole point of an *online* method).
     fn reset_request(&mut self);
 
+    /// Bind the controller to a request's (tenant, drafter) context
+    /// (docs/ARCHITECTURE.md §17): tenant-keyed bandits route plays and
+    /// rewards to the `"{tenant}#{drafter}"` posterior, so a code tenant
+    /// and a chat tenant learn different stop policies per drafter.
+    /// Default: no-op — single-owner controllers (harness/CLI) and the
+    /// global tenant keep their exact pre-pool behavior.
+    fn set_context(&mut self, _tenant: &str, _drafter: usize) {}
+
     /// Arm that drove the current session (Seq-granularity bandits only).
     fn current_arm(&self) -> Option<usize> {
         None

@@ -1,0 +1,272 @@
+//! Hierarchical drafter-pool integration tests (docs/ARCHITECTURE.md
+//! §17) on the simulator backend:
+//!
+//!   * multi-drafter bursts stay byte-identical to the target-only
+//!     greedy oracle across Workers {1, 4} × Continuous slots {1, 4, 8}
+//!     × pipeline on/off × faults on/off — the outer selection layer
+//!     routes drafting, never output bytes;
+//!   * two-layer play-count conservation in every config: rounds ==
+//!     policy plays == drafter plays == Σ per-tenant counts, including
+//!     mid-decode cancellation and fault-aborted rounds;
+//!   * a pool of one is byte-identical to the pool-of-three engine
+//!     (and therefore to the pre-pool engine, which existing suites pin);
+//!   * tenants accumulate separate posteriors whose ledgers sum to the
+//!     global ledger, and `/metrics` reports the `drafters` gauge block.
+
+mod common;
+
+use std::time::Duration;
+
+use common::{collect, oracle_tokens, sim_config, TIMEOUT};
+use tapout::engine::{Engine, EngineConfig, EngineMode, FinishStatus, Request, StreamEvent};
+use tapout::models::FaultPlan;
+
+/// Short decodes: the interesting part is selection and accounting.
+const MAX_NEW: usize = 16;
+
+fn pool_config(mode: EngineMode, workers: usize, slots: usize, drafters: usize) -> EngineConfig {
+    EngineConfig { mode, drafters, ..sim_config(workers, slots) }
+}
+
+/// The two-layer conservation law: the drafter layer plays at exactly
+/// the policy bandit's cadence (one begin per round, one settle per
+/// verify/abort), both scopes of the drafter ledger agree, and neither
+/// layer mints or loses a play.
+fn assert_two_layer_conservation(eng: &Engine, ctx: &str) {
+    let d = eng.drafters();
+    assert_eq!(
+        eng.bandit_sessions(),
+        eng.bandit_updates(),
+        "{ctx}: policy layer leaked plays"
+    );
+    assert_eq!(d.sessions(), d.updates(), "{ctx}: drafter layer leaked plays");
+    assert_eq!(
+        d.sessions(),
+        eng.bandit_sessions(),
+        "{ctx}: the two layers must play at the same cadence"
+    );
+    assert_eq!(
+        d.plays().iter().sum::<u64>(),
+        d.updates(),
+        "{ctx}: Σ global drafter plays != settles"
+    );
+    assert_eq!(
+        d.tenant_plays_total(),
+        d.updates(),
+        "{ctx}: Σ per-tenant drafter plays != settles"
+    );
+}
+
+/// Submit `n` distinct prompts, tenants alternating tA/tB, and return
+/// (prompts, responses).
+fn tenant_burst(eng: &Engine, n: usize, label: &str) -> (Vec<String>, Vec<tapout::engine::Response>) {
+    let prompts: Vec<String> =
+        (0..n).map(|i| format!("{label} pooled request number {i}: summarize")).collect();
+    let rxs: Vec<_> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let req = Request::new(i as u64, p.as_str(), MAX_NEW)
+                .with_tenant(if i % 2 == 0 { "tA" } else { "tB" });
+            eng.submit_request(req)
+        })
+        .collect();
+    (prompts, collect(rxs))
+}
+
+#[test]
+fn multi_drafter_bursts_match_oracle_across_modes_pipeline_and_faults() {
+    // (mode, workers, slots, pipeline) — the full execution matrix the
+    // acceptance criteria name; pipeline is a continuous-only knob (a
+    // documented no-op in Workers mode)
+    let matrix: &[(EngineMode, usize, usize, bool)] = &[
+        (EngineMode::Workers, 1, 1, false),
+        (EngineMode::Workers, 4, 4, false),
+        (EngineMode::Continuous, 0, 1, false),
+        (EngineMode::Continuous, 0, 4, false),
+        (EngineMode::Continuous, 0, 8, false),
+        (EngineMode::Continuous, 0, 4, true),
+        (EngineMode::Continuous, 0, 8, true),
+    ];
+    for faults in [false, true] {
+        for &(mode, workers, slots, pipeline) in matrix {
+            let ctx = format!(
+                "{mode:?} workers={workers} slots={slots} pipeline={pipeline} faults={faults}"
+            );
+            let mut config = pool_config(mode, workers, slots, 3);
+            config.pipeline = pipeline;
+            if faults {
+                // error_rate 1.0 with a tiny kill budget: early requests
+                // provably fail, the budget provably exhausts, the tail
+                // provably succeeds — every path through abort settling
+                config.faults =
+                    FaultPlan { seed: 11, error_rate: 1.0, max_faults: 2, ..FaultPlan::default() };
+            }
+            let eng = Engine::start(config).unwrap();
+            let (prompts, responses) = tenant_burst(&eng, 10, &ctx);
+            let mut total_rounds = 0u64;
+            let mut failed = 0usize;
+            for (i, r) in responses.iter().enumerate() {
+                total_rounds += r.result.rounds.len() as u64;
+                match r.status {
+                    FinishStatus::Done => {
+                        assert_eq!(
+                            r.result.new_tokens(),
+                            &oracle_tokens(&prompts[i], MAX_NEW)[..],
+                            "{ctx} request {i}: pooled output diverged from the greedy oracle"
+                        );
+                    }
+                    FinishStatus::Failed => {
+                        assert!(faults, "{ctx} request {i}: failure without fault injection");
+                        failed += 1;
+                    }
+                    other => panic!("{ctx} request {i}: unexpected terminal {other:?}"),
+                }
+            }
+            if faults {
+                assert!(failed > 0, "{ctx}: the kill budget must claim at least one request");
+            } else {
+                // fault-free runs additionally tie the layer counters to
+                // the observable round count
+                assert_eq!(eng.drafters().sessions(), total_rounds, "{ctx}");
+            }
+            assert_two_layer_conservation(&eng, &ctx);
+            // the pool actually pooled: three drafters exist, and the
+            // per-tenant ledgers cover both tenants
+            let d = eng.drafters();
+            assert_eq!(d.n(), 3, "{ctx}");
+            let snap = d.tenant_snapshot();
+            let keys: Vec<&str> = snap.iter().map(|t| t.tenant.as_str()).collect();
+            assert!(keys.contains(&"tA") && keys.contains(&"tB"), "{ctx}: {keys:?}");
+            eng.shutdown();
+        }
+    }
+}
+
+#[test]
+fn pool_of_one_outputs_equal_pool_of_three_outputs() {
+    // drafter selection must never touch output bytes: the same burst
+    // through a pool-of-one and a pool-of-three engine decodes to the
+    // identical replies (existing suites pin pool-of-one == pre-pool)
+    let mut outs: Vec<Vec<Vec<u32>>> = Vec::new();
+    for drafters in [1usize, 3] {
+        let eng = Engine::start(pool_config(EngineMode::Workers, 2, 2, drafters)).unwrap();
+        let (_, responses) = tenant_burst(&eng, 8, "pool size invariance");
+        outs.push(
+            responses
+                .iter()
+                .map(|r| {
+                    assert!(r.is_ok(), "drafters={drafters}: {:?}", r.error);
+                    r.result.new_tokens().to_vec()
+                })
+                .collect(),
+        );
+        assert_two_layer_conservation(&eng, &format!("drafters={drafters}"));
+        if drafters == 1 {
+            // a pool of one always selects drafter 0
+            let plays = eng.drafters().plays();
+            assert_eq!(plays.len(), 1);
+            assert_eq!(plays[0], eng.drafters().updates());
+        }
+        eng.shutdown();
+    }
+    assert_eq!(outs[0], outs[1], "pool size changed output bytes");
+}
+
+#[test]
+fn mid_decode_cancel_keeps_both_layers_conserved() {
+    let eng = Engine::start(pool_config(EngineMode::Continuous, 0, 1, 3)).unwrap();
+    // sim scenarios never emit EOS: this decode would run ~3800 tokens
+    let req = Request::new(0, "pooled continuous decode to cancel midway", 3800)
+        .with_tenant("tA");
+    let flag = req.cancel_flag();
+    let rx = eng.submit_request_streaming(req);
+    match rx.recv_timeout(TIMEOUT).expect("first event") {
+        StreamEvent::Tokens { .. } => flag.cancel(),
+        StreamEvent::Done(r) => panic!("decode finished before cancellation: {:?}", r.status),
+    }
+    let done = loop {
+        match rx.recv_timeout(TIMEOUT).expect("stream must terminate") {
+            StreamEvent::Tokens { .. } => {}
+            StreamEvent::Done(resp) => break *resp,
+        }
+    };
+    assert_eq!(done.status, FinishStatus::Cancelled);
+
+    // the cancelled session's slot is free again and the layers agree:
+    // the drafter ledger mirrors the policy ledger exactly, with at most
+    // the in-flight round of the cancel settle-less in both
+    let ok = eng
+        .submit_request(Request::new(1, "follow-up after pooled cancel", MAX_NEW).with_tenant("tB"))
+        .recv_timeout(TIMEOUT)
+        .unwrap();
+    assert!(ok.is_ok(), "{:?}", ok.error);
+    // quiesce: the stepper may still be retiring the cancelled session
+    std::thread::sleep(Duration::from_millis(20));
+    let d = eng.drafters();
+    assert_eq!(d.sessions(), eng.bandit_sessions(), "layers diverged under cancel");
+    assert_eq!(d.updates(), eng.bandit_updates(), "layers diverged under cancel");
+    assert!(d.sessions() - d.updates() <= 1, "cancel may strand at most one play");
+    assert_eq!(d.plays().iter().sum::<u64>(), d.updates());
+    assert_eq!(d.tenant_plays_total(), d.updates());
+    eng.shutdown();
+}
+
+#[test]
+fn tenants_accumulate_separate_posteriors_that_sum_to_global() {
+    let eng = Engine::start(pool_config(EngineMode::Workers, 2, 2, 2)).unwrap();
+    let mut rxs = Vec::new();
+    for (i, tenant) in [(0u64, Some("tA")), (1, Some("tA")), (2, Some("tB")), (3, None)] {
+        let mut req = Request::new(i, format!("tenant ledger probe {i}"), MAX_NEW);
+        if let Some(t) = tenant {
+            req = req.with_tenant(t);
+        }
+        rxs.push(eng.submit_request(req));
+    }
+    for r in collect(rxs) {
+        assert!(r.is_ok(), "{:?}", r.error);
+    }
+    let d = eng.drafters();
+    let snap = d.tenant_snapshot();
+    let keys: Vec<&str> = snap.iter().map(|t| t.tenant.as_str()).collect();
+    // sorted: the untenanted request lands in the global ("") tenant
+    assert_eq!(keys, vec!["", "tA", "tB"]);
+    let per_tenant: u64 = snap.iter().map(|t| t.plays.iter().sum::<u64>()).sum();
+    assert_eq!(per_tenant, d.updates(), "tenant ledgers must partition the global ledger");
+    for t in &snap {
+        assert!(t.obs > 0, "tenant {:?} saw rounds", t.tenant);
+        assert_eq!(t.means.len(), 2);
+    }
+    assert!(d.modal_drafter("tA").is_some());
+    assert!(d.modal_drafter("unseen").is_none());
+    assert_two_layer_conservation(&eng, "tenant ledger");
+    eng.shutdown();
+}
+
+#[test]
+fn metrics_json_reports_the_drafter_layer() {
+    let eng = Engine::start(pool_config(EngineMode::Workers, 2, 2, 2)).unwrap();
+    let (_, responses) = tenant_burst(&eng, 6, "drafter metrics");
+    for r in &responses {
+        assert!(r.is_ok(), "{:?}", r.error);
+    }
+    let j = eng.metrics_json();
+    let d = j.get("drafters").expect("drafters gauge block is always present");
+    assert_eq!(d.get("n").unwrap().as_usize().unwrap(), 2);
+    let sessions = d.get("sessions").unwrap().as_usize().unwrap();
+    assert_eq!(d.get("updates").unwrap().as_usize().unwrap(), sessions);
+    assert!(sessions > 0);
+    let tenants = d.get("tenants").expect("per-tenant drafter readout");
+    assert!(tenants.get("tA").is_some() && tenants.get("tB").is_some());
+    // the policy bandit gained a nested per-tenant view without moving
+    // its legacy flat fields (OPERATIONS.md contract)
+    let b = j.get("bandit").expect("shared bandit block");
+    assert!(b.get("sessions").is_some() && b.get("arm_counts").is_some());
+    let bt = b.get("tenants").expect("keyed policy posteriors for tenanted traffic");
+    assert!(
+        bt.render().contains("tA#"),
+        "keyed entries are tenant#drafter: {}",
+        bt.render()
+    );
+    eng.shutdown();
+}

@@ -540,3 +540,75 @@ fn http_sheds_with_429_when_queue_is_full() {
     assert!(queued.recv_timeout(TIMEOUT).unwrap().is_ok());
     // the Arc-held engine is leaked at test exit, as in engine_serving.rs
 }
+
+#[test]
+fn http_tenant_header_and_body_field_reach_the_drafter_ledger() {
+    // the tenant travels two ways over the wire (docs/OPERATIONS.md):
+    // a "tenant" JSON field or an X-Tapout-Tenant header, body winning
+    // when both are present; absent (or empty) both, the request decodes
+    // under the global ("") tenant. Asserted end to end over raw TCP
+    // against the engine's drafter-layer ledger.
+    let mut cfg = config(1, 1, BatchConfig::default());
+    cfg.drafters = 2;
+    let eng = Arc::new(Engine::start(cfg).unwrap());
+    let http = HttpServer::start(eng.clone(), 0).unwrap();
+    let addr = http.addr.clone();
+
+    let post = |headers: &str, body: &str| -> (u16, String) {
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        write!(
+            s,
+            "POST /generate HTTP/1.1\r\nHost: x\r\n{headers}Content-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        parse_http(&buf)
+    };
+    let tenants_seen = || -> Vec<String> {
+        eng.drafters().tenant_snapshot().into_iter().map(|t| t.tenant).collect()
+    };
+
+    // header only (mixed casing: header names are case-insensitive)
+    let (code, reply) = post(
+        "x-TaPoUt-tEnAnT: alpha\r\n",
+        r#"{"prompt": "tenant via header", "max_new": 6}"#,
+    );
+    assert_eq!(code, 200, "{reply}");
+    assert_eq!(tenants_seen(), vec!["alpha"], "header tenant must reach the ledger");
+
+    // body and header both present: the body field wins
+    let (code, reply) = post(
+        "X-Tapout-Tenant: beta\r\n",
+        r#"{"prompt": "tenant via body", "max_new": 6, "tenant": "gamma"}"#,
+    );
+    assert_eq!(code, 200, "{reply}");
+    let seen = tenants_seen();
+    assert!(seen.contains(&"gamma".to_string()), "body tenant must win: {seen:?}");
+    assert!(!seen.contains(&"beta".to_string()), "losing header tenant leaked: {seen:?}");
+
+    // neither: the global ("") tenant
+    let (code, reply) = post("", r#"{"prompt": "tenant absent", "max_new": 6}"#);
+    assert_eq!(code, 200, "{reply}");
+    assert!(
+        tenants_seen().contains(&String::new()),
+        "untenanted traffic lands in the global tenant"
+    );
+
+    // an empty-string body tenant is the global tenant too — it must not
+    // fall back to the header (the client explicitly said "no tenant")
+    let (code, reply) = post(
+        "X-Tapout-Tenant: delta\r\n",
+        r#"{"prompt": "tenant explicitly empty", "max_new": 6, "tenant": ""}"#,
+    );
+    assert_eq!(code, 200, "{reply}");
+    let seen = tenants_seen();
+    assert!(!seen.contains(&"delta".to_string()), "empty body tenant must suppress the header: {seen:?}");
+
+    // the ledger stayed conserved through every variant
+    let d = eng.drafters();
+    assert_eq!(d.sessions(), d.updates());
+    assert_eq!(d.tenant_plays_total(), d.updates());
+    // the Arc-held engine is leaked at test exit, as in engine_serving.rs
+}

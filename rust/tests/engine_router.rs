@@ -357,7 +357,7 @@ impl Gateway for HoldingGateway {
         }
     }
 
-    fn generate(&self, _body: &str) -> GenerateStart {
+    fn generate(&self, _body: &str, _tenant: Option<&str>) -> GenerateStart {
         GenerateStart::Source(Box::new(HoldingSource { stage: 0 }))
     }
 }

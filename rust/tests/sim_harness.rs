@@ -39,6 +39,8 @@ fn flood_plan() -> SimPlan {
         replicas: 1,
         affinity: true,
         pipeline: false,
+        drafters: 1,
+        tenants: 1,
         ops: vec![
             submit(0, "shared context block alpha", 8),
             SimOp::Step { n: 4 },

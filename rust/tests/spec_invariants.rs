@@ -488,3 +488,131 @@ fn prop_prefix_index_tracks_registrations_and_finds_deepest_match() {
         },
     );
 }
+
+#[test]
+fn drafter_pool_full_information_updates_and_abort_conservation() {
+    // Hierarchical drafter layer (docs/ARCHITECTURE.md §17), randomized:
+    // every verify must update ALL pooled drafter posteriors exactly once
+    // (full-information "Not-a-Bandit" scoring), and the per-layer play
+    // ledger must balance — begins == settles, Σ global plays == settles
+    // == Σ per-tenant plays — including sessions a fault aborts mid-round.
+    use tapout::bandit::{DrafterHook, SharedDrafters};
+    use tapout::models::{FaultPlan, FaultyModel};
+
+    forall(
+        0xD4AF7,
+        60,
+        |r, size| {
+            (
+                r.below(100_000) as u64,                 // scenario seed
+                1 + r.below(4),                          // pool size 1..=4
+                0.55 + 0.35 * r.f64(),                   // draft quality
+                6 + r.below((48.0 * size) as usize + 6), // max_new
+                r.below(3) == 0,                         // inject one fault?
+                ["", "tA", "tB"][r.below(3)].to_string(),
+            )
+        },
+        |case| {
+            let (seed, n, quality, max_new, fault, ref tenant) = *case;
+            let sc = Scenario::new(seed, "qa");
+            let pooled = SimModel::draft(sc, quality as f32, 0.05).with_drafters(n);
+            let mut draft: Box<dyn LanguageModel> = if fault {
+                // a single-kill error budget: at most one round aborts,
+                // after which the model heals and the decode can finish
+                Box::new(FaultyModel::new(
+                    Box::new(pooled),
+                    FaultPlan { seed, error_rate: 0.35, max_faults: 1, ..FaultPlan::default() },
+                ))
+            } else {
+                Box::new(pooled)
+            };
+            let mut target = SimModel::target(sc);
+            let mut ctrl = MethodSpec::parse("seq-ucb1", ".").unwrap().build(8).unwrap();
+            let mut rng = Rng::new(seed);
+            let cfg =
+                GenConfig { max_new, gamma_max: 8, stop_at_eos: false, collect_signals: false };
+            let shared = SharedDrafters::new(n);
+            let mut sess = SpecSession::new(
+                draft.as_mut(),
+                &mut target,
+                &mut ctrl,
+                &mut rng,
+                &prompt(16),
+                &cfg,
+            )
+            .expect("session construction does no forwards");
+            sess.set_drafter_hook(DrafterHook::new(
+                shared.clone(),
+                tenant.clone(),
+                seed,
+                "qa".to_string(),
+            ));
+            let (mut verifies, mut aborts) = (0u64, 0u64);
+            let finished = loop {
+                match sess.step() {
+                    Ok(StepOutcome::Round(_)) => verifies += 1,
+                    Ok(StepOutcome::Finished(_)) => break true,
+                    Err(_) => {
+                        aborts += 1;
+                        break false;
+                    }
+                }
+            };
+            // per-layer play conservation, abort included
+            if shared.sessions() != verifies + aborts {
+                return Err(format!(
+                    "begins {} != rounds {} + aborts {}",
+                    shared.sessions(),
+                    verifies,
+                    aborts
+                ));
+            }
+            if shared.updates() != shared.sessions() {
+                return Err(format!(
+                    "settles {} != begins {}",
+                    shared.updates(),
+                    shared.sessions()
+                ));
+            }
+            if shared.plays().iter().sum::<u64>() != shared.updates() {
+                return Err("Σ global plays != settles".into());
+            }
+            if shared.tenant_plays_total() != shared.updates() {
+                return Err("Σ per-tenant plays != settles".into());
+            }
+            // full information: the tenant's posterior observed exactly
+            // one update per verify, covering every pooled drafter
+            let snap = shared.tenant_snapshot();
+            if verifies + aborts > 0 {
+                let t = snap
+                    .iter()
+                    .find(|t| &t.tenant == tenant)
+                    .ok_or_else(|| format!("tenant {tenant:?} missing from snapshot"))?;
+                if t.obs != verifies {
+                    return Err(format!(
+                        "tenant obs {} != verifies {verifies}: a verify must update the \
+                         posterior exactly once",
+                        t.obs
+                    ));
+                }
+                if t.means.len() != n {
+                    return Err(format!("posterior covers {} of {n} drafters", t.means.len()));
+                }
+                if !t.means.iter().all(|m| (0.0..=1.0).contains(m)) {
+                    return Err(format!("agreement means out of range: {:?}", t.means));
+                }
+            }
+            // lossless: a finished pooled decode equals target-only greedy
+            if finished {
+                let got = sess.finish();
+                let want = oracle(seed, "qa", max_new);
+                if got.tokens[..got.tokens.len().min(want.len())]
+                    != want[..got.tokens.len().min(want.len())]
+                {
+                    return Err("pooled decode diverged from the greedy oracle".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
